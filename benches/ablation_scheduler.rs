@@ -1,0 +1,91 @@
+//! Ablation of the design choices DESIGN.md calls out:
+//!   (a) bucket tolerance in Algorithm 1 (paper fixes ±10%),
+//!   (b) plan-cache size-quantisation tolerance (plan reuse vs precision),
+//!   (c) number of sheltered collection iterations (paper: 10),
+//!   (d) earliest-first vs latest-first within a bucket (Fig 11's rule).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{gb, rule, write_tsv};
+use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
+use mimose::engine::sim::SimEngine;
+use mimose::model::transformer_profile;
+use mimose::scheduler::{greedy_schedule, LayerEst};
+
+const ITERS: usize = 500;
+
+fn run(mutate: impl FnOnce(&mut MimoseConfig)) -> mimose::metrics::RunReport {
+    let mut cfg = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 5.5);
+    cfg.max_iters = ITERS;
+    mutate(&mut cfg.mimose);
+    SimEngine::new(cfg).unwrap().run_epoch()
+}
+
+fn main() {
+    rule("Ablation (a) — bucket tolerance");
+    let mut rows = Vec::new();
+    println!("tol     epoch_s  recompute%  ooms");
+    for tol in [0.0f64, 0.05, 0.10, 0.25, 0.5] {
+        let r = run(|m| m.bucket_tolerance = tol);
+        println!(
+            "{tol:4.2}  {:8.1}  {:9.2}%  {:4}",
+            r.total_ms() / 1e3,
+            r.recompute_share() * 100.0,
+            r.oom_failures()
+        );
+        rows.push(format!("bucket_tol\t{tol}\t{:.2}\t{:.4}\t{}",
+                          r.total_ms() / 1e3, r.recompute_share(), r.oom_failures()));
+    }
+
+    rule("Ablation (b) — plan-cache quantisation tolerance");
+    println!("tol     epoch_s  hit_rate  plans  ooms");
+    for tol in [0.01f64, 0.05, 0.10, 0.20] {
+        let r = run(|m| m.cache_tolerance = tol);
+        let plans = r.iters.iter().filter(|m| !m.cache_hit && m.collector_ms == 0.0 && m.planning_ms > 0.0).count();
+        println!(
+            "{tol:4.2}  {:8.1}  {:7.1}%  {plans:5}  {:4}",
+            r.total_ms() / 1e3,
+            r.cache_hit_rate() * 100.0,
+            r.oom_failures()
+        );
+        rows.push(format!("cache_tol\t{tol}\t{:.2}\t{:.4}\t{}",
+                          r.total_ms() / 1e3, r.cache_hit_rate(), r.oom_failures()));
+    }
+
+    rule("Ablation (c) — sheltered collection iterations");
+    println!("iters   epoch_s  collector_ms  est_quality(ooms)");
+    for n in [3usize, 5, 10, 20, 40] {
+        let r = run(|m| m.collect_iters = n);
+        println!(
+            "{n:5}  {:8.1}  {:11.1}  {:4}",
+            r.total_ms() / 1e3,
+            r.collector_ms(),
+            r.oom_failures()
+        );
+        rows.push(format!("collect_iters\t{n}\t{:.2}\t{:.1}\t{}",
+                          r.total_ms() / 1e3, r.collector_ms(), r.oom_failures()));
+    }
+
+    rule("Ablation (d) — earliest-first vs latest-first in a bucket (peak)");
+    let model = Task::TcBert.model();
+    let profile = transformer_profile(&model, 32, 300, 1.0);
+    let layers: Vec<LayerEst> = mimose::planners::checkpointable(&profile);
+    let excess = profile.total_act_bytes() / 3;
+    let early = greedy_schedule(&layers, excess, 0.10);
+    // latest-first: reverse fwd_order before scheduling
+    let mut rev: Vec<LayerEst> = layers.clone();
+    let max_order = rev.iter().map(|l| l.fwd_order).max().unwrap();
+    for l in &mut rev {
+        l.fwd_order = max_order - l.fwd_order;
+    }
+    let late = greedy_schedule(&rev, excess, 0.10);
+    let p_early = profile.peak_bytes(&early.ids());
+    let p_late = profile.peak_bytes(&late.ids());
+    println!("earliest-first peak {:.2} GB vs latest-first {:.2} GB", gb(p_early), gb(p_late));
+    rows.push(format!("order\tearliest\t{:.4}\t-\t-", gb(p_early)));
+    rows.push(format!("order\tlatest\t{:.4}\t-\t-", gb(p_late)));
+    assert!(p_early <= p_late, "Fig 11 rule must not hurt peak");
+
+    write_tsv("ablation_scheduler", "ablation\tvalue\tmetric1\tmetric2\tmetric3", &rows);
+}

@@ -1,0 +1,33 @@
+//! Shared bench-harness helpers: TSV emission under bench_out/ and
+//! paper-style table printing. (criterion is unavailable offline; each bench
+//! is a `harness = false` binary using util::timer::bench for micro-timing.)
+
+use std::fs;
+use std::io::Write;
+use std::path::PathBuf;
+
+pub fn out_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_out");
+    let _ = fs::create_dir_all(&d);
+    d
+}
+
+/// Write TSV lines (header first) to bench_out/<name>.tsv.
+pub fn write_tsv(name: &str, header: &str, rows: &[String]) {
+    let path = out_dir().join(format!("{name}.tsv"));
+    let mut f = fs::File::create(&path).expect("create tsv");
+    writeln!(f, "{header}").unwrap();
+    for r in rows {
+        writeln!(f, "{r}").unwrap();
+    }
+    println!("\n[wrote {}]", path.display());
+}
+
+pub fn rule(title: &str) {
+    println!("\n==== {title} ====");
+}
+
+#[allow(dead_code)]
+pub fn gb(bytes: u64) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}

@@ -1,0 +1,38 @@
+//! Figure 10: per-stage activation memory — Swin-Transformer's patch-merging
+//! step-down vs ResNet's stem-dominated curve (why the scheduler treats
+//! "stages" as natural separators, §4.4).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{rule, write_tsv};
+use mimose::model::vision::{ResNetSpec, SwinSpec};
+
+fn main() {
+    rule("Fig 10a — Swin-T per-block activation bytes by stage");
+    let swin = SwinSpec::default().profile(8, 224);
+    let mut rows = Vec::new();
+    for l in &swin.layers {
+        let mb = l.act_bytes as f64 / 1048576.0;
+        println!("  {:<16} {:8.1} MiB  |{}", l.name, mb, "#".repeat((mb / 8.0) as usize));
+        rows.push(format!("swin\t{}\t{:.2}", l.name, mb));
+    }
+
+    rule("Fig 10b — ResNet-50 per-block activation bytes by stage");
+    let resnet = ResNetSpec::default().profile(8, 224);
+    for l in &resnet.layers {
+        let mb = l.act_bytes as f64 / 1048576.0;
+        println!("  {:<16} {:8.1} MiB  |{}", l.name, mb, "#".repeat((mb / 8.0) as usize));
+        rows.push(format!("resnet\t{}\t{:.2}", l.name, mb));
+    }
+    write_tsv("fig10_stage_memory", "model\tlayer\tact_mib", &rows);
+
+    // paper shape checks: swin steps down ~50% per stage; resnet stage-1 has
+    // its own structure (stem) breaking the monotone trend
+    let s = SwinSpec::default().stage_block_bytes(224);
+    for w in s.windows(2) {
+        let r = w[1] as f64 / w[0] as f64;
+        assert!((0.35..0.7).contains(&r), "swin step-down ratio {r}");
+    }
+    println!("\nswin stage ratios: {:?}", s.windows(2).map(|w| w[1] as f64 / w[0] as f64).collect::<Vec<_>>());
+}

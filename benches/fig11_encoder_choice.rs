@@ -1,0 +1,39 @@
+//! Figure 11: peak memory when checkpointing encoder k of Bert-base — early
+//! encoders are restored late in the backward pass (when most activations
+//! are freed), so checkpointing them lowers peak the most.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{gb, rule, write_tsv};
+use mimose::config::ModelSpec;
+use mimose::model::transformer_profile;
+
+fn main() {
+    rule("Fig 11 — peak memory vs which encoder is checkpointed (Bert-base)");
+    let model = ModelSpec::bert_base();
+    let mut rows = Vec::new();
+    println!("          seqlen128  seqlen256  seqlen384");
+    for enc in 0..model.layers {
+        let mut line = format!("encoder{:2}", enc);
+        for seq in [128usize, 256, 384] {
+            let p = transformer_profile(&model, 16, seq, 1.0);
+            let peak = p.peak_bytes(&[enc + 1]); // layer ids: 0 = embed
+            line.push_str(&format!("  {:7.2}GB", gb(peak)));
+            rows.push(format!("{enc}\t{seq}\t{:.4}", gb(peak)));
+        }
+        println!("{line}");
+    }
+    for seq in [128usize, 256, 384] {
+        let p = transformer_profile(&model, 16, seq, 1.0);
+        println!("none      @{seq}: {:.2} GB", gb(p.peak_bytes(&[])));
+    }
+    write_tsv("fig11_encoder_choice", "encoder\tseqlen\tpeak_gb", &rows);
+
+    // paper shape: peak is non-decreasing in encoder index
+    let p = transformer_profile(&model, 16, 256, 1.0);
+    let first = p.peak_bytes(&[1]);
+    let last = p.peak_bytes(&[model.layers]);
+    assert!(first < last, "checkpointing the first encoder must beat the last");
+    println!("\nfirst-vs-last encoder peak delta @256: {:.2} GB", gb(last - first));
+}

@@ -1,0 +1,41 @@
+//! Figure 14: Mimose's memory consumption vs input seqlen under several
+//! budgets — consumption tracks input size until the budget (minus the
+//! fragmentation reserve) is reached, then plateaus via checkpointing.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{gb, rule, write_tsv};
+use mimose::config::{ExperimentConfig, PlannerKind, Task};
+use mimose::engine::sim::SimEngine;
+
+fn main() {
+    rule("Fig 14 — Mimose memory consumption vs seqlen (TC-Bert)");
+    let mut rows = Vec::new();
+    for budget in [5.0f64, 6.0, 7.0] {
+        let mut cfg = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, budget);
+        cfg.max_iters = 500;
+        let mut e = SimEngine::new(cfg).unwrap();
+        let r = e.run_epoch();
+        assert_eq!(r.oom_failures(), 0, "MB-{budget}: must not OOM");
+
+        // bin by seqlen and report mean peak
+        println!("\nMB-{budget}:  seqlen -> peak consumption");
+        let mut bins: std::collections::BTreeMap<usize, (u64, usize)> = Default::default();
+        for m in r.iters.iter().filter(|m| m.collector_ms == 0.0) {
+            let b = (m.seqlen / 25) * 25;
+            let e = bins.entry(b).or_default();
+            e.0 += m.peak_bytes;
+            e.1 += 1;
+        }
+        for (bin, (sum, n)) in &bins {
+            let mean = gb(sum / *n as u64);
+            println!("  {:4}  {:5.2} GB |{}", bin, mean, "#".repeat((mean * 6.0) as usize));
+            rows.push(format!("{budget}\t{bin}\t{mean:.4}"));
+        }
+        let peak = gb(r.peak_bytes());
+        println!("  max consumption {:.2} GB vs budget {:.1} GB (gap = reserve, paper: 0.5-1 GB)", peak, budget);
+        assert!(peak <= budget, "consumption within budget");
+    }
+    write_tsv("fig14_memory", "budget_gb\tseqlen_bin\tmean_peak_gb", &rows);
+}

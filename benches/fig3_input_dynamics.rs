@@ -1,0 +1,48 @@
+//! Figure 3: input-size distributions of SWAG / SQuAD / GLUE-QQP and the
+//! resulting GPU memory usage curve — "the memory usage curve is quite
+//! smooth, revealing the possibility for accurate memory prediction".
+
+#[path = "common.rs"]
+mod common;
+
+use common::{gb, rule, write_tsv};
+use mimose::config::Task;
+use mimose::data::InputStream;
+use mimose::model::transformer_profile;
+use mimose::util::stats::Histogram;
+
+fn main() {
+    let mut rows = Vec::new();
+    for task in Task::all() {
+        rule(&format!("Fig 3 — {} ({:?} batch {})", task.name(), task.seq_range(), task.batch()));
+        let (lo, hi) = task.seq_range();
+        let mut hist = Histogram::new(lo as f64 * 0.8, hi as f64 * 1.05, 24);
+        let mut stream = InputStream::new(task, 42);
+        for _ in 0..5000 {
+            hist.add(stream.next_seqlen() as f64);
+        }
+        println!("collated seqlen distribution (5000 mini-batches):");
+        print!("{}", hist.ascii(48));
+
+        // memory usage vs input size (the smooth curve, right axis of Fig 3)
+        println!("\n  seqlen   activations   total(=fixed+act)");
+        let model = task.model();
+        for seq in (lo..=hi).step_by(((hi - lo) / 8).max(1)) {
+            let p = transformer_profile(&model, task.batch(), seq, 1.0);
+            println!(
+                "  {:6}   {:8.2} GB   {:8.2} GB",
+                seq,
+                gb(p.total_act_bytes()),
+                gb(p.total_act_bytes() + p.fixed_bytes)
+            );
+            rows.push(format!(
+                "{}\t{}\t{:.4}\t{:.4}",
+                task.name(),
+                seq,
+                gb(p.total_act_bytes()),
+                gb(p.total_act_bytes() + p.fixed_bytes)
+            ));
+        }
+    }
+    write_tsv("fig3_memory_vs_input", "task\tseqlen\tact_gb\ttotal_gb", &rows);
+}

@@ -1,0 +1,114 @@
+//! §Perf — L3 hot-path microbenchmarks (in-repo harness; criterion is
+//! unavailable offline). Targets from DESIGN.md §7:
+//!   scheduler plan generation  < 1 ms   (the paper's own claim)
+//!   estimator predict (14-layer vector) < 20 µs
+//!   plan-cache lookup          ~ sub-µs
+//!   allocator alloc/free pair  ~ sub-µs
+//!   SimEngine full iteration   << simulated iteration time (else the
+//!                              harness, not the model, dominates sweeps)
+
+#[path = "common.rs"]
+mod common;
+
+use common::{rule, write_tsv};
+use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
+use mimose::engine::sim::SimEngine;
+use mimose::estimator::{MemoryEstimator, Sample};
+use mimose::memory::CachingAllocator;
+use mimose::model::transformer_profile;
+use mimose::scheduler::{greedy_schedule, Plan, PlanCache};
+use mimose::util::timer::{bench, black_box};
+use mimose::util::GIB;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(400);
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut record = |r: mimose::util::timer::BenchResult| {
+        println!("{}", r.row());
+        rows.push(format!("{}\t{:.3}\t{:.3}\t{:.3}", r.name, r.mean_s * 1e6, r.p50_s * 1e6, r.p99_s * 1e6));
+        r
+    };
+
+    rule("Perf — scheduler (Algorithm 1)");
+    let profile = transformer_profile(&Task::TcBert.model(), 32, 300, 1.0);
+    let layers = mimose::planners::checkpointable(&profile);
+    let excess = profile.total_act_bytes() / 2;
+    let r = record(bench("greedy_schedule/14-layers", BUDGET, || {
+        black_box(greedy_schedule(black_box(&layers), black_box(excess), 0.10));
+    }));
+    assert!(r.mean_s < 1e-3, "plan generation must stay sub-millisecond");
+
+    // a 200-layer model (GPT-3-depth-class) must still be fast
+    let mut big = Vec::new();
+    for i in 0..200 {
+        big.push(mimose::scheduler::LayerEst {
+            id: i,
+            est_bytes: 100_000_000 + (i as u64 % 7) * 1_000_000,
+            ckpt_bytes: 8_000_000,
+            fwd_order: i,
+        });
+    }
+    let r = record(bench("greedy_schedule/200-layers", BUDGET, || {
+        black_box(greedy_schedule(black_box(&big), 5_000_000_000, 0.10));
+    }));
+    assert!(r.mean_s < 1e-3);
+
+    rule("Perf — estimator");
+    let mut est = MemoryEstimator::new(14);
+    for l in 0..14 {
+        for i in 1..=10 {
+            let x = (i * 800) as f64;
+            est.observe(l, Sample { input_size: x, act_bytes: 1e6 + 3.0 * x * x, fwd_ms: 0.1 * x });
+        }
+    }
+    let train_ms = est.train();
+    println!("estimator train (14 layers x 10 samples): {train_ms:.3} ms");
+    let r = record(bench("estimator/predict_all_14", BUDGET, || {
+        black_box(est.predict_all_bytes(black_box(9600.0)));
+    }));
+    assert!(r.mean_s < 20e-6, "predict_all must stay under 20 us");
+
+    rule("Perf — plan cache");
+    let mut cache = PlanCache::new(0.05);
+    for i in 0..64 {
+        cache.insert(1000 + i * 97, Plan::of([1, 2, 3]));
+    }
+    record(bench("plan_cache/lookup_exact", BUDGET, || {
+        black_box(cache.lookup_exact(black_box(1970)));
+    }));
+
+    rule("Perf — caching allocator");
+    let mut alloc = CachingAllocator::new(8 * GIB);
+    record(bench("allocator/alloc_free_64MB", BUDGET, || {
+        let id = alloc.alloc(black_box(64 << 20)).unwrap();
+        alloc.free(id);
+    }));
+    // steady-state mixed sizes (what an iteration does)
+    let sizes: Vec<u64> = (0..64).map(|i| ((i % 13) + 1) as u64 * (3 << 20)).collect();
+    record(bench("allocator/iteration_64_tensors", BUDGET, || {
+        let ids: Vec<_> = sizes.iter().map(|&s| alloc.alloc(s).unwrap()).collect();
+        for id in ids {
+            alloc.free(id);
+        }
+    }));
+
+    rule("Perf — SimEngine full iteration");
+    let mut cfg = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
+    cfg.max_iters = 1;
+    cfg.mimose = MimoseConfig { collect_iters: 1, ..Default::default() };
+    let mut engine = SimEngine::new(cfg).unwrap();
+    let _ = engine.run_epoch(); // warm collector/estimator
+    let r = record(bench("sim_engine/iteration_seq200", BUDGET, || {
+        black_box(engine.run_iteration(black_box(200)));
+    }));
+    println!(
+        "\nharness-to-model ratio: {:.4} (wall {:.1} µs per simulated {:.0} ms iteration)",
+        r.mean_s / 0.2,
+        r.mean_s * 1e6,
+        200.0
+    );
+
+    write_tsv("perf_hotpaths", "bench\tmean_us\tp50_us\tp99_us", &rows);
+}

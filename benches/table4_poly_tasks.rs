@@ -1,0 +1,39 @@
+//! Table 4: the quadratic polynomial estimator across all four tasks —
+//! 10 samples, thousandth-level error everywhere (the §4.3 analysis
+//! generalises across NLP tasks).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{rule, write_tsv};
+use mimose::config::Task;
+use mimose::data::InputStream;
+use mimose::estimator::{evaluate_regressor, PolyRegressor};
+use mimose::model::transformer_profile;
+
+fn main() {
+    rule("Table 4 — quadratic polynomial across tasks (10 samples)");
+    println!("{:<12} {:>14} {:>18} {:>9}", "task", "train (ms)", "predict (us)", "error");
+    let mut rows = Vec::new();
+    for task in Task::all() {
+        let xf = if task == Task::QaXlnet { 1.15 } else { 1.0 };
+        let truth = |seq: usize| -> (f64, f64) {
+            let p = transformer_profile(&task.model(), task.batch(), seq, xf);
+            ((task.batch() * seq) as f64, p.total_act_bytes() as f64)
+        };
+        let mut stream = InputStream::new(task, 3);
+        let train: Vec<(f64, f64)> = (0..10).map(|_| truth(stream.next_seqlen())).collect();
+        let test: Vec<(f64, f64)> = (0..40).map(|_| truth(stream.next_seqlen())).collect();
+        let (train_ms, predict_us, err) =
+            evaluate_regressor(&mut PolyRegressor::new(2), &train, &test);
+        println!(
+            "{:<12} {train_ms:>14.2} {predict_us:>18.2} {:>8.3}%",
+            task.name(),
+            err * 100.0
+        );
+        rows.push(format!("{}\t{train_ms:.3}\t{predict_us:.2}\t{:.5}", task.name(), err * 100.0));
+        assert!(err < 0.005, "{}: error {err} above thousandth level", task.name());
+    }
+    write_tsv("table4_poly_tasks", "task\ttrain_ms\tpredict_us\terror_pct", &rows);
+    println!("\npaper: 0.46% / 0.33% / 0.33% / 0.32% (train ~1 ms, predict ~16 us)");
+}

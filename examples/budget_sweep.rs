@@ -1,0 +1,49 @@
+//! Budget sweep: all four planners across a budget range on one task —
+//! a CLI-driven slice of Fig 13.
+//!
+//!   cargo run --release --example budget_sweep -- --task qa-bert --iters 500
+
+use mimose::config::{ExperimentConfig, PlannerKind, Task};
+use mimose::engine::sim::SimEngine;
+use mimose::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("budget_sweep", "planner comparison across memory budgets")
+        .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert")
+        .opt("iters", "500", "iterations per run")
+        .opt("lo", "4.0", "lowest budget (GiB)")
+        .opt("hi", "8.0", "highest budget (GiB)")
+        .opt("points", "5", "number of budgets")
+        .parse();
+    let task = Task::parse(&cli.get("task")).expect("unknown task");
+    let iters = cli.get_usize("iters");
+    let (lo, hi) = (cli.get_f64("lo"), cli.get_f64("hi"));
+    let points = cli.get_usize("points").max(2);
+
+    // baseline reference at effectively-unlimited memory
+    let mut bcfg = ExperimentConfig::new(task, PlannerKind::Baseline, 64.0);
+    bcfg.max_iters = iters;
+    let base_ms = SimEngine::new(bcfg).unwrap().run_epoch().total_ms();
+    println!("{} — normalised epoch time (baseline = 1.0)\n", task.name());
+    println!("budget     sublinear      dtr   mimose");
+    for p in 0..points {
+        let budget = lo + (hi - lo) * p as f64 / (points - 1) as f64;
+        print!("{budget:5.1} GB ");
+        for kind in [PlannerKind::Sublinear, PlannerKind::Dtr, PlannerKind::Mimose] {
+            let mut cfg = ExperimentConfig::new(task, kind, budget);
+            cfg.max_iters = iters;
+            match SimEngine::new(cfg) {
+                Ok(mut e) => {
+                    let r = e.run_epoch();
+                    if r.oom_failures() > 0 {
+                        print!("      OOM");
+                    } else {
+                        print!("   {:6.3}", r.total_ms() / base_ms);
+                    }
+                }
+                Err(_) => print!("   no-fit"),
+            }
+        }
+        println!();
+    }
+}

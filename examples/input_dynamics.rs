@@ -1,0 +1,73 @@
+//! Input dynamics explorer: sample a dataset's collated seqlen distribution
+//! and show what it means for activation memory and checkpointing plans —
+//! the paper's §3 motivation, interactively.
+//!
+//!   cargo run --release --example input_dynamics -- --task tc-bert --budget-gb 5
+
+use mimose::config::{MimoseConfig, Task};
+use mimose::data::InputStream;
+use mimose::model::transformer_profile;
+use mimose::planners::{InputDesc, IterationMode, MimosePlanner, Planner};
+use mimose::collector::Observation;
+use mimose::util::cli::Cli;
+use mimose::util::stats::Histogram;
+use mimose::util::GIB;
+
+fn main() {
+    let cli = Cli::new("input_dynamics", "dataset dynamics -> memory -> plans")
+        .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert")
+        .opt("budget-gb", "5.0", "memory budget (GiB)")
+        .parse();
+    let task = Task::parse(&cli.get("task")).expect("unknown task");
+    let budget = (cli.get_f64("budget-gb") * GIB as f64) as u64;
+    let model = task.model();
+
+    let (lo, hi) = task.seq_range();
+    let mut hist = Histogram::new(lo as f64 * 0.8, hi as f64 * 1.05, 20);
+    let mut stream = InputStream::new(task, 1);
+    for _ in 0..3000 {
+        hist.add(stream.next_seqlen() as f64);
+    }
+    println!("{} collated seqlen over 3000 mini-batches:", task.name());
+    print!("{}", hist.ascii(40));
+
+    // drive a Mimose planner through sheltered execution, then show plans
+    let mut planner = MimosePlanner::new(budget, model.layers + 2, MimoseConfig::default());
+    let mut stream = InputStream::new(task, 2);
+    loop {
+        let seq = stream.next_seqlen();
+        let profile = transformer_profile(&model, task.batch(), seq, 1.0);
+        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        match planner.begin_iteration(&input, &profile).mode {
+            IterationMode::Sheltered(_) => {
+                let obs: Vec<Observation> = profile
+                    .layers
+                    .iter()
+                    .map(|l| Observation {
+                        layer: l.id,
+                        input_size: input.size() as f64,
+                        act_bytes: l.act_bytes,
+                        fwd_ms: l.fwd_flops as f64 / 1e9,
+                        self_checkpointed: false,
+                        relative_checkpointed: false,
+                    })
+                    .collect();
+                planner.end_iteration(&input, &obs, 1.0);
+            }
+            _ => break,
+        }
+    }
+    println!("\ncollector frozen after {} iterations; plans by seqlen @ {:.1} GB:",
+             planner.collector().iters_done(), budget as f64 / GIB as f64);
+    println!("seqlen  est.activations  checkpointed layers");
+    for seq in (lo..=hi).step_by(((hi - lo) / 10).max(1)) {
+        let profile = transformer_profile(&model, task.batch(), seq, 1.0);
+        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        if let IterationMode::Planned(plan) = planner.begin_iteration(&input, &profile).mode {
+            let est: f64 = (0..profile.layers.len())
+                .map(|l| planner.estimator().predict_bytes(l, input.size() as f64))
+                .sum();
+            println!("{seq:6}  {:10.2} GB     {:2}  {:?}", est / GIB as f64, plan.len(), plan.ids());
+        }
+    }
+}

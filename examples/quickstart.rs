@@ -1,0 +1,38 @@
+//! Quickstart: simulate one epoch of TC-Bert under a 6 GB budget with the
+//! Mimose planner and print the run summary.
+//!
+//!   cargo run --release --example quickstart
+
+use mimose::config::{ExperimentConfig, PlannerKind, Task};
+use mimose::engine::sim::SimEngine;
+use mimose::metrics::RunReport;
+use mimose::util::fmt_bytes;
+
+fn main() {
+    let mut cfg = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
+    cfg.max_iters = 500; // drop to 0 for a full epoch
+
+    let mut engine = SimEngine::new(cfg.clone()).expect("fixed state fits the budget");
+    let report: RunReport = engine.run_epoch();
+
+    println!("Mimose on {} @ {:.1} GB, {} iterations", cfg.task.name(), cfg.budget_gb(), report.iters.len());
+    println!("  simulated epoch time : {:.1} s", report.total_ms() / 1e3);
+    println!("  mean iteration       : {:.1} ms", report.mean_iter_ms());
+    println!("  recompute share      : {:.2}%", report.recompute_share() * 100.0);
+    println!("  planning share       : {:.3}%", report.planning_share() * 100.0);
+    println!("  collector overhead   : {:.1} ms total", report.collector_ms());
+    println!("  plan cache hit rate  : {:.1}%", report.cache_hit_rate() * 100.0);
+    println!("  peak memory          : {}", fmt_bytes(report.peak_bytes()));
+    println!("  OOM failures         : {}", report.oom_failures());
+    assert_eq!(report.oom_failures(), 0);
+
+    // compare against the static planner at the same budget
+    let mut sub_cfg = cfg.clone();
+    sub_cfg.planner = PlannerKind::Sublinear;
+    let sub = SimEngine::new(sub_cfg).unwrap().run_epoch();
+    println!(
+        "\nvs Sublinear: {:.1} s -> Mimose is {:+.1}% faster",
+        sub.total_ms() / 1e3,
+        (sub.total_ms() / report.total_ms() - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,162 @@
+//! End-to-end driver (DESIGN.md: the mandated full-stack validation):
+//! train the ~100M-parameter bert-base config for a few hundred REAL steps
+//! over the AOT-compiled PJRT artifacts, with the Mimose planner deciding
+//! per-input checkpointing under a memory budget, and log the loss curve.
+//!
+//!   cargo run --release --example train_e2e -- --steps 200 --budget-gb 2.0
+//!
+//! All three layers compose here: the L1 Pallas-derived kernels are inside
+//! the L2-lowered HLO; the L3 coordinator owns data, planning and Adam.
+
+use mimose::config::MimoseConfig;
+use mimose::data::{bucket_for, Corpus, CorpusConfig};
+use mimose::engine::optimizer::AdamConfig;
+use mimose::engine::real::RealEngine;
+use mimose::model::transformer_profile_with_head;
+use mimose::planners::{InputDesc, IterationMode, MimosePlanner, Planner};
+use mimose::collector::Observation;
+use mimose::config::ModelSpec;
+use mimose::scheduler::Plan;
+use mimose::util::cli::Cli;
+use mimose::util::rng::Rng;
+use mimose::util::GIB;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("train_e2e", "real PJRT training with the Mimose planner")
+        .opt("config", "bert-base", "model config from the AOT manifest")
+        .opt("steps", "200", "training steps")
+        .opt("budget-gb", "2.0", "memory budget (GiB)")
+        .opt("reserve-gb", "0.2", "fragmentation reserve (GiB)")
+        .opt("lr", "0.001", "Adam learning rate")
+        .opt("seed", "42", "rng seed")
+        .opt("out", "bench_out/e2e_loss.tsv", "loss-curve TSV path")
+        .flag("no-planner", "disable Mimose (baseline, no checkpointing)")
+        .parse();
+
+    let config = cli.get("config");
+    let steps = cli.get_usize("steps");
+    let budget = (cli.get_f64("budget-gb") * GIB as f64) as u64;
+    let seed = cli.get_u64("seed");
+
+    let art = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let t0 = Instant::now();
+    let mut engine = RealEngine::new(&art, &config, &[32, 64], seed)?;
+    engine.set_optimizer(AdamConfig { lr: cli.get_f64("lr") as f32, ..Default::default() });
+    let m = engine.rt.manifest.clone();
+    println!(
+        "[{:5.1}s] engine up: {} ({:.1}M params), platform {}, compile {:.1}s",
+        t0.elapsed().as_secs_f64(),
+        m.name,
+        engine.param_count() as f64 / 1e6,
+        engine.rt.platform(),
+        engine.rt.compile_ms / 1e3
+    );
+
+    // Planner sees the analytic profile at the padded bucket (the executed
+    // shape); observations come from REAL measured bytes/times.
+    let spec = ModelSpec {
+        name: m.name.clone(),
+        vocab: m.vocab,
+        hidden: m.hidden,
+        layers: m.layers,
+        heads: m.heads,
+        ffn: m.ffn,
+        max_seq: m.max_seq,
+    };
+    let mimose_cfg = MimoseConfig {
+        reserve_bytes: (cli.get_f64("reserve-gb") * GIB as f64) as u64,
+        ..Default::default()
+    };
+    let mut planner = MimosePlanner::new(budget, m.layers + 2, mimose_cfg);
+    let use_planner = !cli.get_flag("no-planner");
+
+    let mut corpus = Corpus::new(CorpusConfig { vocab: m.vocab, seed: seed ^ 0xD00D });
+    let mut lens = Rng::new(seed ^ 0xBEEF);
+    let mut tsv = String::from("step\tseqlen\tbucket\tloss\titer_ms\tckpt_layers\tpeak_act_mb\tplanning_ms\n");
+    let mut losses = Vec::new();
+
+    println!("step  seq->bkt  loss     iter(s)  plan         peak_act");
+    for step in 0..steps {
+        // input dynamics: skewed collated seqlen (power-law, like GLUE-QQP)
+        // so both AOT buckets occur and plans differ per input
+        let seqlen = (lens.power_law(14.0, 64.0, 1.6) as usize).clamp(14, 64);
+        let bucket = bucket_for(seqlen, &m.seq_buckets).unwrap();
+        let input = InputDesc { batch: m.batch, seqlen: bucket };
+        let profile = transformer_profile_with_head(&spec, m.batch, bucket, 1.0, m.vocab);
+
+        let (plan, mode_str, planning_ms, sheltered) = if use_planner {
+            let d = planner.begin_iteration(&input, &profile);
+            match d.mode {
+                IterationMode::Sheltered(p) => (p, "shelter", d.planning_ms, true),
+                IterationMode::Planned(p) => {
+                    let s = if d.cache_hit { "cached" } else { "planned" };
+                    (p, s, d.planning_ms, false)
+                }
+                IterationMode::Reactive => unreachable!(),
+            }
+        } else {
+            (Plan::none(), "baseline", 0.0, false)
+        };
+
+        let (ids, labels) = corpus.lm_batch(m.batch, seqlen, seqlen);
+        let r = engine.train_step(&ids, &labels, seqlen, &plan)?;
+        losses.push(r.loss);
+
+        if sheltered {
+            let obs: Vec<Observation> = (0..r.residual_bytes.len())
+                .map(|l| Observation {
+                    layer: l,
+                    input_size: input.size() as f64,
+                    act_bytes: r.residual_bytes[l],
+                    fwd_ms: r.fwd_ms[l],
+                    self_checkpointed: false,
+                    relative_checkpointed: false,
+                })
+                .collect();
+            planner.end_iteration(&input, &obs, 0.0);
+        }
+
+        tsv.push_str(&format!(
+            "{step}\t{seqlen}\t{bucket}\t{:.5}\t{:.0}\t{}\t{:.1}\t{:.3}\n",
+            r.loss,
+            r.iter_ms,
+            plan.len(),
+            r.peak_act_bytes as f64 / 1048576.0,
+            planning_ms
+        ));
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "{step:4}  {seqlen:3}->{bucket:3}  {:7.4}  {:6.1}  {mode_str:8}x{:<2}  {:6.1} MB",
+                r.loss,
+                r.iter_ms / 1e3,
+                plan.len(),
+                r.peak_act_bytes as f64 / 1048576.0
+            );
+        }
+    }
+
+    let out = cli.get("out");
+    if let Some(dir) = Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::File::create(&out)?.write_all(tsv.as_bytes())?;
+
+    let first10: f32 = losses[..10.min(losses.len())].iter().sum::<f32>() / 10.0_f32.min(losses.len() as f32);
+    let last10: f32 = losses[losses.len().saturating_sub(10)..].iter().sum::<f32>()
+        / 10.0_f32.min(losses.len() as f32);
+    println!("\nloss: first-10 mean {first10:.4} -> last-10 mean {last10:.4}");
+    if use_planner {
+        println!(
+            "mimose: {} plans generated, cache hit rate {:.0}%, est+sched total {:.2} ms, train {:.2} ms",
+            planner.plans_generated,
+            planner.cache().stats().hit_rate() * 100.0,
+            planner.plan_ms_total,
+            planner.train_ms,
+        );
+    }
+    println!("total wall {:.1}s; loss curve -> {out}", t0.elapsed().as_secs_f64());
+    Ok(())
+}

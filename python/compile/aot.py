@@ -1,0 +1,206 @@
+"""AOT compile path: lower every artifact to HLO *text* + a JSON manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind the
+rust `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE here — `make artifacts` — and never on the training hot path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _block_param_specs(cfg: ModelConfig):
+    h, f = cfg.hidden, cfg.ffn
+    shapes = {
+        "wq": (h, h), "bq": (h,), "wk": (h, h), "bk": (h,),
+        "wv": (h, h), "bv": (h,), "wo": (h, h), "bo": (h,),
+        "ln1_g": (h,), "ln1_b": (h,), "w1": (h, f), "b1": (f,),
+        "w2": (f, h), "b2": (h,), "ln2_g": (h,), "ln2_b": (h,),
+    }
+    return [(n, _spec(shapes[n])) for n in model.BLOCK_PARAMS]
+
+
+def _residual_specs(cfg: ModelConfig, b: int, s: int):
+    shapes = model.block_residual_shapes(cfg, b, s)
+    return [(n, _spec(shapes[n])) for n in model.RESIDUALS]
+
+
+def build_artifacts(cfg: ModelConfig, seq: int):
+    """Yields (name, fn, [(arg_name, spec)], [out_name])."""
+    b, h = cfg.batch, cfg.hidden
+    heads, v, ms = cfg.heads, cfg.vocab, cfg.max_seq
+    bp_specs = _block_param_specs(cfg)
+    res_specs = _residual_specs(cfg, b, seq)
+    x_spec = _spec((b, seq, h))
+    ids_spec = _spec((b, seq), I32)
+
+    def pack(p_args):
+        return dict(zip(model.BLOCK_PARAMS, p_args))
+
+    def embed_fwd(tok, pos, g, bb, ids):
+        return model.embed_fwd(tok, pos, g, bb, ids)
+
+    def embed_bwd(g, ids, xhat, rstd, gy):
+        return model.embed_bwd(g, ids, xhat, rstd, gy, vocab=v, max_seq=ms)
+
+    def block_fwd(*args):
+        y, res = model.block_fwd(pack(args[:16]), args[16], heads)
+        return (y,) + tuple(res[n] for n in model.RESIDUALS)
+
+    def block_bwd(*args):
+        p = pack(args[:16])
+        res = dict(zip(model.RESIDUALS, args[16:16 + len(model.RESIDUALS)]))
+        gy = args[16 + len(model.RESIDUALS)]
+        gx, grads = model.block_bwd(p, res, gy)
+        return (gx,) + tuple(grads[n] for n in model.BLOCK_PARAMS)
+
+    def block_bwd_rc(*args):
+        gx, grads = model.block_bwd_recompute(pack(args[:16]), args[16], args[17], heads)
+        return (gx,) + tuple(grads[n] for n in model.BLOCK_PARAMS)
+
+    def block_fwd_flash(*args):
+        return (model.block_fwd_flash(pack(args[:16]), args[16], heads),)
+
+    def head_step(w, bb, x, labels):
+        return model.head_step(w, bb, x, labels)
+
+    emb_params = [
+        ("tok_emb", _spec((v, h))), ("pos_emb", _spec((ms, h))),
+        ("emb_ln_g", _spec((h,))), ("emb_ln_b", _spec((h,))),
+    ]
+    yield ("embed_fwd", embed_fwd,
+           emb_params + [("ids", ids_spec)],
+           ["x", "xhat", "rstd"])
+    yield ("embed_bwd", embed_bwd,
+           [("emb_ln_g", _spec((h,))), ("ids", ids_spec),
+            ("xhat", x_spec), ("rstd", _spec((b, seq, 1))), ("gy", x_spec)],
+           ["g_tok", "g_pos", "g_ln_g", "g_ln_b"])
+    yield ("block_fwd", block_fwd,
+           bp_specs + [("x", x_spec)],
+           ["y"] + list(model.RESIDUALS))
+    yield ("block_bwd", block_bwd,
+           bp_specs + res_specs + [("gy", x_spec)],
+           ["gx"] + ["g_" + n for n in model.BLOCK_PARAMS])
+    yield ("block_bwd_rc", block_bwd_rc,
+           bp_specs + [("x", x_spec), ("gy", x_spec)],
+           ["gx"] + ["g_" + n for n in model.BLOCK_PARAMS])
+    yield ("block_fwd_flash", block_fwd_flash,
+           bp_specs + [("x", x_spec)],
+           ["y"])
+    yield ("head_step", head_step,
+           [("w_lm", _spec((h, v))), ("b_lm", _spec((v,))),
+            ("x", x_spec), ("labels", ids_spec)],
+           ["loss", "gx", "g_w_lm", "g_b_lm"])
+
+
+def _dtype_name(dt) -> str:
+    return "i32" if dt == I32 else "f32"
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources: artifacts are stale iff this changes."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    md = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    md.update(fh.read())
+    return md.hexdigest()[:16]
+
+
+def compile_config(cfg: ModelConfig, out_dir: str, verbose: bool = True) -> dict:
+    entries = []
+    for seq in cfg.seq_buckets:
+        d = os.path.join(out_dir, cfg.name, f"s{seq}")
+        os.makedirs(d, exist_ok=True)
+        for name, fn, args, outs in build_artifacts(cfg, seq):
+            specs = [spec for _, spec in args]
+            lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = os.path.join(d, f"{name}.hlo.txt")
+            with open(fname, "w") as f:
+                f.write(text)
+            entries.append({
+                "name": name, "seq": seq,
+                "file": os.path.relpath(fname, out_dir),
+                "inputs": [{"name": n, "shape": list(s.shape),
+                            "dtype": _dtype_name(s.dtype)} for n, s in args],
+                "outputs": outs,
+            })
+            if verbose:
+                print(f"  [{cfg.name}/s{seq}] {name}: {len(text)} chars")
+    return {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "hidden": cfg.hidden,
+            "layers": cfg.layers, "heads": cfg.heads, "ffn": cfg.ffn,
+            "max_seq": cfg.max_seq, "batch": cfg.batch,
+            "seq_buckets": cfg.seq_buckets,
+            "param_count": cfg.param_count(),
+        },
+        "block_params": model.BLOCK_PARAMS,
+        "residuals": model.RESIDUALS,
+        "artifacts": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AOT-lower Mimose model artifacts")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--configs", default="bert-tiny,bert-base",
+                    help="comma-separated config names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    fp = input_fingerprint()
+    stamp = os.path.join(out, "fingerprint.txt")
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read().strip() == fp:
+                print(f"artifacts up-to-date (fingerprint {fp}); skipping")
+                return
+
+    manifest = {"configs": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name.strip()]
+        print(f"lowering {cfg.name} (~{cfg.param_count()/1e6:.1f}M params), "
+              f"buckets {cfg.seq_buckets} ...")
+        manifest["configs"][cfg.name] = compile_config(cfg, out)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"wrote manifest.json + fingerprint {fp}")
+
+
+if __name__ == "__main__":
+    main()

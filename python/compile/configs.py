@@ -1,0 +1,65 @@
+"""Model and AOT-bucket configurations shared by the compile path and tests.
+
+The Rust coordinator (L3) never sees these Python objects; it consumes the
+manifest JSON emitted by aot.py, which records every artifact's parameter
+order, shapes and dtypes.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """BERT-style encoder stack (the models in Table 1 are all of this family).
+
+    vocab/hidden/layers/heads/ffn follow the usual naming. `seq_buckets` are
+    the static shapes we AOT-compile; the L3 data pipeline pads each collated
+    mini-batch up to the nearest bucket (true seqlen still drives the planner).
+    """
+
+    name: str = "bert-base"
+    vocab: int = 8192
+    hidden: int = 768
+    layers: int = 12
+    heads: int = 12
+    ffn: int = 3072
+    max_seq: int = 512
+    batch: int = 8
+    seq_buckets: List[int] = field(default_factory=lambda: [32, 64, 128])
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        """Total trainable parameters (embeddings + blocks + LM head)."""
+        block = (
+            4 * (self.hidden * self.hidden + self.hidden)  # q,k,v,o
+            + self.hidden * self.ffn + self.ffn            # ffn in
+            + self.ffn * self.hidden + self.hidden         # ffn out
+            + 4 * self.hidden                              # 2x layernorm
+        )
+        embed = self.vocab * self.hidden + self.max_seq * self.hidden + 2 * self.hidden
+        head = self.hidden * self.vocab + self.vocab
+        return embed + self.layers * block + head
+
+
+# ~100M-parameter configuration used by examples/train_e2e.
+BASE = ModelConfig()
+
+# Small configuration compiled for rust integration tests (fast to compile/run).
+TINY = ModelConfig(
+    name="bert-tiny",
+    vocab=512,
+    hidden=64,
+    layers=2,
+    heads=4,
+    ffn=128,
+    max_seq=64,
+    batch=2,
+    seq_buckets=[16, 32],
+)
+
+CONFIGS = {c.name: c for c in (BASE, TINY)}

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels for the compute hot-spot (flash attention, fused LN)."""
+
+from .attention import flash_attention, fused_layernorm, vmem_footprint_bytes  # noqa: F401
+from .softmax_xent import fused_softmax_xent  # noqa: F401

@@ -1,0 +1,138 @@
+"""L1 Pallas kernels: flash attention and fused layernorm.
+
+The flash-attention kernel is the TPU-adapted form of the paper's compute
+hot-spot (Sec 4.3 / Fig 8: the quadratic-memory attention structure). Instead
+of materialising the [S, S] score/prob tensors in HBM the way PyTorch eager
+does, it streams K/V tiles through a VMEM-sized working set with an online
+softmax — BlockSpec expresses the HBM<->VMEM schedule that a CUDA kernel would
+express with threadblocks/shared memory (DESIGN.md "Hardware-Adaptation").
+
+interpret=True everywhere: on this CPU-PJRT image the kernels must lower to
+plain HLO (a real-TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot execute). Numerics are validated against kernels/ref.py in pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One grid cell: one (batch*head, q-tile) pair, online softmax over K tiles.
+
+    VMEM working set per cell (f32): q (bq*d) + k,v tiles (2*bk*d) + scores
+    (bq*bk) + accumulator (bq*d) — recorded in DESIGN.md / EXPERIMENTS.md Perf.
+    """
+    q = q_ref[...].astype(jnp.float32)  # [bq, d]
+    seq = k_ref.shape[0]
+    bq, d = q.shape
+
+    m0 = jnp.full((bq,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.ds(i * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(i * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale                      # [bq, bk]
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])                  # unnormalised probs
+        alpha = jnp.exp(m - m_new)                       # rescale old state
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, seq // block_k, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K, scale=None,
+                    interpret: bool = True):
+    """softmax(Q K^T * scale) V without materialising the [S, S] tensors.
+
+    q, k, v: [B, H, S, D] float32 (or bf16). Returns [B, H, S, D].
+    S must be divisible by the (clamped) block sizes; the AOT seqlen buckets
+    are powers of two so this always holds on the compile path.
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"seqlen {s} not divisible by blocks ({block_q},{block_k})")
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(_flash_kernel, block_k=block_k, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    """Fused row layernorm: one grid cell normalises a tile of rows."""
+    x = x_ref[...].astype(jnp.float32)              # [rows, hidden]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (xhat * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def fused_layernorm(x, g, b, *, eps: float = 1e-5, block_rows: int = 128,
+                    interpret: bool = True):
+    """LayerNorm over the last axis of [..., H] via a row-tiled Pallas kernel."""
+    orig_shape = x.shape
+    hidden = orig_shape[-1]
+    rows = 1
+    for dim in orig_shape[:-1]:
+        rows *= dim
+    xf = x.reshape(rows, hidden)
+    block_rows = min(block_rows, rows)
+    while rows % block_rows:
+        block_rows -= 1  # rows is small; find a divisor (worst case 1)
+
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        interpret=interpret,
+    )(xf, g, b)
+    return out.reshape(orig_shape)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one flash grid cell (see DESIGN Perf)."""
+    q_tile = block_q * d
+    kv_tiles = 2 * block_k * d
+    scores = block_q * block_k
+    acc = block_q * d
+    stats = 2 * block_q
+    return dtype_bytes * (q_tile + kv_tiles + scores + acc + stats)

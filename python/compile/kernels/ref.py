@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas kernels and fused layers.
+
+These are the ground truth for pytest/hypothesis: the Pallas kernel(s) in this
+package must match them bit-for-tolerance, and the manual VJPs in layers.py
+are validated against jax.grad of these functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def gelu(x):
+    """tanh-approximation GELU (the BERT/HF default)."""
+    return 0.5 * x * (1.0 + jnp.tanh(GELU_C * (x + 0.044715 * x**3)))
+
+
+def gelu_grad(x):
+    """d gelu(x) / dx for the tanh approximation."""
+    inner = GELU_C * (x + 0.044715 * x**3)
+    t = jnp.tanh(inner)
+    dinner = GELU_C * (1.0 + 3 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * dinner
+
+
+def layernorm(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xhat * g + b
+
+
+def softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention(q, k, v, scale=None):
+    """Eager (memory-quadratic) multi-head attention core.
+
+    q, k, v: [B, H, S, D]. Materialises the [B, H, S, S] score and prob
+    tensors exactly as PyTorch eager does — this quadratic term is the memory
+    behaviour Mimose's estimator models (paper Sec 4.3, Fig 8).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(d))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    p = softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def attention_with_probs(q, k, v, scale=None):
+    """Same as attention() but also returns the prob tensor (a residual)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(d))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    p = softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v), p

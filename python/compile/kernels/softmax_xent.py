@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: fused softmax-cross-entropy over the vocabulary.
+
+The LM head's loss is the other memory hot-spot of the L2 graph: eager
+execution materialises logits [B,S,V] AND log-probs [B,S,V]. This kernel
+streams vocab tiles with an online log-sum-exp, producing per-token loss and
+d(loss)/d(logits) without a second [B,S,V] live tensor — the same
+working-set trick as flash attention, applied to the head.
+
+interpret=True (CPU-PJRT); oracle in ref.py via jax.nn.log_softmax.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_kernel(logits_ref, labels_ref, loss_ref, dlogits_ref, *, block_v: int):
+    """One grid cell: a tile of rows, online LSE over vocab tiles."""
+    vocab = logits_ref.shape[1]
+    rows = logits_ref.shape[0]
+
+    m0 = jnp.full((rows,), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((rows,), jnp.float32)
+
+    def lse_body(i, carry):
+        m, s = carry
+        tile = pl.load(logits_ref, (slice(None), pl.ds(i * block_v, block_v)))
+        tile = tile.astype(jnp.float32)
+        m_new = jnp.maximum(m, jnp.max(tile, axis=1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(tile - m_new[:, None]), axis=1)
+        return m_new, s
+
+    m, s = jax.lax.fori_loop(0, vocab // block_v, lse_body, (m0, s0))
+    lse = m + jnp.log(s)
+
+    labels = labels_ref[...]
+    # loss_t = lse - logit[label]
+    label_logit = jnp.take_along_axis(
+        logits_ref[...].astype(jnp.float32), labels[:, None], axis=1
+    )[:, 0]
+    loss_ref[...] = lse - label_logit
+
+    # dlogits = softmax(logits) - onehot(labels)
+    def grad_body(i, _):
+        tile = pl.load(logits_ref, (slice(None), pl.ds(i * block_v, block_v)))
+        tile = tile.astype(jnp.float32)
+        p = jnp.exp(tile - lse[:, None])
+        col = jax.lax.broadcasted_iota(jnp.int32, (rows, block_v), 1) + i * block_v
+        onehot = (col == labels[:, None]).astype(jnp.float32)
+        pl.store(dlogits_ref, (slice(None), pl.ds(i * block_v, block_v)),
+                 (p - onehot).astype(dlogits_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, vocab // block_v, grad_body, 0)
+
+
+def fused_softmax_xent(logits, labels, *, block_rows: int = 32,
+                       block_v: int = 512, interpret: bool = True):
+    """Per-token CE loss + dloss/dlogits in one fused pass.
+
+    logits: [N, V] f32; labels: [N] int32. Returns (loss [N], dlogits [N, V]).
+    V must be divisible by block_v (vocab sizes here are powers of two).
+    """
+    n, v = logits.shape
+    block_v = min(block_v, v)
+    if v % block_v:
+        raise ValueError(f"vocab {v} not divisible by block_v {block_v}")
+    block_rows = min(block_rows, n)
+    while n % block_rows:
+        block_rows -= 1
+
+    kernel = functools.partial(_xent_kernel, block_v=block_v)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, v), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, v), logits.dtype),
+        ],
+        interpret=interpret,
+    )(logits, labels)

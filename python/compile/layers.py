@@ -1,0 +1,154 @@
+"""Manual forward/backward primitives with *explicit* residual tensors.
+
+Why manual VJPs instead of jax.grad: the Rust engine (L3) implements
+checkpointing at block granularity, holding residual buffers between separate
+PJRT executables. jax.vjp returns a Python closure and cannot be exported
+across an executable boundary, so each primitive here returns its residuals
+as plain tensors and exposes a backward that consumes them. Every backward is
+validated against jax.grad in python/tests/test_layers.py.
+
+The residual *sets* mirror what PyTorch eager keeps alive for autograd — that
+correspondence is what makes the L3 memory ledger faithful to the paper.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Linear: y = x @ W + b, x: [..., I], W: [I, O]
+# ---------------------------------------------------------------------------
+
+def linear_fwd(x, w, b):
+    y = jnp.einsum("...i,io->...o", x, w) + b
+    return y, (x,)
+
+
+def linear_bwd(res, w, gy):
+    (x,) = res
+    gx = jnp.einsum("...o,io->...i", gy, w)
+    gw = jnp.einsum("...i,...o->io", x, gy)
+    gb = jnp.sum(gy, axis=tuple(range(gy.ndim - 1)))
+    return gx, gw, gb
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm over last axis with affine params g, b.
+# ---------------------------------------------------------------------------
+
+def layernorm_fwd(x, g, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * rstd
+    y = xhat * g + b
+    return y, (xhat, rstd)
+
+
+def layernorm_bwd(res, g, gy):
+    xhat, rstd = res
+    h = xhat.shape[-1]
+    gxhat = gy * g
+    # Standard layernorm input-gradient:
+    # gx = rstd/H * (H*gxhat - sum(gxhat) - xhat * sum(gxhat*xhat))
+    sum_g = jnp.sum(gxhat, axis=-1, keepdims=True)
+    sum_gx = jnp.sum(gxhat * xhat, axis=-1, keepdims=True)
+    gx = (rstd / h) * (h * gxhat - sum_g - xhat * sum_gx)
+    red = tuple(range(gy.ndim - 1))
+    gg = jnp.sum(gy * xhat, axis=red)
+    gb = jnp.sum(gy, axis=red)
+    return gx, gg, gb
+
+
+# ---------------------------------------------------------------------------
+# GELU (tanh approximation).
+# ---------------------------------------------------------------------------
+
+def gelu_fwd(x):
+    return ref.gelu(x), (x,)
+
+
+def gelu_bwd(res, gy):
+    (x,) = res
+    return gy * ref.gelu_grad(x)
+
+
+# ---------------------------------------------------------------------------
+# Softmax over last axis (backward consumes the forward output p).
+# ---------------------------------------------------------------------------
+
+def softmax_bwd(p, gp):
+    return p * (gp - jnp.sum(gp * p, axis=-1, keepdims=True))
+
+
+# ---------------------------------------------------------------------------
+# Multi-head attention (eager: materialises probs as a residual).
+#   x: [B, S, H]; params W*: [H, H].
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, heads):
+    b, s, h = x.shape
+    return x.reshape(b, s, heads, h // heads).transpose(0, 2, 1, 3)  # [B,h,S,d]
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def attention_fwd(x, wq, bq, wk, bk, wv, bv, wo, bo, heads):
+    """Returns (out, residuals). Residuals: x, q, k, v, p, ctx.
+
+    q/k/v/ctx are stored head-split ([B,h,S,d]); p is [B,h,S,S] — the
+    quadratic-in-seqlen tensor the paper's estimator keys on.
+    """
+    q, _ = linear_fwd(x, wq, bq)
+    k, _ = linear_fwd(x, wk, bk)
+    v, _ = linear_fwd(x, wv, bv)
+    qh, kh, vh = (_split_heads(t, heads) for t in (q, k, v))
+    ctxh, p = ref.attention_with_probs(qh, kh, vh)
+    ctx = _merge_heads(ctxh)
+    out, _ = linear_fwd(ctx, wo, bo)
+    return out, (x, qh, kh, vh, p, ctx)
+
+
+def attention_bwd(res, wq, wk, wv, wo, gy):
+    """Returns gx and grads for all 8 attention params (order q,k,v,o)."""
+    x, qh, kh, vh, p, ctx = res
+    heads, d = qh.shape[1], qh.shape[3]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    gctx, gwo, gbo = linear_bwd((ctx,), wo, gy)
+    gctxh = _split_heads(gctx, heads)
+
+    gp = jnp.einsum("bhqd,bhkd->bhqk", gctxh, vh)
+    gvh = jnp.einsum("bhqk,bhqd->bhkd", p, gctxh)
+    gs = softmax_bwd(p, gp) * scale
+    gqh = jnp.einsum("bhqk,bhkd->bhqd", gs, kh)
+    gkh = jnp.einsum("bhqk,bhqd->bhkd", gs, qh)
+
+    gq, gk, gv = (_merge_heads(t) for t in (gqh, gkh, gvh))
+    gx_q, gwq, gbq = linear_bwd((x,), wq, gq)
+    gx_k, gwk, gbk = linear_bwd((x,), wk, gk)
+    gx_v, gwv, gbv = linear_bwd((x,), wv, gv)
+    gx = gx_q + gx_k + gx_v
+    return gx, (gwq, gbq, gwk, gbk, gwv, gbv, gwo, gbo)
+
+
+def attention_fwd_flash(x, wq, bq, wk, bk, wv, bv, wo, bo, heads,
+                        block_q=64, block_k=64):
+    """Forward-only attention through the L1 Pallas flash kernel.
+
+    Used by the flash block variant (no residuals kept: the [S,S] tensors are
+    never materialised, so activation memory is linear in seqlen).
+    """
+    from .kernels import flash_attention
+
+    q, _ = linear_fwd(x, wq, bq)
+    k, _ = linear_fwd(x, wk, bk)
+    v, _ = linear_fwd(x, wv, bv)
+    qh, kh, vh = (_split_heads(t, heads) for t in (q, k, v))
+    ctxh = flash_attention(qh, kh, vh, block_q=block_q, block_k=block_k)
+    out, _ = linear_fwd(_merge_heads(ctxh), wo, bo)
+    return out

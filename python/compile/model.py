@@ -1,0 +1,228 @@
+"""L2: BERT-family encoder stack with block-granular explicit-residual AOT API.
+
+The model is expressed as independent, separately-lowered executables so the
+Rust coordinator (L3) can implement *checkpointing as a runtime decision*:
+
+  embed_fwd     (tok_emb, pos_emb, ln_g, ln_b, ids)         -> (x, xhat, rstd)
+  block_fwd     (16 block params, x)                        -> (y, 13 residuals)
+  block_bwd     (16 block params, 13 residuals, gy)         -> (gx, 16 grads)
+  block_bwd_rc  (16 block params, x, gy)                    -> (gx, 16 grads)
+  block_fwd_flash (16 block params, x)                      -> y        [L1 kernel]
+  head_step     (w_lm, b_lm, x, labels)                     -> (loss, gx, gw, gb)
+  embed_bwd     (ln_g, ids, xhat, rstd, gy)                 -> (4 grads)
+
+A *kept* block stores the 13 residuals between fwd and bwd; a *checkpointed*
+block stores only its input x and calls block_bwd_rc, which recomputes the
+residuals inside one fused executable (exactly torch.utils.checkpoint
+semantics at module granularity, the paper's Sec 5 implementation choice).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+
+BLOCK_PARAMS = [
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln1_g", "ln1_b", "w1", "b1", "w2", "b2", "ln2_g", "ln2_b",
+]
+
+RESIDUALS = [
+    "x", "q", "k", "v", "p", "ctx",
+    "xhat1", "rstd1", "x1", "u", "gu", "xhat2", "rstd2",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def init_block_params(cfg: ModelConfig, key) -> dict:
+    h, f = cfg.hidden, cfg.ffn
+    ks = jax.random.split(key, 6)
+    s_h = 0.02
+    return {
+        "wq": jax.random.normal(ks[0], (h, h)) * s_h, "bq": jnp.zeros((h,)),
+        "wk": jax.random.normal(ks[1], (h, h)) * s_h, "bk": jnp.zeros((h,)),
+        "wv": jax.random.normal(ks[2], (h, h)) * s_h, "bv": jnp.zeros((h,)),
+        "wo": jax.random.normal(ks[3], (h, h)) * s_h, "bo": jnp.zeros((h,)),
+        "ln1_g": jnp.ones((h,)), "ln1_b": jnp.zeros((h,)),
+        "w1": jax.random.normal(ks[4], (h, f)) * s_h, "b1": jnp.zeros((f,)),
+        "w2": jax.random.normal(ks[5], (f, h)) * s_h, "b2": jnp.zeros((h,)),
+        "ln2_g": jnp.ones((h,)), "ln2_b": jnp.zeros((h,)),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    k_emb, k_pos, k_head, k_blocks = jax.random.split(key, 4)
+    return {
+        "tok_emb": jax.random.normal(k_emb, (cfg.vocab, cfg.hidden)) * 0.02,
+        "pos_emb": jax.random.normal(k_pos, (cfg.max_seq, cfg.hidden)) * 0.02,
+        "emb_ln_g": jnp.ones((cfg.hidden,)), "emb_ln_b": jnp.zeros((cfg.hidden,)),
+        "blocks": [init_block_params(cfg, k)
+                   for k in jax.random.split(k_blocks, cfg.layers)],
+        "w_lm": jax.random.normal(k_head, (cfg.hidden, cfg.vocab)) * 0.02,
+        "b_lm": jnp.zeros((cfg.vocab,)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_fwd(tok_emb, pos_emb, ln_g, ln_b, ids):
+    """ids: int32 [B, S] -> (x [B,S,H], layernorm residuals)."""
+    s = ids.shape[1]
+    x0 = tok_emb[ids] + pos_emb[:s][None, :, :]
+    y, (xhat, rstd) = layers.layernorm_fwd(x0, ln_g, ln_b)
+    return y, xhat, rstd
+
+
+def embed_bwd(ln_g, ids, xhat, rstd, gy, *, vocab: int, max_seq: int):
+    """Gradients for (tok_emb, pos_emb, ln_g, ln_b)."""
+    gx0, gg, gb = layers.layernorm_bwd((xhat, rstd), ln_g, gy)
+    s = ids.shape[1]
+    onehot = jax.nn.one_hot(ids, vocab, dtype=gx0.dtype)     # [B,S,V]
+    g_tok = jnp.einsum("bsv,bsh->vh", onehot, gx0)
+    g_pos_s = jnp.sum(gx0, axis=0)                           # [S,H]
+    g_pos = jnp.zeros((max_seq, gx0.shape[-1]), gx0.dtype)
+    g_pos = jax.lax.dynamic_update_slice(g_pos, g_pos_s, (0, 0))
+    return g_tok, g_pos, gg, gb
+
+
+# ---------------------------------------------------------------------------
+# Encoder block (post-LN, as BERT)
+# ---------------------------------------------------------------------------
+
+def block_fwd(p: dict, x, heads: int):
+    """Returns (y, residuals dict). Residual set mirrors PyTorch eager."""
+    a, (x_r, q, k, v, probs, ctx) = layers.attention_fwd(
+        x, p["wq"], p["bq"], p["wk"], p["bk"], p["wv"], p["bv"],
+        p["wo"], p["bo"], heads)
+    h1 = x + a
+    x1, (xhat1, rstd1) = layers.layernorm_fwd(h1, p["ln1_g"], p["ln1_b"])
+    u, _ = layers.linear_fwd(x1, p["w1"], p["b1"])
+    gu, _ = layers.gelu_fwd(u)
+    m, _ = layers.linear_fwd(gu, p["w2"], p["b2"])
+    h2 = x1 + m
+    y, (xhat2, rstd2) = layers.layernorm_fwd(h2, p["ln2_g"], p["ln2_b"])
+    res = {
+        "x": x_r, "q": q, "k": k, "v": v, "p": probs, "ctx": ctx,
+        "xhat1": xhat1, "rstd1": rstd1, "x1": x1, "u": u, "gu": gu,
+        "xhat2": xhat2, "rstd2": rstd2,
+    }
+    return y, res
+
+
+def block_bwd(p: dict, res: dict, gy):
+    """Manual reverse pass from explicit residuals. Returns (gx, grads dict)."""
+    gh2, g_ln2g, g_ln2b = layers.layernorm_bwd(
+        (res["xhat2"], res["rstd2"]), p["ln2_g"], gy)
+    # h2 = x1 + m
+    ggu, gw2, gb2 = layers.linear_bwd((res["gu"],), p["w2"], gh2)
+    gu_in = layers.gelu_bwd((res["u"],), ggu)
+    gx1_mlp, gw1, gb1 = layers.linear_bwd((res["x1"],), p["w1"], gu_in)
+    gx1 = gh2 + gx1_mlp
+    gh1, g_ln1g, g_ln1b = layers.layernorm_bwd(
+        (res["xhat1"], res["rstd1"]), p["ln1_g"], gx1)
+    # h1 = x + a
+    gx_attn, (gwq, gbq, gwk, gbk, gwv, gbv, gwo, gbo) = layers.attention_bwd(
+        (res["x"], res["q"], res["k"], res["v"], res["p"], res["ctx"]),
+        p["wq"], p["wk"], p["wv"], p["wo"], gh1)
+    gx = gh1 + gx_attn
+    grads = {
+        "wq": gwq, "bq": gbq, "wk": gwk, "bk": gbk, "wv": gwv, "bv": gbv,
+        "wo": gwo, "bo": gbo, "ln1_g": g_ln1g, "ln1_b": g_ln1b,
+        "w1": gw1, "b1": gb1, "w2": gw2, "b2": gb2,
+        "ln2_g": g_ln2g, "ln2_b": g_ln2b,
+    }
+    return gx, grads
+
+
+def block_bwd_recompute(p: dict, x, gy, heads: int):
+    """Checkpointed path: recompute residuals, then manual backward — fused
+    into one executable so XLA schedules the rematerialisation."""
+    _, res = block_fwd(p, x, heads)
+    return block_bwd(p, res, gy)
+
+
+def block_fwd_flash(p: dict, x, heads: int):
+    """Forward-only block using the L1 Pallas flash-attention kernel."""
+    a = layers.attention_fwd_flash(
+        x, p["wq"], p["bq"], p["wk"], p["bk"], p["wv"], p["bv"],
+        p["wo"], p["bo"], heads)
+    h1 = x + a
+    x1, _ = layers.layernorm_fwd(h1, p["ln1_g"], p["ln1_b"])
+    u, _ = layers.linear_fwd(x1, p["w1"], p["b1"])
+    gu, _ = layers.gelu_fwd(u)
+    m, _ = layers.linear_fwd(gu, p["w2"], p["b2"])
+    y, _ = layers.layernorm_fwd(x1 + m, p["ln2_g"], p["ln2_b"])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# LM head + loss (fused fwd+bwd: the [B,S,V] logits never cross an
+# executable boundary)
+# ---------------------------------------------------------------------------
+
+def head_step(w_lm, b_lm, x, labels):
+    """Returns (mean CE loss, gx, gw_lm, gb_lm)."""
+    logits = jnp.einsum("bsh,hv->bsv", x, w_lm) + b_lm
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    n = labels.shape[0] * labels.shape[1]
+    onehot = jax.nn.one_hot(labels, w_lm.shape[1], dtype=x.dtype)
+    loss = -jnp.sum(onehot * logp) / n
+    glogits = (jnp.exp(logp) - onehot) / n
+    gx = jnp.einsum("bsv,hv->bsh", glogits, w_lm)
+    gw = jnp.einsum("bsh,bsv->hv", x, glogits)
+    gb = jnp.sum(glogits, axis=(0, 1))
+    return loss, gx, gw, gb
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used by tests as the jax.grad oracle and by
+# aot.py for the fused single-executable ablation)
+# ---------------------------------------------------------------------------
+
+def model_loss(params: dict, ids, labels, heads: int):
+    x, _, _ = embed_fwd(params["tok_emb"], params["pos_emb"],
+                        params["emb_ln_g"], params["emb_ln_b"], ids)
+    for bp in params["blocks"]:
+        x, _ = block_fwd(bp, x, heads)
+    logits = jnp.einsum("bsh,hv->bsv", x, params["w_lm"]) + params["b_lm"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    n = labels.shape[0] * labels.shape[1]
+    onehot = jax.nn.one_hot(labels, params["w_lm"].shape[1], dtype=x.dtype)
+    return -jnp.sum(onehot * logp) / n
+
+
+# ---------------------------------------------------------------------------
+# Analytic activation accounting (mirrored in rust/src/model; pytest asserts
+# the two agree with real buffer shapes)
+# ---------------------------------------------------------------------------
+
+def block_residual_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    h, f, hd = cfg.hidden, cfg.ffn, cfg.heads
+    d = cfg.head_dim
+    return {
+        "x": (batch, seq, h),
+        "q": (batch, hd, seq, d), "k": (batch, hd, seq, d), "v": (batch, hd, seq, d),
+        "p": (batch, hd, seq, seq),
+        "ctx": (batch, seq, h),
+        "xhat1": (batch, seq, h), "rstd1": (batch, seq, 1),
+        "x1": (batch, seq, h),
+        "u": (batch, seq, f), "gu": (batch, seq, f),
+        "xhat2": (batch, seq, h), "rstd2": (batch, seq, 1),
+    }
+
+
+def block_residual_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
+    total = 0
+    for shape in block_residual_shapes(cfg, batch, seq).values():
+        n = 1
+        for dim in shape:
+            n *= dim
+        total += 4 * n
+    return total

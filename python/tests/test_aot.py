@@ -1,0 +1,83 @@
+"""AOT path tests: manifest consistency, HLO text sanity, fingerprinting."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.configs import TINY
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_fingerprint_stable():
+    assert aot.input_fingerprint() == aot.input_fingerprint()
+
+
+def test_build_artifacts_inventory():
+    names = [a[0] for a in aot.build_artifacts(TINY, 16)]
+    assert names == ["embed_fwd", "embed_bwd", "block_fwd", "block_bwd",
+                     "block_bwd_rc", "block_fwd_flash", "head_step"]
+
+
+def test_block_fwd_artifact_io_contract():
+    for name, fn, args, outs in aot.build_artifacts(TINY, 16):
+        if name != "block_fwd":
+            continue
+        assert [n for n, _ in args] == model.BLOCK_PARAMS + ["x"]
+        assert outs == ["y"] + model.RESIDUALS
+        # the artifact fn must actually run on concrete zeros
+        concrete = [jnp.zeros(s.shape, s.dtype) for _, s in args]
+        res = fn(*concrete)
+        assert len(res) == len(outs)
+
+
+def test_block_bwd_artifact_grad_count():
+    for name, fn, args, outs in aot.build_artifacts(TINY, 16):
+        if name in ("block_bwd", "block_bwd_rc"):
+            assert outs[0] == "gx"
+            assert outs[1:] == ["g_" + n for n in model.BLOCK_PARAMS]
+
+
+def test_hlo_text_is_parsable_format():
+    """Lowered text must be XLA HLO text (entry computation, f32 types)."""
+    gen = aot.build_artifacts(TINY, 16)
+    name, fn, args, outs = next(gen)  # embed_fwd
+    lowered = jax.jit(fn).lower(*[s for _, s in args])
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "f32[" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_configs_present(self, manifest):
+        assert "bert-tiny" in manifest["configs"]
+
+    def test_every_artifact_file_exists(self, manifest):
+        for cfg in manifest["configs"].values():
+            for a in cfg["artifacts"]:
+                assert os.path.exists(os.path.join(ART, a["file"])), a["file"]
+
+    def test_manifest_shapes_match_specs(self, manifest):
+        cfg = manifest["configs"]["bert-tiny"]
+        m = cfg["model"]
+        assert m["hidden"] == TINY.hidden and m["layers"] == TINY.layers
+        for a in cfg["artifacts"]:
+            if a["name"] == "block_fwd":
+                x = [i for i in a["inputs"] if i["name"] == "x"][0]
+                assert x["shape"] == [TINY.batch, a["seq"], TINY.hidden]
+                assert x["dtype"] == "f32"
+
+    def test_param_count_recorded(self, manifest):
+        assert manifest["configs"]["bert-tiny"]["model"]["param_count"] == TINY.param_count()

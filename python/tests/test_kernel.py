@@ -1,0 +1,124 @@
+"""L1 kernel correctness: Pallas flash attention / fused LN vs pure-jnp ref.
+
+Includes hypothesis sweeps over shapes and dtypes (the CORE correctness
+signal for the compile path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, fused_layernorm, vmem_footprint_bytes
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,s,d", [(1, 1, 16, 8), (2, 3, 64, 16), (1, 4, 128, 32)])
+    def test_matches_ref(self, b, h, s, d):
+        q, k, v = rand(0, (b, h, s, d)), rand(1, (b, h, s, d)), rand(2, (b, h, s, d))
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(out, ref.attention(q, k, v), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("bq,bk", [(8, 8), (16, 32), (32, 16), (64, 64)])
+    def test_block_shapes_equivalent(self, bq, bk):
+        """Tiling is an execution schedule, not a semantic choice."""
+        q, k, v = (rand(i, (1, 2, 64, 16)) for i in range(3))
+        base = flash_attention(q, k, v, block_q=64, block_k=64)
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(out, base, rtol=2e-5, atol=2e-5)
+
+    def test_scale_override(self):
+        q, k, v = (rand(i, (1, 1, 32, 8)) for i in range(3))
+        out = flash_attention(q, k, v, scale=0.25)
+        np.testing.assert_allclose(out, ref.attention(q, k, v, scale=0.25),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_rejects_indivisible_seq(self):
+        q = rand(0, (1, 1, 48, 8))
+        with pytest.raises(ValueError):
+            flash_attention(q, q, q, block_q=32, block_k=32)
+
+    def test_softmax_rows_sum_via_uniform_v(self):
+        """With V = ones, output rows must be exactly ones (softmax sums to 1)."""
+        q, k = rand(0, (1, 2, 32, 8)), rand(1, (1, 2, 32, 8))
+        v = jnp.ones((1, 2, 32, 8))
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)
+
+    def test_large_logits_numerically_stable(self):
+        """Online softmax must not overflow with large score magnitudes."""
+        q = rand(0, (1, 1, 32, 8)) * 40.0
+        k = rand(1, (1, 1, 32, 8)) * 40.0
+        v = rand(2, (1, 1, 32, 8))
+        out = flash_attention(q, k, v)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(out, ref.attention(q, k, v), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        h=st.integers(1, 3),
+        s_pow=st.integers(3, 7),   # seqlen 8..128
+        d=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, b, h, s_pow, d, seed):
+        s = 2 ** s_pow
+        q, k, v = (rand(seed + i, (b, h, s, d)) for i in range(3))
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(out, ref.attention(q, k, v), rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_bf16(self, seed):
+        q, k, v = (rand(seed + i, (1, 2, 32, 16), jnp.bfloat16) for i in range(3))
+        out = flash_attention(q, k, v).astype(jnp.float32)
+        want = ref.attention(*(t.astype(jnp.float32) for t in (q, k, v)))
+        np.testing.assert_allclose(out, want, rtol=3e-2, atol=3e-2)
+
+    def test_lowers_into_jit_hlo(self):
+        """interpret=True must lower to plain HLO (no TPU custom-call)."""
+        q = jax.ShapeDtypeStruct((1, 2, 32, 8), jnp.float32)
+        lowered = jax.jit(lambda a, b, c: flash_attention(a, b, c)).lower(q, q, q)
+        text = lowered.compiler_ir("stablehlo")
+        assert "tpu_custom_call" not in str(text)
+
+
+class TestFusedLayernorm:
+    @pytest.mark.parametrize("shape", [(4, 16), (2, 8, 32), (3, 5, 7)])
+    def test_matches_ref(self, shape):
+        x = rand(0, shape)
+        g, b = rand(1, shape[-1:]), rand(2, shape[-1:])
+        np.testing.assert_allclose(fused_layernorm(x, g, b),
+                                   ref.layernorm(x, g, b), rtol=2e-5, atol=2e-5)
+
+    def test_rows_not_divisible_by_block(self):
+        x, g, b = rand(0, (7, 24)), rand(1, (24,)), rand(2, (24,))
+        out = fused_layernorm(x, g, b, block_rows=4)
+        np.testing.assert_allclose(out, ref.layernorm(x, g, b), rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows=st.integers(1, 64), hidden=st.sampled_from([8, 16, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_rows(self, rows, hidden, seed):
+        x = rand(seed, (rows, hidden))
+        g, b = rand(seed + 1, (hidden,)), rand(seed + 2, (hidden,))
+        np.testing.assert_allclose(fused_layernorm(x, g, b),
+                                   ref.layernorm(x, g, b), rtol=2e-5, atol=2e-5)
+
+
+class TestVmemModel:
+    def test_footprint_monotone_in_blocks(self):
+        a = vmem_footprint_bytes(32, 32, 64)
+        b = vmem_footprint_bytes(64, 64, 64)
+        assert b > a
+
+    def test_footprint_formula(self):
+        # bq=bk=d=2, f32: q 4 + kv 8 + scores 4 + acc 4 + stats 4 = 24 floats
+        assert vmem_footprint_bytes(2, 2, 2) == 4 * 24

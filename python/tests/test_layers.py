@@ -1,0 +1,96 @@
+"""Manual VJP primitives vs jax.grad — each primitive independently."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers
+from compile.kernels import ref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+def check_grads(manual, oracle_fn, oracle_args, argnums, rtol=2e-4, atol=2e-5):
+    want = jax.grad(oracle_fn, argnums=argnums)(*oracle_args)
+    for got, exp in zip(manual, want):
+        np.testing.assert_allclose(got, exp, rtol=rtol, atol=atol)
+
+
+class TestLinear:
+    @pytest.mark.parametrize("shape", [(4, 8), (2, 6, 8), (2, 3, 4, 8)])
+    def test_bwd(self, shape):
+        x, w, b = rand(0, shape), rand(1, (8, 5)), rand(2, (5,))
+        gy = rand(3, shape[:-1] + (5,))
+        y, res = layers.linear_fwd(x, w, b)
+        np.testing.assert_allclose(y, jnp.einsum("...i,io->...o", x, w) + b, rtol=1e-6)
+        gx, gw, gb = layers.linear_bwd(res, w, gy)
+        f = lambda x, w, b: jnp.sum(layers.linear_fwd(x, w, b)[0] * gy)
+        check_grads((gx, gw, gb), f, (x, w, b), (0, 1, 2))
+
+
+class TestLayerNorm:
+    @settings(max_examples=15, deadline=None)
+    @given(rows=st.integers(1, 8), h=st.sampled_from([4, 16, 64]),
+           seed=st.integers(0, 1000))
+    def test_bwd_hypothesis(self, rows, h, seed):
+        x, g, b = rand(seed, (rows, h)), rand(seed + 1, (h,)), rand(seed + 2, (h,))
+        gy = rand(seed + 3, (rows, h))
+        y, res = layers.layernorm_fwd(x, g, b)
+        np.testing.assert_allclose(y, ref.layernorm(x, g, b), rtol=1e-5, atol=1e-6)
+        gx, gg, gb_ = layers.layernorm_bwd(res, g, gy)
+        f = lambda x, g, b: jnp.sum(layers.layernorm_fwd(x, g, b)[0] * gy)
+        check_grads((gx, gg, gb_), f, (x, g, b), (0, 1, 2), rtol=5e-4, atol=5e-5)
+
+
+class TestGelu:
+    def test_bwd(self):
+        x = jnp.linspace(-4, 4, 101)
+        gy = rand(0, (101,))
+        _, res = layers.gelu_fwd(x)
+        gx = layers.gelu_bwd(res, gy)
+        f = lambda x: jnp.sum(ref.gelu(x) * gy)
+        np.testing.assert_allclose(gx, jax.grad(f)(x), rtol=2e-4, atol=2e-6)
+
+
+class TestSoftmaxBwd:
+    def test_matches_autodiff(self):
+        x, gp = rand(0, (3, 7)), rand(1, (3, 7))
+        p = ref.softmax(x)
+        gs = layers.softmax_bwd(p, gp)
+        f = lambda x: jnp.sum(ref.softmax(x) * gp)
+        np.testing.assert_allclose(gs, jax.grad(f)(x), rtol=2e-4, atol=2e-6)
+
+
+class TestAttention:
+    @pytest.mark.parametrize("b,s,h,heads", [(1, 8, 16, 2), (2, 16, 24, 4)])
+    def test_fwd_bwd(self, b, s, h, heads):
+        x = rand(0, (b, s, h))
+        ws = {n: rand(i + 1, (h, h)) for i, n in enumerate(["wq", "wk", "wv", "wo"])}
+        bs = {n: rand(i + 5, (h,)) for i, n in enumerate(["bq", "bk", "bv", "bo"])}
+        gy = rand(9, (b, s, h))
+
+        def f(x, wq, bq, wk, bk, wv, bv, wo, bo):
+            out, _ = layers.attention_fwd(x, wq, bq, wk, bk, wv, bv, wo, bo, heads)
+            return jnp.sum(out * gy)
+
+        args = (x, ws["wq"], bs["bq"], ws["wk"], bs["bk"],
+                ws["wv"], bs["bv"], ws["wo"], bs["bo"])
+        out, res = layers.attention_fwd(*args, heads)
+        gx, grads = layers.attention_bwd(res, ws["wq"], ws["wk"], ws["wv"], ws["wo"], gy)
+        check_grads((gx,) + grads, f, args, tuple(range(9)), rtol=5e-4, atol=3e-4)
+
+    def test_flash_fwd_matches_eager_fwd(self):
+        b, s, h, heads = 2, 32, 32, 4
+        x = rand(0, (b, s, h))
+        args = [x] + [rand(i, (h, h)) if i % 2 else rand(i, (h,)) for i in range(1, 9)]
+        # interleave properly: wq,bq,wk,bk,wv,bv,wo,bo
+        wq, bq, wk, bk = rand(1, (h, h)), rand(2, (h,)), rand(3, (h, h)), rand(4, (h,))
+        wv, bv, wo, bo = rand(5, (h, h)), rand(6, (h,)), rand(7, (h, h)), rand(8, (h,))
+        eager, _ = layers.attention_fwd(x, wq, bq, wk, bk, wv, bv, wo, bo, heads)
+        flash = layers.attention_fwd_flash(x, wq, bq, wk, bk, wv, bv, wo, bo, heads,
+                                           block_q=16, block_k=16)
+        np.testing.assert_allclose(flash, eager, rtol=5e-4, atol=3e-4)

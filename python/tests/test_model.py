@@ -1,0 +1,173 @@
+"""L2 model-level tests: block backward vs jax.grad, whole-model assembly,
+analytic activation accounting, head/embed steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import TINY, BASE, ModelConfig
+
+CFG = TINY
+B, S = 2, 16
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    ids = jax.random.randint(jax.random.PRNGKey(42), (B, S), 0, CFG.vocab)
+    labels = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, CFG.vocab)
+    return ids, labels
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+class TestBlock:
+    def test_bwd_matches_jax_grad(self, params):
+        bp = params["blocks"][0]
+        x, gy = rand(0, (B, S, CFG.hidden)), rand(1, (B, S, CFG.hidden))
+
+        def f(bp, x):
+            y, _ = model.block_fwd(bp, x, CFG.heads)
+            return jnp.sum(y * gy)
+
+        want_p, want_x = jax.grad(f, argnums=(0, 1))(bp, x)
+        _, res = model.block_fwd(bp, x, CFG.heads)
+        gx, grads = model.block_bwd(bp, res, gy)
+        np.testing.assert_allclose(gx, want_x, rtol=5e-4, atol=5e-5)
+        for name in model.BLOCK_PARAMS:
+            np.testing.assert_allclose(grads[name], want_p[name],
+                                       rtol=5e-4, atol=5e-5, err_msg=name)
+
+    def test_bwd_recompute_identical_to_kept(self, params):
+        """Checkpointed path must be numerically identical to the kept path
+        (the paper's convergence claim, Fig 15, depends on this)."""
+        bp = params["blocks"][1]
+        x, gy = rand(2, (B, S, CFG.hidden)), rand(3, (B, S, CFG.hidden))
+        _, res = model.block_fwd(bp, x, CFG.heads)
+        gx1, g1 = model.block_bwd(bp, res, gy)
+        gx2, g2 = model.block_bwd_recompute(bp, x, gy, CFG.heads)
+        np.testing.assert_array_equal(np.asarray(gx1), np.asarray(gx2))
+        for name in model.BLOCK_PARAMS:
+            np.testing.assert_array_equal(np.asarray(g1[name]), np.asarray(g2[name]))
+
+    def test_flash_forward_matches_eager(self, params):
+        bp = params["blocks"][0]
+        x = rand(4, (B, S, CFG.hidden))
+        y, _ = model.block_fwd(bp, x, CFG.heads)
+        yf = model.block_fwd_flash(bp, x, CFG.heads)
+        np.testing.assert_allclose(yf, y, rtol=5e-4, atol=5e-5)
+
+    def test_residual_shapes_match_analytic(self, params):
+        bp = params["blocks"][0]
+        x = rand(5, (B, S, CFG.hidden))
+        _, res = model.block_fwd(bp, x, CFG.heads)
+        shapes = model.block_residual_shapes(CFG, B, S)
+        assert set(res) == set(shapes) == set(model.RESIDUALS)
+        for name, t in res.items():
+            assert tuple(t.shape) == tuple(shapes[name]), name
+
+    def test_residual_bytes_quadratic_term(self):
+        """Doubling seqlen must grow residual bytes superlinearly (the p
+        tensor) but less than 4x overall — paper Sec 4.3's key observation."""
+        b1 = model.block_residual_bytes(CFG, B, 32)
+        b2 = model.block_residual_bytes(CFG, B, 64)
+        assert 2.0 < b2 / b1 < 4.0
+
+
+class TestEmbedHead:
+    def test_embed_bwd(self, params, batch):
+        ids, _ = batch
+        gy = rand(6, (B, S, CFG.hidden))
+
+        def f(tok, pos, g, b):
+            y, _, _ = model.embed_fwd(tok, pos, g, b, ids)
+            return jnp.sum(y * gy)
+
+        want = jax.grad(f, argnums=(0, 1, 2, 3))(
+            params["tok_emb"], params["pos_emb"],
+            params["emb_ln_g"], params["emb_ln_b"])
+        _, xhat, rstd = model.embed_fwd(params["tok_emb"], params["pos_emb"],
+                                        params["emb_ln_g"], params["emb_ln_b"], ids)
+        got = model.embed_bwd(params["emb_ln_g"], ids, xhat, rstd, gy,
+                              vocab=CFG.vocab, max_seq=CFG.max_seq)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=5e-4, atol=5e-5)
+
+    def test_head_step(self, params, batch):
+        _, labels = batch
+        x = rand(8, (B, S, CFG.hidden))
+
+        def f(w, b, x):
+            logits = jnp.einsum("bsh,hv->bsv", x, w) + b
+            logp = jax.nn.log_softmax(logits)
+            onehot = jax.nn.one_hot(labels, CFG.vocab, dtype=x.dtype)
+            return -jnp.sum(onehot * logp) / (B * S)
+
+        loss, gx, gw, gb = model.head_step(params["w_lm"], params["b_lm"], x, labels)
+        np.testing.assert_allclose(loss, f(params["w_lm"], params["b_lm"], x), rtol=1e-5)
+        want = jax.grad(f, argnums=(0, 1, 2))(params["w_lm"], params["b_lm"], x)
+        np.testing.assert_allclose(gw, want[0], rtol=5e-4, atol=1e-6)
+        np.testing.assert_allclose(gb, want[1], rtol=5e-4, atol=1e-6)
+        np.testing.assert_allclose(gx, want[2], rtol=5e-4, atol=1e-6)
+
+    def test_loss_is_lnV_at_init_uniformish(self, batch):
+        """A freshly initialised head should produce ~ln(V) CE loss."""
+        ids, labels = batch
+        params = model.init_params(CFG, 3)
+        loss = model.model_loss(params, ids, labels, CFG.heads)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+class TestAssembly:
+    def test_blockwise_grads_match_whole_model_grad(self, params, batch):
+        """Full manual pipeline (embed->blocks->head, all manual bwd) must
+        equal jax.grad of the fused model_loss — the strongest L2 signal."""
+        ids, labels = batch
+        heads = CFG.heads
+        x, xhat_e, rstd_e = model.embed_fwd(
+            params["tok_emb"], params["pos_emb"],
+            params["emb_ln_g"], params["emb_ln_b"], ids)
+        acts = []
+        for bp in params["blocks"]:
+            acts.append(x)
+            x, res = model.block_fwd(bp, x, heads)
+            acts[-1] = (acts[-1], res)
+        loss, gx, gw_lm, gb_lm = model.head_step(
+            params["w_lm"], params["b_lm"], x, labels)
+        block_grads = []
+        for bp, (bx, res) in zip(reversed(params["blocks"]), reversed(acts)):
+            gx, grads = model.block_bwd(bp, res, gx)
+            block_grads.append(grads)
+        block_grads.reverse()
+        g_tok, g_pos, g_g, g_b = model.embed_bwd(
+            params["emb_ln_g"], ids, xhat_e, rstd_e, gx,
+            vocab=CFG.vocab, max_seq=CFG.max_seq)
+
+        want = jax.grad(lambda p: model.model_loss(p, ids, labels, heads))(params)
+        np.testing.assert_allclose(loss, model.model_loss(params, ids, labels, heads),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(gw_lm, want["w_lm"], rtol=1e-3, atol=1e-6)
+        np.testing.assert_allclose(g_tok, want["tok_emb"], rtol=1e-3, atol=1e-6)
+        np.testing.assert_allclose(g_pos, want["pos_emb"], rtol=1e-3, atol=1e-6)
+        for i, grads in enumerate(block_grads):
+            for name in model.BLOCK_PARAMS:
+                np.testing.assert_allclose(
+                    grads[name], want["blocks"][i][name],
+                    rtol=2e-3, atol=1e-5, err_msg=f"block{i}.{name}")
+
+    def test_param_count_formula(self):
+        """Config param_count must equal the real pytree size."""
+        params = model.init_params(CFG, 0)
+        n = sum(int(np.prod(t.shape)) for t in jax.tree_util.tree_leaves(params))
+        assert n == CFG.param_count()
+
+    def test_base_config_is_about_100m(self):
+        assert 90e6 < BASE.param_count() < 130e6

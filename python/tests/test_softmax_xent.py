@@ -1,0 +1,65 @@
+"""Fused softmax-cross-entropy kernel vs log_softmax oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_softmax_xent
+
+
+def ref_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], 1)[:, 0]
+    dlogits = jnp.exp(logp) - jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return loss, dlogits
+
+
+def rand_case(seed, n, v, scale=3.0):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (n, v)) * scale
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, v)
+    return logits, labels
+
+
+class TestFusedSoftmaxXent:
+    @pytest.mark.parametrize("n,v", [(4, 512), (8, 1024), (16, 2048)])
+    def test_matches_ref(self, n, v):
+        logits, labels = rand_case(0, n, v)
+        loss, dl = fused_softmax_xent(logits, labels)
+        want_loss, want_dl = ref_xent(logits, labels)
+        np.testing.assert_allclose(loss, want_loss, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(dl, want_dl, rtol=2e-5, atol=2e-5)
+
+    def test_block_v_equivalence(self):
+        logits, labels = rand_case(3, 8, 1024)
+        a = fused_softmax_xent(logits, labels, block_v=128)[0]
+        b = fused_softmax_xent(logits, labels, block_v=1024)[0]
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def test_large_logits_stable(self):
+        logits, labels = rand_case(5, 4, 512, scale=50.0)
+        loss, dl = fused_softmax_xent(logits, labels)
+        assert bool(jnp.all(jnp.isfinite(loss)))
+        assert bool(jnp.all(jnp.isfinite(dl)))
+
+    def test_gradient_rows_sum_to_zero(self):
+        # each dlogits row sums to softmax-sum(1) - onehot-sum(1) = 0
+        logits, labels = rand_case(7, 8, 512)
+        _, dl = fused_softmax_xent(logits, labels)
+        np.testing.assert_allclose(jnp.sum(dl, axis=1), jnp.zeros(8), atol=2e-5)
+
+    def test_rejects_indivisible_vocab(self):
+        logits, labels = rand_case(9, 4, 500)
+        with pytest.raises(ValueError):
+            fused_softmax_xent(logits, labels, block_v=128)
+
+    @settings(max_examples=12, deadline=None)
+    @given(n=st.integers(1, 16), v_pow=st.integers(7, 11), seed=st.integers(0, 10**6))
+    def test_hypothesis_sweep(self, n, v_pow, seed):
+        v = 2 ** v_pow
+        logits, labels = rand_case(seed, n, v)
+        loss, dl = fused_softmax_xent(logits, labels)
+        want_loss, want_dl = ref_xent(logits, labels)
+        np.testing.assert_allclose(loss, want_loss, rtol=5e-5, atol=5e-5)
+        np.testing.assert_allclose(dl, want_dl, rtol=5e-5, atol=5e-5)

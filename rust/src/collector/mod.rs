@@ -1,0 +1,199 @@
+//! The shuttling online collector (paper §4.2, §5, Fig 7 & 12).
+//!
+//! During *sheltered execution* each block's forward runs twice: pass one
+//! measures (memory, time) with residuals materialised, pass two re-runs the
+//! block dropping everything but its output so the next block can be
+//! measured under a Sublinear-conservative memory envelope. The engines
+//! produce `Observation`s; this module filters them (Fig 12) and feeds the
+//! estimator.
+
+use crate::estimator::{MemoryEstimator, Sample};
+
+/// Raw per-layer measurement from one sheltered forward.
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    pub layer: usize,
+    /// Elements in the collated mini-batch input (batch * seqlen).
+    pub input_size: f64,
+    /// Measured activation bytes (state difference across the layer fwd).
+    pub act_bytes: u64,
+    /// Measured forward wall time, ms.
+    pub fwd_ms: f64,
+    /// Fig 12 flags: was this layer itself under checkpoint (no_grad)?
+    pub self_checkpointed: bool,
+    /// ... or a parent/child module of it?
+    pub relative_checkpointed: bool,
+}
+
+/// Fig 12 data filter: drop measurements polluted by checkpointing.
+pub fn filter_valid(obs: &Observation) -> bool {
+    // Case 1: layer itself checkpointed -> no activation exists -> invalid.
+    // Case 2: parent or child checkpointed -> partial/duplicated state -> invalid.
+    // Case 3: otherwise valid.
+    !obs.self_checkpointed && !obs.relative_checkpointed
+}
+
+/// Collector state machine: sheltered for `max_iters` iterations (or when a
+/// novel input size appears, §4.2 O(n/N) note), then frozen.
+#[derive(Debug)]
+pub struct Collector {
+    max_iters: usize,
+    iters_done: usize,
+    /// Distinct input sizes already collected (re-shuttle only novel ones).
+    seen_sizes: Vec<u64>,
+    /// Accumulated collector wall-clock overhead (the extra forward), ms.
+    pub overhead_ms: f64,
+    /// Observations dropped by the Fig 12 filter.
+    pub filtered_out: u64,
+    frozen: bool,
+}
+
+impl Collector {
+    pub fn new(max_iters: usize) -> Self {
+        Collector {
+            max_iters,
+            iters_done: 0,
+            seen_sizes: Vec::new(),
+            overhead_ms: 0.0,
+            filtered_out: 0,
+            frozen: false,
+        }
+    }
+
+    pub fn iters_done(&self) -> usize {
+        self.iters_done
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    /// Should this iteration run in sheltered (shuttling) mode?
+    pub fn wants_collection(&self, input_size: u64) -> bool {
+        if self.frozen {
+            return false;
+        }
+        if self.iters_done < self.max_iters {
+            return true;
+        }
+        // past the warmup window: only shuttle novel input sizes
+        !self.seen_sizes.iter().any(|&s| near(s, input_size, 0.02))
+    }
+
+    /// Ingest one sheltered iteration's observations into the estimator.
+    /// `extra_fwd_ms` is the cost of the duplicated forward pass.
+    pub fn ingest(
+        &mut self,
+        estimator: &mut MemoryEstimator,
+        input_size: u64,
+        observations: &[Observation],
+        extra_fwd_ms: f64,
+    ) {
+        assert!(!self.frozen, "collector is frozen");
+        for obs in observations {
+            if !filter_valid(obs) {
+                self.filtered_out += 1;
+                continue;
+            }
+            estimator.observe(
+                obs.layer,
+                Sample {
+                    input_size: obs.input_size,
+                    act_bytes: obs.act_bytes as f64,
+                    fwd_ms: obs.fwd_ms,
+                },
+            );
+        }
+        if !self.seen_sizes.iter().any(|&s| near(s, input_size, 0.02)) {
+            self.seen_sizes.push(input_size);
+        }
+        self.iters_done += 1;
+        self.overhead_ms += extra_fwd_ms;
+        if self.iters_done >= self.max_iters {
+            self.frozen = true;
+        }
+    }
+}
+
+fn near(a: u64, b: u64, tol: f64) -> bool {
+    (a as f64 - b as f64).abs() <= b as f64 * tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(layer: usize, self_c: bool, rel_c: bool) -> Observation {
+        Observation {
+            layer,
+            input_size: 512.0,
+            act_bytes: 1000,
+            fwd_ms: 1.0,
+            self_checkpointed: self_c,
+            relative_checkpointed: rel_c,
+        }
+    }
+
+    #[test]
+    fn filter_three_cases() {
+        assert!(!filter_valid(&obs(0, true, false))); // case 1
+        assert!(!filter_valid(&obs(0, false, true))); // case 2
+        assert!(filter_valid(&obs(0, false, false))); // case 3
+    }
+
+    #[test]
+    fn collects_for_max_iters_then_freezes() {
+        let mut c = Collector::new(3);
+        let mut e = MemoryEstimator::new(1);
+        for i in 0..3 {
+            assert!(c.wants_collection(1000 + i));
+            c.ingest(&mut e, 1000 + i, &[obs(0, false, false)], 5.0);
+        }
+        assert!(c.is_frozen());
+        assert!(!c.wants_collection(5000));
+        assert_eq!(e.sample_count(0), 3);
+        assert!((c.overhead_ms - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn filtered_observations_not_ingested() {
+        let mut c = Collector::new(2);
+        let mut e = MemoryEstimator::new(2);
+        c.ingest(
+            &mut e,
+            100,
+            &[obs(0, true, false), obs(1, false, false)],
+            1.0,
+        );
+        assert_eq!(c.filtered_out, 1);
+        assert_eq!(e.sample_count(0), 0);
+        assert_eq!(e.sample_count(1), 1);
+    }
+
+    #[test]
+    fn repeated_size_not_novel() {
+        let mut c = Collector::new(100);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, 1000, &[obs(0, false, false)], 1.0);
+        // inside warmup window everything is collected
+        assert!(c.wants_collection(1000));
+        // simulate end of warmup
+        for i in 0..99 {
+            c.ingest(&mut e, 2000 + i * 100, &[obs(0, false, false)], 1.0);
+        }
+        assert!(c.is_frozen());
+    }
+
+    #[test]
+    #[should_panic(expected = "collector is frozen")]
+    fn ingest_after_freeze_panics() {
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, 1, &[], 0.0);
+        c.ingest(&mut e, 2, &[], 0.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Typed experiment configuration: the paper's tasks (Table 1), model specs,
+//! planner selection, budgets. Loadable from a TOML-subset file or built
+//! from presets; every example/bench records the exact config it ran.
+
+pub mod toml;
+
+use crate::util::GIB;
+use toml::Doc;
+
+/// Which checkpointing planner drives training (paper §6.1 comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerKind {
+    /// Original PyTorch: no checkpointing, unlimited memory reference.
+    Baseline,
+    /// Static planner sized for the maximum input (Chen et al. sublinear).
+    Sublinear,
+    /// Dynamic Tensor Rematerialization: greedy eviction on OOM.
+    Dtr,
+    /// This paper.
+    Mimose,
+}
+
+impl PlannerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "none" | "pytorch" => Some(PlannerKind::Baseline),
+            "sublinear" | "static" => Some(PlannerKind::Sublinear),
+            "dtr" | "dynamic" => Some(PlannerKind::Dtr),
+            "mimose" => Some(PlannerKind::Mimose),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannerKind::Baseline => "baseline",
+            PlannerKind::Sublinear => "sublinear",
+            PlannerKind::Dtr => "dtr",
+            PlannerKind::Mimose => "mimose",
+        }
+    }
+
+    pub fn all() -> [PlannerKind; 4] {
+        [PlannerKind::Baseline, PlannerKind::Sublinear, PlannerKind::Dtr, PlannerKind::Mimose]
+    }
+}
+
+/// Transformer architecture (mirrors python/compile/configs.py exactly).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+}
+
+impl ModelSpec {
+    pub fn bert_base() -> Self {
+        ModelSpec { name: "bert-base".into(), vocab: 8192, hidden: 768, layers: 12,
+                    heads: 12, ffn: 3072, max_seq: 512 }
+    }
+
+    /// RoBERTa-base: same trunk as BERT-base, larger vocab (125M total).
+    pub fn roberta_base() -> Self {
+        ModelSpec { name: "roberta-base".into(), vocab: 50265, hidden: 768, layers: 12,
+                    heads: 12, ffn: 3072, max_seq: 512 }
+    }
+
+    /// XLNet-base: BERT-base-shaped trunk plus relative-attention extras; we
+    /// model the memory-relevant trunk (12 x hidden 768) with a 15% wider
+    /// attention residual set (two-stream attention).
+    pub fn xlnet_base() -> Self {
+        ModelSpec { name: "xlnet-base".into(), vocab: 32000, hidden: 768, layers: 12,
+                    heads: 12, ffn: 3072, max_seq: 512 }
+    }
+
+    pub fn bert_tiny() -> Self {
+        ModelSpec { name: "bert-tiny".into(), vocab: 512, hidden: 64, layers: 2,
+                    heads: 4, ffn: 128, max_seq: 64 }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let block = 4 * (h * h + h) + h * f + f + f * h + h + 4 * h;
+        let embed = (self.vocab as u64) * h + (self.max_seq as u64) * h + 2 * h;
+        let head = h * self.vocab as u64 + self.vocab as u64;
+        embed + self.layers as u64 * block + head
+    }
+
+    /// Bytes held for the whole run: fp32 params + grads + Adam m/v.
+    pub fn fixed_state_bytes(&self) -> u64 {
+        self.param_count() * 4 * 4
+    }
+}
+
+/// A training task: dataset distribution + model + batch size (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Multiple choice, SWAG, RoBERTa-base, batch 16.
+    McRoberta,
+    /// Question answering, SQuAD, XLNet, batch 16.
+    QaXlnet,
+    /// Question answering, SQuAD, BERT-base, batch 12.
+    QaBert,
+    /// Text classification, GLUE-QQP, BERT-base, batch 32.
+    TcBert,
+}
+
+impl Task {
+    pub fn all() -> [Task; 4] {
+        [Task::McRoberta, Task::QaXlnet, Task::QaBert, Task::TcBert]
+    }
+
+    pub fn parse(s: &str) -> Option<Task> {
+        match s.to_ascii_lowercase().as_str() {
+            "mc-roberta" | "swag" => Some(Task::McRoberta),
+            "qa-xlnet" => Some(Task::QaXlnet),
+            "qa-bert" | "squad" => Some(Task::QaBert),
+            "tc-bert" | "qqp" | "glue-qqp" => Some(Task::TcBert),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::McRoberta => "MC-Roberta",
+            Task::QaXlnet => "QA-XLNet",
+            Task::QaBert => "QA-Bert",
+            Task::TcBert => "TC-Bert",
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        match self {
+            Task::McRoberta => 16,
+            Task::QaXlnet => 16,
+            Task::QaBert => 12,
+            Task::TcBert => 32,
+        }
+    }
+
+    pub fn model(&self) -> ModelSpec {
+        match self {
+            Task::McRoberta => ModelSpec::roberta_base(),
+            Task::QaXlnet => ModelSpec::xlnet_base(),
+            Task::QaBert | Task::TcBert => ModelSpec::bert_base(),
+        }
+    }
+
+    /// (min, max) collated seqlen range observed in Fig 3.
+    pub fn seq_range(&self) -> (usize, usize) {
+        match self {
+            Task::McRoberta => (35, 141),
+            Task::QaXlnet | Task::QaBert => (153, 512),
+            Task::TcBert => (30, 332),
+        }
+    }
+
+    /// Iterations per epoch (dataset size / batch, order-of-magnitude of the
+    /// real datasets: SWAG 73k/16, SQuAD 88k/16|12, QQP 364k/32).
+    pub fn iters_per_epoch(&self) -> usize {
+        match self {
+            Task::McRoberta => 4600,
+            Task::QaXlnet => 5500,
+            Task::QaBert => 7300,
+            Task::TcBert => 11400,
+        }
+    }
+}
+
+/// Scheduler tuning knobs (paper values as defaults).
+#[derive(Clone, Debug)]
+pub struct MimoseConfig {
+    /// Bucket tolerance for "similar memory usage" (±10% in the paper).
+    pub bucket_tolerance: f64,
+    /// Iterations of sheltered execution (paper: 10).
+    pub collect_iters: usize,
+    /// Input sizes within this relative distance share a cached plan.
+    pub cache_tolerance: f64,
+    /// Memory reserved against fragmentation (paper §6.4: 0.5–1 GB).
+    pub reserve_bytes: u64,
+}
+
+impl Default for MimoseConfig {
+    fn default() -> Self {
+        MimoseConfig {
+            bucket_tolerance: 0.10,
+            collect_iters: 10,
+            cache_tolerance: 0.05,
+            reserve_bytes: GIB,
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub task: Task,
+    pub planner: PlannerKind,
+    pub budget_bytes: u64,
+    pub epochs: usize,
+    pub seed: u64,
+    pub mimose: MimoseConfig,
+    /// Cap iterations per epoch (0 = full epoch) — for fast benches.
+    pub max_iters: usize,
+}
+
+impl ExperimentConfig {
+    pub fn new(task: Task, planner: PlannerKind, budget_gb: f64) -> Self {
+        ExperimentConfig {
+            task,
+            planner,
+            budget_bytes: (budget_gb * GIB as f64) as u64,
+            epochs: 1,
+            seed: 42,
+            mimose: MimoseConfig::default(),
+            max_iters: 0,
+        }
+    }
+
+    pub fn budget_gb(&self) -> f64 {
+        self.budget_bytes as f64 / GIB as f64
+    }
+
+    /// Load from a TOML-subset file; missing keys fall back to defaults.
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let task = Task::parse(&doc.get_str("task", "tc-bert"))
+            .ok_or_else(|| "unknown task".to_string())?;
+        let planner = PlannerKind::parse(&doc.get_str("planner", "mimose"))
+            .ok_or_else(|| "unknown planner".to_string())?;
+        let mut cfg = ExperimentConfig::new(task, planner, doc.get_f64("budget_gb", 6.0));
+        cfg.epochs = doc.get_usize("epochs", 1);
+        cfg.seed = doc.get_usize("seed", 42) as u64;
+        cfg.max_iters = doc.get_usize("max_iters", 0);
+        cfg.mimose.bucket_tolerance = doc.get_f64("mimose.bucket_tolerance", 0.10);
+        cfg.mimose.collect_iters = doc.get_usize("mimose.collect_iters", 10);
+        cfg.mimose.cache_tolerance = doc.get_f64("mimose.cache_tolerance", 0.05);
+        cfg.mimose.reserve_bytes =
+            (doc.get_f64("mimose.reserve_gb", 1.0) * GIB as f64) as u64;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let doc = Doc::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_doc(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_tasks() {
+        assert_eq!(Task::TcBert.batch(), 32);
+        assert_eq!(Task::QaBert.batch(), 12);
+        assert_eq!(Task::McRoberta.model().name, "roberta-base");
+        assert_eq!(Task::McRoberta.seq_range(), (35, 141));
+    }
+
+    #[test]
+    fn param_counts_match_paper_scale() {
+        // Paper: RoBERTa 125M, BERT 110M, XLNet 110M.
+        let r = ModelSpec::roberta_base().param_count() as f64 / 1e6;
+        assert!((100.0..170.0).contains(&r), "roberta {r}M");
+        let b = ModelSpec::bert_base().param_count() as f64 / 1e6;
+        assert!((85.0..120.0).contains(&b), "bert {b}M");
+    }
+
+    #[test]
+    fn planner_parse_roundtrip() {
+        for k in PlannerKind::all() {
+            assert_eq!(PlannerKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PlannerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn config_from_toml() {
+        let doc = Doc::parse(
+            "task = \"qa-bert\"\nplanner = \"dtr\"\nbudget_gb = 4.5\n[mimose]\ncollect_iters = 20\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.task, Task::QaBert);
+        assert_eq!(c.planner, PlannerKind::Dtr);
+        assert!((c.budget_gb() - 4.5).abs() < 1e-9);
+        assert_eq!(c.mimose.collect_iters, 20);
+    }
+
+    #[test]
+    fn fixed_state_is_16_bytes_per_param() {
+        let m = ModelSpec::bert_tiny();
+        assert_eq!(m.fixed_state_bytes(), m.param_count() * 16);
+    }
+}

@@ -1,0 +1,281 @@
+//! TOML-subset parser for experiment config files (serde/toml unavailable
+//! offline). Supports: `[section]` / `[a.b]` tables, `key = value` with
+//! strings, integers, floats, booleans, and homogeneous arrays; `#` comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().map(|i| i as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: dotted-path -> value ("section.key").
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(v.trim(), lineno)?;
+            entries.insert(path, value);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str, default: &str) -> String {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Keys under a section prefix (for iterating e.g. all "[task.*]").
+    pub fn section_keys(&self, prefix: &str) -> Vec<String> {
+        let p = format!("{prefix}.");
+        self.entries.keys().filter(|k| k.starts_with(&p)).cloned().collect()
+    }
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError { line, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but safe: '#' inside quotes is rare in our configs; honour quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
+    if s.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, &format!("cannot parse value '{s}'")))
+}
+
+/// Split on commas not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+name = "tc-bert"
+
+[model]
+hidden = 768
+layers = 12
+dropout = 0.1
+buckets = [32, 64, 128]
+
+[planner]
+kind = "mimose"
+cache = true
+tolerance = 0.1
+"#;
+
+    #[test]
+    fn parses_typed_values() {
+        let d = Doc::parse(DOC).unwrap();
+        assert_eq!(d.get_str("name", ""), "tc-bert");
+        assert_eq!(d.get_usize("model.hidden", 0), 768);
+        assert!((d.get_f64("model.dropout", 0.0) - 0.1).abs() < 1e-12);
+        assert!(d.get_bool("planner.cache", false));
+        let arr = d.get("model.buckets").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_usize(), Some(64));
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let d = Doc::parse("").unwrap();
+        assert_eq!(d.get_usize("nope", 7), 7);
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let d = Doc::parse("a = \"x # y\" # trailing").unwrap();
+        assert_eq!(d.get_str("a", ""), "x # y");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        assert!(Doc::parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn section_keys_listing() {
+        let d = Doc::parse(DOC).unwrap();
+        let ks = d.section_keys("planner");
+        assert!(ks.contains(&"planner.kind".to_string()));
+        assert_eq!(ks.len(), 3);
+    }
+}

@@ -1,0 +1,187 @@
+//! Input pipeline: dataset seqlen dynamics + synthetic corpus.
+//!
+//! The paper's input dynamics (Fig 3) come from dataset diversity plus
+//! augmentation: per-sample token lengths vary; a mini-batch pads to its
+//! longest sample, so the *collated* seqlen is the max over the batch. We
+//! model the three NLP datasets with distribution-faithful samplers
+//! (ranges/shapes from Fig 3) and generate a synthetic corpus for the real
+//! PJRT training path.
+
+pub mod corpus;
+pub mod tokenizer;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use tokenizer::Tokenizer;
+
+use crate::config::Task;
+use crate::util::rng::Rng;
+
+/// Per-sample token-length distribution of a dataset.
+#[derive(Clone, Copy, Debug)]
+pub enum LengthDist {
+    /// Normal(mean, std), clamped to [lo, hi] — SWAG, SQuAD.
+    Normal { mean: f64, std: f64, lo: usize, hi: usize },
+    /// Bounded power-law (many short questions, few long) — GLUE-QQP.
+    PowerLaw { alpha: f64, lo: usize, hi: usize },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LengthDist::Normal { mean, std, lo, hi } => {
+                (rng.normal_in(mean, std).round() as i64).clamp(lo as i64, hi as i64) as usize
+            }
+            LengthDist::PowerLaw { alpha, lo, hi } => {
+                rng.power_law(lo as f64, hi as f64, alpha).round() as usize
+            }
+        }
+    }
+
+    /// Table 1 / Fig 3 dataset parameters.
+    pub fn for_task(task: Task) -> LengthDist {
+        match task {
+            // SWAG: short commonsense sentences, collated range 35-141
+            Task::McRoberta => LengthDist::Normal { mean: 55.0, std: 16.0, lo: 20, hi: 141 },
+            // SQuAD: long paragraphs, collated range 153-512
+            Task::QaXlnet | Task::QaBert => {
+                LengthDist::Normal { mean: 180.0, std: 60.0, lo: 120, hi: 512 }
+            }
+            // QQP: question pairs, power-law, collated range 30-332
+            Task::TcBert => LengthDist::PowerLaw { alpha: 2.2, lo: 25, hi: 332 },
+        }
+    }
+}
+
+/// Tokenise -> pad -> truncate -> collate: returns the mini-batch seqlen
+/// (max over per-sample lengths, truncated to the model's max).
+pub fn collate_seqlen(dist: &LengthDist, batch: usize, max_seq: usize, rng: &mut Rng) -> usize {
+    (0..batch)
+        .map(|_| dist.sample(rng))
+        .max()
+        .unwrap_or(1)
+        .min(max_seq)
+}
+
+/// An epoch's worth of collated input descriptors for a task.
+pub struct InputStream {
+    dist: LengthDist,
+    batch: usize,
+    max_seq: usize,
+    rng: Rng,
+}
+
+impl InputStream {
+    pub fn new(task: Task, seed: u64) -> Self {
+        InputStream {
+            dist: LengthDist::for_task(task),
+            batch: task.batch(),
+            max_seq: task.model().max_seq,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Next collated mini-batch seqlen.
+    pub fn next_seqlen(&mut self) -> usize {
+        collate_seqlen(&self.dist, self.batch, self.max_seq, &mut self.rng)
+    }
+}
+
+impl Iterator for InputStream {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        Some(self.next_seqlen())
+    }
+}
+
+/// Pad a true seqlen up to the nearest AOT bucket (the real engine's static
+/// shapes). Returns None if the input exceeds all buckets (truncate first).
+pub fn bucket_for(seqlen: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= seqlen).min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn collated_ranges_match_fig3() {
+        // Collated (batch-max) seqlens must land in the paper's ranges.
+        for task in Task::all() {
+            let mut s = InputStream::new(task, 7);
+            let (lo, hi) = task.seq_range();
+            let mut summary = Summary::new();
+            for _ in 0..2000 {
+                let x = s.next_seqlen();
+                summary.add(x as f64);
+                assert!(x <= task.model().max_seq);
+            }
+            // central mass within the paper's [lo, hi]
+            assert!(
+                summary.mean() >= lo as f64 && summary.mean() <= hi as f64,
+                "{}: mean {} outside [{lo},{hi}]",
+                task.name(),
+                summary.mean()
+            );
+            assert!(summary.max() as usize <= hi + hi / 5, "{}: max {}", task.name(), summary.max());
+        }
+    }
+
+    #[test]
+    fn qqp_is_right_skewed() {
+        // power law: mean > median
+        let mut s = InputStream::new(Task::TcBert, 3);
+        let mut v: Vec<f64> = (0..4000).map(|_| s.next_seqlen() as f64).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = v[v.len() / 2];
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean > median, "mean {mean} median {median}");
+    }
+
+    #[test]
+    fn repeated_sizes_occur() {
+        // §3.2: input sizes repeat — the premise of the plan cache.
+        let mut s = InputStream::new(Task::McRoberta, 11);
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..1000 {
+            *seen.entry(s.next_seqlen()).or_insert(0usize) += 1;
+        }
+        let repeats = seen.values().filter(|&&c| c > 1).count();
+        assert!(repeats > seen.len() / 2, "most sizes should repeat");
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let a: Vec<usize> = InputStream::new(Task::QaBert, 5).take(50).collect();
+        let b: Vec<usize> = InputStream::new(Task::QaBert, 5).take(50).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(17, &[16, 32, 64]), Some(32));
+        assert_eq!(bucket_for(16, &[16, 32, 64]), Some(16));
+        assert_eq!(bucket_for(65, &[16, 32, 64]), None);
+    }
+
+    #[test]
+    fn bigger_batch_shifts_collated_max_up() {
+        let dist = LengthDist::for_task(Task::TcBert);
+        let mut rng1 = Rng::new(1);
+        let mut rng2 = Rng::new(1);
+        let small: f64 = (0..500)
+            .map(|_| collate_seqlen(&dist, 4, 512, &mut rng1) as f64)
+            .sum::<f64>()
+            / 500.0;
+        let large: f64 = (0..500)
+            .map(|_| collate_seqlen(&dist, 32, 512, &mut rng2) as f64)
+            .sum::<f64>()
+            / 500.0;
+        assert!(large > small);
+    }
+}

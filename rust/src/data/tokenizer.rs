@@ -1,0 +1,119 @@
+//! Minimal deterministic word-level tokenizer with frequency-built vocab —
+//! the "tokenizing" stage of the paper's Fig 1 pipeline. Used by the data
+//! examples and tests to turn synthetic text into id sequences with the
+//! same tokenize -> truncate -> pad -> collate flow the paper describes.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: HashMap<String, u32>,
+    inverse: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build a vocabulary of at most `max_vocab` entries (including PAD/UNK)
+    /// from a corpus, keeping the most frequent words, ties lexicographic.
+    pub fn fit(corpus: &[&str], max_vocab: usize) -> Self {
+        assert!(max_vocab >= 2);
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for doc in corpus {
+            for w in doc.split_whitespace() {
+                *freq.entry(w).or_default() += 1;
+            }
+        }
+        let mut by_freq: Vec<(&str, u64)> = freq.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut vocab = HashMap::new();
+        let mut inverse = vec!["<pad>".to_string(), "<unk>".to_string()];
+        for (w, _) in by_freq.into_iter().take(max_vocab.saturating_sub(2)) {
+            vocab.insert(w.to_string(), inverse.len() as u32);
+            inverse.push(w.to_string());
+        }
+        Tokenizer { vocab, inverse }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.inverse.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .map(|w| self.vocab.get(w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.inverse.get(i as usize).map(String::as_str).unwrap_or("<unk>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// The paper's collation: truncate to `max_seq`, pad every sequence in
+    /// the batch to the batch maximum. Returns (ids row-major, seqlen).
+    pub fn collate(&self, texts: &[&str], max_seq: usize) -> (Vec<u32>, usize) {
+        let encoded: Vec<Vec<u32>> =
+            texts.iter().map(|t| {
+                let mut e = self.encode(t);
+                e.truncate(max_seq);
+                e
+            }).collect();
+        let seqlen = encoded.iter().map(Vec::len).max().unwrap_or(1).max(1);
+        let mut out = Vec::with_capacity(texts.len() * seqlen);
+        for row in &encoded {
+            out.extend_from_slice(row);
+            out.extend(std::iter::repeat(PAD).take(seqlen - row.len()));
+        }
+        (out, seqlen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::fit(&["the cat sat on the mat", "the dog sat"], 16)
+    }
+
+    #[test]
+    fn frequency_order_vocab() {
+        let t = tok();
+        // "the" (3x) then "sat" (2x) get the smallest non-special ids
+        assert_eq!(t.encode("the")[0], 2);
+        assert_eq!(t.encode("sat")[0], 3);
+        assert!(t.vocab_size() <= 16);
+    }
+
+    #[test]
+    fn unknown_words_map_to_unk() {
+        let t = tok();
+        assert_eq!(t.encode("zebra"), vec![UNK]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_known() {
+        let t = tok();
+        let ids = t.encode("the cat sat");
+        assert_eq!(t.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn collate_pads_to_batch_max_and_truncates() {
+        let t = tok();
+        let (ids, seqlen) = t.collate(&["the cat sat on the mat", "dog"], 4);
+        assert_eq!(seqlen, 4); // truncated to max_seq
+        assert_eq!(ids.len(), 8);
+        assert_eq!(&ids[4..], &[t.encode("dog")[0], PAD, PAD, PAD]);
+    }
+
+    #[test]
+    fn vocab_cap_respected() {
+        let t = Tokenizer::fit(&["a b c d e f g h"], 4);
+        assert_eq!(t.vocab_size(), 4); // pad, unk + 2 words
+    }
+}

@@ -1,0 +1,134 @@
+//! Training-state save/restore for the real engine: a small self-describing
+//! binary format (magic, version, named f32 sections with checksums) so
+//! long real runs can resume — and so planner state is reproducible.
+//!
+//! Format:
+//!   "MIMO" u32_version u32_nsections
+//!   per section: u16 name_len, name bytes, u64 elem count, fnv64 of data,
+//!                f32 data (LE)
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MIMO";
+const VERSION: u32 = 1;
+
+fn fnv64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Write named f32 sections.
+pub fn save(path: &Path, sections: &[(&str, &[f32])]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(sections.len() as u32).to_le_bytes())?;
+    for (name, data) in sections {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("section name too long");
+        }
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(data.len() as u64).to_le_bytes())?;
+        let bytes = f32s_as_bytes(data);
+        f.write_all(&fnv64(bytes).to_le_bytes())?;
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Read all sections back as (name, data).
+pub fn load(path: &Path) -> Result<Vec<(String, Vec<f32>)>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut hdr = [0u8; 4];
+    f.read_exact(&mut hdr)?;
+    if &hdr != MAGIC {
+        bail!("bad magic");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    f.read_exact(&mut u32b)?;
+    let n = u32::from_le_bytes(u32b) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut u16b = [0u8; 2];
+        f.read_exact(&mut u16b)?;
+        let mut name = vec![0u8; u16::from_le_bytes(u16b) as usize];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|_| anyhow!("bad section name"))?;
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let count = u64::from_le_bytes(u64b) as usize;
+        f.read_exact(&mut u64b)?;
+        let want_sum = u64::from_le_bytes(u64b);
+        let mut bytes = vec![0u8; count * 4];
+        f.read_exact(&mut bytes)?;
+        if fnv64(&bytes) != want_sum {
+            bail!("checksum mismatch in section '{name}'");
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mimose_ckpt_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("rt");
+        let a: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let b = vec![-1.0f32, f32::MAX, f32::MIN_POSITIVE];
+        save(&p, &[("params", &a), ("adam.m", &b)]).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "params");
+        assert_eq!(back[0].1, a);
+        assert_eq!(back[1].1, b);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("corrupt");
+        save(&p, &[("x", &[1.0f32, 2.0, 3.0])]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("checksum"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,12 @@
+//! Training engines: `SimEngine` (cost-model clock over the memory
+//! simulator; drives every paper sweep) and `RealEngine` (PJRT execution of
+//! the AOT artifacts with real block-level checkpointing).
+
+pub mod checkpoint_io;
+pub mod optimizer;
+pub mod real;
+pub mod sim;
+pub mod vision;
+
+pub use optimizer::{Adam, AdamConfig};
+pub use sim::{CostModel, SimEngine, SimError};

@@ -1,0 +1,90 @@
+//! Adam optimizer over host-resident f32 parameter buffers (the real
+//! engine's update step; the optimizer state is part of fixed_bytes in the
+//! memory model: params + grads + m + v = 16 B/param).
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        // BERT-finetune defaults (paper §6.6 uses 2e-5..5e-5).
+        AdamConfig { lr: 3e-4, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+pub struct Adam {
+    cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, cfg: AdamConfig) -> Self {
+        Adam { cfg, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
+    }
+
+    pub fn step_count(&self) -> i32 {
+        self.t
+    }
+
+    /// One update over the flat parameter/grad views.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        let lr = self.cfg.lr;
+        for i in 0..params.len() {
+            let g = grads[i] + self.cfg.weight_decay * params[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + self.cfg.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimises_quadratic() {
+        // f(x) = (x-3)^2: Adam should converge to 3.
+        let mut adam = Adam::new(1, AdamConfig { lr: 0.1, ..Default::default() });
+        let mut x = vec![0.0f32];
+        for _ in 0..500 {
+            let g = vec![2.0 * (x[0] - 3.0)];
+            adam.step(&mut x, &g);
+        }
+        assert!((x[0] - 3.0).abs() < 0.05, "x={}", x[0]);
+    }
+
+    #[test]
+    fn bias_correction_first_step() {
+        // First step with grad g moves by ~lr regardless of g's magnitude.
+        let mut adam = Adam::new(1, AdamConfig { lr: 0.01, ..Default::default() });
+        let mut x = vec![1.0f32];
+        adam.step(&mut x, &[1e-3]);
+        assert!((1.0 - x[0] - 0.01).abs() < 1e-3, "step={}", 1.0 - x[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut adam = Adam::new(2, AdamConfig::default());
+        let mut x = vec![0.0f32; 2];
+        adam.step(&mut x, &[0.0]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Gradient-boosted regression trees — the in-repo "XGBoost" stand-in for
+//! Table 3 (DESIGN.md §4). Squared-error boosting with shrinkage over CART
+//! stumps/trees; deliberately the same algorithmic family so its relative
+//! cost/accuracy trade-off (heavy train, heavy predict, mediocre accuracy on
+//! smooth curves with 10 samples) is preserved.
+
+use super::tree::TreeRegressor;
+use super::Regressor;
+
+#[derive(Clone, Debug)]
+pub struct GbtRegressor {
+    pub n_trees: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    base: f64,
+    trees: Vec<TreeRegressor>,
+}
+
+impl GbtRegressor {
+    pub fn new(n_trees: usize, learning_rate: f64, max_depth: usize) -> Self {
+        GbtRegressor { n_trees, learning_rate, max_depth, base: 0.0, trees: Vec::new() }
+    }
+
+    pub fn default_config() -> Self {
+        Self::new(100, 0.3, 3)
+    }
+}
+
+impl Regressor for GbtRegressor {
+    fn name(&self) -> String {
+        "XGBoost".into()
+    }
+
+    fn fit(&mut self, xs: &[f64], ys: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        self.base = ys.iter().sum::<f64>() / ys.len() as f64;
+        self.trees.clear();
+        let mut resid: Vec<f64> = ys.iter().map(|y| y - self.base).collect();
+        for _ in 0..self.n_trees {
+            let mut t = TreeRegressor::new(self.max_depth, 1);
+            t.fit(xs, &resid);
+            for (i, &x) in xs.iter().enumerate() {
+                resid[i] -= self.learning_rate * t.predict(x);
+            }
+            self.trees.push(t);
+            if resid.iter().map(|r| r * r).sum::<f64>() < 1e-18 {
+                break;
+            }
+        }
+    }
+
+    fn predict(&self, x: f64) -> f64 {
+        let mut acc = self.base;
+        for t in &self.trees {
+            acc += self.learning_rate * t.predict(x);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_training_points_closely() {
+        let xs: Vec<f64> = (1..=30).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 50.0 + x + 0.05 * x * x).collect();
+        let mut g = GbtRegressor::default_config();
+        g.fit(&xs, &ys);
+        for (&x, &y) in xs.iter().zip(&ys) {
+            let rel = (g.predict(x) - y).abs() / y;
+            assert!(rel < 0.02, "rel={rel}");
+        }
+    }
+
+    #[test]
+    fn interpolation_worse_than_poly_on_sparse_quadratic() {
+        use crate::estimator::poly::PolyRegressor;
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64 * 50.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 1e5 + 200.0 * x + 2.0 * x * x).collect();
+        let mut g = GbtRegressor::default_config();
+        let mut p = PolyRegressor::new(2);
+        g.fit(&xs, &ys);
+        p.fit(&xs, &ys);
+        let x = 275.0;
+        let want = 1e5 + 200.0 * x + 2.0 * x * x;
+        assert!((g.predict(x) - want).abs() > (p.predict(x) - want).abs());
+    }
+
+    #[test]
+    fn training_cost_scales_with_trees() {
+        // structural: more trees stored -> heavier predict (Table 3 latency)
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let ys = xs.clone();
+        let mut g = GbtRegressor::new(50, 0.3, 2);
+        g.fit(&xs, &ys);
+        assert!(g.trees.len() > 10);
+    }
+}

@@ -1,0 +1,129 @@
+//! Dense linear algebra for the regression models: Gaussian elimination with
+//! partial pivoting (normal-equation solves are tiny: order <= 4).
+
+/// Solve A x = b in place. A is n x n row-major. Returns None if singular.
+pub fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for r in col + 1..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in r + 1..n {
+            s -= a[r * n + c] * x[c];
+        }
+        x[r] = s / a[r * n + r];
+    }
+    Some(x)
+}
+
+/// Least squares via normal equations: minimise ||X w - y||^2.
+/// X is m x k row-major. Ridge `lambda` stabilises near-singular fits.
+pub fn lstsq(x: &[f64], y: &[f64], m: usize, k: usize, lambda: f64) -> Option<Vec<f64>> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(y.len(), m);
+    let mut xtx = vec![0.0; k * k];
+    let mut xty = vec![0.0; k];
+    for r in 0..m {
+        for i in 0..k {
+            let xi = x[r * k + i];
+            xty[i] += xi * y[r];
+            for j in i..k {
+                xtx[i * k + j] += xi * x[r * k + j];
+            }
+        }
+    }
+    for i in 0..k {
+        for j in 0..i {
+            xtx[i * k + j] = xtx[j * k + i];
+        }
+        xtx[i * k + i] += lambda;
+    }
+    solve(&mut xtx, &mut xty, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![3.0, 4.0];
+        assert_eq!(solve(&mut a, &mut b, 2).unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solves_with_pivoting() {
+        // first pivot is zero -> requires row swap
+        let mut a = vec![0.0, 1.0, 1.0, 0.0];
+        let mut b = vec![2.0, 5.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 5.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detects_singular() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn lstsq_recovers_exact_quadratic() {
+        // y = 2 + 3x + 0.5x^2 sampled at 10 points
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut design = Vec::new();
+        let mut y = Vec::new();
+        for &v in &xs {
+            design.extend_from_slice(&[1.0, v, v * v]);
+            y.push(2.0 + 3.0 * v + 0.5 * v * v);
+        }
+        let w = lstsq(&design, &y, 10, 3, 0.0).unwrap();
+        assert!((w[0] - 2.0).abs() < 1e-8);
+        assert!((w[1] - 3.0).abs() < 1e-8);
+        assert!((w[2] - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_noise() {
+        let mut design = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..50 {
+            let v = i as f64 / 5.0;
+            design.extend_from_slice(&[1.0, v]);
+            y.push(1.0 + 2.0 * v + if i % 2 == 0 { 0.01 } else { -0.01 });
+        }
+        let w = lstsq(&design, &y, 50, 2, 0.0).unwrap();
+        assert!((w[0] - 1.0).abs() < 0.02 && (w[1] - 2.0).abs() < 0.02);
+    }
+}

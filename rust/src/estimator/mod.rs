@@ -1,0 +1,251 @@
+//! The "lightning memory estimator" (paper §4.3) and the Table 3 regression
+//! zoo it was selected from.
+//!
+//! The production estimator fits one quadratic polynomial *per layer*:
+//! `mem_layer(input_size)`, where input size is the element count of the
+//! collated mini-batch tensor (batch x seqlen). Training data comes from the
+//! shuttling online collector during sheltered execution.
+
+pub mod gbt;
+pub mod linalg;
+pub mod poly;
+pub mod svr;
+pub mod tree;
+
+pub use gbt::GbtRegressor;
+pub use poly::PolyRegressor;
+pub use svr::SvrRegressor;
+pub use tree::TreeRegressor;
+
+use crate::util::timer::Timer;
+
+/// Common interface for all Table 3 candidates.
+pub trait Regressor {
+    fn name(&self) -> String;
+    fn fit(&mut self, xs: &[f64], ys: &[f64]);
+    fn predict(&self, x: f64) -> f64;
+}
+
+/// One collected observation: per-layer memory at a given input size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    /// Input size: elements in the collated mini-batch (batch * seqlen).
+    pub input_size: f64,
+    /// Observed activation bytes of one layer.
+    pub act_bytes: f64,
+    /// Observed forward time of that layer (ms).
+    pub fwd_ms: f64,
+}
+
+/// Per-layer memory + forward-time prediction model.
+///
+/// Both curves are quadratic in input size: memory because of the attention
+/// probs tensor; time because FLOPs carry the same S^2 term (§4.3).
+pub struct MemoryEstimator {
+    mem_models: Vec<PolyRegressor>,
+    time_models: Vec<PolyRegressor>,
+    samples: Vec<Vec<Sample>>,
+    trained: bool,
+    pub order: usize,
+}
+
+impl MemoryEstimator {
+    pub fn new(n_layers: usize) -> Self {
+        Self::with_order(n_layers, 2)
+    }
+
+    pub fn with_order(n_layers: usize, order: usize) -> Self {
+        MemoryEstimator {
+            mem_models: (0..n_layers).map(|_| PolyRegressor::new(order)).collect(),
+            time_models: (0..n_layers).map(|_| PolyRegressor::new(order)).collect(),
+            samples: vec![Vec::new(); n_layers],
+            trained: false,
+            order,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.mem_models.len()
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.trained
+    }
+
+    /// Record one collector observation for `layer`.
+    pub fn observe(&mut self, layer: usize, s: Sample) {
+        self.samples[layer].push(s);
+        self.trained = false;
+    }
+
+    pub fn sample_count(&self, layer: usize) -> usize {
+        self.samples[layer].len()
+    }
+
+    /// Distinct input sizes observed (the paper trains after ~10).
+    pub fn distinct_inputs(&self) -> usize {
+        let mut v: Vec<u64> = self
+            .samples
+            .iter()
+            .flat_map(|s| s.iter().map(|x| x.input_size as u64))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+
+    /// Fit all per-layer models. Returns total fit time in ms (Table 2/3/4).
+    pub fn train(&mut self) -> f64 {
+        let t = Timer::start();
+        for (i, samples) in self.samples.iter().enumerate() {
+            if samples.is_empty() {
+                continue;
+            }
+            let xs: Vec<f64> = samples.iter().map(|s| s.input_size).collect();
+            let mem: Vec<f64> = samples.iter().map(|s| s.act_bytes).collect();
+            let tm: Vec<f64> = samples.iter().map(|s| s.fwd_ms).collect();
+            self.mem_models[i].fit(&xs, &mem);
+            self.time_models[i].fit(&xs, &tm);
+        }
+        self.trained = true;
+        t.elapsed_ms()
+    }
+
+    /// Predicted activation bytes of `layer` at `input_size` elements.
+    pub fn predict_bytes(&self, layer: usize, input_size: f64) -> f64 {
+        debug_assert!(self.trained, "estimator not trained");
+        self.mem_models[layer].predict(input_size).max(0.0)
+    }
+
+    /// Predicted forward (= recompute) time of `layer`, ms.
+    pub fn predict_fwd_ms(&self, layer: usize, input_size: f64) -> f64 {
+        debug_assert!(self.trained, "estimator not trained");
+        self.time_models[layer].predict(input_size).max(0.0)
+    }
+
+    /// Predict the whole per-layer memory vector (the scheduler's est_mem).
+    pub fn predict_all_bytes(&self, input_size: f64) -> Vec<f64> {
+        (0..self.n_layers()).map(|l| self.predict_bytes(l, input_size)).collect()
+    }
+}
+
+/// Table 3/4 evaluation: fit on `train`, measure latency + mean relative
+/// error on `test`. Returns (train_ms, predict_us_per_call, mean_rel_err).
+pub fn evaluate_regressor<R: Regressor>(
+    r: &mut R,
+    train: &[(f64, f64)],
+    test: &[(f64, f64)],
+) -> (f64, f64, f64) {
+    let xs: Vec<f64> = train.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = train.iter().map(|p| p.1).collect();
+    let t = Timer::start();
+    r.fit(&xs, &ys);
+    let train_ms = t.elapsed_ms();
+
+    // latency: average over enough calls to resolve microseconds
+    let reps = 2000usize;
+    let t = Timer::start();
+    let mut sink = 0.0;
+    for i in 0..reps {
+        sink += r.predict(test[i % test.len()].0);
+    }
+    let predict_us = t.elapsed_us() / reps as f64;
+    std::hint::black_box(sink);
+
+    let mut err = 0.0;
+    for &(x, y) in test {
+        err += (r.predict(x) - y).abs() / y.abs().max(1e-12);
+    }
+    (train_ms, predict_us, err / test.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_layer_curve(layer: usize, x: f64) -> f64 {
+        // bytes ~ a + b x + c x^2 with per-layer coefficients
+        1e6 * (layer + 1) as f64 + 3e3 * x + 0.8 * (layer + 1) as f64 * x * x
+    }
+
+    fn build_estimator() -> MemoryEstimator {
+        let mut e = MemoryEstimator::new(3);
+        for layer in 0..3 {
+            for i in 1..=10 {
+                let x = (i * 40) as f64;
+                e.observe(
+                    layer,
+                    Sample { input_size: x, act_bytes: synth_layer_curve(layer, x), fwd_ms: 0.1 * x },
+                );
+            }
+        }
+        e
+    }
+
+    #[test]
+    fn ten_samples_give_sub_percent_error() {
+        // The paper's Table 4: thousandth-level error with 10 samples.
+        let mut e = build_estimator();
+        let train_ms = e.train();
+        assert!(train_ms < 50.0, "train took {train_ms} ms");
+        for layer in 0..3 {
+            for &x in &[120.0, 260.0, 390.0] {
+                let want = synth_layer_curve(layer, x);
+                let rel = (e.predict_bytes(layer, x) - want).abs() / want;
+                assert!(rel < 1e-3, "layer {layer} x {x}: rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_all_returns_layer_vector() {
+        let mut e = build_estimator();
+        e.train();
+        let v = e.predict_all_bytes(200.0);
+        assert_eq!(v.len(), 3);
+        assert!(v[0] < v[1] && v[1] < v[2]);
+    }
+
+    #[test]
+    fn observe_resets_trained_flag() {
+        let mut e = build_estimator();
+        e.train();
+        assert!(e.is_trained());
+        e.observe(0, Sample { input_size: 1.0, act_bytes: 1.0, fwd_ms: 1.0 });
+        assert!(!e.is_trained());
+    }
+
+    #[test]
+    fn distinct_inputs_counts_unique_sizes() {
+        let e = build_estimator();
+        assert_eq!(e.distinct_inputs(), 10);
+    }
+
+    #[test]
+    fn evaluate_ranks_quadratic_over_tree_on_smooth_curve() {
+        let data: Vec<(f64, f64)> =
+            (1..=10).map(|i| ((i * 40) as f64, synth_layer_curve(1, (i * 40) as f64))).collect();
+        let test: Vec<(f64, f64)> =
+            (1..=9).map(|i| ((i * 40 + 20) as f64, synth_layer_curve(1, (i * 40 + 20) as f64))).collect();
+        let (_, poly_us, poly_err) =
+            evaluate_regressor(&mut PolyRegressor::new(2), &data, &test);
+        let (_, _, tree_err) =
+            evaluate_regressor(&mut TreeRegressor::new(6, 1), &data, &test);
+        let (_, gbt_us, gbt_err) =
+            evaluate_regressor(&mut GbtRegressor::default_config(), &data, &test);
+        assert!(poly_err < tree_err, "poly {poly_err} tree {tree_err}");
+        assert!(poly_err < gbt_err, "poly {poly_err} gbt {gbt_err}");
+        assert!(poly_us < gbt_us, "poly {poly_us}us gbt {gbt_us}us");
+    }
+
+    #[test]
+    fn predicted_bytes_never_negative() {
+        let mut e = MemoryEstimator::new(1);
+        for i in 1..=5 {
+            e.observe(0, Sample { input_size: i as f64, act_bytes: 10.0, fwd_ms: 1.0 });
+        }
+        e.train();
+        assert!(e.predict_bytes(0, 0.0) >= 0.0);
+        assert!(e.predict_bytes(0, 1e9) >= 0.0);
+    }
+}

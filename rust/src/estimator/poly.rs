@@ -1,0 +1,123 @@
+//! Polynomial regression (paper §4.3/§6.5): the "lightning memory estimator".
+//! Order n=2 (quadratic) is the paper's pick — activation bytes are at most
+//! quadratic in the input size (attention probs), so 10 samples suffice for
+//! thousandth-level error (Tables 3 & 4).
+
+use super::linalg::lstsq;
+use super::Regressor;
+
+#[derive(Clone, Debug)]
+pub struct PolyRegressor {
+    pub order: usize,
+    /// Coefficients low->high; empty until trained.
+    pub coef: Vec<f64>,
+    /// Feature scaling for conditioning (inputs are ~1e2..1e5 elements).
+    scale: f64,
+}
+
+impl PolyRegressor {
+    pub fn new(order: usize) -> Self {
+        assert!(order >= 1 && order <= 8);
+        PolyRegressor { order, coef: Vec::new(), scale: 1.0 }
+    }
+}
+
+impl Regressor for PolyRegressor {
+    fn name(&self) -> String {
+        format!("Polynomial (n={})", self.order)
+    }
+
+    fn fit(&mut self, xs: &[f64], ys: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        self.scale = xs.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1.0);
+        let k = self.order + 1;
+        let mut design = Vec::with_capacity(xs.len() * k);
+        for &x in xs {
+            let mut p = 1.0;
+            let xn = x / self.scale;
+            for _ in 0..k {
+                design.push(p);
+                p *= xn;
+            }
+        }
+        self.coef = lstsq(&design, ys, xs.len(), k, 1e-9)
+            .unwrap_or_else(|| vec![ys.iter().sum::<f64>() / ys.len() as f64]);
+    }
+
+    fn predict(&self, x: f64) -> f64 {
+        let xn = x / self.scale;
+        let mut acc = 0.0;
+        let mut p = 1.0;
+        for &c in &self.coef {
+            acc += c * p;
+            p *= xn;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn quadratic_recovers_quadratic_exactly() {
+        let mut r = PolyRegressor::new(2);
+        let xs: Vec<f64> = (1..=10).map(|i| (i * 50) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 1e6 + 2e3 * x + 3.5 * x * x).collect();
+        r.fit(&xs, &ys);
+        for &x in &[75.0, 333.0, 512.0] {
+            let want = 1e6 + 2e3 * x + 3.5 * x * x;
+            let rel = (r.predict(x) - want).abs() / want;
+            assert!(rel < 1e-6, "rel={rel}");
+        }
+    }
+
+    #[test]
+    fn linear_underfits_quadratic() {
+        let xs: Vec<f64> = (1..=10).map(|i| (i * 50) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 1e6 + 2e3 * x + 3.5 * x * x).collect();
+        let mut lin = PolyRegressor::new(1);
+        let mut quad = PolyRegressor::new(2);
+        lin.fit(&xs, &ys);
+        quad.fit(&xs, &ys);
+        let x = 275.0;
+        let want = 1e6 + 2e3 * x + 3.5 * x * x;
+        assert!((lin.predict(x) - want).abs() > (quad.predict(x) - want).abs());
+    }
+
+    #[test]
+    fn single_sample_degenerates_to_constant() {
+        let mut r = PolyRegressor::new(2);
+        r.fit(&[100.0], &[5.0]);
+        assert!((r.predict(100.0) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_fit_interpolates_training_points() {
+        // For >= order+1 distinct samples of an exact polynomial, training
+        // points are reproduced to high precision.
+        forall(
+            3,
+            30,
+            |rng| {
+                let n = rng.range_u(4, 12);
+                (0..n).map(|i| (i + 1) as f64 * rng.range_f(10.0, 50.0)).collect::<Vec<f64>>()
+            },
+            |xs| {
+                let ys: Vec<f64> = xs.iter().map(|&x| 7.0 + 0.3 * x + 0.02 * x * x).collect();
+                let mut r = PolyRegressor::new(2);
+                r.fit(xs, &ys);
+                for (&x, &y) in xs.iter().zip(&ys) {
+                    let rel = (r.predict(x) - y).abs() / y.abs().max(1e-9);
+                    if rel > 1e-5 {
+                        return Err(format!("rel {rel} at x={x}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

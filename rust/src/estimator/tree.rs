@@ -1,0 +1,128 @@
+//! CART decision-tree regressor (variance-reduction splits). Table 3
+//! candidate; trees cannot extrapolate beyond seen inputs, which is exactly
+//! why the paper rejects them for memory prediction.
+
+use super::Regressor;
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf(f64),
+    Split { thr: f64, left: Box<Node>, right: Box<Node> },
+}
+
+#[derive(Clone, Debug)]
+pub struct TreeRegressor {
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    root: Option<Node>,
+}
+
+impl TreeRegressor {
+    pub fn new(max_depth: usize, min_leaf: usize) -> Self {
+        TreeRegressor { max_depth, min_leaf: min_leaf.max(1), root: None }
+    }
+
+    fn build(&self, pts: &mut [(f64, f64)], depth: usize) -> Node {
+        let mean = pts.iter().map(|p| p.1).sum::<f64>() / pts.len() as f64;
+        if depth >= self.max_depth || pts.len() < 2 * self.min_leaf {
+            return Node::Leaf(mean);
+        }
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // best split by SSE reduction over sorted prefix sums
+        let n = pts.len();
+        let mut best: Option<(usize, f64)> = None; // (idx, sse)
+        let total_sum: f64 = pts.iter().map(|p| p.1).sum();
+        let total_sq: f64 = pts.iter().map(|p| p.1 * p.1).sum();
+        let mut lsum = 0.0;
+        let mut lsq = 0.0;
+        for i in 1..n {
+            lsum += pts[i - 1].1;
+            lsq += pts[i - 1].1 * pts[i - 1].1;
+            if i < self.min_leaf || n - i < self.min_leaf || pts[i].0 == pts[i - 1].0 {
+                continue;
+            }
+            let rsum = total_sum - lsum;
+            let rsq = total_sq - lsq;
+            let sse = (lsq - lsum * lsum / i as f64) + (rsq - rsum * rsum / (n - i) as f64);
+            if best.map(|(_, b)| sse < b).unwrap_or(true) {
+                best = Some((i, sse));
+            }
+        }
+        match best {
+            None => Node::Leaf(mean),
+            Some((i, _)) => {
+                let thr = (pts[i - 1].0 + pts[i].0) / 2.0;
+                let (l, r) = pts.split_at_mut(i);
+                Node::Split {
+                    thr,
+                    left: Box::new(self.build(l, depth + 1)),
+                    right: Box::new(self.build(r, depth + 1)),
+                }
+            }
+        }
+    }
+}
+
+impl Regressor for TreeRegressor {
+    fn name(&self) -> String {
+        "DecisionTree".into()
+    }
+
+    fn fit(&mut self, xs: &[f64], ys: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mut pts: Vec<(f64, f64)> = xs.iter().copied().zip(ys.iter().copied()).collect();
+        self.root = Some(self.build(&mut pts, 0));
+    }
+
+    fn predict(&self, x: f64) -> f64 {
+        let mut node = self.root.as_ref().expect("not fitted");
+        loop {
+            match node {
+                Node::Leaf(v) => return *v,
+                Node::Split { thr, left, right } => {
+                    node = if x < *thr { left } else { right };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| if x < 10.0 { 1.0 } else { 5.0 }).collect();
+        let mut t = TreeRegressor::new(4, 1);
+        t.fit(&xs, &ys);
+        assert!((t.predict(3.0) - 1.0).abs() < 1e-9);
+        assert!((t.predict(15.0) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cannot_extrapolate() {
+        // key failure mode vs polynomial: beyond the training range the
+        // prediction saturates at the boundary leaf
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| x * x).collect();
+        let mut t = TreeRegressor::new(6, 1);
+        t.fit(&xs, &ys);
+        assert_eq!(t.predict(200.0), t.predict(1000.0));
+        assert!((t.predict(200.0) - 200.0 * 200.0).abs() / (200.0 * 200.0) > 0.5);
+    }
+
+    #[test]
+    fn min_leaf_limits_depth() {
+        let xs: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let ys = xs.clone();
+        let mut t = TreeRegressor::new(10, 4);
+        t.fit(&xs, &ys);
+        // with min_leaf 4 on 8 points, only one split is possible
+        let preds: std::collections::BTreeSet<i64> =
+            xs.iter().map(|&x| (t.predict(x) * 1000.0) as i64).collect();
+        assert!(preds.len() <= 2);
+    }
+}

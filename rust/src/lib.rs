@@ -1,0 +1,24 @@
+//! # Mimose — input-aware checkpointing planner for memory-budgeted training
+//!
+//! Full-system reproduction of *"Mimose: An Input-Aware Checkpointing Planner
+//! for Efficient Training on GPU"* (Liao, Li et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack: Python authors and AOT-lowers the model (L2)
+//! and kernels (L1) to HLO text at build time; this crate (L3) is the entire
+//! training runtime — planners, memory simulator, estimators, scheduler,
+//! data pipeline, PJRT execution — with Python never on the hot path.
+//!
+//! See DESIGN.md for the architecture and the paper-experiment index, and
+//! `examples/` for runnable entry points.
+
+pub mod collector;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod estimator;
+pub mod planners;
+pub mod runtime;
+pub mod scheduler;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod util;

@@ -1,0 +1,282 @@
+//! `mimose` — leader entrypoint / CLI launcher.
+//!
+//! Subcommands:
+//!   sim      run one simulated experiment (task x planner x budget)
+//!   sweep    planner comparison across budgets for a task
+//!   plan     inspect the plan Mimose would generate for a given input
+//!   info     print model/task/artifact inventory
+//!
+//! Examples:
+//!   mimose sim --task tc-bert --planner mimose --budget-gb 6 --iters 1000
+//!   mimose sim --config experiment.toml
+//!   mimose sweep --task qa-bert --lo 4 --hi 7 --points 4
+//!   mimose plan --task tc-bert --budget-gb 5 --seqlen 300
+
+use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
+use mimose::engine::sim::SimEngine;
+use mimose::metrics::RunReport;
+use mimose::model::transformer_profile;
+use mimose::planners::{InputDesc, IterationMode, MimosePlanner, Planner};
+use mimose::util::cli::Cli;
+use mimose::util::{fmt_bytes, GIB};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if args.is_empty() || args[0].starts_with('-') {
+        "help".to_string()
+    } else {
+        args.remove(0)
+    };
+    match cmd.as_str() {
+        "sim" => cmd_sim(&args),
+        "sweep" => cmd_sweep(&args),
+        "plan" => cmd_plan(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "mimose — input-aware checkpointing planner (paper reproduction)\n\n\
+                 subcommands:\n  sim     run one simulated experiment\n  \
+                 sweep   compare planners across budgets\n  \
+                 plan    inspect a Mimose plan for an input size\n  \
+                 info    model/task/artifact inventory\n\n\
+                 `mimose <cmd> --help` for options; real training lives in\n\
+                 `cargo run --release --example train_e2e`."
+            );
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn parse_or_exit(cli: Cli, args: &[String]) -> Cli {
+    match cli.parse_from(args) {
+        Ok(c) => c,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn report_summary(r: &RunReport) {
+    println!("  iterations        : {}", r.iters.len());
+    println!("  epoch time (sim)  : {:.2} s", r.total_ms() / 1e3);
+    println!("  mean iteration    : {:.1} ms", r.mean_iter_ms());
+    println!("  recompute share   : {:.2}%", r.recompute_share() * 100.0);
+    println!("  planning share    : {:.3}%", r.planning_share() * 100.0);
+    println!("  collector total   : {:.1} ms", r.collector_ms());
+    println!("  cache hit rate    : {:.1}%", r.cache_hit_rate() * 100.0);
+    println!("  peak memory       : {}", fmt_bytes(r.peak_bytes()));
+    println!("  max fragmentation : {}", fmt_bytes(r.max_frag_bytes()));
+    println!("  OOM failures      : {}", r.oom_failures());
+}
+
+fn cmd_sim(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("mimose sim", "run one simulated experiment")
+            .opt("config", "", "TOML config path (overrides other flags)")
+            .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert")
+            .opt("planner", "mimose", "baseline | sublinear | dtr | mimose")
+            .opt("budget-gb", "6.0", "memory budget (GiB)")
+            .opt("iters", "1000", "iterations (0 = full epoch)")
+            .opt("seed", "42", "rng seed")
+            .opt("collect-iters", "10", "Mimose sheltered iterations")
+            .opt("reserve-gb", "1.0", "Mimose fragmentation reserve (GiB)")
+            .opt("tsv", "", "append a TSV row to this file"),
+        args,
+    );
+    let cfg = if !cli.get("config").is_empty() {
+        ExperimentConfig::from_file(&cli.get("config")).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+    } else {
+        let task = Task::parse(&cli.get("task")).unwrap_or_else(|| {
+            eprintln!("unknown task");
+            std::process::exit(2);
+        });
+        let planner = PlannerKind::parse(&cli.get("planner")).unwrap_or_else(|| {
+            eprintln!("unknown planner");
+            std::process::exit(2);
+        });
+        let mut c = ExperimentConfig::new(task, planner, cli.get_f64("budget-gb"));
+        c.max_iters = cli.get_usize("iters");
+        c.seed = cli.get_u64("seed");
+        c.mimose = MimoseConfig {
+            collect_iters: cli.get_usize("collect-iters"),
+            reserve_bytes: (cli.get_f64("reserve-gb") * GIB as f64) as u64,
+            ..Default::default()
+        };
+        c
+    };
+    println!(
+        "sim: {} / {} @ {:.1} GB (seed {})",
+        cfg.task.name(),
+        cfg.planner.name(),
+        cfg.budget_gb(),
+        cfg.seed
+    );
+    match SimEngine::new(cfg) {
+        Ok(mut e) => {
+            let r = e.run_epoch();
+            report_summary(&r);
+            let tsv = cli.get("tsv");
+            if !tsv.is_empty() {
+                let new = !std::path::Path::new(&tsv).exists();
+                let mut out = String::new();
+                if new {
+                    out.push_str(RunReport::tsv_header());
+                    out.push('\n');
+                }
+                out.push_str(&r.tsv_row());
+                out.push('\n');
+                use std::io::Write;
+                let mut f = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&tsv)
+                    .expect("open tsv");
+                f.write_all(out.as_bytes()).expect("write tsv");
+                println!("  appended -> {tsv}");
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot run: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_sweep(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("mimose sweep", "planner comparison across budgets")
+            .opt("task", "tc-bert", "task name")
+            .opt("lo", "4.0", "lowest budget (GiB)")
+            .opt("hi", "8.0", "highest budget (GiB)")
+            .opt("points", "5", "budget points")
+            .opt("iters", "500", "iterations per run"),
+        args,
+    );
+    let task = Task::parse(&cli.get("task")).expect("unknown task");
+    let iters = cli.get_usize("iters");
+    let mut bcfg = ExperimentConfig::new(task, PlannerKind::Baseline, 64.0);
+    bcfg.max_iters = iters;
+    let base = SimEngine::new(bcfg).unwrap().run_epoch().total_ms();
+    println!("{} — epoch time normalised to Baseline\n", task.name());
+    println!("budget     sublinear      dtr   mimose");
+    let (lo, hi, points) = (cli.get_f64("lo"), cli.get_f64("hi"), cli.get_usize("points").max(2));
+    for p in 0..points {
+        let budget = lo + (hi - lo) * p as f64 / (points - 1) as f64;
+        print!("{budget:5.1} GB ");
+        for kind in [PlannerKind::Sublinear, PlannerKind::Dtr, PlannerKind::Mimose] {
+            let mut cfg = ExperimentConfig::new(task, kind, budget);
+            cfg.max_iters = iters;
+            match SimEngine::new(cfg) {
+                Ok(mut e) => {
+                    let r = e.run_epoch();
+                    if r.oom_failures() > 0 {
+                        print!("      OOM");
+                    } else {
+                        print!("   {:6.3}", r.total_ms() / base);
+                    }
+                }
+                Err(_) => print!("   no-fit"),
+            }
+        }
+        println!();
+    }
+}
+
+fn cmd_plan(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("mimose plan", "inspect the plan for one input size")
+            .opt("task", "tc-bert", "task name")
+            .opt("budget-gb", "5.0", "memory budget (GiB)")
+            .opt("seqlen", "300", "collated sequence length")
+            .opt("seed", "1", "collector sampling seed"),
+        args,
+    );
+    let task = Task::parse(&cli.get("task")).expect("unknown task");
+    let budget = (cli.get_f64("budget-gb") * GIB as f64) as u64;
+    let model = task.model();
+    let mut planner = MimosePlanner::new(budget, model.layers + 2, MimoseConfig::default());
+
+    // sheltered execution over the task's own distribution
+    let mut stream = mimose::data::InputStream::new(task, cli.get_u64("seed"));
+    while !planner.collector().is_frozen() {
+        let seq = stream.next_seqlen();
+        let profile = transformer_profile(&model, task.batch(), seq, 1.0);
+        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        if let IterationMode::Sheltered(_) = planner.begin_iteration(&input, &profile).mode {
+            let obs: Vec<mimose::collector::Observation> = profile
+                .layers
+                .iter()
+                .map(|l| mimose::collector::Observation {
+                    layer: l.id,
+                    input_size: input.size() as f64,
+                    act_bytes: l.act_bytes,
+                    fwd_ms: l.fwd_flops as f64 / 1e9,
+                    self_checkpointed: false,
+                    relative_checkpointed: false,
+                })
+                .collect();
+            planner.end_iteration(&input, &obs, 1.0);
+        }
+    }
+
+    let seq = cli.get_usize("seqlen");
+    let profile = transformer_profile(&model, task.batch(), seq, 1.0);
+    let input = InputDesc { batch: task.batch(), seqlen: seq };
+    let d = planner.begin_iteration(&input, &profile);
+    println!(
+        "{} @ {:.1} GB, seqlen {seq} (input size {}):",
+        task.name(),
+        budget as f64 / GIB as f64,
+        input.size()
+    );
+    println!("  planning time : {:.3} ms (cache {})", d.planning_ms, if d.cache_hit { "hit" } else { "miss" });
+    if let IterationMode::Planned(plan) = d.mode {
+        println!("  checkpointed  : {} layers {:?}", plan.len(), plan.ids());
+        println!("  kept activations: {}", fmt_bytes(profile.planned_act_bytes(&plan.ids())));
+        println!("  no-plan need    : {}", fmt_bytes(profile.total_act_bytes()));
+        println!("  est. peak       : {}", fmt_bytes(profile.peak_bytes(&plan.ids())));
+        println!("  recompute extra : {:.1}% of fwd FLOPs",
+                 100.0 * profile.recompute_flops(&plan.ids()) as f64 / profile.fwd_flops() as f64);
+    }
+}
+
+fn cmd_info(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("mimose info", "model/task/artifact inventory")
+            .opt("artifacts", "artifacts", "artifacts directory"),
+        args,
+    );
+    println!("tasks (paper Table 1):");
+    for t in Task::all() {
+        let m = t.model();
+        println!(
+            "  {:<12} model {:<14} batch {:<3} seq {:?} ~{:.0}M params, fixed {}",
+            t.name(),
+            m.name,
+            t.batch(),
+            t.seq_range(),
+            m.param_count() as f64 / 1e6,
+            fmt_bytes(m.fixed_state_bytes()),
+        );
+    }
+    let dir = std::path::Path::new(&cli.get("artifacts")).to_path_buf();
+    match mimose::runtime::load_manifest(&dir) {
+        Ok(m) => {
+            println!("\nAOT artifacts ({}):", dir.display());
+            for (name, cfg) in &m {
+                println!(
+                    "  {:<10} {} artifacts, buckets {:?}, {:.1}M params",
+                    name,
+                    cfg.artifacts.len(),
+                    cfg.seq_buckets,
+                    cfg.param_count as f64 / 1e6
+                );
+            }
+        }
+        Err(e) => println!("\n(no artifacts: {e})"),
+    }
+}

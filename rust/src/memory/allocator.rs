@@ -1,0 +1,388 @@
+//! GPU memory simulator: a PyTorch-style caching allocator.
+//!
+//! This is the paper-critical substitution (DESIGN.md §4): the planner's
+//! observable world on a real V100 is (allocated bytes, reserved bytes,
+//! fragmentation, OOM events), all produced by the CUDA caching allocator.
+//! We reproduce that allocator's policy: 512-byte size rounding, segment
+//! reuse with best-fit + splitting, small/large pools, and cache flush as a
+//! last resort before OOM. DTR's "actually used 6.7-8 GB under a 4.2-5.5 GB
+//! budget" behaviour (Fig 5) emerges from exactly this mechanism.
+
+use std::collections::BTreeMap;
+
+pub const ROUND: u64 = 512;
+/// Allocations below this come from the small pool (2 MiB segments).
+pub const SMALL_LIMIT: u64 = 1 << 20;
+pub const SMALL_SEGMENT: u64 = 2 << 20;
+
+fn round_up(v: u64, to: u64) -> u64 {
+    v.div_ceil(to) * to
+}
+
+/// Size-class rounding for large allocations (jemalloc-style: 16 classes
+/// per power of two, <= 6.25% internal waste). Dynamic input sizes produce
+/// slightly-different tensor sizes every iteration; classing them together
+/// lets the cache reuse blocks instead of fragmenting — the same role as
+/// PyTorch's `roundup_power2_divisions` allocator option.
+pub fn size_class(v: u64) -> u64 {
+    if v <= SMALL_LIMIT {
+        return round_up(v.max(1), ROUND);
+    }
+    let pow = 63 - v.leading_zeros() as u64; // floor(log2(v))
+    let step = (1u64 << pow) / 16;
+    round_up(v, step.max(ROUND))
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Block {
+    seg: usize,
+    off: u64,
+    len: u64,
+}
+
+/// Allocation handle returned to callers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AllocId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OomError {
+    pub requested: u64,
+    pub reserved: u64,
+    pub allocated: u64,
+    pub budget: u64,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AllocStats {
+    pub allocated: u64,
+    pub reserved: u64,
+    pub peak_allocated: u64,
+    pub peak_reserved: u64,
+    pub n_allocs: u64,
+    pub n_segment_allocs: u64,
+    pub n_cache_flushes: u64,
+}
+
+impl AllocStats {
+    /// Fragmentation = memory reserved from the "device" but not backing a
+    /// live tensor (the paper's Fig 5 "actually used" minus allocated).
+    pub fn fragmentation(&self) -> u64 {
+        self.reserved - self.allocated
+    }
+}
+
+struct Segment {
+    size: u64,
+    small: bool,
+    /// free blocks by offset (coalescing needs neighbours)
+    free: BTreeMap<u64, u64>, // off -> len
+    live: usize,
+}
+
+/// Budget-bounded caching allocator.
+pub struct CachingAllocator {
+    budget: u64,
+    segments: Vec<Segment>,
+    allocs: BTreeMap<AllocId, Block>,
+    next_id: u64,
+    stats: AllocStats,
+}
+
+impl CachingAllocator {
+    pub fn new(budget: u64) -> Self {
+        CachingAllocator {
+            budget,
+            segments: Vec::new(),
+            allocs: BTreeMap::new(),
+            next_id: 0,
+            stats: AllocStats::default(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn stats(&self) -> AllocStats {
+        self.stats
+    }
+
+    /// Reset the allocated peak to the current level (per-iteration peaks).
+    pub fn reset_peak(&mut self) {
+        self.stats.peak_allocated = self.stats.allocated;
+        self.stats.peak_reserved = self.stats.reserved;
+    }
+
+    pub fn size_of(&self, id: AllocId) -> Option<u64> {
+        self.allocs.get(&id).map(|b| b.len)
+    }
+
+    fn bump_peaks(&mut self) {
+        self.stats.peak_allocated = self.stats.peak_allocated.max(self.stats.allocated);
+        self.stats.peak_reserved = self.stats.peak_reserved.max(self.stats.reserved);
+    }
+
+    /// Find best-fit free block in compatible segments.
+    fn best_fit(&self, size: u64, small: bool) -> Option<(usize, u64, u64)> {
+        let mut best: Option<(usize, u64, u64)> = None;
+        for (si, seg) in self.segments.iter().enumerate() {
+            if seg.small != small {
+                continue;
+            }
+            for (&off, &len) in &seg.free {
+                if len >= size && best.map(|(_, _, bl)| len < bl).unwrap_or(true) {
+                    best = Some((si, off, len));
+                }
+            }
+        }
+        best
+    }
+
+    fn carve(&mut self, si: usize, off: u64, len: u64, size: u64) -> Block {
+        let seg = &mut self.segments[si];
+        seg.free.remove(&off);
+        if len > size {
+            seg.free.insert(off + size, len - size);
+        }
+        seg.live += 1;
+        Block { seg: si, off, len: size }
+    }
+
+    /// Release cached (fully-free) segments back to the device.
+    pub fn empty_cache(&mut self) -> u64 {
+        let mut released = 0;
+        for seg in &mut self.segments {
+            if seg.live == 0 && seg.size > 0 {
+                released += seg.size;
+                self.stats.reserved -= seg.size;
+                seg.size = 0;
+                seg.free.clear();
+            }
+        }
+        if released > 0 {
+            self.stats.n_cache_flushes += 1;
+        }
+        released
+    }
+
+    pub fn alloc(&mut self, size: u64) -> Result<AllocId, OomError> {
+        let small = size < SMALL_LIMIT;
+        let size = size_class(size.max(1));
+        self.stats.n_allocs += 1;
+
+        // 1) reuse a cached block
+        if let Some((si, off, len)) = self.best_fit(size, small) {
+            let b = self.carve(si, off, len, size);
+            return Ok(self.commit(b));
+        }
+
+        // 2) reserve a new segment
+        let seg_size = if small { SMALL_SEGMENT } else { round_up(size, 2 << 20) };
+        if self.stats.reserved + seg_size > self.budget {
+            // 3) flush cache and retry both paths
+            self.empty_cache();
+            if let Some((si, off, len)) = self.best_fit(size, small) {
+                let b = self.carve(si, off, len, size);
+                return Ok(self.commit(b));
+            }
+            if self.stats.reserved + seg_size > self.budget {
+                return Err(OomError {
+                    requested: size,
+                    reserved: self.stats.reserved,
+                    allocated: self.stats.allocated,
+                    budget: self.budget,
+                });
+            }
+        }
+        self.stats.reserved += seg_size;
+        self.stats.n_segment_allocs += 1;
+        let mut free = BTreeMap::new();
+        if seg_size > size {
+            free.insert(size, seg_size - size);
+        }
+        self.segments.push(Segment { size: seg_size, small, free, live: 1 });
+        let b = Block { seg: self.segments.len() - 1, off: 0, len: size };
+        Ok(self.commit(b))
+    }
+
+    fn commit(&mut self, b: Block) -> AllocId {
+        self.stats.allocated += b.len;
+        self.bump_peaks();
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.allocs.insert(id, b);
+        id
+    }
+
+    pub fn free(&mut self, id: AllocId) {
+        let b = self.allocs.remove(&id).expect("double free");
+        self.stats.allocated -= b.len;
+        let seg = &mut self.segments[b.seg];
+        seg.live -= 1;
+        // coalesce with neighbours
+        let mut off = b.off;
+        let mut len = b.len;
+        if let Some((&poff, &plen)) = seg.free.range(..off).next_back() {
+            if poff + plen == off {
+                seg.free.remove(&poff);
+                off = poff;
+                len += plen;
+            }
+        }
+        if let Some(&nlen) = seg.free.get(&(off + len)) {
+            seg.free.remove(&(off + len));
+            len += nlen;
+        }
+        seg.free.insert(off, len);
+    }
+
+    /// Live allocation ids, largest first (DTR eviction iterates these).
+    pub fn live_ids(&self) -> Vec<AllocId> {
+        let mut v: Vec<(AllocId, u64)> = self.allocs.iter().map(|(i, b)| (*i, b.len)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.into_iter().map(|(i, _)| i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+    use crate::util::GIB;
+
+    #[test]
+    fn rounds_to_512() {
+        let mut a = CachingAllocator::new(GIB);
+        let id = a.alloc(100).unwrap();
+        assert_eq!(a.size_of(id), Some(512));
+    }
+
+    #[test]
+    fn size_classes_bound_waste_and_merge_neighbours() {
+        // <= 6.25% waste for large sizes
+        for v in [3u64 << 20, 100 << 20, (387 << 20) + 12345] {
+            let c = size_class(v);
+            assert!(c >= v && (c - v) as f64 / v as f64 <= 0.0626, "{v} -> {c}");
+        }
+        // nearby sizes (dynamic seqlen jitter) share one class
+        let a = size_class((100 << 20) + (1 << 17));
+        let b = size_class((100 << 20) + (3 << 17));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reuses_cached_blocks_without_new_segments() {
+        let mut a = CachingAllocator::new(GIB);
+        let id = a.alloc(4 << 20).unwrap();
+        a.free(id);
+        let segs_before = a.stats().n_segment_allocs;
+        let _ = a.alloc(4 << 20).unwrap();
+        assert_eq!(a.stats().n_segment_allocs, segs_before);
+    }
+
+    #[test]
+    fn oom_when_over_budget() {
+        let mut a = CachingAllocator::new(8 << 20);
+        let _ = a.alloc(6 << 20).unwrap();
+        let e = a.alloc(6 << 20).unwrap_err();
+        assert_eq!(e.budget, 8 << 20);
+        assert!(e.reserved >= 6 << 20);
+    }
+
+    #[test]
+    fn empty_cache_rescues_fragmented_state() {
+        let mut a = CachingAllocator::new(10 << 20);
+        let x = a.alloc(4 << 20).unwrap();
+        let y = a.alloc(4 << 20).unwrap();
+        a.free(x);
+        a.free(y);
+        // 8 MiB cached in two segments; a 9 MiB alloc needs a flush.
+        let id = a.alloc(9 << 20);
+        assert!(id.is_ok());
+        assert!(a.stats().n_cache_flushes >= 1);
+    }
+
+    #[test]
+    fn fragmentation_accounting() {
+        let mut a = CachingAllocator::new(GIB);
+        let x = a.alloc(3 << 20).unwrap();
+        let y = a.alloc(512).unwrap();
+        a.free(x);
+        assert!(a.stats().fragmentation() > 0);
+        a.free(y);
+        assert_eq!(a.stats().allocated, 0);
+    }
+
+    #[test]
+    fn coalescing_restores_full_segment() {
+        let mut a = CachingAllocator::new(GIB);
+        // Cache one 8 MiB segment, then carve four 2 MiB blocks out of it.
+        let big = a.alloc(8 << 20).unwrap();
+        a.free(big);
+        let ids: Vec<_> = (0..4).map(|_| a.alloc(2 << 20).unwrap()).collect();
+        assert_eq!(a.stats().reserved, 8 << 20, "must reuse the cached segment");
+        // Frees in shuffled order must coalesce back into one 8 MiB block...
+        for &i in &[2usize, 0, 3, 1] {
+            a.free(ids[i]);
+        }
+        // ...so the original size fits again with no new reservation.
+        let _ = a.alloc(8 << 20).unwrap();
+        assert_eq!(a.stats().reserved, 8 << 20);
+    }
+
+    #[test]
+    fn small_pool_uses_2mib_segments() {
+        let mut a = CachingAllocator::new(GIB);
+        let _ = a.alloc(1000).unwrap();
+        assert_eq!(a.stats().reserved, SMALL_SEGMENT);
+        // more small allocs reuse the same segment
+        for _ in 0..100 {
+            let _ = a.alloc(1000).unwrap();
+        }
+        assert_eq!(a.stats().reserved, SMALL_SEGMENT);
+    }
+
+    #[test]
+    fn prop_no_leak_and_invariants() {
+        // Random alloc/free traces: allocated == sum(live sizes); reserved
+        // >= allocated; freeing everything zeroes allocated.
+        forall(
+            11,
+            40,
+            |r| {
+                let n = r.range_u(1, 60);
+                (0..n).map(|_| r.range_u(1, 8 << 20) as u64).collect::<Vec<u64>>()
+            },
+            |sizes| {
+                let mut a = CachingAllocator::new(4 * GIB);
+                let mut live = Vec::new();
+                let mut expect = 0u64;
+                for (i, &s) in sizes.iter().enumerate() {
+                    let id = a.alloc(s).map_err(|e| format!("oom: {e:?}"))?;
+                    expect += a.size_of(id).unwrap();
+                    live.push(id);
+                    if i % 3 == 2 {
+                        let id = live.remove(live.len() / 2);
+                        expect -= a.size_of(id).unwrap();
+                        a.free(id);
+                    }
+                    ensure(a.stats().allocated == expect, "allocated mismatch")?;
+                    ensure(a.stats().reserved >= a.stats().allocated, "reserved < allocated")?;
+                }
+                for id in live {
+                    a.free(id);
+                }
+                ensure(a.stats().allocated == 0, "leak after free-all")
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = CachingAllocator::new(GIB);
+        let id = a.alloc(64).unwrap();
+        a.free(id);
+        a.free(id);
+    }
+}

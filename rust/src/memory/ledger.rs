@@ -1,0 +1,241 @@
+//! Tensor ledger: named live tensors backed by the caching allocator.
+//!
+//! The engines register every activation/residual/transient tensor here; the
+//! ledger is what the planner, the DTR evictor, and the Fig 14 memory curves
+//! observe. Tensors carry the metadata DTR's heuristic needs (compute cost,
+//! last access, evictability).
+
+use super::allocator::{AllocId, AllocStats, CachingAllocator, OomError};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u64);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorClass {
+    /// Params/grads/optimizer state: never evictable.
+    Fixed,
+    /// Activation/residual: evictable by checkpointing or DTR.
+    Activation,
+    /// Scratch within a single layer execution.
+    Transient,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub bytes: u64,
+    pub class: TensorClass,
+    /// Which model layer produced it (planner bookkeeping).
+    pub layer: usize,
+    /// Cost to rematerialise (DTR heuristic numerator), arbitrary time unit.
+    pub compute_cost: f64,
+    /// Logical timestamp of last access (DTR staleness denominator).
+    pub last_access: u64,
+    pub evicted: bool,
+    alloc: Option<AllocId>,
+}
+
+/// Budgeted tensor store over the caching allocator.
+pub struct Ledger {
+    alloc: CachingAllocator,
+    tensors: BTreeMap<TensorId, TensorMeta>,
+    next: u64,
+    clock: u64,
+}
+
+impl Ledger {
+    pub fn new(budget: u64) -> Self {
+        Ledger {
+            alloc: CachingAllocator::new(budget),
+            tensors: BTreeMap::new(),
+            next: 0,
+            clock: 0,
+        }
+    }
+
+    pub fn stats(&self) -> AllocStats {
+        self.alloc.stats()
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.alloc.budget()
+    }
+
+    pub fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Allocate and register a tensor. OOM propagates to the caller (the
+    /// planner decides what to do — that is the whole paper).
+    pub fn create(
+        &mut self,
+        bytes: u64,
+        class: TensorClass,
+        layer: usize,
+        compute_cost: f64,
+    ) -> Result<TensorId, OomError> {
+        let a = self.alloc.alloc(bytes)?;
+        let id = TensorId(self.next);
+        self.next += 1;
+        self.clock += 1;
+        self.tensors.insert(
+            id,
+            TensorMeta {
+                bytes,
+                class,
+                layer,
+                compute_cost,
+                last_access: self.clock,
+                evicted: false,
+                alloc: Some(a),
+            },
+        );
+        Ok(id)
+    }
+
+    pub fn touch(&mut self, id: TensorId) {
+        self.clock += 1;
+        if let Some(t) = self.tensors.get_mut(&id) {
+            t.last_access = self.clock;
+        }
+    }
+
+    pub fn get(&self, id: TensorId) -> Option<&TensorMeta> {
+        self.tensors.get(&id)
+    }
+
+    /// Drop tensor entirely (backward consumed it).
+    pub fn destroy(&mut self, id: TensorId) {
+        if let Some(t) = self.tensors.remove(&id) {
+            if let Some(a) = t.alloc {
+                self.alloc.free(a);
+            }
+        }
+    }
+
+    /// Evict: free the backing memory but keep metadata (rematerialisable).
+    pub fn evict(&mut self, id: TensorId) -> u64 {
+        let t = self.tensors.get_mut(&id).expect("evict unknown tensor");
+        assert_eq!(t.class, TensorClass::Activation, "only activations evict");
+        if let Some(a) = t.alloc.take() {
+            t.evicted = true;
+            let sz = t.bytes;
+            self.alloc.free(a);
+            sz
+        } else {
+            0
+        }
+    }
+
+    /// Rematerialise an evicted tensor (recompute happened).
+    pub fn restore(&mut self, id: TensorId) -> Result<(), OomError> {
+        let bytes = {
+            let t = self.tensors.get(&id).expect("restore unknown tensor");
+            assert!(t.evicted, "restore of live tensor");
+            t.bytes
+        };
+        let a = self.alloc.alloc(bytes)?;
+        let t = self.tensors.get_mut(&id).unwrap();
+        t.alloc = Some(a);
+        t.evicted = false;
+        self.clock += 1;
+        t.last_access = self.clock;
+        Ok(())
+    }
+
+    /// Live (non-evicted) activation tensors — DTR's eviction pool.
+    pub fn evictable(&self) -> Vec<(TensorId, &TensorMeta)> {
+        self.tensors
+            .iter()
+            .filter(|(_, t)| t.class == TensorClass::Activation && !t.evicted)
+            .map(|(i, t)| (*i, t))
+            .collect()
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.stats().allocated
+    }
+
+    pub fn empty_cache(&mut self) -> u64 {
+        self.alloc.empty_cache()
+    }
+
+    /// Reset peak counters to current levels (start of an iteration).
+    pub fn reset_peak(&mut self) {
+        self.alloc.reset_peak();
+    }
+
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::GIB;
+
+    fn ledger() -> Ledger {
+        Ledger::new(GIB)
+    }
+
+    #[test]
+    fn create_touch_destroy_lifecycle() {
+        let mut l = ledger();
+        let id = l.create(1 << 20, TensorClass::Activation, 3, 1.5).unwrap();
+        assert_eq!(l.get(id).unwrap().layer, 3);
+        let t0 = l.get(id).unwrap().last_access;
+        l.touch(id);
+        assert!(l.get(id).unwrap().last_access > t0);
+        l.destroy(id);
+        assert!(l.get(id).is_none());
+        assert_eq!(l.live_bytes(), 0);
+    }
+
+    #[test]
+    fn evict_restore_cycle_frees_and_reclaims() {
+        let mut l = ledger();
+        let id = l.create(8 << 20, TensorClass::Activation, 0, 1.0).unwrap();
+        let live = l.live_bytes();
+        let freed = l.evict(id);
+        assert!(freed >= 8 << 20);
+        assert!(l.live_bytes() < live);
+        assert!(l.get(id).unwrap().evicted);
+        l.restore(id).unwrap();
+        assert!(!l.get(id).unwrap().evicted);
+        assert_eq!(l.live_bytes(), live);
+    }
+
+    #[test]
+    #[should_panic(expected = "only activations evict")]
+    fn fixed_tensors_never_evict() {
+        let mut l = ledger();
+        let id = l.create(1024, TensorClass::Fixed, 0, 0.0).unwrap();
+        l.evict(id);
+    }
+
+    #[test]
+    fn evictable_excludes_fixed_and_evicted() {
+        let mut l = ledger();
+        let _f = l.create(1024, TensorClass::Fixed, 0, 0.0).unwrap();
+        let a = l.create(1024, TensorClass::Activation, 1, 1.0).unwrap();
+        let b = l.create(1024, TensorClass::Activation, 2, 1.0).unwrap();
+        assert_eq!(l.evictable().len(), 2);
+        l.evict(a);
+        let ev = l.evictable();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].0, b);
+    }
+
+    #[test]
+    fn oom_propagates() {
+        let mut l = Ledger::new(4 << 20);
+        let _ = l.create(3 << 20, TensorClass::Activation, 0, 1.0).unwrap();
+        assert!(l.create(3 << 20, TensorClass::Activation, 0, 1.0).is_err());
+    }
+}

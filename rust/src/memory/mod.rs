@@ -1,0 +1,8 @@
+//! GPU memory substrate: caching-allocator simulator + tensor ledger.
+//! See DESIGN.md §4 for why this faithfully stands in for a V100.
+
+pub mod allocator;
+pub mod ledger;
+
+pub use allocator::{AllocStats, CachingAllocator, OomError};
+pub use ledger::{Ledger, TensorClass, TensorId, TensorMeta};

@@ -1,0 +1,198 @@
+//! Run metrics: per-iteration breakdown (the Fig 5 / Table 2 decomposition),
+//! aggregated reports with TSV emission, and Chrome-trace timeline export.
+
+pub mod trace;
+
+use crate::util::stats::{Percentiles, Summary};
+
+/// Where one simulated iteration's time went.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterationMetrics {
+    /// Forward + backward compute (no recompute), ms.
+    pub compute_ms: f64,
+    /// Extra recompute from checkpointing/eviction, ms.
+    pub recompute_ms: f64,
+    /// Planner time: estimator + scheduler (Mimose) or eviction scans (DTR).
+    pub planning_ms: f64,
+    /// Collector overhead (sheltered double-forward), ms.
+    pub collector_ms: f64,
+    /// Peak allocated bytes this iteration.
+    pub peak_bytes: u64,
+    /// Reserved-but-unallocated (fragmentation) at iteration end.
+    pub frag_bytes: u64,
+    /// Collated input seqlen.
+    pub seqlen: usize,
+    pub cache_hit: bool,
+    pub oom_failed: bool,
+    /// Number of layers checkpointed / tensors evicted.
+    pub n_checkpointed: usize,
+}
+
+impl IterationMetrics {
+    pub fn total_ms(&self) -> f64 {
+        self.compute_ms + self.recompute_ms + self.planning_ms + self.collector_ms
+    }
+}
+
+/// Aggregate over a run (one epoch in the paper's tables).
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub iters: Vec<IterationMetrics>,
+    pub planner: String,
+    pub budget_bytes: u64,
+}
+
+impl RunReport {
+    pub fn new(planner: &str, budget_bytes: u64) -> Self {
+        RunReport { iters: Vec::new(), planner: planner.into(), budget_bytes }
+    }
+
+    pub fn push(&mut self, m: IterationMetrics) {
+        self.iters.push(m);
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.iters.iter().map(|m| m.total_ms()).sum()
+    }
+
+    pub fn compute_ms(&self) -> f64 {
+        self.iters.iter().map(|m| m.compute_ms).sum()
+    }
+
+    pub fn recompute_ms(&self) -> f64 {
+        self.iters.iter().map(|m| m.recompute_ms).sum()
+    }
+
+    pub fn planning_ms(&self) -> f64 {
+        self.iters.iter().map(|m| m.planning_ms).sum()
+    }
+
+    pub fn collector_ms(&self) -> f64 {
+        self.iters.iter().map(|m| m.collector_ms).sum()
+    }
+
+    pub fn oom_failures(&self) -> usize {
+        self.iters.iter().filter(|m| m.oom_failed).count()
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.iters.iter().map(|m| m.peak_bytes).max().unwrap_or(0)
+    }
+
+    pub fn max_frag_bytes(&self) -> u64 {
+        self.iters.iter().map(|m| m.frag_bytes).max().unwrap_or(0)
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().filter(|m| m.cache_hit).count() as f64 / self.iters.len() as f64
+    }
+
+    /// Mean iteration time, ms.
+    pub fn mean_iter_ms(&self) -> f64 {
+        if self.iters.is_empty() {
+            0.0
+        } else {
+            self.total_ms() / self.iters.len() as f64
+        }
+    }
+
+    /// Fraction of total time spent in planning (Fig 5's key series).
+    pub fn planning_share(&self) -> f64 {
+        let t = self.total_ms();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.planning_ms() / t
+        }
+    }
+
+    pub fn recompute_share(&self) -> f64 {
+        let t = self.total_ms();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.recompute_ms() / t
+        }
+    }
+
+    pub fn seqlen_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for m in &self.iters {
+            s.add(m.seqlen as f64);
+        }
+        s
+    }
+
+    pub fn iter_time_percentiles(&self) -> Percentiles {
+        let mut p = Percentiles::new();
+        for m in &self.iters {
+            p.add(m.total_ms());
+        }
+        p
+    }
+
+    /// One TSV row (bench harness output; header in `tsv_header`).
+    pub fn tsv_row(&self) -> String {
+        format!(
+            "{}\t{:.2}\t{:.1}\t{:.1}\t{:.1}\t{:.3}\t{:.1}\t{}\t{:.3}\t{:.3}\t{}",
+            self.planner,
+            self.budget_bytes as f64 / crate::util::GIB as f64,
+            self.total_ms(),
+            self.compute_ms(),
+            self.recompute_ms(),
+            self.planning_ms(),
+            self.collector_ms(),
+            self.peak_bytes(),
+            self.cache_hit_rate(),
+            self.planning_share(),
+            self.oom_failures(),
+        )
+    }
+
+    pub fn tsv_header() -> &'static str {
+        "planner\tbudget_gb\ttotal_ms\tcompute_ms\trecompute_ms\tplanning_ms\tcollector_ms\tpeak_bytes\tcache_hit_rate\tplanning_share\toom_failures"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iter(compute: f64, recompute: f64, planning: f64) -> IterationMetrics {
+        IterationMetrics {
+            compute_ms: compute,
+            recompute_ms: recompute,
+            planning_ms: planning,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn aggregation() {
+        let mut r = RunReport::new("mimose", 6 << 30);
+        r.push(iter(10.0, 2.0, 0.5));
+        r.push(iter(10.0, 0.0, 0.0));
+        assert!((r.total_ms() - 22.5).abs() < 1e-9);
+        assert!((r.mean_iter_ms() - 11.25).abs() < 1e-9);
+        assert!((r.recompute_share() - 2.0 / 22.5).abs() < 1e-9);
+        assert!((r.planning_share() - 0.5 / 22.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tsv_row_has_all_columns() {
+        let r = RunReport::new("dtr", 4 << 30);
+        let header_cols = RunReport::tsv_header().split('\t').count();
+        assert_eq!(r.tsv_row().split('\t').count(), header_cols);
+    }
+
+    #[test]
+    fn empty_report_safe() {
+        let r = RunReport::new("baseline", 0);
+        assert_eq!(r.mean_iter_ms(), 0.0);
+        assert_eq!(r.peak_bytes(), 0);
+        assert_eq!(r.cache_hit_rate(), 0.0);
+    }
+}

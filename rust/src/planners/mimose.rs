@@ -1,0 +1,286 @@
+//! The Mimose planner (paper §4): shuttling collector + lightning estimator
+//! + responsive scheduler + plan cache, composed behind the `Planner` trait.
+//!
+//! Timeline per §4.1: iterations in *sheltered execution* run the
+//! conservative plan and collect per-layer data; once the collector freezes
+//! the estimator is trained and *responsive execution* begins — cache lookup
+//! first, Algorithm 1 on miss, all in well under a millisecond (Table 2).
+
+use super::{
+    checkpointable, usable_activation_budget, InputDesc, IterationMode, PlanDecision, Planner,
+};
+use crate::collector::{Collector, Observation};
+use crate::config::MimoseConfig;
+use crate::estimator::MemoryEstimator;
+use crate::model::{LayerKind, ModelProfile};
+use crate::scheduler::{greedy_schedule, LayerEst, Plan, PlanCache};
+use crate::util::timer::Timer;
+
+/// Round `size` up to the next point of a geometric grid with step
+/// `(1 + tol)` — all sizes in one grid cell share one (conservative) plan.
+pub fn quantize_up(size: u64, tol: f64) -> u64 {
+    if size == 0 {
+        return 0;
+    }
+    let step = (1.0 + tol.max(1e-6)).ln();
+    let cell = ((size as f64).ln() / step).ceil();
+    (cell * step).exp().ceil() as u64
+}
+
+pub struct MimosePlanner {
+    cfg: MimoseConfig,
+    budget: u64,
+    collector: Collector,
+    estimator: MemoryEstimator,
+    cache: PlanCache,
+    /// Estimator training time (once, at the sheltered->responsive switch).
+    pub train_ms: f64,
+    /// Total estimator+scheduler time across the run (Table 2 column).
+    pub plan_ms_total: f64,
+    /// Number of plans generated (cache misses that ran Algorithm 1).
+    pub plans_generated: u64,
+    estimator_ready: bool,
+}
+
+impl MimosePlanner {
+    pub fn new(budget: u64, n_layers: usize, cfg: MimoseConfig) -> Self {
+        MimosePlanner {
+            collector: Collector::new(cfg.collect_iters),
+            estimator: MemoryEstimator::new(n_layers),
+            cache: PlanCache::new(cfg.cache_tolerance),
+            cfg,
+            budget,
+            train_ms: 0.0,
+            plan_ms_total: 0.0,
+            plans_generated: 0,
+            estimator_ready: false,
+        }
+    }
+
+    pub fn collector(&self) -> &Collector {
+        &self.collector
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn estimator(&self) -> &MemoryEstimator {
+        &self.estimator
+    }
+
+    /// Conservative plan for sheltered execution: checkpoint every block
+    /// (the Sublinear-style envelope of §4.2 — memory footprint equals the
+    /// static planner's while we measure).
+    fn conservative_plan(profile: &ModelProfile) -> Plan {
+        Plan::of(
+            profile
+                .layers
+                .iter()
+                .filter(|l| l.kind != LayerKind::Head && l.savings() > 0)
+                .map(|l| l.id),
+        )
+    }
+
+    /// Algorithm 1 over *estimated* per-layer bytes.
+    fn generate_plan(&mut self, input_size: u64, profile: &ModelProfile) -> Plan {
+        let layers: Vec<LayerEst> = checkpointable(profile)
+            .into_iter()
+            .map(|mut l| {
+                l.est_bytes = self.estimator.predict_bytes(l.id, input_size as f64) as u64;
+                l
+            })
+            .collect();
+        let est_total: u64 = layers.iter().map(|l| l.est_bytes).sum();
+        let usable = usable_activation_budget(self.budget, profile, self.cfg.reserve_bytes);
+        let excess = est_total.saturating_sub(usable);
+        greedy_schedule(&layers, excess, self.cfg.bucket_tolerance)
+    }
+}
+
+impl Planner for MimosePlanner {
+    fn name(&self) -> &'static str {
+        "mimose"
+    }
+
+    fn begin_iteration(&mut self, input: &InputDesc, profile: &ModelProfile) -> PlanDecision {
+        let size = input.size();
+        // Quantise the planning size UP to the cache grid so that a cached
+        // plan is always conservative for every input mapped to it (a plan
+        // generated for a slightly smaller input could under-checkpoint).
+        let plan_size = quantize_up(size, self.cfg.cache_tolerance);
+
+        // ---- sheltered execution ----
+        if self.collector.wants_collection(size) {
+            return PlanDecision {
+                mode: IterationMode::Sheltered(Self::conservative_plan(profile)),
+                planning_ms: 0.0,
+                cache_hit: false,
+            };
+        }
+
+        // ---- responsive execution ----
+        let t = Timer::start();
+        if !self.estimator_ready {
+            self.train_ms = self.estimator.train();
+            self.estimator_ready = true;
+        }
+        if let Some(plan) = self.cache.lookup_exact(plan_size) {
+            let planning_ms = t.elapsed_ms();
+            self.plan_ms_total += planning_ms;
+            return PlanDecision { mode: IterationMode::Planned(plan), planning_ms, cache_hit: true };
+        }
+        let plan = self.generate_plan(plan_size, profile);
+        self.cache.insert(plan_size, plan.clone());
+        self.plans_generated += 1;
+        let planning_ms = t.elapsed_ms();
+        self.plan_ms_total += planning_ms;
+        PlanDecision { mode: IterationMode::Planned(plan), planning_ms, cache_hit: false }
+    }
+
+    fn end_iteration(&mut self, input: &InputDesc, obs: &[Observation], extra_fwd_ms: f64) {
+        if !self.collector.is_frozen() && !obs.is_empty() {
+            self.collector.ingest(&mut self.estimator, input.size(), obs, extra_fwd_ms);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::model::transformer_profile;
+    use crate::util::rng::Rng;
+    use crate::util::GIB;
+
+    fn spec() -> ModelSpec {
+        ModelSpec::bert_base()
+    }
+
+    /// Drive the planner through sheltered execution with synthetic
+    /// observations derived from the analytic profile (what the engines do).
+    fn shelter(planner: &mut MimosePlanner, batch: usize, seqs: &[usize]) {
+        for &s in seqs {
+            let profile = transformer_profile(&spec(), batch, s, 1.0);
+            let input = InputDesc { batch, seqlen: s };
+            let dec = planner.begin_iteration(&input, &profile);
+            assert!(matches!(dec.mode, IterationMode::Sheltered(_)));
+            let obs: Vec<Observation> = profile
+                .layers
+                .iter()
+                .map(|l| Observation {
+                    layer: l.id,
+                    input_size: input.size() as f64,
+                    act_bytes: l.act_bytes,
+                    fwd_ms: l.fwd_flops as f64 / 1e9,
+                    self_checkpointed: false,
+                    relative_checkpointed: false,
+                })
+                .collect();
+            planner.end_iteration(&input, &obs, 1.0);
+        }
+    }
+
+    fn sheltered_seqs(n: usize) -> Vec<usize> {
+        let mut rng = Rng::new(5);
+        (0..n).map(|_| rng.range_u(40, 330)).collect()
+    }
+
+    #[test]
+    fn sheltered_then_responsive_lifecycle() {
+        let mut p = MimosePlanner::new(6 * GIB, 14, MimoseConfig::default());
+        shelter(&mut p, 32, &sheltered_seqs(10));
+        assert!(p.collector().is_frozen());
+        // next iteration is responsive
+        let profile = transformer_profile(&spec(), 32, 200, 1.0);
+        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 200 }, &profile);
+        assert!(matches!(dec.mode, IterationMode::Planned(_)));
+        assert!(p.estimator().is_trained());
+    }
+
+    #[test]
+    fn estimator_accuracy_after_ten_iters() {
+        // Table 4: thousandth-level error on the quadratic memory curve.
+        let mut p = MimosePlanner::new(6 * GIB, 14, MimoseConfig::default());
+        shelter(&mut p, 32, &sheltered_seqs(10));
+        let profile = transformer_profile(&spec(), 32, 200, 1.0);
+        let _ = p.begin_iteration(&InputDesc { batch: 32, seqlen: 200 }, &profile);
+        for l in &profile.layers {
+            if l.act_bytes == 0 {
+                continue;
+            }
+            let pred = p.estimator().predict_bytes(l.id, (32 * 200) as f64);
+            let rel = (pred - l.act_bytes as f64).abs() / l.act_bytes as f64;
+            assert!(rel < 5e-3, "layer {} rel {rel}", l.name);
+        }
+    }
+
+    #[test]
+    fn repeated_input_hits_cache() {
+        let mut p = MimosePlanner::new(5 * GIB, 14, MimoseConfig::default());
+        shelter(&mut p, 32, &sheltered_seqs(10));
+        let profile = transformer_profile(&spec(), 32, 250, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 250 };
+        let d1 = p.begin_iteration(&input, &profile);
+        assert!(!d1.cache_hit);
+        let d2 = p.begin_iteration(&input, &profile);
+        assert!(d2.cache_hit);
+        assert_eq!(p.plans_generated, 1);
+        // a size in the same quantisation cell also hits
+        let d3 = p.begin_iteration(&InputDesc { batch: 32, seqlen: 249 }, &profile);
+        assert!(d3.cache_hit);
+    }
+
+    #[test]
+    fn small_inputs_get_empty_plans_large_get_checkpointing() {
+        // §6.4: below the budget no checkpointing; above, plans appear.
+        let mut p = MimosePlanner::new(6 * GIB, 14, MimoseConfig::default());
+        shelter(&mut p, 32, &sheltered_seqs(10));
+        let small_prof = transformer_profile(&spec(), 32, 48, 1.0);
+        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 48 }, &small_prof);
+        match dec.mode {
+            IterationMode::Planned(plan) => assert!(plan.is_empty(), "small input needs no plan"),
+            _ => panic!(),
+        }
+        let big_prof = transformer_profile(&spec(), 32, 320, 1.0);
+        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 320 }, &big_prof);
+        match dec.mode {
+            IterationMode::Planned(plan) => {
+                assert!(!plan.is_empty(), "large input must checkpoint under 6 GB")
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn planned_memory_respects_budget() {
+        let mut p = MimosePlanner::new(5 * GIB, 14, MimoseConfig::default());
+        shelter(&mut p, 32, &sheltered_seqs(10));
+        for seq in [100, 180, 260, 330] {
+            let profile = transformer_profile(&spec(), 32, seq, 1.0);
+            let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: seq }, &profile);
+            if let IterationMode::Planned(plan) = dec.mode {
+                let kept = profile.planned_act_bytes(&plan.ids());
+                let usable = usable_activation_budget(5 * GIB, &profile, GIB / 2);
+                assert!(
+                    kept <= usable + usable / 50, // 2% estimator slack
+                    "seq {seq}: kept {kept} > usable {usable}"
+                );
+            } else {
+                panic!("expected planned mode");
+            }
+        }
+    }
+
+    #[test]
+    fn planning_is_submillisecond() {
+        // The paper's headline implementation claim (§4.1, Table 2).
+        let mut p = MimosePlanner::new(5 * GIB, 14, MimoseConfig::default());
+        shelter(&mut p, 32, &sheltered_seqs(10));
+        let profile = transformer_profile(&spec(), 32, 300, 1.0);
+        // warm: train once
+        let _ = p.begin_iteration(&InputDesc { batch: 32, seqlen: 300 }, &profile);
+        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 311 }, &profile);
+        assert!(dec.planning_ms < 1.0, "planning took {} ms", dec.planning_ms);
+    }
+}

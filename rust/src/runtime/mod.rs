@@ -1,0 +1,320 @@
+//! PJRT runtime: load the AOT artifacts (HLO text + manifest.json emitted by
+//! `make artifacts`) and execute them from the Rust hot path.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Python never runs here.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub seq: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Static model description from the manifest (mirror of python configs).
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub seq_buckets: Vec<usize>,
+    pub param_count: u64,
+    pub block_params: Vec<String>,
+    pub residuals: Vec<String>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl ModelManifest {
+    pub fn artifact(&self, name: &str, seq: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name && a.seq == seq)
+    }
+}
+
+/// Parse artifacts/manifest.json.
+pub fn load_manifest(artifacts_dir: &Path) -> Result<HashMap<String, ModelManifest>> {
+    let path = artifacts_dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let mut out = HashMap::new();
+    for (cfg_name, cfg) in doc.req("configs").as_obj().ok_or_else(|| anyhow!("bad configs"))? {
+        let m = cfg.req("model");
+        let usz = |k: &str| m.req(k).as_usize().unwrap_or(0);
+        let strs = |v: &Json| -> Vec<String> {
+            v.as_arr().unwrap_or(&[]).iter().filter_map(|x| x.as_str().map(String::from)).collect()
+        };
+        let artifacts = cfg
+            .req("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad artifacts"))?
+            .iter()
+            .map(|a| -> Result<ArtifactMeta> {
+                let inputs = a
+                    .req("inputs")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad inputs"))?
+                    .iter()
+                    .map(|i| -> Result<TensorSpec> {
+                        Ok(TensorSpec {
+                            name: i.req("name").as_str().unwrap_or("").into(),
+                            shape: i
+                                .req("shape")
+                                .as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(|x| x.as_usize())
+                                .collect(),
+                            dtype: match i.req("dtype").as_str() {
+                                Some("i32") => DType::I32,
+                                _ => DType::F32,
+                            },
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ArtifactMeta {
+                    name: a.req("name").as_str().unwrap_or("").into(),
+                    seq: a.req("seq").as_usize().unwrap_or(0),
+                    file: a.req("file").as_str().unwrap_or("").into(),
+                    inputs,
+                    outputs: strs(a.req("outputs")),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.insert(
+            cfg_name.clone(),
+            ModelManifest {
+                name: cfg_name.clone(),
+                vocab: usz("vocab"),
+                hidden: usz("hidden"),
+                layers: usz("layers"),
+                heads: usz("heads"),
+                ffn: usz("ffn"),
+                max_seq: usz("max_seq"),
+                batch: usz("batch"),
+                seq_buckets: m
+                    .req("seq_buckets")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect(),
+                param_count: m.req("param_count").as_f64().unwrap_or(0.0) as u64,
+                block_params: strs(cfg.req("block_params")),
+                residuals: strs(cfg.req("residuals")),
+                artifacts,
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Compiled-executable registry over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: ModelManifest,
+    executables: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    /// cumulative compile time, ms (reported once at startup)
+    pub compile_ms: f64,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime for one model config.
+    pub fn new(artifacts_dir: &Path, config: &str) -> Result<Self> {
+        let manifests = load_manifest(artifacts_dir)?;
+        let manifest = manifests
+            .get(config)
+            .cloned()
+            .ok_or_else(|| anyhow!("config '{config}' not in manifest"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+            executables: HashMap::new(),
+            compile_ms: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The underlying PJRT client (buffer staging from callers).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (and cache) an artifact for a seq bucket.
+    pub fn load(&mut self, name: &str, seq: usize) -> Result<()> {
+        let key = (name.to_string(), seq);
+        if self.executables.contains_key(&key) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .artifact(name, seq)
+            .ok_or_else(|| anyhow!("artifact {name}/s{seq} not in manifest"))?
+            .clone();
+        let path = self.artifacts_dir.join(&meta.file);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_ms += t.elapsed().as_secs_f64() * 1e3;
+        self.executables.insert(key, exe);
+        Ok(())
+    }
+
+    /// Pre-compile every artifact for the given buckets.
+    pub fn load_all(&mut self, buckets: &[usize]) -> Result<()> {
+        let names: Vec<(String, usize)> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| buckets.contains(&a.seq))
+            .map(|a| (a.name.clone(), a.seq))
+            .collect();
+        for (name, seq) in names {
+            self.load(&name, seq)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the flattened output tuple.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute` (the
+    /// literal-args entry point): its C++ shim `release()`s every input
+    /// device buffer without freeing it, leaking ~all input bytes per call
+    /// (verified: a 98M-param training loop grows ~1 GB/step until the OOM
+    /// killer fires). We stage inputs as *owned* `PjRtBuffer`s and call
+    /// `execute_b`, so Rust `Drop` frees both inputs and outputs.
+    pub fn exec(&self, name: &str, seq: usize, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let meta = self
+            .manifest
+            .artifact(name, seq)
+            .ok_or_else(|| anyhow!("artifact {name}/s{seq} not in manifest"))?;
+        if args.len() != meta.inputs.len() {
+            bail!("{name}/s{seq}: got {} args, want {}", args.len(), meta.inputs.len());
+        }
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()?;
+        self.exec_buffers(name, seq, &bufs.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with pre-staged device buffers (no host->device copies for
+    /// the args; used by the real engine's persistent parameter cache).
+    pub fn exec_buffers(
+        &self,
+        name: &str,
+        seq: usize,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(&(name.to_string(), seq))
+            .ok_or_else(|| anyhow!("artifact {name}/s{seq} not loaded"))?;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        Ok(result.to_tuple()?)
+    }
+
+    /// Stage a host f32 tensor as an owned device buffer.
+    pub fn stage_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Stage a host i32 tensor as an owned device buffer.
+    pub fn stage_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Build an f32 literal of the given dims from a host slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elems for dims {dims:?}", data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal of the given dims from a host slice.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elems for dims {dims:?}", data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = load_manifest(&dir).unwrap();
+        let tiny = &m["bert-tiny"];
+        assert_eq!(tiny.hidden, 64);
+        assert_eq!(tiny.layers, 2);
+        assert_eq!(tiny.block_params.len(), 16);
+        assert_eq!(tiny.residuals.len(), 13);
+        let bf = tiny.artifact("block_fwd", tiny.seq_buckets[0]).unwrap();
+        assert_eq!(bf.inputs.len(), 17);
+        assert_eq!(bf.outputs.len(), 14);
+        assert_eq!(bf.inputs.last().unwrap().name, "x");
+    }
+
+    #[test]
+    fn lit_helpers_validate_shape() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let l = lit_i32(&[1, 2], &[2, 1]).unwrap();
+        assert_eq!(l.element_count(), 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Plan cache (paper §5 "responsive execution"): plans are indexed by input
+//! size; similar input sizes (within a relative tolerance) share a plan —
+//! "the memory usages of similar input sizes are similar, and the generated
+//! plans are also similar. Therefore, they can also be the plans of each
+//! other."
+
+use super::Plan;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Input-size-indexed plan cache with relative-tolerance matching.
+#[derive(Clone, Debug)]
+pub struct PlanCache {
+    plans: BTreeMap<u64, Plan>,
+    tolerance: f64,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    pub fn new(tolerance: f64) -> Self {
+        PlanCache { plans: BTreeMap::new(), tolerance, stats: CacheStats::default() }
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// Look up a plan for `input_size`, accepting any entry whose key is
+    /// within ±tolerance (relative). Nearest key wins.
+    pub fn lookup(&mut self, input_size: u64) -> Option<Plan> {
+        let tol = (input_size as f64 * self.tolerance) as u64;
+        let lo = input_size.saturating_sub(tol);
+        let hi = input_size.saturating_add(tol);
+        let best = self
+            .plans
+            .range(lo..=hi)
+            .min_by_key(|(k, _)| k.abs_diff(input_size))
+            .map(|(_, p)| p.clone());
+        match best {
+            Some(p) => {
+                self.stats.hits += 1;
+                Some(p)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Exact-key lookup (used with pre-quantised plan sizes).
+    pub fn lookup_exact(&mut self, key: u64) -> Option<Plan> {
+        match self.plans.get(&key) {
+            Some(p) => {
+                self.stats.hits += 1;
+                Some(p.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, input_size: u64, plan: Plan) {
+        self.plans.insert(input_size, plan);
+    }
+
+    /// Invalidate everything (e.g. budget changed).
+    pub fn clear(&mut self) {
+        self.plans.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    #[test]
+    fn exact_hit() {
+        let mut c = PlanCache::new(0.05);
+        c.insert(1000, Plan::of([1, 2]));
+        assert_eq!(c.lookup(1000), Some(Plan::of([1, 2])));
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn tolerant_hit_within_5_percent() {
+        let mut c = PlanCache::new(0.05);
+        c.insert(1000, Plan::of([3]));
+        assert!(c.lookup(1040).is_some());
+        assert!(c.lookup(960).is_some());
+        assert!(c.lookup(1100).is_none());
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn nearest_key_wins() {
+        let mut c = PlanCache::new(0.10);
+        c.insert(1000, Plan::of([1]));
+        c.insert(1080, Plan::of([2]));
+        assert_eq!(c.lookup(1070), Some(Plan::of([2])));
+    }
+
+    #[test]
+    fn clear_resets_entries_not_stats() {
+        let mut c = PlanCache::new(0.05);
+        c.insert(10, Plan::none());
+        let _ = c.lookup(10);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn prop_hit_implies_key_within_tolerance() {
+        forall(
+            23,
+            200,
+            |r| {
+                let keys: Vec<usize> = (0..r.range_u(1, 10)).map(|_| r.range_u(100, 10_000)).collect();
+                let probe = r.range_u(100, 10_000);
+                (keys, probe)
+            },
+            |(keys, probe)| {
+                let mut c = PlanCache::new(0.05);
+                for &k in keys {
+                    c.insert(k as u64, Plan::of([k]));
+                }
+                if let Some(plan) = c.lookup(*probe as u64) {
+                    let id = *plan.ids().first().unwrap();
+                    let rel = (id as f64 - *probe as f64).abs() / *probe as f64;
+                    ensure(rel <= 0.051, &format!("hit key {id} for probe {probe}: rel {rel}"))
+                } else {
+                    // miss: no key may lie within tolerance
+                    for &k in keys {
+                        let rel = (k as f64 - *probe as f64).abs() / *probe as f64;
+                        ensure(rel > 0.05, &format!("missed key {k} within tol of {probe}"))?;
+                    }
+                    Ok(())
+                }
+            },
+        );
+    }
+}

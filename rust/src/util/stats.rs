@@ -1,0 +1,160 @@
+//! Small statistics toolkit: summaries, percentiles, histograms, linear fits.
+//! Used by metrics reporting and the bench harness (criterion stand-in).
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 { self.n }
+    pub fn mean(&self) -> f64 { self.mean }
+    pub fn min(&self) -> f64 { self.min }
+    pub fn max(&self) -> f64 { self.max }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 { self.variance().sqrt() }
+}
+
+/// Exact percentile over a stored sample set (fine at bench scale).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self { Self::default() }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize { self.xs.len() }
+    pub fn is_empty(&self) -> bool { self.xs.is_empty() }
+
+    /// q in [0,1]; linear interpolation between order statistics.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(!self.xs.is_empty());
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.xs.len() - 1) as f64;
+        let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = pos - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    pub fn median(&mut self) -> f64 { self.quantile(0.5) }
+    pub fn p99(&mut self) -> f64 { self.quantile(0.99) }
+}
+
+/// Fixed-bin histogram over [lo, hi); overflow/underflow clamp to edge bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let f = (x - self.lo) / (self.hi - self.lo);
+        let i = ((f * self.bins.len() as f64) as isize)
+            .clamp(0, self.bins.len() as isize - 1) as usize;
+        self.bins[i] += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] { &self.bins }
+    pub fn total(&self) -> u64 { self.bins.iter().sum() }
+
+    /// Midpoint of bin i.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Render an ASCII bar chart (used by fig benches for paper-like plots).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width / max as usize).max(usize::from(c > 0)));
+            out.push_str(&format!("{:8.1} |{:<w$}| {}\n", self.center(i), bar, c, w = width));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut p = Percentiles::new();
+        for x in [10.0, 20.0, 30.0, 40.0] {
+            p.add(x);
+        }
+        assert!((p.median() - 25.0).abs() < 1e-12);
+        assert_eq!(p.quantile(0.0), 10.0);
+        assert_eq!(p.quantile(1.0), 40.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamp() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        for x in [0.5, 1.5, 9.9, 42.0, -3.0] {
+            h.add(x);
+        }
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.bins()[0], 3); // 0.5, 1.5, -3.0(clamped)
+        assert_eq!(h.bins()[4], 2); // 9.9, 42(clamped)
+        assert!((h.center(0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Wall-clock timing + a micro-bench harness (criterion stand-in).
+
+use super::stats::{Percentiles, Summary};
+use std::time::{Duration, Instant};
+
+/// Scoped timer: `let t = Timer::start(); ...; t.elapsed_ms()`.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Bench result with criterion-like summary fields (times in seconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {}  p50 {}  p99 {}  (±{})",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p99_s),
+            fmt_s(self.std_s),
+        )
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warm up, then sample until `budget` or `max_iters`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: a few runs or 10% of budget.
+    let warm_start = Instant::now();
+    for _ in 0..3 {
+        f();
+        if warm_start.elapsed() > budget / 10 {
+            break;
+        }
+    }
+    let mut summary = Summary::new();
+    let mut pct = Percentiles::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && summary.count() < 1_000_000 {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        summary.add(dt);
+        pct.add(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: summary.count(),
+        mean_s: summary.mean(),
+        std_s: summary.std(),
+        p50_s: pct.median(),
+        p99_s: pct.p99(),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", Duration::from_millis(20), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters > 100);
+        assert!(r.mean_s >= 0.0 && r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_s(2.0).ends_with(" s"));
+        assert!(fmt_s(2e-3).ends_with(" ms"));
+        assert!(fmt_s(2e-6).ends_with(" µs"));
+        assert!(fmt_s(2e-9).ends_with(" ns"));
+    }
+}

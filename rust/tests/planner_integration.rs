@@ -1,0 +1,121 @@
+//! Cross-planner integration + property tests over the SimEngine: the
+//! system-level invariants that hold for ANY seed/task/budget.
+
+use mimose::config::{ExperimentConfig, PlannerKind, Task};
+use mimose::engine::sim::SimEngine;
+use mimose::util::rng::Rng;
+use mimose::util::GIB;
+
+fn run(task: Task, kind: PlannerKind, budget: f64, iters: usize, seed: u64) -> mimose::metrics::RunReport {
+    let mut cfg = ExperimentConfig::new(task, kind, budget);
+    cfg.max_iters = iters;
+    cfg.seed = seed;
+    SimEngine::new(cfg).expect("fits").run_epoch()
+}
+
+#[test]
+fn memory_safety_under_random_budgets() {
+    // Property: Sublinear/Mimose/DTR never exceed the budget, for random
+    // feasible budgets and seeds, on every task.
+    let mut rng = Rng::new(99);
+    for _ in 0..6 {
+        let task = *rng.choose(&Task::all());
+        let fixed_gb = task.model().fixed_state_bytes() as f64 / GIB as f64;
+        let budget = fixed_gb + rng.range_f(1.6, 5.0);
+        let seed = rng.next_u64();
+        for kind in [PlannerKind::Sublinear, PlannerKind::Mimose, PlannerKind::Dtr] {
+            let r = run(task, kind, budget, 120, seed);
+            assert!(
+                r.peak_bytes() <= (budget * GIB as f64) as u64,
+                "{} {} @ {budget:.2} GB seed {seed}: peak {}",
+                task.name(),
+                kind.name(),
+                r.peak_bytes()
+            );
+        }
+    }
+}
+
+#[test]
+fn ordering_invariant_more_budget_never_slower() {
+    // For the same planner/seed, a larger budget can only reduce
+    // recompute+planning time (weak monotonicity, allowing 2% noise).
+    for kind in [PlannerKind::Sublinear, PlannerKind::Mimose] {
+        let lo = run(Task::TcBert, kind, 5.0, 300, 7);
+        let hi = run(Task::TcBert, kind, 7.0, 300, 7);
+        let lo_over = lo.recompute_ms() + lo.planning_ms();
+        let hi_over = hi.recompute_ms() + hi.planning_ms();
+        assert!(
+            hi_over <= lo_over * 1.02,
+            "{}: overhead grew with budget ({lo_over} -> {hi_over})",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn mimose_cache_stabilises_after_warmup() {
+    let r = run(Task::McRoberta, PlannerKind::Mimose, 4.0, 400, 3);
+    // after the first 100 iterations the hit rate of the tail must be high
+    let tail = &r.iters[100..];
+    let hits = tail.iter().filter(|m| m.cache_hit).count();
+    assert!(
+        hits as f64 / tail.len() as f64 > 0.8,
+        "tail hit rate {}",
+        hits as f64 / tail.len() as f64
+    );
+}
+
+#[test]
+fn baseline_is_fastest_when_memory_is_unlimited() {
+    let base = run(Task::QaBert, PlannerKind::Baseline, 64.0, 200, 5);
+    for kind in [PlannerKind::Sublinear, PlannerKind::Dtr, PlannerKind::Mimose] {
+        let r = run(Task::QaBert, kind, 64.0, 200, 5);
+        assert!(
+            r.total_ms() >= base.total_ms() * 0.999,
+            "{} beat baseline with unlimited memory",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn deterministic_runs_for_same_seed() {
+    let a = run(Task::TcBert, PlannerKind::Mimose, 6.0, 150, 11);
+    let b = run(Task::TcBert, PlannerKind::Mimose, 6.0, 150, 11);
+    assert_eq!(a.iters.len(), b.iters.len());
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(x.seqlen, y.seqlen);
+        assert_eq!(x.peak_bytes, y.peak_bytes);
+        assert_eq!(x.n_checkpointed, y.n_checkpointed);
+    }
+}
+
+#[test]
+fn dtr_recompute_grows_as_budget_shrinks() {
+    let tight = run(Task::McRoberta, PlannerKind::Dtr, 3.3, 250, 2);
+    let loose = run(Task::McRoberta, PlannerKind::Dtr, 3.8, 250, 2);
+    assert!(tight.recompute_ms() > loose.recompute_ms());
+    assert!(tight.planning_ms() >= loose.planning_ms());
+}
+
+#[test]
+fn sublinear_plan_is_input_independent() {
+    let r = run(Task::TcBert, PlannerKind::Sublinear, 5.0, 200, 13);
+    let counts: std::collections::BTreeSet<usize> =
+        r.iters.iter().map(|m| m.n_checkpointed).collect();
+    assert_eq!(counts.len(), 1, "static planner must apply one plan: {counts:?}");
+}
+
+#[test]
+fn mimose_plans_scale_with_input_size() {
+    let r = run(Task::TcBert, PlannerKind::Mimose, 5.0, 400, 17);
+    // correlation between seqlen and checkpointed count must be positive
+    let resp: Vec<_> = r.iters.iter().filter(|m| m.collector_ms == 0.0).collect();
+    let n = resp.len() as f64;
+    let mx = resp.iter().map(|m| m.seqlen as f64).sum::<f64>() / n;
+    let my = resp.iter().map(|m| m.n_checkpointed as f64).sum::<f64>() / n;
+    let cov: f64 =
+        resp.iter().map(|m| (m.seqlen as f64 - mx) * (m.n_checkpointed as f64 - my)).sum();
+    assert!(cov > 0.0, "plans must grow with input size");
+}

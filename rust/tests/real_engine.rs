@@ -1,0 +1,116 @@
+//! Integration: the full AOT round-trip — python-lowered HLO artifacts
+//! executed from Rust with real block-level checkpointing semantics.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use mimose::data::{Corpus, CorpusConfig};
+use mimose::engine::optimizer::AdamConfig;
+use mimose::engine::real::RealEngine;
+use mimose::scheduler::Plan;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn engine(seed: u64) -> RealEngine {
+    RealEngine::new(&artifacts_dir(), "bert-tiny", &[16, 32], seed).expect("engine")
+}
+
+#[test]
+fn loss_decreases_on_learnable_corpus() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut e = engine(1);
+    e.set_optimizer(AdamConfig { lr: 2e-3, ..Default::default() });
+    let mut corpus = Corpus::new(CorpusConfig { vocab: 512, seed: 5 });
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..60 {
+        let (ids, labels) = corpus.lm_batch(2, 32, 32);
+        let r = e.train_step(&ids, &labels, 32, &Plan::none()).expect("step");
+        if step == 0 {
+            first = r.loss;
+            // CE at init ~ ln(512) = 6.24
+            assert!((r.loss - 6.24).abs() < 0.7, "init loss {}", r.loss);
+        }
+        last = r.loss;
+    }
+    assert!(last < first - 0.3, "loss did not drop: {first} -> {last}");
+}
+
+#[test]
+fn checkpointed_and_kept_losses_identical() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Fig 15: checkpointing must not change the computation.
+    let mut a = engine(7);
+    let mut b = engine(7);
+    let mut corpus_a = Corpus::new(CorpusConfig { vocab: 512, seed: 9 });
+    let mut corpus_b = Corpus::new(CorpusConfig { vocab: 512, seed: 9 });
+    for _ in 0..5 {
+        let (ids, labels) = corpus_a.lm_batch(2, 16, 16);
+        let (ids2, labels2) = corpus_b.lm_batch(2, 16, 16);
+        assert_eq!(ids, ids2);
+        let ra = a.train_step(&ids, &labels, 16, &Plan::none()).unwrap();
+        let rb = b.train_step(&ids2, &labels2, 16, &Plan::of([1, 2])).unwrap();
+        assert_eq!(ra.loss, rb.loss, "checkpointing changed the loss");
+        assert!(rb.act_bytes[1] < ra.act_bytes[1], "ckpt block must retain less");
+    }
+}
+
+#[test]
+fn checkpointing_saves_activation_memory_and_costs_time() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut e = engine(3);
+    let mut corpus = Corpus::new(CorpusConfig { vocab: 512, seed: 2 });
+    let (ids, labels) = corpus.lm_batch(2, 32, 32);
+    let kept = e.train_step(&ids, &labels, 32, &Plan::none()).unwrap();
+    let ckpt = e.train_step(&ids, &labels, 32, &Plan::of([1, 2])).unwrap();
+    assert!(
+        ckpt.peak_act_bytes < kept.peak_act_bytes,
+        "peak {} !< {}",
+        ckpt.peak_act_bytes,
+        kept.peak_act_bytes
+    );
+    assert!(ckpt.recompute_ms > 0.0);
+    assert_eq!(kept.recompute_ms, 0.0);
+}
+
+#[test]
+fn true_seqlen_pads_to_bucket() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut e = engine(4);
+    let mut corpus = Corpus::new(CorpusConfig { vocab: 512, seed: 3 });
+    // true seqlen 21 -> bucket 32
+    let (ids, labels) = corpus.lm_batch(2, 21, 21);
+    let r = e.train_step(&ids, &labels, 21, &Plan::none()).unwrap();
+    assert_eq!(r.seq_bucket, 32);
+    assert!(r.loss.is_finite());
+    // seqlen beyond all buckets errors
+    let (ids, labels) = corpus.lm_batch(2, 40, 40);
+    assert!(e.train_step(&ids, &labels, 40, &Plan::none()).is_err());
+}
+
+#[test]
+fn param_count_matches_manifest() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let e = engine(5);
+    assert_eq!(e.param_count() as u64, e.rt.manifest.param_count);
+}

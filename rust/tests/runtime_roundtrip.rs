@@ -1,0 +1,148 @@
+//! Runtime-level integration: HLO-text loading, executable registry, buffer
+//! staging, output tuple handling, and leak safety of the execute_b path.
+
+use mimose::runtime::{lit_f32, DType, Runtime};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmRSS"))
+                .and_then(|l| l.split_whitespace().nth(1).and_then(|v| v.parse().ok()))
+        })
+        .unwrap_or(0)
+}
+
+fn stage_all(rt: &Runtime, name: &str, seq: usize) -> Vec<xla::PjRtBuffer> {
+    let meta = rt.manifest.artifact(name, seq).unwrap().clone();
+    meta.inputs
+        .iter()
+        .map(|s| match s.dtype {
+            DType::F32 => rt.stage_f32(&vec![0.01f32; s.elems()], &s.shape).unwrap(),
+            DType::I32 => rt.stage_i32(&vec![1i32; s.elems()], &s.shape).unwrap(),
+        })
+        .collect()
+}
+
+#[test]
+fn every_artifact_loads_and_executes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts_dir(), "bert-tiny").unwrap();
+    let seq = rt.manifest.seq_buckets[0];
+    let names: Vec<String> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.seq == seq)
+        .map(|a| a.name.clone())
+        .collect();
+    assert_eq!(names.len(), 7, "expected 7 artifact kinds");
+    for name in names {
+        rt.load(&name, seq).unwrap();
+        let bufs = stage_all(&rt, &name, seq);
+        let out = rt
+            .exec_buffers(&name, seq, &bufs.iter().collect::<Vec<_>>())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let want = rt.manifest.artifact(&name, seq).unwrap().outputs.len();
+        assert_eq!(out.len(), want, "{name}: output arity");
+        for lit in &out {
+            assert!(lit.size_bytes() > 0);
+        }
+    }
+}
+
+#[test]
+fn literal_exec_path_matches_buffer_path() {
+    if !have_artifacts() {
+        eprintln!("skipping");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts_dir(), "bert-tiny").unwrap();
+    let seq = rt.manifest.seq_buckets[0];
+    rt.load("head_step", seq).unwrap();
+    let meta = rt.manifest.artifact("head_step", seq).unwrap().clone();
+    let lits: Vec<xla::Literal> = meta
+        .inputs
+        .iter()
+        .map(|s| match s.dtype {
+            DType::F32 => lit_f32(&vec![0.02f32; s.elems()], &s.shape).unwrap(),
+            DType::I32 => {
+                let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&vec![3i32; s.elems()]).reshape(&dims).unwrap()
+            }
+        })
+        .collect();
+    let a = rt.exec("head_step", seq, &lits).unwrap();
+    let bufs = stage_all(&rt, "head_step", seq);
+    // different inputs, so just compare arity + finiteness; exact-value
+    // equivalence of the two paths is covered by using exec() (which routes
+    // through exec_buffers) everywhere else
+    let b = rt.exec_buffers("head_step", seq, &bufs.iter().collect::<Vec<_>>()).unwrap();
+    assert_eq!(a.len(), b.len());
+    assert!(a[0].get_first_element::<f32>().unwrap().is_finite());
+}
+
+#[test]
+fn repeated_execution_does_not_leak() {
+    if !have_artifacts() {
+        eprintln!("skipping");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts_dir(), "bert-tiny").unwrap();
+    let seq = rt.manifest.seq_buckets[0];
+    rt.load("block_fwd", seq).unwrap();
+    // warm
+    for _ in 0..5 {
+        let bufs = stage_all(&rt, "block_fwd", seq);
+        let _ = rt.exec_buffers("block_fwd", seq, &bufs.iter().collect::<Vec<_>>()).unwrap();
+    }
+    let base = rss_kb();
+    for _ in 0..200 {
+        let bufs = stage_all(&rt, "block_fwd", seq);
+        let _ = rt.exec_buffers("block_fwd", seq, &bufs.iter().collect::<Vec<_>>()).unwrap();
+    }
+    let grown = rss_kb().saturating_sub(base);
+    // 200 calls x ~1 MB of I/O each would leak >100 MB on the broken path
+    assert!(grown < 40_000, "rss grew {grown} kB over 200 execs");
+}
+
+#[test]
+fn unknown_artifact_and_bad_arity_error() {
+    if !have_artifacts() {
+        eprintln!("skipping");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts_dir(), "bert-tiny").unwrap();
+    let seq = rt.manifest.seq_buckets[0];
+    assert!(rt.load("nope", seq).is_err());
+    rt.load("embed_fwd", seq).unwrap();
+    assert!(rt.exec("embed_fwd", seq, &[]).is_err());
+}
+
+#[test]
+fn compile_time_recorded() {
+    if !have_artifacts() {
+        eprintln!("skipping");
+        return;
+    }
+    let mut rt = Runtime::new(&artifacts_dir(), "bert-tiny").unwrap();
+    let seq = rt.manifest.seq_buckets[0];
+    rt.load("block_fwd", seq).unwrap();
+    assert!(rt.compile_ms > 0.0);
+    let after_first = rt.compile_ms;
+    rt.load("block_fwd", seq).unwrap(); // cached: no recompile
+    assert_eq!(rt.compile_ms, after_first);
+}
