@@ -1,0 +1,86 @@
+//! Drive the L3 Coordinator state machine directly: watch one training run
+//! move through sheltered collection, the freeze point, responsive cached
+//! execution, and (with `--reshelter`) §4.2 novel-size re-collection.
+//!
+//!   cargo run --release --example coordinator -- --task tc-bert --budget-gb 5.5
+
+use mimose::config::{CoordinatorConfig, MimoseConfig, Task};
+use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
+use mimose::data::InputStream;
+use mimose::model::transformer_profile;
+use mimose::planners::{InputDesc, IterationMode};
+use mimose::util::cli::Cli;
+use mimose::util::{fmt_bytes, GIB};
+
+fn main() {
+    let cli = Cli::new("coordinator", "the online pipeline as an explicit state machine")
+        .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert")
+        .opt("budget-gb", "5.5", "memory budget (GiB)")
+        .opt("iters", "60", "iterations to step through")
+        .opt("seed", "42", "input stream seed")
+        .flag("reshelter", "re-collect novel input sizes after warmup")
+        .parse();
+    let task = Task::parse(&cli.get("task")).expect("unknown task");
+    let budget = (cli.get_f64("budget-gb") * GIB as f64) as u64;
+    let model = task.model();
+
+    let mut coord = Coordinator::new(
+        budget,
+        model.layers + 2,
+        MimoseConfig::default(),
+        CoordinatorConfig {
+            reshelter_on_novel: cli.get_flag("reshelter"),
+            ..Default::default()
+        },
+    );
+    let mut stream = InputStream::new(task, cli.get_u64("seed"));
+
+    println!(
+        "{} @ {} — one iteration per line (phase, plan, planning time)\n",
+        task.name(),
+        fmt_bytes(budget)
+    );
+    for iter in 0..cli.get_usize("iters") {
+        let seq = stream.next_seqlen();
+        let profile = transformer_profile(&model, task.batch(), seq, 1.0);
+        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        let d = coord.begin_iteration(&input, &profile);
+        let (tag, plan_len) = match &d.mode {
+            IterationMode::Sheltered(p) => ("collect", p.len()),
+            IterationMode::Planned(p) => {
+                if d.cache_hit {
+                    ("cached", p.len())
+                } else {
+                    ("replan", p.len())
+                }
+            }
+            IterationMode::Reactive => unreachable!("coordinator never goes reactive"),
+        };
+        println!(
+            "iter {iter:3}  seq {seq:3}  {:<9} {tag:<7} ckpt {plan_len:2}  {:.3} ms",
+            d.phase.to_string(),
+            d.planning_ms
+        );
+        if let IterationMode::Sheltered(_) = d.mode {
+            // the engine would measure these during the shuttling forward
+            let obs = observations_from_profile(&profile, &input, |flops| flops as f64 / 1e9);
+            coord.end_iteration(&input, &obs, 1.0);
+        }
+    }
+
+    let s = coord.stats();
+    println!("\nfinal phase         : {}", s.phase);
+    println!("plans generated     : {}", s.plans_generated);
+    println!("cached input sizes  : {}", s.cache_entries);
+    println!("cache hit rate      : {:.1}%", s.cache_hit_rate * 100.0);
+    println!("estimator train     : {:.3} ms", s.train_ms);
+    println!("replan latency      : {:.3} ms mean / {:.3} ms max", s.replan_ms_mean, s.replan_ms_max);
+    println!("reshelters          : {}", s.reshelters);
+    println!("phase transitions   : {}", s.transitions);
+    for t in coord.transitions().iter().take(12) {
+        println!("  iter {:>4}: {} -> {}", t.iter, t.from, t.to);
+    }
+    if coord.phase() == Phase::Executing {
+        println!("run is warm: responsive execution with cached plans");
+    }
+}

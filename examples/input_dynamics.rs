@@ -7,8 +7,8 @@
 use mimose::config::{MimoseConfig, Task};
 use mimose::data::InputStream;
 use mimose::model::transformer_profile;
+use mimose::coordinator::observations_from_profile;
 use mimose::planners::{InputDesc, IterationMode, MimosePlanner, Planner};
-use mimose::collector::Observation;
 use mimose::util::cli::Cli;
 use mimose::util::stats::Histogram;
 use mimose::util::GIB;
@@ -40,18 +40,7 @@ fn main() {
         let input = InputDesc { batch: task.batch(), seqlen: seq };
         match planner.begin_iteration(&input, &profile).mode {
             IterationMode::Sheltered(_) => {
-                let obs: Vec<Observation> = profile
-                    .layers
-                    .iter()
-                    .map(|l| Observation {
-                        layer: l.id,
-                        input_size: input.size() as f64,
-                        act_bytes: l.act_bytes,
-                        fwd_ms: l.fwd_flops as f64 / 1e9,
-                        self_checkpointed: false,
-                        relative_checkpointed: false,
-                    })
-                    .collect();
+                let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
                 planner.end_iteration(&input, &obs, 1.0);
             }
             _ => break,

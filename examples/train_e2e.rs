@@ -24,7 +24,7 @@ use std::io::Write;
 use std::path::Path;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mimose::util::error::Result<()> {
     let cli = Cli::new("train_e2e", "real PJRT training with the Mimose planner")
         .opt("config", "bert-base", "model config from the AOT manifest")
         .opt("steps", "200", "training steps")

@@ -72,6 +72,20 @@ impl Collector {
         self.frozen = true;
     }
 
+    /// Re-open a frozen collector for `extra` further sheltered iterations.
+    /// The Coordinator uses this when a novel input size appears after the
+    /// warmup window (§4.2: only novel sizes re-trigger shuttling, so the
+    /// amortised collection cost is O(n/N)).
+    pub fn reopen(&mut self, extra: usize) {
+        self.frozen = false;
+        self.max_iters = self.iters_done + extra.max(1);
+    }
+
+    /// Has an input size within ±2% of `input_size` already been collected?
+    pub fn seen(&self, input_size: u64) -> bool {
+        self.seen_sizes.iter().any(|&s| near(s, input_size, 0.02))
+    }
+
     /// Should this iteration run in sheltered (shuttling) mode?
     pub fn wants_collection(&self, input_size: u64) -> bool {
         if self.frozen {
@@ -81,7 +95,7 @@ impl Collector {
             return true;
         }
         // past the warmup window: only shuttle novel input sizes
-        !self.seen_sizes.iter().any(|&s| near(s, input_size, 0.02))
+        !self.seen(input_size)
     }
 
     /// Ingest one sheltered iteration's observations into the estimator.
@@ -108,7 +122,7 @@ impl Collector {
                 },
             );
         }
-        if !self.seen_sizes.iter().any(|&s| near(s, input_size, 0.02)) {
+        if !self.seen(input_size) {
             self.seen_sizes.push(input_size);
         }
         self.iters_done += 1;
@@ -186,6 +200,24 @@ mod tests {
             c.ingest(&mut e, 2000 + i * 100, &[obs(0, false, false)], 1.0);
         }
         assert!(c.is_frozen());
+    }
+
+    #[test]
+    fn reopen_allows_one_more_collection_then_refreezes() {
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, 1000, &[obs(0, false, false)], 1.0);
+        assert!(c.is_frozen());
+        assert!(c.seen(1000));
+        assert!(c.seen(1015), "within 2% counts as seen");
+        assert!(!c.seen(5000));
+        c.reopen(1);
+        assert!(!c.is_frozen());
+        assert!(c.wants_collection(5000));
+        c.ingest(&mut e, 5000, &[obs(0, false, false)], 1.0);
+        assert!(c.is_frozen(), "refreezes after the extra iteration");
+        assert!(c.seen(5000));
+        assert_eq!(e.sample_count(0), 2);
     }
 
     #[test]

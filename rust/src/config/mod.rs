@@ -200,6 +200,33 @@ impl Default for MimoseConfig {
     }
 }
 
+/// Orchestration knobs of the L3 [`Coordinator`](crate::coordinator):
+/// how the sheltered/frozen/executing state machine behaves, as opposed to
+/// the planning parameters in [`MimoseConfig`].
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Re-open sheltered collection for one iteration when an input size
+    /// outside every collected neighbourhood appears after warmup (§4.2's
+    /// amortised novel-size shuttling). Off by default: the classic planner
+    /// behaviour is to trust estimator extrapolation once frozen.
+    pub reshelter_on_novel: bool,
+    /// Record phase [`Transition`](crate::coordinator::Transition)s for
+    /// reporting (`mimose sim` prints them).
+    pub track_transitions: bool,
+    /// Upper bound on recorded transitions (memory guard for long runs).
+    pub max_transitions: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            reshelter_on_novel: false,
+            track_transitions: true,
+            max_transitions: 4096,
+        }
+    }
+}
+
 /// Full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -209,6 +236,7 @@ pub struct ExperimentConfig {
     pub epochs: usize,
     pub seed: u64,
     pub mimose: MimoseConfig,
+    pub coordinator: CoordinatorConfig,
     /// Cap iterations per epoch (0 = full epoch) — for fast benches.
     pub max_iters: usize,
 }
@@ -222,6 +250,7 @@ impl ExperimentConfig {
             epochs: 1,
             seed: 42,
             mimose: MimoseConfig::default(),
+            coordinator: CoordinatorConfig::default(),
             max_iters: 0,
         }
     }
@@ -245,6 +274,12 @@ impl ExperimentConfig {
         cfg.mimose.cache_tolerance = doc.get_f64("mimose.cache_tolerance", 0.05);
         cfg.mimose.reserve_bytes =
             (doc.get_f64("mimose.reserve_gb", 1.0) * GIB as f64) as u64;
+        cfg.coordinator.reshelter_on_novel =
+            doc.get_bool("coordinator.reshelter_on_novel", false);
+        cfg.coordinator.track_transitions =
+            doc.get_bool("coordinator.track_transitions", true);
+        cfg.coordinator.max_transitions =
+            doc.get_usize("coordinator.max_transitions", 4096);
         Ok(cfg)
     }
 
@@ -295,6 +330,20 @@ mod tests {
         assert_eq!(c.planner, PlannerKind::Dtr);
         assert!((c.budget_gb() - 4.5).abs() < 1e-9);
         assert_eq!(c.mimose.collect_iters, 20);
+    }
+
+    #[test]
+    fn coordinator_config_from_toml() {
+        let doc = Doc::parse(
+            "task = \"tc-bert\"\n[coordinator]\nreshelter_on_novel = true\nmax_transitions = 8\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(c.coordinator.reshelter_on_novel);
+        assert!(c.coordinator.track_transitions, "default stays on");
+        assert_eq!(c.coordinator.max_transitions, 8);
+        let d = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
+        assert!(!d.coordinator.reshelter_on_novel, "default off");
     }
 
     #[test]

@@ -1,1 +1,488 @@
-// paper's L3 coordination contribution
+//! The L3 Coordinator: the paper's online-training control loop as an
+//! explicit state machine.
+//!
+//! Mimose's contribution is not any single component but the *composition*
+//! running inside a live training job (§4.1): sheltered collection feeds the
+//! estimator, a freeze point trains it, and responsive execution serves
+//! plans from a cache keyed by input size. This module owns that composition
+//! so engines and planners stop hand-wiring the stages.
+//!
+//! # Phases
+//!
+//! * [`Phase::Sheltered`] — shuttling double-forward measurement (§4.2,
+//!   Fig 7). The iteration runs under the conservative everything-
+//!   checkpointed plan while the [`Collector`] records per-layer
+//!   `(input size, activation bytes, forward ms)` observations, filtered
+//!   per Fig 12 before reaching the [`MemoryEstimator`].
+//! * [`Phase::Frozen`] — the estimator is (re)trained and Algorithm 1
+//!   (§4.4) generates a plan for an input size the [`PlanCache`] has not
+//!   seen; the plan is inserted under the quantised size key. An iteration
+//!   is tagged `Frozen` exactly when it paid a replan.
+//! * [`Phase::Executing`] — responsive execution (§5): the quantised input
+//!   size hits the plan cache and the cached plan is applied with ~µs
+//!   lookup cost.
+//!
+//! A novel input size appearing after the warmup window can re-trigger
+//! sheltered collection (§4.2's O(n/N) amortisation note) when
+//! [`CoordinatorConfig::reshelter_on_novel`] is set; the collector is
+//! re-opened for one iteration and the estimator retrained with the new
+//! sample at the next freeze point.
+//!
+//! Phase changes are recorded as [`Transition`]s, and [`Coordinator::stats`]
+//! snapshots the run counters (cache hit rate, replan latency, reshelter
+//! count) that `metrics::RunReport` and the `mimose sim` CLI report.
+
+use crate::collector::{Collector, Observation};
+use crate::config::{CoordinatorConfig, MimoseConfig};
+use crate::estimator::MemoryEstimator;
+use crate::model::ModelProfile;
+use crate::planners::{
+    checkpointable, usable_activation_budget, InputDesc, IterationMode, PlanDecision,
+};
+use crate::scheduler::{greedy_schedule, LayerEst, Plan, PlanCache};
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// Which stage of the paper's online pipeline an iteration ran in.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Phase {
+    /// Shuttling collection under the conservative plan (§4.2).
+    Sheltered,
+    /// Estimator train + Algorithm 1 replan on a cache miss (§4.3, §4.4).
+    Frozen,
+    /// Cached-plan application — responsive execution (§5).
+    #[default]
+    Executing,
+    /// No up-front plan; reactive eviction on OOM (DTR baseline only —
+    /// never produced by the Coordinator, but engines tag DTR iterations
+    /// with it so reports can partition every iteration by phase).
+    Reactive,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Sheltered => "sheltered",
+            Phase::Frozen => "frozen",
+            Phase::Executing => "executing",
+            Phase::Reactive => "reactive",
+        }
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One recorded phase change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transition {
+    /// 1-based iteration index at which the new phase took effect.
+    pub iter: u64,
+    pub from: Phase,
+    pub to: Phase,
+    /// Input size (batch * seqlen) of the triggering iteration.
+    pub input_size: u64,
+}
+
+/// Counter snapshot for reporting (the Table 2 / §6.3 numbers).
+#[derive(Clone, Debug)]
+pub struct CoordinatorStats {
+    pub phase: Phase,
+    pub iterations: u64,
+    pub plans_generated: u64,
+    pub reshelters: u64,
+    pub cache_entries: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_hit_rate: f64,
+    pub train_ms: f64,
+    pub plan_ms_total: f64,
+    /// Mean / max wall time of cache-miss replans (estimator + Algorithm 1).
+    pub replan_ms_mean: f64,
+    pub replan_ms_max: f64,
+    /// Total phase changes over the run (the recorded log may be shorter
+    /// when `max_transitions` capped it).
+    pub transitions: u64,
+}
+
+/// Round `size` up to the next point of a geometric grid with step
+/// `(1 + tol)` — all sizes in one grid cell share one (conservative) plan.
+pub fn quantize_up(size: u64, tol: f64) -> u64 {
+    if size == 0 {
+        return 0;
+    }
+    let step = (1.0 + tol.max(1e-6)).ln();
+    let cell = ((size as f64).ln() / step).ceil();
+    (cell * step).exp().ceil() as u64
+}
+
+/// Synthesise per-layer collector observations from an analytic profile —
+/// what a sheltered forward would measure on an engine whose ground truth
+/// *is* the profile. `fwd_ms_of` maps layer forward FLOPs to wall ms
+/// (engines pass their cost model; offline planning passes a FLOPs proxy).
+pub fn observations_from_profile<F: Fn(u64) -> f64>(
+    profile: &ModelProfile,
+    input: &InputDesc,
+    fwd_ms_of: F,
+) -> Vec<Observation> {
+    profile
+        .layers
+        .iter()
+        .map(|l| Observation {
+            layer: l.id,
+            input_size: input.size() as f64,
+            act_bytes: l.act_bytes,
+            fwd_ms: fwd_ms_of(l.fwd_flops),
+            // pass one of the shuttling double-forward measures *before*
+            // dropping state, so nothing is polluted by checkpointing
+            // (Fig 7; the Fig 12 filter matters for eager-mode nesting)
+            self_checkpointed: false,
+            relative_checkpointed: false,
+        })
+        .collect()
+}
+
+/// The online-training orchestrator: collector -> estimator -> scheduler ->
+/// cache, behind one `begin_iteration` / `end_iteration` seam.
+pub struct Coordinator {
+    cfg: MimoseConfig,
+    ccfg: CoordinatorConfig,
+    budget: u64,
+    collector: Collector,
+    estimator: MemoryEstimator,
+    cache: PlanCache,
+    phase: Phase,
+    iter: u64,
+    transitions: Vec<Transition>,
+    /// Every phase change, including those the capped log dropped.
+    transitions_seen: u64,
+    replan_ms: Summary,
+    /// Estimator training time accumulated across (re)freezes.
+    pub train_ms: f64,
+    /// Total estimator+scheduler time across the run (Table 2 column).
+    pub plan_ms_total: f64,
+    /// Number of plans generated (cache misses that ran Algorithm 1).
+    pub plans_generated: u64,
+    /// Times a novel input size re-opened sheltered collection (§4.2).
+    pub reshelters: u64,
+    estimator_ready: bool,
+}
+
+impl Coordinator {
+    pub fn new(budget: u64, n_layers: usize, cfg: MimoseConfig, ccfg: CoordinatorConfig) -> Self {
+        Coordinator {
+            collector: Collector::new(cfg.collect_iters),
+            estimator: MemoryEstimator::new(n_layers),
+            cache: PlanCache::new(cfg.cache_tolerance),
+            cfg,
+            ccfg,
+            budget,
+            phase: Phase::Sheltered,
+            iter: 0,
+            transitions: Vec::new(),
+            transitions_seen: 0,
+            replan_ms: Summary::new(),
+            train_ms: 0.0,
+            plan_ms_total: 0.0,
+            plans_generated: 0,
+            reshelters: 0,
+            estimator_ready: false,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iter
+    }
+
+    pub fn collector(&self) -> &Collector {
+        &self.collector
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn estimator(&self) -> &MemoryEstimator {
+        &self.estimator
+    }
+
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        let cs = self.cache.stats();
+        CoordinatorStats {
+            phase: self.phase,
+            iterations: self.iter,
+            plans_generated: self.plans_generated,
+            reshelters: self.reshelters,
+            cache_entries: self.cache.len(),
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+            cache_hit_rate: cs.hit_rate(),
+            train_ms: self.train_ms,
+            plan_ms_total: self.plan_ms_total,
+            replan_ms_mean: if self.replan_ms.count() == 0 { 0.0 } else { self.replan_ms.mean() },
+            replan_ms_max: if self.replan_ms.count() == 0 { 0.0 } else { self.replan_ms.max() },
+            transitions: self.transitions_seen,
+        }
+    }
+
+    fn set_phase(&mut self, to: Phase, input_size: u64) {
+        if self.phase != to {
+            self.transitions_seen += 1;
+            if self.ccfg.track_transitions && self.transitions.len() < self.ccfg.max_transitions {
+                self.transitions.push(Transition { iter: self.iter, from: self.phase, to, input_size });
+            }
+            self.phase = to;
+        }
+    }
+
+    /// Conservative plan for sheltered execution: checkpoint every
+    /// checkpointable layer (the Sublinear-style envelope of §4.2 — memory
+    /// footprint equals the static planner's while we measure).
+    pub fn conservative_plan(profile: &ModelProfile) -> Plan {
+        Plan::of(checkpointable(profile).into_iter().map(|l| l.id))
+    }
+
+    /// Algorithm 1 over *estimated* per-layer bytes.
+    fn generate_plan(&mut self, input_size: u64, profile: &ModelProfile) -> Plan {
+        let layers: Vec<LayerEst> = checkpointable(profile)
+            .into_iter()
+            .map(|mut l| {
+                l.est_bytes = self.estimator.predict_bytes(l.id, input_size as f64) as u64;
+                l
+            })
+            .collect();
+        let est_total: u64 = layers.iter().map(|l| l.est_bytes).sum();
+        let usable = usable_activation_budget(self.budget, profile, self.cfg.reserve_bytes);
+        let excess = est_total.saturating_sub(usable);
+        greedy_schedule(&layers, excess, self.cfg.bucket_tolerance)
+    }
+
+    /// Decide how to run one iteration — the state-machine step.
+    pub fn begin_iteration(&mut self, input: &InputDesc, profile: &ModelProfile) -> PlanDecision {
+        self.iter += 1;
+        let size = input.size();
+        // Quantise the planning size UP to the cache grid so that a cached
+        // plan is always conservative for every input mapped to it (a plan
+        // generated for a slightly smaller input could under-checkpoint).
+        let plan_size = quantize_up(size, self.cfg.cache_tolerance);
+
+        // ---- sheltered execution (§4.2) ----
+        let mut shelter = self.collector.wants_collection(size);
+        if !shelter
+            && self.ccfg.reshelter_on_novel
+            && self.collector.is_frozen()
+            && !self.collector.seen(size)
+        {
+            // novel input size after the warmup window: re-open collection
+            // for one iteration and retrain the estimator at the next freeze.
+            // Cached plans were built from the stale estimator — drop them so
+            // every size replans against the retrained fits (regeneration is
+            // sub-millisecond; cache stats survive a clear).
+            self.collector.reopen(1);
+            self.estimator_ready = false;
+            self.cache.clear();
+            self.reshelters += 1;
+            shelter = true;
+        }
+        if shelter {
+            self.set_phase(Phase::Sheltered, size);
+            return PlanDecision {
+                mode: IterationMode::Sheltered(Self::conservative_plan(profile)),
+                planning_ms: 0.0,
+                cache_hit: false,
+                phase: Phase::Sheltered,
+            };
+        }
+
+        // ---- responsive execution (§4.3-§4.4, §5) ----
+        let t = Timer::start();
+        if !self.estimator_ready {
+            self.train_ms += self.estimator.train();
+            self.estimator_ready = true;
+        }
+        if let Some(plan) = self.cache.lookup_exact(plan_size) {
+            let planning_ms = t.elapsed_ms();
+            self.plan_ms_total += planning_ms;
+            self.set_phase(Phase::Executing, size);
+            return PlanDecision {
+                mode: IterationMode::Planned(plan),
+                planning_ms,
+                cache_hit: true,
+                phase: Phase::Executing,
+            };
+        }
+        let plan = self.generate_plan(plan_size, profile);
+        self.cache.insert(plan_size, plan.clone());
+        self.plans_generated += 1;
+        let planning_ms = t.elapsed_ms();
+        self.plan_ms_total += planning_ms;
+        self.replan_ms.add(planning_ms);
+        self.set_phase(Phase::Frozen, size);
+        PlanDecision {
+            mode: IterationMode::Planned(plan),
+            planning_ms,
+            cache_hit: false,
+            phase: Phase::Frozen,
+        }
+    }
+
+    /// Feed back one iteration's sheltered observations (no-op once frozen).
+    pub fn end_iteration(&mut self, input: &InputDesc, obs: &[Observation], extra_fwd_ms: f64) {
+        if !self.collector.is_frozen() && !obs.is_empty() {
+            self.collector.ingest(&mut self.estimator, input.size(), obs, extra_fwd_ms);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::model::transformer_profile;
+    use crate::util::GIB;
+
+    fn spec() -> ModelSpec {
+        ModelSpec::bert_base()
+    }
+
+    fn coord(reshelter: bool) -> Coordinator {
+        Coordinator::new(
+            6 * GIB,
+            14,
+            MimoseConfig::default(),
+            CoordinatorConfig { reshelter_on_novel: reshelter, ..Default::default() },
+        )
+    }
+
+    /// Run one sheltered iteration at the given seqlen.
+    fn shelter_once(c: &mut Coordinator, seq: usize) {
+        let profile = transformer_profile(&spec(), 32, seq, 1.0);
+        let input = InputDesc { batch: 32, seqlen: seq };
+        let dec = c.begin_iteration(&input, &profile);
+        assert!(matches!(dec.mode, IterationMode::Sheltered(_)), "seq {seq} not sheltered");
+        let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
+        c.end_iteration(&input, &obs, 1.0);
+    }
+
+    fn warmup(c: &mut Coordinator) {
+        // 10 distinct sizes spanning the TC-Bert range
+        for seq in [60, 90, 120, 150, 180, 210, 240, 270, 300, 330] {
+            shelter_once(c, seq);
+        }
+        assert!(c.collector().is_frozen());
+    }
+
+    #[test]
+    fn phases_progress_sheltered_frozen_executing() {
+        let mut c = coord(false);
+        assert_eq!(c.phase(), Phase::Sheltered);
+        warmup(&mut c);
+        let profile = transformer_profile(&spec(), 32, 200, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 200 };
+        let d = c.begin_iteration(&input, &profile);
+        assert_eq!(d.phase, Phase::Frozen);
+        assert!(!d.cache_hit);
+        let d = c.begin_iteration(&input, &profile);
+        assert_eq!(d.phase, Phase::Executing);
+        assert!(d.cache_hit);
+        // transitions recorded in order
+        let names: Vec<&str> = c.transitions().iter().map(|t| t.to.name()).collect();
+        assert_eq!(names, vec!["frozen", "executing"]);
+        assert_eq!(c.stats().transitions, 2);
+    }
+
+    #[test]
+    fn novel_size_reshelters_when_enabled() {
+        let mut c = coord(true);
+        warmup(&mut c);
+        // known size: responsive
+        let profile = transformer_profile(&spec(), 32, 300, 1.0);
+        let d = c.begin_iteration(&InputDesc { batch: 32, seqlen: 300 }, &profile);
+        assert!(matches!(d.mode, IterationMode::Planned(_)));
+        // novel size (far from every collected size): re-shelters once
+        let profile = transformer_profile(&spec(), 32, 512, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 512 };
+        let d = c.begin_iteration(&input, &profile);
+        assert_eq!(d.phase, Phase::Sheltered);
+        let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
+        c.end_iteration(&input, &obs, 1.0);
+        assert_eq!(c.reshelters, 1);
+        assert!(c.collector().is_frozen(), "one-shot reshelter must refreeze");
+        // same size again: now known, responsive
+        let d = c.begin_iteration(&input, &profile);
+        assert!(matches!(d.mode, IterationMode::Planned(_)));
+    }
+
+    #[test]
+    fn novel_size_does_not_reshelter_when_disabled() {
+        let mut c = coord(false);
+        warmup(&mut c);
+        let profile = transformer_profile(&spec(), 32, 512, 1.0);
+        let d = c.begin_iteration(&InputDesc { batch: 32, seqlen: 512 }, &profile);
+        assert!(matches!(d.mode, IterationMode::Planned(_)));
+        assert_eq!(c.reshelters, 0);
+    }
+
+    #[test]
+    fn stats_snapshot_tracks_cache_and_replans() {
+        let mut c = coord(false);
+        warmup(&mut c);
+        let profile = transformer_profile(&spec(), 32, 250, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 250 };
+        let _ = c.begin_iteration(&input, &profile); // miss -> replan
+        let _ = c.begin_iteration(&input, &profile); // hit
+        let s = c.stats();
+        assert_eq!(s.plans_generated, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+        assert!((s.cache_hit_rate - 0.5).abs() < 1e-9);
+        assert!(s.replan_ms_max >= s.replan_ms_mean);
+        assert!(s.train_ms >= 0.0 && s.plan_ms_total >= 0.0);
+        assert_eq!(s.iterations, 12);
+    }
+
+    #[test]
+    fn quantize_up_is_monotone_and_conservative() {
+        for &tol in &[0.02, 0.05, 0.1] {
+            let mut prev = 0;
+            for size in [1u64, 7, 100, 1000, 9600, 10_624, 1 << 20] {
+                let q = quantize_up(size, tol);
+                assert!(q >= size, "quantized below input");
+                assert!(q >= prev, "not monotone");
+                // never more than one grid step above the input
+                assert!(q as f64 <= size as f64 * (1.0 + tol) + 1.0, "{size} -> {q} (tol {tol})");
+                prev = q;
+            }
+        }
+        assert_eq!(quantize_up(0, 0.05), 0);
+    }
+
+    #[test]
+    fn transition_log_capped() {
+        let mut c = Coordinator::new(
+            6 * GIB,
+            14,
+            MimoseConfig::default(),
+            CoordinatorConfig { max_transitions: 1, ..Default::default() },
+        );
+        warmup(&mut c);
+        let profile = transformer_profile(&spec(), 32, 200, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 200 };
+        let _ = c.begin_iteration(&input, &profile);
+        let _ = c.begin_iteration(&input, &profile);
+        assert_eq!(c.transitions().len(), 1, "log must respect the cap");
+        assert_eq!(c.stats().transitions, 2, "total still counts dropped entries");
+        assert_eq!(c.phase(), Phase::Executing, "phase still advances");
+    }
+}

@@ -7,7 +7,8 @@
 //!   per section: u16 name_len, name bytes, u64 elem count, fnv64 of data,
 //!                f32 data (LE)
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 use std::io::{Read, Write};
 use std::path::Path;
 

@@ -1,9 +1,11 @@
 //! Training engines: `SimEngine` (cost-model clock over the memory
 //! simulator; drives every paper sweep) and `RealEngine` (PJRT execution of
-//! the AOT artifacts with real block-level checkpointing).
+//! the AOT artifacts with real block-level checkpointing; requires the
+//! `pjrt` feature and the external `xla` bindings it links).
 
 pub mod checkpoint_io;
 pub mod optimizer;
+#[cfg(feature = "pjrt")]
 pub mod real;
 pub mod sim;
 pub mod vision;

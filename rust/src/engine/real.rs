@@ -12,7 +12,8 @@ use super::optimizer::{Adam, AdamConfig};
 use crate::data::bucket_for;
 use crate::runtime::Runtime;
 use crate::scheduler::Plan;
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;

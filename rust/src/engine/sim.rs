@@ -6,8 +6,8 @@
 //! TC-Bert × 4 planners × 6 budgets simulates in seconds, which is what
 //! regenerating Figs 4/5/13/14 and Table 2 requires.
 
-use crate::collector::Observation;
 use crate::config::{ExperimentConfig, PlannerKind, Task};
+use crate::coordinator::{observations_from_profile, Coordinator};
 use crate::data::InputStream;
 use crate::memory::{Ledger, OomError, TensorClass, TensorId};
 use crate::metrics::{IterationMetrics, RunReport};
@@ -61,11 +61,12 @@ pub fn make_planner(cfg: &ExperimentConfig) -> Box<dyn Planner> {
             transformer_profile(&model, cfg.task.batch(), max_seq, xlnet_factor(cfg.task)),
         )),
         PlannerKind::Dtr => Box::new(DtrPlanner::new()),
-        PlannerKind::Mimose => Box::new(MimosePlanner::new(
+        PlannerKind::Mimose => Box::new(MimosePlanner::with_coordinator(Coordinator::new(
             cfg.budget_bytes,
             model.layers + 2,
             cfg.mimose.clone(),
-        )),
+            cfg.coordinator.clone(),
+        ))),
     }
 }
 
@@ -97,11 +98,22 @@ pub struct SimEngine {
     component_cache: std::collections::BTreeMap<usize, std::rc::Rc<Vec<Vec<u64>>>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("fixed model state does not fit the budget: {0:?}")]
     FixedStateOom(OomError),
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::FixedStateOom(e) => {
+                write!(f, "fixed model state does not fit the budget: {e:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 impl SimEngine {
     pub fn new(cfg: ExperimentConfig) -> Result<Self, SimError> {
@@ -130,6 +142,11 @@ impl SimEngine {
 
     pub fn planner(&self) -> &dyn Planner {
         self.planner.as_ref()
+    }
+
+    /// The Coordinator behind the planner, when Mimose drives this run.
+    pub fn coordinator(&self) -> Option<&Coordinator> {
+        self.planner.coordinator()
     }
 
     /// Run one epoch (or `cfg.max_iters`), returning the aggregated report.
@@ -162,6 +179,7 @@ impl SimEngine {
             seqlen,
             planning_ms: decision.planning_ms,
             cache_hit: decision.cache_hit,
+            phase: decision.phase,
             ..Default::default()
         };
 
@@ -195,25 +213,11 @@ impl SimEngine {
 
         // collector bookkeeping (sheltered double-forward, §4.2)
         if sheltered && ok {
+            let cost = self.cost;
             let fwd_ms: f64 =
-                profile.layers.iter().map(|l| self.cost.layer_ms(l.fwd_flops)).sum();
+                profile.layers.iter().map(|l| cost.layer_ms(l.fwd_flops)).sum();
             m.collector_ms = fwd_ms; // the duplicated forward pass
-            let obs: Vec<Observation> = profile
-                .layers
-                .iter()
-                .map(|l| Observation {
-                    layer: l.id,
-                    input_size: input.size() as f64,
-                    act_bytes: l.act_bytes,
-                    fwd_ms: self.cost.layer_ms(l.fwd_flops),
-                    // the shuttling collector measures pass one, *before*
-                    // dropping — per-layer data is valid (Fig 7); the Fig 12
-                    // filter matters for eager-mode nesting, exercised in
-                    // collector unit tests
-                    self_checkpointed: false,
-                    relative_checkpointed: false,
-                })
-                .collect();
+            let obs = observations_from_profile(&profile, &input, |flops| cost.layer_ms(flops));
             self.planner.end_iteration(&input, &obs, fwd_ms);
         }
 

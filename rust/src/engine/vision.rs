@@ -10,8 +10,8 @@
 //! engine reuses them unmodified — the InputDesc "seqlen" field carries the
 //! image side.
 
-use crate::collector::Observation;
 use crate::config::{MimoseConfig, PlannerKind};
+use crate::coordinator::observations_from_profile;
 use crate::metrics::{IterationMetrics, RunReport};
 use crate::model::vision::SwinSpec;
 use crate::model::ModelProfile;
@@ -142,18 +142,10 @@ impl VisionSimEngine {
                     let mut m = self.apply(&profile, plan);
                     m.collector_ms =
                         profile.fwd_flops() as f64 * self.sec_per_flop * 1e3;
-                    let obs: Vec<Observation> = profile
-                        .layers
-                        .iter()
-                        .map(|l| Observation {
-                            layer: l.id,
-                            input_size: input.size() as f64,
-                            act_bytes: l.act_bytes,
-                            fwd_ms: l.fwd_flops as f64 * self.sec_per_flop * 1e3,
-                            self_checkpointed: false,
-                            relative_checkpointed: false,
-                        })
-                        .collect();
+                    let spf = self.sec_per_flop;
+                    let obs = observations_from_profile(&profile, &input, |flops| {
+                        flops as f64 * spf * 1e3
+                    });
                     self.planner.end_iteration(&input, &obs, m.collector_ms);
                     m
                 }
@@ -161,6 +153,7 @@ impl VisionSimEngine {
             };
             m.planning_ms = decision.planning_ms;
             m.cache_hit = decision.cache_hit;
+            m.phase = decision.phase;
             report.push(m);
         }
         report

@@ -7,11 +7,44 @@
 //! training runtime — planners, memory simulator, estimators, scheduler,
 //! data pipeline, PJRT execution — with Python never on the hot path.
 //!
+//! ## The Coordinator state machine
+//!
+//! The [`coordinator`] module owns the paper's online pipeline. One training
+//! run moves through three phases, per iteration:
+//!
+//! ```text
+//!             novel input size (§4.2, reshelter_on_novel)
+//!        +--------------------------<---------------------------+
+//!        v                                                      |
+//!  [Sheltered] --collector freezes--> [Frozen] --cache hit--> [Executing]
+//!   §4.2 Fig 7    train estimator §4.3   ^  plan + insert §4.4    |
+//!   shuttling     run Algorithm 1        +-----cache miss---------+
+//!   double-fwd    on cache miss                 (§5 plan cache)
+//! ```
+//!
+//! * **Sheltered** (§4.2): iterations run the conservative everything-
+//!   checkpointed plan while the shuttling collector measures per-layer
+//!   activation bytes and forward time, filtered per Fig 12.
+//! * **Frozen** (§4.3–§4.4): at the first responsive iteration the lightning
+//!   estimator is trained (quadratic per-layer fits); any iteration whose
+//!   quantised input size misses the plan cache replans with Algorithm 1 and
+//!   is tagged `Frozen`.
+//! * **Executing** (§5): the input size hits the cache and the stored plan
+//!   is applied with microsecond lookup cost — responsive execution.
+//!
+//! Engines talk to the pipeline through [`planners::Planner`];
+//! [`planners::MimosePlanner`] is a thin adapter over
+//! [`coordinator::Coordinator`], and [`metrics::RunReport`] carries the
+//! per-phase accounting (cache hit rate, replan latency) the `mimose sim`
+//! CLI reports.
+//!
 //! See DESIGN.md for the architecture and the paper-experiment index, and
-//! `examples/` for runnable entry points.
+//! `examples/` for runnable entry points (`examples/coordinator.rs` drives
+//! the state machine directly).
 
 pub mod collector;
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod estimator;

@@ -12,11 +12,12 @@
 //!   mimose sweep --task qa-bert --lo 4 --hi 7 --points 4
 //!   mimose plan --task tc-bert --budget-gb 5 --seqlen 300
 
-use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
+use mimose::config::{CoordinatorConfig, ExperimentConfig, MimoseConfig, PlannerKind, Task};
+use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
 use mimose::engine::sim::SimEngine;
 use mimose::metrics::RunReport;
 use mimose::model::transformer_profile;
-use mimose::planners::{InputDesc, IterationMode, MimosePlanner, Planner};
+use mimose::planners::{InputDesc, IterationMode};
 use mimose::util::cli::Cli;
 use mimose::util::{fmt_bytes, GIB};
 
@@ -65,9 +66,43 @@ fn report_summary(r: &RunReport) {
     println!("  planning share    : {:.3}%", r.planning_share() * 100.0);
     println!("  collector total   : {:.1} ms", r.collector_ms());
     println!("  cache hit rate    : {:.1}%", r.cache_hit_rate() * 100.0);
+    println!(
+        "  phases            : {} sheltered / {} frozen / {} executing / {} reactive",
+        r.phase_count(Phase::Sheltered),
+        r.phase_count(Phase::Frozen),
+        r.phase_count(Phase::Executing),
+        r.phase_count(Phase::Reactive),
+    );
+    if r.phase_count(Phase::Frozen) > 0 {
+        println!(
+            "  replan latency    : {:.3} ms mean / {:.3} ms max",
+            r.replan_ms_mean(),
+            r.replan_ms_max()
+        );
+    }
     println!("  peak memory       : {}", fmt_bytes(r.peak_bytes()));
     println!("  max fragmentation : {}", fmt_bytes(r.max_frag_bytes()));
     println!("  OOM failures      : {}", r.oom_failures());
+}
+
+/// Print the Coordinator's phase-transition log (first `max` entries).
+fn report_transitions(c: &Coordinator, max: usize) {
+    let ts = c.transitions();
+    if ts.is_empty() {
+        return;
+    }
+    let s = c.stats();
+    println!("  phase transitions ({} total, {} recorded):", s.transitions, ts.len());
+    for t in ts.iter().take(max) {
+        println!("    iter {:>5}: {} -> {} (input size {})", t.iter, t.from, t.to, t.input_size);
+    }
+    if ts.len() > max {
+        println!("    ... {} more recorded", ts.len() - max);
+    }
+    println!(
+        "  coordinator       : {} plans generated, {} reshelters, {} cached sizes",
+        s.plans_generated, s.reshelters, s.cache_entries
+    );
 }
 
 fn cmd_sim(args: &[String]) {
@@ -81,6 +116,7 @@ fn cmd_sim(args: &[String]) {
             .opt("seed", "42", "rng seed")
             .opt("collect-iters", "10", "Mimose sheltered iterations")
             .opt("reserve-gb", "1.0", "Mimose fragmentation reserve (GiB)")
+            .flag("reshelter", "re-collect novel input sizes after warmup (§4.2)")
             .opt("tsv", "", "append a TSV row to this file"),
         args,
     );
@@ -106,6 +142,10 @@ fn cmd_sim(args: &[String]) {
             reserve_bytes: (cli.get_f64("reserve-gb") * GIB as f64) as u64,
             ..Default::default()
         };
+        c.coordinator = CoordinatorConfig {
+            reshelter_on_novel: cli.get_flag("reshelter"),
+            ..Default::default()
+        };
         c
     };
     println!(
@@ -119,6 +159,9 @@ fn cmd_sim(args: &[String]) {
         Ok(mut e) => {
             let r = e.run_epoch();
             report_summary(&r);
+            if let Some(c) = e.coordinator() {
+                report_transitions(c, 8);
+            }
             let tsv = cli.get("tsv");
             if !tsv.is_empty() {
                 let new = !std::path::Path::new(&tsv).exists();
@@ -198,35 +241,29 @@ fn cmd_plan(args: &[String]) {
     let task = Task::parse(&cli.get("task")).expect("unknown task");
     let budget = (cli.get_f64("budget-gb") * GIB as f64) as u64;
     let model = task.model();
-    let mut planner = MimosePlanner::new(budget, model.layers + 2, MimoseConfig::default());
+    let mut coord = Coordinator::new(
+        budget,
+        model.layers + 2,
+        MimoseConfig::default(),
+        CoordinatorConfig::default(),
+    );
 
     // sheltered execution over the task's own distribution
     let mut stream = mimose::data::InputStream::new(task, cli.get_u64("seed"));
-    while !planner.collector().is_frozen() {
+    while !coord.collector().is_frozen() {
         let seq = stream.next_seqlen();
         let profile = transformer_profile(&model, task.batch(), seq, 1.0);
         let input = InputDesc { batch: task.batch(), seqlen: seq };
-        if let IterationMode::Sheltered(_) = planner.begin_iteration(&input, &profile).mode {
-            let obs: Vec<mimose::collector::Observation> = profile
-                .layers
-                .iter()
-                .map(|l| mimose::collector::Observation {
-                    layer: l.id,
-                    input_size: input.size() as f64,
-                    act_bytes: l.act_bytes,
-                    fwd_ms: l.fwd_flops as f64 / 1e9,
-                    self_checkpointed: false,
-                    relative_checkpointed: false,
-                })
-                .collect();
-            planner.end_iteration(&input, &obs, 1.0);
+        if let IterationMode::Sheltered(_) = coord.begin_iteration(&input, &profile).mode {
+            let obs = observations_from_profile(&profile, &input, |flops| flops as f64 / 1e9);
+            coord.end_iteration(&input, &obs, 1.0);
         }
     }
 
     let seq = cli.get_usize("seqlen");
     let profile = transformer_profile(&model, task.batch(), seq, 1.0);
     let input = InputDesc { batch: task.batch(), seqlen: seq };
-    let d = planner.begin_iteration(&input, &profile);
+    let d = coord.begin_iteration(&input, &profile);
     println!(
         "{} @ {:.1} GB, seqlen {seq} (input size {}):",
         task.name(),

@@ -3,6 +3,7 @@
 
 pub mod trace;
 
+use crate::coordinator::Phase;
 use crate::util::stats::{Percentiles, Summary};
 
 /// Where one simulated iteration's time went.
@@ -26,6 +27,9 @@ pub struct IterationMetrics {
     pub oom_failed: bool,
     /// Number of layers checkpointed / tensors evicted.
     pub n_checkpointed: usize,
+    /// Coordinator phase this iteration ran in (Executing for static
+    /// planners, Reactive for DTR).
+    pub phase: Phase,
 }
 
 impl IterationMetrics {
@@ -90,6 +94,35 @@ impl RunReport {
         self.iters.iter().filter(|m| m.cache_hit).count() as f64 / self.iters.len() as f64
     }
 
+    /// Iterations that ran in the given Coordinator phase.
+    pub fn phase_count(&self, phase: Phase) -> usize {
+        self.iters.iter().filter(|m| m.phase == phase).count()
+    }
+
+    /// Mean wall time of replanning iterations (phase Frozen: estimator +
+    /// Algorithm 1 on a cache miss) — the paper's responsiveness claim.
+    pub fn replan_ms_mean(&self) -> f64 {
+        let (mut sum, mut n) = (0.0, 0usize);
+        for m in self.iters.iter().filter(|m| m.phase == Phase::Frozen) {
+            sum += m.planning_ms;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Worst-case replan latency, ms.
+    pub fn replan_ms_max(&self) -> f64 {
+        self.iters
+            .iter()
+            .filter(|m| m.phase == Phase::Frozen)
+            .map(|m| m.planning_ms)
+            .fold(0.0, f64::max)
+    }
+
     /// Mean iteration time, ms.
     pub fn mean_iter_ms(&self) -> f64 {
         if self.iters.is_empty() {
@@ -137,7 +170,7 @@ impl RunReport {
     /// One TSV row (bench harness output; header in `tsv_header`).
     pub fn tsv_row(&self) -> String {
         format!(
-            "{}\t{:.2}\t{:.1}\t{:.1}\t{:.1}\t{:.3}\t{:.1}\t{}\t{:.3}\t{:.3}\t{}",
+            "{}\t{:.2}\t{:.1}\t{:.1}\t{:.1}\t{:.3}\t{:.1}\t{}\t{:.3}\t{:.3}\t{}\t{}/{}/{}/{}\t{:.4}",
             self.planner,
             self.budget_bytes as f64 / crate::util::GIB as f64,
             self.total_ms(),
@@ -149,11 +182,16 @@ impl RunReport {
             self.cache_hit_rate(),
             self.planning_share(),
             self.oom_failures(),
+            self.phase_count(Phase::Sheltered),
+            self.phase_count(Phase::Frozen),
+            self.phase_count(Phase::Executing),
+            self.phase_count(Phase::Reactive),
+            self.replan_ms_mean(),
         )
     }
 
     pub fn tsv_header() -> &'static str {
-        "planner\tbudget_gb\ttotal_ms\tcompute_ms\trecompute_ms\tplanning_ms\tcollector_ms\tpeak_bytes\tcache_hit_rate\tplanning_share\toom_failures"
+        "planner\tbudget_gb\ttotal_ms\tcompute_ms\trecompute_ms\tplanning_ms\tcollector_ms\tpeak_bytes\tcache_hit_rate\tplanning_share\toom_failures\tphases_s/f/e/r\treplan_mean_ms"
     }
 }
 
@@ -194,5 +232,22 @@ mod tests {
         assert_eq!(r.mean_iter_ms(), 0.0);
         assert_eq!(r.peak_bytes(), 0);
         assert_eq!(r.cache_hit_rate(), 0.0);
+        assert_eq!(r.replan_ms_mean(), 0.0);
+        assert_eq!(r.replan_ms_max(), 0.0);
+    }
+
+    #[test]
+    fn phase_accounting_and_replan_latency() {
+        let mut r = RunReport::new("mimose", 6 << 30);
+        r.push(IterationMetrics { phase: Phase::Sheltered, ..Default::default() });
+        r.push(IterationMetrics { phase: Phase::Frozen, planning_ms: 0.4, ..Default::default() });
+        r.push(IterationMetrics { phase: Phase::Frozen, planning_ms: 0.2, ..Default::default() });
+        r.push(IterationMetrics { phase: Phase::Executing, planning_ms: 0.001, ..Default::default() });
+        assert_eq!(r.phase_count(Phase::Sheltered), 1);
+        assert_eq!(r.phase_count(Phase::Frozen), 2);
+        assert_eq!(r.phase_count(Phase::Executing), 1);
+        assert_eq!(r.phase_count(Phase::Reactive), 0);
+        assert!((r.replan_ms_mean() - 0.3).abs() < 1e-12);
+        assert!((r.replan_ms_max() - 0.4).abs() < 1e-12);
     }
 }

@@ -9,6 +9,7 @@
 //! paper measures in Fig 5 (4.40% avg, 6.06% max of iteration time).
 
 use super::{InputDesc, IterationMode, OomResponse, PlanDecision, Planner};
+use crate::coordinator::Phase;
 use crate::memory::{Ledger, TensorId};
 use crate::model::ModelProfile;
 
@@ -64,7 +65,12 @@ impl Planner for DtrPlanner {
         let tracking_ms =
             profile.layers.len() as f64 * self.ops_per_layer * self.track_cost_us_per_op / 1e3;
         self.planning_ms_total += tracking_ms;
-        PlanDecision { mode: IterationMode::Reactive, planning_ms: tracking_ms, cache_hit: false }
+        PlanDecision {
+            mode: IterationMode::Reactive,
+            planning_ms: tracking_ms,
+            cache_hit: false,
+            phase: Phase::Reactive,
+        }
     }
 
     fn on_oom(&mut self, ledger: &Ledger, needed: u64) -> OomResponse {

@@ -1,100 +1,51 @@
-//! The Mimose planner (paper §4): shuttling collector + lightning estimator
-//! + responsive scheduler + plan cache, composed behind the `Planner` trait.
+//! The Mimose planner (paper §4): the [`Planner`] trait adapter over the L3
+//! [`Coordinator`], which owns the shuttling collector + lightning estimator
+//! + responsive scheduler + plan cache composition.
 //!
 //! Timeline per §4.1: iterations in *sheltered execution* run the
 //! conservative plan and collect per-layer data; once the collector freezes
 //! the estimator is trained and *responsive execution* begins — cache lookup
 //! first, Algorithm 1 on miss, all in well under a millisecond (Table 2).
+//! The orchestration itself (phase state machine, transitions, reshelter
+//! policy) lives in [`crate::coordinator`]; this type only speaks the engine
+//! protocol. `Deref` exposes the Coordinator's counters and accessors, so
+//! `planner.plans_generated` / `planner.cache()` keep working as before the
+//! refactor.
 
-use super::{
-    checkpointable, usable_activation_budget, InputDesc, IterationMode, PlanDecision, Planner,
-};
-use crate::collector::{Collector, Observation};
-use crate::config::MimoseConfig;
-use crate::estimator::MemoryEstimator;
-use crate::model::{LayerKind, ModelProfile};
-use crate::scheduler::{greedy_schedule, LayerEst, Plan, PlanCache};
-use crate::util::timer::Timer;
+use super::{InputDesc, PlanDecision, Planner};
+use crate::collector::Observation;
+use crate::config::{CoordinatorConfig, MimoseConfig};
+use crate::coordinator::Coordinator;
+use crate::model::ModelProfile;
 
-/// Round `size` up to the next point of a geometric grid with step
-/// `(1 + tol)` — all sizes in one grid cell share one (conservative) plan.
-pub fn quantize_up(size: u64, tol: f64) -> u64 {
-    if size == 0 {
-        return 0;
-    }
-    let step = (1.0 + tol.max(1e-6)).ln();
-    let cell = ((size as f64).ln() / step).ceil();
-    (cell * step).exp().ceil() as u64
-}
+// Re-exported for callers that used the planner-local definition before the
+// Coordinator refactor moved it.
+pub use crate::coordinator::quantize_up;
 
-pub struct MimosePlanner {
-    cfg: MimoseConfig,
-    budget: u64,
-    collector: Collector,
-    estimator: MemoryEstimator,
-    cache: PlanCache,
-    /// Estimator training time (once, at the sheltered->responsive switch).
-    pub train_ms: f64,
-    /// Total estimator+scheduler time across the run (Table 2 column).
-    pub plan_ms_total: f64,
-    /// Number of plans generated (cache misses that ran Algorithm 1).
-    pub plans_generated: u64,
-    estimator_ready: bool,
-}
+pub struct MimosePlanner(Coordinator);
 
 impl MimosePlanner {
     pub fn new(budget: u64, n_layers: usize, cfg: MimoseConfig) -> Self {
-        MimosePlanner {
-            collector: Collector::new(cfg.collect_iters),
-            estimator: MemoryEstimator::new(n_layers),
-            cache: PlanCache::new(cfg.cache_tolerance),
-            cfg,
-            budget,
-            train_ms: 0.0,
-            plan_ms_total: 0.0,
-            plans_generated: 0,
-            estimator_ready: false,
-        }
+        MimosePlanner(Coordinator::new(budget, n_layers, cfg, CoordinatorConfig::default()))
     }
 
-    pub fn collector(&self) -> &Collector {
-        &self.collector
+    /// Wrap a pre-configured Coordinator (custom `CoordinatorConfig`).
+    pub fn with_coordinator(coordinator: Coordinator) -> Self {
+        MimosePlanner(coordinator)
     }
+}
 
-    pub fn cache(&self) -> &PlanCache {
-        &self.cache
+impl std::ops::Deref for MimosePlanner {
+    type Target = Coordinator;
+
+    fn deref(&self) -> &Coordinator {
+        &self.0
     }
+}
 
-    pub fn estimator(&self) -> &MemoryEstimator {
-        &self.estimator
-    }
-
-    /// Conservative plan for sheltered execution: checkpoint every block
-    /// (the Sublinear-style envelope of §4.2 — memory footprint equals the
-    /// static planner's while we measure).
-    fn conservative_plan(profile: &ModelProfile) -> Plan {
-        Plan::of(
-            profile
-                .layers
-                .iter()
-                .filter(|l| l.kind != LayerKind::Head && l.savings() > 0)
-                .map(|l| l.id),
-        )
-    }
-
-    /// Algorithm 1 over *estimated* per-layer bytes.
-    fn generate_plan(&mut self, input_size: u64, profile: &ModelProfile) -> Plan {
-        let layers: Vec<LayerEst> = checkpointable(profile)
-            .into_iter()
-            .map(|mut l| {
-                l.est_bytes = self.estimator.predict_bytes(l.id, input_size as f64) as u64;
-                l
-            })
-            .collect();
-        let est_total: u64 = layers.iter().map(|l| l.est_bytes).sum();
-        let usable = usable_activation_budget(self.budget, profile, self.cfg.reserve_bytes);
-        let excess = est_total.saturating_sub(usable);
-        greedy_schedule(&layers, excess, self.cfg.bucket_tolerance)
+impl std::ops::DerefMut for MimosePlanner {
+    fn deref_mut(&mut self) -> &mut Coordinator {
+        &mut self.0
     }
 }
 
@@ -104,44 +55,15 @@ impl Planner for MimosePlanner {
     }
 
     fn begin_iteration(&mut self, input: &InputDesc, profile: &ModelProfile) -> PlanDecision {
-        let size = input.size();
-        // Quantise the planning size UP to the cache grid so that a cached
-        // plan is always conservative for every input mapped to it (a plan
-        // generated for a slightly smaller input could under-checkpoint).
-        let plan_size = quantize_up(size, self.cfg.cache_tolerance);
-
-        // ---- sheltered execution ----
-        if self.collector.wants_collection(size) {
-            return PlanDecision {
-                mode: IterationMode::Sheltered(Self::conservative_plan(profile)),
-                planning_ms: 0.0,
-                cache_hit: false,
-            };
-        }
-
-        // ---- responsive execution ----
-        let t = Timer::start();
-        if !self.estimator_ready {
-            self.train_ms = self.estimator.train();
-            self.estimator_ready = true;
-        }
-        if let Some(plan) = self.cache.lookup_exact(plan_size) {
-            let planning_ms = t.elapsed_ms();
-            self.plan_ms_total += planning_ms;
-            return PlanDecision { mode: IterationMode::Planned(plan), planning_ms, cache_hit: true };
-        }
-        let plan = self.generate_plan(plan_size, profile);
-        self.cache.insert(plan_size, plan.clone());
-        self.plans_generated += 1;
-        let planning_ms = t.elapsed_ms();
-        self.plan_ms_total += planning_ms;
-        PlanDecision { mode: IterationMode::Planned(plan), planning_ms, cache_hit: false }
+        self.0.begin_iteration(input, profile)
     }
 
     fn end_iteration(&mut self, input: &InputDesc, obs: &[Observation], extra_fwd_ms: f64) {
-        if !self.collector.is_frozen() && !obs.is_empty() {
-            self.collector.ingest(&mut self.estimator, input.size(), obs, extra_fwd_ms);
-        }
+        self.0.end_iteration(input, obs, extra_fwd_ms)
+    }
+
+    fn coordinator(&self) -> Option<&Coordinator> {
+        Some(&self.0)
     }
 }
 
@@ -150,6 +72,7 @@ mod tests {
     use super::*;
     use crate::config::ModelSpec;
     use crate::model::transformer_profile;
+    use crate::planners::{usable_activation_budget, IterationMode};
     use crate::util::rng::Rng;
     use crate::util::GIB;
 
@@ -282,5 +205,13 @@ mod tests {
         let _ = p.begin_iteration(&InputDesc { batch: 32, seqlen: 300 }, &profile);
         let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 311 }, &profile);
         assert!(dec.planning_ms < 1.0, "planning took {} ms", dec.planning_ms);
+    }
+
+    #[test]
+    fn trait_object_exposes_coordinator() {
+        let p = MimosePlanner::new(5 * GIB, 14, MimoseConfig::default());
+        let obj: &dyn Planner = &p;
+        assert!(obj.coordinator().is_some());
+        assert_eq!(obj.coordinator().unwrap().iterations(), 0);
     }
 }

@@ -16,6 +16,7 @@ pub use dtr::DtrPlanner;
 pub use mimose::MimosePlanner;
 
 use crate::collector::Observation;
+use crate::coordinator::{Coordinator, Phase};
 use crate::memory::{Ledger, TensorId};
 use crate::model::{LayerKind, ModelProfile};
 use crate::scheduler::{greedy_schedule, LayerEst, Plan};
@@ -53,6 +54,9 @@ pub struct PlanDecision {
     /// Table 2 "Estimator & Scheduler" column, measured for real.
     pub planning_ms: f64,
     pub cache_hit: bool,
+    /// Which pipeline phase this iteration runs in (Coordinator state for
+    /// Mimose; static planners always execute, DTR is reactive).
+    pub phase: Phase,
 }
 
 /// Reaction to an out-of-memory event during execution.
@@ -79,6 +83,13 @@ pub trait Planner {
     /// Post-iteration hook with collector observations (Mimose ingests;
     /// `extra_fwd_ms` is the duplicated-forward cost of sheltered mode).
     fn end_iteration(&mut self, _input: &InputDesc, _obs: &[Observation], _extra_fwd_ms: f64) {}
+
+    /// The Coordinator driving this planner, if it is coordinator-backed
+    /// (Mimose). Engines and the CLI use this to report phase transitions
+    /// and cache statistics without downcasting.
+    fn coordinator(&self) -> Option<&Coordinator> {
+        None
+    }
 }
 
 /// Layers a plan may checkpoint: everything with positive savings.
@@ -114,7 +125,12 @@ impl Planner for BaselinePlanner {
     }
 
     fn begin_iteration(&mut self, _input: &InputDesc, _profile: &ModelProfile) -> PlanDecision {
-        PlanDecision { mode: IterationMode::Planned(Plan::none()), planning_ms: 0.0, cache_hit: false }
+        PlanDecision {
+            mode: IterationMode::Planned(Plan::none()),
+            planning_ms: 0.0,
+            cache_hit: false,
+            phase: Phase::Executing,
+        }
     }
 }
 
@@ -160,6 +176,7 @@ impl Planner for SublinearPlanner {
             mode: IterationMode::Planned(self.static_plan()),
             planning_ms: 0.0,
             cache_hit: true,
+            phase: Phase::Executing,
         }
     }
 }

@@ -4,11 +4,20 @@
 //! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md). Python never runs here.
+//!
+//! Manifest parsing is always available; the PJRT client/executable half of
+//! this module needs the external `xla` bindings and is gated behind the
+//! `pjrt` feature (absent from the offline build image).
 
+use crate::anyhow;
+#[cfg(feature = "pjrt")]
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -141,6 +150,7 @@ pub fn load_manifest(artifacts_dir: &Path) -> Result<HashMap<String, ModelManife
 }
 
 /// Compiled-executable registry over one PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
@@ -150,6 +160,7 @@ pub struct Runtime {
     pub compile_ms: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU-PJRT runtime for one model config.
     pub fn new(artifacts_dir: &Path, config: &str) -> Result<Self> {
@@ -267,6 +278,7 @@ impl Runtime {
 }
 
 /// Build an f32 literal of the given dims from a host slice.
+#[cfg(feature = "pjrt")]
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
     if n != data.len() {
@@ -277,6 +289,7 @@ pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Build an i32 literal of the given dims from a host slice.
+#[cfg(feature = "pjrt")]
 pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
     if n != data.len() {
@@ -309,6 +322,7 @@ mod tests {
         assert_eq!(bf.inputs.last().unwrap().name, "x");
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn lit_helpers_validate_shape() {
         assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());

@@ -120,6 +120,73 @@ mod tests {
     }
 
     #[test]
+    fn tolerance_boundary_above_key() {
+        // Window is relative to the PROBE: [probe - floor(0.05*probe),
+        // probe + floor(0.05*probe)]. For key 1000: probe 1052 still spans
+        // down to 1000 (tol 52); probe 1053 bottoms out at 1001 — miss.
+        let mut c = PlanCache::new(0.05);
+        c.insert(1000, Plan::of([1]));
+        assert!(c.lookup(1052).is_some(), "probe 1052 reaches key 1000");
+        assert!(c.lookup(1053).is_none(), "probe 1053 is just outside");
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn tolerance_boundary_below_key() {
+        // From below, probe 953 (tol 47) tops out exactly at 1000 — hit;
+        // probe 952 tops out at 999 — miss.
+        let mut c = PlanCache::new(0.05);
+        c.insert(1000, Plan::of([1]));
+        assert!(c.lookup(953).is_some(), "probe 953 reaches key 1000");
+        assert!(c.lookup(952).is_none(), "probe 952 is just outside");
+    }
+
+    #[test]
+    fn lookup_exact_requires_exact_key() {
+        let mut c = PlanCache::new(0.05);
+        c.insert(1000, Plan::of([4]));
+        assert_eq!(c.lookup_exact(1000), Some(Plan::of([4])));
+        assert!(c.lookup_exact(1001).is_none(), "no tolerance on the exact path");
+        assert!(c.lookup_exact(999).is_none());
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn stats_accounting_and_hit_rate() {
+        let mut c = PlanCache::new(0.05);
+        assert_eq!(c.stats().hit_rate(), 0.0, "empty stats are a 0 rate, not NaN");
+        c.insert(1000, Plan::none());
+        let _ = c.lookup(1000); // hit
+        let _ = c.lookup(1010); // hit (within 5%)
+        let _ = c.lookup(2000); // miss
+        let _ = c.lookup_exact(1000); // hit
+        let _ = c.lookup_exact(1200); // miss
+        assert_eq!(c.stats().hits, 3);
+        assert_eq!(c.stats().misses, 2);
+        assert!((c.stats().hit_rate() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insert_same_key_overwrites() {
+        let mut c = PlanCache::new(0.05);
+        c.insert(500, Plan::of([1]));
+        c.insert(500, Plan::of([2]));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.lookup_exact(500), Some(Plan::of([2])));
+    }
+
+    #[test]
+    fn zero_tolerance_only_hits_exact() {
+        let mut c = PlanCache::new(0.0);
+        c.insert(1000, Plan::of([9]));
+        assert!(c.lookup(1000).is_some());
+        assert!(c.lookup(1001).is_none());
+        assert!(c.lookup(999).is_none());
+    }
+
+    #[test]
     fn nearest_key_wins() {
         let mut c = PlanCache::new(0.10);
         c.insert(1000, Plan::of([1]));

@@ -1,0 +1,127 @@
+//! Minimal `anyhow` stand-in (the offline image has no registry access —
+//! same rationale as the clap/serde/rand substitutes in this directory).
+//!
+//! Provides a string-backed [`Error`], a defaulted [`Result`] alias, the
+//! [`crate::anyhow!`] / [`crate::bail!`] macros, and a [`Context`] extension
+//! trait. Any `std::error::Error` converts into [`Error`] via `?`, so code
+//! written against anyhow's surface keeps working unchanged.
+
+use std::fmt;
+
+/// A dynamic, message-carrying error. Deliberately *not* an implementation
+/// of `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// conversion below coherent (the same trick anyhow uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with additional context, outermost first (anyhow convention).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error arm of any displayable-error `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/mimose")?;
+        Ok(())
+    }
+
+    fn bails(x: i32) -> Result<i32> {
+        if x < 0 {
+            bail!("negative input {x}");
+        }
+        Ok(x * 2)
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        let e = fails_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn bail_formats_and_returns() {
+        assert_eq!(bails(3).unwrap(), 6);
+        assert_eq!(bails(-1).unwrap_err().to_string(), "negative input -1");
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| format!("lazy {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "lazy 7: inner");
+    }
+
+    #[test]
+    fn anyhow_macro_builds_error() {
+        let e = anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+        assert_eq!(format!("{e:?}"), "code 42");
+    }
+}

@@ -2,6 +2,7 @@
 //! clap/serde/rand/tokio/criterion/proptest — see DESIGN.md §4).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

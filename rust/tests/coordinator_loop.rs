@@ -1,0 +1,178 @@
+//! End-to-end Coordinator loop over the SimEngine: the full paper pipeline
+//! (sheltered collection -> freeze -> responsive cached execution -> novel-
+//! size re-collection), plus the orchestration-transparency property — the
+//! Coordinator must produce exactly the plans Algorithm 1 would.
+
+use std::cell::RefCell;
+
+use mimose::config::{ExperimentConfig, MimoseConfig, CoordinatorConfig, PlannerKind, Task};
+use mimose::coordinator::{
+    observations_from_profile, quantize_up, Coordinator, Phase,
+};
+use mimose::engine::sim::SimEngine;
+use mimose::metrics::IterationMetrics;
+use mimose::model::transformer_profile;
+use mimose::planners::{checkpointable, usable_activation_budget, InputDesc, IterationMode};
+use mimose::scheduler::greedy_schedule;
+use mimose::util::proptest::{ensure, forall};
+use mimose::util::GIB;
+
+/// Warmup + steady-state seqlens: five well-separated sizes (each lands in
+/// its own 5% quantisation cell, so steady state holds exactly 5 plans).
+const STEADY_SEQS: [usize; 5] = [60, 120, 180, 240, 300];
+
+fn engine(budget_gb: f64) -> SimEngine {
+    let mut cfg = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, budget_gb);
+    cfg.coordinator = CoordinatorConfig { reshelter_on_novel: true, ..Default::default() };
+    SimEngine::new(cfg).expect("fixed state fits")
+}
+
+#[test]
+fn sheltered_frozen_executing_full_loop() {
+    let mut e = engine(6.0);
+    let budget = 6 * GIB;
+    let mut all: Vec<IterationMetrics> = Vec::new();
+
+    // ---- sheltered warmup: collect_iters = 10 iterations ----
+    for i in 0..10 {
+        let m = e.run_iteration(STEADY_SEQS[i % STEADY_SEQS.len()]);
+        assert_eq!(m.phase, Phase::Sheltered, "warmup iter {i} must collect");
+        assert!(m.collector_ms > 0.0, "sheltered iterations pay the double forward");
+        all.push(m);
+    }
+    let coord = e.coordinator().expect("mimose run is coordinator-backed");
+    assert!(coord.collector().is_frozen(), "warmup must freeze the collector");
+
+    // ---- responsive steady state over repeated input sizes ----
+    let mut steady: Vec<IterationMetrics> = Vec::new();
+    for i in 0..100 {
+        let m = e.run_iteration(STEADY_SEQS[i % STEADY_SEQS.len()]);
+        assert_ne!(m.phase, Phase::Sheltered, "repeated sizes must not re-collect");
+        steady.push(m);
+    }
+    // (b) plan-cache hit rate > 0.9 on repeated input sizes: only the first
+    // visit of each of the 5 sizes may miss.
+    let hits = steady.iter().filter(|m| m.cache_hit).count();
+    assert!(
+        hits as f64 / steady.len() as f64 > 0.9,
+        "steady-state hit rate {}/{}",
+        hits,
+        steady.len()
+    );
+    let replans = steady.iter().filter(|m| m.phase == Phase::Frozen).count();
+    assert_eq!(replans, STEADY_SEQS.len(), "exactly one replan per distinct size");
+    all.extend(steady);
+
+    // ---- (c) a novel input size re-triggers sheltered collection ----
+    let m = e.run_iteration(330);
+    assert_eq!(m.phase, Phase::Sheltered, "novel seqlen 330 must re-shelter");
+    assert!(m.collector_ms > 0.0);
+    all.push(m);
+    let coord = e.coordinator().unwrap();
+    assert_eq!(coord.reshelters, 1);
+    assert!(coord.collector().is_frozen(), "one-shot reshelter refreezes");
+
+    // ...and the same size afterwards is planned responsively.
+    let m = e.run_iteration(330);
+    assert!(m.phase == Phase::Frozen || m.phase == Phase::Executing);
+    assert!(m.collector_ms == 0.0);
+    all.push(m);
+
+    // (a) peak memory respects the budget on every iteration.
+    for (i, m) in all.iter().enumerate() {
+        assert!(!m.oom_failed, "iter {i} OOMed");
+        assert!(m.peak_bytes <= budget, "iter {i}: peak {} > budget", m.peak_bytes);
+    }
+
+    // the transition log tells the same story: sheltered -> frozen ->
+    // executing, then back through sheltered for the novel size.
+    let coord = e.coordinator().unwrap();
+    let phases: Vec<Phase> = coord.transitions().iter().map(|t| t.to).collect();
+    assert!(phases.contains(&Phase::Frozen) && phases.contains(&Phase::Executing));
+    assert!(
+        phases.iter().filter(|&&p| p == Phase::Sheltered).count() >= 1,
+        "reshelter must be visible as a transition back to Sheltered"
+    );
+    let s = coord.stats();
+    assert_eq!(s.plans_generated as usize, STEADY_SEQS.len() + 1);
+    assert!(s.replan_ms_max >= s.replan_ms_mean && s.replan_ms_mean > 0.0);
+}
+
+#[test]
+fn run_epoch_reports_phases_and_cache_rate() {
+    // The `mimose sim` path: a stock epoch partitions into the three phases
+    // and the report carries the §5 cache hit rate.
+    let mut cfg = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
+    cfg.max_iters = 150;
+    let mut e = SimEngine::new(cfg).unwrap();
+    let r = e.run_epoch();
+    assert_eq!(r.oom_failures(), 0);
+    let sheltered = r.phase_count(Phase::Sheltered);
+    assert!(
+        (10..=12).contains(&sheltered),
+        "default warmup is 10 iterations (saw {sheltered})"
+    );
+    assert!(r.phase_count(Phase::Frozen) > 0, "some sizes must replan");
+    assert!(r.phase_count(Phase::Executing) > 0, "repeated sizes must hit the cache");
+    assert_eq!(
+        r.phase_count(Phase::Sheltered) + r.phase_count(Phase::Frozen) + r.phase_count(Phase::Executing),
+        r.iters.len(),
+        "every mimose iteration belongs to exactly one phase"
+    );
+    assert!(r.cache_hit_rate() > 0.3);
+    // no wall-clock bound here: debug builds on loaded CI runners stall
+    assert!(r.replan_ms_mean() > 0.0);
+    assert!(r.replan_ms_max() >= r.replan_ms_mean());
+}
+
+#[test]
+fn prop_coordinator_plans_match_direct_greedy_schedule() {
+    // Orchestration must not change planning semantics: for any input, the
+    // Coordinator's plan equals Algorithm 1 run directly on the same
+    // estimates with the same budget arithmetic.
+    let budget = 5 * GIB;
+    let mcfg = MimoseConfig::default();
+    let mut coord = Coordinator::new(budget, 14, mcfg.clone(), CoordinatorConfig::default());
+
+    // deterministic sheltered warmup over ten spread-out sizes
+    for seq in [50, 80, 110, 140, 170, 200, 230, 260, 290, 320] {
+        let profile = transformer_profile(&Task::TcBert.model(), 32, seq, 1.0);
+        let input = InputDesc { batch: 32, seqlen: seq };
+        let d = coord.begin_iteration(&input, &profile);
+        assert!(matches!(d.mode, IterationMode::Sheltered(_)));
+        let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
+        coord.end_iteration(&input, &obs, 1.0);
+    }
+
+    let coord = RefCell::new(coord);
+    forall(
+        31,
+        120,
+        |r| r.range_u(40, 330),
+        |&seq| {
+            let profile = transformer_profile(&Task::TcBert.model(), 32, seq, 1.0);
+            let input = InputDesc { batch: 32, seqlen: seq };
+            let mut c = coord.borrow_mut();
+            let d = c.begin_iteration(&input, &profile);
+            let plan = match d.mode {
+                IterationMode::Planned(p) => p,
+                _ => return Err(format!("seq {seq}: expected planned mode")),
+            };
+
+            // replicate generate_plan by hand on the shared estimator
+            let plan_size = quantize_up(input.size(), mcfg.cache_tolerance);
+            let mut layers = checkpointable(&profile);
+            for l in &mut layers {
+                l.est_bytes = c.estimator().predict_bytes(l.id, plan_size as f64) as u64;
+            }
+            let est_total: u64 = layers.iter().map(|l| l.est_bytes).sum();
+            let usable = usable_activation_budget(budget, &profile, mcfg.reserve_bytes);
+            let excess = est_total.saturating_sub(usable);
+            let expect = greedy_schedule(&layers, excess, mcfg.bucket_tolerance);
+            ensure(
+                plan == expect,
+                &format!("seq {seq}: coordinator {:?} != direct {:?}", plan.ids(), expect.ids()),
+            )
+        },
+    );
+}
