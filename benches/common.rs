@@ -27,6 +27,31 @@ pub fn rule(title: &str) {
     println!("\n==== {title} ====");
 }
 
+/// Write a machine-readable bench summary to <repo>/BENCH_<name>.json so the
+/// perf trajectory accumulates across PRs (schema 1: name/iters/mean_us/
+/// p50_us/p99_us per result; times in microseconds).
+#[allow(dead_code)]
+pub fn write_bench_json(name: &str, results: &[mimose::util::timer::BenchResult]) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{name}.json"));
+    let mut s = String::from("{\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"bench\": \"{name}\",\n  \"results\": [\n"));
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_us\": {:.3}, \
+             \"p50_us\": {:.3}, \"p99_us\": {:.3}}}{}\n",
+            r.name.replace('"', "'"),
+            r.iters,
+            r.mean_s * 1e6,
+            r.p50_s * 1e6,
+            r.p99_s * 1e6,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    fs::write(&path, s).expect("write bench json");
+    println!("[wrote {}]", path.display());
+}
+
 #[allow(dead_code)]
 pub fn gb(bytes: u64) -> f64 {
     bytes as f64 / (1u64 << 30) as f64

@@ -10,7 +10,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{rule, write_tsv};
+use common::{rule, write_bench_json, write_tsv};
 use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
 use mimose::engine::sim::SimEngine;
 use mimose::estimator::{MemoryEstimator, Sample};
@@ -25,9 +25,11 @@ const BUDGET: Duration = Duration::from_millis(400);
 
 fn main() {
     let mut rows = Vec::new();
+    let mut results: Vec<mimose::util::timer::BenchResult> = Vec::new();
     let mut record = |r: mimose::util::timer::BenchResult| {
         println!("{}", r.row());
         rows.push(format!("{}\t{:.3}\t{:.3}\t{:.3}", r.name, r.mean_s * 1e6, r.p50_s * 1e6, r.p99_s * 1e6));
+        results.push(r.clone());
         r
     };
 
@@ -79,6 +81,21 @@ fn main() {
         black_box(cache.lookup_exact(black_box(1970)));
     }));
 
+    rule("Perf — fleet broker");
+    let mut broker = mimose::fleet::BudgetBroker::new(24 * GIB, 8, 128 << 20, 0.5);
+    let demands: Vec<mimose::fleet::JobDemand> = (0..8u64)
+        .map(|i| mimose::fleet::JobDemand {
+            floor: GIB + (i % 3) * (GIB / 2),
+            predicted: Some(3 * GIB + i * (GIB / 4)),
+        })
+        .collect();
+    let r = record(bench("fleet_broker/allocate_8_jobs", BUDGET, || {
+        black_box(broker.allocate(black_box(&demands)).unwrap());
+    }));
+    // same bar as plan generation: a broker decision happens once per round
+    // and must never rival an iteration's simulated time
+    assert!(r.mean_s < 1e-3, "broker decisions must stay sub-millisecond");
+
     rule("Perf — caching allocator");
     let mut alloc = CachingAllocator::new(8 * GIB);
     record(bench("allocator/alloc_free_64MB", BUDGET, || {
@@ -111,4 +128,5 @@ fn main() {
     );
 
     write_tsv("perf_hotpaths", "bench\tmean_us\tp50_us\tp99_us", &rows);
+    write_bench_json("hotpaths", &results);
 }

@@ -155,6 +155,15 @@ impl Task {
         }
     }
 
+    /// Residual-set widening factor passed to `transformer_profile`:
+    /// XLNet's two-stream attention keeps ~15% more state per layer.
+    pub fn act_factor(&self) -> f64 {
+        match self {
+            Task::QaXlnet => 1.15,
+            _ => 1.0,
+        }
+    }
+
     /// (min, max) collated seqlen range observed in Fig 3.
     pub fn seq_range(&self) -> (usize, usize) {
         match self {
@@ -185,6 +194,10 @@ pub struct MimoseConfig {
     pub collect_iters: usize,
     /// Input sizes within this relative distance share a cached plan.
     pub cache_tolerance: f64,
+    /// Plan-cache entry bound, least-recently-hit eviction (0 = unbounded —
+    /// the classic single-job behaviour; bound it for adversarial input-size
+    /// streams or long multi-tenant runs).
+    pub cache_capacity: usize,
     /// Memory reserved against fragmentation (paper §6.4: 0.5–1 GB).
     pub reserve_bytes: u64,
 }
@@ -195,7 +208,21 @@ impl Default for MimoseConfig {
             bucket_tolerance: 0.10,
             collect_iters: 10,
             cache_tolerance: 0.05,
+            cache_capacity: 0,
             reserve_bytes: GIB,
+        }
+    }
+}
+
+impl MimoseConfig {
+    /// Read the `[mimose]` keys of a parsed TOML doc (defaults for missing).
+    pub fn from_doc(doc: &Doc) -> Self {
+        MimoseConfig {
+            bucket_tolerance: doc.get_f64("mimose.bucket_tolerance", 0.10),
+            collect_iters: doc.get_usize("mimose.collect_iters", 10),
+            cache_tolerance: doc.get_f64("mimose.cache_tolerance", 0.05),
+            cache_capacity: doc.get_usize("mimose.cache_capacity", 0),
+            reserve_bytes: (doc.get_f64("mimose.reserve_gb", 1.0) * GIB as f64) as u64,
         }
     }
 }
@@ -223,6 +250,17 @@ impl Default for CoordinatorConfig {
             reshelter_on_novel: false,
             track_transitions: true,
             max_transitions: 4096,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Read the `[coordinator]` keys of a parsed TOML doc.
+    pub fn from_doc(doc: &Doc) -> Self {
+        CoordinatorConfig {
+            reshelter_on_novel: doc.get_bool("coordinator.reshelter_on_novel", false),
+            track_transitions: doc.get_bool("coordinator.track_transitions", true),
+            max_transitions: doc.get_usize("coordinator.max_transitions", 4096),
         }
     }
 }
@@ -269,17 +307,8 @@ impl ExperimentConfig {
         cfg.epochs = doc.get_usize("epochs", 1);
         cfg.seed = doc.get_usize("seed", 42) as u64;
         cfg.max_iters = doc.get_usize("max_iters", 0);
-        cfg.mimose.bucket_tolerance = doc.get_f64("mimose.bucket_tolerance", 0.10);
-        cfg.mimose.collect_iters = doc.get_usize("mimose.collect_iters", 10);
-        cfg.mimose.cache_tolerance = doc.get_f64("mimose.cache_tolerance", 0.05);
-        cfg.mimose.reserve_bytes =
-            (doc.get_f64("mimose.reserve_gb", 1.0) * GIB as f64) as u64;
-        cfg.coordinator.reshelter_on_novel =
-            doc.get_bool("coordinator.reshelter_on_novel", false);
-        cfg.coordinator.track_transitions =
-            doc.get_bool("coordinator.track_transitions", true);
-        cfg.coordinator.max_transitions =
-            doc.get_usize("coordinator.max_transitions", 4096);
+        cfg.mimose = MimoseConfig::from_doc(doc);
+        cfg.coordinator = CoordinatorConfig::from_doc(doc);
         Ok(cfg)
     }
 
@@ -287,6 +316,107 @@ impl ExperimentConfig {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         let doc = Doc::parse(&text).map_err(|e| e.to_string())?;
         Self::from_doc(&doc)
+    }
+}
+
+/// The multi-job fleet: N concurrent training jobs time-sharing ONE device
+/// memory budget through the [`crate::fleet`] broker. `[fleet]` in TOML.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// The single shared device budget all tenants draw from.
+    pub global_budget_bytes: u64,
+    /// Configured per-job guaranteed minimum. Each round the effective floor
+    /// is the max of this and the job's conservative reservation for its
+    /// pending input (below which even fully-checkpointed execution OOMs).
+    pub floor_bytes: u64,
+    /// Interleaved rounds — each job runs one iteration per round.
+    pub steps: usize,
+    /// Cross-job plan reuse between identical-architecture tenants.
+    pub shared_cache: bool,
+    /// Shared plan-cache capacity (entries; 0 = unbounded).
+    pub cache_capacity: usize,
+    /// Broker allocation granularity: budgets move on this grid so small
+    /// demand jitter doesn't rebind budgets (and flush plan caches) every
+    /// round.
+    pub grid_bytes: u64,
+    /// EWMA weight on demand history in [0, 1) — 0 tracks the latest
+    /// prediction only, higher values smooth input-size noise.
+    pub demand_smoothing: f64,
+    /// Broker arbitration on (the fleet) or off (static equal split — the
+    /// baseline the arbiter must beat).
+    pub arbitrated: bool,
+    /// One entry per tenant job; tasks may repeat (identical-architecture
+    /// tenants then share plans through the fleet cache).
+    pub tasks: Vec<Task>,
+    /// Base RNG seed; job `i` streams inputs with seed `seed + i`.
+    pub seed: u64,
+    pub mimose: MimoseConfig,
+    pub coordinator: CoordinatorConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            global_budget_bytes: 16 * GIB,
+            floor_bytes: 2 * GIB,
+            steps: 200,
+            shared_cache: true,
+            cache_capacity: 512,
+            grid_bytes: 128 << 20,
+            demand_smoothing: 0.5,
+            arbitrated: true,
+            tasks: vec![Task::TcBert, Task::QaBert],
+            seed: 42,
+            mimose: MimoseConfig::default(),
+            coordinator: CoordinatorConfig::default(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Load from the `[fleet]` section of a TOML-subset doc; missing keys
+    /// fall back to defaults. `fleet.tasks` is an array of task names.
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let d = FleetConfig::default();
+        let tasks = match doc.get("fleet.tasks") {
+            None => d.tasks,
+            Some(v) => {
+                let arr = v.as_arr().ok_or("fleet.tasks must be an array")?;
+                let mut ts = Vec::with_capacity(arr.len());
+                for item in arr {
+                    let name = item.as_str().ok_or("fleet.tasks entries must be strings")?;
+                    ts.push(
+                        Task::parse(name).ok_or_else(|| format!("unknown task '{name}'"))?,
+                    );
+                }
+                ts
+            }
+        };
+        Ok(FleetConfig {
+            global_budget_bytes: (doc.get_f64("fleet.global_budget_gb", 16.0) * GIB as f64)
+                as u64,
+            floor_bytes: (doc.get_f64("fleet.floor_gb", 2.0) * GIB as f64) as u64,
+            steps: doc.get_usize("fleet.steps", d.steps),
+            shared_cache: doc.get_bool("fleet.shared_cache", d.shared_cache),
+            cache_capacity: doc.get_usize("fleet.cache_capacity", d.cache_capacity),
+            grid_bytes: (doc.get_f64("fleet.grid_mb", 128.0) * (1u64 << 20) as f64) as u64,
+            demand_smoothing: doc.get_f64("fleet.demand_smoothing", d.demand_smoothing),
+            arbitrated: doc.get_bool("fleet.arbitrated", d.arbitrated),
+            tasks,
+            seed: doc.get_usize("fleet.seed", 42) as u64,
+            mimose: MimoseConfig::from_doc(doc),
+            coordinator: CoordinatorConfig::from_doc(doc),
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let doc = Doc::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn global_budget_gb(&self) -> f64 {
+        self.global_budget_bytes as f64 / GIB as f64
     }
 }
 
@@ -350,5 +480,60 @@ mod tests {
     fn fixed_state_is_16_bytes_per_param() {
         let m = ModelSpec::bert_tiny();
         assert_eq!(m.fixed_state_bytes(), m.param_count() * 16);
+    }
+
+    #[test]
+    fn cache_capacity_from_toml_defaults_unbounded() {
+        let doc = Doc::parse("[mimose]\ncache_capacity = 64\n").unwrap();
+        assert_eq!(MimoseConfig::from_doc(&doc).cache_capacity, 64);
+        assert_eq!(MimoseConfig::default().cache_capacity, 0, "default unbounded");
+    }
+
+    #[test]
+    fn xlnet_widens_activations() {
+        assert_eq!(Task::QaXlnet.act_factor(), 1.15);
+        assert_eq!(Task::TcBert.act_factor(), 1.0);
+    }
+
+    #[test]
+    fn fleet_config_from_toml() {
+        let doc = Doc::parse(
+            "[fleet]\nglobal_budget_gb = 20.0\nfloor_gb = 2.5\nsteps = 120\n\
+             shared_cache = false\ncache_capacity = 32\ngrid_mb = 256\n\
+             demand_smoothing = 0.3\ntasks = [\"tc-bert\", \"qa-bert\", \"mc-roberta\"]\n\
+             seed = 9\n[mimose]\ncollect_iters = 8\n",
+        )
+        .unwrap();
+        let c = FleetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.global_budget_bytes, 20 * GIB);
+        assert!((c.global_budget_gb() - 20.0).abs() < 1e-9);
+        assert_eq!(c.floor_bytes, 2 * GIB + GIB / 2);
+        assert_eq!(c.steps, 120);
+        assert!(!c.shared_cache);
+        assert_eq!(c.cache_capacity, 32);
+        assert_eq!(c.grid_bytes, 256 << 20);
+        assert!((c.demand_smoothing - 0.3).abs() < 1e-12);
+        assert!(c.arbitrated, "default on");
+        assert_eq!(c.tasks, vec![Task::TcBert, Task::QaBert, Task::McRoberta]);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.mimose.collect_iters, 8, "[mimose] section shared with fleet");
+    }
+
+    #[test]
+    fn fleet_config_rejects_bad_tasks() {
+        let doc = Doc::parse("[fleet]\ntasks = [\"nope\"]\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[fleet]\ntasks = 3\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn fleet_config_defaults() {
+        let c = FleetConfig::default();
+        assert_eq!(c.global_budget_bytes, 16 * GIB);
+        assert_eq!(c.tasks.len(), 2);
+        assert!(c.arbitrated);
+        assert!(c.shared_cache);
+        assert!(c.grid_bytes > 0);
     }
 }

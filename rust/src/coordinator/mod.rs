@@ -39,7 +39,7 @@ use crate::model::ModelProfile;
 use crate::planners::{
     checkpointable, usable_activation_budget, InputDesc, IterationMode, PlanDecision,
 };
-use crate::scheduler::{greedy_schedule, LayerEst, Plan, PlanCache};
+use crate::scheduler::{greedy_schedule, LayerEst, Plan, PlanCache, SharedCacheHandle};
 use crate::util::stats::Summary;
 use crate::util::timer::Timer;
 
@@ -98,6 +98,10 @@ pub struct CoordinatorStats {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_hit_rate: f64,
+    /// Plans reused from the fleet's cross-job shared cache.
+    pub shared_hits: u64,
+    /// Times the budget was rebound mid-run (fleet arbitration).
+    pub budget_changes: u64,
     pub train_ms: f64,
     pub plan_ms_total: f64,
     /// Mean / max wall time of cache-miss replans (estimator + Algorithm 1).
@@ -169,6 +173,16 @@ pub struct Coordinator {
     /// Times a novel input size re-opened sheltered collection (§4.2).
     pub reshelters: u64,
     estimator_ready: bool,
+    /// Fleet wiring: cross-job plan cache + this job's model signature.
+    shared: Option<(SharedCacheHandle, u64)>,
+    /// (plan size, budget) keys this job contributed to the shared cache —
+    /// purged from it when a reshelter invalidates the estimator they were
+    /// built from.
+    shared_inserted: Vec<(u64, u64)>,
+    /// Plans reused from the shared cache (cross-job hits).
+    pub shared_hits: u64,
+    /// Mid-run budget rebinds that invalidated the plan cache.
+    pub budget_changes: u64,
 }
 
 impl Coordinator {
@@ -176,7 +190,7 @@ impl Coordinator {
         Coordinator {
             collector: Collector::new(cfg.collect_iters),
             estimator: MemoryEstimator::new(n_layers),
-            cache: PlanCache::new(cfg.cache_tolerance),
+            cache: PlanCache::with_capacity(cfg.cache_tolerance, cfg.cache_capacity),
             cfg,
             ccfg,
             budget,
@@ -190,11 +204,41 @@ impl Coordinator {
             plans_generated: 0,
             reshelters: 0,
             estimator_ready: false,
+            shared: None,
+            shared_inserted: Vec::new(),
+            shared_hits: 0,
+            budget_changes: 0,
         }
     }
 
     pub fn phase(&self) -> Phase {
         self.phase
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Rebind this job to a new memory budget (the fleet broker re-shares
+    /// one device between rounds). Every cached plan was generated under the
+    /// old budget — a looser plan would overshoot a tighter budget, a
+    /// tighter plan wastes throughput under a looser one — so the plan cache
+    /// is invalidated and each input size replans (sub-millisecond) against
+    /// the new budget on next sight. No-op when the budget is unchanged.
+    pub fn set_budget(&mut self, new_budget: u64) {
+        if new_budget == self.budget {
+            return;
+        }
+        self.budget = new_budget;
+        self.cache.clear();
+        self.budget_changes += 1;
+    }
+
+    /// Wire this Coordinator into a fleet's cross-job plan cache.
+    /// `signature` scopes the entries ([`crate::scheduler::model_signature`])
+    /// so only identical-architecture tenants exchange plans.
+    pub fn set_shared_cache(&mut self, cache: SharedCacheHandle, signature: u64) {
+        self.shared = Some((cache, signature));
     }
 
     pub fn iterations(&self) -> u64 {
@@ -228,6 +272,8 @@ impl Coordinator {
             cache_hits: cs.hits,
             cache_misses: cs.misses,
             cache_hit_rate: cs.hit_rate(),
+            shared_hits: self.shared_hits,
+            budget_changes: self.budget_changes,
             train_ms: self.train_ms,
             plan_ms_total: self.plan_ms_total,
             replan_ms_mean: if self.replan_ms.count() == 0 { 0.0 } else { self.replan_ms.mean() },
@@ -251,6 +297,37 @@ impl Coordinator {
     /// footprint equals the static planner's while we measure).
     pub fn conservative_plan(profile: &ModelProfile) -> Plan {
         Plan::of(checkpointable(profile).into_iter().map(|l| l.id))
+    }
+
+    /// Peak bytes an iteration needs under the conservative everything-
+    /// checkpointed plan, plus the fragmentation reserve — the hard minimum
+    /// budget below which even sheltered execution OOMs. The fleet broker
+    /// uses this as a job's per-round floor (its "conservative reservation"
+    /// while still in sheltered collection).
+    pub fn conservative_reservation(profile: &ModelProfile, reserve_bytes: u64) -> u64 {
+        let ids = Self::conservative_plan(profile).ids();
+        profile.peak_bytes(&ids) + reserve_bytes
+    }
+
+    /// Estimator-predicted *unconstrained* peak demand for `input`: fixed
+    /// state + every layer's predicted activation bytes (no checkpointing)
+    /// + the fragmentation reserve. `None` until the estimator has been
+    /// trained (the job is still in sheltered collection) — the broker then
+    /// falls back to the conservative reservation. This is the per-job
+    /// demand signal the fleet redistributes slack against.
+    pub fn predicted_demand_bytes(&self, input: &InputDesc, profile: &ModelProfile) -> Option<u64> {
+        if !self.estimator.is_trained() {
+            return None;
+        }
+        let size = input.size() as f64;
+        let acts: f64 = checkpointable(profile)
+            .iter()
+            .map(|l| self.estimator.predict_bytes(l.id, size).max(0.0))
+            .sum();
+        // transient working sets (e.g. head logits) aren't estimator-learned
+        // but do raise the no-checkpoint peak — take them from the profile
+        let transient = profile.layers.iter().map(|l| l.transient_bytes).max().unwrap_or(0);
+        Some(profile.fixed_bytes + self.cfg.reserve_bytes + transient + acts as u64)
     }
 
     /// Algorithm 1 over *estimated* per-layer bytes.
@@ -292,6 +369,16 @@ impl Coordinator {
             self.collector.reopen(1);
             self.estimator_ready = false;
             self.cache.clear();
+            // the entries this job pushed to the fleet's shared cache came
+            // from the same stale estimator — purge them so no tenant
+            // (including this one, post-refreeze) resurrects them
+            if let Some((shared, sig)) = &self.shared {
+                let mut cache = shared.borrow_mut();
+                for &(size, budget) in &self.shared_inserted {
+                    cache.remove(*sig, size, budget);
+                }
+            }
+            self.shared_inserted.clear();
             self.reshelters += 1;
             shelter = true;
         }
@@ -322,8 +409,31 @@ impl Coordinator {
                 phase: Phase::Executing,
             };
         }
+        // cross-job reuse (fleet): a same-signature tenant may have planned
+        // this size already under an equal-or-tighter budget — safe to apply
+        // here (it checkpoints at least as much as we would).
+        if let Some((shared, sig)) = &self.shared {
+            let reused = shared.borrow_mut().lookup(*sig, plan_size, self.budget);
+            if let Some(plan) = reused {
+                self.cache.insert(plan_size, plan.clone());
+                self.shared_hits += 1;
+                let planning_ms = t.elapsed_ms();
+                self.plan_ms_total += planning_ms;
+                self.set_phase(Phase::Executing, size);
+                return PlanDecision {
+                    mode: IterationMode::Planned(plan),
+                    planning_ms,
+                    cache_hit: true,
+                    phase: Phase::Executing,
+                };
+            }
+        }
         let plan = self.generate_plan(plan_size, profile);
         self.cache.insert(plan_size, plan.clone());
+        if let Some((shared, sig)) = &self.shared {
+            shared.borrow_mut().insert(*sig, plan_size, self.budget, plan.clone());
+            self.shared_inserted.push((plan_size, self.budget));
+        }
         self.plans_generated += 1;
         let planning_ms = t.elapsed_ms();
         self.plan_ms_total += planning_ms;
@@ -466,6 +576,154 @@ mod tests {
             }
         }
         assert_eq!(quantize_up(0, 0.05), 0);
+    }
+
+    #[test]
+    fn set_budget_invalidates_cached_plans() {
+        let mut c = coord(false);
+        warmup(&mut c);
+        let profile = transformer_profile(&spec(), 32, 300, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 300 };
+        let _ = c.begin_iteration(&input, &profile); // miss -> plan @ 6 GB
+        let d = c.begin_iteration(&input, &profile);
+        assert!(d.cache_hit, "warm cache under the original budget");
+        let loose_plan = match d.mode {
+            IterationMode::Planned(p) => p,
+            _ => panic!("expected planned mode"),
+        };
+
+        c.set_budget(4 * GIB);
+        assert_eq!(c.budget(), 4 * GIB);
+        assert_eq!(c.budget_changes, 1);
+        assert_eq!(c.cache().len(), 0, "stale plans dropped");
+        let d = c.begin_iteration(&input, &profile);
+        assert!(!d.cache_hit, "old-budget plan must not be served");
+        assert_eq!(d.phase, Phase::Frozen, "budget change forces a replan");
+        let tight_plan = match d.mode {
+            IterationMode::Planned(p) => p,
+            _ => panic!("expected planned mode"),
+        };
+        assert!(
+            tight_plan.len() > loose_plan.len(),
+            "4 GB must checkpoint more than 6 GB ({} vs {})",
+            tight_plan.len(),
+            loose_plan.len()
+        );
+        // replan is cached under the new budget
+        let d = c.begin_iteration(&input, &profile);
+        assert!(d.cache_hit);
+    }
+
+    #[test]
+    fn set_budget_same_value_is_a_noop() {
+        let mut c = coord(false);
+        warmup(&mut c);
+        let profile = transformer_profile(&spec(), 32, 250, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 250 };
+        let _ = c.begin_iteration(&input, &profile);
+        c.set_budget(c.budget());
+        assert_eq!(c.budget_changes, 0);
+        assert!(c.cache().len() > 0, "unchanged budget keeps the cache");
+        assert!(c.begin_iteration(&input, &profile).cache_hit);
+    }
+
+    #[test]
+    fn shared_cache_reuses_plans_across_tenants() {
+        use crate::scheduler::{model_signature, shared_plan_cache};
+        let shared = shared_plan_cache(0);
+        let sig = model_signature(&spec(), 32, 1.0);
+        let mut a = coord(false);
+        let mut b = coord(false);
+        a.set_shared_cache(shared.clone(), sig);
+        b.set_shared_cache(shared.clone(), sig);
+        warmup(&mut a);
+        warmup(&mut b);
+
+        let profile = transformer_profile(&spec(), 32, 300, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 300 };
+        let da = a.begin_iteration(&input, &profile);
+        assert!(!da.cache_hit, "first tenant pays the replan");
+        assert_eq!(a.plans_generated, 1);
+
+        let db = b.begin_iteration(&input, &profile);
+        assert!(db.cache_hit, "second tenant reuses the shared plan");
+        assert_eq!(db.phase, Phase::Executing);
+        assert_eq!(b.plans_generated, 0, "no Algorithm 1 run for the reuser");
+        assert_eq!(b.shared_hits, 1);
+        assert_eq!(b.stats().shared_hits, 1);
+        match (da.mode, db.mode) {
+            (IterationMode::Planned(pa), IterationMode::Planned(pb)) => assert_eq!(pa, pb),
+            _ => panic!("both tenants must be planned"),
+        }
+    }
+
+    #[test]
+    fn shared_cache_refuses_looser_budget_plans() {
+        use crate::scheduler::{model_signature, shared_plan_cache};
+        let shared = shared_plan_cache(0);
+        let sig = model_signature(&spec(), 32, 1.0);
+        // tenant A plans under 6 GB; tenant B has only 5 GB — A's plan
+        // checkpoints too little for B, so B must generate its own.
+        let mut a = coord(false);
+        let mut b = Coordinator::new(
+            5 * GIB,
+            14,
+            MimoseConfig::default(),
+            CoordinatorConfig::default(),
+        );
+        a.set_shared_cache(shared.clone(), sig);
+        b.set_shared_cache(shared.clone(), sig);
+        warmup(&mut a);
+        warmup(&mut b);
+        let profile = transformer_profile(&spec(), 32, 300, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 300 };
+        let _ = a.begin_iteration(&input, &profile);
+        let db = b.begin_iteration(&input, &profile);
+        assert!(!db.cache_hit, "6 GB plan unsafe under 5 GB");
+        assert_eq!(b.plans_generated, 1);
+        assert_eq!(b.shared_hits, 0);
+        // and the tighter 5 GB plan is now reusable by the 6 GB tenant
+        a.set_budget(6 * GIB); // no-op value change guard: already 6 GB
+        let mut c = coord(false);
+        c.set_shared_cache(shared.clone(), sig);
+        warmup(&mut c);
+        let profile2 = transformer_profile(&spec(), 32, 310, 1.0);
+        let input2 = InputDesc { batch: 32, seqlen: 310 };
+        let _ = b.begin_iteration(&input2, &profile2); // B plans 310 @ 5 GB
+        let dc = c.begin_iteration(&input2, &profile2); // C @ 6 GB reuses it
+        assert!(dc.cache_hit);
+        assert_eq!(c.shared_hits, 1);
+    }
+
+    #[test]
+    fn reshelter_purges_own_shared_entries() {
+        use crate::scheduler::{model_signature, shared_plan_cache};
+        let shared = shared_plan_cache(0);
+        let sig = model_signature(&spec(), 32, 1.0);
+        let mut c = coord(true); // reshelter_on_novel
+        c.set_shared_cache(shared.clone(), sig);
+        warmup(&mut c);
+        let profile = transformer_profile(&spec(), 32, 300, 1.0);
+        let input = InputDesc { batch: 32, seqlen: 300 };
+        let _ = c.begin_iteration(&input, &profile); // plan -> shared insert
+        assert_eq!(shared.borrow().len(), 1);
+
+        // a novel size triggers a reshelter: the entries this job pushed
+        // were built from the estimator about to be retrained — gone
+        let p2 = transformer_profile(&spec(), 32, 512, 1.0);
+        let i2 = InputDesc { batch: 32, seqlen: 512 };
+        let d = c.begin_iteration(&i2, &p2);
+        assert_eq!(d.phase, Phase::Sheltered);
+        assert_eq!(shared.borrow().len(), 0, "stale shared entries purged");
+        let obs = observations_from_profile(&p2, &i2, |f| f as f64 / 1e9);
+        c.end_iteration(&i2, &obs, 1.0);
+
+        // post-refreeze the old size replans fresh instead of resurrecting
+        // the pre-retrain plan through the shared path
+        let d = c.begin_iteration(&input, &profile);
+        assert!(!d.cache_hit);
+        assert_eq!(c.shared_hits, 0);
+        assert_eq!(shared.borrow().len(), 1, "regenerated plan re-shared");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! TC-Bert × 4 planners × 6 budgets simulates in seconds, which is what
 //! regenerating Figs 4/5/13/14 and Table 2 requires.
 
-use crate::config::{ExperimentConfig, PlannerKind, Task};
+use crate::config::{ExperimentConfig, PlannerKind};
 use crate::coordinator::{observations_from_profile, Coordinator};
 use crate::data::InputStream;
 use crate::memory::{Ledger, OomError, TensorClass, TensorId};
@@ -41,15 +41,6 @@ impl CostModel {
     }
 }
 
-/// XLNet keeps ~15% wider residual state (two-stream attention).
-fn xlnet_factor(task: Task) -> f64 {
-    if task == Task::QaXlnet {
-        1.15
-    } else {
-        1.0
-    }
-}
-
 pub fn make_planner(cfg: &ExperimentConfig) -> Box<dyn Planner> {
     let model = cfg.task.model();
     let (_, max_seq) = cfg.task.seq_range();
@@ -58,7 +49,7 @@ pub fn make_planner(cfg: &ExperimentConfig) -> Box<dyn Planner> {
         PlannerKind::Sublinear => Box::new(SublinearPlanner::new(
             cfg.budget_bytes,
             cfg.mimose.reserve_bytes,
-            transformer_profile(&model, cfg.task.batch(), max_seq, xlnet_factor(cfg.task)),
+            transformer_profile(&model, cfg.task.batch(), max_seq, cfg.task.act_factor()),
         )),
         PlannerKind::Dtr => Box::new(DtrPlanner::new()),
         PlannerKind::Mimose => Box::new(MimosePlanner::with_coordinator(Coordinator::new(
@@ -149,6 +140,43 @@ impl SimEngine {
         self.planner.coordinator()
     }
 
+    /// Mutable Coordinator access (fleet wiring: shared plan cache).
+    pub fn coordinator_mut(&mut self) -> Option<&mut Coordinator> {
+        self.planner.coordinator_mut()
+    }
+
+    /// The budget currently enforced by the ledger.
+    pub fn budget(&self) -> u64 {
+        self.ledger.budget()
+    }
+
+    /// Allocator-level counters (the fleet broker verifies its allocations
+    /// against these: per-round `peak_reserved` must stay under the job's
+    /// granted budget).
+    pub fn ledger_stats(&self) -> crate::memory::AllocStats {
+        self.ledger.stats()
+    }
+
+    /// Rebind this engine to a new memory budget (fleet arbitration): the
+    /// ledger starts enforcing it immediately, the planner invalidates
+    /// budget-dependent cached state so the next iteration replans, and the
+    /// recorded config follows so later `run_epoch` reports carry it.
+    pub fn set_budget(&mut self, budget: u64) {
+        self.ledger.set_budget(budget);
+        self.planner.set_budget(budget);
+        self.cfg.budget_bytes = budget;
+    }
+
+    /// Per-seqlen cached model profile (also serves the fleet's broker-side
+    /// demand math, so profiles are built once per distinct collated size).
+    pub fn profile_for(&mut self, seqlen: usize) -> std::rc::Rc<ModelProfile> {
+        let task = self.cfg.task;
+        let batch = task.batch();
+        std::rc::Rc::clone(self.profile_cache.entry(seqlen).or_insert_with(|| {
+            std::rc::Rc::new(transformer_profile(&task.model(), batch, seqlen, task.act_factor()))
+        }))
+    }
+
     /// Run one epoch (or `cfg.max_iters`), returning the aggregated report.
     pub fn run_epoch(&mut self) -> RunReport {
         let iters = if self.cfg.max_iters > 0 {
@@ -166,11 +194,8 @@ impl SimEngine {
 
     /// Simulate one training iteration at the given collated seqlen.
     pub fn run_iteration(&mut self, seqlen: usize) -> IterationMetrics {
-        let task = self.cfg.task;
-        let batch = task.batch();
-        let profile = std::rc::Rc::clone(self.profile_cache.entry(seqlen).or_insert_with(
-            || std::rc::Rc::new(transformer_profile(&task.model(), batch, seqlen, xlnet_factor(task))),
-        ));
+        let batch = self.cfg.task.batch();
+        let profile = self.profile_for(seqlen);
         let input = InputDesc { batch, seqlen };
         let decision = self.planner.begin_iteration(&input, &profile);
 
@@ -241,10 +266,11 @@ impl SimEngine {
                 LayerKind::Encoder => {
                     let mut v =
                         encoder_residual_components(&model, profile.batch, profile.seqlen);
-                    if self.cfg.task == Task::QaXlnet {
-                        // two-stream attention: widen per-tensor state by 15%
+                    let f = self.cfg.task.act_factor();
+                    if f != 1.0 {
+                        // e.g. XLNet two-stream attention widens per-tensor state
                         for x in &mut v {
-                            *x = (*x as f64 * 1.15) as u64;
+                            *x = (*x as f64 * f) as u64;
                         }
                     }
                     v
@@ -452,6 +478,7 @@ impl SimEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Task;
     use crate::util::GIB;
 
     fn cfg(task: Task, planner: PlannerKind, budget_gb: f64, iters: usize) -> ExperimentConfig {
@@ -540,6 +567,26 @@ mod tests {
     #[test]
     fn fixed_state_too_big_is_an_error() {
         assert!(SimEngine::new(cfg(Task::TcBert, PlannerKind::Mimose, 1.0, 1)).is_err());
+    }
+
+    #[test]
+    fn set_budget_mid_run_tightens_plans_and_enforcement() {
+        let mut e = SimEngine::new(cfg(Task::TcBert, PlannerKind::Mimose, 16.0, 40)).unwrap();
+        let _ = e.run_epoch(); // sheltered collection + estimator train @ 16 GB
+        let m16 = e.run_iteration(300);
+        assert!(!m16.oom_failed);
+        e.set_budget(5 * GIB);
+        assert_eq!(e.budget(), 5 * GIB);
+        let m5 = e.run_iteration(300);
+        assert!(!m5.oom_failed, "must replan cleanly under the tighter budget");
+        assert!(m5.peak_bytes <= 5 * GIB, "new budget enforced: {}", m5.peak_bytes);
+        assert!(
+            m5.n_checkpointed > m16.n_checkpointed,
+            "5 GB must checkpoint more than 16 GB ({} vs {})",
+            m5.n_checkpointed,
+            m16.n_checkpointed
+        );
+        assert_eq!(e.coordinator().unwrap().budget_changes, 1);
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! The budget broker: redistributes ONE device memory budget across N
+//! tenant jobs, every round, from their estimator-predicted demands.
+//!
+//! Mimose's premise — per-mini-batch memory demand is input-dependent and
+//! predictable online (§4.3) — is what makes cross-job arbitration possible
+//! at all: before a round runs, every job can say how much memory its
+//! *pending* input will want. The broker then shares the device:
+//!
+//! 1. **Floors.** Every job is guaranteed its conservative reservation for
+//!    the pending input (the everything-checkpointed peak + reserve): below
+//!    that even sheltered execution OOMs, so floors are never traded away.
+//! 2. **Demand-proportional slack.** Remaining budget goes to jobs in order
+//!    of unmet demand via max-min water-filling: small asks are satisfied
+//!    fully (a job with a short mini-batch takes only what it needs), and
+//!    when aggregate demand overshoots the device, the *most-slack-holding*
+//!    jobs are tightened to the water level — never below their floors, so
+//!    overshoot resolves by replanning (more checkpointing), never by OOM.
+//! 3. **Equal split until trained.** While no estimator has frozen yet there
+//!    is no demand signal; jobs get the static equal split (lifted to their
+//!    floors), exactly the baseline the arbiter later has to beat.
+//!
+//! Allocations are quantised to a grid and held with hysteresis: a budget
+//! rebind invalidates the job's plan cache (see
+//! [`crate::coordinator::Coordinator::set_budget`]), so the broker only
+//! moves a job's budget when the target drifts by at least one grid step.
+//!
+//! The invariant the fleet test pins: Σ allocations ≤ global, always.
+
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// One job's per-round memory picture as the broker sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct JobDemand {
+    /// Hard minimum for the pending input: conservative-plan peak plus the
+    /// fragmentation reserve. Guaranteed.
+    pub floor: u64,
+    /// Estimator-predicted unconstrained peak for the pending input; `None`
+    /// while the job is still in sheltered collection (untrained estimator)
+    /// — the broker then reserves conservatively (the floor).
+    pub predicted: Option<u64>,
+}
+
+/// One round's allocation decision.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Per-job budgets; Σ ≤ global, each ≥ its floor.
+    pub budgets: Vec<u64>,
+    /// Σ demand signals (predicted or conservative) this round.
+    pub predicted_total: u64,
+    /// Aggregate demand exceeded the device: slack-holders were tightened
+    /// to the max-min water level (their Coordinators replan).
+    pub overshoot: bool,
+    /// Broker wall time for this decision, ms.
+    pub decision_ms: f64,
+}
+
+/// Stateful arbiter over one global budget (see module docs).
+pub struct BudgetBroker {
+    global: u64,
+    grid: u64,
+    smoothing: f64,
+    /// EWMA-smoothed demand signal per job (bytes).
+    smoothed: Vec<f64>,
+    /// Allocation currently in force per job (hysteresis baseline).
+    current: Vec<u64>,
+    /// Rounds where demand overshot the device and slack was clawed back.
+    pub overshoots: u64,
+    /// Total allocate() calls.
+    pub decisions: u64,
+    /// Decision latency distribution, ms.
+    pub decision_ms: Summary,
+}
+
+impl BudgetBroker {
+    pub fn new(global: u64, n_jobs: usize, grid_bytes: u64, demand_smoothing: f64) -> Self {
+        BudgetBroker {
+            global,
+            grid: grid_bytes.max(1),
+            smoothing: demand_smoothing.clamp(0.0, 0.99),
+            smoothed: vec![0.0; n_jobs],
+            current: vec![0; n_jobs],
+            overshoots: 0,
+            decisions: 0,
+            decision_ms: Summary::new(),
+        }
+    }
+
+    pub fn global(&self) -> u64 {
+        self.global
+    }
+
+    /// Allocations currently in force (zeros before the first decision).
+    pub fn allocations(&self) -> &[u64] {
+        &self.current
+    }
+
+    /// Redistribute the global budget for one round of `demands` (one entry
+    /// per job, same order every round). Errors only if Σ floors exceeds
+    /// the global budget — an infeasible tenancy the fleet rejects at
+    /// construction from worst-case (max-input) floors.
+    pub fn allocate(&mut self, demands: &[JobDemand]) -> Result<Allocation, String> {
+        let t = Timer::start();
+        let n = demands.len();
+        assert_eq!(n, self.current.len(), "job count fixed at construction");
+        if n == 0 {
+            return Err("no jobs".into());
+        }
+        let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
+        let floor_sum: u64 = floors.iter().sum();
+        if floor_sum > self.global {
+            return Err(format!(
+                "infeasible: floors {} exceed global budget {}",
+                floor_sum, self.global
+            ));
+        }
+
+        // ---- demand signal (equal split until any estimator is trained) ----
+        let any_trained = demands.iter().any(|d| d.predicted.is_some());
+        let equal = self.global / n as u64;
+        let predicted_total: u64 = demands
+            .iter()
+            .map(|d| d.predicted.unwrap_or(d.floor))
+            .sum();
+        let mut wants: Vec<f64> = Vec::with_capacity(n);
+        for (i, d) in demands.iter().enumerate() {
+            let raw = if any_trained {
+                d.predicted.unwrap_or(d.floor) as f64
+            } else {
+                equal as f64
+            };
+            let s = if self.decisions == 0 {
+                raw
+            } else {
+                self.smoothing * self.smoothed[i] + (1.0 - self.smoothing) * raw
+            };
+            self.smoothed[i] = s;
+            // a job never *wants* less than its floor; floor spikes (a big
+            // pending input) bypass smoothing — they are guarantees
+            wants.push(s.max(floors[i] as f64));
+        }
+
+        // ---- floors + max-min water-fill over the slack ----
+        let slack = (self.global - floor_sum) as f64;
+        let extras_want: Vec<f64> =
+            wants.iter().zip(&floors).map(|(w, &f)| (w - f as f64).max(0.0)).collect();
+        let extra_sum: f64 = extras_want.iter().sum();
+        let overshoot = extra_sum > slack;
+        let extras: Vec<f64> = if overshoot {
+            self.overshoots += 1;
+            let level = water_level(&extras_want, slack);
+            extras_want.iter().map(|e| e.min(level)).collect()
+        } else {
+            extras_want
+        };
+
+        // ---- grid quantisation (round extras down; never below floor) ----
+        let mut alloc: Vec<u64> = floors
+            .iter()
+            .zip(&extras)
+            .map(|(&f, &e)| f + (e as u64 / self.grid) * self.grid)
+            .collect();
+
+        // ---- hysteresis: keep in-force budgets when the move is < 1 grid
+        //      step and still feasible (rebinds flush the job's plan cache)
+        let mut kept = alloc.clone();
+        let mut any_kept = false;
+        for i in 0..n {
+            if self.current[i] >= floors[i] && self.current[i].abs_diff(alloc[i]) <= self.grid {
+                kept[i] = self.current[i];
+                any_kept = true;
+            }
+        }
+        if any_kept && kept.iter().sum::<u64>() <= self.global {
+            alloc = kept;
+        }
+
+        debug_assert!(alloc.iter().sum::<u64>() <= self.global);
+        debug_assert!(alloc.iter().zip(&floors).all(|(a, f)| a >= f));
+        self.current.clone_from(&alloc);
+        self.decisions += 1;
+        let decision_ms = t.elapsed_ms();
+        self.decision_ms.add(decision_ms);
+        Ok(Allocation { budgets: alloc, predicted_total, overshoot, decision_ms })
+    }
+}
+
+/// Max-min fairness water level λ with Σ min(xᵢ, λ) = `slack` (caller
+/// guarantees Σ xᵢ > slack ≥ 0): asks below λ are met in full, asks above
+/// it — the slack-holders — are capped at λ.
+fn water_level(asks: &[f64], slack: f64) -> f64 {
+    let mut xs: Vec<f64> = asks.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    let mut remaining = slack;
+    for (i, &x) in xs.iter().enumerate() {
+        let level = remaining / (n - i) as f64;
+        if x >= level {
+            return level;
+        }
+        remaining -= x;
+    }
+    // unreachable while Σ asks > slack; a safe cap otherwise
+    *xs.last().unwrap_or(&0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+    use crate::util::GIB;
+
+    fn d(floor: u64, predicted: Option<u64>) -> JobDemand {
+        JobDemand { floor, predicted }
+    }
+
+    /// Grid of 1 byte: no quantisation, easier arithmetic in tests.
+    fn broker(global: u64, n: usize) -> BudgetBroker {
+        BudgetBroker::new(global, n, 1, 0.0)
+    }
+
+    #[test]
+    fn equal_split_until_any_estimator_trains() {
+        let mut b = broker(8 * GIB, 4);
+        let a = b.allocate(&[d(GIB, None), d(GIB, None), d(GIB, None), d(GIB, None)]).unwrap();
+        assert_eq!(a.budgets, vec![2 * GIB; 4]);
+        assert!(!a.overshoot);
+    }
+
+    #[test]
+    fn floors_always_guaranteed() {
+        let mut b = broker(8 * GIB, 3);
+        // one sheltered job with a huge conservative reservation
+        let a = b
+            .allocate(&[d(5 * GIB, None), d(GIB, Some(GIB)), d(GIB, Some(GIB))])
+            .unwrap();
+        assert!(a.budgets[0] >= 5 * GIB);
+        assert!(a.budgets[1] >= GIB && a.budgets[2] >= GIB);
+        assert!(a.budgets.iter().sum::<u64>() <= 8 * GIB);
+    }
+
+    #[test]
+    fn infeasible_floors_rejected() {
+        let mut b = broker(4 * GIB, 2);
+        assert!(b.allocate(&[d(3 * GIB, None), d(2 * GIB, None)]).is_err());
+    }
+
+    #[test]
+    fn small_demands_satisfied_fully_big_ones_capped() {
+        // slack 4: asks (1, 5) -> the short-input job gets its 1 in full,
+        // the slack-holder is tightened to the 3 water level
+        let mut b = broker(6 * GIB, 2);
+        let a = b
+            .allocate(&[d(GIB, Some(2 * GIB)), d(GIB, Some(6 * GIB))])
+            .unwrap();
+        assert!(a.overshoot, "aggregate demand 8 > 6 global");
+        assert_eq!(a.budgets[0], 2 * GIB, "small ask met in full");
+        assert_eq!(a.budgets[1], 4 * GIB, "big ask capped at floor + level");
+        assert_eq!(b.overshoots, 1);
+    }
+
+    #[test]
+    fn underdemand_leaves_budget_unassigned() {
+        // both jobs want less than the device holds: nobody is inflated
+        let mut b = broker(16 * GIB, 2);
+        let a = b
+            .allocate(&[d(GIB, Some(2 * GIB)), d(GIB, Some(3 * GIB))])
+            .unwrap();
+        assert!(!a.overshoot);
+        assert_eq!(a.budgets, vec![2 * GIB, 3 * GIB]);
+        assert_eq!(a.predicted_total, 5 * GIB);
+    }
+
+    #[test]
+    fn hysteresis_holds_budgets_against_jitter() {
+        let mut b = BudgetBroker::new(8 * GIB, 2, 256 << 20, 0.0);
+        let a1 = b
+            .allocate(&[d(GIB, Some(3 * GIB)), d(GIB, Some(3 * GIB))])
+            .unwrap();
+        // demand wiggles by ~100 MB — under one 256 MB grid step
+        let a2 = b
+            .allocate(&[
+                d(GIB, Some(3 * GIB + (100 << 20))),
+                d(GIB, Some(3 * GIB - (100 << 20))),
+            ])
+            .unwrap();
+        assert_eq!(a1.budgets, a2.budgets, "sub-grid jitter must not rebind");
+        // a full-grid move does rebind
+        let a3 = b.allocate(&[d(GIB, Some(5 * GIB)), d(GIB, Some(2 * GIB))]).unwrap();
+        assert_ne!(a1.budgets, a3.budgets);
+    }
+
+    #[test]
+    fn smoothing_damps_demand_spikes() {
+        let mut spiky = BudgetBroker::new(16 * GIB, 1, 1, 0.9);
+        let _ = spiky.allocate(&[d(GIB, Some(2 * GIB))]).unwrap();
+        let a = spiky.allocate(&[d(GIB, Some(10 * GIB))]).unwrap();
+        // 0.9 * 2 GiB + 0.1 * 10 GiB = 2.8 GiB << 10 GiB
+        assert!(a.budgets[0] < 3 * GIB, "EWMA must damp the spike: {}", a.budgets[0]);
+    }
+
+    #[test]
+    fn decision_latency_recorded() {
+        let mut b = broker(8 * GIB, 2);
+        let a = b.allocate(&[d(GIB, None), d(GIB, None)]).unwrap();
+        assert!(a.decision_ms >= 0.0);
+        assert_eq!(b.decisions, 1);
+        assert_eq!(b.decision_ms.count(), 1);
+        assert_eq!(b.allocations(), b.current.as_slice());
+    }
+
+    #[test]
+    fn water_level_math() {
+        // Σ min(x, λ) = slack
+        let lam = water_level(&[1.0, 5.0], 4.0);
+        assert!((lam - 3.0).abs() < 1e-9);
+        let lam = water_level(&[2.0, 2.0, 8.0], 6.0);
+        assert!((lam - 2.0).abs() < 1e-9);
+        let lam = water_level(&[4.0, 4.0], 4.0);
+        assert!((lam - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_never_exceeds_global_and_respects_floors() {
+        forall(
+            59,
+            300,
+            |r| {
+                let n = r.range_u(1, 6);
+                let specs: Vec<(u64, u64)> = (0..n)
+                    .map(|_| {
+                        let floor = r.range_u(1, 2048) as u64 * (1 << 20);
+                        let pred = r.range_u(0, 16_384) as u64 * (1 << 20);
+                        (floor, pred)
+                    })
+                    .collect();
+                (
+                    specs.iter().map(|s| s.0).collect::<Vec<u64>>(),
+                    specs.iter().map(|s| s.1).collect::<Vec<u64>>(),
+                )
+            },
+            |(floors, preds)| {
+                if floors.is_empty() || floors.len() != preds.len() {
+                    return Ok(());
+                }
+                let global = 16 * GIB;
+                let mut b = BudgetBroker::new(global, floors.len(), 64 << 20, 0.3);
+                let demands: Vec<JobDemand> = floors
+                    .iter()
+                    .zip(preds)
+                    .map(|(&f, &p)| d(f, if p == 0 { None } else { Some(p) }))
+                    .collect();
+                // three rounds: hysteresis and smoothing paths all exercised
+                for _ in 0..3 {
+                    match b.allocate(&demands) {
+                        Err(_) => {
+                            return ensure(
+                                floors.iter().sum::<u64>() > global,
+                                "allocate only errs on infeasible floors",
+                            )
+                        }
+                        Ok(a) => {
+                            ensure(
+                                a.budgets.iter().sum::<u64>() <= global,
+                                &format!("sum {} > global", a.budgets.iter().sum::<u64>()),
+                            )?;
+                            for (bud, &f) in a.budgets.iter().zip(floors) {
+                                ensure(*bud >= f, &format!("budget {bud} below floor {f}"))?;
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

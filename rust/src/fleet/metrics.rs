@@ -1,0 +1,175 @@
+//! Fleet-level accounting: per-round broker decisions, per-job rollups, and
+//! the aggregate report the `mimose fleet` CLI prints — aggregate peak vs.
+//! the global budget, total throughput vs. static equal split, broker
+//! decision latency, and cross-job cache reuse.
+
+use crate::util::stats::Summary;
+
+/// One broker round, as recorded by the [`super::FleetScheduler`].
+#[derive(Clone, Debug)]
+pub struct BrokerDecision {
+    /// 0-based round index.
+    pub round: usize,
+    /// Per-job budgets in force while the round ran; Σ ≤ global.
+    pub allocations: Vec<u64>,
+    /// Σ per-job demand signals (predicted, or conservative reservation).
+    pub predicted_total: u64,
+    /// Aggregate demand exceeded the device; slack-holders were tightened.
+    pub overshoot: bool,
+    /// Broker wall time for the decision, ms.
+    pub decision_ms: f64,
+    /// Σ per-job simulated peak while the round ran (the quantity that must
+    /// never exceed the global budget).
+    pub aggregate_peak: u64,
+}
+
+/// Per-job rollup over a fleet run.
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    /// `<task>#<index>` — tasks may repeat across tenants.
+    pub name: String,
+    pub steps: usize,
+    /// Σ simulated iteration time, ms.
+    pub total_ms: f64,
+    /// Max per-iteration peak bytes.
+    pub peak_bytes: u64,
+    pub oom_failures: usize,
+    pub cache_hit_rate: f64,
+    /// Plans reused from the cross-job shared cache.
+    pub shared_hits: u64,
+    /// Budget rebinds this job absorbed (each one a plan-cache flush).
+    pub budget_changes: u64,
+    /// Budget in force when the run ended.
+    pub final_budget: u64,
+    /// Iterations per simulated second.
+    pub throughput_iters_per_s: f64,
+}
+
+/// Everything a fleet run produced.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub global_budget: u64,
+    /// Broker arbitration (true) vs. static equal split (false).
+    pub arbitrated: bool,
+    pub jobs: Vec<JobSummary>,
+    pub rounds: Vec<BrokerDecision>,
+    /// Cross-job shared-cache totals (0/0 when the cache is disabled).
+    pub shared_cache_hits: u64,
+    pub shared_cache_entries: usize,
+    /// Rounds where aggregate demand overshot the device.
+    pub overshoots: u64,
+}
+
+impl FleetReport {
+    pub fn total_steps(&self) -> usize {
+        self.jobs.iter().map(|j| j.steps).sum()
+    }
+
+    /// Σ simulated time across jobs — the device is time-shared, so this is
+    /// the fleet's wall clock for the workload.
+    pub fn total_ms(&self) -> f64 {
+        self.jobs.iter().map(|j| j.total_ms).sum()
+    }
+
+    /// Fleet throughput: iterations per simulated second over all tenants.
+    pub fn throughput_iters_per_s(&self) -> f64 {
+        let t = self.total_ms();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.total_steps() as f64 * 1e3 / t
+        }
+    }
+
+    /// Max over rounds of Σ per-job peaks — must stay ≤ `global_budget`.
+    pub fn max_aggregate_peak(&self) -> u64 {
+        self.rounds.iter().map(|d| d.aggregate_peak).max().unwrap_or(0)
+    }
+
+    pub fn budget_respected(&self) -> bool {
+        self.max_aggregate_peak() <= self.global_budget
+    }
+
+    pub fn oom_failures(&self) -> usize {
+        self.jobs.iter().map(|j| j.oom_failures).sum()
+    }
+
+    /// Broker decision latency over the run, ms.
+    pub fn broker_ms(&self) -> Summary {
+        let mut s = Summary::new();
+        for d in &self.rounds {
+            s.add(d.decision_ms);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(steps: usize, total_ms: f64, peak: u64) -> JobSummary {
+        JobSummary {
+            name: "t#0".into(),
+            steps,
+            total_ms,
+            peak_bytes: peak,
+            oom_failures: 0,
+            cache_hit_rate: 0.5,
+            shared_hits: 0,
+            budget_changes: 0,
+            final_budget: peak,
+            throughput_iters_per_s: steps as f64 * 1e3 / total_ms,
+        }
+    }
+
+    fn decision(round: usize, peak: u64, ms: f64) -> BrokerDecision {
+        BrokerDecision {
+            round,
+            allocations: vec![peak],
+            predicted_total: peak,
+            overshoot: false,
+            decision_ms: ms,
+            aggregate_peak: peak,
+        }
+    }
+
+    #[test]
+    fn aggregation_math() {
+        let r = FleetReport {
+            global_budget: 100,
+            arbitrated: true,
+            jobs: vec![job(10, 500.0, 40), job(30, 1500.0, 60)],
+            rounds: vec![decision(0, 90, 0.1), decision(1, 110, 0.3)],
+            shared_cache_hits: 2,
+            shared_cache_entries: 5,
+            overshoots: 1,
+        };
+        assert_eq!(r.total_steps(), 40);
+        assert!((r.total_ms() - 2000.0).abs() < 1e-9);
+        assert!((r.throughput_iters_per_s() - 20.0).abs() < 1e-9);
+        assert_eq!(r.max_aggregate_peak(), 110);
+        assert!(!r.budget_respected(), "110 > 100");
+        assert_eq!(r.oom_failures(), 0);
+        let s = r.broker_ms();
+        assert_eq!(s.count(), 2);
+        assert!((s.mean() - 0.2).abs() < 1e-12);
+        assert!((s.max() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = FleetReport {
+            global_budget: 0,
+            arbitrated: false,
+            jobs: vec![],
+            rounds: vec![],
+            shared_cache_hits: 0,
+            shared_cache_entries: 0,
+            overshoots: 0,
+        };
+        assert_eq!(r.throughput_iters_per_s(), 0.0);
+        assert_eq!(r.max_aggregate_peak(), 0);
+        assert!(r.budget_respected());
+    }
+}

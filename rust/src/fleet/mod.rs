@@ -1,0 +1,52 @@
+//! Fleet: a multi-job budget arbiter that time-shares ONE GPU memory budget
+//! across concurrent input-dynamic training jobs.
+//!
+//! Mimose plans checkpointing for one job under one fixed budget; its core
+//! insight — per-mini-batch memory demand is input-dependent and predictable
+//! online (§4.3) — is exactly what a multi-tenant device needs: when job A's
+//! mini-batch is short, its slack can fund job B's long one. Static per-job
+//! budgets (the Capuchin/DTR-style assumption) waste that slack; the fleet
+//! re-shares it every round.
+//!
+//! ```text
+//!             one device budget (global)
+//!   +--------------------------------------------------+
+//!   |  BudgetBroker: floors + max-min demand water-fill |
+//!   +---+--------------+--------------+----------------+
+//!       v              v              v
+//!   [ job 0 ]      [ job 1 ]      [ job 2 ]      ... interleaved rounds
+//!   Coordinator    Coordinator    Coordinator
+//!   + SimEngine    + SimEngine    + SimEngine
+//!       \              |              /
+//!        +--- SharedPlanCache (model signature, size, budget) ---+
+//! ```
+//!
+//! * [`broker::BudgetBroker`] — collects every job's estimator-predicted
+//!   peak for its pending input and redistributes the global budget:
+//!   guaranteed per-job floors (conservative reservations — sheltered jobs
+//!   get exactly these), demand-proportional slack by max-min water-fill,
+//!   equal split until estimators train. Predicted aggregate overshoot is
+//!   resolved by tightening the most-slack-holding jobs so their
+//!   Coordinators replan — never by OOM.
+//! * [`scheduler::FleetScheduler`] — steps jobs in interleaved rounds,
+//!   applies budget rebinds ([`crate::engine::sim::SimEngine::set_budget`]
+//!   → [`crate::coordinator::Coordinator::set_budget`] plan-cache
+//!   invalidation), and verifies the broker against the per-job memory
+//!   ledgers (Σ per-round peaks ≤ global).
+//! * [`crate::scheduler::SharedPlanCache`] — cross-job plan reuse scoped by
+//!   model signature; reuse is budget-conservative (only plans generated
+//!   under an equal-or-tighter budget are served).
+//! * [`metrics::FleetReport`] — aggregate peak vs. global budget, per-job
+//!   throughput, broker decision latency, cross-job cache hit rate.
+//!
+//! Entry points: `mimose fleet` (CLI), `examples/fleet.rs`, the `[fleet]`
+//! TOML section ([`crate::config::FleetConfig`]), and
+//! `tests/fleet_arbiter.rs` (the budget-safety + beats-equal-split pin).
+
+pub mod broker;
+pub mod metrics;
+pub mod scheduler;
+
+pub use broker::{Allocation, BudgetBroker, JobDemand};
+pub use metrics::{BrokerDecision, FleetReport, JobSummary};
+pub use scheduler::{FleetJob, FleetScheduler};

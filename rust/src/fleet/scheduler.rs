@@ -1,0 +1,381 @@
+//! The fleet scheduler: N tenant training jobs — each its own
+//! [`Coordinator`]-driven [`SimEngine`] — stepped in interleaved rounds
+//! against one broker-shared memory budget.
+//!
+//! Per round:
+//! 1. every job draws its pending mini-batch and reports a [`JobDemand`]
+//!    (conservative floor + estimator-predicted peak, if trained);
+//! 2. the [`BudgetBroker`] redistributes the global budget; an aggregate
+//!    overshoot is resolved by tightening the most-slack-holding jobs, whose
+//!    Coordinators then replan under the smaller budget — never by OOM;
+//! 3. each rebound job gets [`SimEngine::set_budget`]; every job runs one
+//!    iteration; per-job ledger peaks are summed into the round's
+//!    `aggregate_peak` (the broker-verification number: ≤ global, always).
+//!
+//! With `shared_cache` on, identical-architecture tenants exchange plans
+//! through a [`crate::scheduler::SharedPlanCache`] keyed by (model
+//! signature, input size, budget). Reshelters compose safely: a Coordinator
+//! purges its own contributions from the shared cache when a reshelter
+//! invalidates the estimator they were built from.
+
+use super::broker::{BudgetBroker, JobDemand};
+use super::metrics::{BrokerDecision, FleetReport, JobSummary};
+use crate::config::{ExperimentConfig, FleetConfig, PlannerKind, Task};
+use crate::coordinator::Coordinator;
+use crate::data::InputStream;
+use crate::engine::sim::SimEngine;
+use crate::metrics::RunReport;
+use crate::planners::InputDesc;
+use crate::scheduler::{model_signature, shared_plan_cache, SharedCacheHandle};
+use crate::util::timer::Timer;
+
+/// One tenant: engine + its own input stream + the budget in force.
+pub struct FleetJob {
+    pub name: String,
+    task: Task,
+    engine: SimEngine,
+    stream: InputStream,
+    /// Seqlen drawn for the upcoming round (demand and step must agree).
+    pending: Option<usize>,
+    budget: u64,
+    pub report: RunReport,
+    /// Conservative reservation memo per seqlen — collated sizes repeat
+    /// heavily (the plan-cache premise) and the broker consults floors
+    /// every round. Profiles themselves come from the engine's own cache.
+    floor_cache: std::collections::BTreeMap<usize, u64>,
+}
+
+impl FleetJob {
+    fn new(task: Task, idx: usize, fleet: &FleetConfig, budget: u64) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::new(task, PlannerKind::Mimose, 1.0);
+        cfg.budget_bytes = budget;
+        cfg.seed = fleet.seed + idx as u64;
+        cfg.max_iters = fleet.steps;
+        cfg.mimose = fleet.mimose.clone();
+        cfg.coordinator = fleet.coordinator.clone();
+        let seed = cfg.seed;
+        let engine = SimEngine::new(cfg)
+            .map_err(|e| format!("job {idx} ({}): {e}", task.name()))?;
+        Ok(FleetJob {
+            name: format!("{}#{idx}", task.name()),
+            task,
+            engine,
+            stream: InputStream::new(task, seed),
+            pending: None,
+            budget,
+            report: RunReport::new("mimose-fleet", budget),
+            floor_cache: std::collections::BTreeMap::new(),
+        })
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn coordinator(&self) -> Option<&Coordinator> {
+        self.engine.coordinator()
+    }
+
+    /// Memoised conservative reservation for a seqlen (profiles come from
+    /// the engine's per-seqlen cache, so each is built at most once).
+    fn floor_for(&mut self, seqlen: usize, reserve: u64) -> u64 {
+        if let Some(&f) = self.floor_cache.get(&seqlen) {
+            return f;
+        }
+        let profile = self.engine.profile_for(seqlen);
+        let f = Coordinator::conservative_reservation(&profile, reserve);
+        self.floor_cache.insert(seqlen, f);
+        f
+    }
+
+    /// Draw the next mini-batch and report this round's memory picture.
+    fn draw_demand(&mut self, configured_floor: u64, reserve: u64) -> JobDemand {
+        let seqlen = self.stream.next_seqlen();
+        self.pending = Some(seqlen);
+        let floor = self.floor_for(seqlen, reserve).max(configured_floor);
+        let profile = self.engine.profile_for(seqlen);
+        let input = InputDesc { batch: self.task.batch(), seqlen };
+        let predicted = self
+            .engine
+            .coordinator()
+            .and_then(|c| c.predicted_demand_bytes(&input, &profile));
+        JobDemand { floor, predicted }
+    }
+
+    /// Worst-case floor (max collated input): the tenancy must fit these.
+    fn worst_floor(&mut self, configured_floor: u64, reserve: u64) -> u64 {
+        let (_, max_seq) = self.task.seq_range();
+        self.floor_for(max_seq, reserve).max(configured_floor)
+    }
+
+    fn rebind(&mut self, budget: u64) {
+        if budget != self.budget {
+            self.engine.set_budget(budget);
+            self.budget = budget;
+        }
+    }
+
+    /// Run the round's iteration (the seqlen the demand was drawn for).
+    fn step(&mut self) -> crate::metrics::IterationMetrics {
+        let seqlen = self.pending.take().expect("draw_demand before step");
+        self.engine.run_iteration(seqlen)
+    }
+}
+
+/// Drives N jobs through interleaved rounds under one shared budget.
+pub struct FleetScheduler {
+    cfg: FleetConfig,
+    jobs: Vec<FleetJob>,
+    broker: BudgetBroker,
+    shared: Option<SharedCacheHandle>,
+}
+
+impl FleetScheduler {
+    pub fn new(cfg: FleetConfig) -> Result<Self, String> {
+        let n = cfg.tasks.len();
+        if n == 0 {
+            return Err("fleet needs at least one job".into());
+        }
+        let equal = cfg.global_budget_bytes / n as u64;
+        let mut jobs = Vec::with_capacity(n);
+        for (idx, &task) in cfg.tasks.iter().enumerate() {
+            jobs.push(FleetJob::new(task, idx, &cfg, equal)?);
+        }
+        if cfg.arbitrated {
+            // the broker guarantees floors, so the worst-case floors (every
+            // tenant at its maximum collated input simultaneously) must fit
+            let worst: u64 = jobs
+                .iter_mut()
+                .map(|j| j.worst_floor(cfg.floor_bytes, cfg.mimose.reserve_bytes))
+                .sum();
+            if worst > cfg.global_budget_bytes {
+                return Err(format!(
+                    "infeasible tenancy: worst-case floors {} exceed the global budget {}",
+                    worst, cfg.global_budget_bytes
+                ));
+            }
+        }
+        // cross-job plan reuse (reshelters purge their own stale entries —
+        // see Coordinator::begin_iteration)
+        let shared = if cfg.shared_cache {
+            let handle = shared_plan_cache(cfg.cache_capacity);
+            for job in &mut jobs {
+                let sig = model_signature(
+                    &job.task.model(),
+                    job.task.batch(),
+                    job.task.act_factor(),
+                );
+                if let Some(c) = job.engine.coordinator_mut() {
+                    c.set_shared_cache(handle.clone(), sig);
+                }
+            }
+            Some(handle)
+        } else {
+            None
+        };
+        let broker = BudgetBroker::new(
+            cfg.global_budget_bytes,
+            n,
+            cfg.grid_bytes,
+            cfg.demand_smoothing,
+        );
+        Ok(FleetScheduler { cfg, jobs, broker, shared })
+    }
+
+    pub fn jobs(&self) -> &[FleetJob] {
+        &self.jobs
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Run `cfg.steps` interleaved rounds and report.
+    pub fn run(&mut self) -> FleetReport {
+        let n = self.jobs.len();
+        let equal = self.cfg.global_budget_bytes / n as u64;
+        let mut rounds: Vec<BrokerDecision> = Vec::with_capacity(self.cfg.steps);
+        for round in 0..self.cfg.steps {
+            // 1) demands for the round's pending inputs
+            let demands: Vec<JobDemand> = self
+                .jobs
+                .iter_mut()
+                .map(|j| j.draw_demand(self.cfg.floor_bytes, self.cfg.mimose.reserve_bytes))
+                .collect();
+
+            // 2) broker (or the static equal split it has to beat)
+            let (allocations, predicted_total, overshoot, decision_ms) = if self.cfg.arbitrated
+            {
+                let a = self
+                    .broker
+                    .allocate(&demands)
+                    .expect("worst-case floors validated at construction");
+                (a.budgets, a.predicted_total, a.overshoot, a.decision_ms)
+            } else {
+                let t = Timer::start();
+                let total = demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).sum();
+                (vec![equal; n], total, false, t.elapsed_ms())
+            };
+            if self.cfg.arbitrated {
+                for (job, &b) in self.jobs.iter_mut().zip(&allocations) {
+                    job.rebind(b);
+                }
+            }
+
+            // 3) step every job; verify against the ledgers
+            let mut aggregate_peak = 0u64;
+            for job in &mut self.jobs {
+                let m = job.step();
+                aggregate_peak += m.peak_bytes;
+                job.report.push(m);
+            }
+            rounds.push(BrokerDecision {
+                round,
+                allocations,
+                predicted_total,
+                overshoot,
+                decision_ms,
+                aggregate_peak,
+            });
+        }
+
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let stats = j.engine.coordinator().map(|c| c.stats());
+                JobSummary {
+                    name: j.name.clone(),
+                    steps: j.report.iters.len(),
+                    total_ms: j.report.total_ms(),
+                    peak_bytes: j.report.peak_bytes(),
+                    oom_failures: j.report.oom_failures(),
+                    cache_hit_rate: j.report.cache_hit_rate(),
+                    shared_hits: stats.as_ref().map(|s| s.shared_hits).unwrap_or(0),
+                    budget_changes: stats.as_ref().map(|s| s.budget_changes).unwrap_or(0),
+                    final_budget: j.budget,
+                    throughput_iters_per_s: j.report.throughput_iters_per_s(),
+                }
+            })
+            .collect();
+        let (shared_hits, shared_entries) = match &self.shared {
+            Some(h) => {
+                let c = h.borrow();
+                (c.stats().hits, c.len())
+            }
+            None => (0, 0),
+        };
+        FleetReport {
+            global_budget: self.cfg.global_budget_bytes,
+            arbitrated: self.cfg.arbitrated,
+            jobs,
+            rounds,
+            shared_cache_hits: shared_hits,
+            shared_cache_entries: shared_entries,
+            overshoots: self.broker.overshoots,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::GIB;
+
+    fn fleet_cfg(tasks: Vec<Task>, global_gb: u64, steps: usize) -> FleetConfig {
+        FleetConfig {
+            global_budget_bytes: global_gb * GIB,
+            steps,
+            tasks,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn two_jobs_complete_within_the_shared_budget() {
+        let mut f =
+            FleetScheduler::new(fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 60)).unwrap();
+        let r = f.run();
+        assert_eq!(r.jobs.len(), 2);
+        for j in &r.jobs {
+            assert_eq!(j.steps, 60, "{} incomplete", j.name);
+            assert_eq!(j.oom_failures, 0, "{} OOMed", j.name);
+        }
+        assert!(r.budget_respected(), "aggregate peak {}", r.max_aggregate_peak());
+        for d in &r.rounds {
+            assert!(d.allocations.iter().sum::<u64>() <= 12 * GIB);
+        }
+    }
+
+    #[test]
+    fn infeasible_tenancy_rejected_up_front() {
+        // four QA jobs cannot fit their conservative floors into 8 GB
+        let cfg = fleet_cfg(vec![Task::QaXlnet; 4], 8, 10);
+        assert!(FleetScheduler::new(cfg).is_err());
+    }
+
+    #[test]
+    fn empty_fleet_rejected() {
+        assert!(FleetScheduler::new(fleet_cfg(vec![], 8, 10)).is_err());
+    }
+
+    #[test]
+    fn equal_split_mode_never_rebinds() {
+        let cfg = FleetConfig {
+            arbitrated: false,
+            ..fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40)
+        };
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert!(!r.arbitrated);
+        for j in &r.jobs {
+            assert_eq!(j.budget_changes, 0);
+            assert_eq!(j.final_budget, 6 * GIB);
+        }
+        assert_eq!(r.overshoots, 0);
+    }
+
+    #[test]
+    fn identical_tenants_reuse_each_others_plans() {
+        let mut f =
+            FleetScheduler::new(fleet_cfg(vec![Task::TcBert, Task::TcBert], 14, 80)).unwrap();
+        let r = f.run();
+        assert!(
+            r.shared_cache_hits > 0,
+            "same-architecture tenants must exchange plans"
+        );
+        assert!(r.jobs.iter().map(|j| j.shared_hits).sum::<u64>() > 0);
+        assert!(r.shared_cache_entries > 0);
+    }
+
+    #[test]
+    fn shared_cache_off_means_no_cross_hits() {
+        let cfg = FleetConfig {
+            shared_cache: false,
+            ..fleet_cfg(vec![Task::TcBert, Task::TcBert], 14, 40)
+        };
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.shared_cache_hits, 0);
+        assert_eq!(r.shared_cache_entries, 0);
+    }
+
+    #[test]
+    fn broker_tightens_slack_holders_on_overshoot() {
+        // a tight device forces demand above the budget once estimators
+        // train: overshoot rounds must appear and still never OOM
+        let mut f =
+            FleetScheduler::new(fleet_cfg(vec![Task::QaBert, Task::TcBert], 9, 80)).unwrap();
+        let r = f.run();
+        assert!(r.overshoots > 0, "9 GB must be contended");
+        assert_eq!(r.oom_failures(), 0, "overshoot resolves by replanning, not OOM");
+        assert!(r.budget_respected());
+        let rebinds: u64 = r.jobs.iter().map(|j| j.budget_changes).sum();
+        assert!(rebinds > 0, "tightening must rebind at least one tenant");
+    }
+}

@@ -38,6 +38,17 @@
 //! per-phase accounting (cache hit rate, replan latency) the `mimose sim`
 //! CLI reports.
 //!
+//! ## Multi-tenant fleets
+//!
+//! The [`fleet`] module scales the pipeline from one job to N: a
+//! [`fleet::BudgetBroker`] re-shares a single device memory budget across
+//! concurrent jobs every round from their estimator-predicted demands
+//! (floors guaranteed, slack max-min water-filled, overshoot resolved by
+//! replanning rather than OOM), and identical-architecture tenants reuse
+//! each other's plans through a signature-scoped
+//! [`scheduler::SharedPlanCache`]. See `mimose fleet` and
+//! `examples/fleet.rs`.
+//!
 //! See DESIGN.md for the architecture and the paper-experiment index, and
 //! `examples/` for runnable entry points (`examples/coordinator.rs` drives
 //! the state machine directly).
@@ -48,6 +59,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod estimator;
+pub mod fleet;
 pub mod planners;
 pub mod runtime;
 pub mod scheduler;

@@ -4,6 +4,7 @@
 //!   sim      run one simulated experiment (task x planner x budget)
 //!   sweep    planner comparison across budgets for a task
 //!   plan     inspect the plan Mimose would generate for a given input
+//!   fleet    run N jobs time-sharing one budget through the broker
 //!   info     print model/task/artifact inventory
 //!
 //! Examples:
@@ -11,10 +12,14 @@
 //!   mimose sim --config experiment.toml
 //!   mimose sweep --task qa-bert --lo 4 --hi 7 --points 4
 //!   mimose plan --task tc-bert --budget-gb 5 --seqlen 300
+//!   mimose fleet --tasks tc-bert,qa-bert,mc-roberta --budget-gb 16 --compare
 
-use mimose::config::{CoordinatorConfig, ExperimentConfig, MimoseConfig, PlannerKind, Task};
+use mimose::config::{
+    CoordinatorConfig, ExperimentConfig, FleetConfig, MimoseConfig, PlannerKind, Task,
+};
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
 use mimose::engine::sim::SimEngine;
+use mimose::fleet::{FleetReport, FleetScheduler};
 use mimose::metrics::RunReport;
 use mimose::model::transformer_profile;
 use mimose::planners::{InputDesc, IterationMode};
@@ -32,6 +37,7 @@ fn main() {
         "sim" => cmd_sim(&args),
         "sweep" => cmd_sweep(&args),
         "plan" => cmd_plan(&args),
+        "fleet" => cmd_fleet(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
@@ -39,6 +45,7 @@ fn main() {
                  subcommands:\n  sim     run one simulated experiment\n  \
                  sweep   compare planners across budgets\n  \
                  plan    inspect a Mimose plan for an input size\n  \
+                 fleet   N jobs time-sharing one budget (broker arbitration)\n  \
                  info    model/task/artifact inventory\n\n\
                  `mimose <cmd> --help` for options; real training lives in\n\
                  `cargo run --release --example train_e2e`."
@@ -278,6 +285,132 @@ fn cmd_plan(args: &[String]) {
         println!("  est. peak       : {}", fmt_bytes(profile.peak_bytes(&plan.ids())));
         println!("  recompute extra : {:.1}% of fwd FLOPs",
                  100.0 * profile.recompute_flops(&plan.ids()) as f64 / profile.fwd_flops() as f64);
+    }
+}
+
+fn report_fleet(r: &FleetReport) {
+    println!(
+        "  mode              : {}",
+        if r.arbitrated { "arbitrated (broker)" } else { "static equal split" }
+    );
+    println!(
+        "  {:<16} {:>6} {:>12} {:>10} {:>8} {:>7} {:>8} {:>11}",
+        "job", "steps", "sim time s", "peak", "cache%", "shared", "rebinds", "final budget"
+    );
+    for j in &r.jobs {
+        println!(
+            "  {:<16} {:>6} {:>12.2} {:>10} {:>7.1}% {:>7} {:>8} {:>11}",
+            j.name,
+            j.steps,
+            j.total_ms / 1e3,
+            fmt_bytes(j.peak_bytes),
+            j.cache_hit_rate * 100.0,
+            j.shared_hits,
+            j.budget_changes,
+            fmt_bytes(j.final_budget),
+        );
+    }
+    println!(
+        "  aggregate peak    : {} of {} global ({})",
+        fmt_bytes(r.max_aggregate_peak()),
+        fmt_bytes(r.global_budget),
+        if r.budget_respected() { "respected" } else { "EXCEEDED" },
+    );
+    let bms = r.broker_ms();
+    if bms.count() > 0 {
+        println!(
+            "  broker            : {} decisions, {} overshoots resolved, {:.4} ms mean / {:.4} ms max",
+            bms.count(),
+            r.overshoots,
+            bms.mean(),
+            bms.max()
+        );
+    }
+    println!(
+        "  shared cache      : {} cross-job hits, {} entries",
+        r.shared_cache_hits, r.shared_cache_entries
+    );
+    println!("  OOM failures      : {}", r.oom_failures());
+    println!("  fleet throughput  : {:.2} iters/s (simulated)", r.throughput_iters_per_s());
+}
+
+fn cmd_fleet(args: &[String]) {
+    let cli = parse_or_exit(
+        Cli::new("mimose fleet", "N jobs time-sharing one memory budget")
+            .opt("config", "", "TOML config path with a [fleet] section")
+            .opt("tasks", "tc-bert,qa-bert", "comma-separated task list (tasks may repeat)")
+            .opt("budget-gb", "16.0", "GLOBAL memory budget shared by all jobs (GiB)")
+            .opt("floor-gb", "2.0", "configured per-job guaranteed floor (GiB)")
+            .opt("steps", "200", "interleaved rounds (iterations per job)")
+            .opt("seed", "42", "base rng seed (job i uses seed+i)")
+            .opt("grid-mb", "128", "broker allocation granularity (MiB)")
+            .opt("cache-capacity", "512", "shared plan-cache capacity (0 = unbounded)")
+            .flag("no-shared-cache", "disable cross-job plan reuse")
+            .flag("equal-split", "static equal split instead of broker arbitration")
+            .flag("compare", "also run the other mode and print the speedup"),
+        args,
+    );
+    let cfg = if !cli.get("config").is_empty() {
+        FleetConfig::from_file(&cli.get("config")).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+    } else {
+        let tasks: Vec<Task> = cli
+            .get("tasks")
+            .split(',')
+            .map(|s| {
+                Task::parse(s.trim()).unwrap_or_else(|| {
+                    eprintln!("unknown task '{s}'");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+        FleetConfig {
+            global_budget_bytes: (cli.get_f64("budget-gb") * GIB as f64) as u64,
+            floor_bytes: (cli.get_f64("floor-gb") * GIB as f64) as u64,
+            steps: cli.get_usize("steps"),
+            shared_cache: !cli.get_flag("no-shared-cache"),
+            cache_capacity: cli.get_usize("cache-capacity"),
+            grid_bytes: (cli.get_f64("grid-mb") * (1u64 << 20) as f64) as u64,
+            arbitrated: !cli.get_flag("equal-split"),
+            tasks,
+            seed: cli.get_u64("seed"),
+            ..Default::default()
+        }
+    };
+    let run_mode = |arbitrated: bool| -> FleetReport {
+        let mut c = cfg.clone();
+        c.arbitrated = arbitrated;
+        match FleetScheduler::new(c) {
+            Ok(mut f) => f.run(),
+            Err(e) => {
+                eprintln!("cannot run fleet: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+    println!(
+        "fleet: {} jobs sharing {:.1} GB (seed {})",
+        cfg.tasks.len(),
+        cfg.global_budget_gb(),
+        cfg.seed
+    );
+    let r = run_mode(cfg.arbitrated);
+    report_fleet(&r);
+    if cli.get_flag("compare") {
+        let other = run_mode(!cfg.arbitrated);
+        println!("\n--- comparison mode ---");
+        report_fleet(&other);
+        let (fleet_r, equal_r) =
+            if cfg.arbitrated { (&r, &other) } else { (&other, &r) };
+        let speedup = equal_r.total_ms() / fleet_r.total_ms().max(1e-9);
+        println!(
+            "\narbitrated vs equal split: {:.2} vs {:.2} iters/s -> {:.3}x speedup",
+            fleet_r.throughput_iters_per_s(),
+            equal_r.throughput_iters_per_s(),
+            speedup
+        );
     }
 }
 

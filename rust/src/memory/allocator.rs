@@ -103,6 +103,21 @@ impl CachingAllocator {
         self.budget
     }
 
+    /// Rebind the allocator to a new budget (fleet arbitration re-shares the
+    /// device between rounds). Shrinking flushes cached (fully-free)
+    /// segments immediately so reservations made under the old, larger
+    /// budget don't linger above the new one; live segments are untouched —
+    /// the caller guarantees the new budget covers live state (the broker's
+    /// per-job floor). Returns the reserved bytes after the change.
+    pub fn set_budget(&mut self, budget: u64) -> u64 {
+        let shrinking = budget < self.budget;
+        self.budget = budget;
+        if shrinking && self.stats.reserved > budget {
+            self.empty_cache();
+        }
+        self.stats.reserved
+    }
+
     pub fn stats(&self) -> AllocStats {
         self.stats
     }
@@ -340,6 +355,34 @@ mod tests {
             let _ = a.alloc(1000).unwrap();
         }
         assert_eq!(a.stats().reserved, SMALL_SEGMENT);
+    }
+
+    #[test]
+    fn set_budget_grow_and_shrink() {
+        let mut a = CachingAllocator::new(8 << 20);
+        assert!(a.alloc(10 << 20).is_err());
+        a.set_budget(16 << 20);
+        let id = a.alloc(10 << 20).unwrap();
+        // cache the segment, then shrink below it: the flush must release it
+        a.free(id);
+        assert!(a.stats().reserved >= 10 << 20);
+        let reserved = a.set_budget(4 << 20);
+        assert_eq!(reserved, 0, "cached segments released on shrink");
+        assert_eq!(a.budget(), 4 << 20);
+        assert!(a.alloc(6 << 20).is_err(), "new budget enforced");
+        assert!(a.alloc(2 << 20).is_ok());
+    }
+
+    #[test]
+    fn set_budget_shrink_keeps_live_segments() {
+        let mut a = CachingAllocator::new(16 << 20);
+        let live = a.alloc(6 << 20).unwrap();
+        let dead = a.alloc(6 << 20).unwrap();
+        a.free(dead);
+        a.set_budget(8 << 20);
+        // the live tensor's segment survives; only the cached one went away
+        assert_eq!(a.size_of(live), Some(size_class(6 << 20)));
+        assert!(a.stats().reserved <= 8 << 20);
     }
 
     #[test]

@@ -61,6 +61,15 @@ impl Ledger {
         self.alloc.budget()
     }
 
+    /// Rebind the ledger to a new budget mid-run (the fleet broker re-shares
+    /// one device between rounds). Fixed state and live tensors survive; on
+    /// shrink, cached allocator segments are flushed so the old budget's
+    /// reservations don't outlive it. The caller (broker) guarantees
+    /// `budget` covers the live working set via per-job floors.
+    pub fn set_budget(&mut self, budget: u64) {
+        self.alloc.set_budget(budget);
+    }
+
     pub fn tick(&mut self) -> u64 {
         self.clock += 1;
         self.clock
@@ -237,5 +246,20 @@ mod tests {
         let mut l = Ledger::new(4 << 20);
         let _ = l.create(3 << 20, TensorClass::Activation, 0, 1.0).unwrap();
         assert!(l.create(3 << 20, TensorClass::Activation, 0, 1.0).is_err());
+    }
+
+    #[test]
+    fn set_budget_rebinds_enforcement_and_keeps_live_tensors() {
+        let mut l = Ledger::new(16 << 20);
+        let fixed = l.create(4 << 20, TensorClass::Fixed, usize::MAX, 0.0).unwrap();
+        let dead = l.create(8 << 20, TensorClass::Activation, 0, 1.0).unwrap();
+        l.destroy(dead); // leaves a cached segment behind
+        l.set_budget(8 << 20);
+        assert_eq!(l.budget(), 8 << 20);
+        assert!(l.stats().reserved <= 8 << 20, "shrink flushed the cached segment");
+        assert!(l.get(fixed).is_some(), "fixed state survives the rebind");
+        // new budget enforced: 4 MiB fixed + 6 MiB does not fit in 8 MiB
+        assert!(l.create(6 << 20, TensorClass::Activation, 0, 1.0).is_err());
+        assert!(l.create(2 << 20, TensorClass::Activation, 0, 1.0).is_ok());
     }
 }

@@ -132,6 +132,17 @@ impl RunReport {
         }
     }
 
+    /// Simulated throughput: iterations per simulated second (the fleet
+    /// arbiter's figure of merit vs. static equal split).
+    pub fn throughput_iters_per_s(&self) -> f64 {
+        let t = self.total_ms();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.iters.len() as f64 * 1e3 / t
+        }
+    }
+
     /// Fraction of total time spent in planning (Fig 5's key series).
     pub fn planning_share(&self) -> f64 {
         let t = self.total_ms();
@@ -234,6 +245,16 @@ mod tests {
         assert_eq!(r.cache_hit_rate(), 0.0);
         assert_eq!(r.replan_ms_mean(), 0.0);
         assert_eq!(r.replan_ms_max(), 0.0);
+        assert_eq!(r.throughput_iters_per_s(), 0.0);
+    }
+
+    #[test]
+    fn throughput_is_iters_per_simulated_second() {
+        let mut r = RunReport::new("mimose", 6 << 30);
+        r.push(iter(400.0, 0.0, 0.0));
+        r.push(iter(600.0, 0.0, 0.0));
+        // 2 iterations over 1 simulated second
+        assert!((r.throughput_iters_per_s() - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -65,6 +65,14 @@ impl Planner for MimosePlanner {
     fn coordinator(&self) -> Option<&Coordinator> {
         Some(&self.0)
     }
+
+    fn coordinator_mut(&mut self) -> Option<&mut Coordinator> {
+        Some(&mut self.0)
+    }
+
+    fn set_budget(&mut self, budget: u64) {
+        self.0.set_budget(budget);
+    }
 }
 
 #[cfg(test)]

@@ -90,6 +90,17 @@ pub trait Planner {
     fn coordinator(&self) -> Option<&Coordinator> {
         None
     }
+
+    /// Mutable Coordinator access (fleet wiring: shared plan cache).
+    fn coordinator_mut(&mut self) -> Option<&mut Coordinator> {
+        None
+    }
+
+    /// Rebind the planner to a new memory budget mid-run (the fleet broker
+    /// re-shares one device between rounds). Planners caching
+    /// budget-dependent state must invalidate it; the default is a no-op
+    /// (Baseline plans nothing, DTR reacts to the ledger's budget directly).
+    fn set_budget(&mut self, _budget: u64) {}
 }
 
 /// Layers a plan may checkpoint: everything with positive savings.
@@ -179,6 +190,13 @@ impl Planner for SublinearPlanner {
             phase: Phase::Executing,
         }
     }
+
+    fn set_budget(&mut self, budget: u64) {
+        if budget != self.budget {
+            self.budget = budget;
+            self.plan = None; // static plan was sized for the old budget
+        }
+    }
 }
 
 #[cfg(test)]
@@ -241,5 +259,27 @@ mod tests {
         let (small, _) = profiles();
         let ls = checkpointable(&small);
         assert_eq!(ls.len(), small.layers.len() - 1); // head excluded
+    }
+
+    #[test]
+    fn sublinear_set_budget_rebuilds_the_static_plan() {
+        let (_, max) = profiles();
+        let mut s = SublinearPlanner::new(3 * GIB, GIB / 2, max.clone());
+        let input = InputDesc { batch: 32, seqlen: 300 };
+        let d1 = s.begin_iteration(&input, &max);
+        // loosening the budget must shrink (or at least re-derive) the plan
+        s.set_budget(16 * GIB);
+        let d2 = s.begin_iteration(&input, &max);
+        let (p1, p2) = match (d1.mode, d2.mode) {
+            (IterationMode::Planned(a), IterationMode::Planned(b)) => (a, b),
+            _ => panic!(),
+        };
+        assert!(p2.len() < p1.len(), "16 GB plan must checkpoint less than 3 GB");
+        // unchanged budget keeps the cached plan
+        s.set_budget(16 * GIB);
+        match s.begin_iteration(&input, &max).mode {
+            IterationMode::Planned(p3) => assert_eq!(p2, p3),
+            _ => panic!(),
+        }
     }
 }

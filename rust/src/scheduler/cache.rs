@@ -1,16 +1,33 @@
-//! Plan cache (paper §5 "responsive execution"): plans are indexed by input
-//! size; similar input sizes (within a relative tolerance) share a plan —
-//! "the memory usages of similar input sizes are similar, and the generated
-//! plans are also similar. Therefore, they can also be the plans of each
-//! other."
+//! Plan caches (paper §5 "responsive execution").
+//!
+//! [`PlanCache`] is the per-job cache: plans are indexed by input size;
+//! similar input sizes (within a relative tolerance) share a plan — "the
+//! memory usages of similar input sizes are similar, and the generated plans
+//! are also similar. Therefore, they can also be the plans of each other."
+//! It can be bounded: under an adversarial input-size stream (every
+//! mini-batch a new quantisation cell) an unbounded cache grows forever, so
+//! a configurable capacity evicts the least-recently-hit entry.
+//!
+//! [`SharedPlanCache`] is the fleet-level cache: entries are scoped by a
+//! *model signature* (architecture + batch) and the planning budget, so
+//! identical-architecture tenants in a multi-job fleet reuse each other's
+//! plans. Reuse is conservative: a plan generated under an equal-or-tighter
+//! budget checkpoints at least as much as one planned for a larger budget,
+//! so serving it to a tenant with more memory is always safe (merely
+//! sub-optimal); the nearest (largest qualifying) budget wins.
 
 use super::Plan;
+use crate::config::ModelSpec;
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 #[derive(Clone, Debug, Default)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the capacity bound (least-recently-hit first).
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -24,21 +41,89 @@ impl CacheStats {
     }
 }
 
-/// Input-size-indexed plan cache with relative-tolerance matching.
+/// Recency bookkeeping shared by both plan caches: a monotonic clock, a
+/// key -> stamp map, and the stamp -> key inverse (stamps are unique, so
+/// the first `by_stamp` entry is always the least-recently-hit key).
+#[derive(Clone, Debug)]
+struct LruIndex<K: Ord + Copy> {
+    recency: BTreeMap<K, u64>,
+    by_stamp: BTreeMap<u64, K>,
+    clock: u64,
+}
+
+impl<K: Ord + Copy> LruIndex<K> {
+    fn new() -> Self {
+        LruIndex { recency: BTreeMap::new(), by_stamp: BTreeMap::new(), clock: 0 }
+    }
+
+    /// Mark `key` most-recent (on hit and on insert).
+    fn touch(&mut self, key: K) {
+        self.clock += 1;
+        if let Some(old) = self.recency.insert(key, self.clock) {
+            self.by_stamp.remove(&old);
+        }
+        self.by_stamp.insert(self.clock, key);
+    }
+
+    /// Drop and return the least-recently-hit key.
+    fn pop_lru(&mut self) -> Option<K> {
+        if let Some((&stamp, &victim)) = self.by_stamp.iter().next() {
+            self.by_stamp.remove(&stamp);
+            self.recency.remove(&victim);
+            Some(victim)
+        } else {
+            None
+        }
+    }
+
+    /// Forget one key (no-op if untracked).
+    fn remove(&mut self, key: &K) {
+        if let Some(stamp) = self.recency.remove(key) {
+            self.by_stamp.remove(&stamp);
+        }
+    }
+
+    fn clear(&mut self) {
+        self.recency.clear();
+        self.by_stamp.clear();
+    }
+}
+
+/// Input-size-indexed plan cache with relative-tolerance matching and an
+/// optional capacity (0 = unbounded) with least-recently-hit eviction.
 #[derive(Clone, Debug)]
 pub struct PlanCache {
     plans: BTreeMap<u64, Plan>,
+    lru: LruIndex<u64>,
+    capacity: usize,
     tolerance: f64,
     stats: CacheStats,
 }
 
 impl PlanCache {
+    /// Unbounded cache (the single-job default).
     pub fn new(tolerance: f64) -> Self {
-        PlanCache { plans: BTreeMap::new(), tolerance, stats: CacheStats::default() }
+        Self::with_capacity(tolerance, 0)
+    }
+
+    /// Bounded cache: at most `capacity` entries (0 = unbounded); inserting
+    /// beyond it evicts the least-recently-hit entry.
+    pub fn with_capacity(tolerance: f64, capacity: usize) -> Self {
+        PlanCache {
+            plans: BTreeMap::new(),
+            lru: LruIndex::new(),
+            capacity,
+            tolerance,
+            stats: CacheStats::default(),
+        }
     }
 
     pub fn stats(&self) -> &CacheStats {
         &self.stats
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn len(&self) -> usize {
@@ -59,10 +144,11 @@ impl PlanCache {
             .plans
             .range(lo..=hi)
             .min_by_key(|(k, _)| k.abs_diff(input_size))
-            .map(|(_, p)| p.clone());
+            .map(|(k, p)| (*k, p.clone()));
         match best {
-            Some(p) => {
+            Some((k, p)) => {
                 self.stats.hits += 1;
+                self.lru.touch(k);
                 Some(p)
             }
             None => {
@@ -74,10 +160,11 @@ impl PlanCache {
 
     /// Exact-key lookup (used with pre-quantised plan sizes).
     pub fn lookup_exact(&mut self, key: u64) -> Option<Plan> {
-        match self.plans.get(&key) {
+        match self.plans.get(&key).cloned() {
             Some(p) => {
                 self.stats.hits += 1;
-                Some(p.clone())
+                self.lru.touch(key);
+                Some(p)
             }
             None => {
                 self.stats.misses += 1;
@@ -87,12 +174,145 @@ impl PlanCache {
     }
 
     pub fn insert(&mut self, input_size: u64, plan: Plan) {
+        let novel = !self.plans.contains_key(&input_size);
+        if novel && self.capacity > 0 && self.plans.len() >= self.capacity {
+            if let Some(victim) = self.lru.pop_lru() {
+                self.plans.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
         self.plans.insert(input_size, plan);
+        self.lru.touch(input_size);
     }
 
-    /// Invalidate everything (e.g. budget changed).
+    /// Invalidate everything (e.g. budget changed). Stats survive.
     pub fn clear(&mut self) {
         self.plans.clear();
+        self.lru.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-job shared cache (fleet)
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over the architecture fields, batch size, and the task's
+/// activation-widening factor (XLNet-style two-stream attention changes
+/// per-layer residual bytes without changing the `ModelSpec`). Two jobs
+/// with equal signatures plan over identical per-layer shapes for any given
+/// input size, so their plans are interchangeable (budget permitting).
+pub fn model_signature(spec: &ModelSpec, batch: usize, act_factor: f64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: u64| {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat(spec.vocab as u64);
+    eat(spec.hidden as u64);
+    eat(spec.layers as u64);
+    eat(spec.heads as u64);
+    eat(spec.ffn as u64);
+    eat(spec.max_seq as u64);
+    eat(batch as u64);
+    eat(act_factor.to_bits());
+    h
+}
+
+type SharedKey = (u64, u64, u64); // (signature, quantised size, budget)
+
+/// Fleet-wide plan cache keyed by (model signature, input size, budget),
+/// bounded with least-recently-hit eviction like [`PlanCache`].
+#[derive(Debug)]
+pub struct SharedPlanCache {
+    entries: BTreeMap<SharedKey, Plan>,
+    lru: LruIndex<SharedKey>,
+    capacity: usize,
+    stats: CacheStats,
+}
+
+/// Handle the fleet hands each job's Coordinator (single-threaded engines;
+/// borrows are confined to one lookup/insert at a time).
+pub type SharedCacheHandle = Rc<RefCell<SharedPlanCache>>;
+
+/// Build a shareable cache handle (`capacity` 0 = unbounded).
+pub fn shared_plan_cache(capacity: usize) -> SharedCacheHandle {
+    Rc::new(RefCell::new(SharedPlanCache::new(capacity)))
+}
+
+impl SharedPlanCache {
+    pub fn new(capacity: usize) -> Self {
+        SharedPlanCache {
+            entries: BTreeMap::new(),
+            lru: LruIndex::new(),
+            capacity,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Find a reusable plan for `(signature, size)` under `budget`: any
+    /// entry planned with a budget `<= budget` is conservative (checkpoints
+    /// at least as much), so it is safe for this tenant; the largest
+    /// qualifying budget (least conservative) wins.
+    pub fn lookup(&mut self, signature: u64, size: u64, budget: u64) -> Option<Plan> {
+        let lo = (signature, size, 0u64);
+        let hi = (signature, size, budget);
+        let found = self
+            .entries
+            .range(lo..=hi)
+            .next_back()
+            .map(|(k, p)| (*k, p.clone()));
+        match found {
+            Some((k, p)) => {
+                self.stats.hits += 1;
+                self.lru.touch(k);
+                Some(p)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, signature: u64, size: u64, budget: u64, plan: Plan) {
+        let key = (signature, size, budget);
+        let novel = !self.entries.contains_key(&key);
+        if novel && self.capacity > 0 && self.entries.len() >= self.capacity {
+            if let Some(victim) = self.lru.pop_lru() {
+                self.entries.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        self.entries.insert(key, plan);
+        self.lru.touch(key);
+    }
+
+    /// Drop one entry — a tenant invalidating a plan it contributed (e.g.
+    /// its estimator is about to be retrained after a reshelter).
+    pub fn remove(&mut self, signature: u64, size: u64, budget: u64) {
+        let key = (signature, size, budget);
+        if self.entries.remove(&key).is_some() {
+            self.lru.remove(&key);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.lru.clear();
     }
 }
 
@@ -205,6 +425,58 @@ mod tests {
     }
 
     #[test]
+    fn capacity_evicts_least_recently_hit() {
+        let mut c = PlanCache::with_capacity(0.0, 2);
+        c.insert(100, Plan::of([1]));
+        c.insert(200, Plan::of([2]));
+        let _ = c.lookup_exact(100); // 100 is now fresher than 200
+        c.insert(300, Plan::of([3]));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup_exact(200).is_none(), "LRU entry 200 evicted");
+        assert!(c.lookup_exact(100).is_some());
+        assert!(c.lookup_exact(300).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn overwrite_at_capacity_does_not_evict() {
+        let mut c = PlanCache::with_capacity(0.0, 2);
+        c.insert(100, Plan::of([1]));
+        c.insert(200, Plan::of([2]));
+        c.insert(100, Plan::of([9])); // same key: update, no eviction
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.lookup_exact(100), Some(Plan::of([9])));
+    }
+
+    #[test]
+    fn capacity_respected_under_adversarial_stream() {
+        // every insert a novel quantisation cell — the unbounded cache would
+        // hold 1000 entries; the bound must hold at 8 with 992 evictions.
+        let mut c = PlanCache::with_capacity(0.05, 8);
+        for i in 0..1000u64 {
+            c.insert(10_000 + i * 7919, Plan::of([i as usize]));
+            assert!(c.len() <= 8, "capacity exceeded at insert {i}");
+        }
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.stats().evictions, 992);
+        // the 8 most recent survive
+        for i in 992..1000u64 {
+            assert!(c.lookup_exact(10_000 + i * 7919).is_some(), "entry {i} missing");
+        }
+    }
+
+    #[test]
+    fn zero_capacity_means_unbounded() {
+        let mut c = PlanCache::new(0.05);
+        for i in 0..500u64 {
+            c.insert(1_000_000 + i * 997, Plan::none());
+        }
+        assert_eq!(c.len(), 500);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
     fn prop_hit_implies_key_within_tolerance() {
         forall(
             23,
@@ -233,5 +505,69 @@ mod tests {
                 }
             },
         );
+    }
+
+    // ---- shared cross-job cache ----
+
+    #[test]
+    fn signature_distinguishes_architectures_batch_and_act_factor() {
+        let bert = ModelSpec::bert_base();
+        let roberta = ModelSpec::roberta_base();
+        assert_eq!(model_signature(&bert, 32, 1.0), model_signature(&bert, 32, 1.0));
+        assert_ne!(model_signature(&bert, 32, 1.0), model_signature(&roberta, 32, 1.0));
+        assert_ne!(model_signature(&bert, 32, 1.0), model_signature(&bert, 12, 1.0));
+        // same spec+batch but wider residuals (two-stream attention) must
+        // NOT exchange plans — the 1.0 tenant's plan under-checkpoints
+        assert_ne!(model_signature(&bert, 32, 1.0), model_signature(&bert, 32, 1.15));
+    }
+
+    #[test]
+    fn shared_reuse_requires_same_signature() {
+        let mut c = SharedPlanCache::new(0);
+        c.insert(1, 9600, 6_000, Plan::of([1, 2]));
+        assert_eq!(c.lookup(1, 9600, 6_000), Some(Plan::of([1, 2])));
+        assert!(c.lookup(2, 9600, 6_000).is_none(), "other signature isolated");
+        assert!(c.lookup(1, 9601, 6_000).is_none(), "other size isolated");
+    }
+
+    #[test]
+    fn shared_reuse_is_budget_conservative() {
+        // a plan from a tighter budget is safe for a looser one, never the
+        // other way around
+        let mut c = SharedPlanCache::new(0);
+        c.insert(7, 9600, 5_000, Plan::of([1, 2, 3]));
+        assert!(c.lookup(7, 9600, 6_000).is_some(), "tighter-budget plan reused");
+        assert!(c.lookup(7, 9600, 5_000).is_some(), "equal budget reused");
+        assert!(c.lookup(7, 9600, 4_999).is_none(), "looser-budget plan refused");
+    }
+
+    #[test]
+    fn shared_nearest_qualifying_budget_wins() {
+        let mut c = SharedPlanCache::new(0);
+        c.insert(7, 9600, 4_000, Plan::of([1, 2, 3, 4]));
+        c.insert(7, 9600, 5_000, Plan::of([1, 2]));
+        assert_eq!(c.lookup(7, 9600, 6_000), Some(Plan::of([1, 2])), "least conservative");
+        assert_eq!(c.lookup(7, 9600, 4_500), Some(Plan::of([1, 2, 3, 4])));
+    }
+
+    #[test]
+    fn shared_capacity_evicts_lru() {
+        let mut c = SharedPlanCache::new(2);
+        c.insert(1, 100, 10, Plan::of([1]));
+        c.insert(1, 200, 10, Plan::of([2]));
+        let _ = c.lookup(1, 100, 10); // freshen (1,100,10)
+        c.insert(1, 300, 10, Plan::of([3]));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup(1, 200, 10).is_none());
+        assert!(c.lookup(1, 100, 10).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn shared_handle_is_shareable() {
+        let h = shared_plan_cache(4);
+        let h2 = h.clone();
+        h.borrow_mut().insert(1, 50, 10, Plan::of([5]));
+        assert_eq!(h2.borrow_mut().lookup(1, 50, 10), Some(Plan::of([5])));
     }
 }

@@ -10,7 +10,9 @@
 
 pub mod cache;
 
-pub use cache::PlanCache;
+pub use cache::{
+    model_signature, shared_plan_cache, PlanCache, SharedCacheHandle, SharedPlanCache,
+};
 
 use std::collections::BTreeSet;
 
@@ -280,5 +282,79 @@ mod tests {
         let a = greedy_schedule(&layers, 333, 0.1);
         let b = greedy_schedule(&layers, 333, 0.1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_similar_sizes_checkpoint_earliest_timestamp_first() {
+        // Fig 11 / Algorithm 1 line 12: layers of similar memory size (one
+        // ±10% bucket) must be taken in forward-timestamp order — an early
+        // layer's restore lands late in the backward pass when most
+        // activations are already freed. Generate layer sets whose sizes all
+        // sit within 9.5% of the largest (one bucket at tol 0.10), with the
+        // forward order randomly permuted, and check the plan is exactly a
+        // prefix of the timestamp ordering.
+        forall(
+            41,
+            300,
+            |r: &mut Rng| {
+                let n = r.range_u(2, 12);
+                let max_b = r.range_u(1_000, 100_000) as u64;
+                let jitter_cap = (max_b as f64 * 0.095) as usize;
+                let sizes: Vec<u64> =
+                    (0..n).map(|_| max_b - r.range_u(0, jitter_cap) as u64).collect();
+                let mut order: Vec<u64> = (0..n as u64).collect();
+                r.shuffle(&mut order);
+                let excess = r.range_u(1, (n as u64 * max_b) as usize) as u64;
+                (sizes, order, excess)
+            },
+            |(sizes, order, excess)| {
+                // shrink candidates can break the generator's invariants
+                // (single bucket, order a permutation); skip those
+                let n = sizes.len();
+                if n == 0 || order.len() != n || *excess == 0 {
+                    return Ok(());
+                }
+                let mut perm = order.clone();
+                perm.sort_unstable();
+                if perm != (0..n as u64).collect::<Vec<u64>>() {
+                    return Ok(());
+                }
+                let max_b = *sizes.iter().max().unwrap();
+                if sizes.iter().any(|&s| s as f64 <= max_b as f64 * 0.9) {
+                    return Ok(());
+                }
+                let layers: Vec<LayerEst> = sizes
+                    .iter()
+                    .zip(order)
+                    .enumerate()
+                    .map(|(i, (&b, &o))| LayerEst {
+                        id: i,
+                        est_bytes: b,
+                        ckpt_bytes: 0,
+                        fwd_order: o as usize,
+                    })
+                    .collect();
+                let plan = greedy_schedule(&layers, *excess, 0.10);
+                ensure(!plan.is_empty(), "positive excess must checkpoint something")?;
+                // plan == the plan.len() earliest-timestamp layers
+                let mut by_ts: Vec<&LayerEst> = layers.iter().collect();
+                by_ts.sort_by_key(|l| l.fwd_order);
+                for (rank, l) in by_ts.iter().enumerate() {
+                    let expect = rank < plan.len();
+                    ensure(
+                        plan.is_checkpointed(l.id) == expect,
+                        &format!(
+                            "layer id {} (ts {}) in-plan={} but timestamp rank {} of {}",
+                            l.id,
+                            l.fwd_order,
+                            plan.is_checkpointed(l.id),
+                            rank,
+                            plan.len()
+                        ),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 }
