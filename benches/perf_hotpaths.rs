@@ -82,9 +82,11 @@ fn main() {
     }));
 
     rule("Perf — fleet broker");
-    let mut broker = mimose::fleet::BudgetBroker::new(24 * GIB, 8, 128 << 20, 0.5);
+    let mut broker = mimose::fleet::BudgetBroker::new(24 * GIB, 128 << 20, 0.5);
     let demands: Vec<mimose::fleet::JobDemand> = (0..8u64)
         .map(|i| mimose::fleet::JobDemand {
+            id: i,
+            weight: 1.0 + (i % 4) as f64,
             floor: GIB + (i % 3) * (GIB / 2),
             predicted: Some(3 * GIB + i * (GIB / 4)),
         })

@@ -3,32 +3,55 @@
 //! one device budget through the broker, and the run is compared against
 //! the static equal split the arbiter has to beat.
 //!
+//! With `--events` the job set becomes dynamic: a high-priority (weight 3)
+//! multiple-choice job arrives a quarter of the way in (round R), and the
+//! original multiple-choice job departs at the halfway mark (round 2R) —
+//! the broker reclaims its budget and re-fills the slack
+//! weight-proportionally, and the arrival's identical model signature hits
+//! plans the departed tenant contributed.
+//!
 //!   cargo run --release --example fleet
 //!   cargo run --release --example fleet -- --budget-gb 12 --steps 400
+//!   cargo run --release --example fleet -- --events
 
-use mimose::config::{FleetConfig, Task};
+use mimose::config::{FleetConfig, FleetEvent, JobSpec, Task};
 use mimose::fleet::FleetScheduler;
 use mimose::util::cli::Cli;
 use mimose::util::{fmt_bytes, GIB};
 
 fn main() {
     let cli = Cli::new("fleet example", "multi-job budget arbitration demo")
-        .opt("budget-gb", "14.0", "global budget shared by the three jobs (GiB)")
+        .opt("budget-gb", "16.0", "global budget shared by the tenants (GiB)")
         .opt("steps", "200", "interleaved rounds")
         .opt("seed", "7", "base rng seed")
+        .flag("events", "scripted arrival (weight 3) + departure mid-run")
         .parse();
 
-    let cfg = FleetConfig {
+    let steps = cli.get_usize("steps");
+    let mut cfg = FleetConfig {
         global_budget_bytes: (cli.get_f64("budget-gb") * GIB as f64) as u64,
-        steps: cli.get_usize("steps"),
+        steps,
         seed: cli.get_u64("seed"),
-        tasks: vec![Task::QaBert, Task::TcBert, Task::McRoberta],
+        jobs: JobSpec::from_tasks(&[Task::QaBert, Task::TcBert, Task::McRoberta]),
         ..Default::default()
     };
+    if cli.get_flag("events") {
+        cfg.events = vec![
+            FleetEvent::Arrive {
+                spec: JobSpec {
+                    name: Some("prio".into()),
+                    ..JobSpec::weighted(Task::McRoberta, 3.0)
+                },
+                at_round: steps / 4,
+            },
+            FleetEvent::Depart { job: "MC-Roberta#2".into(), at_round: steps / 2 },
+        ];
+    }
 
     println!(
-        "== fleet: {} tenants, one {} budget ==\n",
-        cfg.tasks.len(),
+        "== fleet: {} tenants, {} scripted events, one {} budget ==\n",
+        cfg.jobs.len(),
+        cfg.events.len(),
         fmt_bytes(cfg.global_budget_bytes)
     );
 
@@ -44,8 +67,10 @@ fn main() {
         );
         for j in &r.jobs {
             println!(
-                "  {:<14} {:>4} steps  {:>8.2} s  peak {:>10}  cache {:>5.1}%  {} shared hits",
+                "  {:<14} w{:<4.1} {:>8} {:>4} steps  {:>8.2} s  peak {:>10}  cache {:>5.1}%  {} shared hits",
                 j.name,
+                j.weight,
+                j.lifetime_label(),
                 j.steps,
                 j.total_ms / 1e3,
                 fmt_bytes(j.peak_bytes),
@@ -61,7 +86,11 @@ fn main() {
             r.overshoots,
             r.oom_failures(),
         );
-        println!("  throughput: {:.2} iters/s\n", r.throughput_iters_per_s());
+        println!(
+            "  weighted fairness {:.3} (mean Jain), throughput {:.2} iters/s\n",
+            r.weighted_jain_mean(),
+            r.throughput_iters_per_s()
+        );
         results.push(r);
     }
 

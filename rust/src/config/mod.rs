@@ -319,6 +319,106 @@ impl ExperimentConfig {
     }
 }
 
+/// One tenant job of the fleet: a task plus its scheduling attributes.
+/// `[[fleet.jobs]]` in TOML (or the `fleet.tasks` shorthand, which expands
+/// to weight-1 specs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub task: Task,
+    /// Priority/SLA weight in the broker's water-fill: slack fills
+    /// proportional to weight (weighted max-min), floors are unaffected —
+    /// a guaranteed minimum is a guarantee regardless of priority. Must be
+    /// > 0; 1.0 is the neutral default.
+    pub weight: f64,
+    /// Stable name referenced by depart events and printed in reports.
+    /// Defaults to `<task>#<id>` with the job's fleet-assigned id.
+    pub name: Option<String>,
+    /// Iterations this job needs before it completes and departs on its
+    /// own, releasing its budget (0 = run until the fleet ends).
+    pub steps: usize,
+}
+
+impl JobSpec {
+    pub fn new(task: Task) -> Self {
+        JobSpec { task, weight: 1.0, name: None, steps: 0 }
+    }
+
+    pub fn weighted(task: Task, weight: f64) -> Self {
+        JobSpec { weight, ..JobSpec::new(task) }
+    }
+
+    /// Expand a plain task list into neutral (weight-1, unbounded) specs —
+    /// the PR-2 static-fleet shorthand.
+    pub fn from_tasks(tasks: &[Task]) -> Vec<JobSpec> {
+        tasks.iter().map(|&t| JobSpec::new(t)).collect()
+    }
+
+    /// The single source of truth for spec validity (used by the TOML
+    /// loader and by the fleet scheduler for programmatic configs).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.weight <= 0.0 || !self.weight.is_finite() {
+            return Err(format!("job weight must be finite and > 0, got {}", self.weight));
+        }
+        Ok(())
+    }
+
+    /// Read one `[[fleet.jobs]]` element.
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let task = Task::parse(&doc.get_str("task", ""))
+            .ok_or_else(|| format!("job entry needs a valid task (got '{}')", doc.get_str("task", "")))?;
+        let raw_name = doc.get_str("name", "");
+        let name = if raw_name.is_empty() { None } else { Some(raw_name) };
+        let spec = JobSpec {
+            task,
+            weight: doc.get_f64("weight", 1.0),
+            name,
+            steps: doc.get_usize("steps", 0),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// A mid-run change to the fleet's job set. `[[fleet.events]]` in TOML.
+/// Events are applied at the *start* of `at_round`: a departing job does
+/// not run that round, an arriving job does.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetEvent {
+    /// A new tenant joins the fleet.
+    Arrive { spec: JobSpec, at_round: usize },
+    /// The tenant named `job` leaves; its budget is reclaimed and
+    /// re-filled next round. Matches `JobSpec::name` or the default
+    /// `<task>#<id>` name.
+    Depart { job: String, at_round: usize },
+}
+
+impl FleetEvent {
+    pub fn at_round(&self) -> usize {
+        match self {
+            FleetEvent::Arrive { at_round, .. } | FleetEvent::Depart { at_round, .. } => *at_round,
+        }
+    }
+
+    /// Read one `[[fleet.events]]` element (`kind = "arrive" | "depart"`).
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let round = doc
+            .get("round")
+            .and_then(|v| v.as_usize())
+            .ok_or("event needs 'round = <n>'")?;
+        match doc.get_str("kind", "").as_str() {
+            "arrive" => Ok(FleetEvent::Arrive { spec: JobSpec::from_doc(doc)?, at_round: round }),
+            "depart" => {
+                let job = doc.get_str("job", "");
+                if job.is_empty() {
+                    return Err("depart event needs 'job = \"<name>\"'".into());
+                }
+                Ok(FleetEvent::Depart { job, at_round: round })
+            }
+            other => Err(format!("event kind must be 'arrive' or 'depart', got '{other}'")),
+        }
+    }
+}
+
 /// The multi-job fleet: N concurrent training jobs time-sharing ONE device
 /// memory budget through the [`crate::fleet`] broker. `[fleet]` in TOML.
 #[derive(Clone, Debug)]
@@ -345,10 +445,14 @@ pub struct FleetConfig {
     /// Broker arbitration on (the fleet) or off (static equal split — the
     /// baseline the arbiter must beat).
     pub arbitrated: bool,
-    /// One entry per tenant job; tasks may repeat (identical-architecture
-    /// tenants then share plans through the fleet cache).
-    pub tasks: Vec<Task>,
-    /// Base RNG seed; job `i` streams inputs with seed `seed + i`.
+    /// One spec per tenant job present at round 0; tasks may repeat
+    /// (identical-architecture tenants then share plans through the fleet
+    /// cache). Arrivals mid-run come from `events`.
+    pub jobs: Vec<JobSpec>,
+    /// Scripted arrivals/departures, applied at the start of their round.
+    pub events: Vec<FleetEvent>,
+    /// Base RNG seed; the job with fleet id `i` streams inputs with seed
+    /// `seed + i` (ids are assigned in arrival order, initial jobs first).
     pub seed: u64,
     pub mimose: MimoseConfig,
     pub coordinator: CoordinatorConfig,
@@ -365,7 +469,8 @@ impl Default for FleetConfig {
             grid_bytes: 128 << 20,
             demand_smoothing: 0.5,
             arbitrated: true,
-            tasks: vec![Task::TcBert, Task::QaBert],
+            jobs: JobSpec::from_tasks(&[Task::TcBert, Task::QaBert]),
+            events: Vec::new(),
             seed: 42,
             mimose: MimoseConfig::default(),
             coordinator: CoordinatorConfig::default(),
@@ -375,23 +480,73 @@ impl Default for FleetConfig {
 
 impl FleetConfig {
     /// Load from the `[fleet]` section of a TOML-subset doc; missing keys
-    /// fall back to defaults. `fleet.tasks` is an array of task names.
+    /// fall back to defaults. Jobs come from `[[fleet.jobs]]` elements
+    /// (task/weight/name/steps) or, when none are given, the `fleet.tasks`
+    /// array-of-names shorthand (all weight 1). Events come from
+    /// `[[fleet.events]]`.
+    /// Reject misspellings of a `[[section]]` array of tables that would
+    /// otherwise be silently ignored: the single-bracket `[section]` typo
+    /// (keys without a numeric index, which `table_array` skips) and the
+    /// plain-array spelling `key = [...]` under `[fleet]`.
+    fn check_array_section(doc: &Doc, section: &str) -> Result<(), String> {
+        if doc.get(section).is_some() {
+            return Err(format!(
+                "'{section}' is not a plain key: write '[[{section}]]' (array of tables)"
+            ));
+        }
+        for key in doc.section_keys(section) {
+            let idx = key[section.len() + 1..].split('.').next().unwrap_or("");
+            if idx.parse::<usize>().is_err() {
+                return Err(format!(
+                    "'[{section}]' is not a table: write '[[{section}]]' (array of tables)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse just the `[[fleet.events]]` elements of a doc — also the
+    /// loader behind `mimose fleet --events <file>`, so the typo guard
+    /// applies on that path too.
+    pub fn events_from_doc(doc: &Doc) -> Result<Vec<FleetEvent>, String> {
+        Self::check_array_section(doc, "fleet.events")?;
+        let mut events = Vec::new();
+        for t in &doc.table_array("fleet.events") {
+            events.push(FleetEvent::from_doc(t)?);
+        }
+        Ok(events)
+    }
+
     pub fn from_doc(doc: &Doc) -> Result<Self, String> {
         let d = FleetConfig::default();
-        let tasks = match doc.get("fleet.tasks") {
-            None => d.tasks,
-            Some(v) => {
-                let arr = v.as_arr().ok_or("fleet.tasks must be an array")?;
-                let mut ts = Vec::with_capacity(arr.len());
-                for item in arr {
-                    let name = item.as_str().ok_or("fleet.tasks entries must be strings")?;
-                    ts.push(
-                        Task::parse(name).ok_or_else(|| format!("unknown task '{name}'"))?,
-                    );
+        Self::check_array_section(doc, "fleet.jobs")?;
+        let job_tables = doc.table_array("fleet.jobs");
+        let jobs = if !job_tables.is_empty() {
+            if doc.get("fleet.tasks").is_some() {
+                return Err("give [[fleet.jobs]] or fleet.tasks, not both".into());
+            }
+            let mut js = Vec::with_capacity(job_tables.len());
+            for t in &job_tables {
+                js.push(JobSpec::from_doc(t)?);
+            }
+            js
+        } else {
+            match doc.get("fleet.tasks") {
+                None => d.jobs,
+                Some(v) => {
+                    let arr = v.as_arr().ok_or("fleet.tasks must be an array")?;
+                    let mut ts = Vec::with_capacity(arr.len());
+                    for item in arr {
+                        let name = item.as_str().ok_or("fleet.tasks entries must be strings")?;
+                        ts.push(
+                            Task::parse(name).ok_or_else(|| format!("unknown task '{name}'"))?,
+                        );
+                    }
+                    JobSpec::from_tasks(&ts)
                 }
-                ts
             }
         };
+        let events = Self::events_from_doc(doc)?;
         Ok(FleetConfig {
             global_budget_bytes: (doc.get_f64("fleet.global_budget_gb", 16.0) * GIB as f64)
                 as u64,
@@ -402,7 +557,8 @@ impl FleetConfig {
             grid_bytes: (doc.get_f64("fleet.grid_mb", 128.0) * (1u64 << 20) as f64) as u64,
             demand_smoothing: doc.get_f64("fleet.demand_smoothing", d.demand_smoothing),
             arbitrated: doc.get_bool("fleet.arbitrated", d.arbitrated),
-            tasks,
+            jobs,
+            events,
             seed: doc.get_usize("fleet.seed", 42) as u64,
             mimose: MimoseConfig::from_doc(doc),
             coordinator: CoordinatorConfig::from_doc(doc),
@@ -514,7 +670,12 @@ mod tests {
         assert_eq!(c.grid_bytes, 256 << 20);
         assert!((c.demand_smoothing - 0.3).abs() < 1e-12);
         assert!(c.arbitrated, "default on");
-        assert_eq!(c.tasks, vec![Task::TcBert, Task::QaBert, Task::McRoberta]);
+        assert_eq!(
+            c.jobs,
+            JobSpec::from_tasks(&[Task::TcBert, Task::QaBert, Task::McRoberta]),
+            "tasks shorthand expands to weight-1 specs"
+        );
+        assert!(c.events.is_empty());
         assert_eq!(c.seed, 9);
         assert_eq!(c.mimose.collect_iters, 8, "[mimose] section shared with fleet");
     }
@@ -531,9 +692,90 @@ mod tests {
     fn fleet_config_defaults() {
         let c = FleetConfig::default();
         assert_eq!(c.global_budget_bytes, 16 * GIB);
-        assert_eq!(c.tasks.len(), 2);
+        assert_eq!(c.jobs.len(), 2);
+        assert!(c.jobs.iter().all(|j| j.weight == 1.0 && j.steps == 0));
+        assert!(c.events.is_empty());
         assert!(c.arbitrated);
         assert!(c.shared_cache);
         assert!(c.grid_bytes > 0);
+    }
+
+    #[test]
+    fn fleet_jobs_array_of_tables() {
+        let doc = Doc::parse(
+            "[fleet]\nglobal_budget_gb = 18.0\n\
+             [[fleet.jobs]]\ntask = \"tc-bert\"\nweight = 3.0\nname = \"prio\"\n\
+             [[fleet.jobs]]\ntask = \"qa-bert\"\nsteps = 50\n",
+        )
+        .unwrap();
+        let c = FleetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.jobs.len(), 2);
+        assert_eq!(c.jobs[0].task, Task::TcBert);
+        assert_eq!(c.jobs[0].weight, 3.0);
+        assert_eq!(c.jobs[0].name.as_deref(), Some("prio"));
+        assert_eq!(c.jobs[0].steps, 0);
+        assert_eq!(c.jobs[1].task, Task::QaBert);
+        assert_eq!(c.jobs[1].weight, 1.0, "weight defaults to neutral");
+        assert!(c.jobs[1].name.is_none());
+        assert_eq!(c.jobs[1].steps, 50);
+    }
+
+    #[test]
+    fn fleet_events_array_of_tables() {
+        let doc = Doc::parse(
+            "[[fleet.events]]\nkind = \"arrive\"\nround = 25\ntask = \"tc-bert\"\nweight = 2.5\n\
+             [[fleet.events]]\nkind = \"depart\"\nround = 50\njob = \"QA-Bert#1\"\n",
+        )
+        .unwrap();
+        let c = FleetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.events.len(), 2);
+        assert_eq!(
+            c.events[0],
+            FleetEvent::Arrive {
+                spec: JobSpec::weighted(Task::TcBert, 2.5),
+                at_round: 25
+            }
+        );
+        assert_eq!(
+            c.events[1],
+            FleetEvent::Depart { job: "QA-Bert#1".into(), at_round: 50 }
+        );
+        assert_eq!(c.events[0].at_round(), 25);
+        assert_eq!(c.events[1].at_round(), 50);
+    }
+
+    #[test]
+    fn fleet_config_rejects_bad_jobs_and_events() {
+        // non-positive weight
+        let doc = Doc::parse("[[fleet.jobs]]\ntask = \"tc-bert\"\nweight = 0.0\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        // jobs and tasks together are ambiguous
+        let doc = Doc::parse(
+            "[fleet]\ntasks = [\"tc-bert\"]\n[[fleet.jobs]]\ntask = \"tc-bert\"\n",
+        )
+        .unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        // unknown event kind
+        let doc = Doc::parse("[[fleet.events]]\nkind = \"pause\"\nround = 5\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        // depart without a job name
+        let doc = Doc::parse("[[fleet.events]]\nkind = \"depart\"\nround = 5\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        // arrive without a task
+        let doc = Doc::parse("[[fleet.events]]\nkind = \"arrive\"\nround = 5\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        // missing round must not silently mean round 0
+        let doc = Doc::parse("[[fleet.events]]\nkind = \"depart\"\njob = \"x\"\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        // single-bracket typo must not silently fall back to defaults
+        let doc = Doc::parse("[fleet.jobs]\ntask = \"qa-bert\"\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[fleet.events]\nkind = \"depart\"\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        // ...and neither must the plain-array spelling
+        let doc = Doc::parse("[fleet]\njobs = [\"tc-bert\"]\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[fleet]\nevents = [1]\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
     }
 }

@@ -1,6 +1,8 @@
 //! TOML-subset parser for experiment config files (serde/toml unavailable
-//! offline). Supports: `[section]` / `[a.b]` tables, `key = value` with
-//! strings, integers, floats, booleans, and homogeneous arrays; `#` comments.
+//! offline). Supports: `[section]` / `[a.b]` tables, `[[a.b]]` arrays of
+//! tables (elements stored under `a.b.0.*`, `a.b.1.*`, …), `key = value`
+//! with strings, integers, floats, booleans, and homogeneous arrays; `#`
+//! comments.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -80,10 +82,24 @@ impl Doc {
     pub fn parse(text: &str) -> Result<Doc, TomlError> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
+        let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
         for (idx, raw) in text.lines().enumerate() {
             let lineno = idx + 1;
             let line = strip_comment(raw).trim().to_string();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix("[[") {
+                let name = inner
+                    .strip_suffix("]]")
+                    .ok_or_else(|| err(lineno, "unterminated array-of-tables header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty array-of-tables name"));
+                }
+                let n = array_counts.entry(name.to_string()).or_insert(0);
+                section = format!("{name}.{}", *n);
+                *n += 1;
                 continue;
             }
             if let Some(inner) = line.strip_prefix('[') {
@@ -139,6 +155,36 @@ impl Doc {
     pub fn section_keys(&self, prefix: &str) -> Vec<String> {
         let p = format!("{prefix}.");
         self.entries.keys().filter(|k| k.starts_with(&p)).cloned().collect()
+    }
+
+    /// Elements of a `[[prefix]]` array of tables, each returned as a
+    /// sub-`Doc` with the `prefix.N.` path stripped (so element keys read
+    /// like top-level keys). Elements that set no keys are invisible.
+    pub fn table_array(&self, prefix: &str) -> Vec<Doc> {
+        let p = format!("{prefix}.");
+        let mut max: Option<usize> = None;
+        for k in self.entries.keys() {
+            if let Some(rest) = k.strip_prefix(&p) {
+                if let Some((idx, _)) = rest.split_once('.') {
+                    if let Ok(i) = idx.parse::<usize>() {
+                        max = Some(max.map_or(i, |m| m.max(i)));
+                    }
+                }
+            }
+        }
+        let n = max.map_or(0, |m| m + 1);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let ip = format!("{prefix}.{i}.");
+            let mut sub = Doc::default();
+            for (k, v) in &self.entries {
+                if let Some(rest) = k.strip_prefix(&ip) {
+                    sub.entries.insert(rest.to_string(), v.clone());
+                }
+            }
+            out.push(sub);
+        }
+        out
     }
 }
 
@@ -277,5 +323,44 @@ tolerance = 0.1
         let ks = d.section_keys("planner");
         assert!(ks.contains(&"planner.kind".to_string()));
         assert_eq!(ks.len(), 3);
+    }
+
+    #[test]
+    fn array_of_tables_parses_indexed() {
+        let d = Doc::parse(
+            "[[fleet.jobs]]\ntask = \"tc-bert\"\nweight = 2.0\n\
+             [[fleet.jobs]]\ntask = \"qa-bert\"\n\
+             [[fleet.events]]\nkind = \"arrive\"\nround = 10\n",
+        )
+        .unwrap();
+        assert_eq!(d.get_str("fleet.jobs.0.task", ""), "tc-bert");
+        assert!((d.get_f64("fleet.jobs.0.weight", 0.0) - 2.0).abs() < 1e-12);
+        assert_eq!(d.get_str("fleet.jobs.1.task", ""), "qa-bert");
+        assert_eq!(d.get_usize("fleet.events.0.round", 0), 10);
+        let jobs = d.table_array("fleet.jobs");
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get_str("task", ""), "tc-bert");
+        assert_eq!(jobs[1].get_str("task", ""), "qa-bert");
+        assert!((jobs[1].get_f64("weight", 1.0) - 1.0).abs() < 1e-12, "default");
+        assert_eq!(d.table_array("fleet.events").len(), 1);
+        assert!(d.table_array("nope").is_empty());
+    }
+
+    #[test]
+    fn array_of_tables_interleaves_with_plain_sections() {
+        let d = Doc::parse(
+            "[[s.e]]\na = 1\n[other]\nx = 2\n[[s.e]]\na = 3\n",
+        )
+        .unwrap();
+        assert_eq!(d.get_usize("s.e.0.a", 0), 1);
+        assert_eq!(d.get_usize("s.e.1.a", 0), 3);
+        assert_eq!(d.get_usize("other.x", 0), 2);
+        assert_eq!(d.table_array("s.e").len(), 2);
+    }
+
+    #[test]
+    fn bad_array_of_tables_headers_error() {
+        assert!(Doc::parse("[[unclosed]\n").is_err());
+        assert!(Doc::parse("[[]]\n").is_err());
     }
 }

@@ -1,5 +1,6 @@
-//! The budget broker: redistributes ONE device memory budget across N
-//! tenant jobs, every round, from their estimator-predicted demands.
+//! The budget broker: redistributes ONE device memory budget across the
+//! round's live tenant jobs, every round, from their estimator-predicted
+//! demands.
 //!
 //! Mimose's premise — per-mini-batch memory demand is input-dependent and
 //! predictable online (§4.3) — is what makes cross-job arbitration possible
@@ -8,30 +9,49 @@
 //!
 //! 1. **Floors.** Every job is guaranteed its conservative reservation for
 //!    the pending input (the everything-checkpointed peak + reserve): below
-//!    that even sheltered execution OOMs, so floors are never traded away.
-//! 2. **Demand-proportional slack.** Remaining budget goes to jobs in order
-//!    of unmet demand via max-min water-filling: small asks are satisfied
-//!    fully (a job with a short mini-batch takes only what it needs), and
-//!    when aggregate demand overshoots the device, the *most-slack-holding*
-//!    jobs are tightened to the water level — never below their floors, so
-//!    overshoot resolves by replanning (more checkpointing), never by OOM.
+//!    that even sheltered execution OOMs, so floors are never traded away —
+//!    regardless of priority.
+//! 2. **Weight-proportional slack.** Remaining budget goes to jobs via
+//!    *weighted* max-min water-filling: a job's slack share grows in
+//!    proportion to its priority/SLA weight, small asks are satisfied fully
+//!    (a job with a short mini-batch takes only what it needs), and when
+//!    aggregate demand overshoots the device, the most-slack-holding jobs
+//!    are tightened to their weighted water level — never below their
+//!    floors, so overshoot resolves by replanning (more checkpointing),
+//!    never by OOM. All weights equal reduces to plain max-min.
 //! 3. **Equal split until trained.** While no estimator has frozen yet there
-//!    is no demand signal; jobs get the static equal split (lifted to their
-//!    floors), exactly the baseline the arbiter later has to beat.
+//!    is no demand signal; jobs get the static weight-proportional split
+//!    (lifted to their floors), exactly the baseline the arbiter later has
+//!    to beat.
+//!
+//! The job set is **dynamic**: demands carry stable job ids, and all broker
+//! state (EWMA demand history, hysteresis baselines) is keyed by id, so
+//! jobs can arrive, depart, reorder, or complete mid-run without history
+//! ever being attributed to the wrong tenant. A departed id's allocation is
+//! reclaimed the moment it stops appearing in the demand vector; an
+//! arriving id starts fresh (no smoothed history, no hysteresis baseline)
+//! at whatever the fill gives it — its conservative floor until its
+//! estimator trains.
 //!
 //! Allocations are quantised to a grid and held with hysteresis: a budget
 //! rebind invalidates the job's plan cache (see
 //! [`crate::coordinator::Coordinator::set_budget`]), so the broker only
 //! moves a job's budget when the target drifts by at least one grid step.
 //!
-//! The invariant the fleet test pins: Σ allocations ≤ global, always.
+//! The invariant the fleet tests pin: Σ allocations ≤ global, always.
 
 use crate::util::stats::Summary;
 use crate::util::timer::Timer;
+use std::collections::BTreeMap;
 
 /// One job's per-round memory picture as the broker sees it.
 #[derive(Clone, Copy, Debug)]
 pub struct JobDemand {
+    /// Stable job id — broker state (smoothing, hysteresis) follows this,
+    /// not the position in the demand vector.
+    pub id: u64,
+    /// Priority/SLA weight (> 0): slack fills proportional to it.
+    pub weight: f64,
     /// Hard minimum for the pending input: conservative-plan peak plus the
     /// fragmentation reserve. Guaranteed.
     pub floor: u64,
@@ -44,13 +64,22 @@ pub struct JobDemand {
 /// One round's allocation decision.
 #[derive(Clone, Debug)]
 pub struct Allocation {
-    /// Per-job budgets; Σ ≤ global, each ≥ its floor.
+    /// Per-job budgets, aligned with the demand vector; Σ ≤ global, each ≥
+    /// its floor.
     pub budgets: Vec<u64>,
+    /// Per-job floors the budgets were guaranteed against (same order).
+    pub floors: Vec<u64>,
+    /// Per-job post-smoothing demand signals the fill targeted (same
+    /// order; ≥ floor by construction).
+    pub wants: Vec<u64>,
     /// Σ demand signals (predicted or conservative) this round.
     pub predicted_total: u64,
     /// Aggregate demand exceeded the device: slack-holders were tightened
-    /// to the max-min water level (their Coordinators replan).
+    /// to their weighted water level (their Coordinators replan).
     pub overshoot: bool,
+    /// Weighted Jain fairness index over the round's slack grants
+    /// (`(budget - floor) / weight`); 1.0 = perfectly weight-proportional.
+    pub weighted_jain: f64,
     /// Broker wall time for this decision, ms.
     pub decision_ms: f64,
 }
@@ -60,10 +89,11 @@ pub struct BudgetBroker {
     global: u64,
     grid: u64,
     smoothing: f64,
-    /// EWMA-smoothed demand signal per job (bytes).
-    smoothed: Vec<f64>,
-    /// Allocation currently in force per job (hysteresis baseline).
-    current: Vec<u64>,
+    /// EWMA-smoothed demand signal per job id (bytes). Entries for ids
+    /// absent from a round's demand vector are dropped (job departed).
+    smoothed: BTreeMap<u64, f64>,
+    /// Allocation currently in force per job id (hysteresis baseline).
+    current: BTreeMap<u64, u64>,
     /// Rounds where demand overshot the device and slack was clawed back.
     pub overshoots: u64,
     /// Total allocate() calls.
@@ -73,13 +103,13 @@ pub struct BudgetBroker {
 }
 
 impl BudgetBroker {
-    pub fn new(global: u64, n_jobs: usize, grid_bytes: u64, demand_smoothing: f64) -> Self {
+    pub fn new(global: u64, grid_bytes: u64, demand_smoothing: f64) -> Self {
         BudgetBroker {
             global,
             grid: grid_bytes.max(1),
             smoothing: demand_smoothing.clamp(0.0, 0.99),
-            smoothed: vec![0.0; n_jobs],
-            current: vec![0; n_jobs],
+            smoothed: BTreeMap::new(),
+            current: BTreeMap::new(),
             overshoots: 0,
             decisions: 0,
             decision_ms: Summary::new(),
@@ -90,22 +120,48 @@ impl BudgetBroker {
         self.global
     }
 
-    /// Allocations currently in force (zeros before the first decision).
-    pub fn allocations(&self) -> &[u64] {
-        &self.current
+    /// The allocation currently in force for a job (None before its first
+    /// decision or after it departed).
+    pub fn allocation_of(&self, id: u64) -> Option<u64> {
+        self.current.get(&id).copied()
     }
 
-    /// Redistribute the global budget for one round of `demands` (one entry
-    /// per job, same order every round). Errors only if Σ floors exceeds
-    /// the global budget — an infeasible tenancy the fleet rejects at
-    /// construction from worst-case (max-input) floors.
+    /// Ids the broker currently holds state for — exactly the ids of the
+    /// last demand vector (departed jobs are reclaimed immediately).
+    pub fn tracked_ids(&self) -> Vec<u64> {
+        self.current.keys().copied().collect()
+    }
+
+    /// Redistribute the global budget for one round of `demands` — one
+    /// entry per *live* job, any order, ids stable across rounds. State for
+    /// ids not in `demands` is dropped (their budgets are reclaimed into
+    /// this round's fill). Errors only if Σ floors exceeds the global
+    /// budget — an infeasible tenancy the fleet rejects at construction
+    /// from worst-case (max-input) floors over the whole event timeline.
     pub fn allocate(&mut self, demands: &[JobDemand]) -> Result<Allocation, String> {
         let t = Timer::start();
         let n = demands.len();
-        assert_eq!(n, self.current.len(), "job count fixed at construction");
         if n == 0 {
             return Err("no jobs".into());
         }
+        for d in demands {
+            if d.weight <= 0.0 || !d.weight.is_finite() {
+                return Err(format!("job {} has non-positive weight {}", d.id, d.weight));
+            }
+        }
+        // ---- reclaim departed jobs: ids absent this round lose all state
+        let live: Vec<u64> = demands.iter().map(|d| d.id).collect();
+        let mut sorted_ids = live.clone();
+        sorted_ids.sort_unstable();
+        if sorted_ids.windows(2).any(|w| w[0] == w[1]) {
+            // duplicate ids would silently share one EWMA stream and one
+            // hysteresis baseline — exactly the misattribution the id
+            // keying exists to prevent
+            return Err("duplicate job ids in demand vector".into());
+        }
+        self.smoothed.retain(|id, _| live.contains(id));
+        self.current.retain(|id, _| live.contains(id));
+
         let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
         let floor_sum: u64 = floors.iter().sum();
         if floor_sum > self.global {
@@ -115,32 +171,40 @@ impl BudgetBroker {
             ));
         }
 
-        // ---- demand signal (equal split until any estimator is trained) ----
+        // ---- demand signal (weighted equal split until any estimator is
+        //      trained; plain global/n when all weights are equal, so the
+        //      static fleet's arithmetic is reproduced exactly)
         let any_trained = demands.iter().any(|d| d.predicted.is_some());
+        let weights: Vec<f64> = demands.iter().map(|d| d.weight).collect();
+        let weight_sum: f64 = weights.iter().sum();
+        let uniform = weights.iter().all(|&w| w == weights[0]);
         let equal = self.global / n as u64;
         let predicted_total: u64 = demands
             .iter()
             .map(|d| d.predicted.unwrap_or(d.floor))
             .sum();
         let mut wants: Vec<f64> = Vec::with_capacity(n);
-        for (i, d) in demands.iter().enumerate() {
+        for d in demands {
             let raw = if any_trained {
                 d.predicted.unwrap_or(d.floor) as f64
-            } else {
+            } else if uniform {
                 equal as f64
-            };
-            let s = if self.decisions == 0 {
-                raw
             } else {
-                self.smoothing * self.smoothed[i] + (1.0 - self.smoothing) * raw
+                self.global as f64 * d.weight / weight_sum
             };
-            self.smoothed[i] = s;
+            // a new id (first round, arrival, re-arrival) has no history:
+            // its signal is the raw demand, not someone else's EWMA
+            let s = match self.smoothed.get(&d.id) {
+                Some(&prev) => self.smoothing * prev + (1.0 - self.smoothing) * raw,
+                None => raw,
+            };
+            self.smoothed.insert(d.id, s);
             // a job never *wants* less than its floor; floor spikes (a big
             // pending input) bypass smoothing — they are guarantees
-            wants.push(s.max(floors[i] as f64));
+            wants.push(s.max(d.floor as f64));
         }
 
-        // ---- floors + max-min water-fill over the slack ----
+        // ---- floors + weighted max-min water-fill over the slack ----
         let slack = (self.global - floor_sum) as f64;
         let extras_want: Vec<f64> =
             wants.iter().zip(&floors).map(|(w, &f)| (w - f as f64).max(0.0)).collect();
@@ -148,8 +212,12 @@ impl BudgetBroker {
         let overshoot = extra_sum > slack;
         let extras: Vec<f64> = if overshoot {
             self.overshoots += 1;
-            let level = water_level(&extras_want, slack);
-            extras_want.iter().map(|e| e.min(level)).collect()
+            let level = weighted_water_level(&extras_want, &weights, slack);
+            extras_want
+                .iter()
+                .zip(&weights)
+                .map(|(&e, &w)| e.min(w * level))
+                .collect()
         } else {
             extras_want
         };
@@ -162,13 +230,17 @@ impl BudgetBroker {
             .collect();
 
         // ---- hysteresis: keep in-force budgets when the move is < 1 grid
-        //      step and still feasible (rebinds flush the job's plan cache)
+        //      step and still feasible (rebinds flush the job's plan
+        //      cache). Keyed by id: a job keeps ITS baseline wherever it
+        //      sits in the vector; arrivals have none and bind fresh.
         let mut kept = alloc.clone();
         let mut any_kept = false;
-        for i in 0..n {
-            if self.current[i] >= floors[i] && self.current[i].abs_diff(alloc[i]) <= self.grid {
-                kept[i] = self.current[i];
-                any_kept = true;
+        for (i, d) in demands.iter().enumerate() {
+            if let Some(&cur) = self.current.get(&d.id) {
+                if cur >= floors[i] && cur.abs_diff(alloc[i]) <= self.grid {
+                    kept[i] = cur;
+                    any_kept = true;
+                }
             }
         }
         if any_kept && kept.iter().sum::<u64>() <= self.global {
@@ -177,81 +249,172 @@ impl BudgetBroker {
 
         debug_assert!(alloc.iter().sum::<u64>() <= self.global);
         debug_assert!(alloc.iter().zip(&floors).all(|(a, f)| a >= f));
-        self.current.clone_from(&alloc);
+        self.current = demands.iter().map(|d| d.id).zip(alloc.iter().copied()).collect();
         self.decisions += 1;
+        let weighted_jain = weighted_jain(&alloc, &floors, &weights);
+        let wants_u: Vec<u64> = wants.iter().map(|&w| w as u64).collect();
         let decision_ms = t.elapsed_ms();
         self.decision_ms.add(decision_ms);
-        Ok(Allocation { budgets: alloc, predicted_total, overshoot, decision_ms })
+        Ok(Allocation {
+            budgets: alloc,
+            floors,
+            wants: wants_u,
+            predicted_total,
+            overshoot,
+            weighted_jain,
+            decision_ms,
+        })
     }
 }
 
-/// Max-min fairness water level λ with Σ min(xᵢ, λ) = `slack` (caller
-/// guarantees Σ xᵢ > slack ≥ 0): asks below λ are met in full, asks above
-/// it — the slack-holders — are capped at λ.
-fn water_level(asks: &[f64], slack: f64) -> f64 {
-    let mut xs: Vec<f64> = asks.to_vec();
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = xs.len();
+/// Weighted max-min water level λ with Σ min(xᵢ, wᵢ·λ) = `slack` (caller
+/// guarantees Σ xᵢ > slack ≥ 0): asks below their weighted level are met
+/// in full, asks above it — the slack-holders — are capped at wᵢ·λ, so
+/// capped jobs split the remainder in proportion to weight. With all
+/// weights 1 this is exactly the classic max-min water level.
+fn weighted_water_level(asks: &[f64], weights: &[f64], slack: f64) -> f64 {
+    let mut xs: Vec<(f64, f64)> =
+        asks.iter().copied().zip(weights.iter().copied()).collect();
+    xs.sort_by(|a, b| (a.0 / a.1).partial_cmp(&(b.0 / b.1)).unwrap());
     let mut remaining = slack;
-    for (i, &x) in xs.iter().enumerate() {
-        let level = remaining / (n - i) as f64;
-        if x >= level {
+    let mut wsum: f64 = xs.iter().map(|x| x.1).sum();
+    for &(x, w) in &xs {
+        if wsum <= 0.0 {
+            break;
+        }
+        let level = remaining / wsum;
+        if x / w >= level {
             return level;
         }
         remaining -= x;
+        wsum -= w;
     }
     // unreachable while Σ asks > slack; a safe cap otherwise
-    *xs.last().unwrap_or(&0.0)
+    xs.iter().map(|x| x.0 / x.1).fold(0.0, f64::max)
+}
+
+/// Weighted Jain fairness index over per-job slack grants normalised by
+/// weight: J = (Σ yᵢ)² / (n · Σ yᵢ²) with yᵢ = (budgetᵢ - floorᵢ) / wᵢ.
+/// 1.0 means slack is shared exactly weight-proportionally; 1/n means one
+/// job holds it all. Rounds granting no slack at all count as fair (1.0).
+pub fn weighted_jain(budgets: &[u64], floors: &[u64], weights: &[f64]) -> f64 {
+    let ys: Vec<f64> = budgets
+        .iter()
+        .zip(floors)
+        .zip(weights)
+        .map(|((&b, &f), &w)| b.saturating_sub(f) as f64 / w)
+        .collect();
+    let sum: f64 = ys.iter().sum();
+    if sum <= 0.0 {
+        return 1.0;
+    }
+    let sq: f64 = ys.iter().map(|y| y * y).sum();
+    (sum * sum) / (ys.len() as f64 * sq)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest::{ensure, forall};
+    use crate::util::rng::Rng;
     use crate::util::GIB;
 
-    fn d(floor: u64, predicted: Option<u64>) -> JobDemand {
-        JobDemand { floor, predicted }
+    fn d(id: u64, floor: u64, predicted: Option<u64>) -> JobDemand {
+        JobDemand { id, weight: 1.0, floor, predicted }
+    }
+
+    fn dw(id: u64, weight: f64, floor: u64, predicted: Option<u64>) -> JobDemand {
+        JobDemand { id, weight, floor, predicted }
     }
 
     /// Grid of 1 byte: no quantisation, easier arithmetic in tests.
-    fn broker(global: u64, n: usize) -> BudgetBroker {
-        BudgetBroker::new(global, n, 1, 0.0)
+    fn broker(global: u64) -> BudgetBroker {
+        BudgetBroker::new(global, 1, 0.0)
     }
 
     #[test]
     fn equal_split_until_any_estimator_trains() {
-        let mut b = broker(8 * GIB, 4);
-        let a = b.allocate(&[d(GIB, None), d(GIB, None), d(GIB, None), d(GIB, None)]).unwrap();
+        let mut b = broker(8 * GIB);
+        let a = b
+            .allocate(&[
+                d(0, GIB, None),
+                d(1, GIB, None),
+                d(2, GIB, None),
+                d(3, GIB, None),
+            ])
+            .unwrap();
         assert_eq!(a.budgets, vec![2 * GIB; 4]);
         assert!(!a.overshoot);
     }
 
     #[test]
+    fn untrained_split_is_weight_proportional() {
+        // nobody trained, weights 3:1 -> 6 GiB vs 2 GiB of the 8 GiB device
+        let mut b = broker(8 * GIB);
+        let a = b
+            .allocate(&[dw(0, 3.0, GIB, None), dw(1, 1.0, GIB, None)])
+            .unwrap();
+        assert_eq!(a.budgets[0], 6 * GIB);
+        assert_eq!(a.budgets[1], 2 * GIB);
+    }
+
+    #[test]
     fn floors_always_guaranteed() {
-        let mut b = broker(8 * GIB, 3);
+        let mut b = broker(8 * GIB);
         // one sheltered job with a huge conservative reservation
         let a = b
-            .allocate(&[d(5 * GIB, None), d(GIB, Some(GIB)), d(GIB, Some(GIB))])
+            .allocate(&[
+                d(0, 5 * GIB, None),
+                d(1, GIB, Some(GIB)),
+                d(2, GIB, Some(GIB)),
+            ])
             .unwrap();
         assert!(a.budgets[0] >= 5 * GIB);
         assert!(a.budgets[1] >= GIB && a.budgets[2] >= GIB);
+        assert!(a.budgets.iter().sum::<u64>() <= 8 * GIB);
+        assert_eq!(a.floors, vec![5 * GIB, GIB, GIB]);
+    }
+
+    #[test]
+    fn floors_trump_weights() {
+        // the low-priority job's floor dwarfs the high-priority job's whole
+        // demand: priority never trades a guarantee away
+        let mut b = broker(8 * GIB);
+        let a = b
+            .allocate(&[dw(0, 100.0, GIB, Some(8 * GIB)), dw(1, 0.01, 5 * GIB, Some(5 * GIB))])
+            .unwrap();
+        assert!(a.budgets[1] >= 5 * GIB, "floor held against a 10000x weight");
         assert!(a.budgets.iter().sum::<u64>() <= 8 * GIB);
     }
 
     #[test]
     fn infeasible_floors_rejected() {
-        let mut b = broker(4 * GIB, 2);
-        assert!(b.allocate(&[d(3 * GIB, None), d(2 * GIB, None)]).is_err());
+        let mut b = broker(4 * GIB);
+        assert!(b.allocate(&[d(0, 3 * GIB, None), d(1, 2 * GIB, None)]).is_err());
+    }
+
+    #[test]
+    fn non_positive_weight_rejected() {
+        let mut b = broker(4 * GIB);
+        assert!(b.allocate(&[dw(0, 0.0, GIB, None)]).is_err());
+        assert!(b.allocate(&[dw(0, -1.0, GIB, None)]).is_err());
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let mut b = broker(8 * GIB);
+        assert!(b.allocate(&[d(3, GIB, None), d(3, GIB, None)]).is_err());
+        // and the broker state stays untouched by the rejected call
+        assert!(b.tracked_ids().is_empty());
     }
 
     #[test]
     fn small_demands_satisfied_fully_big_ones_capped() {
         // slack 4: asks (1, 5) -> the short-input job gets its 1 in full,
         // the slack-holder is tightened to the 3 water level
-        let mut b = broker(6 * GIB, 2);
+        let mut b = broker(6 * GIB);
         let a = b
-            .allocate(&[d(GIB, Some(2 * GIB)), d(GIB, Some(6 * GIB))])
+            .allocate(&[d(0, GIB, Some(2 * GIB)), d(1, GIB, Some(6 * GIB))])
             .unwrap();
         assert!(a.overshoot, "aggregate demand 8 > 6 global");
         assert_eq!(a.budgets[0], 2 * GIB, "small ask met in full");
@@ -260,64 +423,210 @@ mod tests {
     }
 
     #[test]
+    fn overshoot_splits_slack_by_weight() {
+        // both jobs ask far beyond the device: capped shares must be 3:1
+        let mut b = broker(9 * GIB);
+        let a = b
+            .allocate(&[
+                dw(0, 3.0, GIB, Some(20 * GIB)),
+                dw(1, 1.0, GIB, Some(20 * GIB)),
+            ])
+            .unwrap();
+        assert!(a.overshoot);
+        // slack 7 GiB split 3:1
+        let s0 = a.budgets[0] - GIB;
+        let s1 = a.budgets[1] - GIB;
+        assert!(
+            (s0 as f64 / s1 as f64 - 3.0).abs() < 1e-6,
+            "weighted split violated: {s0} vs {s1}"
+        );
+        assert!(a.budgets.iter().sum::<u64>() <= 9 * GIB);
+        assert!((a.weighted_jain - 1.0).abs() < 1e-9, "proportional split is weighted-fair");
+    }
+
+    #[test]
     fn underdemand_leaves_budget_unassigned() {
         // both jobs want less than the device holds: nobody is inflated
-        let mut b = broker(16 * GIB, 2);
+        let mut b = broker(16 * GIB);
         let a = b
-            .allocate(&[d(GIB, Some(2 * GIB)), d(GIB, Some(3 * GIB))])
+            .allocate(&[d(0, GIB, Some(2 * GIB)), d(1, GIB, Some(3 * GIB))])
             .unwrap();
         assert!(!a.overshoot);
         assert_eq!(a.budgets, vec![2 * GIB, 3 * GIB]);
         assert_eq!(a.predicted_total, 5 * GIB);
+        assert_eq!(a.wants, vec![2 * GIB, 3 * GIB]);
     }
 
     #[test]
     fn hysteresis_holds_budgets_against_jitter() {
-        let mut b = BudgetBroker::new(8 * GIB, 2, 256 << 20, 0.0);
+        let mut b = BudgetBroker::new(8 * GIB, 256 << 20, 0.0);
         let a1 = b
-            .allocate(&[d(GIB, Some(3 * GIB)), d(GIB, Some(3 * GIB))])
+            .allocate(&[d(0, GIB, Some(3 * GIB)), d(1, GIB, Some(3 * GIB))])
             .unwrap();
         // demand wiggles by ~100 MB — under one 256 MB grid step
         let a2 = b
             .allocate(&[
-                d(GIB, Some(3 * GIB + (100 << 20))),
-                d(GIB, Some(3 * GIB - (100 << 20))),
+                d(0, GIB, Some(3 * GIB + (100 << 20))),
+                d(1, GIB, Some(3 * GIB - (100 << 20))),
             ])
             .unwrap();
         assert_eq!(a1.budgets, a2.budgets, "sub-grid jitter must not rebind");
         // a full-grid move does rebind
-        let a3 = b.allocate(&[d(GIB, Some(5 * GIB)), d(GIB, Some(2 * GIB))]).unwrap();
+        let a3 = b
+            .allocate(&[d(0, GIB, Some(5 * GIB)), d(1, GIB, Some(2 * GIB))])
+            .unwrap();
         assert_ne!(a1.budgets, a3.budgets);
     }
 
     #[test]
+    fn hysteresis_follows_ids_not_positions() {
+        // the latent PR-2 bug: positional history would hand job 0's
+        // baseline to whichever job sits at index 0 after a reorder
+        let mut b = BudgetBroker::new(16 * GIB, 256 << 20, 0.0);
+        let a1 = b
+            .allocate(&[d(7, GIB, Some(3 * GIB)), d(9, GIB, Some(6 * GIB))])
+            .unwrap();
+        let (b7, b9) = (a1.budgets[0], a1.budgets[1]);
+        assert_ne!(b7, b9, "distinct demands must produce distinct budgets");
+        // same demands (sub-grid jitter), REVERSED order: each id must keep
+        // its own budget, not inherit the other's slot
+        let a2 = b
+            .allocate(&[
+                d(9, GIB, Some(6 * GIB + (50 << 20))),
+                d(7, GIB, Some(3 * GIB - (50 << 20))),
+            ])
+            .unwrap();
+        assert_eq!(a2.budgets[0], b9, "id 9 keeps id 9's budget after reorder");
+        assert_eq!(a2.budgets[1], b7, "id 7 keeps id 7's budget after reorder");
+        assert_eq!(b.allocation_of(7), Some(b7));
+        assert_eq!(b.allocation_of(9), Some(b9));
+    }
+
+    #[test]
+    fn departed_job_retains_no_allocation_and_no_history() {
+        let mut b = BudgetBroker::new(16 * GIB, 1, 0.9);
+        let _ = b
+            .allocate(&[d(0, GIB, Some(2 * GIB)), d(1, GIB, Some(12 * GIB))])
+            .unwrap();
+        assert!(b.allocation_of(1).is_some());
+        // job 1 departs: only job 0 reports demand
+        let a = b.allocate(&[d(0, GIB, Some(2 * GIB))]).unwrap();
+        assert_eq!(b.allocation_of(1), None, "departed id reclaimed");
+        assert_eq!(b.tracked_ids(), vec![0]);
+        assert!(a.budgets.iter().sum::<u64>() <= 16 * GIB);
+        // job 1 re-arrives: it must start from its RAW demand, not the
+        // stale 12 GiB EWMA a positional broker would have kept around
+        let a = b
+            .allocate(&[d(0, GIB, Some(2 * GIB)), d(1, GIB, Some(3 * GIB))])
+            .unwrap();
+        assert_eq!(a.budgets[1], 3 * GIB, "re-arrival starts fresh: {}", a.budgets[1]);
+    }
+
+    #[test]
+    fn arrival_with_untrained_estimator_starts_at_floor() {
+        let mut b = broker(16 * GIB);
+        let _ = b
+            .allocate(&[d(0, GIB, Some(4 * GIB)), d(1, GIB, Some(5 * GIB))])
+            .unwrap();
+        // id 2 arrives sheltered (no prediction) into a trained fleet: its
+        // signal is its conservative floor — no more, no less
+        let a = b
+            .allocate(&[
+                d(0, GIB, Some(4 * GIB)),
+                d(1, GIB, Some(5 * GIB)),
+                d(2, 2 * GIB, None),
+            ])
+            .unwrap();
+        assert_eq!(a.budgets[2], 2 * GIB, "sheltered arrival sits at its floor");
+    }
+
+    #[test]
     fn smoothing_damps_demand_spikes() {
-        let mut spiky = BudgetBroker::new(16 * GIB, 1, 1, 0.9);
-        let _ = spiky.allocate(&[d(GIB, Some(2 * GIB))]).unwrap();
-        let a = spiky.allocate(&[d(GIB, Some(10 * GIB))]).unwrap();
+        let mut spiky = BudgetBroker::new(16 * GIB, 1, 0.9);
+        let _ = spiky.allocate(&[d(0, GIB, Some(2 * GIB))]).unwrap();
+        let a = spiky.allocate(&[d(0, GIB, Some(10 * GIB))]).unwrap();
         // 0.9 * 2 GiB + 0.1 * 10 GiB = 2.8 GiB << 10 GiB
         assert!(a.budgets[0] < 3 * GIB, "EWMA must damp the spike: {}", a.budgets[0]);
     }
 
     #[test]
     fn decision_latency_recorded() {
-        let mut b = broker(8 * GIB, 2);
-        let a = b.allocate(&[d(GIB, None), d(GIB, None)]).unwrap();
+        let mut b = broker(8 * GIB);
+        let a = b.allocate(&[d(0, GIB, None), d(1, GIB, None)]).unwrap();
         assert!(a.decision_ms >= 0.0);
         assert_eq!(b.decisions, 1);
         assert_eq!(b.decision_ms.count(), 1);
-        assert_eq!(b.allocations(), b.current.as_slice());
+        assert_eq!(b.allocation_of(0), Some(a.budgets[0]));
+        assert_eq!(b.tracked_ids(), vec![0, 1]);
     }
 
     #[test]
     fn water_level_math() {
-        // Σ min(x, λ) = slack
-        let lam = water_level(&[1.0, 5.0], 4.0);
+        // unweighted: Σ min(x, λ) = slack
+        let lam = weighted_water_level(&[1.0, 5.0], &[1.0, 1.0], 4.0);
         assert!((lam - 3.0).abs() < 1e-9);
-        let lam = water_level(&[2.0, 2.0, 8.0], 6.0);
+        let lam = weighted_water_level(&[2.0, 2.0, 8.0], &[1.0; 3], 6.0);
         assert!((lam - 2.0).abs() < 1e-9);
-        let lam = water_level(&[4.0, 4.0], 4.0);
+        let lam = weighted_water_level(&[4.0, 4.0], &[1.0, 1.0], 4.0);
         assert!((lam - 2.0).abs() < 1e-9);
+        // weighted: Σ min(xᵢ, wᵢλ) = slack. asks (9, 9), weights (2, 1),
+        // slack 6 -> λ = 2: shares (4, 2)
+        let lam = weighted_water_level(&[9.0, 9.0], &[2.0, 1.0], 6.0);
+        assert!((lam - 2.0).abs() < 1e-9);
+        // a small ask is met in full, the heavy-weight job takes the rest:
+        // asks (1, 9), weights (1, 3), slack 4 -> 1 + 3λ = 4, λ = 1
+        let lam = weighted_water_level(&[1.0, 9.0], &[1.0, 3.0], 4.0);
+        assert!((lam - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_jain_math() {
+        // perfectly proportional: 1.0
+        let j = weighted_jain(&[7, 3], &[1, 1], &[3.0, 1.0]);
+        assert!((j - 1.0).abs() < 1e-9, "{j}");
+        // one job hoards everything: 1/n
+        let j = weighted_jain(&[11, 1], &[1, 1], &[1.0, 1.0]);
+        assert!((j - 0.5).abs() < 1e-9, "{j}");
+        // no slack granted at all: defined as fair
+        assert_eq!(weighted_jain(&[5, 5], &[5, 5], &[1.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn equal_weights_reduce_to_classic_water_level() {
+        // the PR-2 reference implementation, kept here as the differential
+        // oracle for the weighted generalisation
+        fn classic(asks: &[f64], slack: f64) -> f64 {
+            let mut xs: Vec<f64> = asks.to_vec();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = xs.len();
+            let mut remaining = slack;
+            for (i, &x) in xs.iter().enumerate() {
+                let level = remaining / (n - i) as f64;
+                if x >= level {
+                    return level;
+                }
+                remaining -= x;
+            }
+            *xs.last().unwrap_or(&0.0)
+        }
+        let mut rng = Rng::new(77);
+        for _ in 0..500 {
+            let n = rng.range_u(1, 8);
+            let asks: Vec<f64> = (0..n).map(|_| rng.range_f(0.0, 1000.0)).collect();
+            let total: f64 = asks.iter().sum();
+            let slack = rng.range_f(0.0, total.max(1.0) * 0.99);
+            if total <= slack {
+                continue;
+            }
+            let w = vec![1.0; n];
+            let a = weighted_water_level(&asks, &w, slack);
+            let b = classic(&asks, slack);
+            assert!(
+                a == b,
+                "weighted fill with unit weights must be BIT-identical to \
+                 the classic fill: {a} vs {b} for {asks:?} slack {slack}"
+            );
+        }
     }
 
     #[test]
@@ -327,35 +636,39 @@ mod tests {
             300,
             |r| {
                 let n = r.range_u(1, 6);
-                let specs: Vec<(u64, u64)> = (0..n)
+                let specs: Vec<(u64, u64, u64)> = (0..n)
                     .map(|_| {
                         let floor = r.range_u(1, 2048) as u64 * (1 << 20);
                         let pred = r.range_u(0, 16_384) as u64 * (1 << 20);
-                        (floor, pred)
+                        // weight in (0, 8] encoded in deci-units
+                        let w = r.range_u(1, 80) as u64;
+                        (floor, pred, w)
                     })
                     .collect();
-                (
-                    specs.iter().map(|s| s.0).collect::<Vec<u64>>(),
-                    specs.iter().map(|s| s.1).collect::<Vec<u64>>(),
-                )
+                specs
             },
-            |(floors, preds)| {
-                if floors.is_empty() || floors.len() != preds.len() {
+            |specs| {
+                if specs.is_empty() {
                     return Ok(());
                 }
                 let global = 16 * GIB;
-                let mut b = BudgetBroker::new(global, floors.len(), 64 << 20, 0.3);
-                let demands: Vec<JobDemand> = floors
+                let mut b = BudgetBroker::new(global, 64 << 20, 0.3);
+                let demands: Vec<JobDemand> = specs
                     .iter()
-                    .zip(preds)
-                    .map(|(&f, &p)| d(f, if p == 0 { None } else { Some(p) }))
+                    .enumerate()
+                    .map(|(i, &(f, p, w))| JobDemand {
+                        id: i as u64,
+                        weight: w as f64 / 10.0,
+                        floor: f,
+                        predicted: if p == 0 { None } else { Some(p) },
+                    })
                     .collect();
                 // three rounds: hysteresis and smoothing paths all exercised
                 for _ in 0..3 {
                     match b.allocate(&demands) {
                         Err(_) => {
                             return ensure(
-                                floors.iter().sum::<u64>() > global,
+                                specs.iter().map(|s| s.0).sum::<u64>() > global,
                                 "allocate only errs on infeasible floors",
                             )
                         }
@@ -364,9 +677,16 @@ mod tests {
                                 a.budgets.iter().sum::<u64>() <= global,
                                 &format!("sum {} > global", a.budgets.iter().sum::<u64>()),
                             )?;
-                            for (bud, &f) in a.budgets.iter().zip(floors) {
-                                ensure(*bud >= f, &format!("budget {bud} below floor {f}"))?;
+                            for (bud, s) in a.budgets.iter().zip(specs.iter()) {
+                                ensure(
+                                    *bud >= s.0,
+                                    &format!("budget {bud} below floor {}", s.0),
+                                )?;
                             }
+                            ensure(
+                                (0.0..=1.0 + 1e-9).contains(&a.weighted_jain),
+                                &format!("jain {} out of range", a.weighted_jain),
+                            )?;
                         }
                     }
                 }

@@ -1,7 +1,8 @@
-//! Fleet-level accounting: per-round broker decisions, per-job rollups, and
-//! the aggregate report the `mimose fleet` CLI prints — aggregate peak vs.
-//! the global budget, total throughput vs. static equal split, broker
-//! decision latency, and cross-job cache reuse.
+//! Fleet-level accounting: per-round broker decisions, per-job rollups
+//! (including lifetime: arrival/departure rounds), and the aggregate report
+//! the `mimose fleet` CLI prints — aggregate peak vs. the global budget,
+//! total throughput vs. static equal split, broker decision latency,
+//! weighted fairness, and cross-job cache reuse.
 
 use crate::util::stats::Summary;
 
@@ -10,12 +11,22 @@ use crate::util::stats::Summary;
 pub struct BrokerDecision {
     /// 0-based round index.
     pub round: usize,
+    /// Stable ids of the jobs live this round, aligned with `allocations`.
+    /// Empty when every tenant had departed (an idle round).
+    pub job_ids: Vec<u64>,
     /// Per-job budgets in force while the round ran; Σ ≤ global.
     pub allocations: Vec<u64>,
+    /// Per-job guaranteed floors the budgets were filled from (same order).
+    pub floors: Vec<u64>,
+    /// Per-job demand signals the fill targeted (same order).
+    pub wants: Vec<u64>,
     /// Σ per-job demand signals (predicted, or conservative reservation).
     pub predicted_total: u64,
     /// Aggregate demand exceeded the device; slack-holders were tightened.
     pub overshoot: bool,
+    /// Weighted Jain index of the round's slack grants (1.0 = slack split
+    /// exactly in proportion to job weights).
+    pub weighted_jain: f64,
     /// Broker wall time for the decision, ms.
     pub decision_ms: f64,
     /// Σ per-job simulated peak while the round ran (the quantity that must
@@ -23,11 +34,20 @@ pub struct BrokerDecision {
     pub aggregate_peak: u64,
 }
 
-/// Per-job rollup over a fleet run.
+/// Per-job rollup over a fleet run — departed and completed jobs included.
 #[derive(Clone, Debug)]
 pub struct JobSummary {
-    /// `<task>#<index>` — tasks may repeat across tenants.
+    /// Stable fleet-assigned id (arrival order).
+    pub id: u64,
+    /// `<task>#<id>` unless the spec named the job explicitly.
     pub name: String,
+    /// Priority/SLA weight the broker filled slack with.
+    pub weight: f64,
+    /// Round the job joined (0 for initial tenants).
+    pub arrived_round: usize,
+    /// First round the job no longer ran — a scripted departure or its own
+    /// completion. None = still live when the fleet ended.
+    pub departed_round: Option<usize>,
     pub steps: usize,
     /// Σ simulated iteration time, ms.
     pub total_ms: f64,
@@ -39,10 +59,30 @@ pub struct JobSummary {
     pub shared_hits: u64,
     /// Budget rebinds this job absorbed (each one a plan-cache flush).
     pub budget_changes: u64,
-    /// Budget in force when the run ended.
+    /// Budget in force when the job ended (departure or fleet end).
     pub final_budget: u64,
     /// Iterations per simulated second.
     pub throughput_iters_per_s: f64,
+}
+
+impl JobSummary {
+    /// Rounds the job was live: arrival to departure (or the fleet's end,
+    /// approximated by its step count — one step per live round).
+    pub fn lifetime_rounds(&self) -> usize {
+        match self.departed_round {
+            Some(d) => d.saturating_sub(self.arrived_round),
+            None => self.steps,
+        }
+    }
+
+    /// Display form of the lifetime, e.g. `0..end` or `20..45` (shared by
+    /// the CLI report and the fleet example).
+    pub fn lifetime_label(&self) -> String {
+        match self.departed_round {
+            Some(d) => format!("{}..{}", self.arrived_round, d),
+            None => format!("{}..end", self.arrived_round),
+        }
+    }
 }
 
 /// Everything a fleet run produced.
@@ -94,6 +134,33 @@ impl FleetReport {
         self.jobs.iter().map(|j| j.oom_failures).sum()
     }
 
+    /// Jobs that departed mid-run (scripted or by completing their steps).
+    pub fn departed_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| j.departed_round.is_some()).count()
+    }
+
+    /// Jobs that arrived after round 0.
+    pub fn arrived_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| j.arrived_round > 0).count()
+    }
+
+    /// Mean weighted Jain fairness index over rounds with ≥ 2 live jobs
+    /// (single-tenant and idle rounds carry no fairness signal); 1.0 when
+    /// no such round exists.
+    pub fn weighted_jain_mean(&self) -> f64 {
+        let mut s = Summary::new();
+        for d in &self.rounds {
+            if d.job_ids.len() >= 2 {
+                s.add(d.weighted_jain);
+            }
+        }
+        if s.count() == 0 {
+            1.0
+        } else {
+            s.mean()
+        }
+    }
+
     /// Broker decision latency over the run, ms.
     pub fn broker_ms(&self) -> Summary {
         let mut s = Summary::new();
@@ -110,7 +177,11 @@ mod tests {
 
     fn job(steps: usize, total_ms: f64, peak: u64) -> JobSummary {
         JobSummary {
+            id: 0,
             name: "t#0".into(),
+            weight: 1.0,
+            arrived_round: 0,
+            departed_round: None,
             steps,
             total_ms,
             peak_bytes: peak,
@@ -126,9 +197,13 @@ mod tests {
     fn decision(round: usize, peak: u64, ms: f64) -> BrokerDecision {
         BrokerDecision {
             round,
+            job_ids: vec![0, 1],
             allocations: vec![peak],
+            floors: vec![0],
+            wants: vec![peak],
             predicted_total: peak,
             overshoot: false,
+            weighted_jain: 1.0,
             decision_ms: ms,
             aggregate_peak: peak,
         }
@@ -151,10 +226,45 @@ mod tests {
         assert_eq!(r.max_aggregate_peak(), 110);
         assert!(!r.budget_respected(), "110 > 100");
         assert_eq!(r.oom_failures(), 0);
+        assert_eq!(r.departed_jobs(), 0);
+        assert_eq!(r.arrived_jobs(), 0);
         let s = r.broker_ms();
         assert_eq!(s.count(), 2);
         assert!((s.mean() - 0.2).abs() < 1e-12);
         assert!((s.max() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lifetime_and_fairness_rollups() {
+        let mut departed = job(20, 800.0, 40);
+        departed.id = 1;
+        departed.arrived_round = 5;
+        departed.departed_round = Some(25);
+        assert_eq!(departed.lifetime_rounds(), 20);
+        assert_eq!(departed.lifetime_label(), "5..25");
+        let live = job(30, 1200.0, 60);
+        assert_eq!(live.lifetime_rounds(), 30, "live job: one step per round");
+        assert_eq!(live.lifetime_label(), "0..end");
+        let mut d0 = decision(0, 90, 0.1);
+        d0.weighted_jain = 0.5;
+        let mut d1 = decision(1, 90, 0.1);
+        d1.weighted_jain = 1.0;
+        // single-tenant rounds carry no fairness signal
+        let mut d2 = decision(2, 90, 0.1);
+        d2.job_ids = vec![0];
+        d2.weighted_jain = 0.1;
+        let r = FleetReport {
+            global_budget: 100,
+            arbitrated: true,
+            jobs: vec![live, departed],
+            rounds: vec![d0, d1, d2],
+            shared_cache_hits: 0,
+            shared_cache_entries: 0,
+            overshoots: 0,
+        };
+        assert!((r.weighted_jain_mean() - 0.75).abs() < 1e-12);
+        assert_eq!(r.departed_jobs(), 1);
+        assert_eq!(r.arrived_jobs(), 1);
     }
 
     #[test]
@@ -171,5 +281,6 @@ mod tests {
         assert_eq!(r.throughput_iters_per_s(), 0.0);
         assert_eq!(r.max_aggregate_peak(), 0);
         assert!(r.budget_respected());
+        assert_eq!(r.weighted_jain_mean(), 1.0);
     }
 }

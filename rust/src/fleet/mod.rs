@@ -21,32 +21,46 @@
 //!        +--- SharedPlanCache (model signature, size, budget) ---+
 //! ```
 //!
-//! * [`broker::BudgetBroker`] — collects every job's estimator-predicted
-//!   peak for its pending input and redistributes the global budget:
-//!   guaranteed per-job floors (conservative reservations — sheltered jobs
-//!   get exactly these), demand-proportional slack by max-min water-fill,
-//!   equal split until estimators train. Predicted aggregate overshoot is
-//!   resolved by tightening the most-slack-holding jobs so their
-//!   Coordinators replan — never by OOM.
-//! * [`scheduler::FleetScheduler`] — steps jobs in interleaved rounds,
-//!   applies budget rebinds ([`crate::engine::sim::SimEngine::set_budget`]
-//!   → [`crate::coordinator::Coordinator::set_budget`] plan-cache
-//!   invalidation), and verifies the broker against the per-job memory
-//!   ledgers (Σ per-round peaks ≤ global).
+//! * [`broker::BudgetBroker`] — collects every live job's
+//!   estimator-predicted peak for its pending input and redistributes the
+//!   global budget: guaranteed per-job floors (conservative reservations —
+//!   sheltered jobs get exactly these), *priority-weighted* max-min
+//!   water-fill of the slack (a job's share grows with its SLA weight;
+//!   all-equal weights reduce to plain max-min), equal split until
+//!   estimators train. Predicted aggregate overshoot is resolved by
+//!   tightening the most-slack-holding jobs so their Coordinators replan —
+//!   never by OOM. All broker state is keyed by stable job id, so the job
+//!   set may change between any two rounds.
+//! * [`scheduler::FleetScheduler`] — steps a *dynamic* job set in
+//!   interleaved rounds: scripted [`crate::config::FleetEvent`] arrivals
+//!   and departures (plus early exit when a job completes its configured
+//!   steps) change the tenancy mid-run; departing budgets are reclaimed
+//!   into the next fill and arrivals start at their conservative floor.
+//!   Budget rebinds flow [`crate::engine::sim::SimEngine::set_budget`]
+//!   → [`crate::coordinator::Coordinator::set_budget`] (plan-cache
+//!   invalidation), and the broker is verified against the per-job memory
+//!   ledgers (Σ per-round peaks ≤ global). The whole event timeline is
+//!   validated for worst-case floor feasibility at construction.
 //! * [`crate::scheduler::SharedPlanCache`] — cross-job plan reuse scoped by
 //!   model signature; reuse is budget-conservative (only plans generated
-//!   under an equal-or-tighter budget are served).
+//!   under an equal-or-tighter budget are served). Entries are retained
+//!   across departures, so a re-arriving signature hits plans contributed
+//!   before it left.
 //! * [`metrics::FleetReport`] — aggregate peak vs. global budget, per-job
-//!   throughput, broker decision latency, cross-job cache hit rate.
+//!   lifetimes and throughput, weighted Jain fairness, broker decision
+//!   latency, cross-job cache hit rate.
 //!
-//! Entry points: `mimose fleet` (CLI), `examples/fleet.rs`, the `[fleet]`
-//! TOML section ([`crate::config::FleetConfig`]), and
-//! `tests/fleet_arbiter.rs` (the budget-safety + beats-equal-split pin).
+//! Entry points: `mimose fleet` (CLI; `--events` loads a scripted
+//! timeline), `examples/fleet.rs` (`--events` demo), the `[fleet]` TOML
+//! section with `[[fleet.jobs]]` / `[[fleet.events]]`
+//! ([`crate::config::FleetConfig`]), `tests/fleet_arbiter.rs` (the
+//! budget-safety + beats-equal-split pin) and `tests/fleet_dynamic.rs`
+//! (the dynamic-tenancy property harness + static-fleet differential).
 
 pub mod broker;
 pub mod metrics;
 pub mod scheduler;
 
-pub use broker::{Allocation, BudgetBroker, JobDemand};
+pub use broker::{weighted_jain, Allocation, BudgetBroker, JobDemand};
 pub use metrics::{BrokerDecision, FleetReport, JobSummary};
 pub use scheduler::{FleetJob, FleetScheduler};

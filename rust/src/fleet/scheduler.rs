@@ -1,26 +1,42 @@
-//! The fleet scheduler: N tenant training jobs — each its own
-//! [`Coordinator`]-driven [`SimEngine`] — stepped in interleaved rounds
+//! The fleet scheduler: a *dynamic* set of tenant training jobs — each its
+//! own [`Coordinator`]-driven [`SimEngine`] — stepped in interleaved rounds
 //! against one broker-shared memory budget.
 //!
 //! Per round:
-//! 1. every job draws its pending mini-batch and reports a [`JobDemand`]
-//!    (conservative floor + estimator-predicted peak, if trained);
-//! 2. the [`BudgetBroker`] redistributes the global budget; an aggregate
-//!    overshoot is resolved by tightening the most-slack-holding jobs, whose
-//!    Coordinators then replan under the smaller budget — never by OOM;
-//! 3. each rebound job gets [`SimEngine::set_budget`]; every job runs one
-//!    iteration; per-job ledger peaks are summed into the round's
+//! 1. scripted [`FleetEvent`]s due this round are applied: departing jobs
+//!    are retired (their budget is reclaimed and re-filled next fill) and
+//!    arriving jobs join at their conservative floor — nothing is purged
+//!    from any cache on either side;
+//! 2. every live job draws its pending mini-batch and reports a
+//!    [`JobDemand`] (stable id, priority weight, conservative floor,
+//!    estimator-predicted peak if trained);
+//! 3. the [`BudgetBroker`] redistributes the global budget with a
+//!    *weighted* max-min water-fill; an aggregate overshoot is resolved by
+//!    tightening the most-slack-holding jobs, whose Coordinators then
+//!    replan under the smaller budget — never by OOM;
+//! 4. each rebound job gets [`SimEngine::set_budget`]; every live job runs
+//!    one iteration; per-job ledger peaks are summed into the round's
 //!    `aggregate_peak` (the broker-verification number: ≤ global, always).
+//!    A job that has run its configured `steps` completes and departs on
+//!    its own.
 //!
 //! With `shared_cache` on, identical-architecture tenants exchange plans
 //! through a [`crate::scheduler::SharedPlanCache`] keyed by (model
-//! signature, input size, budget). Reshelters compose safely: a Coordinator
-//! purges its own contributions from the shared cache when a reshelter
-//! invalidates the estimator they were built from.
+//! signature, input size, budget). The cache *retains* entries across
+//! departures: a job re-arriving with the same model signature hits plans
+//! contributed before its departure. Reshelters compose safely: a
+//! Coordinator purges its own contributions from the shared cache when a
+//! reshelter invalidates the estimator they were built from — and only its
+//! own, never another tenant's.
+//!
+//! Arriving jobs (and the whole event timeline) are validated at
+//! construction: every engine is built eagerly, and the worst-case floor
+//! sum over each interval of the timeline must fit the global budget, so
+//! `run()` cannot hit an infeasible tenancy mid-flight.
 
-use super::broker::{BudgetBroker, JobDemand};
+use super::broker::{weighted_jain, BudgetBroker, JobDemand};
 use super::metrics::{BrokerDecision, FleetReport, JobSummary};
-use crate::config::{ExperimentConfig, FleetConfig, PlannerKind, Task};
+use crate::config::{ExperimentConfig, FleetConfig, FleetEvent, JobSpec, PlannerKind, Task};
 use crate::coordinator::Coordinator;
 use crate::data::InputStream;
 use crate::engine::sim::SimEngine;
@@ -28,11 +44,21 @@ use crate::metrics::RunReport;
 use crate::planners::InputDesc;
 use crate::scheduler::{model_signature, shared_plan_cache, SharedCacheHandle};
 use crate::util::timer::Timer;
+use std::collections::BTreeMap;
 
 /// One tenant: engine + its own input stream + the budget in force.
 pub struct FleetJob {
+    /// Stable fleet-assigned id; broker state and input-stream seeding key
+    /// off this, never off the job's position in the live vector.
+    id: u64,
     pub name: String,
     task: Task,
+    /// Priority/SLA weight in the broker's water-fill.
+    weight: f64,
+    /// Round the job joined the fleet (0 for initial tenants).
+    arrived_round: usize,
+    /// Iterations after which the job completes and departs (0 = never).
+    steps_limit: usize,
     engine: SimEngine,
     stream: InputStream,
     /// Seqlen drawn for the upcoming round (demand and step must agree).
@@ -42,34 +68,57 @@ pub struct FleetJob {
     /// Conservative reservation memo per seqlen — collated sizes repeat
     /// heavily (the plan-cache premise) and the broker consults floors
     /// every round. Profiles themselves come from the engine's own cache.
-    floor_cache: std::collections::BTreeMap<usize, u64>,
+    floor_cache: BTreeMap<usize, u64>,
 }
 
 impl FleetJob {
-    fn new(task: Task, idx: usize, fleet: &FleetConfig, budget: u64) -> Result<Self, String> {
+    fn new(
+        spec: &JobSpec,
+        id: u64,
+        arrived_round: usize,
+        fleet: &FleetConfig,
+        budget: u64,
+    ) -> Result<Self, String> {
+        let task = spec.task;
         let mut cfg = ExperimentConfig::new(task, PlannerKind::Mimose, 1.0);
         cfg.budget_bytes = budget;
-        cfg.seed = fleet.seed + idx as u64;
+        cfg.seed = fleet.seed + id;
         cfg.max_iters = fleet.steps;
         cfg.mimose = fleet.mimose.clone();
         cfg.coordinator = fleet.coordinator.clone();
         let seed = cfg.seed;
         let engine = SimEngine::new(cfg)
-            .map_err(|e| format!("job {idx} ({}): {e}", task.name()))?;
+            .map_err(|e| format!("job {id} ({}): {e}", task.name()))?;
+        let name = spec
+            .name
+            .clone()
+            .unwrap_or_else(|| format!("{}#{id}", task.name()));
         Ok(FleetJob {
-            name: format!("{}#{idx}", task.name()),
+            id,
+            name,
             task,
+            weight: spec.weight,
+            arrived_round,
+            steps_limit: spec.steps,
             engine,
             stream: InputStream::new(task, seed),
             pending: None,
             budget,
             report: RunReport::new("mimose-fleet", budget),
-            floor_cache: std::collections::BTreeMap::new(),
+            floor_cache: BTreeMap::new(),
         })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     pub fn task(&self) -> Task {
         self.task
+    }
+
+    pub fn weight(&self) -> f64 {
+        self.weight
     }
 
     pub fn budget(&self) -> u64 {
@@ -103,7 +152,7 @@ impl FleetJob {
             .engine
             .coordinator()
             .and_then(|c| c.predicted_demand_bytes(&input, &profile));
-        JobDemand { floor, predicted }
+        JobDemand { id: self.id, weight: self.weight, floor, predicted }
     }
 
     /// Worst-case floor (max collated input): the tenancy must fit these.
@@ -124,46 +173,194 @@ impl FleetJob {
         let seqlen = self.pending.take().expect("draw_demand before step");
         self.engine.run_iteration(seqlen)
     }
+
+    /// True once the job has run its configured iteration count.
+    fn completed(&self) -> bool {
+        self.steps_limit > 0 && self.report.iters.len() >= self.steps_limit
+    }
+
+    /// Roll the job up for the final report. `departed_round` is the first
+    /// round the job no longer ran (None = alive when the fleet ended).
+    fn summary(&self, departed_round: Option<usize>) -> JobSummary {
+        let stats = self.engine.coordinator().map(|c| c.stats());
+        JobSummary {
+            id: self.id,
+            name: self.name.clone(),
+            weight: self.weight,
+            arrived_round: self.arrived_round,
+            departed_round,
+            steps: self.report.iters.len(),
+            total_ms: self.report.total_ms(),
+            peak_bytes: self.report.peak_bytes(),
+            oom_failures: self.report.oom_failures(),
+            cache_hit_rate: self.report.cache_hit_rate(),
+            shared_hits: stats.as_ref().map(|s| s.shared_hits).unwrap_or(0),
+            budget_changes: stats.as_ref().map(|s| s.budget_changes).unwrap_or(0),
+            final_budget: self.budget,
+            throughput_iters_per_s: self.report.throughput_iters_per_s(),
+        }
+    }
 }
 
-/// Drives N jobs through interleaved rounds under one shared budget.
+/// An arriving job, fully constructed and validated up front, waiting for
+/// its round.
+struct PendingArrival {
+    at_round: usize,
+    job: FleetJob,
+}
+
+/// Drives a dynamic job set through interleaved rounds under one shared
+/// budget.
 pub struct FleetScheduler {
     cfg: FleetConfig,
+    /// Live jobs in arrival order (initial jobs first, ids ascending).
     jobs: Vec<FleetJob>,
+    /// Pre-built arrivals, sorted by round (FIFO within a round).
+    pending: Vec<PendingArrival>,
+    /// Scripted departures, sorted by round.
+    departures: Vec<(usize, String)>,
+    /// Summaries of jobs that departed or completed, in departure order.
+    finished: Vec<JobSummary>,
     broker: BudgetBroker,
     shared: Option<SharedCacheHandle>,
 }
 
 impl FleetScheduler {
     pub fn new(cfg: FleetConfig) -> Result<Self, String> {
-        let n = cfg.tasks.len();
+        let n = cfg.jobs.len();
         if n == 0 {
-            return Err("fleet needs at least one job".into());
+            return Err("fleet needs at least one job at round 0".into());
+        }
+        for spec in &cfg.jobs {
+            spec.validate()?;
         }
         let equal = cfg.global_budget_bytes / n as u64;
         let mut jobs = Vec::with_capacity(n);
-        for (idx, &task) in cfg.tasks.iter().enumerate() {
-            jobs.push(FleetJob::new(task, idx, &cfg, equal)?);
+        for (idx, spec) in cfg.jobs.iter().enumerate() {
+            jobs.push(FleetJob::new(spec, idx as u64, 0, &cfg, equal)?);
         }
-        if cfg.arbitrated {
-            // the broker guarantees floors, so the worst-case floors (every
-            // tenant at its maximum collated input simultaneously) must fit
-            let worst: u64 = jobs
-                .iter_mut()
-                .map(|j| j.worst_floor(cfg.floor_bytes, cfg.mimose.reserve_bytes))
-                .sum();
-            if worst > cfg.global_budget_bytes {
-                return Err(format!(
-                    "infeasible tenancy: worst-case floors {} exceed the global budget {}",
-                    worst, cfg.global_budget_bytes
-                ));
+
+        // ---- phase A: build every arriving engine eagerly and collect the
+        //      whole timeline — scripted departures plus the *deterministic*
+        //      departures implied by per-job `steps` completion ----
+        let mut events = cfg.events.clone();
+        // within a round departures apply before arrivals, so a same-round
+        // swap frees its floor room first
+        events.sort_by_key(|e| (e.at_round(), matches!(e, FleetEvent::Arrive { .. })));
+        let mut pending: Vec<PendingArrival> = Vec::new();
+        let mut departures: Vec<(usize, String)> = Vec::new();
+        // validation timeline: rounds at which a name stops/starts holding
+        // worst-case floor room (removals = scripted departs + `steps`
+        // completions; arrivals carry their worst-case floor)
+        let mut removals: Vec<(usize, String)> = Vec::new();
+        let mut arrivals: Vec<(usize, String, u64)> = Vec::new();
+        let mut next_id = n as u64;
+        for ev in &events {
+            match ev {
+                FleetEvent::Depart { job, at_round } => {
+                    if *at_round >= cfg.steps {
+                        return Err(format!(
+                            "depart event at round {at_round} can never fire: the fleet runs {} rounds",
+                            cfg.steps
+                        ));
+                    }
+                    departures.push((*at_round, job.clone()));
+                    removals.push((*at_round, job.clone()));
+                }
+                FleetEvent::Arrive { spec, at_round } => {
+                    spec.validate()?;
+                    if *at_round >= cfg.steps {
+                        return Err(format!(
+                            "arrive event at round {at_round} can never join: the fleet runs {} rounds",
+                            cfg.steps
+                        ));
+                    }
+                    let mut job = FleetJob::new(spec, next_id, *at_round, &cfg, equal)?;
+                    next_id += 1;
+                    let w = job.worst_floor(cfg.floor_bytes, cfg.mimose.reserve_bytes);
+                    arrivals.push((*at_round, job.name.clone(), w));
+                    if spec.steps > 0 {
+                        removals.push((*at_round + spec.steps, job.name.clone()));
+                    }
+                    pending.push(PendingArrival { at_round: *at_round, job });
+                }
             }
         }
+
+        // ---- phase B: walk the timeline and validate every interval's
+        //      worst-case floor sum (when arbitrated; names either way) ----
+        // simulated live set: name -> worst-case floor
+        let mut sim_live: BTreeMap<String, u64> = BTreeMap::new();
+        let mut worst_sum: u64 = 0;
+        for job in &mut jobs {
+            let w = job.worst_floor(cfg.floor_bytes, cfg.mimose.reserve_bytes);
+            if sim_live.insert(job.name.clone(), w).is_some() {
+                return Err(format!("duplicate job name '{}'", job.name));
+            }
+            worst_sum += w;
+            if job.steps_limit > 0 {
+                removals.push((job.steps_limit, job.name.clone()));
+            }
+        }
+        if cfg.arbitrated && worst_sum > cfg.global_budget_bytes {
+            return Err(format!(
+                "infeasible tenancy: worst-case floors {} exceed the global budget {}",
+                worst_sum, cfg.global_budget_bytes
+            ));
+        }
+        // merge: removals (rank 0) free their floor room before same-round
+        // arrivals (rank 1) claim theirs
+        let mut ops: Vec<(usize, u8, &str, u64)> = removals
+            .iter()
+            .map(|(r, name)| (*r, 0u8, name.as_str(), 0u64))
+            .chain(arrivals.iter().map(|(r, name, w)| (*r, 1u8, name.as_str(), *w)))
+            .collect();
+        ops.sort_by_key(|&(r, rank, _, _)| (r, rank));
+        // names that have been live at some point up to the current op —
+        // distinguishes a tolerable redundant depart (the job already left
+        // or completed) from a depart scheduled before its job ever arrives
+        let mut ever_live: Vec<String> = sim_live.keys().cloned().collect();
+        for (round, rank, name, w) in ops {
+            if rank == 0 {
+                // a scripted departure may race the job's own completion or
+                // an earlier depart (either way it is already gone) —
+                // tolerated, like at runtime; but a depart firing before
+                // its job has ever arrived would silently never happen
+                match sim_live.remove(name) {
+                    Some(freed) => worst_sum -= freed,
+                    None => {
+                        if !ever_live.iter().any(|n| n.as_str() == name) {
+                            return Err(format!(
+                                "depart event at round {round} names '{name}', which never \
+                                 arrives before then (unknown job or arrival scheduled later)"
+                            ));
+                        }
+                    }
+                }
+            } else {
+                ever_live.push(name.to_string());
+                if sim_live.insert(name.to_string(), w).is_some() {
+                    return Err(format!(
+                        "arrival at round {round} reuses live job name '{name}'"
+                    ));
+                }
+                worst_sum += w;
+                if cfg.arbitrated && worst_sum > cfg.global_budget_bytes {
+                    return Err(format!(
+                        "infeasible tenancy from round {round}: worst-case floors {} exceed the global budget {}",
+                        worst_sum, cfg.global_budget_bytes
+                    ));
+                }
+            }
+        }
+
         // cross-job plan reuse (reshelters purge their own stale entries —
-        // see Coordinator::begin_iteration)
+        // see Coordinator::begin_iteration). Arrivals attach at build time:
+        // entries contributed before a signature's departure are retained
+        // for its re-arrival.
         let shared = if cfg.shared_cache {
             let handle = shared_plan_cache(cfg.cache_capacity);
-            for job in &mut jobs {
+            for job in jobs.iter_mut().chain(pending.iter_mut().map(|p| &mut p.job)) {
                 let sig = model_signature(
                     &job.task.model(),
                     job.task.batch(),
@@ -179,13 +376,21 @@ impl FleetScheduler {
         };
         let broker = BudgetBroker::new(
             cfg.global_budget_bytes,
-            n,
             cfg.grid_bytes,
             cfg.demand_smoothing,
         );
-        Ok(FleetScheduler { cfg, jobs, broker, shared })
+        Ok(FleetScheduler {
+            cfg,
+            jobs,
+            pending,
+            departures,
+            finished: Vec::new(),
+            broker,
+            shared,
+        })
     }
 
+    /// Jobs currently live, in arrival order.
     pub fn jobs(&self) -> &[FleetJob] {
         &self.jobs
     }
@@ -194,39 +399,106 @@ impl FleetScheduler {
         &self.cfg
     }
 
+    /// Apply the events due at the start of `round`: departures first
+    /// (their budgets are reclaimed by the next fill), then arrivals.
+    fn apply_events(&mut self, round: usize) {
+        while let Some(pos) = self
+            .departures
+            .iter()
+            .position(|(r, _)| *r <= round)
+        {
+            let (_, name) = self.departures.remove(pos);
+            // a job that completed early may already be gone — that is its
+            // departure having happened sooner, not an error
+            if let Some(idx) = self.jobs.iter().position(|j| j.name == name) {
+                let job = self.jobs.remove(idx);
+                self.finished.push(job.summary(Some(round)));
+            }
+        }
+        while let Some(pos) = self.pending.iter().position(|p| p.at_round <= round) {
+            let arrival = self.pending.remove(pos);
+            self.jobs.push(arrival.job);
+        }
+    }
+
+    /// Retire jobs that have just run their configured iteration count:
+    /// they depart at the start of the next round.
+    fn retire_completed(&mut self, round: usize) {
+        let mut idx = 0;
+        while idx < self.jobs.len() {
+            if self.jobs[idx].completed() {
+                let job = self.jobs.remove(idx);
+                self.finished.push(job.summary(Some(round + 1)));
+            } else {
+                idx += 1;
+            }
+        }
+    }
+
     /// Run `cfg.steps` interleaved rounds and report.
     pub fn run(&mut self) -> FleetReport {
-        let n = self.jobs.len();
-        let equal = self.cfg.global_budget_bytes / n as u64;
         let mut rounds: Vec<BrokerDecision> = Vec::with_capacity(self.cfg.steps);
         for round in 0..self.cfg.steps {
+            self.apply_events(round);
+            let n = self.jobs.len();
+            if n == 0 {
+                // every tenant departed or completed: an idle round
+                rounds.push(BrokerDecision {
+                    round,
+                    job_ids: Vec::new(),
+                    allocations: Vec::new(),
+                    floors: Vec::new(),
+                    wants: Vec::new(),
+                    predicted_total: 0,
+                    overshoot: false,
+                    weighted_jain: 1.0,
+                    decision_ms: 0.0,
+                    aggregate_peak: 0,
+                });
+                continue;
+            }
+
             // 1) demands for the round's pending inputs
             let demands: Vec<JobDemand> = self
                 .jobs
                 .iter_mut()
                 .map(|j| j.draw_demand(self.cfg.floor_bytes, self.cfg.mimose.reserve_bytes))
                 .collect();
+            let job_ids: Vec<u64> = demands.iter().map(|d| d.id).collect();
 
             // 2) broker (or the static equal split it has to beat)
-            let (allocations, predicted_total, overshoot, decision_ms) = if self.cfg.arbitrated
-            {
-                let a = self
-                    .broker
-                    .allocate(&demands)
-                    .expect("worst-case floors validated at construction");
-                (a.budgets, a.predicted_total, a.overshoot, a.decision_ms)
-            } else {
-                let t = Timer::start();
-                let total = demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).sum();
-                (vec![equal; n], total, false, t.elapsed_ms())
-            };
-            if self.cfg.arbitrated {
-                for (job, &b) in self.jobs.iter_mut().zip(&allocations) {
-                    job.rebind(b);
-                }
+            let (allocations, floors, wants, predicted_total, overshoot, jain, decision_ms) =
+                if self.cfg.arbitrated {
+                    let a = self
+                        .broker
+                        .allocate(&demands)
+                        .expect("worst-case floors validated at construction");
+                    (
+                        a.budgets,
+                        a.floors,
+                        a.wants,
+                        a.predicted_total,
+                        a.overshoot,
+                        a.weighted_jain,
+                        a.decision_ms,
+                    )
+                } else {
+                    let t = Timer::start();
+                    let equal = self.cfg.global_budget_bytes / n as u64;
+                    let total = demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).sum();
+                    let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
+                    let wants: Vec<u64> =
+                        demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).collect();
+                    let budgets = vec![equal; n];
+                    let weights: Vec<f64> = demands.iter().map(|d| d.weight).collect();
+                    let jain = weighted_jain(&budgets, &floors, &weights);
+                    (budgets, floors, wants, total, false, jain, t.elapsed_ms())
+                };
+            for (job, &b) in self.jobs.iter_mut().zip(&allocations) {
+                job.rebind(b);
             }
 
-            // 3) step every job; verify against the ledgers
+            // 3) step every live job; verify against the ledgers
             let mut aggregate_peak = 0u64;
             for job in &mut self.jobs {
                 let m = job.step();
@@ -235,33 +507,25 @@ impl FleetScheduler {
             }
             rounds.push(BrokerDecision {
                 round,
+                job_ids,
                 allocations,
+                floors,
+                wants,
                 predicted_total,
                 overshoot,
+                weighted_jain: jain,
                 decision_ms,
                 aggregate_peak,
             });
+
+            // 4) early exit on completion: the job's budget is reclaimed
+            //    by the next round's fill
+            self.retire_completed(round);
         }
 
-        let jobs = self
-            .jobs
-            .iter()
-            .map(|j| {
-                let stats = j.engine.coordinator().map(|c| c.stats());
-                JobSummary {
-                    name: j.name.clone(),
-                    steps: j.report.iters.len(),
-                    total_ms: j.report.total_ms(),
-                    peak_bytes: j.report.peak_bytes(),
-                    oom_failures: j.report.oom_failures(),
-                    cache_hit_rate: j.report.cache_hit_rate(),
-                    shared_hits: stats.as_ref().map(|s| s.shared_hits).unwrap_or(0),
-                    budget_changes: stats.as_ref().map(|s| s.budget_changes).unwrap_or(0),
-                    final_budget: j.budget,
-                    throughput_iters_per_s: j.report.throughput_iters_per_s(),
-                }
-            })
-            .collect();
+        let mut jobs: Vec<JobSummary> = self.finished.clone();
+        jobs.extend(self.jobs.iter().map(|j| j.summary(None)));
+        jobs.sort_by_key(|j| j.id);
         let (shared_hits, shared_entries) = match &self.shared {
             Some(h) => {
                 let c = h.borrow();
@@ -290,7 +554,7 @@ mod tests {
         FleetConfig {
             global_budget_bytes: global_gb * GIB,
             steps,
-            tasks,
+            jobs: JobSpec::from_tasks(&tasks),
             seed: 11,
             ..Default::default()
         }
@@ -305,10 +569,13 @@ mod tests {
         for j in &r.jobs {
             assert_eq!(j.steps, 60, "{} incomplete", j.name);
             assert_eq!(j.oom_failures, 0, "{} OOMed", j.name);
+            assert_eq!(j.arrived_round, 0);
+            assert_eq!(j.departed_round, None, "{} should outlive the fleet", j.name);
         }
         assert!(r.budget_respected(), "aggregate peak {}", r.max_aggregate_peak());
         for d in &r.rounds {
             assert!(d.allocations.iter().sum::<u64>() <= 12 * GIB);
+            assert_eq!(d.job_ids, vec![0, 1]);
         }
     }
 
@@ -320,8 +587,118 @@ mod tests {
     }
 
     #[test]
+    fn infeasible_arrival_rejected_up_front() {
+        // the initial pair fits 20 GB, but the scheduled arrivals push the
+        // timeline to ten QA tenants — four already cannot fit 8 GB of
+        // floors (see infeasible_tenancy_rejected_up_front), so ten cannot
+        // fit 20: construction must reject the whole scenario
+        let mut cfg = fleet_cfg(vec![Task::QaXlnet, Task::QaXlnet], 20, 40);
+        cfg.events = (0..8)
+            .map(|i| FleetEvent::Arrive {
+                spec: JobSpec::new(Task::QaXlnet),
+                at_round: 10 + i,
+            })
+            .collect();
+        assert!(FleetScheduler::new(cfg).is_err());
+    }
+
+    #[test]
     fn empty_fleet_rejected() {
         assert!(FleetScheduler::new(fleet_cfg(vec![], 8, 10)).is_err());
+    }
+
+    #[test]
+    fn depart_event_must_name_a_known_job() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.events = vec![FleetEvent::Depart { job: "nope".into(), at_round: 5 }];
+        assert!(FleetScheduler::new(cfg).is_err());
+    }
+
+    #[test]
+    fn redundant_departs_are_tolerated_first_one_wins() {
+        // a second depart (or one racing the job's own completion) finds the
+        // job already gone — a no-op, exactly like at runtime
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 20);
+        cfg.events = vec![
+            FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 5 },
+            FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 9 },
+        ];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        let j = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        assert_eq!(j.departed_round, Some(5), "the earlier depart wins");
+        assert_eq!(j.steps, 5);
+    }
+
+    #[test]
+    fn arrival_beyond_fleet_end_rejected() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.events = vec![FleetEvent::Arrive {
+            spec: JobSpec::new(Task::McRoberta),
+            at_round: 20,
+        }];
+        assert!(
+            FleetScheduler::new(cfg).is_err(),
+            "an arrival at round >= steps can never join and must not vanish silently"
+        );
+    }
+
+    #[test]
+    fn depart_beyond_fleet_end_rejected() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.events = vec![FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 20 }];
+        assert!(
+            FleetScheduler::new(cfg).is_err(),
+            "a depart at round >= steps can never fire and must not vanish silently"
+        );
+    }
+
+    #[test]
+    fn depart_before_arrival_rejected() {
+        // the depart would fire at round 5 as a no-op and the round-10
+        // arrival would then never leave — reject the contradiction
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 12, 20);
+        cfg.events = vec![
+            FleetEvent::Depart { job: "MC-Roberta#1".into(), at_round: 5 },
+            FleetEvent::Arrive { spec: JobSpec::new(Task::McRoberta), at_round: 10 },
+        ];
+        assert!(FleetScheduler::new(cfg).is_err());
+        // ordered the other way round (arrive 5, depart 10) it is fine
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 12, 20);
+        cfg.events = vec![
+            FleetEvent::Arrive { spec: JobSpec::new(Task::McRoberta), at_round: 5 },
+            FleetEvent::Depart { job: "MC-Roberta#1".into(), at_round: 10 },
+        ];
+        let r = FleetScheduler::new(cfg).unwrap().run();
+        let j = r.jobs.iter().find(|j| j.name == "MC-Roberta#1").unwrap();
+        assert_eq!((j.arrived_round, j.departed_round), (5, Some(10)));
+        assert_eq!(j.steps, 5);
+    }
+
+    #[test]
+    fn completion_frees_floor_room_for_later_arrival() {
+        // the validation timeline models `steps` completion: the MC tenant
+        // is deterministically gone by round 5, so the round-10 arrival
+        // joins a fleet of the same shape that was feasible at round 0
+        let mut cfg = fleet_cfg(
+            vec![Task::McRoberta, Task::QaXlnet, Task::QaBert, Task::TcBert],
+            16,
+            30,
+        );
+        cfg.jobs[0].steps = 5;
+        cfg.events = vec![FleetEvent::Arrive {
+            spec: JobSpec::new(Task::McRoberta),
+            at_round: 10,
+        }];
+        let mut f = FleetScheduler::new(cfg).expect("completion must free the floor room");
+        let r = f.run();
+        assert_eq!(r.jobs.len(), 5);
+        let done = r.jobs.iter().find(|j| j.id == 0).unwrap();
+        assert_eq!((done.steps, done.departed_round), (5, Some(5)));
+        let arrival = r.jobs.iter().find(|j| j.id == 4).unwrap();
+        assert_eq!((arrival.arrived_round, arrival.steps), (10, 20));
+        assert_eq!(r.oom_failures(), 0);
+        assert!(r.budget_respected());
     }
 
     #[test]
@@ -377,5 +754,75 @@ mod tests {
         assert!(r.budget_respected());
         let rebinds: u64 = r.jobs.iter().map(|j| j.budget_changes).sum();
         assert!(rebinds > 0, "tightening must rebind at least one tenant");
+    }
+
+    #[test]
+    fn departure_reclaims_budget_and_arrival_joins_mid_run() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 20, 50);
+        cfg.events = vec![
+            FleetEvent::Arrive { spec: JobSpec::new(Task::TcBert), at_round: 10 },
+            FleetEvent::Depart { job: "MC-Roberta#1".into(), at_round: 30 },
+        ];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.jobs.len(), 3);
+        let by_name = |n: &str| r.jobs.iter().find(|j| j.name == n).unwrap();
+        let initial = by_name("TC-Bert#0");
+        assert_eq!(initial.steps, 50);
+        assert_eq!((initial.arrived_round, initial.departed_round), (0, None));
+        let departed = by_name("MC-Roberta#1");
+        assert_eq!(departed.steps, 30, "departed at round 30: ran rounds 0..30");
+        assert_eq!(departed.departed_round, Some(30));
+        let arrival = by_name("TC-Bert#2");
+        assert_eq!(arrival.steps, 40, "arrived at round 10: ran rounds 10..50");
+        assert_eq!((arrival.arrived_round, arrival.departed_round), (10, None));
+        assert_eq!(r.oom_failures(), 0);
+        assert!(r.budget_respected());
+        // the departed job's id leaves the decision vector from round 30 on
+        for d in &r.rounds {
+            let has_departed = d.job_ids.contains(&1);
+            assert_eq!(has_departed, d.round < 30, "round {}", d.round);
+            let has_arrival = d.job_ids.contains(&2);
+            assert_eq!(has_arrival, d.round >= 10, "round {}", d.round);
+        }
+    }
+
+    #[test]
+    fn completed_job_departs_on_its_own() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40);
+        cfg.jobs[1].steps = 15;
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        let short = r.jobs.iter().find(|j| j.name == "MC-Roberta#1").unwrap();
+        assert_eq!(short.steps, 15);
+        assert_eq!(short.departed_round, Some(15), "completed after its 15th round");
+        for d in &r.rounds {
+            assert_eq!(d.job_ids.contains(&1), d.round < 15, "round {}", d.round);
+        }
+        let long = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        assert_eq!(long.steps, 40);
+    }
+
+    #[test]
+    fn fleet_can_idle_when_everyone_departs() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.jobs[0].steps = 5;
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.jobs.len(), 1);
+        assert_eq!(r.jobs[0].steps, 5);
+        assert_eq!(r.rounds.len(), 20);
+        for d in &r.rounds[5..] {
+            assert!(d.job_ids.is_empty(), "round {} should be idle", d.round);
+            assert_eq!(d.aggregate_peak, 0);
+        }
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::TcBert], 14, 20);
+        cfg.jobs[0].name = Some("same".into());
+        cfg.jobs[1].name = Some("same".into());
+        assert!(FleetScheduler::new(cfg).is_err());
     }
 }

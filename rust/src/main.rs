@@ -13,9 +13,11 @@
 //!   mimose sweep --task qa-bert --lo 4 --hi 7 --points 4
 //!   mimose plan --task tc-bert --budget-gb 5 --seqlen 300
 //!   mimose fleet --tasks tc-bert,qa-bert,mc-roberta --budget-gb 16 --compare
+//!   mimose fleet --tasks tc-bert,qa-bert --weights 3.0,1.0 --events events.toml
 
 use mimose::config::{
-    CoordinatorConfig, ExperimentConfig, FleetConfig, MimoseConfig, PlannerKind, Task,
+    toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, JobSpec, MimoseConfig,
+    PlannerKind, Task,
 };
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
 use mimose::engine::sim::SimEngine;
@@ -294,13 +296,16 @@ fn report_fleet(r: &FleetReport) {
         if r.arbitrated { "arbitrated (broker)" } else { "static equal split" }
     );
     println!(
-        "  {:<16} {:>6} {:>12} {:>10} {:>8} {:>7} {:>8} {:>11}",
-        "job", "steps", "sim time s", "peak", "cache%", "shared", "rebinds", "final budget"
+        "  {:<16} {:>4} {:>11} {:>6} {:>12} {:>10} {:>8} {:>7} {:>8} {:>11}",
+        "job", "w", "lifetime", "steps", "sim time s", "peak", "cache%", "shared", "rebinds",
+        "final budget"
     );
     for j in &r.jobs {
         println!(
-            "  {:<16} {:>6} {:>12.2} {:>10} {:>7.1}% {:>7} {:>8} {:>11}",
+            "  {:<16} {:>4.1} {:>11} {:>6} {:>12.2} {:>10} {:>7.1}% {:>7} {:>8} {:>11}",
             j.name,
+            j.weight,
+            j.lifetime_label(),
             j.steps,
             j.total_ms / 1e3,
             fmt_bytes(j.peak_bytes),
@@ -310,6 +315,14 @@ fn report_fleet(r: &FleetReport) {
             fmt_bytes(j.final_budget),
         );
     }
+    if r.arrived_jobs() + r.departed_jobs() > 0 {
+        println!(
+            "  dynamics          : {} arrivals, {} departures/completions",
+            r.arrived_jobs(),
+            r.departed_jobs()
+        );
+    }
+    println!("  weighted fairness : {:.3} mean Jain over multi-tenant rounds", r.weighted_jain_mean());
     println!(
         "  aggregate peak    : {} of {} global ({})",
         fmt_bytes(r.max_aggregate_peak()),
@@ -336,13 +349,23 @@ fn report_fleet(r: &FleetReport) {
 
 fn cmd_fleet(args: &[String]) {
     let cli = parse_or_exit(
-        Cli::new("mimose fleet", "N jobs time-sharing one memory budget")
+        Cli::new("mimose fleet", "jobs time-sharing one memory budget")
             .opt("config", "", "TOML config path with a [fleet] section")
             .opt("tasks", "tc-bert,qa-bert", "comma-separated task list (tasks may repeat)")
+            .opt(
+                "weights",
+                "",
+                "comma-separated priority weights aligned with --tasks (default all 1.0)",
+            )
+            .opt(
+                "events",
+                "",
+                "TOML path whose [[fleet.events]] script mid-run arrivals/departures",
+            )
             .opt("budget-gb", "16.0", "GLOBAL memory budget shared by all jobs (GiB)")
             .opt("floor-gb", "2.0", "configured per-job guaranteed floor (GiB)")
             .opt("steps", "200", "interleaved rounds (iterations per job)")
-            .opt("seed", "42", "base rng seed (job i uses seed+i)")
+            .opt("seed", "42", "base rng seed (the job with id i uses seed+i)")
             .opt("grid-mb", "128", "broker allocation granularity (MiB)")
             .opt("cache-capacity", "512", "shared plan-cache capacity (0 = unbounded)")
             .flag("no-shared-cache", "disable cross-job plan reuse")
@@ -350,7 +373,16 @@ fn cmd_fleet(args: &[String]) {
             .flag("compare", "also run the other mode and print the speedup"),
         args,
     );
-    let cfg = if !cli.get("config").is_empty() {
+    let mut cfg = if !cli.get("config").is_empty() {
+        if !cli.get("weights").is_empty() {
+            // --events composes with --config (it appends), but weights are
+            // per-job attributes of the config's own job list — silently
+            // ignoring the flag would fake a priority fill
+            eprintln!(
+                "--weights applies to --tasks; with --config, set 'weight' in [[fleet.jobs]]"
+            );
+            std::process::exit(2);
+        }
         FleetConfig::from_file(&cli.get("config")).unwrap_or_else(|e| {
             eprintln!("config error: {e}");
             std::process::exit(2);
@@ -366,6 +398,26 @@ fn cmd_fleet(args: &[String]) {
                 })
             })
             .collect();
+        let mut jobs = JobSpec::from_tasks(&tasks);
+        let weights = cli.get("weights");
+        if !weights.is_empty() {
+            let ws: Vec<f64> = weights
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<f64>().unwrap_or_else(|_| {
+                        eprintln!("bad weight '{s}'");
+                        std::process::exit(2);
+                    })
+                })
+                .collect();
+            if ws.len() != jobs.len() {
+                eprintln!("--weights needs one value per task ({} != {})", ws.len(), jobs.len());
+                std::process::exit(2);
+            }
+            for (job, w) in jobs.iter_mut().zip(ws) {
+                job.weight = w;
+            }
+        }
         FleetConfig {
             global_budget_bytes: (cli.get_f64("budget-gb") * GIB as f64) as u64,
             floor_bytes: (cli.get_f64("floor-gb") * GIB as f64) as u64,
@@ -374,11 +426,28 @@ fn cmd_fleet(args: &[String]) {
             cache_capacity: cli.get_usize("cache-capacity"),
             grid_bytes: (cli.get_f64("grid-mb") * (1u64 << 20) as f64) as u64,
             arbitrated: !cli.get_flag("equal-split"),
-            tasks,
+            jobs,
             seed: cli.get_u64("seed"),
             ..Default::default()
         }
     };
+    if !cli.get("events").is_empty() {
+        let text = std::fs::read_to_string(cli.get("events")).unwrap_or_else(|e| {
+            eprintln!("cannot read events file: {e}");
+            std::process::exit(2);
+        });
+        let doc = Doc::parse(&text).unwrap_or_else(|e| {
+            eprintln!("events file error: {e}");
+            std::process::exit(2);
+        });
+        match FleetConfig::events_from_doc(&doc) {
+            Ok(evs) => cfg.events.extend(evs),
+            Err(e) => {
+                eprintln!("events file error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let run_mode = |arbitrated: bool| -> FleetReport {
         let mut c = cfg.clone();
         c.arbitrated = arbitrated;
@@ -391,8 +460,9 @@ fn cmd_fleet(args: &[String]) {
         }
     };
     println!(
-        "fleet: {} jobs sharing {:.1} GB (seed {})",
-        cfg.tasks.len(),
+        "fleet: {} initial jobs, {} scripted events, sharing {:.1} GB (seed {})",
+        cfg.jobs.len(),
+        cfg.events.len(),
         cfg.global_budget_gb(),
         cfg.seed
     );

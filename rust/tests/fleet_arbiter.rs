@@ -5,8 +5,9 @@
 //!   3. fleet throughput ≥ static equal-split throughput on the same
 //!      workload (same tasks, same seeds, same input streams).
 
-use mimose::config::{FleetConfig, Task};
+use mimose::config::{FleetConfig, FleetEvent, JobSpec, ModelSpec, Task};
 use mimose::fleet::{FleetReport, FleetScheduler};
+use mimose::scheduler::{model_signature, Plan, SharedPlanCache};
 use mimose::util::GIB;
 
 const GLOBAL_GB: u64 = 20;
@@ -20,7 +21,12 @@ fn cfg(arbitrated: bool) -> FleetConfig {
         global_budget_bytes: GLOBAL_GB * GIB,
         steps: STEPS,
         arbitrated,
-        tasks: vec![Task::McRoberta, Task::QaXlnet, Task::QaBert, Task::TcBert],
+        jobs: JobSpec::from_tasks(&[
+            Task::McRoberta,
+            Task::QaXlnet,
+            Task::QaBert,
+            Task::TcBert,
+        ]),
         seed: 7,
         ..Default::default()
     }
@@ -92,7 +98,7 @@ fn contended_device_resolves_overshoot_by_replanning_not_oom() {
 #[test]
 fn identical_architecture_tenants_share_plans_across_jobs() {
     let mut c = cfg(true);
-    c.tasks = vec![Task::TcBert, Task::TcBert, Task::TcBert];
+    c.jobs = JobSpec::from_tasks(&[Task::TcBert, Task::TcBert, Task::TcBert]);
     c.global_budget_bytes = 18 * GIB;
     let r = FleetScheduler::new(c).expect("feasible").run();
     assert!(
@@ -101,4 +107,94 @@ fn identical_architecture_tenants_share_plans_across_jobs() {
     );
     assert!(r.shared_cache_entries > 0);
     assert_eq!(r.oom_failures(), 0);
+}
+
+#[test]
+fn rearriving_signature_hits_plans_contributed_before_departure() {
+    // tenant "b" (TC-Bert) departs at round 40; "b2" — the SAME model
+    // signature — arrives shortly after. The other tenant is a DIFFERENT
+    // signature (QA-Bert), so b2's shared-cache hits can only come from
+    // entries b contributed before it left: this pins retention across
+    // departure, not merely cross-tenant reuse.
+    let mut c = cfg(true);
+    c.global_budget_bytes = 14 * GIB;
+    c.steps = 120;
+    c.jobs = JobSpec::from_tasks(&[Task::QaBert, Task::TcBert]);
+    c.events = vec![
+        FleetEvent::Depart { job: "TC-Bert#1".into(), at_round: 40 },
+        FleetEvent::Arrive {
+            spec: JobSpec { name: Some("b2".into()), ..JobSpec::new(Task::TcBert) },
+            at_round: 44,
+        },
+    ];
+    let r = FleetScheduler::new(c).expect("never more than two concurrent tenants").run();
+    assert_eq!(r.oom_failures(), 0);
+    assert!(r.budget_respected());
+    assert!(r.shared_cache_entries > 0, "contributions must be retained");
+    let b2 = r.jobs.iter().find(|j| j.name == "b2").unwrap();
+    assert_eq!(b2.arrived_round, 44);
+    assert_eq!(b2.steps, 120 - 44);
+    assert!(
+        b2.shared_hits > 0,
+        "the re-arriving signature must hit plans the departed tenant \
+         contributed (got {} hits over {} rounds)",
+        b2.shared_hits,
+        b2.steps
+    );
+}
+
+#[test]
+fn purge_on_reshelter_only_evicts_own_contributions() {
+    // Coordinators purge the (size, budget) keys THEY inserted when a
+    // reshelter invalidates their estimator (Coordinator::begin_iteration);
+    // the cache-level contract that makes this safe for neighbours: removing
+    // one tenant's keys never disturbs another tenant's entries — even on
+    // the same model signature — and never other signatures.
+    let sig_a = model_signature(&ModelSpec::bert_base(), 32, 1.0);
+    let sig_b = model_signature(&ModelSpec::roberta_base(), 16, 1.0);
+    let mut cache = SharedPlanCache::new(0);
+    // tenant 1 contributed (sig_a, 9600); tenant 2 contributed (sig_a,
+    // 12800) and (sig_b, 9600)
+    cache.insert(sig_a, 9600, 6 * GIB, Plan::of([1, 2]));
+    cache.insert(sig_a, 12_800, 6 * GIB, Plan::of([3]));
+    cache.insert(sig_b, 9600, 6 * GIB, Plan::of([4]));
+    // tenant 1 reshelters: it purges exactly its own contribution list
+    cache.remove(sig_a, 9600, 6 * GIB);
+    assert!(cache.lookup(sig_a, 9600, 6 * GIB).is_none(), "own entry purged");
+    assert_eq!(
+        cache.lookup(sig_a, 12_800, 6 * GIB),
+        Some(Plan::of([3])),
+        "same-signature neighbour entry survives the purge"
+    );
+    assert_eq!(
+        cache.lookup(sig_b, 9600, 6 * GIB),
+        Some(Plan::of([4])),
+        "other-signature entry survives the purge"
+    );
+    assert_eq!(cache.len(), 2);
+}
+
+#[test]
+fn reshelters_and_dynamics_compose_without_cross_job_eviction() {
+    // end-to-end: novel-size reshelters on AND a mid-run departure/arrival;
+    // the run must stay safe and cross-job reuse must still happen
+    let mut c = cfg(true);
+    c.global_budget_bytes = 14 * GIB;
+    c.steps = 100;
+    c.jobs = JobSpec::from_tasks(&[Task::TcBert, Task::TcBert]);
+    c.coordinator.reshelter_on_novel = true;
+    c.events = vec![
+        FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 60 },
+        FleetEvent::Arrive {
+            spec: JobSpec::new(Task::TcBert),
+            at_round: 64,
+        },
+    ];
+    let r = FleetScheduler::new(c).expect("feasible").run();
+    assert_eq!(r.oom_failures(), 0);
+    assert!(r.budget_respected());
+    assert!(
+        r.shared_cache_hits > 0,
+        "reshelter purges must not wipe other tenants' reusable plans"
+    );
 }

@@ -1,0 +1,382 @@
+//! Dynamic-fleet pins (ISSUE 3): the job set changes mid-run — scripted
+//! arrivals and departures, priority weights, early completion — and the
+//! safety contract must hold through every transition:
+//!
+//!   1. the aggregate ledger peak never exceeds the global budget,
+//!   2. every live job always holds at least its conservative floor,
+//!   3. no departed job retains an allocation,
+//!   4. with all weights equal and an empty event stream the dynamic
+//!      scheduler is indistinguishable from the PR-2 static fleet —
+//!      round-by-round allocations are byte-identical whether jobs are
+//!      configured as the initial set, given explicit neutral weights, or
+//!      injected through a round-0 arrival event.
+
+use mimose::config::{toml::Doc, FleetConfig, FleetEvent, JobSpec, Task};
+use mimose::fleet::{BudgetBroker, FleetReport, FleetScheduler, JobDemand, JobSummary};
+use mimose::util::proptest::{ensure, forall};
+use mimose::util::rng::Rng;
+use mimose::util::GIB;
+
+// ---------------------------------------------------------------------------
+// Property: broker invariants under randomized arrival/departure schedules
+// ---------------------------------------------------------------------------
+
+/// Pure-broker property over a pool of jobs whose live subset, floors,
+/// predictions, and weights are re-rolled every round from a shrinkable
+/// seed: Σ budgets ≤ global, every budget ≥ its floor, and the broker
+/// tracks state for exactly the live ids (departures reclaimed instantly).
+#[test]
+fn prop_broker_safe_under_random_schedules() {
+    forall(
+        101,
+        250,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let global = 16 * GIB;
+            let mut broker = BudgetBroker::new(global, 64 << 20, 0.4);
+            let pool = rng.range_u(2, 7);
+            let weights: Vec<f64> =
+                (0..pool).map(|_| rng.range_u(1, 50) as f64 / 10.0).collect();
+            let rounds = rng.range_u(1, 10);
+            for _ in 0..rounds {
+                // every job flips a coin to be live this round — an
+                // adversarial schedule: any job may arrive, depart, and
+                // re-arrive at any time
+                let live: Vec<u64> =
+                    (0..pool as u64).filter(|_| rng.f64() < 0.7).collect();
+                if live.is_empty() {
+                    continue;
+                }
+                let demands: Vec<JobDemand> = live
+                    .iter()
+                    .map(|&id| {
+                        let floor = rng.range_u(64, 1024) as u64 * (1 << 20);
+                        let pred = rng.range_u(0, 8192) as u64 * (1 << 20);
+                        JobDemand {
+                            id,
+                            weight: weights[id as usize],
+                            floor,
+                            predicted: if pred == 0 { None } else { Some(pred) },
+                        }
+                    })
+                    .collect();
+                let a = match broker.allocate(&demands) {
+                    Ok(a) => a,
+                    Err(_) => {
+                        let fsum: u64 = demands.iter().map(|d| d.floor).sum();
+                        ensure(fsum > global, "allocate only errs on infeasible floors")?;
+                        continue;
+                    }
+                };
+                ensure(
+                    a.budgets.iter().sum::<u64>() <= global,
+                    &format!("granted {} over global", a.budgets.iter().sum::<u64>()),
+                )?;
+                for (b, d) in a.budgets.iter().zip(&demands) {
+                    ensure(
+                        *b >= d.floor,
+                        &format!("job {} got {b} below floor {}", d.id, d.floor),
+                    )?;
+                }
+                ensure(
+                    broker.tracked_ids() == live,
+                    "broker must track exactly the live ids",
+                )?;
+                for id in 0..pool as u64 {
+                    if !live.contains(&id) {
+                        ensure(
+                            broker.allocation_of(id).is_none(),
+                            &format!("departed job {id} retains an allocation"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property: full-scheduler invariants under randomized event timelines
+// ---------------------------------------------------------------------------
+
+fn expected_live(j: &JobSummary, round: usize) -> bool {
+    let end = j.departed_round.unwrap_or(j.arrived_round + j.steps);
+    j.arrived_round <= round && round < end
+}
+
+fn check_fleet_invariants(r: &FleetReport, global: u64) -> Result<(), String> {
+    for d in &r.rounds {
+        ensure(
+            d.aggregate_peak <= global,
+            &format!("round {}: aggregate peak {} over budget", d.round, d.aggregate_peak),
+        )?;
+        ensure(
+            d.allocations.iter().sum::<u64>() <= global,
+            &format!("round {}: allocations over budget", d.round),
+        )?;
+        for ((a, f), id) in d.allocations.iter().zip(&d.floors).zip(&d.job_ids) {
+            ensure(
+                a >= f,
+                &format!("round {}: job {id} holds {a} below floor {f}", d.round),
+            )?;
+        }
+        for j in &r.jobs {
+            ensure(
+                d.job_ids.contains(&j.id) == expected_live(j, d.round),
+                &format!(
+                    "round {}: job {} (lifetime {}..{:?}) wrongly {} the decision",
+                    d.round,
+                    j.name,
+                    j.arrived_round,
+                    j.departed_round,
+                    if d.job_ids.contains(&j.id) { "in" } else { "out of" },
+                ),
+            )?;
+        }
+    }
+    for j in &r.jobs {
+        ensure(j.oom_failures == 0, &format!("{} OOMed", j.name))?;
+        ensure(
+            j.steps == j.lifetime_rounds(),
+            &format!("{} ran {} steps over {} live rounds", j.name, j.steps, j.lifetime_rounds()),
+        )?;
+    }
+    Ok(())
+}
+
+/// Scheduler-level property: randomized arrival rounds, departure rounds,
+/// weights, and early-completion limits. Infeasible timelines are rejected
+/// at construction (also part of the contract); feasible ones must satisfy
+/// every invariant above, end to end.
+#[test]
+fn prop_fleet_safe_under_random_event_timelines() {
+    forall(
+        7,
+        6,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let steps = rng.range_u(12, 20);
+            let mut jobs =
+                JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]);
+            jobs[0].weight = rng.range_u(1, 40) as f64 / 10.0;
+            jobs[1].weight = rng.range_u(1, 40) as f64 / 10.0;
+            if rng.f64() < 0.5 {
+                // one initial job completes early on its own
+                jobs[1].steps = rng.range_u(3, steps.max(4));
+            }
+            let mut events = Vec::new();
+            if rng.f64() < 0.8 {
+                events.push(FleetEvent::Arrive {
+                    spec: JobSpec::weighted(
+                        Task::McRoberta,
+                        rng.range_u(1, 40) as f64 / 10.0,
+                    ),
+                    // range_u is inclusive; arrivals at >= steps are
+                    // rejected at construction, so stay inside the run
+                    at_round: rng.range_u(0, steps - 1),
+                });
+            }
+            if rng.f64() < 0.5 {
+                events.push(FleetEvent::Depart {
+                    job: "TC-Bert#0".into(),
+                    // departs at >= steps can never fire and are rejected
+                    at_round: rng.range_u(1, steps - 1),
+                });
+            }
+            let cfg = FleetConfig {
+                global_budget_bytes: 20 * GIB,
+                steps,
+                jobs,
+                events,
+                seed: seed ^ 0x5eed,
+                ..Default::default()
+            };
+            let mut fleet = match FleetScheduler::new(cfg) {
+                Ok(f) => f,
+                // an infeasible timeline (or a departure racing its own
+                // completion window) is rejected up front — that is the
+                // contract, not a counterexample
+                Err(_) => return Ok(()),
+            };
+            let r = fleet.run();
+            check_fleet_invariants(&r, 20 * GIB)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Differential: no events + neutral weights == the PR-2 static fleet
+// ---------------------------------------------------------------------------
+
+fn allocations_of(r: &FleetReport) -> Vec<Vec<u64>> {
+    r.rounds.iter().map(|d| d.allocations.clone()).collect()
+}
+
+fn peaks_of(r: &FleetReport) -> Vec<u64> {
+    r.rounds.iter().map(|d| d.aggregate_peak).collect()
+}
+
+/// The dynamic refactor must be invisible when nothing dynamic is
+/// configured. Three constructions of the same two-tenant workload —
+/// the plain task list (exactly what PR 2 ran), explicit specs with the
+/// neutral weight spelled out, and the second job injected via a round-0
+/// arrival event — must produce byte-identical round-by-round allocations
+/// and simulated peaks. (The weighted water-fill itself is pinned
+/// bit-identical to the classic fill in the broker's unit tests.)
+#[test]
+fn differential_static_fleet_behaviour_is_unchanged() {
+    let base = FleetConfig {
+        global_budget_bytes: 12 * GIB,
+        steps: 60,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        seed: 11,
+        ..Default::default()
+    };
+    let run = |cfg: FleetConfig| FleetScheduler::new(cfg).expect("feasible").run();
+
+    let r_plain = run(base.clone());
+
+    // explicit neutral weights and names: spelled-out defaults change nothing
+    let mut explicit = base.clone();
+    explicit.jobs = vec![
+        JobSpec {
+            name: Some("a".into()),
+            ..JobSpec::weighted(Task::TcBert, 1.0)
+        },
+        JobSpec {
+            name: Some("b".into()),
+            ..JobSpec::weighted(Task::McRoberta, 1.0)
+        },
+    ];
+    let r_explicit = run(explicit);
+
+    // the second tenant delivered by a round-0 arrival event instead of the
+    // initial set: same id, same seed, same stream, same decisions
+    let mut via_event = base.clone();
+    via_event.jobs = JobSpec::from_tasks(&[Task::TcBert]);
+    via_event.events = vec![FleetEvent::Arrive {
+        spec: JobSpec::new(Task::McRoberta),
+        at_round: 0,
+    }];
+    let r_event = run(via_event);
+
+    assert_eq!(
+        allocations_of(&r_plain),
+        allocations_of(&r_explicit),
+        "explicit neutral weights must not change a single allocation"
+    );
+    assert_eq!(
+        allocations_of(&r_plain),
+        allocations_of(&r_event),
+        "a round-0 arrival must be indistinguishable from an initial job"
+    );
+    assert_eq!(peaks_of(&r_plain), peaks_of(&r_explicit));
+    assert_eq!(peaks_of(&r_plain), peaks_of(&r_event));
+    assert_eq!(r_plain.overshoots, r_explicit.overshoots);
+    assert_eq!(r_plain.overshoots, r_event.overshoots);
+    for (a, b) in r_plain.jobs.iter().zip(&r_event.jobs) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.final_budget, b.final_budget);
+        assert_eq!(a.peak_bytes, b.peak_bytes);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance scenario: TOML-driven high-weight arrival + departure
+// ---------------------------------------------------------------------------
+
+/// The ISSUE-3 acceptance scenario, driven entirely from TOML: a weight-3
+/// job arrives at round R = 20, another departs at 2R = 40. The run must
+/// complete with zero OOM rounds, the budget respected throughout, and in
+/// every contended round where both same-task tenants are slack-capped the
+/// high-weight arrival must hold at least the weight-1 tenant's slack.
+#[test]
+fn toml_scenario_high_weight_arrival_and_departure() {
+    let doc = Doc::parse(
+        "[fleet]\n\
+         global_budget_gb = 16.0\n\
+         steps = 80\n\
+         seed = 3\n\
+         [[fleet.jobs]]\n\
+         task = \"tc-bert\"\n\
+         [[fleet.jobs]]\n\
+         task = \"qa-bert\"\n\
+         [[fleet.events]]\n\
+         kind = \"arrive\"\n\
+         round = 20\n\
+         task = \"tc-bert\"\n\
+         weight = 3.0\n\
+         name = \"prio\"\n\
+         [[fleet.events]]\n\
+         kind = \"depart\"\n\
+         round = 40\n\
+         job = \"QA-Bert#1\"\n",
+    )
+    .unwrap();
+    let cfg = FleetConfig::from_doc(&doc).unwrap();
+    assert_eq!(cfg.jobs.len(), 2);
+    assert_eq!(cfg.events.len(), 2);
+    let grid = cfg.grid_bytes;
+    let mut fleet = FleetScheduler::new(cfg).expect("timeline validated feasible");
+    let r = fleet.run();
+
+    // runs to completion, zero OOM rounds, budget respected always
+    assert_eq!(r.rounds.len(), 80);
+    assert_eq!(r.oom_failures(), 0, "zero OOM rounds");
+    assert!(r.budget_respected(), "aggregate peak {}", r.max_aggregate_peak());
+    let by_name = |n: &str| r.jobs.iter().find(|j| j.name == n).unwrap();
+    assert_eq!(by_name("TC-Bert#0").steps, 80);
+    assert_eq!(by_name("QA-Bert#1").steps, 40);
+    assert_eq!(by_name("QA-Bert#1").departed_round, Some(40));
+    let prio = by_name("prio");
+    assert_eq!((prio.arrived_round, prio.steps), (20, 60));
+    assert_eq!(prio.weight, 3.0);
+
+    // no departed job retains an allocation
+    for d in &r.rounds {
+        assert_eq!(d.job_ids.contains(&1), d.round < 40, "round {}", d.round);
+        assert_eq!(d.job_ids.contains(&2), d.round >= 20, "round {}", d.round);
+    }
+
+    // the arriving job reaches its weighted share within the hysteresis
+    // window: once its estimator trains (10 sheltered rounds after its
+    // round-20 arrival) and the grid hysteresis settles, it must be
+    // water-filled ABOVE its guaranteed floor in some round — the broker
+    // actually funds the arrival instead of parking it at the minimum
+    assert!(
+        r.rounds.iter().any(|d| {
+            d.job_ids.iter().position(|&j| j == 2).is_some_and(|i| {
+                d.round >= 32 && d.allocations[i] >= d.floors[i] + grid
+            })
+        }),
+        "the weight-3 arrival never rose above its floor after training"
+    );
+
+    // weighted share under contention: wherever the fill capped BOTH
+    // same-task tenants (allocation more than 3 grid steps short of the
+    // want — far enough that hysteresis and quantisation cannot fake it),
+    // the weight-3 arrival's slack must cover the weight-1 tenant's: the
+    // weighted max-min guarantee, modulo one grid step of quantisation
+    // and one of hysteresis on each side
+    for d in &r.rounds {
+        let slot = |id: u64| d.job_ids.iter().position(|&j| j == id);
+        if let (Some(t0), Some(t2)) = (slot(0), slot(2)) {
+            let capped = |i: usize| d.allocations[i] + 3 * grid < d.wants[i];
+            if capped(t0) && capped(t2) {
+                let slack0 = d.allocations[t0] - d.floors[t0];
+                let slack2 = d.allocations[t2] - d.floors[t2];
+                assert!(
+                    slack2 + 2 * grid >= slack0,
+                    "round {}: weight-3 slack {} under weight-1 slack {}",
+                    d.round,
+                    slack2,
+                    slack0
+                );
+            }
+        }
+    }
+}
