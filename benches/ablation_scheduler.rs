@@ -10,8 +10,8 @@ mod common;
 use common::{gb, rule, write_tsv};
 use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
 use mimose::engine::sim::SimEngine;
-use mimose::model::transformer_profile;
-use mimose::scheduler::{greedy_schedule, LayerEst};
+use mimose::model::{transformer_profile, Stage};
+use mimose::scheduler::{greedy_schedule, StageEst};
 
 const ITERS: usize = 500;
 
@@ -70,15 +70,22 @@ fn main() {
     rule("Ablation (d) — earliest-first vs latest-first in a bucket (peak)");
     let model = Task::TcBert.model();
     let profile = transformer_profile(&model, 32, 300, 1.0);
-    let layers: Vec<LayerEst> = mimose::planners::checkpointable(&profile);
+    let layers: Vec<StageEst> = mimose::planners::checkpointable(&profile);
     let excess = profile.total_act_bytes() / 3;
     let early = greedy_schedule(&layers, excess, 0.10);
-    // latest-first: reverse fwd_order before scheduling
-    let mut rev: Vec<LayerEst> = layers.clone();
-    let max_order = rev.iter().map(|l| l.fwd_order).max().unwrap();
-    for l in &mut rev {
-        l.fwd_order = max_order - l.fwd_order;
-    }
+    // latest-first: reverse fwd_order before scheduling (owned stage copies,
+    // since the checkpointable view borrows the profile's stages)
+    let max_order = layers.iter().map(|l| l.fwd_order()).max().unwrap();
+    let rev_stages: Vec<Stage> = layers
+        .iter()
+        .map(|l| {
+            let mut s = l.stage.clone();
+            s.fwd_order = max_order - s.fwd_order;
+            s
+        })
+        .collect();
+    let rev: Vec<StageEst> =
+        rev_stages.iter().map(|s| StageEst::new(s, s.act_bytes)).collect();
     let late = greedy_schedule(&rev, excess, 0.10);
     let p_early = profile.peak_bytes(&early.ids());
     let p_late = profile.peak_bytes(&late.ids());

@@ -12,7 +12,7 @@ fn main() {
     rule("Fig 10a — Swin-T per-block activation bytes by stage");
     let swin = SwinSpec::default().profile(8, 224);
     let mut rows = Vec::new();
-    for l in &swin.layers {
+    for l in swin.layers() {
         let mb = l.act_bytes as f64 / 1048576.0;
         println!("  {:<16} {:8.1} MiB  |{}", l.name, mb, "#".repeat((mb / 8.0) as usize));
         rows.push(format!("swin\t{}\t{:.2}", l.name, mb));
@@ -20,7 +20,7 @@ fn main() {
 
     rule("Fig 10b — ResNet-50 per-block activation bytes by stage");
     let resnet = ResNetSpec::default().profile(8, 224);
-    for l in &resnet.layers {
+    for l in resnet.layers() {
         let mb = l.act_bytes as f64 / 1048576.0;
         println!("  {:<16} {:8.1} MiB  |{}", l.name, mb, "#".repeat((mb / 8.0) as usize));
         rows.push(format!("resnet\t{}\t{:.2}", l.name, mb));

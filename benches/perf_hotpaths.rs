@@ -1,6 +1,7 @@
 //! §Perf — L3 hot-path microbenchmarks (in-repo harness; criterion is
 //! unavailable offline). Targets from DESIGN.md §7:
 //!   scheduler plan generation  < 1 ms   (the paper's own claim)
+//!   schedule_graph (branch-aware path) < 1 ms, chains AND seq2seq graphs
 //!   estimator predict (14-layer vector) < 20 µs
 //!   plan-cache lookup          ~ sub-µs
 //!   allocator alloc/free pair  ~ sub-µs
@@ -15,8 +16,8 @@ use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
 use mimose::engine::sim::SimEngine;
 use mimose::estimator::{MemoryEstimator, Sample};
 use mimose::memory::CachingAllocator;
-use mimose::model::transformer_profile;
-use mimose::scheduler::{greedy_schedule, Plan, PlanCache};
+use mimose::model::{seq2seq_profile, transformer_profile, Stage, StageKind};
+use mimose::scheduler::{greedy_schedule, schedule_graph, Plan, PlanCache, StageEst};
 use mimose::util::timer::{bench, black_box};
 use mimose::util::GIB;
 use std::time::Duration;
@@ -43,26 +44,50 @@ fn main() {
     assert!(r.mean_s < 1e-3, "plan generation must stay sub-millisecond");
 
     // a 200-layer model (GPT-3-depth-class) must still be fast
-    let mut big = Vec::new();
-    for i in 0..200 {
-        big.push(mimose::scheduler::LayerEst {
+    let big: Vec<Stage> = (0..200)
+        .map(|i| Stage {
             id: i,
-            est_bytes: 100_000_000 + (i as u64 % 7) * 1_000_000,
-            ckpt_bytes: 8_000_000,
+            name: String::new(),
+            kind: StageKind::Encoder,
             fwd_order: i,
-        });
-    }
+            act_bytes: 100_000_000 + (i as u64 % 7) * 1_000_000,
+            ckpt_bytes: 8_000_000,
+            fwd_flops: 1_000_000 + (i as u64 % 5) * 100_000,
+            transient_bytes: 0,
+        })
+        .collect();
+    let big_ests: Vec<StageEst> =
+        big.iter().map(|s| StageEst::new(s, s.act_bytes)).collect();
     let r = record(bench("greedy_schedule/200-layers", BUDGET, || {
-        black_box(greedy_schedule(black_box(&big), 5_000_000_000, 0.10));
+        black_box(greedy_schedule(black_box(&big_ests), 5_000_000_000, 0.10));
     }));
     assert!(r.mean_s < 1e-3);
+
+    rule("Perf — schedule_graph (branch-aware path)");
+    // chain-shaped graph: the path every Coordinator plan takes
+    let chain_est: Vec<u64> = profile.layers().iter().map(|s| s.act_bytes).collect();
+    let r = record(bench("schedule_graph/chain-14", BUDGET, || {
+        black_box(schedule_graph(black_box(&profile.graph), black_box(&chain_est), black_box(excess), 0.10));
+    }));
+    assert!(r.mean_s < 1e-3, "graph scheduling must stay sub-millisecond");
+    // seq2seq branch/join graph (21 stages, 6 joins)
+    let s2s = seq2seq_profile(&Task::Seq2seq.model(), 24, 300, 260);
+    let s2s_excess = s2s.total_act_bytes() / 2;
+    let s2s_est: Vec<u64> = s2s.layers().iter().map(|s| s.act_bytes).collect();
+    let r = record(bench("schedule_graph/seq2seq-21", BUDGET, || {
+        black_box(schedule_graph(black_box(&s2s.graph), black_box(&s2s_est), black_box(s2s_excess), 0.10));
+    }));
+    assert!(r.mean_s < 1e-3, "branch liveness must not blow the latency budget");
 
     rule("Perf — estimator");
     let mut est = MemoryEstimator::new(14);
     for l in 0..14 {
         for i in 1..=10 {
             let x = (i * 800) as f64;
-            est.observe(l, Sample { input_size: x, act_bytes: 1e6 + 3.0 * x * x, fwd_ms: 0.1 * x });
+            est.observe(
+                l,
+                Sample { input_size: x, input_size2: 0.0, act_bytes: 1e6 + 3.0 * x * x, fwd_ms: 0.1 * x },
+            );
         }
     }
     let train_ms = est.train();
@@ -75,10 +100,10 @@ fn main() {
     rule("Perf — plan cache");
     let mut cache = PlanCache::new(0.05);
     for i in 0..64 {
-        cache.insert(1000 + i * 97, Plan::of([1, 2, 3]));
+        cache.insert((1000 + i * 97, 0), Plan::of([1, 2, 3]));
     }
     record(bench("plan_cache/lookup_exact", BUDGET, || {
-        black_box(cache.lookup_exact(black_box(1970)));
+        black_box(cache.lookup_exact(black_box((1970, 0))));
     }));
 
     rule("Perf — fleet broker");

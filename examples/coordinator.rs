@@ -7,14 +7,15 @@
 use mimose::config::{CoordinatorConfig, MimoseConfig, Task};
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
 use mimose::data::InputStream;
-use mimose::model::transformer_profile;
-use mimose::planners::{InputDesc, IterationMode};
+use mimose::engine::sim::{input_for, max_task_profile};
+use mimose::model::task_profile;
+use mimose::planners::IterationMode;
 use mimose::util::cli::Cli;
 use mimose::util::{fmt_bytes, GIB};
 
 fn main() {
     let cli = Cli::new("coordinator", "the online pipeline as an explicit state machine")
-        .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert")
+        .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert | seq2seq | swin")
         .opt("budget-gb", "5.5", "memory budget (GiB)")
         .opt("iters", "60", "iterations to step through")
         .opt("seed", "42", "input stream seed")
@@ -22,11 +23,10 @@ fn main() {
         .parse();
     let task = Task::parse(&cli.get("task")).expect("unknown task");
     let budget = (cli.get_f64("budget-gb") * GIB as f64) as u64;
-    let model = task.model();
 
     let mut coord = Coordinator::new(
         budget,
-        model.layers + 2,
+        max_task_profile(task).layers().len(),
         MimoseConfig::default(),
         CoordinatorConfig {
             reshelter_on_novel: cli.get_flag("reshelter"),
@@ -41,9 +41,9 @@ fn main() {
         fmt_bytes(budget)
     );
     for iter in 0..cli.get_usize("iters") {
-        let seq = stream.next_seqlen();
-        let profile = transformer_profile(&model, task.batch(), seq, 1.0);
-        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        let (seq, tgt) = stream.next_shape();
+        let profile = task_profile(task, task.batch(), seq, tgt);
+        let input = input_for(task, (seq, tgt));
         let d = coord.begin_iteration(&input, &profile);
         let (tag, plan_len) = match &d.mode {
             IterationMode::Sheltered(p) => ("collect", p.len()),

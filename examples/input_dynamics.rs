@@ -37,7 +37,7 @@ fn main() {
     loop {
         let seq = stream.next_seqlen();
         let profile = transformer_profile(&model, task.batch(), seq, 1.0);
-        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        let input = InputDesc::new(task.batch(), seq);
         match planner.begin_iteration(&input, &profile).mode {
             IterationMode::Sheltered(_) => {
                 let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
@@ -51,9 +51,9 @@ fn main() {
     println!("seqlen  est.activations  checkpointed layers");
     for seq in (lo..=hi).step_by(((hi - lo) / 10).max(1)) {
         let profile = transformer_profile(&model, task.batch(), seq, 1.0);
-        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        let input = InputDesc::new(task.batch(), seq);
         if let IterationMode::Planned(plan) = planner.begin_iteration(&input, &profile).mode {
-            let est: f64 = (0..profile.layers.len())
+            let est: f64 = (0..profile.layers().len())
                 .map(|l| planner.estimator().predict_bytes(l, input.size() as f64))
                 .sum();
             println!("{seq:6}  {:10.2} GB     {:2}  {:?}", est / GIB as f64, plan.len(), plan.ids());

@@ -1,0 +1,78 @@
+//! Seq2seq (encoder-decoder) under a tight budget: the stage-graph workload
+//! whose TWO input axes — collated source and target lengths — vary
+//! independently every mini-batch. The decoder's cross-attention blocks all
+//! consume the encoder output (a branch point whose liveness spans the
+//! whole decoder), and the estimator fits per-stage bi-quadratic surfaces
+//! over (src, tgt).
+//!
+//!   cargo run --release --example seq2seq -- --budget-gb 4 --iters 200
+
+use mimose::config::{ExperimentConfig, PlannerKind, Task};
+use mimose::engine::sim::{max_task_profile, SimEngine};
+use mimose::util::cli::Cli;
+use mimose::util::fmt_bytes;
+
+fn main() {
+    let cli = Cli::new("seq2seq", "encoder-decoder training under a memory budget")
+        .opt("budget-gb", "4.0", "memory budget (GiB)")
+        .opt("iters", "200", "iterations")
+        .opt("seed", "42", "input stream seed")
+        .flag("check", "assert the acceptance claim (CI): mimose clean, baseline OOMs")
+        .parse();
+    let budget = cli.get_f64("budget-gb");
+    let iters = cli.get_usize("iters");
+
+    let p = max_task_profile(Task::Seq2seq);
+    println!(
+        "Seq2seq: {} stages ({} branch points, {} joins), fixed {}, batch {}",
+        p.layers().len(),
+        p.graph.branch_points().len(),
+        p.graph.join_points().len(),
+        fmt_bytes(p.fixed_bytes),
+        Task::Seq2seq.batch(),
+    );
+    println!("budget {budget:.1} GB, {iters} iterations, independent src/tgt dynamics\n");
+    println!("planner     epoch(s)  recompute%  peak        cache  ooms");
+
+    let mut mimose_ooms = None;
+    let mut baseline_ooms = None;
+    for kind in [PlannerKind::Baseline, PlannerKind::Sublinear, PlannerKind::Mimose] {
+        let mut cfg = ExperimentConfig::new(Task::Seq2seq, kind, budget);
+        cfg.max_iters = iters;
+        cfg.seed = cli.get_u64("seed");
+        let mut e = match SimEngine::new(cfg) {
+            Ok(e) => e,
+            Err(err) => {
+                println!("{:<10} cannot run: {err}", kind.name());
+                continue;
+            }
+        };
+        let r = e.run_epoch();
+        println!(
+            "{:<10} {:8.1}  {:9.2}%  {:>10}  {:4.0}%  {:4}",
+            kind.name(),
+            r.total_ms() / 1e3,
+            r.recompute_share() * 100.0,
+            fmt_bytes(r.peak_bytes()),
+            r.cache_hit_rate() * 100.0,
+            r.oom_failures(),
+        );
+        match kind {
+            PlannerKind::Baseline => baseline_ooms = Some(r.oom_failures()),
+            PlannerKind::Mimose => mimose_ooms = Some(r.oom_failures()),
+            _ => {}
+        }
+    }
+
+    println!(
+        "\nFinding: the input-aware graph planner completes every iteration under a\n\
+         budget that OOMs the baseline — and, unlike the static planner, only pays\n\
+         recompute on the (src, tgt) cells that actually need it."
+    );
+    // the issue's acceptance claim — opt-in (CI passes --check), so freeform
+    // budget exploration never turns into a panic
+    if cli.get_flag("check") {
+        assert_eq!(mimose_ooms, Some(0), "mimose must complete seq2seq cleanly");
+        assert!(baseline_ooms.unwrap_or(0) > 0, "baseline must OOM at this budget");
+    }
+}

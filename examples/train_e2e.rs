@@ -62,6 +62,7 @@ fn main() -> mimose::util::error::Result<()> {
         vocab: m.vocab,
         hidden: m.hidden,
         layers: m.layers,
+        decoder_layers: 0,
         heads: m.heads,
         ffn: m.ffn,
         max_seq: m.max_seq,
@@ -84,7 +85,7 @@ fn main() -> mimose::util::error::Result<()> {
         // so both AOT buckets occur and plans differ per input
         let seqlen = (lens.power_law(14.0, 64.0, 1.6) as usize).clamp(14, 64);
         let bucket = bucket_for(seqlen, &m.seq_buckets).unwrap();
-        let input = InputDesc { batch: m.batch, seqlen: bucket };
+        let input = InputDesc::new(m.batch, bucket);
         let profile = transformer_profile_with_head(&spec, m.batch, bucket, 1.0, m.vocab);
 
         let (plan, mode_str, planning_ms, sheltered) = if use_planner {
@@ -108,6 +109,7 @@ fn main() -> mimose::util::error::Result<()> {
         if sheltered {
             let obs: Vec<Observation> = (0..r.residual_bytes.len())
                 .map(|l| Observation {
+                    input_size2: 0.0,
                     layer: l,
                     input_size: input.size() as f64,
                     act_bytes: r.residual_bytes[l],

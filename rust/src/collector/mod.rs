@@ -1,25 +1,30 @@
 //! The shuttling online collector (paper §4.2, §5, Fig 7 & 12).
 //!
-//! During *sheltered execution* each block's forward runs twice: pass one
+//! During *sheltered execution* each stage's forward runs twice: pass one
 //! measures (memory, time) with residuals materialised, pass two re-runs the
-//! block dropping everything but its output so the next block can be
+//! stage dropping everything but its output so the next stage can be
 //! measured under a Sublinear-conservative memory envelope. The engines
-//! produce `Observation`s; this module filters them (Fig 12) and feeds the
-//! estimator.
+//! produce per-stage `Observation`s; this module filters them (Fig 12) and
+//! feeds the estimator. Novelty tracking is per [`InputKey`] — both dynamic
+//! axes must be near a collected key for an input to count as seen.
 
 use crate::estimator::{MemoryEstimator, Sample};
+use crate::model::InputKey;
 
-/// Raw per-layer measurement from one sheltered forward.
+/// Raw per-stage measurement from one sheltered forward.
 #[derive(Clone, Copy, Debug)]
 pub struct Observation {
     pub layer: usize,
-    /// Elements in the collated mini-batch input (batch * seqlen).
+    /// Elements in the collated mini-batch input along the primary axis
+    /// (batch * seqlen; batch * src for seq2seq).
     pub input_size: f64,
-    /// Measured activation bytes (state difference across the layer fwd).
+    /// Elements along the secondary axis (batch * tgt); 0 for 1-D tasks.
+    pub input_size2: f64,
+    /// Measured activation bytes (state difference across the stage fwd).
     pub act_bytes: u64,
     /// Measured forward wall time, ms.
     pub fwd_ms: f64,
-    /// Fig 12 flags: was this layer itself under checkpoint (no_grad)?
+    /// Fig 12 flags: was this stage itself under checkpoint (no_grad)?
     pub self_checkpointed: bool,
     /// ... or a parent/child module of it?
     pub relative_checkpointed: bool,
@@ -27,20 +32,20 @@ pub struct Observation {
 
 /// Fig 12 data filter: drop measurements polluted by checkpointing.
 pub fn filter_valid(obs: &Observation) -> bool {
-    // Case 1: layer itself checkpointed -> no activation exists -> invalid.
+    // Case 1: stage itself checkpointed -> no activation exists -> invalid.
     // Case 2: parent or child checkpointed -> partial/duplicated state -> invalid.
     // Case 3: otherwise valid.
     !obs.self_checkpointed && !obs.relative_checkpointed
 }
 
 /// Collector state machine: sheltered for `max_iters` iterations (or when a
-/// novel input size appears, §4.2 O(n/N) note), then frozen.
+/// novel input key appears, §4.2 O(n/N) note), then frozen.
 #[derive(Debug)]
 pub struct Collector {
     max_iters: usize,
     iters_done: usize,
-    /// Distinct input sizes already collected (re-shuttle only novel ones).
-    seen_sizes: Vec<u64>,
+    /// Distinct input keys already collected (re-shuttle only novel ones).
+    seen_keys: Vec<InputKey>,
     /// Accumulated collector wall-clock overhead (the extra forward), ms.
     pub overhead_ms: f64,
     /// Observations dropped by the Fig 12 filter.
@@ -53,7 +58,7 @@ impl Collector {
         Collector {
             max_iters,
             iters_done: 0,
-            seen_sizes: Vec::new(),
+            seen_keys: Vec::new(),
             overhead_ms: 0.0,
             filtered_out: 0,
             frozen: false,
@@ -73,7 +78,7 @@ impl Collector {
     }
 
     /// Re-open a frozen collector for `extra` further sheltered iterations.
-    /// The Coordinator uses this when a novel input size appears after the
+    /// The Coordinator uses this when a novel input key appears after the
     /// warmup window (§4.2: only novel sizes re-trigger shuttling, so the
     /// amortised collection cost is O(n/N)).
     pub fn reopen(&mut self, extra: usize) {
@@ -81,21 +86,25 @@ impl Collector {
         self.max_iters = self.iters_done + extra.max(1);
     }
 
-    /// Has an input size within ±2% of `input_size` already been collected?
-    pub fn seen(&self, input_size: u64) -> bool {
-        self.seen_sizes.iter().any(|&s| near(s, input_size, 0.02))
+    /// Has an input key within ±2% *per axis* of `key` been collected?
+    /// (A single-axis key never matches a two-axis one: the zero secondary
+    /// only tolerates zero.)
+    pub fn seen(&self, key: InputKey) -> bool {
+        self.seen_keys
+            .iter()
+            .any(|&s| near(s.primary, key.primary, 0.02) && near(s.secondary, key.secondary, 0.02))
     }
 
     /// Should this iteration run in sheltered (shuttling) mode?
-    pub fn wants_collection(&self, input_size: u64) -> bool {
+    pub fn wants_collection(&self, key: InputKey) -> bool {
         if self.frozen {
             return false;
         }
         if self.iters_done < self.max_iters {
             return true;
         }
-        // past the warmup window: only shuttle novel input sizes
-        !self.seen(input_size)
+        // past the warmup window: only shuttle novel input keys
+        !self.seen(key)
     }
 
     /// Ingest one sheltered iteration's observations into the estimator.
@@ -103,7 +112,7 @@ impl Collector {
     pub fn ingest(
         &mut self,
         estimator: &mut MemoryEstimator,
-        input_size: u64,
+        key: InputKey,
         observations: &[Observation],
         extra_fwd_ms: f64,
     ) {
@@ -117,13 +126,14 @@ impl Collector {
                 obs.layer,
                 Sample {
                     input_size: obs.input_size,
+                    input_size2: obs.input_size2,
                     act_bytes: obs.act_bytes as f64,
                     fwd_ms: obs.fwd_ms,
                 },
             );
         }
-        if !self.seen(input_size) {
-            self.seen_sizes.push(input_size);
+        if !self.seen(key) {
+            self.seen_keys.push(key);
         }
         self.iters_done += 1;
         self.overhead_ms += extra_fwd_ms;
@@ -145,6 +155,7 @@ mod tests {
         Observation {
             layer,
             input_size: 512.0,
+            input_size2: 0.0,
             act_bytes: 1000,
             fwd_ms: 1.0,
             self_checkpointed: self_c,
@@ -164,11 +175,11 @@ mod tests {
         let mut c = Collector::new(3);
         let mut e = MemoryEstimator::new(1);
         for i in 0..3 {
-            assert!(c.wants_collection(1000 + i));
-            c.ingest(&mut e, 1000 + i, &[obs(0, false, false)], 5.0);
+            assert!(c.wants_collection(InputKey::d1(1000 + i)));
+            c.ingest(&mut e, InputKey::d1(1000 + i), &[obs(0, false, false)], 5.0);
         }
         assert!(c.is_frozen());
-        assert!(!c.wants_collection(5000));
+        assert!(!c.wants_collection(InputKey::d1(5000)));
         assert_eq!(e.sample_count(0), 3);
         assert!((c.overhead_ms - 15.0).abs() < 1e-9);
     }
@@ -179,7 +190,7 @@ mod tests {
         let mut e = MemoryEstimator::new(2);
         c.ingest(
             &mut e,
-            100,
+            InputKey::d1(100),
             &[obs(0, true, false), obs(1, false, false)],
             1.0,
         );
@@ -192,12 +203,12 @@ mod tests {
     fn repeated_size_not_novel() {
         let mut c = Collector::new(100);
         let mut e = MemoryEstimator::new(1);
-        c.ingest(&mut e, 1000, &[obs(0, false, false)], 1.0);
+        c.ingest(&mut e, InputKey::d1(1000), &[obs(0, false, false)], 1.0);
         // inside warmup window everything is collected
-        assert!(c.wants_collection(1000));
+        assert!(c.wants_collection(InputKey::d1(1000)));
         // simulate end of warmup
         for i in 0..99 {
-            c.ingest(&mut e, 2000 + i * 100, &[obs(0, false, false)], 1.0);
+            c.ingest(&mut e, InputKey::d1(2000 + i * 100), &[obs(0, false, false)], 1.0);
         }
         assert!(c.is_frozen());
     }
@@ -206,18 +217,32 @@ mod tests {
     fn reopen_allows_one_more_collection_then_refreezes() {
         let mut c = Collector::new(1);
         let mut e = MemoryEstimator::new(1);
-        c.ingest(&mut e, 1000, &[obs(0, false, false)], 1.0);
+        c.ingest(&mut e, InputKey::d1(1000), &[obs(0, false, false)], 1.0);
         assert!(c.is_frozen());
-        assert!(c.seen(1000));
-        assert!(c.seen(1015), "within 2% counts as seen");
-        assert!(!c.seen(5000));
+        assert!(c.seen(InputKey::d1(1000)));
+        assert!(c.seen(InputKey::d1(1015)), "within 2% counts as seen");
+        assert!(!c.seen(InputKey::d1(5000)));
         c.reopen(1);
         assert!(!c.is_frozen());
-        assert!(c.wants_collection(5000));
-        c.ingest(&mut e, 5000, &[obs(0, false, false)], 1.0);
+        assert!(c.wants_collection(InputKey::d1(5000)));
+        c.ingest(&mut e, InputKey::d1(5000), &[obs(0, false, false)], 1.0);
         assert!(c.is_frozen(), "refreezes after the extra iteration");
-        assert!(c.seen(5000));
+        assert!(c.seen(InputKey::d1(5000)));
         assert_eq!(e.sample_count(0), 2);
+    }
+
+    #[test]
+    fn novelty_is_per_axis() {
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, InputKey::d2(1000, 800), &[obs(0, false, false)], 1.0);
+        assert!(c.seen(InputKey::d2(1000, 800)));
+        assert!(c.seen(InputKey::d2(1010, 792)), "both axes within 2%");
+        // a near-match on src does not excuse a novel tgt — and vice versa
+        assert!(!c.seen(InputKey::d2(1000, 700)));
+        assert!(!c.seen(InputKey::d2(700, 800)));
+        // a 1-D key never matches a 2-D collected key
+        assert!(!c.seen(InputKey::d1(1000)));
     }
 
     #[test]
@@ -225,7 +250,7 @@ mod tests {
     fn ingest_after_freeze_panics() {
         let mut c = Collector::new(1);
         let mut e = MemoryEstimator::new(1);
-        c.ingest(&mut e, 1, &[], 0.0);
-        c.ingest(&mut e, 2, &[], 0.0);
+        c.ingest(&mut e, InputKey::d1(1), &[], 0.0);
+        c.ingest(&mut e, InputKey::d1(2), &[], 0.0);
     }
 }

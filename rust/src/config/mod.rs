@@ -46,12 +46,15 @@ impl PlannerKind {
 }
 
 /// Transformer architecture (mirrors python/compile/configs.py exactly).
+/// `layers` counts encoder blocks; `decoder_layers > 0` makes the model an
+/// encoder-decoder (each decoder block = self-attn + cross-attn + FFN).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelSpec {
     pub name: String,
     pub vocab: usize,
     pub hidden: usize,
     pub layers: usize,
+    pub decoder_layers: usize,
     pub heads: usize,
     pub ffn: usize,
     pub max_seq: usize,
@@ -60,13 +63,13 @@ pub struct ModelSpec {
 impl ModelSpec {
     pub fn bert_base() -> Self {
         ModelSpec { name: "bert-base".into(), vocab: 8192, hidden: 768, layers: 12,
-                    heads: 12, ffn: 3072, max_seq: 512 }
+                    decoder_layers: 0, heads: 12, ffn: 3072, max_seq: 512 }
     }
 
     /// RoBERTa-base: same trunk as BERT-base, larger vocab (125M total).
     pub fn roberta_base() -> Self {
         ModelSpec { name: "roberta-base".into(), vocab: 50265, hidden: 768, layers: 12,
-                    heads: 12, ffn: 3072, max_seq: 512 }
+                    decoder_layers: 0, heads: 12, ffn: 3072, max_seq: 512 }
     }
 
     /// XLNet-base: BERT-base-shaped trunk plus relative-attention extras; we
@@ -74,12 +77,28 @@ impl ModelSpec {
     /// attention residual set (two-stream attention).
     pub fn xlnet_base() -> Self {
         ModelSpec { name: "xlnet-base".into(), vocab: 32000, hidden: 768, layers: 12,
-                    heads: 12, ffn: 3072, max_seq: 512 }
+                    decoder_layers: 0, heads: 12, ffn: 3072, max_seq: 512 }
     }
 
     pub fn bert_tiny() -> Self {
         ModelSpec { name: "bert-tiny".into(), vocab: 512, hidden: 64, layers: 2,
-                    heads: 4, ffn: 128, max_seq: 64 }
+                    decoder_layers: 0, heads: 4, ffn: 128, max_seq: 64 }
+    }
+
+    /// Transformer-base-shaped encoder-decoder (6+6, hidden 512) with the
+    /// reproduction-scale vocab the BERT spec uses — the `Task::Seq2seq`
+    /// workload whose source/target lengths vary independently.
+    pub fn s2s_base() -> Self {
+        ModelSpec { name: "s2s-transformer".into(), vocab: 8192, hidden: 512, layers: 6,
+                    decoder_layers: 6, heads: 8, ffn: 2048, max_seq: 512 }
+    }
+
+    /// Swin-T stand-in spec: only the signature-relevant fields matter (the
+    /// real shape lives in `model::vision::SwinSpec`); `max_seq` caps the
+    /// augmentation resolution.
+    pub fn swin_tiny() -> Self {
+        ModelSpec { name: "swin-t".into(), vocab: 1000, hidden: 96, layers: 12,
+                    decoder_layers: 0, heads: 3, ffn: 384, max_seq: 288 }
     }
 
     pub fn head_dim(&self) -> usize {
@@ -90,9 +109,12 @@ impl ModelSpec {
         let h = self.hidden as u64;
         let f = self.ffn as u64;
         let block = 4 * (h * h + h) + h * f + f + f * h + h + 4 * h;
+        // decoder block: an encoder block plus a cross-attention sublayer
+        // (4 more projections) and its layernorm
+        let dec_block = block + 4 * (h * h + h) + 2 * h;
         let embed = (self.vocab as u64) * h + (self.max_seq as u64) * h + 2 * h;
         let head = h * self.vocab as u64 + self.vocab as u64;
-        embed + self.layers as u64 * block + head
+        embed + self.layers as u64 * block + self.decoder_layers as u64 * dec_block + head
     }
 
     /// Bytes held for the whole run: fp32 params + grads + Adam m/v.
@@ -101,7 +123,10 @@ impl ModelSpec {
     }
 }
 
-/// A training task: dataset distribution + model + batch size (paper Table 1).
+/// A training task: dataset distribution + model + batch size. The first
+/// four are the paper's Table 1 set; `Seq2seq` (encoder-decoder, two
+/// independently dynamic input axes) and `Swin` (resolution-augmented
+/// vision) are the graph-era extension workloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Task {
     /// Multiple choice, SWAG, RoBERTa-base, batch 16.
@@ -112,11 +137,30 @@ pub enum Task {
     QaBert,
     /// Text classification, GLUE-QQP, BERT-base, batch 32.
     TcBert,
+    /// Translation-style encoder-decoder: collated source AND target
+    /// lengths vary independently (a 2-D `InputKey`), batch 24.
+    Seq2seq,
+    /// Swin-T classification under random-resize augmentation, batch 32.
+    Swin,
 }
 
 impl Task {
+    /// The paper's Table 1 comparison set (the figure/bench sweeps iterate
+    /// this; the extension workloads live in [`Task::extended`]).
     pub fn all() -> [Task; 4] {
         [Task::McRoberta, Task::QaXlnet, Task::QaBert, Task::TcBert]
+    }
+
+    /// Every runnable task, extensions included.
+    pub fn extended() -> [Task; 6] {
+        [
+            Task::McRoberta,
+            Task::QaXlnet,
+            Task::QaBert,
+            Task::TcBert,
+            Task::Seq2seq,
+            Task::Swin,
+        ]
     }
 
     pub fn parse(s: &str) -> Option<Task> {
@@ -125,6 +169,8 @@ impl Task {
             "qa-xlnet" => Some(Task::QaXlnet),
             "qa-bert" | "squad" => Some(Task::QaBert),
             "tc-bert" | "qqp" | "glue-qqp" => Some(Task::TcBert),
+            "seq2seq" | "s2s" | "nmt" => Some(Task::Seq2seq),
+            "swin" | "swin-t" | "vision" => Some(Task::Swin),
             _ => None,
         }
     }
@@ -135,6 +181,8 @@ impl Task {
             Task::QaXlnet => "QA-XLNet",
             Task::QaBert => "QA-Bert",
             Task::TcBert => "TC-Bert",
+            Task::Seq2seq => "Seq2seq",
+            Task::Swin => "Swin-T",
         }
     }
 
@@ -144,6 +192,8 @@ impl Task {
             Task::QaXlnet => 16,
             Task::QaBert => 12,
             Task::TcBert => 32,
+            Task::Seq2seq => 24,
+            Task::Swin => 32,
         }
     }
 
@@ -152,6 +202,8 @@ impl Task {
             Task::McRoberta => ModelSpec::roberta_base(),
             Task::QaXlnet => ModelSpec::xlnet_base(),
             Task::QaBert | Task::TcBert => ModelSpec::bert_base(),
+            Task::Seq2seq => ModelSpec::s2s_base(),
+            Task::Swin => ModelSpec::swin_tiny(),
         }
     }
 
@@ -164,23 +216,45 @@ impl Task {
         }
     }
 
-    /// (min, max) collated seqlen range observed in Fig 3.
+    /// (min, max) collated primary-axis range: Fig 3 seqlens for the
+    /// Table 1 tasks, collated source lengths for seq2seq, augmentation
+    /// resolutions for vision.
     pub fn seq_range(&self) -> (usize, usize) {
         match self {
             Task::McRoberta => (35, 141),
             Task::QaXlnet | Task::QaBert => (153, 512),
             Task::TcBert => (30, 332),
+            Task::Seq2seq => (120, 400),
+            Task::Swin => (192, 288),
         }
     }
 
+    /// (min, max) collated secondary-axis range (seq2seq target lengths);
+    /// `None` for single-axis tasks.
+    pub fn seq2_range(&self) -> Option<(usize, usize)> {
+        match self {
+            Task::Seq2seq => Some((100, 400)),
+            _ => None,
+        }
+    }
+
+    /// Worst-case collated input shape (primary, secondary) — what static
+    /// planners and the fleet's floor validation size for.
+    pub fn max_shape(&self) -> (usize, usize) {
+        (self.seq_range().1, self.seq2_range().map_or(0, |r| r.1))
+    }
+
     /// Iterations per epoch (dataset size / batch, order-of-magnitude of the
-    /// real datasets: SWAG 73k/16, SQuAD 88k/16|12, QQP 364k/32).
+    /// real datasets: SWAG 73k/16, SQuAD 88k/16|12, QQP 364k/32; WMT and
+    /// ImageNet subsets for the extension workloads).
     pub fn iters_per_epoch(&self) -> usize {
         match self {
             Task::McRoberta => 4600,
             Task::QaXlnet => 5500,
             Task::QaBert => 7300,
             Task::TcBert => 11400,
+            Task::Seq2seq => 5200,
+            Task::Swin => 8000,
         }
     }
 }
@@ -603,6 +677,37 @@ mod tests {
             assert_eq!(PlannerKind::parse(k.name()), Some(k));
         }
         assert_eq!(PlannerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn extension_tasks_parse_and_shape() {
+        assert_eq!(Task::parse("seq2seq"), Some(Task::Seq2seq));
+        assert_eq!(Task::parse("s2s"), Some(Task::Seq2seq));
+        assert_eq!(Task::parse("swin"), Some(Task::Swin));
+        assert_eq!(Task::Seq2seq.batch(), 24);
+        assert_eq!(Task::Seq2seq.model().decoder_layers, 6);
+        assert_eq!(Task::Seq2seq.seq2_range(), Some((100, 400)));
+        assert_eq!(Task::Seq2seq.max_shape(), (400, 400));
+        assert_eq!(Task::TcBert.max_shape(), (332, 0));
+        assert_eq!(Task::Swin.seq2_range(), None);
+        // Table 1 sweeps stay pinned to the paper's four tasks
+        assert_eq!(Task::all().len(), 4);
+        assert!(!Task::all().contains(&Task::Seq2seq));
+        assert_eq!(Task::extended().len(), 6);
+        assert!(Task::extended().contains(&Task::Swin));
+    }
+
+    #[test]
+    fn s2s_fixed_state_is_sub_gigabyte() {
+        // the seq2seq acceptance scenario plans under a ~4.5 GB budget:
+        // fixed state must leave room for activations
+        let m = ModelSpec::s2s_base();
+        let fixed_gb = m.fixed_state_bytes() as f64 / GIB as f64;
+        assert!((0.5..1.1).contains(&fixed_gb), "fixed {fixed_gb} GB");
+        // decoder params included: more than an encoder-only twin
+        let mut enc_only = m.clone();
+        enc_only.decoder_layers = 0;
+        assert!(m.param_count() > enc_only.param_count());
     }
 
     #[test]

@@ -5,24 +5,28 @@
 //! running inside a live training job (§4.1): sheltered collection feeds the
 //! estimator, a freeze point trains it, and responsive execution serves
 //! plans from a cache keyed by input size. This module owns that composition
-//! so engines and planners stop hand-wiring the stages.
+//! so engines and planners stop hand-wiring the stages. Planning is
+//! graph-aware: every plan comes from `scheduler::schedule_graph` over the
+//! profile's `StageGraph` (bit-identical to the chain path on chain-shaped
+//! models), and input dynamics are tracked per [`InputKey`] — one axis for
+//! the classic tasks, two for seq2seq.
 //!
 //! # Phases
 //!
 //! * [`Phase::Sheltered`] — shuttling double-forward measurement (§4.2,
 //!   Fig 7). The iteration runs under the conservative everything-
-//!   checkpointed plan while the [`Collector`] records per-layer
-//!   `(input size, activation bytes, forward ms)` observations, filtered
+//!   checkpointed plan while the [`Collector`] records per-stage
+//!   `(input key, activation bytes, forward ms)` observations, filtered
 //!   per Fig 12 before reaching the [`MemoryEstimator`].
 //! * [`Phase::Frozen`] — the estimator is (re)trained and Algorithm 1
-//!   (§4.4) generates a plan for an input size the [`PlanCache`] has not
-//!   seen; the plan is inserted under the quantised size key. An iteration
-//!   is tagged `Frozen` exactly when it paid a replan.
+//!   (§4.4) generates a plan for an input key the [`PlanCache`] has not
+//!   seen; the plan is inserted under the per-axis-quantised key. An
+//!   iteration is tagged `Frozen` exactly when it paid a replan.
 //! * [`Phase::Executing`] — responsive execution (§5): the quantised input
-//!   size hits the plan cache and the cached plan is applied with ~µs
+//!   key hits the plan cache and the cached plan is applied with ~µs
 //!   lookup cost.
 //!
-//! A novel input size appearing after the warmup window can re-trigger
+//! A novel input key appearing after the warmup window can re-trigger
 //! sheltered collection (§4.2's O(n/N) amortisation note) when
 //! [`CoordinatorConfig::reshelter_on_novel`] is set; the collector is
 //! re-opened for one iteration and the estimator retrained with the new
@@ -35,11 +39,11 @@
 use crate::collector::{Collector, Observation};
 use crate::config::{CoordinatorConfig, MimoseConfig};
 use crate::estimator::MemoryEstimator;
-use crate::model::ModelProfile;
+use crate::model::{InputKey, ModelProfile};
 use crate::planners::{
     checkpointable, usable_activation_budget, InputDesc, IterationMode, PlanDecision,
 };
-use crate::scheduler::{greedy_schedule, LayerEst, Plan, PlanCache, SharedCacheHandle};
+use crate::scheduler::{schedule_graph, Plan, PlanCache, SharedCacheHandle, SizeKey};
 use crate::util::stats::Summary;
 use crate::util::timer::Timer;
 
@@ -83,7 +87,7 @@ pub struct Transition {
     pub iter: u64,
     pub from: Phase,
     pub to: Phase,
-    /// Input size (batch * seqlen) of the triggering iteration.
+    /// Primary input size (batch * seqlen) of the triggering iteration.
     pub input_size: u64,
 }
 
@@ -123,21 +127,31 @@ pub fn quantize_up(size: u64, tol: f64) -> u64 {
     (cell * step).exp().ceil() as u64
 }
 
-/// Synthesise per-layer collector observations from an analytic profile —
+/// Quantise each axis of an input key independently: a seq2seq input lands
+/// in a (src-cell, tgt-cell) pair, so near-equal source lengths never share
+/// a plan across very different target lengths. The secondary axis of a
+/// 1-D key stays 0, making the classic cache keys a special case.
+pub fn quantize_key(key: InputKey, tol: f64) -> SizeKey {
+    (quantize_up(key.primary, tol), quantize_up(key.secondary, tol))
+}
+
+/// Synthesise per-stage collector observations from an analytic profile —
 /// what a sheltered forward would measure on an engine whose ground truth
-/// *is* the profile. `fwd_ms_of` maps layer forward FLOPs to wall ms
+/// *is* the profile. `fwd_ms_of` maps stage forward FLOPs to wall ms
 /// (engines pass their cost model; offline planning passes a FLOPs proxy).
 pub fn observations_from_profile<F: Fn(u64) -> f64>(
     profile: &ModelProfile,
     input: &InputDesc,
     fwd_ms_of: F,
 ) -> Vec<Observation> {
+    let key = input.key();
     profile
-        .layers
+        .layers()
         .iter()
         .map(|l| Observation {
             layer: l.id,
-            input_size: input.size() as f64,
+            input_size: key.primary as f64,
+            input_size2: key.secondary as f64,
             act_bytes: l.act_bytes,
             fwd_ms: fwd_ms_of(l.fwd_flops),
             // pass one of the shuttling double-forward measures *before*
@@ -170,15 +184,15 @@ pub struct Coordinator {
     pub plan_ms_total: f64,
     /// Number of plans generated (cache misses that ran Algorithm 1).
     pub plans_generated: u64,
-    /// Times a novel input size re-opened sheltered collection (§4.2).
+    /// Times a novel input key re-opened sheltered collection (§4.2).
     pub reshelters: u64,
     estimator_ready: bool,
     /// Fleet wiring: cross-job plan cache + this job's model signature.
     shared: Option<(SharedCacheHandle, u64)>,
-    /// (plan size, budget) keys this job contributed to the shared cache —
+    /// (plan key, budget) entries this job contributed to the shared cache —
     /// purged from it when a reshelter invalidates the estimator they were
     /// built from.
-    shared_inserted: Vec<(u64, u64)>,
+    shared_inserted: Vec<(SizeKey, u64)>,
     /// Plans reused from the shared cache (cross-job hits).
     pub shared_hits: u64,
     /// Mid-run budget rebinds that invalidated the plan cache.
@@ -293,10 +307,10 @@ impl Coordinator {
     }
 
     /// Conservative plan for sheltered execution: checkpoint every
-    /// checkpointable layer (the Sublinear-style envelope of §4.2 — memory
+    /// checkpointable stage (the Sublinear-style envelope of §4.2 — memory
     /// footprint equals the static planner's while we measure).
     pub fn conservative_plan(profile: &ModelProfile) -> Plan {
-        Plan::of(checkpointable(profile).into_iter().map(|l| l.id))
+        Plan::of(checkpointable(profile).into_iter().map(|c| c.id()))
     }
 
     /// Peak bytes an iteration needs under the conservative everything-
@@ -310,7 +324,7 @@ impl Coordinator {
     }
 
     /// Estimator-predicted *unconstrained* peak demand for `input`: fixed
-    /// state + every layer's predicted activation bytes (no checkpointing)
+    /// state + every stage's predicted activation bytes (no checkpointing)
     /// + the fragmentation reserve. `None` until the estimator has been
     /// trained (the job is still in sheltered collection) — the broker then
     /// falls back to the conservative reservation. This is the per-job
@@ -319,49 +333,52 @@ impl Coordinator {
         if !self.estimator.is_trained() {
             return None;
         }
-        let size = input.size() as f64;
+        let feat = input.key().feature();
         let acts: f64 = checkpointable(profile)
             .iter()
-            .map(|l| self.estimator.predict_bytes(l.id, size).max(0.0))
+            .map(|c| self.estimator.predict_bytes_key(c.id(), feat).max(0.0))
             .sum();
         // transient working sets (e.g. head logits) aren't estimator-learned
         // but do raise the no-checkpoint peak — take them from the profile
-        let transient = profile.layers.iter().map(|l| l.transient_bytes).max().unwrap_or(0);
+        let transient = profile.layers().iter().map(|l| l.transient_bytes).max().unwrap_or(0);
         Some(profile.fixed_bytes + self.cfg.reserve_bytes + transient + acts as u64)
     }
 
-    /// Algorithm 1 over *estimated* per-layer bytes.
-    fn generate_plan(&mut self, input_size: u64, profile: &ModelProfile) -> Plan {
-        let layers: Vec<LayerEst> = checkpointable(profile)
-            .into_iter()
-            .map(|mut l| {
-                l.est_bytes = self.estimator.predict_bytes(l.id, input_size as f64) as u64;
-                l
-            })
+    /// Algorithm 1 over *estimated* per-stage bytes — graph-aware: branch
+    /// liveness and FLOPs tie-breaking come from `schedule_graph`, which on
+    /// chain models is bit-identical to the classic greedy path.
+    fn generate_plan(&mut self, plan_key: SizeKey, profile: &ModelProfile) -> Plan {
+        let feat = (plan_key.0 as f64, plan_key.1 as f64);
+        let est: Vec<u64> = profile
+            .layers()
+            .iter()
+            .map(|s| self.estimator.predict_bytes_key(s.id, feat) as u64)
             .collect();
-        let est_total: u64 = layers.iter().map(|l| l.est_bytes).sum();
+        let est_total: u64 = checkpointable(profile).iter().map(|c| est[c.id()]).sum();
         let usable = usable_activation_budget(self.budget, profile, self.cfg.reserve_bytes);
         let excess = est_total.saturating_sub(usable);
-        greedy_schedule(&layers, excess, self.cfg.bucket_tolerance)
+        schedule_graph(&profile.graph, &est, excess, self.cfg.bucket_tolerance)
     }
 
     /// Decide how to run one iteration — the state-machine step.
     pub fn begin_iteration(&mut self, input: &InputDesc, profile: &ModelProfile) -> PlanDecision {
         self.iter += 1;
-        let size = input.size();
-        // Quantise the planning size UP to the cache grid so that a cached
-        // plan is always conservative for every input mapped to it (a plan
-        // generated for a slightly smaller input could under-checkpoint).
-        let plan_size = quantize_up(size, self.cfg.cache_tolerance);
+        let key = input.key();
+        let size = key.primary;
+        // Quantise the planning key UP (per axis) to the cache grid so that
+        // a cached plan is always conservative for every input mapped to it
+        // (a plan generated for a slightly smaller input could
+        // under-checkpoint).
+        let plan_key = quantize_key(key, self.cfg.cache_tolerance);
 
         // ---- sheltered execution (§4.2) ----
-        let mut shelter = self.collector.wants_collection(size);
+        let mut shelter = self.collector.wants_collection(key);
         if !shelter
             && self.ccfg.reshelter_on_novel
             && self.collector.is_frozen()
-            && !self.collector.seen(size)
+            && !self.collector.seen(key)
         {
-            // novel input size after the warmup window: re-open collection
+            // novel input key after the warmup window: re-open collection
             // for one iteration and retrain the estimator at the next freeze.
             // Cached plans were built from the stale estimator — drop them so
             // every size replans against the retrained fits (regeneration is
@@ -374,8 +391,8 @@ impl Coordinator {
             // (including this one, post-refreeze) resurrects them
             if let Some((shared, sig)) = &self.shared {
                 let mut cache = shared.borrow_mut();
-                for &(size, budget) in &self.shared_inserted {
-                    cache.remove(*sig, size, budget);
+                for &(key, budget) in &self.shared_inserted {
+                    cache.remove(*sig, key, budget);
                 }
             }
             self.shared_inserted.clear();
@@ -398,7 +415,7 @@ impl Coordinator {
             self.train_ms += self.estimator.train();
             self.estimator_ready = true;
         }
-        if let Some(plan) = self.cache.lookup_exact(plan_size) {
+        if let Some(plan) = self.cache.lookup_exact(plan_key) {
             let planning_ms = t.elapsed_ms();
             self.plan_ms_total += planning_ms;
             self.set_phase(Phase::Executing, size);
@@ -410,12 +427,12 @@ impl Coordinator {
             };
         }
         // cross-job reuse (fleet): a same-signature tenant may have planned
-        // this size already under an equal-or-tighter budget — safe to apply
+        // this key already under an equal-or-tighter budget — safe to apply
         // here (it checkpoints at least as much as we would).
         if let Some((shared, sig)) = &self.shared {
-            let reused = shared.borrow_mut().lookup(*sig, plan_size, self.budget);
+            let reused = shared.borrow_mut().lookup(*sig, plan_key, self.budget);
             if let Some(plan) = reused {
-                self.cache.insert(plan_size, plan.clone());
+                self.cache.insert(plan_key, plan.clone());
                 self.shared_hits += 1;
                 let planning_ms = t.elapsed_ms();
                 self.plan_ms_total += planning_ms;
@@ -428,11 +445,11 @@ impl Coordinator {
                 };
             }
         }
-        let plan = self.generate_plan(plan_size, profile);
-        self.cache.insert(plan_size, plan.clone());
+        let plan = self.generate_plan(plan_key, profile);
+        self.cache.insert(plan_key, plan.clone());
         if let Some((shared, sig)) = &self.shared {
-            shared.borrow_mut().insert(*sig, plan_size, self.budget, plan.clone());
-            self.shared_inserted.push((plan_size, self.budget));
+            shared.borrow_mut().insert(*sig, plan_key, self.budget, plan.clone());
+            self.shared_inserted.push((plan_key, self.budget));
         }
         self.plans_generated += 1;
         let planning_ms = t.elapsed_ms();
@@ -450,7 +467,7 @@ impl Coordinator {
     /// Feed back one iteration's sheltered observations (no-op once frozen).
     pub fn end_iteration(&mut self, input: &InputDesc, obs: &[Observation], extra_fwd_ms: f64) {
         if !self.collector.is_frozen() && !obs.is_empty() {
-            self.collector.ingest(&mut self.estimator, input.size(), obs, extra_fwd_ms);
+            self.collector.ingest(&mut self.estimator, input.key(), obs, extra_fwd_ms);
         }
     }
 }
@@ -459,7 +476,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::config::ModelSpec;
-    use crate::model::transformer_profile;
+    use crate::model::{seq2seq_profile, transformer_profile};
     use crate::util::GIB;
 
     fn spec() -> ModelSpec {
@@ -478,7 +495,7 @@ mod tests {
     /// Run one sheltered iteration at the given seqlen.
     fn shelter_once(c: &mut Coordinator, seq: usize) {
         let profile = transformer_profile(&spec(), 32, seq, 1.0);
-        let input = InputDesc { batch: 32, seqlen: seq };
+        let input = InputDesc::new(32, seq);
         let dec = c.begin_iteration(&input, &profile);
         assert!(matches!(dec.mode, IterationMode::Sheltered(_)), "seq {seq} not sheltered");
         let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
@@ -499,7 +516,7 @@ mod tests {
         assert_eq!(c.phase(), Phase::Sheltered);
         warmup(&mut c);
         let profile = transformer_profile(&spec(), 32, 200, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 200 };
+        let input = InputDesc::new(32, 200);
         let d = c.begin_iteration(&input, &profile);
         assert_eq!(d.phase, Phase::Frozen);
         assert!(!d.cache_hit);
@@ -518,11 +535,11 @@ mod tests {
         warmup(&mut c);
         // known size: responsive
         let profile = transformer_profile(&spec(), 32, 300, 1.0);
-        let d = c.begin_iteration(&InputDesc { batch: 32, seqlen: 300 }, &profile);
+        let d = c.begin_iteration(&InputDesc::new(32, 300), &profile);
         assert!(matches!(d.mode, IterationMode::Planned(_)));
         // novel size (far from every collected size): re-shelters once
         let profile = transformer_profile(&spec(), 32, 512, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 512 };
+        let input = InputDesc::new(32, 512);
         let d = c.begin_iteration(&input, &profile);
         assert_eq!(d.phase, Phase::Sheltered);
         let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
@@ -539,7 +556,7 @@ mod tests {
         let mut c = coord(false);
         warmup(&mut c);
         let profile = transformer_profile(&spec(), 32, 512, 1.0);
-        let d = c.begin_iteration(&InputDesc { batch: 32, seqlen: 512 }, &profile);
+        let d = c.begin_iteration(&InputDesc::new(32, 512), &profile);
         assert!(matches!(d.mode, IterationMode::Planned(_)));
         assert_eq!(c.reshelters, 0);
     }
@@ -549,7 +566,7 @@ mod tests {
         let mut c = coord(false);
         warmup(&mut c);
         let profile = transformer_profile(&spec(), 32, 250, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 250 };
+        let input = InputDesc::new(32, 250);
         let _ = c.begin_iteration(&input, &profile); // miss -> replan
         let _ = c.begin_iteration(&input, &profile); // hit
         let s = c.stats();
@@ -579,11 +596,24 @@ mod tests {
     }
 
     #[test]
+    fn quantize_key_quantizes_each_axis() {
+        let k = quantize_key(InputKey::d2(9600, 4800), 0.05);
+        assert_eq!(k.0, quantize_up(9600, 0.05));
+        assert_eq!(k.1, quantize_up(4800, 0.05));
+        let k1 = quantize_key(InputKey::d1(9600), 0.05);
+        assert_eq!(k1.1, 0, "1-D keys keep a zero secondary cell");
+        // different tgt cells never collapse into one plan key
+        let a = quantize_key(InputKey::d2(9600, 2000), 0.05);
+        let b = quantize_key(InputKey::d2(9600, 4000), 0.05);
+        assert_ne!(a, b);
+    }
+
+    #[test]
     fn set_budget_invalidates_cached_plans() {
         let mut c = coord(false);
         warmup(&mut c);
         let profile = transformer_profile(&spec(), 32, 300, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 300 };
+        let input = InputDesc::new(32, 300);
         let _ = c.begin_iteration(&input, &profile); // miss -> plan @ 6 GB
         let d = c.begin_iteration(&input, &profile);
         assert!(d.cache_hit, "warm cache under the original budget");
@@ -619,7 +649,7 @@ mod tests {
         let mut c = coord(false);
         warmup(&mut c);
         let profile = transformer_profile(&spec(), 32, 250, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 250 };
+        let input = InputDesc::new(32, 250);
         let _ = c.begin_iteration(&input, &profile);
         c.set_budget(c.budget());
         assert_eq!(c.budget_changes, 0);
@@ -640,7 +670,7 @@ mod tests {
         warmup(&mut b);
 
         let profile = transformer_profile(&spec(), 32, 300, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 300 };
+        let input = InputDesc::new(32, 300);
         let da = a.begin_iteration(&input, &profile);
         assert!(!da.cache_hit, "first tenant pays the replan");
         assert_eq!(a.plans_generated, 1);
@@ -676,7 +706,7 @@ mod tests {
         warmup(&mut a);
         warmup(&mut b);
         let profile = transformer_profile(&spec(), 32, 300, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 300 };
+        let input = InputDesc::new(32, 300);
         let _ = a.begin_iteration(&input, &profile);
         let db = b.begin_iteration(&input, &profile);
         assert!(!db.cache_hit, "6 GB plan unsafe under 5 GB");
@@ -688,7 +718,7 @@ mod tests {
         c.set_shared_cache(shared.clone(), sig);
         warmup(&mut c);
         let profile2 = transformer_profile(&spec(), 32, 310, 1.0);
-        let input2 = InputDesc { batch: 32, seqlen: 310 };
+        let input2 = InputDesc::new(32, 310);
         let _ = b.begin_iteration(&input2, &profile2); // B plans 310 @ 5 GB
         let dc = c.begin_iteration(&input2, &profile2); // C @ 6 GB reuses it
         assert!(dc.cache_hit);
@@ -704,14 +734,14 @@ mod tests {
         c.set_shared_cache(shared.clone(), sig);
         warmup(&mut c);
         let profile = transformer_profile(&spec(), 32, 300, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 300 };
+        let input = InputDesc::new(32, 300);
         let _ = c.begin_iteration(&input, &profile); // plan -> shared insert
         assert_eq!(shared.borrow().len(), 1);
 
         // a novel size triggers a reshelter: the entries this job pushed
         // were built from the estimator about to be retrained — gone
         let p2 = transformer_profile(&spec(), 32, 512, 1.0);
-        let i2 = InputDesc { batch: 32, seqlen: 512 };
+        let i2 = InputDesc::new(32, 512);
         let d = c.begin_iteration(&i2, &p2);
         assert_eq!(d.phase, Phase::Sheltered);
         assert_eq!(shared.borrow().len(), 0, "stale shared entries purged");
@@ -736,11 +766,79 @@ mod tests {
         );
         warmup(&mut c);
         let profile = transformer_profile(&spec(), 32, 200, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 200 };
+        let input = InputDesc::new(32, 200);
         let _ = c.begin_iteration(&input, &profile);
         let _ = c.begin_iteration(&input, &profile);
         assert_eq!(c.transitions().len(), 1, "log must respect the cap");
         assert_eq!(c.stats().transitions, 2, "total still counts dropped entries");
         assert_eq!(c.phase(), Phase::Executing, "phase still advances");
+    }
+
+    // ---- two-axis (seq2seq) coordination ----
+
+    fn s2s_coord() -> (Coordinator, ModelSpec) {
+        let m = ModelSpec::s2s_base();
+        let n = seq2seq_profile(&m, 24, 64, 64).layers().len();
+        (
+            Coordinator::new(4 * GIB, n, MimoseConfig::default(), CoordinatorConfig::default()),
+            m,
+        )
+    }
+
+    fn s2s_shelter(c: &mut Coordinator, m: &ModelSpec, src: usize, tgt: usize) {
+        let profile = seq2seq_profile(m, 24, src, tgt);
+        let input = InputDesc::seq2seq(24, src, tgt);
+        let dec = c.begin_iteration(&input, &profile);
+        assert!(matches!(dec.mode, IterationMode::Sheltered(_)));
+        let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
+        c.end_iteration(&input, &obs, 1.0);
+    }
+
+    #[test]
+    fn seq2seq_plans_scale_with_either_axis() {
+        let (mut c, m) = s2s_coord();
+        // warm up across independently varying src/tgt pairs
+        for (src, tgt) in [
+            (80, 70), (120, 90), (160, 200), (200, 120), (240, 260),
+            (280, 150), (320, 300), (150, 340), (360, 180), (260, 380),
+        ] {
+            s2s_shelter(&mut c, &m, src, tgt);
+        }
+        assert!(c.collector().is_frozen());
+        let plan_of = |c: &mut Coordinator, src: usize, tgt: usize| {
+            let profile = seq2seq_profile(&m, 24, src, tgt);
+            match c.begin_iteration(&InputDesc::seq2seq(24, src, tgt), &profile).mode {
+                IterationMode::Planned(p) => p,
+                _ => panic!("expected planned"),
+            }
+        };
+        let small = plan_of(&mut c, 90, 80);
+        let big_src = plan_of(&mut c, 340, 80);
+        let big_tgt = plan_of(&mut c, 90, 340);
+        assert!(big_src.len() >= small.len(), "longer sources need more checkpointing");
+        assert!(big_tgt.len() >= small.len(), "longer targets need more checkpointing");
+        assert!(big_src.len() + big_tgt.len() > 2 * small.len(), "axes must matter");
+    }
+
+    #[test]
+    fn seq2seq_same_src_different_tgt_use_distinct_cache_cells() {
+        let (mut c, m) = s2s_coord();
+        for (src, tgt) in [
+            (80, 70), (120, 90), (160, 200), (200, 120), (240, 260),
+            (280, 150), (320, 300), (150, 340), (360, 180), (260, 380),
+        ] {
+            s2s_shelter(&mut c, &m, src, tgt);
+        }
+        let profile_a = seq2seq_profile(&m, 24, 200, 100);
+        let d = c.begin_iteration(&InputDesc::seq2seq(24, 200, 100), &profile_a);
+        assert!(!d.cache_hit);
+        // same source length, very different target: must NOT hit the cache
+        let profile_b = seq2seq_profile(&m, 24, 200, 360);
+        let d = c.begin_iteration(&InputDesc::seq2seq(24, 200, 360), &profile_b);
+        assert!(!d.cache_hit, "tgt axis must partition the plan cache");
+        assert_eq!(c.plans_generated, 2);
+        // repeating either key hits
+        let d = c.begin_iteration(&InputDesc::seq2seq(24, 200, 100), &profile_a);
+        assert!(d.cache_hit);
     }
 }

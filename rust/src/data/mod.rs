@@ -1,11 +1,14 @@
-//! Input pipeline: dataset seqlen dynamics + synthetic corpus.
+//! Input pipeline: dataset input dynamics + synthetic corpus.
 //!
 //! The paper's input dynamics (Fig 3) come from dataset diversity plus
 //! augmentation: per-sample token lengths vary; a mini-batch pads to its
 //! longest sample, so the *collated* seqlen is the max over the batch. We
 //! model the three NLP datasets with distribution-faithful samplers
-//! (ranges/shapes from Fig 3) and generate a synthetic corpus for the real
-//! PJRT training path.
+//! (ranges/shapes from Fig 3), plus the graph-era extension workloads:
+//! seq2seq draws two *independent* collated lengths per mini-batch (source
+//! and target pad separately), and vision draws ONE resolution for the
+//! whole batch (random-resize augmentation). A synthetic corpus feeds the
+//! real PJRT training path.
 
 pub mod corpus;
 pub mod tokenizer;
@@ -19,10 +22,13 @@ use crate::util::rng::Rng;
 /// Per-sample token-length distribution of a dataset.
 #[derive(Clone, Copy, Debug)]
 pub enum LengthDist {
-    /// Normal(mean, std), clamped to [lo, hi] — SWAG, SQuAD.
+    /// Normal(mean, std), clamped to [lo, hi] — SWAG, SQuAD, WMT.
     Normal { mean: f64, std: f64, lo: usize, hi: usize },
     /// Bounded power-law (many short questions, few long) — GLUE-QQP.
     PowerLaw { alpha: f64, lo: usize, hi: usize },
+    /// Uniform over [lo, hi] rounded to a multiple of `step` — resize
+    /// augmentation (Detectron-style multi-scale resolutions).
+    UniformStep { lo: usize, hi: usize, step: usize },
 }
 
 impl LengthDist {
@@ -34,10 +40,14 @@ impl LengthDist {
             LengthDist::PowerLaw { alpha, lo, hi } => {
                 rng.power_law(lo as f64, hi as f64, alpha).round() as usize
             }
+            LengthDist::UniformStep { lo, hi, step } => {
+                let raw = rng.range_u(lo, hi);
+                (raw / step.max(1)).max(1) * step.max(1)
+            }
         }
     }
 
-    /// Table 1 / Fig 3 dataset parameters.
+    /// Table 1 / Fig 3 dataset parameters (primary axis).
     pub fn for_task(task: Task) -> LengthDist {
         match task {
             // SWAG: short commonsense sentences, collated range 35-141
@@ -48,6 +58,22 @@ impl LengthDist {
             }
             // QQP: question pairs, power-law, collated range 30-332
             Task::TcBert => LengthDist::PowerLaw { alpha: 2.2, lo: 25, hi: 332 },
+            // WMT-style source sentences, collated range ~120-400
+            Task::Seq2seq => LengthDist::Normal { mean: 140.0, std: 45.0, lo: 60, hi: 400 },
+            // multi-scale resize augmentation: 192..288 px in steps of 16
+            Task::Swin => LengthDist::UniformStep { lo: 192, hi: 288, step: 16 },
+        }
+    }
+
+    /// Secondary-axis distribution (seq2seq target lengths); `None` for
+    /// single-axis tasks. Sampled independently of the source lengths —
+    /// exactly the 2-D input dynamics the estimator's `InputKey` carries.
+    pub fn secondary_for_task(task: Task) -> Option<LengthDist> {
+        match task {
+            Task::Seq2seq => {
+                Some(LengthDist::Normal { mean: 115.0, std: 40.0, lo: 50, hi: 400 })
+            }
+            _ => None,
         }
     }
 }
@@ -62,11 +88,16 @@ pub fn collate_seqlen(dist: &LengthDist, batch: usize, max_seq: usize, rng: &mut
         .min(max_seq)
 }
 
-/// An epoch's worth of collated input descriptors for a task.
+/// An epoch's worth of collated input shapes for a task.
 pub struct InputStream {
     dist: LengthDist,
+    /// Secondary-axis distribution (seq2seq target side).
+    dist2: Option<LengthDist>,
     batch: usize,
     max_seq: usize,
+    /// One draw covers the whole mini-batch (vision: every image in the
+    /// batch is resized to the same resolution — no collate max).
+    whole_batch: bool,
     rng: Rng,
 }
 
@@ -74,8 +105,10 @@ impl InputStream {
     pub fn new(task: Task, seed: u64) -> Self {
         InputStream {
             dist: LengthDist::for_task(task),
+            dist2: LengthDist::secondary_for_task(task),
             batch: task.batch(),
             max_seq: task.model().max_seq,
+            whole_batch: matches!(task, Task::Swin),
             rng: Rng::new(seed),
         }
     }
@@ -84,9 +117,25 @@ impl InputStream {
         self.batch
     }
 
-    /// Next collated mini-batch seqlen.
+    /// Next collated input shape: (primary, secondary); secondary is 0 for
+    /// single-axis tasks.
+    pub fn next_shape(&mut self) -> (usize, usize) {
+        let primary = if self.whole_batch {
+            self.dist.sample(&mut self.rng).min(self.max_seq)
+        } else {
+            collate_seqlen(&self.dist, self.batch, self.max_seq, &mut self.rng)
+        };
+        let secondary = match &self.dist2 {
+            Some(d) => collate_seqlen(d, self.batch, self.max_seq, &mut self.rng),
+            None => 0,
+        };
+        (primary, secondary)
+    }
+
+    /// Next collated primary-axis length (classic 1-D view; a seq2seq
+    /// stream still advances both axes to stay deterministic).
     pub fn next_seqlen(&mut self) -> usize {
-        collate_seqlen(&self.dist, self.batch, self.max_seq, &mut self.rng)
+        self.next_shape().0
     }
 }
 
@@ -160,6 +209,68 @@ mod tests {
         let a: Vec<usize> = InputStream::new(Task::QaBert, 5).take(50).collect();
         let b: Vec<usize> = InputStream::new(Task::QaBert, 5).take(50).collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seq2seq_shapes_are_two_axis_and_in_range() {
+        let mut s = InputStream::new(Task::Seq2seq, 13);
+        let (plo, phi) = Task::Seq2seq.seq_range();
+        let (slo, shi) = Task::Seq2seq.seq2_range().unwrap();
+        let mut psum = Summary::new();
+        let mut ssum = Summary::new();
+        for _ in 0..2000 {
+            let (p, sec) = s.next_shape();
+            assert!(sec > 0, "seq2seq must carry a target axis");
+            psum.add(p as f64);
+            ssum.add(sec as f64);
+        }
+        assert!(psum.mean() >= plo as f64 && psum.mean() <= phi as f64, "src mean {}", psum.mean());
+        assert!(ssum.mean() >= slo as f64 && ssum.mean() <= shi as f64, "tgt mean {}", ssum.mean());
+    }
+
+    #[test]
+    fn seq2seq_axes_vary_independently() {
+        // correlation between collated src and tgt must be near zero —
+        // they are drawn from independent per-sample distributions
+        let mut s = InputStream::new(Task::Seq2seq, 17);
+        let shapes: Vec<(f64, f64)> =
+            (0..3000).map(|_| { let (p, t) = s.next_shape(); (p as f64, t as f64) }).collect();
+        let n = shapes.len() as f64;
+        let mx = shapes.iter().map(|x| x.0).sum::<f64>() / n;
+        let my = shapes.iter().map(|x| x.1).sum::<f64>() / n;
+        let cov = shapes.iter().map(|(x, y)| (x - mx) * (y - my)).sum::<f64>() / n;
+        let sx = (shapes.iter().map(|(x, _)| (x - mx).powi(2)).sum::<f64>() / n).sqrt();
+        let sy = (shapes.iter().map(|(_, y)| (y - my).powi(2)).sum::<f64>() / n).sqrt();
+        let corr = cov / (sx * sy);
+        assert!(corr.abs() < 0.1, "src/tgt correlation {corr}");
+        // and the marginal collated distributions genuinely differ
+        assert!((mx - my).abs() > 10.0, "src {mx} vs tgt {my}");
+    }
+
+    #[test]
+    fn swin_draws_stepped_resolutions_per_batch() {
+        let mut s = InputStream::new(Task::Swin, 23);
+        let mut distinct = std::collections::BTreeSet::new();
+        for _ in 0..500 {
+            let (p, sec) = s.next_shape();
+            assert_eq!(sec, 0, "vision is single-axis");
+            assert!(p >= 192 && p <= 288, "resolution {p} out of range");
+            assert_eq!(p % 16, 0, "resolution {p} off the step grid");
+            distinct.insert(p);
+        }
+        // whole-batch draw: the collate max must NOT pin every batch at the
+        // top of the range (which per-sample max over batch 32 would do)
+        assert!(distinct.len() >= 4, "saw only {distinct:?}");
+    }
+
+    #[test]
+    fn one_d_tasks_have_zero_secondary() {
+        for task in Task::all() {
+            let mut s = InputStream::new(task, 3);
+            for _ in 0..20 {
+                assert_eq!(s.next_shape().1, 0);
+            }
+        }
     }
 
     #[test]

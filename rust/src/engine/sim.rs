@@ -2,17 +2,22 @@
 //!
 //! It executes the *same* planner/scheduler/ledger code as the real PJRT
 //! engine, but replaces executable calls with a calibrated FLOPs clock and
-//! backs tensors with the caching-allocator simulator. One epoch of
-//! TC-Bert × 4 planners × 6 budgets simulates in seconds, which is what
+//! backs tensors with the caching-allocator simulator. Execution walks the
+//! profile's [`crate::model::StageGraph`] in topological order (forward)
+//! and reverse-topological order (backward), freeing each stage's state at
+//! its last use — on chain models this is bit-identical to the pre-graph
+//! positional walk, and on branch/join graphs (seq2seq) a branch-point's
+//! output survives until its final consumer has been backwarded. One epoch
+//! of TC-Bert × 4 planners × 6 budgets simulates in seconds, which is what
 //! regenerating Figs 4/5/13/14 and Table 2 requires.
 
-use crate::config::{ExperimentConfig, PlannerKind};
+use crate::config::{ExperimentConfig, PlannerKind, Task};
 use crate::coordinator::{observations_from_profile, Coordinator};
 use crate::data::InputStream;
 use crate::memory::{Ledger, OomError, TensorClass, TensorId};
 use crate::metrics::{IterationMetrics, RunReport};
 use crate::model::{
-    encoder_residual_components, transformer_profile, LayerKind, ModelProfile,
+    encoder_residual_components, task_profile, vision::SwinSpec, ModelProfile, StageKind,
 };
 use crate::planners::{
     BaselinePlanner, DtrPlanner, InputDesc, IterationMode, MimosePlanner, OomResponse, Planner,
@@ -41,34 +46,60 @@ impl CostModel {
     }
 }
 
+/// The profile a static planner sizes for: the task's worst-case collated
+/// input shape on both axes.
+pub fn max_task_profile(task: Task) -> ModelProfile {
+    let (p, s) = task.max_shape();
+    task_profile(task, task.batch(), p, s)
+}
+
+/// The engine-side `InputDesc` for a drawn input shape. Vision keys the
+/// estimator on *padded tokens*, not raw resolution (§4.3: the memory curve
+/// is near-linear in padded tokens but stepped in resolution); seq2seq
+/// carries both collated axes.
+pub fn input_for(task: Task, shape: (usize, usize)) -> InputDesc {
+    let batch = task.batch();
+    match task {
+        Task::Swin => InputDesc::new(batch, SwinSpec::default().padded_tokens(shape.0)),
+        Task::Seq2seq => {
+            // a zero target axis defaults to the source length, mirroring
+            // the profile builder
+            let tgt = if shape.1 == 0 { shape.0 } else { shape.1 };
+            InputDesc::seq2seq(batch, shape.0, tgt)
+        }
+        _ => InputDesc::new(batch, shape.0),
+    }
+}
+
 pub fn make_planner(cfg: &ExperimentConfig) -> Box<dyn Planner> {
-    let model = cfg.task.model();
-    let (_, max_seq) = cfg.task.seq_range();
     match cfg.planner {
         PlannerKind::Baseline => Box::new(BaselinePlanner),
         PlannerKind::Sublinear => Box::new(SublinearPlanner::new(
             cfg.budget_bytes,
             cfg.mimose.reserve_bytes,
-            transformer_profile(&model, cfg.task.batch(), max_seq, cfg.task.act_factor()),
+            max_task_profile(cfg.task),
         )),
         PlannerKind::Dtr => Box::new(DtrPlanner::new()),
-        PlannerKind::Mimose => Box::new(MimosePlanner::with_coordinator(Coordinator::new(
-            cfg.budget_bytes,
-            model.layers + 2,
-            cfg.mimose.clone(),
-            cfg.coordinator.clone(),
-        ))),
+        PlannerKind::Mimose => {
+            let n_stages = max_task_profile(cfg.task).layers().len();
+            Box::new(MimosePlanner::with_coordinator(Coordinator::new(
+                cfg.budget_bytes,
+                n_stages,
+                cfg.mimose.clone(),
+                cfg.coordinator.clone(),
+            )))
+        }
     }
 }
 
-/// Per-layer live tensors during an iteration.
+/// Per-stage live tensors during an iteration.
 struct LayerState {
     tensors: Vec<TensorId>,
-    /// true if this layer ran under checkpointing (plan) — bwd recomputes.
+    /// true if this stage ran under checkpointing (plan) — bwd recomputes.
     checkpointed: bool,
     /// tensors evicted reactively (DTR) — bwd restores + recomputes.
     evicted: bool,
-    /// bytes evicted from this layer (per-tensor remat accounting).
+    /// bytes evicted from this stage (per-tensor remat accounting).
     evicted_bytes: u64,
 }
 
@@ -79,14 +110,14 @@ pub struct SimEngine {
     ledger: Ledger,
     stream: InputStream,
     _fixed: TensorId,
-    /// Per-seqlen profile cache: input sizes repeat heavily (the same
-    /// premise as the plan cache), and building a profile allocates layer
+    /// Per-shape profile cache: input shapes repeat heavily (the same
+    /// premise as the plan cache), and building a profile allocates stage
     /// names — ~40% of a simulated iteration before caching (see §Perf).
-    /// Rc: cloning the handle is 1 refcount bump, not 14 String clones.
-    profile_cache: std::collections::BTreeMap<usize, std::rc::Rc<ModelProfile>>,
-    /// Pre-computed per-layer component tensor sizes, keyed by seqlen —
-    /// avoids re-deriving the 13-element Vec for every layer visit.
-    component_cache: std::collections::BTreeMap<usize, std::rc::Rc<Vec<Vec<u64>>>>,
+    /// Rc: cloning the handle is 1 refcount bump, not N String clones.
+    profile_cache: std::collections::BTreeMap<(usize, usize), std::rc::Rc<ModelProfile>>,
+    /// Pre-computed per-stage component tensor sizes, keyed by shape —
+    /// avoids re-deriving the component Vec for every stage visit.
+    component_cache: std::collections::BTreeMap<(usize, usize), std::rc::Rc<Vec<Vec<u64>>>>,
 }
 
 #[derive(Debug)]
@@ -112,10 +143,13 @@ impl SimEngine {
     }
 
     pub fn with_cost(cfg: ExperimentConfig, cost: CostModel) -> Result<Self, SimError> {
-        let model = cfg.task.model();
         let mut ledger = Ledger::new(cfg.budget_bytes);
+        // run-constant state from the task's own profile builder (equals
+        // ModelSpec::fixed_state_bytes for the transformer tasks; vision
+        // carries its own fixed footprint)
+        let fixed_bytes = max_task_profile(cfg.task).fixed_bytes;
         let fixed = ledger
-            .create(model.fixed_state_bytes(), TensorClass::Fixed, usize::MAX, 0.0)
+            .create(fixed_bytes, TensorClass::Fixed, usize::MAX, 0.0)
             .map_err(SimError::FixedStateOom)?;
         let planner = make_planner(&cfg);
         let stream = InputStream::new(cfg.task, cfg.seed);
@@ -167,14 +201,31 @@ impl SimEngine {
         self.cfg.budget_bytes = budget;
     }
 
-    /// Per-seqlen cached model profile (also serves the fleet's broker-side
-    /// demand math, so profiles are built once per distinct collated size).
-    pub fn profile_for(&mut self, seqlen: usize) -> std::rc::Rc<ModelProfile> {
+    /// Memo-cache bound: 1-D tasks see a few hundred distinct collated
+    /// seqlens, but a 2-D (src, tgt) stream draws from a cross product —
+    /// unbounded per-shape memos would grow for the whole run (the exact
+    /// adversarial-stream scenario the plan cache is bounded against).
+    /// Flushing wholesale is fine: entries regenerate in microseconds.
+    const SHAPE_MEMO_CAP: usize = 4096;
+
+    /// Per-shape cached model profile (also serves the fleet's broker-side
+    /// demand math, so profiles are built once per distinct collated shape).
+    pub fn profile_for_shape(&mut self, shape: (usize, usize)) -> std::rc::Rc<ModelProfile> {
         let task = self.cfg.task;
         let batch = task.batch();
-        std::rc::Rc::clone(self.profile_cache.entry(seqlen).or_insert_with(|| {
-            std::rc::Rc::new(transformer_profile(&task.model(), batch, seqlen, task.act_factor()))
+        if self.profile_cache.len() >= Self::SHAPE_MEMO_CAP
+            && !self.profile_cache.contains_key(&shape)
+        {
+            self.profile_cache.clear();
+        }
+        std::rc::Rc::clone(self.profile_cache.entry(shape).or_insert_with(|| {
+            std::rc::Rc::new(task_profile(task, batch, shape.0, shape.1))
         }))
+    }
+
+    /// Single-axis convenience over [`SimEngine::profile_for_shape`].
+    pub fn profile_for(&mut self, seqlen: usize) -> std::rc::Rc<ModelProfile> {
+        self.profile_for_shape((seqlen, 0))
     }
 
     /// Run one epoch (or `cfg.max_iters`), returning the aggregated report.
@@ -186,22 +237,28 @@ impl SimEngine {
         };
         let mut report = RunReport::new(self.planner.name(), self.cfg.budget_bytes);
         for _ in 0..iters {
-            let seqlen = self.stream.next_seqlen();
-            report.push(self.run_iteration(seqlen));
+            let shape = self.stream.next_shape();
+            report.push(self.run_iteration_shape(shape));
         }
         report
     }
 
-    /// Simulate one training iteration at the given collated seqlen.
+    /// Simulate one training iteration at the given collated seqlen
+    /// (single-axis view; seq2seq defaults the target to the source).
     pub fn run_iteration(&mut self, seqlen: usize) -> IterationMetrics {
-        let batch = self.cfg.task.batch();
-        let profile = self.profile_for(seqlen);
-        let input = InputDesc { batch, seqlen };
+        self.run_iteration_shape((seqlen, 0))
+    }
+
+    /// Simulate one training iteration at the given collated input shape.
+    pub fn run_iteration_shape(&mut self, shape: (usize, usize)) -> IterationMetrics {
+        let profile = self.profile_for_shape(shape);
+        let input = input_for(self.cfg.task, shape);
         let decision = self.planner.begin_iteration(&input, &profile);
 
         self.ledger.reset_peak();
         let mut m = IterationMetrics {
-            seqlen,
+            seqlen: shape.0,
+            seqlen2: shape.1,
             planning_ms: decision.planning_ms,
             cache_hit: decision.cache_hit,
             phase: decision.phase,
@@ -224,7 +281,7 @@ impl SimEngine {
             // that fails is the iteration counted as a hard OOM (Baseline
             // has an empty conservative plan, so it still fails honestly).
             let conservative = Plan::of(
-                crate::planners::checkpointable(&profile).iter().map(|l| l.id),
+                crate::planners::checkpointable(&profile).iter().map(|c| c.id()),
             );
             // Only planners that already checkpoint get the fallback —
             // Baseline (empty plan) must fail honestly.
@@ -240,7 +297,7 @@ impl SimEngine {
         if sheltered && ok {
             let cost = self.cost;
             let fwd_ms: f64 =
-                profile.layers.iter().map(|l| cost.layer_ms(l.fwd_flops)).sum();
+                profile.layers().iter().map(|l| cost.layer_ms(l.fwd_flops)).sum();
             m.collector_ms = fwd_ms; // the duplicated forward pass
             let obs = observations_from_profile(&profile, &input, |flops| cost.layer_ms(flops));
             self.planner.end_iteration(&input, &obs, fwd_ms);
@@ -252,35 +309,51 @@ impl SimEngine {
         m
     }
 
-    /// Tensor sizes each layer keeps when NOT checkpointed, cached per
-    /// seqlen (sizes are identical for all encoder layers of one input).
+    /// Tensor sizes each stage keeps when NOT checkpointed, cached per
+    /// shape. Transformer chains expose the 13-tensor encoder residual set
+    /// (DTR evicts at that granularity); graph workloads (seq2seq, vision)
+    /// keep whole-stage blobs.
     fn components_for(&mut self, profile: &ModelProfile) -> std::rc::Rc<Vec<Vec<u64>>> {
-        if let Some(c) = self.component_cache.get(&profile.seqlen) {
+        let key = (profile.seqlen, profile.seqlen2);
+        if let Some(c) = self.component_cache.get(&key) {
             return std::rc::Rc::clone(c);
         }
-        let model = self.cfg.task.model();
-        let per_layer: Vec<Vec<u64>> = profile
-            .layers
-            .iter()
-            .map(|l| match l.kind {
-                LayerKind::Encoder => {
-                    let mut v =
-                        encoder_residual_components(&model, profile.batch, profile.seqlen);
-                    let f = self.cfg.task.act_factor();
-                    if f != 1.0 {
-                        // e.g. XLNet two-stream attention widens per-tensor state
-                        for x in &mut v {
-                            *x = (*x as f64 * f) as u64;
+        if self.component_cache.len() >= Self::SHAPE_MEMO_CAP {
+            self.component_cache.clear();
+        }
+        let task = self.cfg.task;
+        let per_layer: Vec<Vec<u64>> = match task {
+            Task::Seq2seq | Task::Swin => profile
+                .layers()
+                .iter()
+                .map(|l| if l.act_bytes > 0 { vec![l.act_bytes] } else { vec![] })
+                .collect(),
+            _ => {
+                let model = task.model();
+                profile
+                    .layers()
+                    .iter()
+                    .map(|l| match l.kind {
+                        StageKind::Encoder | StageKind::Decoder | StageKind::Cross => {
+                            let mut v =
+                                encoder_residual_components(&model, profile.batch, profile.seqlen);
+                            let f = task.act_factor();
+                            if f != 1.0 {
+                                // e.g. XLNet two-stream attention widens per-tensor state
+                                for x in &mut v {
+                                    *x = (*x as f64 * f) as u64;
+                                }
+                            }
+                            v
                         }
-                    }
-                    v
-                }
-                LayerKind::Embed => vec![l.act_bytes],
-                LayerKind::Head => vec![],
-            })
-            .collect();
+                        StageKind::Embed => vec![l.act_bytes],
+                        StageKind::Head => vec![],
+                    })
+                    .collect()
+            }
+        };
         let rc = std::rc::Rc::new(per_layer);
-        self.component_cache.insert(profile.seqlen, std::rc::Rc::clone(&rc));
+        self.component_cache.insert(key, std::rc::Rc::clone(&rc));
         rc
     }
 
@@ -323,7 +396,12 @@ impl SimEngine {
         }
     }
 
-    /// Forward + backward over the ledger. Returns false on hard OOM.
+    /// Forward + backward over the ledger, walking the stage graph in
+    /// topological / reverse-topological order. A stage's state is freed
+    /// after its own backward — in reverse topo order every consumer has
+    /// already been backwarded by then, so this IS last-use freeing
+    /// (join-aware on branching graphs, plain LIFO on chains). Returns
+    /// false on hard OOM.
     fn execute(
         &mut self,
         profile: &ModelProfile,
@@ -331,8 +409,13 @@ impl SimEngine {
         reactive: bool,
         m: &mut IterationMetrics,
     ) -> bool {
-        let n = profile.layers.len();
+        let n = profile.layers().len();
         let components = self.components_for(profile);
+        // plan-aware kept-input sizes: a checkpointed stage whose inputs are
+        // all still-materialised branch-point outputs keeps nothing extra —
+        // the same credit schedule_graph and the analytic peak apply
+        // (declared ckpt_bytes on every chain workload)
+        let plan_ids = plan.ids();
         let mut states: Vec<LayerState> = (0..n)
             .map(|i| LayerState {
                 tensors: Vec::new(),
@@ -344,8 +427,8 @@ impl SimEngine {
         let mut ok = true;
 
         // ---------- forward ----------
-        'fwd: for li in 0..n {
-            let l = profile.layers[li].clone();
+        'fwd: for &li in profile.graph.topo_order() {
+            let l = profile.layers()[li].clone();
             let cost_ms = self.cost.layer_ms(l.fwd_flops);
             m.compute_ms += cost_ms;
 
@@ -361,8 +444,13 @@ impl SimEngine {
                 }
             }
 
+            let kept_input = if states[li].checkpointed {
+                profile.graph.planned_ckpt_bytes(li, &plan_ids)
+            } else {
+                0
+            };
             let sizes: &[u64] = if states[li].checkpointed {
-                if l.ckpt_bytes > 0 { std::slice::from_ref(&l.ckpt_bytes) } else { &[] }
+                if kept_input > 0 { std::slice::from_ref(&kept_input) } else { &[] }
             } else {
                 &components[li]
             };
@@ -379,8 +467,8 @@ impl SimEngine {
 
         // ---------- backward ----------
         if ok {
-            'bwd: for li in (0..n).rev() {
-                let l = profile.layers[li].clone();
+            'bwd: for &li in profile.graph.topo_order().iter().rev() {
+                let l = profile.layers()[li].clone();
                 let fwd_ms = self.cost.layer_ms(l.fwd_flops);
                 // backward compute ~ 2x forward
                 m.compute_ms += 2.0 * fwd_ms;
@@ -404,7 +492,7 @@ impl SimEngine {
                     }
                 } else if states[li].evicted {
                     // DTR: rematerialise per evicted tensor. Cost scales with
-                    // the evicted fraction of the layer's residual set, with
+                    // the evicted fraction of the stage's residual set, with
                     // a 2x chain factor: DTR has no model knowledge, so
                     // rematerialisation replays producer chains and often
                     // re-evicts (the paper's "suboptimal plans with redundant
@@ -451,7 +539,8 @@ impl SimEngine {
                     }
                 }
 
-                // gradients computed: this layer's state is freed
+                // gradients computed: this stage's state is freed — its last
+                // consumer is behind us in the reverse-topo walk
                 for id in states[li].tensors.drain(..) {
                     if self.ledger.get(id).map(|t| !t.evicted).unwrap_or(false) {
                         self.ledger.destroy(id);
@@ -595,5 +684,79 @@ mod tests {
         let short = e.run_iteration(64);
         let long = e.run_iteration(256);
         assert!(long.compute_ms > short.compute_ms * 2.0);
+    }
+
+    // ---- graph workloads through the same engine ----
+
+    #[test]
+    fn seq2seq_mimose_runs_clean() {
+        // Engine-level smoke for the 2-D workload; the full acceptance
+        // scenario (baseline OOMs at the same budget) lives in
+        // tests/stage_graph.rs and the CI-asserted seq2seq example.
+        let mut mim = SimEngine::new(cfg(Task::Seq2seq, PlannerKind::Mimose, 4.0, 40)).unwrap();
+        let rm = mim.run_epoch();
+        assert_eq!(rm.oom_failures(), 0, "mimose must complete seq2seq under 4 GB");
+        assert!(rm.peak_bytes() <= 4 * GIB, "peak {}", rm.peak_bytes());
+        assert!(rm.cache_hit_rate() > 0.0, "repeated (src,tgt) cells must hit");
+        let c = mim.coordinator().unwrap();
+        assert!(c.plans_generated > 0);
+        // the secondary axis is visible in the per-iteration metrics
+        assert!(rm.iters.iter().all(|m| m.seqlen2 > 0));
+    }
+
+    #[test]
+    fn seq2seq_sublinear_also_safe_but_slower() {
+        let mut sub = SimEngine::new(cfg(Task::Seq2seq, PlannerKind::Sublinear, 4.0, 80)).unwrap();
+        let mut mim = SimEngine::new(cfg(Task::Seq2seq, PlannerKind::Mimose, 4.0, 80)).unwrap();
+        let rs = sub.run_epoch();
+        let rm = mim.run_epoch();
+        assert_eq!(rs.oom_failures(), 0);
+        assert_eq!(rm.oom_failures(), 0);
+        assert!(
+            rm.recompute_ms() < rs.recompute_ms(),
+            "input-aware plans must recompute less than the static planner"
+        );
+    }
+
+    #[test]
+    fn seq2seq_checkpoint_count_tracks_both_axes() {
+        let mut e = SimEngine::new(cfg(Task::Seq2seq, PlannerKind::Mimose, 4.0, 0)).unwrap();
+        // warm through sheltered collection on the task's own stream
+        for _ in 0..14 {
+            let shape = e.stream.next_shape();
+            let _ = e.run_iteration_shape(shape);
+        }
+        let small = e.run_iteration_shape((150, 120));
+        let big_src = e.run_iteration_shape((380, 120));
+        let big_tgt = e.run_iteration_shape((150, 380));
+        assert!(!small.oom_failed && !big_src.oom_failed && !big_tgt.oom_failed);
+        assert!(big_src.n_checkpointed >= small.n_checkpointed);
+        assert!(big_tgt.n_checkpointed >= small.n_checkpointed);
+        assert!(
+            big_src.n_checkpointed + big_tgt.n_checkpointed > 2 * small.n_checkpointed,
+            "plans must respond to each axis ({} / {} / {})",
+            small.n_checkpointed,
+            big_src.n_checkpointed,
+            big_tgt.n_checkpointed
+        );
+    }
+
+    #[test]
+    fn swin_task_runs_through_sim_engine() {
+        // Swin is a first-class task now: same engine, same planner stack.
+        let mut e = SimEngine::new(cfg(Task::Swin, PlannerKind::Mimose, 3.0, 120)).unwrap();
+        let r = e.run_epoch();
+        assert_eq!(r.oom_failures(), 0, "mimose must respect 3 GB on Swin");
+        assert!(r.peak_bytes() <= 3 * GIB);
+        assert!(r.cache_hit_rate() > 0.2, "hit rate {}", r.cache_hit_rate());
+        // resolutions land on the augmentation grid
+        assert!(r.iters.iter().all(|m| m.seqlen >= 192 && m.seqlen <= 288));
+    }
+
+    #[test]
+    fn swin_baseline_ooms_at_high_resolution_budget() {
+        let mut e = SimEngine::new(cfg(Task::Swin, PlannerKind::Baseline, 3.0, 60)).unwrap();
+        let r = e.run_epoch();
+        assert!(r.oom_failures() > 0, "3 GB cannot hold un-checkpointed Swin batches");
     }
 }

@@ -67,7 +67,7 @@ impl VisionSimEngine {
                 spec.profile(batch, ResizeAug::default().hi),
             )),
             PlannerKind::Mimose => {
-                let n_layers = spec.profile(batch, 224).layers.len();
+                let n_layers = spec.profile(batch, 224).layers().len();
                 Box::new(MimosePlanner::new(
                     budget,
                     n_layers,
@@ -115,7 +115,7 @@ impl VisionSimEngine {
             let profile = self.spec.profile(self.batch, img);
             // estimator/cache key: padded token count, not raw resolution —
             // linearises the §4.3 window-padding step function
-            let input = InputDesc { batch: self.batch, seqlen: self.spec.padded_tokens(img) };
+            let input = InputDesc::new(self.batch, self.spec.padded_tokens(img));
             let decision = self.planner.begin_iteration(&input, &profile);
             let mut m = match &decision.mode {
                 IterationMode::Planned(plan) => {
@@ -129,7 +129,7 @@ impl VisionSimEngine {
                         // undershoot; recover like a production runtime:
                         // retry the iteration with the conservative plan
                         let conservative =
-                            Plan::of(crate::planners::checkpointable(&profile).iter().map(|l| l.id));
+                            Plan::of(crate::planners::checkpointable(&profile).iter().map(|c| c.id()));
                         let retry = self.apply(&profile, &conservative);
                         // pay for the aborted attempt (~one forward)
                         m = retry;

@@ -1,19 +1,25 @@
 //! The "lightning memory estimator" (paper §4.3) and the Table 3 regression
 //! zoo it was selected from.
 //!
-//! The production estimator fits one quadratic polynomial *per layer*:
-//! `mem_layer(input_size)`, where input size is the element count of the
-//! collated mini-batch tensor (batch x seqlen). Training data comes from the
-//! shuttling online collector during sheltered execution.
+//! The production estimator fits one curve *per stage*:
+//! `mem_stage(input_key)`, where the input key is the element count of the
+//! collated mini-batch tensor along each dynamic axis (batch x seqlen for
+//! the classic tasks; batch x src and batch x tgt for seq2seq). Single-axis
+//! fits are the paper's quadratic polynomial, bit-identical to the
+//! pre-graph estimator; two-axis fits use the bi-quadratic surface in
+//! [`surface::SurfaceRegressor`]. Training data comes from the shuttling
+//! online collector during sheltered execution.
 
 pub mod gbt;
 pub mod linalg;
 pub mod poly;
+pub mod surface;
 pub mod svr;
 pub mod tree;
 
 pub use gbt::GbtRegressor;
 pub use poly::PolyRegressor;
+pub use surface::SurfaceRegressor;
 pub use svr::SvrRegressor;
 pub use tree::TreeRegressor;
 
@@ -26,24 +32,28 @@ pub trait Regressor {
     fn predict(&self, x: f64) -> f64;
 }
 
-/// One collected observation: per-layer memory at a given input size.
+/// One collected observation: per-stage memory at a given input key.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Sample {
-    /// Input size: elements in the collated mini-batch (batch * seqlen).
+    /// Primary input axis: elements in the collated mini-batch
+    /// (batch * seqlen; batch * src for seq2seq).
     pub input_size: f64,
-    /// Observed activation bytes of one layer.
+    /// Secondary input axis (batch * tgt for seq2seq); 0 for 1-D tasks.
+    pub input_size2: f64,
+    /// Observed activation bytes of one stage.
     pub act_bytes: f64,
-    /// Observed forward time of that layer (ms).
+    /// Observed forward time of that stage (ms).
     pub fwd_ms: f64,
 }
 
-/// Per-layer memory + forward-time prediction model.
+/// Per-stage memory + forward-time prediction model.
 ///
-/// Both curves are quadratic in input size: memory because of the attention
-/// probs tensor; time because FLOPs carry the same S^2 term (§4.3).
+/// Both curves are quadratic per input axis: memory because of the
+/// attention probs tensor; time because FLOPs carry the same S^2 term
+/// (§4.3) — plus the u*v cross term for cross-attention stages.
 pub struct MemoryEstimator {
-    mem_models: Vec<PolyRegressor>,
-    time_models: Vec<PolyRegressor>,
+    mem_models: Vec<SurfaceRegressor>,
+    time_models: Vec<SurfaceRegressor>,
     samples: Vec<Vec<Sample>>,
     trained: bool,
     pub order: usize,
@@ -56,8 +66,8 @@ impl MemoryEstimator {
 
     pub fn with_order(n_layers: usize, order: usize) -> Self {
         MemoryEstimator {
-            mem_models: (0..n_layers).map(|_| PolyRegressor::new(order)).collect(),
-            time_models: (0..n_layers).map(|_| PolyRegressor::new(order)).collect(),
+            mem_models: (0..n_layers).map(|_| SurfaceRegressor::new(order)).collect(),
+            time_models: (0..n_layers).map(|_| SurfaceRegressor::new(order)).collect(),
             samples: vec![Vec::new(); n_layers],
             trained: false,
             order,
@@ -82,50 +92,68 @@ impl MemoryEstimator {
         self.samples[layer].len()
     }
 
-    /// Distinct input sizes observed (the paper trains after ~10).
+    /// Distinct input keys observed (the paper trains after ~10).
     pub fn distinct_inputs(&self) -> usize {
-        let mut v: Vec<u64> = self
+        let mut v: Vec<(u64, u64)> = self
             .samples
             .iter()
-            .flat_map(|s| s.iter().map(|x| x.input_size as u64))
+            .flat_map(|s| s.iter().map(|x| (x.input_size as u64, x.input_size2 as u64)))
             .collect();
         v.sort_unstable();
         v.dedup();
         v.len()
     }
 
-    /// Fit all per-layer models. Returns total fit time in ms (Table 2/3/4).
+    /// Fit all per-stage models. Returns total fit time in ms (Table 2/3/4).
     pub fn train(&mut self) -> f64 {
         let t = Timer::start();
         for (i, samples) in self.samples.iter().enumerate() {
             if samples.is_empty() {
                 continue;
             }
-            let xs: Vec<f64> = samples.iter().map(|s| s.input_size).collect();
+            let us: Vec<f64> = samples.iter().map(|s| s.input_size).collect();
+            let vs: Vec<f64> = samples.iter().map(|s| s.input_size2).collect();
             let mem: Vec<f64> = samples.iter().map(|s| s.act_bytes).collect();
             let tm: Vec<f64> = samples.iter().map(|s| s.fwd_ms).collect();
-            self.mem_models[i].fit(&xs, &mem);
-            self.time_models[i].fit(&xs, &tm);
+            self.mem_models[i].fit(&us, &vs, &mem);
+            self.time_models[i].fit(&us, &vs, &tm);
         }
         self.trained = true;
         t.elapsed_ms()
     }
 
-    /// Predicted activation bytes of `layer` at `input_size` elements.
-    pub fn predict_bytes(&self, layer: usize, input_size: f64) -> f64 {
+    /// Predicted activation bytes of `layer` at a (primary, secondary)
+    /// feature pair.
+    pub fn predict_bytes_key(&self, layer: usize, feat: (f64, f64)) -> f64 {
         debug_assert!(self.trained, "estimator not trained");
-        self.mem_models[layer].predict(input_size).max(0.0)
+        self.mem_models[layer].predict(feat.0, feat.1).max(0.0)
+    }
+
+    /// Predicted activation bytes of `layer` at `input_size` elements
+    /// (single-axis convenience).
+    pub fn predict_bytes(&self, layer: usize, input_size: f64) -> f64 {
+        self.predict_bytes_key(layer, (input_size, 0.0))
     }
 
     /// Predicted forward (= recompute) time of `layer`, ms.
-    pub fn predict_fwd_ms(&self, layer: usize, input_size: f64) -> f64 {
+    pub fn predict_fwd_ms_key(&self, layer: usize, feat: (f64, f64)) -> f64 {
         debug_assert!(self.trained, "estimator not trained");
-        self.time_models[layer].predict(input_size).max(0.0)
+        self.time_models[layer].predict(feat.0, feat.1).max(0.0)
     }
 
-    /// Predict the whole per-layer memory vector (the scheduler's est_mem).
+    /// Single-axis convenience over [`MemoryEstimator::predict_fwd_ms_key`].
+    pub fn predict_fwd_ms(&self, layer: usize, input_size: f64) -> f64 {
+        self.predict_fwd_ms_key(layer, (input_size, 0.0))
+    }
+
+    /// Predict the whole per-stage memory vector (the scheduler's est_mem).
     pub fn predict_all_bytes(&self, input_size: f64) -> Vec<f64> {
-        (0..self.n_layers()).map(|l| self.predict_bytes(l, input_size)).collect()
+        self.predict_all_bytes_key((input_size, 0.0))
+    }
+
+    /// Per-stage memory vector at a two-axis feature.
+    pub fn predict_all_bytes_key(&self, feat: (f64, f64)) -> Vec<f64> {
+        (0..self.n_layers()).map(|l| self.predict_bytes_key(l, feat)).collect()
     }
 }
 
@@ -168,15 +196,16 @@ mod tests {
         1e6 * (layer + 1) as f64 + 3e3 * x + 0.8 * (layer + 1) as f64 * x * x
     }
 
+    fn d1(x: f64, y: f64, ms: f64) -> Sample {
+        Sample { input_size: x, input_size2: 0.0, act_bytes: y, fwd_ms: ms }
+    }
+
     fn build_estimator() -> MemoryEstimator {
         let mut e = MemoryEstimator::new(3);
         for layer in 0..3 {
             for i in 1..=10 {
                 let x = (i * 40) as f64;
-                e.observe(
-                    layer,
-                    Sample { input_size: x, act_bytes: synth_layer_curve(layer, x), fwd_ms: 0.1 * x },
-                );
+                e.observe(layer, d1(x, synth_layer_curve(layer, x), 0.1 * x));
             }
         }
         e
@@ -211,7 +240,7 @@ mod tests {
         let mut e = build_estimator();
         e.train();
         assert!(e.is_trained());
-        e.observe(0, Sample { input_size: 1.0, act_bytes: 1.0, fwd_ms: 1.0 });
+        e.observe(0, d1(1.0, 1.0, 1.0));
         assert!(!e.is_trained());
     }
 
@@ -219,6 +248,41 @@ mod tests {
     fn distinct_inputs_counts_unique_sizes() {
         let e = build_estimator();
         assert_eq!(e.distinct_inputs(), 10);
+    }
+
+    #[test]
+    fn distinct_inputs_separates_axes() {
+        // same primary, different secondary = different keys (src x tgt)
+        let mut e = MemoryEstimator::new(1);
+        e.observe(0, Sample { input_size: 100.0, input_size2: 50.0, act_bytes: 1.0, fwd_ms: 1.0 });
+        e.observe(0, Sample { input_size: 100.0, input_size2: 80.0, act_bytes: 2.0, fwd_ms: 1.0 });
+        e.observe(0, Sample { input_size: 100.0, input_size2: 80.0, act_bytes: 2.0, fwd_ms: 1.0 });
+        assert_eq!(e.distinct_inputs(), 2);
+    }
+
+    #[test]
+    fn two_axis_samples_fit_per_axis_curves() {
+        // stage 0 depends on u only (encoder), stage 1 on v only (decoder
+        // self-attn), stage 2 on both incl. the uv cross term (cross-attn)
+        let enc = |u: f64| 1e6 + 2e3 * u + 0.5 * u * u;
+        let dec = |v: f64| 8e5 + 1e3 * v + 0.3 * v * v;
+        let cross = |u: f64, v: f64| 5e5 + 900.0 * u + 700.0 * v + 0.9 * u * v;
+        let mut e = MemoryEstimator::new(3);
+        for i in 1..=4 {
+            for j in 1..=3 {
+                let (u, v) = ((i * 150) as f64, (j * 110 + i * 19) as f64);
+                e.observe(0, Sample { input_size: u, input_size2: v, act_bytes: enc(u), fwd_ms: 1.0 });
+                e.observe(1, Sample { input_size: u, input_size2: v, act_bytes: dec(v), fwd_ms: 1.0 });
+                e.observe(2, Sample { input_size: u, input_size2: v, act_bytes: cross(u, v), fwd_ms: 1.0 });
+            }
+        }
+        e.train();
+        let (u, v) = (333.0, 275.0);
+        for (l, want) in [(0, enc(u)), (1, dec(v)), (2, cross(u, v))] {
+            let got = e.predict_bytes_key(l, (u, v));
+            let rel = (got - want).abs() / want;
+            assert!(rel < 1e-3, "stage {l}: rel {rel}");
+        }
     }
 
     #[test]
@@ -242,7 +306,7 @@ mod tests {
     fn predicted_bytes_never_negative() {
         let mut e = MemoryEstimator::new(1);
         for i in 1..=5 {
-            e.observe(0, Sample { input_size: i as f64, act_bytes: 10.0, fwd_ms: 1.0 });
+            e.observe(0, d1(i as f64, 10.0, 1.0));
         }
         e.train();
         assert!(e.predict_bytes(0, 0.0) >= 0.0);

@@ -1,0 +1,148 @@
+//! Two-axis memory surface regression (§4.3 generalised to the
+//! [`crate::model::InputKey`]).
+//!
+//! Single-axis workloads delegate to the paper's quadratic
+//! [`PolyRegressor`] — same basis, same scaling, same ridge — so 1-D
+//! predictions are bit-identical to the pre-graph estimator (the chain
+//! differential relies on this). When any observation carries a non-zero
+//! secondary feature (seq2seq src x tgt), the fit switches to the
+//! bi-quadratic basis `[1, u, v, u^2, v^2, uv]`: exactly the terms
+//! encoder/decoder/cross-attention residual bytes are made of at a fixed
+//! batch (linear per axis, quadratic attention probs per axis, and the
+//! cross-attention probs' u*v term).
+
+use super::linalg::lstsq;
+use super::poly::PolyRegressor;
+use super::Regressor;
+
+#[derive(Clone, Debug)]
+pub struct SurfaceRegressor {
+    /// 1-D path (all secondary features zero) — the paper's estimator.
+    poly: PolyRegressor,
+    /// 2-D path coefficients over `[1, u, v, u^2, v^2, uv]`; empty = 1-D.
+    coef2: Vec<f64>,
+    /// Per-axis feature scales for conditioning.
+    su: f64,
+    sv: f64,
+}
+
+impl SurfaceRegressor {
+    pub fn new(order: usize) -> Self {
+        SurfaceRegressor { poly: PolyRegressor::new(order), coef2: Vec::new(), su: 1.0, sv: 1.0 }
+    }
+
+    pub fn is_2d(&self) -> bool {
+        !self.coef2.is_empty()
+    }
+
+    /// Fit over per-sample features `(us[i], vs[i]) -> ys[i]`. A secondary
+    /// feature of 0 on every sample selects the 1-D quadratic path.
+    pub fn fit(&mut self, us: &[f64], vs: &[f64], ys: &[f64]) {
+        assert_eq!(us.len(), ys.len());
+        assert_eq!(vs.len(), ys.len());
+        assert!(!us.is_empty());
+        if vs.iter().all(|&v| v == 0.0) {
+            self.coef2.clear();
+            self.poly.fit(us, ys);
+            return;
+        }
+        self.su = us.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1.0);
+        self.sv = vs.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1.0);
+        let k = 6;
+        let mut design = Vec::with_capacity(us.len() * k);
+        for (&u, &v) in us.iter().zip(vs) {
+            let (un, vn) = (u / self.su, v / self.sv);
+            design.extend_from_slice(&[1.0, un, vn, un * un, vn * vn, un * vn]);
+        }
+        self.coef2 = lstsq(&design, ys, us.len(), k, 1e-9)
+            .unwrap_or_else(|| vec![ys.iter().sum::<f64>() / ys.len() as f64]);
+    }
+
+    pub fn predict(&self, u: f64, v: f64) -> f64 {
+        if self.coef2.is_empty() {
+            return self.poly.predict(u);
+        }
+        let (un, vn) = (u / self.su, v / self.sv);
+        let basis = [1.0, un, vn, un * un, vn * vn, un * vn];
+        self.coef2.iter().zip(basis.iter()).map(|(c, b)| c * b).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_d_path_is_bit_identical_to_poly() {
+        let xs: Vec<f64> = (1..=10).map(|i| (i * 50) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 1e6 + 2e3 * x + 3.5 * x * x).collect();
+        let zeros = vec![0.0; xs.len()];
+        let mut s = SurfaceRegressor::new(2);
+        s.fit(&xs, &zeros, &ys);
+        assert!(!s.is_2d());
+        let mut p = PolyRegressor::new(2);
+        p.fit(&xs, &ys);
+        for &x in &[75.0, 333.0, 512.0] {
+            // same struct, same arithmetic: exact equality, not tolerance
+            assert_eq!(s.predict(x, 0.0), p.predict(x));
+        }
+    }
+
+    #[test]
+    fn two_d_recovers_biquadratic_exactly() {
+        // y = a + b u + c v + d u^2 + e v^2 + f uv — the cross-attention
+        // residual shape at fixed batch.
+        let truth = |u: f64, v: f64| {
+            2e6 + 1.5e3 * u + 0.9e3 * v + 0.8 * u * u + 0.4 * v * v + 1.2 * u * v
+        };
+        let mut s = SurfaceRegressor::new(2);
+        let mut us = Vec::new();
+        let mut vs = Vec::new();
+        let mut ys = Vec::new();
+        // 12 spread-out (u, v) pairs, axes varying independently
+        for i in 1..=4 {
+            for j in 1..=3 {
+                let (u, v) = ((i * 120) as f64, (j * 90 + i * 17) as f64);
+                us.push(u);
+                vs.push(v);
+                ys.push(truth(u, v));
+            }
+        }
+        s.fit(&us, &vs, &ys);
+        assert!(s.is_2d());
+        for &(u, v) in &[(150.0, 130.0), (400.0, 95.0), (333.0, 280.0)] {
+            let want = truth(u, v);
+            let rel = (s.predict(u, v) - want).abs() / want;
+            assert!(rel < 1e-6, "({u},{v}): rel {rel}");
+        }
+    }
+
+    #[test]
+    fn two_d_axis_independence() {
+        // A surface depending only on v must predict flat in u.
+        let mut s = SurfaceRegressor::new(2);
+        let mut us = Vec::new();
+        let mut vs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 1..=4 {
+            for j in 1..=3 {
+                us.push((i * 100) as f64);
+                vs.push((j * 80 + i * 13) as f64);
+                ys.push(5e5 + 2e3 * vs.last().unwrap() + 0.7 * vs.last().unwrap().powi(2));
+            }
+        }
+        s.fit(&us, &vs, &ys);
+        let a = s.predict(100.0, 200.0);
+        let b = s.predict(390.0, 200.0);
+        assert!((a - b).abs() / a.abs() < 1e-4, "u must not move the fit: {a} vs {b}");
+    }
+
+    #[test]
+    fn degenerate_two_d_falls_back_to_mean() {
+        // One sample cannot pin 6 coefficients; the fit must stay finite.
+        let mut s = SurfaceRegressor::new(2);
+        s.fit(&[100.0], &[50.0], &[7.0]);
+        let y = s.predict(100.0, 50.0);
+        assert!(y.is_finite());
+    }
+}

@@ -39,9 +39,8 @@ use super::metrics::{BrokerDecision, FleetReport, JobSummary};
 use crate::config::{ExperimentConfig, FleetConfig, FleetEvent, JobSpec, PlannerKind, Task};
 use crate::coordinator::Coordinator;
 use crate::data::InputStream;
-use crate::engine::sim::SimEngine;
+use crate::engine::sim::{input_for, SimEngine};
 use crate::metrics::RunReport;
-use crate::planners::InputDesc;
 use crate::scheduler::{model_signature, shared_plan_cache, SharedCacheHandle};
 use crate::util::timer::Timer;
 use std::collections::BTreeMap;
@@ -61,14 +60,15 @@ pub struct FleetJob {
     steps_limit: usize,
     engine: SimEngine,
     stream: InputStream,
-    /// Seqlen drawn for the upcoming round (demand and step must agree).
-    pending: Option<usize>,
+    /// Input shape drawn for the upcoming round (demand and step must
+    /// agree); (primary, secondary) with secondary 0 for 1-D tasks.
+    pending: Option<(usize, usize)>,
     budget: u64,
     pub report: RunReport,
-    /// Conservative reservation memo per seqlen — collated sizes repeat
-    /// heavily (the plan-cache premise) and the broker consults floors
-    /// every round. Profiles themselves come from the engine's own cache.
-    floor_cache: BTreeMap<usize, u64>,
+    /// Conservative reservation memo per input shape — collated shapes
+    /// repeat heavily (the plan-cache premise) and the broker consults
+    /// floors every round. Profiles come from the engine's own cache.
+    floor_cache: BTreeMap<(usize, usize), u64>,
 }
 
 impl FleetJob {
@@ -129,25 +129,30 @@ impl FleetJob {
         self.engine.coordinator()
     }
 
-    /// Memoised conservative reservation for a seqlen (profiles come from
-    /// the engine's per-seqlen cache, so each is built at most once).
-    fn floor_for(&mut self, seqlen: usize, reserve: u64) -> u64 {
-        if let Some(&f) = self.floor_cache.get(&seqlen) {
+    /// Memoised conservative reservation for an input shape (profiles come
+    /// from the engine's per-shape cache, so each is built at most once).
+    /// Bounded like the engine's shape memos: a 2-D (src, tgt) stream draws
+    /// from a cross product, so the memo flushes past 4096 distinct shapes.
+    fn floor_for(&mut self, shape: (usize, usize), reserve: u64) -> u64 {
+        if let Some(&f) = self.floor_cache.get(&shape) {
             return f;
         }
-        let profile = self.engine.profile_for(seqlen);
+        if self.floor_cache.len() >= 4096 {
+            self.floor_cache.clear();
+        }
+        let profile = self.engine.profile_for_shape(shape);
         let f = Coordinator::conservative_reservation(&profile, reserve);
-        self.floor_cache.insert(seqlen, f);
+        self.floor_cache.insert(shape, f);
         f
     }
 
     /// Draw the next mini-batch and report this round's memory picture.
     fn draw_demand(&mut self, configured_floor: u64, reserve: u64) -> JobDemand {
-        let seqlen = self.stream.next_seqlen();
-        self.pending = Some(seqlen);
-        let floor = self.floor_for(seqlen, reserve).max(configured_floor);
-        let profile = self.engine.profile_for(seqlen);
-        let input = InputDesc { batch: self.task.batch(), seqlen };
+        let shape = self.stream.next_shape();
+        self.pending = Some(shape);
+        let floor = self.floor_for(shape, reserve).max(configured_floor);
+        let profile = self.engine.profile_for_shape(shape);
+        let input = input_for(self.task, shape);
         let predicted = self
             .engine
             .coordinator()
@@ -155,10 +160,10 @@ impl FleetJob {
         JobDemand { id: self.id, weight: self.weight, floor, predicted }
     }
 
-    /// Worst-case floor (max collated input): the tenancy must fit these.
+    /// Worst-case floor (max collated input on both axes): the tenancy
+    /// must fit these.
     fn worst_floor(&mut self, configured_floor: u64, reserve: u64) -> u64 {
-        let (_, max_seq) = self.task.seq_range();
-        self.floor_for(max_seq, reserve).max(configured_floor)
+        self.floor_for(self.task.max_shape(), reserve).max(configured_floor)
     }
 
     fn rebind(&mut self, budget: u64) {
@@ -168,10 +173,10 @@ impl FleetJob {
         }
     }
 
-    /// Run the round's iteration (the seqlen the demand was drawn for).
+    /// Run the round's iteration (the shape the demand was drawn for).
     fn step(&mut self) -> crate::metrics::IterationMetrics {
-        let seqlen = self.pending.take().expect("draw_demand before step");
-        self.engine.run_iteration(seqlen)
+        let shape = self.pending.take().expect("draw_demand before step");
+        self.engine.run_iteration_shape(shape)
     }
 
     /// True once the job has run its configured iteration count.
@@ -577,6 +582,20 @@ mod tests {
             assert!(d.allocations.iter().sum::<u64>() <= 12 * GIB);
             assert_eq!(d.job_ids, vec![0, 1]);
         }
+    }
+
+    #[test]
+    fn seq2seq_tenant_coexists_in_the_fleet() {
+        // a two-axis (graph) workload shares the budget with a chain task:
+        // shaped demand, shaped floors, shaped iterations — end to end
+        let mut f =
+            FleetScheduler::new(fleet_cfg(vec![Task::Seq2seq, Task::TcBert], 14, 40)).unwrap();
+        let r = f.run();
+        assert_eq!(r.jobs.len(), 2);
+        assert_eq!(r.oom_failures(), 0);
+        assert!(r.budget_respected(), "aggregate peak {}", r.max_aggregate_peak());
+        let s2s = r.jobs.iter().find(|j| j.name.starts_with("Seq2seq")).unwrap();
+        assert_eq!(s2s.steps, 40);
     }
 
     #[test]

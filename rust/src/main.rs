@@ -1,17 +1,23 @@
 //! `mimose` — leader entrypoint / CLI launcher.
 //!
 //! Subcommands:
-//!   sim      run one simulated experiment (task x planner x budget)
+//!   sim|run  run one simulated experiment (task x planner x budget)
 //!   sweep    planner comparison across budgets for a task
 //!   plan     inspect the plan Mimose would generate for a given input
 //!   fleet    run N jobs time-sharing one budget through the broker
 //!   info     print model/task/artifact inventory
 //!
+//! Tasks: the paper's Table 1 set (mc-roberta, qa-xlnet, qa-bert, tc-bert)
+//! plus the stage-graph extensions: seq2seq (encoder-decoder, independent
+//! src/tgt lengths) and swin (resolution-augmented vision).
+//!
 //! Examples:
 //!   mimose sim --task tc-bert --planner mimose --budget-gb 6 --iters 1000
+//!   mimose run --task seq2seq --planner mimose --budget-gb 4 --iters 200
 //!   mimose sim --config experiment.toml
 //!   mimose sweep --task qa-bert --lo 4 --hi 7 --points 4
 //!   mimose plan --task tc-bert --budget-gb 5 --seqlen 300
+//!   mimose plan --task seq2seq --budget-gb 4 --seqlen 300 --tgt-seqlen 250
 //!   mimose fleet --tasks tc-bert,qa-bert,mc-roberta --budget-gb 16 --compare
 //!   mimose fleet --tasks tc-bert,qa-bert --weights 3.0,1.0 --events events.toml
 
@@ -20,11 +26,11 @@ use mimose::config::{
     PlannerKind, Task,
 };
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
-use mimose::engine::sim::SimEngine;
+use mimose::engine::sim::{input_for, max_task_profile, SimEngine};
 use mimose::fleet::{FleetReport, FleetScheduler};
 use mimose::metrics::RunReport;
-use mimose::model::transformer_profile;
-use mimose::planners::{InputDesc, IterationMode};
+use mimose::model::task_profile;
+use mimose::planners::IterationMode;
 use mimose::util::cli::Cli;
 use mimose::util::{fmt_bytes, GIB};
 
@@ -36,7 +42,8 @@ fn main() {
         args.remove(0)
     };
     match cmd.as_str() {
-        "sim" => cmd_sim(&args),
+        // `run` is the ergonomic alias: `mimose run --task seq2seq ...`
+        "sim" | "run" => cmd_sim(&args),
         "sweep" => cmd_sweep(&args),
         "plan" => cmd_plan(&args),
         "fleet" => cmd_fleet(&args),
@@ -44,7 +51,7 @@ fn main() {
         _ => {
             eprintln!(
                 "mimose — input-aware checkpointing planner (paper reproduction)\n\n\
-                 subcommands:\n  sim     run one simulated experiment\n  \
+                 subcommands:\n  sim|run run one simulated experiment\n  \
                  sweep   compare planners across budgets\n  \
                  plan    inspect a Mimose plan for an input size\n  \
                  fleet   N jobs time-sharing one budget (broker arbitration)\n  \
@@ -118,7 +125,7 @@ fn cmd_sim(args: &[String]) {
     let cli = parse_or_exit(
         Cli::new("mimose sim", "run one simulated experiment")
             .opt("config", "", "TOML config path (overrides other flags)")
-            .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert")
+            .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert | seq2seq | swin")
             .opt("planner", "mimose", "baseline | sublinear | dtr | mimose")
             .opt("budget-gb", "6.0", "memory budget (GiB)")
             .opt("iters", "1000", "iterations (0 = full epoch)")
@@ -240,29 +247,30 @@ fn cmd_sweep(args: &[String]) {
 
 fn cmd_plan(args: &[String]) {
     let cli = parse_or_exit(
-        Cli::new("mimose plan", "inspect the plan for one input size")
-            .opt("task", "tc-bert", "task name")
+        Cli::new("mimose plan", "inspect the plan for one input shape")
+            .opt("task", "tc-bert", "task name (incl. seq2seq, swin)")
             .opt("budget-gb", "5.0", "memory budget (GiB)")
-            .opt("seqlen", "300", "collated sequence length")
+            .opt("seqlen", "300", "collated seqlen (resolution for swin; src for seq2seq)")
+            .opt("tgt-seqlen", "0", "collated target seqlen (seq2seq; 0 = same as --seqlen)")
             .opt("seed", "1", "collector sampling seed"),
         args,
     );
     let task = Task::parse(&cli.get("task")).expect("unknown task");
     let budget = (cli.get_f64("budget-gb") * GIB as f64) as u64;
-    let model = task.model();
+    let n_stages = max_task_profile(task).layers().len();
     let mut coord = Coordinator::new(
         budget,
-        model.layers + 2,
+        n_stages,
         MimoseConfig::default(),
         CoordinatorConfig::default(),
     );
 
-    // sheltered execution over the task's own distribution
+    // sheltered execution over the task's own input distribution
     let mut stream = mimose::data::InputStream::new(task, cli.get_u64("seed"));
     while !coord.collector().is_frozen() {
-        let seq = stream.next_seqlen();
-        let profile = transformer_profile(&model, task.batch(), seq, 1.0);
-        let input = InputDesc { batch: task.batch(), seqlen: seq };
+        let shape = stream.next_shape();
+        let profile = task_profile(task, task.batch(), shape.0, shape.1);
+        let input = input_for(task, shape);
         if let IterationMode::Sheltered(_) = coord.begin_iteration(&input, &profile).mode {
             let obs = observations_from_profile(&profile, &input, |flops| flops as f64 / 1e9);
             coord.end_iteration(&input, &obs, 1.0);
@@ -270,18 +278,39 @@ fn cmd_plan(args: &[String]) {
     }
 
     let seq = cli.get_usize("seqlen");
-    let profile = transformer_profile(&model, task.batch(), seq, 1.0);
-    let input = InputDesc { batch: task.batch(), seqlen: seq };
+    let tgt = cli.get_usize("tgt-seqlen");
+    let profile = task_profile(task, task.batch(), seq, tgt);
+    let input = input_for(task, (seq, tgt));
     let d = coord.begin_iteration(&input, &profile);
+    let key = input.key();
+    if key.is_2d() {
+        println!(
+            "{} @ {:.1} GB, src {seq} x tgt {} (input key {} x {}):",
+            task.name(),
+            budget as f64 / GIB as f64,
+            profile.seqlen2,
+            key.primary,
+            key.secondary
+        );
+    } else {
+        println!(
+            "{} @ {:.1} GB, seqlen {seq} (input size {}):",
+            task.name(),
+            budget as f64 / GIB as f64,
+            input.size()
+        );
+    }
+    let g = &profile.graph;
     println!(
-        "{} @ {:.1} GB, seqlen {seq} (input size {}):",
-        task.name(),
-        budget as f64 / GIB as f64,
-        input.size()
+        "  stage graph   : {} stages, {} branch points, {} joins{}",
+        g.len(),
+        g.branch_points().len(),
+        g.join_points().len(),
+        if g.is_chain() { " (chain)" } else { "" }
     );
     println!("  planning time : {:.3} ms (cache {})", d.planning_ms, if d.cache_hit { "hit" } else { "miss" });
     if let IterationMode::Planned(plan) = d.mode {
-        println!("  checkpointed  : {} layers {:?}", plan.len(), plan.ids());
+        println!("  checkpointed  : {} stages {:?}", plan.len(), plan.ids());
         println!("  kept activations: {}", fmt_bytes(profile.planned_act_bytes(&plan.ids())));
         println!("  no-plan need    : {}", fmt_bytes(profile.total_act_bytes()));
         println!("  est. peak       : {}", fmt_bytes(profile.peak_bytes(&plan.ids())));
@@ -490,17 +519,23 @@ fn cmd_info(args: &[String]) {
             .opt("artifacts", "artifacts", "artifacts directory"),
         args,
     );
-    println!("tasks (paper Table 1):");
-    for t in Task::all() {
+    println!("tasks (paper Table 1 + stage-graph extensions):");
+    for t in Task::extended() {
         let m = t.model();
+        let p = max_task_profile(t);
+        let shape = if let Some(r2) = t.seq2_range() {
+            format!("src {:?} x tgt {:?}", t.seq_range(), r2)
+        } else {
+            format!("seq {:?}", t.seq_range())
+        };
         println!(
-            "  {:<12} model {:<14} batch {:<3} seq {:?} ~{:.0}M params, fixed {}",
+            "  {:<12} model {:<15} batch {:<3} {:<28} {:>2} stages, fixed {}",
             t.name(),
             m.name,
             t.batch(),
-            t.seq_range(),
-            m.param_count() as f64 / 1e6,
-            fmt_bytes(m.fixed_state_bytes()),
+            shape,
+            p.layers().len(),
+            fmt_bytes(p.fixed_bytes),
         );
     }
     let dir = std::path::Path::new(&cli.get("artifacts")).to_path_buf();

@@ -21,8 +21,10 @@ pub struct IterationMetrics {
     pub peak_bytes: u64,
     /// Reserved-but-unallocated (fragmentation) at iteration end.
     pub frag_bytes: u64,
-    /// Collated input seqlen.
+    /// Collated input seqlen (primary axis; resolution for vision).
     pub seqlen: usize,
+    /// Collated secondary-axis seqlen (seq2seq target); 0 for 1-D tasks.
+    pub seqlen2: usize,
     pub cache_hit: bool,
     pub oom_failed: bool,
     /// Number of layers checkpointed / tensors evicted.

@@ -1,120 +1,121 @@
-//! Analytic model graph: per-layer activation bytes and forward FLOPs as
-//! functions of (batch, seqlen).
+//! Analytic model representation: per-stage activation bytes and forward
+//! FLOPs as functions of the dynamic input axes.
 //!
-//! These formulas are the Rust twin of python/compile/model.py's
+//! The [`graph::StageGraph`] is the *single* model representation every
+//! subsystem consumes — collector, estimator, scheduler, planners, memory
+//! ledger, engines. [`ModelProfile`] wraps a graph built for one concrete
+//! input together with the run-constant state; the classic transformer
+//! builders produce chain-shaped graphs whose walks are bit-identical to
+//! the pre-graph `Vec<Layer>` code (pinned by `tests/stage_graph.rs`).
+//!
+//! Chain formulas are the Rust twin of python/compile/model.py's
 //! `block_residual_shapes` — pytest asserts the Python side matches real JAX
 //! buffer shapes, and rust tests here assert the two languages agree (via
-//! constants checked in both suites). The planner, estimator, collector and
-//! memory ledger all consume `ModelProfile`.
+//! constants checked in both suites).
 
+pub mod graph;
 pub mod vision;
 
-use crate::config::ModelSpec;
+pub use graph::{graph_peak_bytes, InputKey, Layer, LayerKind, Stage, StageGraph, StageKind};
 
-/// What a layer keeps alive between forward and backward.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum LayerKind {
-    /// Embedding: layernorm residuals only.
-    Embed,
-    /// Transformer encoder block: full eager residual set.
-    Encoder,
-    /// LM head: fused fwd+bwd, transient logits only.
-    Head,
-}
+use crate::config::{ModelSpec, Task};
 
-/// One checkpointable unit (the paper's "layer"/"module"; §4.4 "stage").
-#[derive(Clone, Debug)]
-pub struct Layer {
-    pub id: usize,
-    pub name: String,
-    pub kind: LayerKind,
-    /// Position in the forward execution order (the Algorithm 1 timestamp).
-    pub fwd_order: usize,
-    /// Residual bytes kept when the layer is NOT checkpointed.
-    pub act_bytes: u64,
-    /// Bytes kept when the layer IS checkpointed (its input tensor).
-    pub ckpt_bytes: u64,
-    /// Forward FLOPs (recompute cost when checkpointed).
-    pub fwd_flops: u64,
-    /// Transient working-set bytes peaked during this layer's forward that
-    /// are freed immediately after (e.g. head logits).
-    pub transient_bytes: u64,
-}
-
-impl Layer {
-    /// Bytes saved by checkpointing this layer.
-    pub fn savings(&self) -> u64 {
-        self.act_bytes.saturating_sub(self.ckpt_bytes)
-    }
-}
-
-/// The model as the planner sees it for a concrete (batch, seqlen).
+/// The model as the planner sees it for one concrete input.
 #[derive(Clone, Debug)]
 pub struct ModelProfile {
-    pub layers: Vec<Layer>,
+    /// The stage graph (a chain for classic transformer/vision tasks).
+    pub graph: StageGraph,
     /// Params + grads + optimizer state, constant across inputs (§3.1).
     pub fixed_bytes: u64,
     pub batch: usize,
+    /// Primary dynamic axis: collated seqlen (NLP), resolution (vision).
     pub seqlen: usize,
+    /// Secondary dynamic axis: collated target seqlen (seq2seq); 0 = 1-D.
+    pub seqlen2: usize,
 }
 
 impl ModelProfile {
-    /// Total activation bytes with no checkpointing.
-    pub fn total_act_bytes(&self) -> u64 {
-        self.layers.iter().map(|l| l.act_bytes).sum()
+    /// Chain-shaped profile — the classic layer-list model.
+    pub fn chain(stages: Vec<Stage>, fixed_bytes: u64, batch: usize, seqlen: usize) -> Self {
+        ModelProfile { graph: StageGraph::chain(stages), fixed_bytes, batch, seqlen, seqlen2: 0 }
     }
 
-    /// Activation bytes under a checkpointing plan (set of layer ids).
+    /// Profile over an arbitrary stage graph (two dynamic axes allowed).
+    pub fn from_graph(
+        graph: StageGraph,
+        fixed_bytes: u64,
+        batch: usize,
+        seqlen: usize,
+        seqlen2: usize,
+    ) -> Self {
+        ModelProfile { graph, fixed_bytes, batch, seqlen, seqlen2 }
+    }
+
+    /// The stages in id order (the pre-graph `profile.layers`).
+    pub fn layers(&self) -> &[Stage] {
+        self.graph.stages()
+    }
+
+    /// The input-dynamics key of this profile's RAW input axes
+    /// (batch * seqlen, batch * seqlen2). NLP/seq2seq engines use this
+    /// directly; vision engines key the estimator/plan cache on
+    /// window-*padded* tokens instead (see `engine::sim::input_for`), so
+    /// for `Task::Swin` prefer `input_for` over this method.
+    pub fn input_key(&self) -> InputKey {
+        if self.seqlen2 == 0 {
+            InputKey::d1((self.batch * self.seqlen) as u64)
+        } else {
+            InputKey::d2(
+                (self.batch * self.seqlen) as u64,
+                (self.batch * self.seqlen2) as u64,
+            )
+        }
+    }
+
+    /// Total activation bytes with no checkpointing.
+    pub fn total_act_bytes(&self) -> u64 {
+        self.graph.total_act_bytes()
+    }
+
+    /// Activation bytes under a checkpointing plan (set of stage ids).
+    /// Checkpointed stages keep their *plan-aware marginal* input — a
+    /// branch-point output shared with a live sibling branch costs nothing
+    /// extra, unless the branch point is itself checkpointed; on a chain
+    /// this is exactly the declared `ckpt_bytes`.
     pub fn planned_act_bytes(&self, checkpointed: &[usize]) -> u64 {
-        self.layers
+        self.layers()
             .iter()
-            .map(|l| if checkpointed.contains(&l.id) { l.ckpt_bytes } else { l.act_bytes })
+            .map(|s| {
+                if checkpointed.contains(&s.id) {
+                    self.graph.planned_ckpt_bytes(s.id, checkpointed)
+                } else {
+                    s.act_bytes
+                }
+            })
             .sum()
     }
 
-    /// Peak memory during forward+backward under a plan.
-    ///
-    /// Forward: residuals accumulate layer by layer. Backward (reverse
-    /// order): a checkpointed layer must first rematerialise its residual
-    /// set while every earlier layer's state is still held — this is why
-    /// checkpointing *late* layers barely helps peak (paper Fig 11).
+    /// Peak memory during forward+backward under a plan: a topological
+    /// forward accumulation and a reverse-topological backward that frees
+    /// each stage's state at its last use (join-aware; see
+    /// [`graph_peak_bytes`]). Checkpointing *late* stages barely helps peak
+    /// because their restore happens while everything earlier is still held
+    /// (paper Fig 11).
     pub fn peak_bytes(&self, checkpointed: &[usize]) -> u64 {
-        let held = |l: &Layer| -> u64 {
-            if checkpointed.contains(&l.id) { l.ckpt_bytes } else { l.act_bytes }
-        };
-        // --- forward sweep ---
-        let mut cur = self.fixed_bytes;
-        let mut peak = cur;
-        for l in &self.layers {
-            // transient working set (plus full residuals while computing)
-            peak = peak.max(cur + l.act_bytes + l.transient_bytes);
-            cur += held(l);
-            peak = peak.max(cur);
-        }
-        // --- backward sweep ---
-        for (i, l) in self.layers.iter().enumerate().rev() {
-            // state still held for layers 0..=i (later ones already freed)
-            let held_below: u64 = self.layers[..i].iter().map(&held).sum();
-            // this layer's residuals must be (re)materialised to backward it
-            let need = self.fixed_bytes + held_below + l.act_bytes + l.transient_bytes;
-            peak = peak.max(need);
-            cur = self.fixed_bytes + held_below;
-        }
-        let _ = cur;
-        peak
+        graph_peak_bytes(&self.graph, self.fixed_bytes, checkpointed)
     }
 
     /// Forward FLOPs of one iteration (no recompute).
     pub fn fwd_flops(&self) -> u64 {
-        self.layers.iter().map(|l| l.fwd_flops).sum()
+        self.layers().iter().map(|s| s.fwd_flops).sum()
     }
 
     /// Extra recompute FLOPs incurred by a plan.
     pub fn recompute_flops(&self, checkpointed: &[usize]) -> u64 {
-        self.layers
+        self.layers()
             .iter()
-            .filter(|l| checkpointed.contains(&l.id))
-            .map(|l| l.fwd_flops)
+            .filter(|s| checkpointed.contains(&s.id))
+            .map(|s| s.fwd_flops)
             .sum()
     }
 }
@@ -173,10 +174,10 @@ pub fn transformer_profile_with_head(
     let xbytes = f32_bytes(b * s * h);
 
     // Embedding: output x + layernorm residuals (xhat [B,S,H], rstd [B,S,1]).
-    layers.push(Layer {
+    layers.push(Stage {
         id: 0,
         name: "embed".into(),
-        kind: LayerKind::Embed,
+        kind: StageKind::Embed,
         fwd_order: 0,
         act_bytes: xbytes + f32_bytes(b * s),
         ckpt_bytes: f32_bytes(b * s), // token ids (i32) ~ 4B each
@@ -187,10 +188,10 @@ pub fn transformer_profile_with_head(
     let act = (encoder_residual_bytes(m, batch, seq) as f64 * xlnet_factor) as u64;
     let flops = encoder_fwd_flops(m, batch, seq);
     for i in 0..m.layers {
-        layers.push(Layer {
+        layers.push(Stage {
             id: i + 1,
             name: format!("encoder.{i}"),
-            kind: LayerKind::Encoder,
+            kind: StageKind::Encoder,
             fwd_order: i + 1,
             act_bytes: act,
             ckpt_bytes: xbytes,
@@ -200,10 +201,10 @@ pub fn transformer_profile_with_head(
     }
 
     // Head: fused forward+backward executable; logits are transient.
-    layers.push(Layer {
+    layers.push(Stage {
         id: m.layers + 1,
         name: "head".into(),
-        kind: LayerKind::Head,
+        kind: StageKind::Head,
         fwd_order: m.layers + 1,
         act_bytes: 0,
         ckpt_bytes: 0,
@@ -211,7 +212,7 @@ pub fn transformer_profile_with_head(
         transient_bytes: f32_bytes(2 * b * s * v), // logits + logp
     });
 
-    ModelProfile { layers, fixed_bytes: m.fixed_state_bytes(), batch, seqlen: seq }
+    ModelProfile::chain(layers, m.fixed_state_bytes(), batch, seq)
 }
 
 /// Paper-task profile: small classification/QA head (the Table 1 tasks).
@@ -222,6 +223,144 @@ pub fn transformer_profile(
     xlnet_factor: f64,
 ) -> ModelProfile {
     transformer_profile_with_head(m, batch, seq, xlnet_factor, 2)
+}
+
+/// Encoder-decoder profile with two independently dynamic axes (src, tgt):
+/// the §4.3 input dynamics squared. The graph is NOT a chain:
+///
+/// ```text
+///  src_embed -> enc.0 -> ... -> enc.E ----+----+-- ... --+
+///                                         v    v         v
+///  tgt_embed -> dec.0.self -> dec.0.cross -> dec.1.self -> ... -> head
+/// ```
+///
+/// Every decoder cross-attention block consumes the encoder memory, so the
+/// last encoder stage is a *branch point* whose output stays alive until
+/// the final cross block's backward — the liveness the graph-aware
+/// scheduler and ledger walk account for. Cross stages declare only their
+/// decoder-side input as `ckpt_bytes`: the encoder memory they also read is
+/// accounted once, at the branch point (kept or recomputed there), never
+/// double-counted per consumer.
+///
+/// `tgt == 0` defaults the target length to the source length.
+pub fn seq2seq_profile(m: &ModelSpec, batch: usize, src: usize, tgt: usize) -> ModelProfile {
+    let tgt = if tgt == 0 { src } else { tgt };
+    let (b, s, t) = (batch as u64, src as u64, tgt as u64);
+    let (h, f, heads, v) = (m.hidden as u64, m.ffn as u64, m.heads as u64, m.vocab as u64);
+    let e = m.layers;
+    let d = if m.decoder_layers > 0 { m.decoder_layers } else { m.layers };
+
+    let bsh = f32_bytes(b * s * h);
+    let bth = f32_bytes(b * t * h);
+    let mut stages = Vec::with_capacity(e + 2 * d + 3);
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+
+    // --- encoder chain ---
+    stages.push(Stage {
+        id: 0,
+        name: "src_embed".into(),
+        kind: StageKind::Embed,
+        fwd_order: 0,
+        act_bytes: bsh + f32_bytes(b * s),
+        ckpt_bytes: f32_bytes(b * s),
+        fwd_flops: 2 * b * s * h,
+        transient_bytes: 0,
+    });
+    let enc_act = encoder_residual_bytes(m, batch, src);
+    let enc_flops = encoder_fwd_flops(m, batch, src);
+    for i in 0..e {
+        stages.push(Stage {
+            id: i + 1,
+            name: format!("enc.{i}"),
+            kind: StageKind::Encoder,
+            fwd_order: i + 1,
+            act_bytes: enc_act,
+            ckpt_bytes: bsh,
+            fwd_flops: enc_flops,
+            transient_bytes: 0,
+        });
+        edges.push((i, i + 1));
+    }
+    let enc_out = e; // the branch point feeding every cross block
+
+    // --- decoder: self-attention and cross-attention(+FFN) stage pairs ---
+    let tgt_embed = e + 1;
+    stages.push(Stage {
+        id: tgt_embed,
+        name: "tgt_embed".into(),
+        kind: StageKind::Embed,
+        fwd_order: tgt_embed,
+        act_bytes: bth + f32_bytes(b * t),
+        ckpt_bytes: f32_bytes(b * t),
+        fwd_flops: 2 * b * t * h,
+        transient_bytes: 0,
+    });
+    // masked self-attention over the target: x,q,k,v,ctx,xhat [B,T,H] + probs
+    let self_act = f32_bytes(6 * b * t * h + heads * t * t * b + 2 * b * t);
+    let self_flops = 8 * b * t * h * h + 4 * b * t * t * h;
+    // cross-attention + FFN: q,ctx,xhat2,x2,xhat3 on T + k,v on S (encoder
+    // memory head-split) + probs [B,heads,T,S] + FFN u,gu on T
+    let cross_act =
+        f32_bytes(6 * b * t * h + heads * b * t * s + 2 * b * s * h + 2 * b * t * f + 2 * b * t);
+    let cross_flops = 4 * b * t * h * h + 4 * b * s * h * h + 4 * b * t * s * h + 4 * b * t * h * f;
+    let mut prev = tgt_embed;
+    for i in 0..d {
+        let self_id = e + 2 + 2 * i;
+        let cross_id = self_id + 1;
+        stages.push(Stage {
+            id: self_id,
+            name: format!("dec.{i}.self"),
+            kind: StageKind::Decoder,
+            fwd_order: self_id,
+            act_bytes: self_act,
+            ckpt_bytes: bth,
+            fwd_flops: self_flops,
+            transient_bytes: 0,
+        });
+        stages.push(Stage {
+            id: cross_id,
+            name: format!("dec.{i}.cross"),
+            kind: StageKind::Cross,
+            fwd_order: cross_id,
+            act_bytes: cross_act,
+            ckpt_bytes: bth,
+            fwd_flops: cross_flops,
+            transient_bytes: 0,
+        });
+        edges.push((prev, self_id));
+        edges.push((self_id, cross_id));
+        edges.push((enc_out, cross_id)); // the join with the encoder memory
+        prev = cross_id;
+    }
+
+    // --- LM head over the target: full-vocab transient logits ---
+    let head = e + 2 + 2 * d;
+    stages.push(Stage {
+        id: head,
+        name: "head".into(),
+        kind: StageKind::Head,
+        fwd_order: head,
+        act_bytes: 0,
+        ckpt_bytes: 0,
+        fwd_flops: 2 * b * t * h * v,
+        transient_bytes: f32_bytes(2 * b * t * v),
+    });
+    edges.push((prev, head));
+
+    let graph = StageGraph::new(stages, &edges).expect("seq2seq builder emits a valid DAG");
+    ModelProfile::from_graph(graph, m.fixed_state_bytes(), batch, src, tgt)
+}
+
+/// The single task -> profile entry point the engines, planners, and CLI
+/// share. `primary`/`secondary` are the dynamic input axes: collated
+/// (src, tgt) seqlens for seq2seq, (resolution, 0) for vision, and
+/// (seqlen, 0) for the classic Table 1 transformer tasks.
+pub fn task_profile(task: Task, batch: usize, primary: usize, secondary: usize) -> ModelProfile {
+    match task {
+        Task::Swin => vision::SwinSpec::default().profile(batch, primary),
+        Task::Seq2seq => seq2seq_profile(&task.model(), batch, primary, secondary),
+        _ => transformer_profile(&task.model(), batch, primary, task.act_factor()),
+    }
 }
 
 #[cfg(test)]
@@ -253,13 +392,16 @@ mod tests {
     #[test]
     fn profile_layer_inventory() {
         let p = transformer_profile(&tiny(), 2, 16, 1.0);
-        assert_eq!(p.layers.len(), tiny().layers + 2);
-        assert_eq!(p.layers[0].kind, LayerKind::Embed);
-        assert_eq!(p.layers.last().unwrap().kind, LayerKind::Head);
+        assert_eq!(p.layers().len(), tiny().layers + 2);
+        assert_eq!(p.layers()[0].kind, StageKind::Embed);
+        assert_eq!(p.layers().last().unwrap().kind, StageKind::Head);
         // fwd_order strictly increasing
-        for w in p.layers.windows(2) {
+        for w in p.layers().windows(2) {
             assert!(w[0].fwd_order < w[1].fwd_order);
         }
+        // the transformer builder emits a chain-shaped graph
+        assert!(p.graph.is_chain());
+        assert_eq!(p.input_key(), InputKey::d1(32));
     }
 
     #[test]
@@ -267,7 +409,7 @@ mod tests {
         let p = transformer_profile(&ModelSpec::bert_base(), 16, 128, 1.0);
         let none = p.planned_act_bytes(&[]);
         let some = p.planned_act_bytes(&[1, 2, 3]);
-        let all: Vec<usize> = p.layers.iter().map(|l| l.id).collect();
+        let all: Vec<usize> = p.layers().iter().map(|l| l.id).collect();
         let full = p.planned_act_bytes(&all);
         assert!(none > some && some > full);
     }
@@ -278,7 +420,7 @@ mod tests {
         // than checkpointing the last one.
         let p = transformer_profile(&ModelSpec::bert_base(), 16, 256, 1.0);
         let first = p.peak_bytes(&[1]);
-        let last = p.peak_bytes(&[p.layers.len() - 2]);
+        let last = p.peak_bytes(&[p.layers().len() - 2]);
         let none = p.peak_bytes(&[]);
         assert!(first < last, "first={first} last={last}");
         assert!(last <= none);
@@ -288,8 +430,12 @@ mod tests {
     fn peak_monotone_in_checkpoint_set() {
         let p = transformer_profile(&tiny(), 2, 16, 1.0);
         let none = p.peak_bytes(&[]);
-        let all: Vec<usize> =
-            p.layers.iter().filter(|l| l.kind == LayerKind::Encoder).map(|l| l.id).collect();
+        let all: Vec<usize> = p
+            .layers()
+            .iter()
+            .filter(|l| l.kind == StageKind::Encoder)
+            .map(|l| l.id)
+            .collect();
         assert!(p.peak_bytes(&all) < none);
     }
 
@@ -307,6 +453,87 @@ mod tests {
     fn recompute_flops_counts_checkpointed_only() {
         let p = transformer_profile(&tiny(), 2, 16, 1.0);
         assert_eq!(p.recompute_flops(&[]), 0);
-        assert_eq!(p.recompute_flops(&[1]), p.layers[1].fwd_flops);
+        assert_eq!(p.recompute_flops(&[1]), p.layers()[1].fwd_flops);
+    }
+
+    // ---- seq2seq graph ----
+
+    fn s2s() -> ModelSpec {
+        ModelSpec::s2s_base()
+    }
+
+    #[test]
+    fn seq2seq_graph_shape() {
+        let m = s2s();
+        let p = seq2seq_profile(&m, 8, 64, 48);
+        let (e, d) = (m.layers, m.decoder_layers);
+        assert_eq!(p.layers().len(), e + 2 * d + 3);
+        assert!(!p.graph.is_chain(), "cross-attention joins break the chain");
+        // the last encoder block feeds every cross stage: one branch point
+        assert_eq!(p.graph.branch_points(), vec![e]);
+        // every cross stage is a join (decoder input + encoder memory)
+        let joins = p.graph.join_points();
+        assert_eq!(joins.len(), d);
+        for j in &joins {
+            assert_eq!(p.layers()[*j].kind, StageKind::Cross);
+            assert!(p.graph.preds(*j).contains(&e));
+        }
+        // the encoder output is live until the LAST cross block
+        let last_cross = *joins.iter().max().unwrap();
+        let pos = p.graph.topo_order().iter().position(|&t| t == last_cross).unwrap();
+        assert_eq!(p.graph.last_use(e), pos);
+        assert_eq!(p.input_key(), InputKey::d2(8 * 64, 8 * 48));
+        assert_eq!(p.seqlen2, 48);
+    }
+
+    #[test]
+    fn seq2seq_axes_move_memory_independently() {
+        let m = s2s();
+        let base = seq2seq_profile(&m, 8, 64, 48).total_act_bytes();
+        let more_src = seq2seq_profile(&m, 8, 128, 48).total_act_bytes();
+        let more_tgt = seq2seq_profile(&m, 8, 64, 96).total_act_bytes();
+        assert!(more_src > base, "src growth must grow encoder+cross memory");
+        assert!(more_tgt > base, "tgt growth must grow decoder memory");
+        // and the two axes move different stage sets
+        let a = seq2seq_profile(&m, 8, 128, 48);
+        let b = seq2seq_profile(&m, 8, 64, 48);
+        assert_eq!(
+            a.layers()[m.layers + 2].act_bytes,
+            b.layers()[m.layers + 2].act_bytes,
+            "decoder self-attn must not depend on src"
+        );
+        assert!(a.layers()[1].act_bytes > b.layers()[1].act_bytes);
+    }
+
+    #[test]
+    fn seq2seq_tgt_zero_defaults_to_src() {
+        let m = s2s();
+        let a = seq2seq_profile(&m, 8, 64, 0);
+        let b = seq2seq_profile(&m, 8, 64, 64);
+        assert_eq!(a.total_act_bytes(), b.total_act_bytes());
+        assert_eq!(a.seqlen2, 64);
+    }
+
+    #[test]
+    fn seq2seq_topo_runs_encoder_before_crosses() {
+        let m = s2s();
+        let p = seq2seq_profile(&m, 4, 32, 32);
+        let topo = p.graph.topo_order();
+        let pos = |id: usize| topo.iter().position(|&t| t == id).unwrap();
+        let enc_out = m.layers;
+        for j in p.graph.join_points() {
+            assert!(pos(enc_out) < pos(j));
+        }
+    }
+
+    #[test]
+    fn task_profile_dispatches_per_task() {
+        let nlp = task_profile(Task::TcBert, 32, 128, 0);
+        assert!(nlp.graph.is_chain());
+        let s2s = task_profile(Task::Seq2seq, 8, 64, 48);
+        assert!(!s2s.graph.is_chain());
+        let swin = task_profile(Task::Swin, 4, 224, 0);
+        assert!(swin.graph.is_chain());
+        assert!(swin.layers().len() > 4);
     }
 }

@@ -1,8 +1,10 @@
 //! Analytic activation profiles for staged vision models (paper Fig 10):
 //! Swin-Transformer's patch-merging step-down vs ResNet's stem-heavy curve.
-//! Used by the `fig10_stage_memory` bench and the scheduler's stage logic.
+//! `SwinSpec` is a first-class `StageGraph` workload: `Task::Swin` routes
+//! `mimose plan` / `mimose sim|run` through it (not just the fig10 bench),
+//! and the `fig10_stage_memory` bench reads the same profiles.
 
-use super::{Layer, LayerKind, ModelProfile};
+use super::{ModelProfile, Stage, StageKind};
 
 /// Swin-like staged transformer: each stage halves token count via patch
 /// merging (tokens /4, channels x2 => activation bytes -50% per stage).
@@ -12,40 +14,54 @@ pub struct SwinSpec {
     pub patch: usize,      // patch size
     pub dim: usize,        // stage-0 channel dim
     pub depths: [usize; 4],
+    /// Attention window side; token grids pad up to a multiple of it
+    /// (the §4.3 step effect). 7 for the published Swin family.
+    pub window: usize,
 }
 
 impl Default for SwinSpec {
     fn default() -> Self {
-        // Swin-T: depths 2/2/6/2, dim 96, patch 4, 224x224.
-        SwinSpec { img: 224, patch: 4, dim: 96, depths: [2, 2, 6, 2] }
+        // Swin-T: depths 2/2/6/2, dim 96, patch 4, window 7, 224x224.
+        SwinSpec { img: 224, patch: 4, dim: 96, depths: [2, 2, 6, 2], window: 7 }
     }
 }
 
 impl SwinSpec {
+    /// Window side with a zero guard: a misconfigured `window = 0` would
+    /// divide by zero in the padding round-up; treat it as no padding.
+    fn window_side(&self) -> u64 {
+        self.window.max(1) as u64
+    }
+
     /// Stage-0 token count after window padding — the step function of
     /// §4.3. This (x batch) is the right estimator input for vision: the
     /// memory curve is near-linear in padded tokens but stepped in raw
     /// resolution.
     pub fn padded_tokens(&self, img: usize) -> usize {
+        let w = self.window_side();
         let side = (img / self.patch) as u64;
-        let padded_side = side.div_ceil(7) * 7;
-        (padded_side * padded_side) as usize
+        // saturating: an absurd resolution must not wrap the padding math
+        let padded_side = side.div_ceil(w).saturating_mul(w);
+        padded_side.saturating_mul(padded_side) as usize
     }
 
     /// Activation bytes per block in each stage, honouring the window-pad
     /// step effect (paper §4.3: ≤5% fluctuation from padding to window size).
     pub fn stage_block_bytes(&self, img: usize) -> [u64; 4] {
+        let w = self.window_side();
         let mut out = [0u64; 4];
         let mut tokens = ((img / self.patch) * (img / self.patch)) as u64;
         let mut dim = self.dim as u64;
         for (i, slot) in out.iter_mut().enumerate() {
-            // window padding: round token grid up to multiple of 7 per side
+            // window padding: round token grid up to a multiple of w per side
             let side = (tokens as f64).sqrt().ceil() as u64;
-            let padded_side = side.div_ceil(7) * 7;
+            let padded_side = side.div_ceil(w).saturating_mul(w);
             let padded = padded_side * padded_side;
-            // eager residuals per Swin block ~= 12 tensors of [tokens, dim]
-            // plus window-attention probs ~ tokens * 49
-            *slot = 4 * (12 * padded * dim + padded * 49);
+            // eager residuals per Swin block ~= 12 linear tensors on the RAW
+            // token grid; only the window-attention probs live on the padded
+            // grid (~ padded * w^2) — which is why the §4.3 padding
+            // fluctuation stays within 5% of block bytes.
+            *slot = 4 * (12 * tokens * dim + padded * w * w);
             if i < 3 {
                 tokens /= 4;
                 dim *= 2;
@@ -61,10 +77,10 @@ impl SwinSpec {
         for (stage, &depth) in self.depths.iter().enumerate() {
             for blk in 0..depth {
                 let act = per_stage[stage] * batch as u64;
-                layers.push(Layer {
+                layers.push(Stage {
                     id: layers.len(),
                     name: format!("swin.s{stage}.b{blk}"),
-                    kind: LayerKind::Encoder,
+                    kind: StageKind::Encoder,
                     fwd_order: order,
                     act_bytes: act,
                     ckpt_bytes: act / 12, // block input is one of ~12 tensors
@@ -74,7 +90,7 @@ impl SwinSpec {
                 order += 1;
             }
         }
-        ModelProfile { layers, fixed_bytes: 28_000_000 * 16, batch, seqlen: img }
+        ModelProfile::chain(layers, 28_000_000 * 16, batch, img)
     }
 }
 
@@ -116,10 +132,10 @@ impl ResNetSpec {
         let mut layers = Vec::new();
         // Stem: large early activation that breaks the monotone trend.
         let side = (img / 2) as u64;
-        layers.push(Layer {
+        layers.push(Stage {
             id: 0,
             name: "resnet.stem".into(),
-            kind: LayerKind::Embed,
+            kind: StageKind::Embed,
             fwd_order: 0,
             act_bytes: 4 * side * side * 64 * batch as u64,
             ckpt_bytes: 4 * (img as u64) * (img as u64) * 3 * batch as u64,
@@ -130,10 +146,10 @@ impl ResNetSpec {
         for (stage, &depth) in self.depths.iter().enumerate() {
             for blk in 0..depth {
                 let act = per_stage[stage] * batch as u64;
-                layers.push(Layer {
+                layers.push(Stage {
                     id: layers.len(),
                     name: format!("resnet.s{}.b{blk}", stage + 1),
-                    kind: LayerKind::Encoder,
+                    kind: StageKind::Encoder,
                     fwd_order: order,
                     act_bytes: act,
                     ckpt_bytes: act / 3,
@@ -143,7 +159,7 @@ impl ResNetSpec {
                 order += 1;
             }
         }
-        ModelProfile { layers, fixed_bytes: 25_000_000 * 16, batch, seqlen: img }
+        ModelProfile::chain(layers, 25_000_000 * 16, batch, img)
     }
 }
 
@@ -171,6 +187,54 @@ mod tests {
     }
 
     #[test]
+    fn window_padding_fluctuation_within_5_percent() {
+        // The paper's §4.3 claim: padding to the attention window perturbs
+        // block memory by <= 5% of the unpadded amount, across the whole
+        // augmentation range, at the default window. The unpadded reference
+        // keeps the same window-probs shape on the raw grid.
+        let s = SwinSpec::default();
+        let w = s.window as u64;
+        for img in (192..=288).step_by(4) {
+            let padded_bytes = s.stage_block_bytes(img);
+            let mut tokens = ((img / s.patch) * (img / s.patch)) as u64;
+            let mut dim = s.dim as u64;
+            for (stage, &b) in padded_bytes.iter().enumerate() {
+                let unpadded = 4 * (12 * tokens * dim + tokens * w * w);
+                assert!(b >= unpadded, "padding never shrinks memory");
+                let fluct = (b - unpadded) as f64 / unpadded as f64;
+                assert!(fluct <= 0.05, "img {img} stage {stage}: fluctuation {fluct}");
+                if stage < 3 {
+                    tokens /= 4;
+                    dim *= 2;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn window_is_configurable_and_zero_guarded() {
+        let mut s = SwinSpec::default();
+        assert_eq!(s.window, 7, "published Swin family default");
+        s.window = 12;
+        let w12 = s.padded_tokens(224);
+        assert_eq!(w12 % (12 * 12), 0, "grid pads to the configured window");
+        s.window = 0;
+        // zero window must not divide by zero; it degrades to no padding
+        let raw = (224 / s.patch) * (224 / s.patch);
+        assert_eq!(s.padded_tokens(224), raw);
+        // and the byte curve stays finite/positive
+        assert!(s.stage_block_bytes(224).iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn wider_window_pads_more() {
+        let d = SwinSpec::default();
+        let mut wide = SwinSpec::default();
+        wide.window = 16;
+        assert!(wide.padded_tokens(220) >= d.padded_tokens(220));
+    }
+
+    #[test]
     fn resnet_stem_breaks_monotonicity() {
         let r = ResNetSpec::default();
         let p = r.profile(8, 224);
@@ -179,14 +243,15 @@ mod tests {
         let s1 = r.stage_block_bytes(224)[0] as f64;
         let s2 = r.stage_block_bytes(224)[1] as f64;
         let ratio = s2 / s1;
-        assert!(!(0.48..0.52).contains(&ratio) || p.layers[0].act_bytes > 0);
+        assert!(!(0.48..0.52).contains(&ratio) || p.layers()[0].act_bytes > 0);
     }
 
     #[test]
     fn profiles_have_positive_sizes() {
         for p in [SwinSpec::default().profile(4, 224), ResNetSpec::default().profile(4, 224)] {
-            assert!(p.layers.iter().all(|l| l.act_bytes > 0));
+            assert!(p.layers().iter().all(|l| l.act_bytes > 0));
             assert!(p.total_act_bytes() > 0);
+            assert!(p.graph.is_chain(), "staged vision models are chain graphs");
         }
     }
 }

@@ -63,7 +63,7 @@ impl Planner for DtrPlanner {
     fn begin_iteration(&mut self, _input: &InputDesc, profile: &ModelProfile) -> PlanDecision {
         // no a-priori plan: run reactively; pay per-op dispatch tracking
         let tracking_ms =
-            profile.layers.len() as f64 * self.ops_per_layer * self.track_cost_us_per_op / 1e3;
+            profile.layers().len() as f64 * self.ops_per_layer * self.track_cost_us_per_op / 1e3;
         self.planning_ms_total += tracking_ms;
         PlanDecision {
             mode: IterationMode::Reactive,
@@ -124,7 +124,7 @@ mod tests {
     fn reactive_mode() {
         let p = transformer_profile(&ModelSpec::bert_tiny(), 2, 16, 1.0);
         let mut d = DtrPlanner::new();
-        let dec = d.begin_iteration(&InputDesc { batch: 2, seqlen: 16 }, &p);
+        let dec = d.begin_iteration(&InputDesc::new(2, 16), &p);
         assert_eq!(dec.mode, IterationMode::Reactive);
     }
 

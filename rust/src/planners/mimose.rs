@@ -93,15 +93,16 @@ mod tests {
     fn shelter(planner: &mut MimosePlanner, batch: usize, seqs: &[usize]) {
         for &s in seqs {
             let profile = transformer_profile(&spec(), batch, s, 1.0);
-            let input = InputDesc { batch, seqlen: s };
+            let input = InputDesc::new(batch, s);
             let dec = planner.begin_iteration(&input, &profile);
             assert!(matches!(dec.mode, IterationMode::Sheltered(_)));
             let obs: Vec<Observation> = profile
-                .layers
+                .layers()
                 .iter()
                 .map(|l| Observation {
                     layer: l.id,
                     input_size: input.size() as f64,
+                    input_size2: 0.0,
                     act_bytes: l.act_bytes,
                     fwd_ms: l.fwd_flops as f64 / 1e9,
                     self_checkpointed: false,
@@ -124,7 +125,7 @@ mod tests {
         assert!(p.collector().is_frozen());
         // next iteration is responsive
         let profile = transformer_profile(&spec(), 32, 200, 1.0);
-        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 200 }, &profile);
+        let dec = p.begin_iteration(&InputDesc::new(32, 200), &profile);
         assert!(matches!(dec.mode, IterationMode::Planned(_)));
         assert!(p.estimator().is_trained());
     }
@@ -135,8 +136,8 @@ mod tests {
         let mut p = MimosePlanner::new(6 * GIB, 14, MimoseConfig::default());
         shelter(&mut p, 32, &sheltered_seqs(10));
         let profile = transformer_profile(&spec(), 32, 200, 1.0);
-        let _ = p.begin_iteration(&InputDesc { batch: 32, seqlen: 200 }, &profile);
-        for l in &profile.layers {
+        let _ = p.begin_iteration(&InputDesc::new(32, 200), &profile);
+        for l in profile.layers() {
             if l.act_bytes == 0 {
                 continue;
             }
@@ -151,14 +152,14 @@ mod tests {
         let mut p = MimosePlanner::new(5 * GIB, 14, MimoseConfig::default());
         shelter(&mut p, 32, &sheltered_seqs(10));
         let profile = transformer_profile(&spec(), 32, 250, 1.0);
-        let input = InputDesc { batch: 32, seqlen: 250 };
+        let input = InputDesc::new(32, 250);
         let d1 = p.begin_iteration(&input, &profile);
         assert!(!d1.cache_hit);
         let d2 = p.begin_iteration(&input, &profile);
         assert!(d2.cache_hit);
         assert_eq!(p.plans_generated, 1);
         // a size in the same quantisation cell also hits
-        let d3 = p.begin_iteration(&InputDesc { batch: 32, seqlen: 249 }, &profile);
+        let d3 = p.begin_iteration(&InputDesc::new(32, 249), &profile);
         assert!(d3.cache_hit);
     }
 
@@ -168,13 +169,13 @@ mod tests {
         let mut p = MimosePlanner::new(6 * GIB, 14, MimoseConfig::default());
         shelter(&mut p, 32, &sheltered_seqs(10));
         let small_prof = transformer_profile(&spec(), 32, 48, 1.0);
-        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 48 }, &small_prof);
+        let dec = p.begin_iteration(&InputDesc::new(32, 48), &small_prof);
         match dec.mode {
             IterationMode::Planned(plan) => assert!(plan.is_empty(), "small input needs no plan"),
             _ => panic!(),
         }
         let big_prof = transformer_profile(&spec(), 32, 320, 1.0);
-        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 320 }, &big_prof);
+        let dec = p.begin_iteration(&InputDesc::new(32, 320), &big_prof);
         match dec.mode {
             IterationMode::Planned(plan) => {
                 assert!(!plan.is_empty(), "large input must checkpoint under 6 GB")
@@ -189,7 +190,7 @@ mod tests {
         shelter(&mut p, 32, &sheltered_seqs(10));
         for seq in [100, 180, 260, 330] {
             let profile = transformer_profile(&spec(), 32, seq, 1.0);
-            let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: seq }, &profile);
+            let dec = p.begin_iteration(&InputDesc::new(32, seq), &profile);
             if let IterationMode::Planned(plan) = dec.mode {
                 let kept = profile.planned_act_bytes(&plan.ids());
                 let usable = usable_activation_budget(5 * GIB, &profile, GIB / 2);
@@ -210,8 +211,8 @@ mod tests {
         shelter(&mut p, 32, &sheltered_seqs(10));
         let profile = transformer_profile(&spec(), 32, 300, 1.0);
         // warm: train once
-        let _ = p.begin_iteration(&InputDesc { batch: 32, seqlen: 300 }, &profile);
-        let dec = p.begin_iteration(&InputDesc { batch: 32, seqlen: 311 }, &profile);
+        let _ = p.begin_iteration(&InputDesc::new(32, 300), &profile);
+        let dec = p.begin_iteration(&InputDesc::new(32, 311), &profile);
         assert!(dec.planning_ms < 1.0, "planning took {} ms", dec.planning_ms);
     }
 

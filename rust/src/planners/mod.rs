@@ -7,7 +7,10 @@
 //! * `DtrPlanner` — dynamic tensor rematerialisation [24]: reactive greedy
 //!   eviction when OOM fires, h(t) = cost / (mem * staleness).
 //! * `MimosePlanner` — this paper: online collector + quadratic estimator +
-//!   Algorithm 1 scheduler + plan cache.
+//!   graph-aware Algorithm 1 scheduler + plan cache.
+//!
+//! All planners consume the [`crate::model::StageGraph`]-backed
+//! [`ModelProfile`] — chains and branch/join graphs alike.
 
 pub mod dtr;
 pub mod mimose;
@@ -18,20 +21,42 @@ pub use mimose::MimosePlanner;
 use crate::collector::Observation;
 use crate::coordinator::{Coordinator, Phase};
 use crate::memory::{Ledger, TensorId};
-use crate::model::{LayerKind, ModelProfile};
-use crate::scheduler::{greedy_schedule, LayerEst, Plan};
+use crate::model::{InputKey, ModelProfile, StageKind};
+use crate::scheduler::{schedule_graph, Plan, StageEst};
 
-/// One collated mini-batch as the planner sees it.
+/// One collated mini-batch as the planner sees it. `seqlen2` is the
+/// secondary dynamic axis (seq2seq target length); 0 for single-axis tasks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct InputDesc {
     pub batch: usize,
     pub seqlen: usize,
+    pub seqlen2: usize,
 }
 
 impl InputDesc {
-    /// The paper's "input size": elements in the collated input tensor.
+    /// Single-axis input (the classic tasks).
+    pub fn new(batch: usize, seqlen: usize) -> Self {
+        InputDesc { batch, seqlen, seqlen2: 0 }
+    }
+
+    /// Two-axis input: collated (source, target) lengths.
+    pub fn seq2seq(batch: usize, src: usize, tgt: usize) -> Self {
+        InputDesc { batch, seqlen: src, seqlen2: tgt }
+    }
+
+    /// The paper's "input size": elements in the collated input tensor
+    /// (primary axis).
     pub fn size(&self) -> u64 {
         (self.batch * self.seqlen) as u64
+    }
+
+    /// The full input-dynamics feature (both axes).
+    pub fn key(&self) -> InputKey {
+        if self.seqlen2 == 0 {
+            InputKey::d1(self.size())
+        } else {
+            InputKey::d2(self.size(), (self.batch * self.seqlen2) as u64)
+        }
     }
 }
 
@@ -103,18 +128,18 @@ pub trait Planner {
     fn set_budget(&mut self, _budget: u64) {}
 }
 
-/// Layers a plan may checkpoint: everything with positive savings.
-pub fn checkpointable(profile: &ModelProfile) -> Vec<LayerEst> {
+/// Stages a plan may checkpoint: everything non-head with positive
+/// graph-aware savings (branch liveness folded in — on a chain this is the
+/// classic `act - ckpt > 0`). Returned as stage refs with the static
+/// activation bytes as the initial estimate.
+pub fn checkpointable(profile: &ModelProfile) -> Vec<StageEst<'_>> {
     profile
-        .layers
+        .layers()
         .iter()
-        .filter(|l| l.kind != LayerKind::Head && l.savings() > 0)
-        .map(|l| LayerEst {
-            id: l.id,
-            est_bytes: l.act_bytes,
-            ckpt_bytes: l.ckpt_bytes,
-            fwd_order: l.fwd_order,
+        .filter(|s| {
+            s.kind != StageKind::Head && profile.graph.ckpt_savings(s.id, s.act_bytes) > 0
         })
+        .map(|s| StageEst::new(s, s.act_bytes))
         .collect()
 }
 
@@ -167,10 +192,11 @@ impl SublinearPlanner {
         if let Some(p) = &self.plan {
             return p.clone();
         }
-        let layers = checkpointable(&self.max_profile);
+        let est: Vec<u64> =
+            self.max_profile.layers().iter().map(|s| s.act_bytes).collect();
         let usable = usable_activation_budget(self.budget, &self.max_profile, self.reserve);
         let excess = self.max_profile.total_act_bytes().saturating_sub(usable);
-        let plan = greedy_schedule(&layers, excess, 0.10);
+        let plan = schedule_graph(&self.max_profile.graph, &est, excess, 0.10);
         self.plan = Some(plan.clone());
         plan
     }
@@ -203,7 +229,7 @@ impl Planner for SublinearPlanner {
 mod tests {
     use super::*;
     use crate::config::ModelSpec;
-    use crate::model::transformer_profile;
+    use crate::model::{seq2seq_profile, transformer_profile};
     use crate::util::GIB;
 
     fn profiles() -> (ModelProfile, ModelProfile) {
@@ -215,18 +241,28 @@ mod tests {
     fn baseline_never_checkpoints() {
         let (small, _) = profiles();
         let mut b = BaselinePlanner;
-        match b.begin_iteration(&InputDesc { batch: 32, seqlen: 55 }, &small).mode {
+        match b.begin_iteration(&InputDesc::new(32, 55), &small).mode {
             IterationMode::Planned(p) => assert!(p.is_empty()),
             _ => panic!("baseline must be planned"),
         }
     }
 
     #[test]
+    fn input_desc_keys() {
+        let d1 = InputDesc::new(32, 200);
+        assert_eq!(d1.size(), 6400);
+        assert_eq!(d1.key(), InputKey::d1(6400));
+        let d2 = InputDesc::seq2seq(8, 64, 48);
+        assert_eq!(d2.size(), 512);
+        assert_eq!(d2.key(), InputKey::d2(512, 384));
+    }
+
+    #[test]
     fn sublinear_plans_for_max_input_and_reuses() {
         let (small, max) = profiles();
         let mut s = SublinearPlanner::new(3 * GIB, GIB / 2, max.clone());
-        let d1 = s.begin_iteration(&InputDesc { batch: 32, seqlen: 55 }, &small);
-        let d2 = s.begin_iteration(&InputDesc { batch: 32, seqlen: 300 }, &max);
+        let d1 = s.begin_iteration(&InputDesc::new(32, 55), &small);
+        let d2 = s.begin_iteration(&InputDesc::new(32, 300), &max);
         let (p1, p2) = match (d1.mode, d2.mode) {
             (IterationMode::Planned(a), IterationMode::Planned(b)) => (a, b),
             _ => panic!(),
@@ -247,7 +283,7 @@ mod tests {
         let usable = usable_activation_budget(3 * GIB, &small, GIB / 2);
         assert!(small.total_act_bytes() <= usable, "seq 55 fits without checkpointing");
         let mut s = SublinearPlanner::new(3 * GIB, GIB / 2, max);
-        let d = s.begin_iteration(&InputDesc { batch: 32, seqlen: 55 }, &small);
+        let d = s.begin_iteration(&InputDesc::new(32, 55), &small);
         match d.mode {
             IterationMode::Planned(p) => assert!(!p.is_empty(), "sublinear still checkpoints"),
             _ => panic!(),
@@ -258,14 +294,37 @@ mod tests {
     fn checkpointable_excludes_head() {
         let (small, _) = profiles();
         let ls = checkpointable(&small);
-        assert_eq!(ls.len(), small.layers.len() - 1); // head excluded
+        assert_eq!(ls.len(), small.layers().len() - 1); // head excluded
+        assert!(ls.iter().all(|c| c.stage.kind != StageKind::Head));
+    }
+
+    #[test]
+    fn checkpointable_works_on_branching_graphs() {
+        let p = seq2seq_profile(&ModelSpec::s2s_base(), 8, 64, 48);
+        let ls = checkpointable(&p);
+        assert_eq!(ls.len(), p.layers().len() - 1, "everything but the head qualifies");
+    }
+
+    #[test]
+    fn sublinear_handles_graph_profiles() {
+        let max = seq2seq_profile(&ModelSpec::s2s_base(), 24, 400, 400);
+        let mut s = SublinearPlanner::new(4 * GIB, GIB / 2, max.clone());
+        let d = s.begin_iteration(&InputDesc::seq2seq(24, 400, 400), &max);
+        match d.mode {
+            IterationMode::Planned(p) => {
+                assert!(!p.is_empty(), "4 GB must force checkpointing at max seq2seq input");
+                let kept = max.planned_act_bytes(&p.ids());
+                assert!(kept <= usable_activation_budget(4 * GIB, &max, GIB / 2));
+            }
+            _ => panic!(),
+        }
     }
 
     #[test]
     fn sublinear_set_budget_rebuilds_the_static_plan() {
         let (_, max) = profiles();
         let mut s = SublinearPlanner::new(3 * GIB, GIB / 2, max.clone());
-        let input = InputDesc { batch: 32, seqlen: 300 };
+        let input = InputDesc::new(32, 300);
         let d1 = s.begin_iteration(&input, &max);
         // loosening the budget must shrink (or at least re-derive) the plan
         s.set_budget(16 * GIB);

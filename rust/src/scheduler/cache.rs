@@ -1,12 +1,14 @@
 //! Plan caches (paper §5 "responsive execution").
 //!
-//! [`PlanCache`] is the per-job cache: plans are indexed by input size;
-//! similar input sizes (within a relative tolerance) share a plan — "the
-//! memory usages of similar input sizes are similar, and the generated plans
-//! are also similar. Therefore, they can also be the plans of each other."
-//! It can be bounded: under an adversarial input-size stream (every
-//! mini-batch a new quantisation cell) an unbounded cache grows forever, so
-//! a configurable capacity evicts the least-recently-hit entry.
+//! [`PlanCache`] is the per-job cache: plans are indexed by the quantised
+//! [`crate::model::InputKey`] — a two-axis [`SizeKey`] whose secondary axis
+//! is 0 for single-axis workloads; similar input sizes (within a relative
+//! tolerance, per axis) share a plan — "the memory usages of similar input
+//! sizes are similar, and the generated plans are also similar. Therefore,
+//! they can also be the plans of each other." It can be bounded: under an
+//! adversarial input-size stream (every mini-batch a new quantisation cell)
+//! an unbounded cache grows forever, so a configurable capacity evicts the
+//! least-recently-hit entry.
 //!
 //! [`SharedPlanCache`] is the fleet-level cache: entries are scoped by a
 //! *model signature* (architecture + batch) and the planning budget, so
@@ -21,6 +23,11 @@ use crate::config::ModelSpec;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
+
+/// Quantised input-size key: (primary axis, secondary axis). Single-axis
+/// workloads use secondary 0, making every pre-graph cache behaviour a
+/// special case of the two-axis one.
+pub type SizeKey = (u64, u64);
 
 #[derive(Clone, Debug, Default)]
 pub struct CacheStats {
@@ -89,12 +96,18 @@ impl<K: Ord + Copy> LruIndex<K> {
     }
 }
 
+/// Within relative tolerance on one axis; a zero key only matches zero
+/// (a 1-D entry never serves a 2-D probe and vice versa).
+fn axis_near(key: u64, probe: u64, tol: f64) -> bool {
+    key.abs_diff(probe) <= (probe as f64 * tol) as u64
+}
+
 /// Input-size-indexed plan cache with relative-tolerance matching and an
 /// optional capacity (0 = unbounded) with least-recently-hit eviction.
 #[derive(Clone, Debug)]
 pub struct PlanCache {
-    plans: BTreeMap<u64, Plan>,
-    lru: LruIndex<u64>,
+    plans: BTreeMap<SizeKey, Plan>,
+    lru: LruIndex<SizeKey>,
     capacity: usize,
     tolerance: f64,
     stats: CacheStats,
@@ -134,22 +147,26 @@ impl PlanCache {
         self.plans.is_empty()
     }
 
-    /// Look up a plan for `input_size`, accepting any entry whose key is
-    /// within ±tolerance (relative). Nearest key wins.
-    pub fn lookup(&mut self, input_size: u64) -> Option<Plan> {
-        let tol = (input_size as f64 * self.tolerance) as u64;
-        let lo = input_size.saturating_sub(tol);
-        let hi = input_size.saturating_add(tol);
+    /// Look up a plan for a (primary, secondary) input size, accepting any
+    /// entry within ±tolerance (relative) on *each* axis independently —
+    /// a near-match on the source length never excuses a far-off target
+    /// length. Nearest key (primary distance, then secondary) wins.
+    pub fn lookup(&mut self, key: SizeKey) -> Option<Plan> {
+        let (p, s) = key;
+        let ptol = (p as f64 * self.tolerance) as u64;
+        let lo = (p.saturating_sub(ptol), 0u64);
+        let hi = (p.saturating_add(ptol), u64::MAX);
         let best = self
             .plans
             .range(lo..=hi)
-            .min_by_key(|(k, _)| k.abs_diff(input_size))
-            .map(|(k, p)| (*k, p.clone()));
+            .filter(|((_, ks), _)| axis_near(*ks, s, self.tolerance))
+            .min_by_key(|((kp, ks), _)| (kp.abs_diff(p), ks.abs_diff(s)))
+            .map(|(k, plan)| (*k, plan.clone()));
         match best {
-            Some((k, p)) => {
+            Some((k, plan)) => {
                 self.stats.hits += 1;
                 self.lru.touch(k);
-                Some(p)
+                Some(plan)
             }
             None => {
                 self.stats.misses += 1;
@@ -158,8 +175,13 @@ impl PlanCache {
         }
     }
 
+    /// 1-D convenience over [`PlanCache::lookup`] (secondary axis 0).
+    pub fn lookup1(&mut self, input_size: u64) -> Option<Plan> {
+        self.lookup((input_size, 0))
+    }
+
     /// Exact-key lookup (used with pre-quantised plan sizes).
-    pub fn lookup_exact(&mut self, key: u64) -> Option<Plan> {
+    pub fn lookup_exact(&mut self, key: SizeKey) -> Option<Plan> {
         match self.plans.get(&key).cloned() {
             Some(p) => {
                 self.stats.hits += 1;
@@ -173,16 +195,16 @@ impl PlanCache {
         }
     }
 
-    pub fn insert(&mut self, input_size: u64, plan: Plan) {
-        let novel = !self.plans.contains_key(&input_size);
+    pub fn insert(&mut self, key: SizeKey, plan: Plan) {
+        let novel = !self.plans.contains_key(&key);
         if novel && self.capacity > 0 && self.plans.len() >= self.capacity {
             if let Some(victim) = self.lru.pop_lru() {
                 self.plans.remove(&victim);
                 self.stats.evictions += 1;
             }
         }
-        self.plans.insert(input_size, plan);
-        self.lru.touch(input_size);
+        self.plans.insert(key, plan);
+        self.lru.touch(key);
     }
 
     /// Invalidate everything (e.g. budget changed). Stats survive.
@@ -212,6 +234,7 @@ pub fn model_signature(spec: &ModelSpec, batch: usize, act_factor: f64) -> u64 {
     eat(spec.vocab as u64);
     eat(spec.hidden as u64);
     eat(spec.layers as u64);
+    eat(spec.decoder_layers as u64);
     eat(spec.heads as u64);
     eat(spec.ffn as u64);
     eat(spec.max_seq as u64);
@@ -220,10 +243,10 @@ pub fn model_signature(spec: &ModelSpec, batch: usize, act_factor: f64) -> u64 {
     h
 }
 
-type SharedKey = (u64, u64, u64); // (signature, quantised size, budget)
+type SharedKey = (u64, u64, u64, u64); // (signature, primary, secondary, budget)
 
-/// Fleet-wide plan cache keyed by (model signature, input size, budget),
-/// bounded with least-recently-hit eviction like [`PlanCache`].
+/// Fleet-wide plan cache keyed by (model signature, quantised input key,
+/// budget), bounded with least-recently-hit eviction like [`PlanCache`].
 #[derive(Debug)]
 pub struct SharedPlanCache {
     entries: BTreeMap<SharedKey, Plan>,
@@ -267,9 +290,9 @@ impl SharedPlanCache {
     /// entry planned with a budget `<= budget` is conservative (checkpoints
     /// at least as much), so it is safe for this tenant; the largest
     /// qualifying budget (least conservative) wins.
-    pub fn lookup(&mut self, signature: u64, size: u64, budget: u64) -> Option<Plan> {
-        let lo = (signature, size, 0u64);
-        let hi = (signature, size, budget);
+    pub fn lookup(&mut self, signature: u64, size: SizeKey, budget: u64) -> Option<Plan> {
+        let lo = (signature, size.0, size.1, 0u64);
+        let hi = (signature, size.0, size.1, budget);
         let found = self
             .entries
             .range(lo..=hi)
@@ -288,8 +311,8 @@ impl SharedPlanCache {
         }
     }
 
-    pub fn insert(&mut self, signature: u64, size: u64, budget: u64, plan: Plan) {
-        let key = (signature, size, budget);
+    pub fn insert(&mut self, signature: u64, size: SizeKey, budget: u64, plan: Plan) {
+        let key = (signature, size.0, size.1, budget);
         let novel = !self.entries.contains_key(&key);
         if novel && self.capacity > 0 && self.entries.len() >= self.capacity {
             if let Some(victim) = self.lru.pop_lru() {
@@ -303,8 +326,8 @@ impl SharedPlanCache {
 
     /// Drop one entry — a tenant invalidating a plan it contributed (e.g.
     /// its estimator is about to be retrained after a reshelter).
-    pub fn remove(&mut self, signature: u64, size: u64, budget: u64) {
-        let key = (signature, size, budget);
+    pub fn remove(&mut self, signature: u64, size: SizeKey, budget: u64) {
+        let key = (signature, size.0, size.1, budget);
         if self.entries.remove(&key).is_some() {
             self.lru.remove(&key);
         }
@@ -324,18 +347,18 @@ mod tests {
     #[test]
     fn exact_hit() {
         let mut c = PlanCache::new(0.05);
-        c.insert(1000, Plan::of([1, 2]));
-        assert_eq!(c.lookup(1000), Some(Plan::of([1, 2])));
+        c.insert((1000, 0), Plan::of([1, 2]));
+        assert_eq!(c.lookup1(1000), Some(Plan::of([1, 2])));
         assert_eq!(c.stats().hits, 1);
     }
 
     #[test]
     fn tolerant_hit_within_5_percent() {
         let mut c = PlanCache::new(0.05);
-        c.insert(1000, Plan::of([3]));
-        assert!(c.lookup(1040).is_some());
-        assert!(c.lookup(960).is_some());
-        assert!(c.lookup(1100).is_none());
+        c.insert((1000, 0), Plan::of([3]));
+        assert!(c.lookup1(1040).is_some());
+        assert!(c.lookup1(960).is_some());
+        assert!(c.lookup1(1100).is_none());
         assert_eq!(c.stats().misses, 1);
     }
 
@@ -345,9 +368,9 @@ mod tests {
         // probe + floor(0.05*probe)]. For key 1000: probe 1052 still spans
         // down to 1000 (tol 52); probe 1053 bottoms out at 1001 — miss.
         let mut c = PlanCache::new(0.05);
-        c.insert(1000, Plan::of([1]));
-        assert!(c.lookup(1052).is_some(), "probe 1052 reaches key 1000");
-        assert!(c.lookup(1053).is_none(), "probe 1053 is just outside");
+        c.insert((1000, 0), Plan::of([1]));
+        assert!(c.lookup1(1052).is_some(), "probe 1052 reaches key 1000");
+        assert!(c.lookup1(1053).is_none(), "probe 1053 is just outside");
         assert_eq!(c.stats().hits, 1);
         assert_eq!(c.stats().misses, 1);
     }
@@ -357,18 +380,70 @@ mod tests {
         // From below, probe 953 (tol 47) tops out exactly at 1000 — hit;
         // probe 952 tops out at 999 — miss.
         let mut c = PlanCache::new(0.05);
-        c.insert(1000, Plan::of([1]));
-        assert!(c.lookup(953).is_some(), "probe 953 reaches key 1000");
-        assert!(c.lookup(952).is_none(), "probe 952 is just outside");
+        c.insert((1000, 0), Plan::of([1]));
+        assert!(c.lookup1(953).is_some(), "probe 953 reaches key 1000");
+        assert!(c.lookup1(952).is_none(), "probe 952 is just outside");
+    }
+
+    // ---- 2-D InputKey quantisation boundaries ----
+
+    #[test]
+    fn secondary_axis_has_its_own_tolerance_window() {
+        // A near-match on the primary axis must NOT excuse a secondary axis
+        // outside its own ±5% window (seq2seq: same src, very different tgt).
+        let mut c = PlanCache::new(0.05);
+        c.insert((1000, 800), Plan::of([7]));
+        assert!(c.lookup((1000, 800)).is_some(), "exact 2-D hit");
+        assert!(c.lookup((1000, 840)).is_some(), "tgt within 5%");
+        assert!(c.lookup((1010, 790)).is_some(), "both axes within 5%");
+        assert!(c.lookup((1000, 900)).is_none(), "tgt 12.5% off: miss");
+        assert!(c.lookup((1200, 800)).is_none(), "src 20% off: miss");
+    }
+
+    #[test]
+    fn secondary_tolerance_boundary_exact() {
+        // Same boundary arithmetic as the primary axis, independently:
+        // probe tgt 840 has tol floor(0.05*840)=42, reaching down to 798;
+        // probe 842 has tol 42, bottoming at 800 — hit; 843 floors at 801.
+        let mut c = PlanCache::new(0.05);
+        c.insert((1000, 800), Plan::of([1]));
+        assert!(c.lookup((1000, 842)).is_some(), "tgt 842 reaches key 800");
+        assert!(c.lookup((1000, 843)).is_none(), "tgt 843 is just outside");
+        // from below: probe 762 tops out at 800 (tol 38); 761 tops at 799
+        assert!(c.lookup((1000, 762)).is_some());
+        assert!(c.lookup((1000, 761)).is_none());
+    }
+
+    #[test]
+    fn one_d_and_two_d_entries_never_mix() {
+        // secondary 0 marks a single-axis plan; a 2-D probe must not reuse
+        // it (and vice versa) — the decoder axis was never planned for.
+        let mut c = PlanCache::new(0.05);
+        c.insert((1000, 0), Plan::of([1]));
+        c.insert((1000, 500), Plan::of([2]));
+        assert_eq!(c.lookup((1000, 0)), Some(Plan::of([1])));
+        assert_eq!(c.lookup((1000, 500)), Some(Plan::of([2])));
+        assert!(c.lookup((1000, 20)).is_none(), "small tgt never matches the 1-D entry");
+    }
+
+    #[test]
+    fn nearest_two_d_key_wins() {
+        let mut c = PlanCache::new(0.10);
+        c.insert((1000, 500), Plan::of([1]));
+        c.insert((1000, 530), Plan::of([2]));
+        assert_eq!(c.lookup((1000, 525)), Some(Plan::of([2])));
+        c.insert((1080, 500), Plan::of([3]));
+        // primary distance dominates the nearest choice
+        assert_eq!(c.lookup((1070, 505)), Some(Plan::of([3])));
     }
 
     #[test]
     fn lookup_exact_requires_exact_key() {
         let mut c = PlanCache::new(0.05);
-        c.insert(1000, Plan::of([4]));
-        assert_eq!(c.lookup_exact(1000), Some(Plan::of([4])));
-        assert!(c.lookup_exact(1001).is_none(), "no tolerance on the exact path");
-        assert!(c.lookup_exact(999).is_none());
+        c.insert((1000, 0), Plan::of([4]));
+        assert_eq!(c.lookup_exact((1000, 0)), Some(Plan::of([4])));
+        assert!(c.lookup_exact((1001, 0)).is_none(), "no tolerance on the exact path");
+        assert!(c.lookup_exact((1000, 1)).is_none(), "secondary axis is part of the key");
         assert_eq!(c.stats().hits, 1);
         assert_eq!(c.stats().misses, 2);
     }
@@ -377,12 +452,12 @@ mod tests {
     fn stats_accounting_and_hit_rate() {
         let mut c = PlanCache::new(0.05);
         assert_eq!(c.stats().hit_rate(), 0.0, "empty stats are a 0 rate, not NaN");
-        c.insert(1000, Plan::none());
-        let _ = c.lookup(1000); // hit
-        let _ = c.lookup(1010); // hit (within 5%)
-        let _ = c.lookup(2000); // miss
-        let _ = c.lookup_exact(1000); // hit
-        let _ = c.lookup_exact(1200); // miss
+        c.insert((1000, 0), Plan::none());
+        let _ = c.lookup1(1000); // hit
+        let _ = c.lookup1(1010); // hit (within 5%)
+        let _ = c.lookup1(2000); // miss
+        let _ = c.lookup_exact((1000, 0)); // hit
+        let _ = c.lookup_exact((1200, 0)); // miss
         assert_eq!(c.stats().hits, 3);
         assert_eq!(c.stats().misses, 2);
         assert!((c.stats().hit_rate() - 0.6).abs() < 1e-12);
@@ -391,34 +466,34 @@ mod tests {
     #[test]
     fn insert_same_key_overwrites() {
         let mut c = PlanCache::new(0.05);
-        c.insert(500, Plan::of([1]));
-        c.insert(500, Plan::of([2]));
+        c.insert((500, 0), Plan::of([1]));
+        c.insert((500, 0), Plan::of([2]));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.lookup_exact(500), Some(Plan::of([2])));
+        assert_eq!(c.lookup_exact((500, 0)), Some(Plan::of([2])));
     }
 
     #[test]
     fn zero_tolerance_only_hits_exact() {
         let mut c = PlanCache::new(0.0);
-        c.insert(1000, Plan::of([9]));
-        assert!(c.lookup(1000).is_some());
-        assert!(c.lookup(1001).is_none());
-        assert!(c.lookup(999).is_none());
+        c.insert((1000, 0), Plan::of([9]));
+        assert!(c.lookup1(1000).is_some());
+        assert!(c.lookup1(1001).is_none());
+        assert!(c.lookup1(999).is_none());
     }
 
     #[test]
     fn nearest_key_wins() {
         let mut c = PlanCache::new(0.10);
-        c.insert(1000, Plan::of([1]));
-        c.insert(1080, Plan::of([2]));
-        assert_eq!(c.lookup(1070), Some(Plan::of([2])));
+        c.insert((1000, 0), Plan::of([1]));
+        c.insert((1080, 0), Plan::of([2]));
+        assert_eq!(c.lookup1(1070), Some(Plan::of([2])));
     }
 
     #[test]
     fn clear_resets_entries_not_stats() {
         let mut c = PlanCache::new(0.05);
-        c.insert(10, Plan::none());
-        let _ = c.lookup(10);
+        c.insert((10, 0), Plan::none());
+        let _ = c.lookup1(10);
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.stats().hits, 1);
@@ -427,26 +502,26 @@ mod tests {
     #[test]
     fn capacity_evicts_least_recently_hit() {
         let mut c = PlanCache::with_capacity(0.0, 2);
-        c.insert(100, Plan::of([1]));
-        c.insert(200, Plan::of([2]));
-        let _ = c.lookup_exact(100); // 100 is now fresher than 200
-        c.insert(300, Plan::of([3]));
+        c.insert((100, 0), Plan::of([1]));
+        c.insert((200, 0), Plan::of([2]));
+        let _ = c.lookup_exact((100, 0)); // 100 is now fresher than 200
+        c.insert((300, 0), Plan::of([3]));
         assert_eq!(c.len(), 2);
-        assert!(c.lookup_exact(200).is_none(), "LRU entry 200 evicted");
-        assert!(c.lookup_exact(100).is_some());
-        assert!(c.lookup_exact(300).is_some());
+        assert!(c.lookup_exact((200, 0)).is_none(), "LRU entry 200 evicted");
+        assert!(c.lookup_exact((100, 0)).is_some());
+        assert!(c.lookup_exact((300, 0)).is_some());
         assert_eq!(c.stats().evictions, 1);
     }
 
     #[test]
     fn overwrite_at_capacity_does_not_evict() {
         let mut c = PlanCache::with_capacity(0.0, 2);
-        c.insert(100, Plan::of([1]));
-        c.insert(200, Plan::of([2]));
-        c.insert(100, Plan::of([9])); // same key: update, no eviction
+        c.insert((100, 0), Plan::of([1]));
+        c.insert((200, 0), Plan::of([2]));
+        c.insert((100, 0), Plan::of([9])); // same key: update, no eviction
         assert_eq!(c.len(), 2);
         assert_eq!(c.stats().evictions, 0);
-        assert_eq!(c.lookup_exact(100), Some(Plan::of([9])));
+        assert_eq!(c.lookup_exact((100, 0)), Some(Plan::of([9])));
     }
 
     #[test]
@@ -455,14 +530,14 @@ mod tests {
         // hold 1000 entries; the bound must hold at 8 with 992 evictions.
         let mut c = PlanCache::with_capacity(0.05, 8);
         for i in 0..1000u64 {
-            c.insert(10_000 + i * 7919, Plan::of([i as usize]));
+            c.insert((10_000 + i * 7919, 0), Plan::of([i as usize]));
             assert!(c.len() <= 8, "capacity exceeded at insert {i}");
         }
         assert_eq!(c.len(), 8);
         assert_eq!(c.stats().evictions, 992);
         // the 8 most recent survive
         for i in 992..1000u64 {
-            assert!(c.lookup_exact(10_000 + i * 7919).is_some(), "entry {i} missing");
+            assert!(c.lookup_exact((10_000 + i * 7919, 0)).is_some(), "entry {i} missing");
         }
     }
 
@@ -470,7 +545,7 @@ mod tests {
     fn zero_capacity_means_unbounded() {
         let mut c = PlanCache::new(0.05);
         for i in 0..500u64 {
-            c.insert(1_000_000 + i * 997, Plan::none());
+            c.insert((1_000_000 + i * 997, 0), Plan::none());
         }
         assert_eq!(c.len(), 500);
         assert_eq!(c.stats().evictions, 0);
@@ -489,9 +564,9 @@ mod tests {
             |(keys, probe)| {
                 let mut c = PlanCache::new(0.05);
                 for &k in keys {
-                    c.insert(k as u64, Plan::of([k]));
+                    c.insert((k as u64, 0), Plan::of([k]));
                 }
-                if let Some(plan) = c.lookup(*probe as u64) {
+                if let Some(plan) = c.lookup1(*probe as u64) {
                     let id = *plan.ids().first().unwrap();
                     let rel = (id as f64 - *probe as f64).abs() / *probe as f64;
                     ensure(rel <= 0.051, &format!("hit key {id} for probe {probe}: rel {rel}"))
@@ -500,6 +575,45 @@ mod tests {
                     for &k in keys {
                         let rel = (k as f64 - *probe as f64).abs() / *probe as f64;
                         ensure(rel > 0.05, &format!("missed key {k} within tol of {probe}"))?;
+                    }
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_two_d_hit_implies_both_axes_within_tolerance() {
+        forall(
+            29,
+            200,
+            |r| {
+                let keys: Vec<(usize, usize)> = (0..r.range_u(1, 10))
+                    .map(|_| (r.range_u(100, 10_000), r.range_u(100, 10_000)))
+                    .collect();
+                (keys, r.range_u(100, 10_000), r.range_u(100, 10_000))
+            },
+            |(keys, pp, ps)| {
+                let mut c = PlanCache::new(0.05);
+                for (i, &(kp, ks)) in keys.iter().enumerate() {
+                    c.insert((kp as u64, ks as u64), Plan::of([i]));
+                }
+                if let Some(plan) = c.lookup((*pp as u64, *ps as u64)) {
+                    let (kp, ks) = keys[*plan.ids().first().unwrap()];
+                    let rp = (kp as f64 - *pp as f64).abs() / *pp as f64;
+                    let rs = (ks as f64 - *ps as f64).abs() / *ps as f64;
+                    ensure(
+                        rp <= 0.051 && rs <= 0.051,
+                        &format!("hit ({kp},{ks}) for probe ({pp},{ps}): rel ({rp},{rs})"),
+                    )
+                } else {
+                    for &(kp, ks) in keys {
+                        let rp = (kp as f64 - *pp as f64).abs() / *pp as f64;
+                        let rs = (ks as f64 - *ps as f64).abs() / *ps as f64;
+                        ensure(
+                            rp > 0.05 || rs > 0.05,
+                            &format!("missed ({kp},{ks}) within tol of ({pp},{ps})"),
+                        )?;
                     }
                     Ok(())
                 }
@@ -519,15 +633,20 @@ mod tests {
         // same spec+batch but wider residuals (two-stream attention) must
         // NOT exchange plans — the 1.0 tenant's plan under-checkpoints
         assert_ne!(model_signature(&bert, 32, 1.0), model_signature(&bert, 32, 1.15));
+        // an encoder-decoder with the same encoder trunk is a different model
+        let mut s2s = bert.clone();
+        s2s.decoder_layers = 6;
+        assert_ne!(model_signature(&bert, 32, 1.0), model_signature(&s2s, 32, 1.0));
     }
 
     #[test]
     fn shared_reuse_requires_same_signature() {
         let mut c = SharedPlanCache::new(0);
-        c.insert(1, 9600, 6_000, Plan::of([1, 2]));
-        assert_eq!(c.lookup(1, 9600, 6_000), Some(Plan::of([1, 2])));
-        assert!(c.lookup(2, 9600, 6_000).is_none(), "other signature isolated");
-        assert!(c.lookup(1, 9601, 6_000).is_none(), "other size isolated");
+        c.insert(1, (9600, 0), 6_000, Plan::of([1, 2]));
+        assert_eq!(c.lookup(1, (9600, 0), 6_000), Some(Plan::of([1, 2])));
+        assert!(c.lookup(2, (9600, 0), 6_000).is_none(), "other signature isolated");
+        assert!(c.lookup(1, (9601, 0), 6_000).is_none(), "other size isolated");
+        assert!(c.lookup(1, (9600, 64), 6_000).is_none(), "other secondary axis isolated");
     }
 
     #[test]
@@ -535,31 +654,31 @@ mod tests {
         // a plan from a tighter budget is safe for a looser one, never the
         // other way around
         let mut c = SharedPlanCache::new(0);
-        c.insert(7, 9600, 5_000, Plan::of([1, 2, 3]));
-        assert!(c.lookup(7, 9600, 6_000).is_some(), "tighter-budget plan reused");
-        assert!(c.lookup(7, 9600, 5_000).is_some(), "equal budget reused");
-        assert!(c.lookup(7, 9600, 4_999).is_none(), "looser-budget plan refused");
+        c.insert(7, (9600, 0), 5_000, Plan::of([1, 2, 3]));
+        assert!(c.lookup(7, (9600, 0), 6_000).is_some(), "tighter-budget plan reused");
+        assert!(c.lookup(7, (9600, 0), 5_000).is_some(), "equal budget reused");
+        assert!(c.lookup(7, (9600, 0), 4_999).is_none(), "looser-budget plan refused");
     }
 
     #[test]
     fn shared_nearest_qualifying_budget_wins() {
         let mut c = SharedPlanCache::new(0);
-        c.insert(7, 9600, 4_000, Plan::of([1, 2, 3, 4]));
-        c.insert(7, 9600, 5_000, Plan::of([1, 2]));
-        assert_eq!(c.lookup(7, 9600, 6_000), Some(Plan::of([1, 2])), "least conservative");
-        assert_eq!(c.lookup(7, 9600, 4_500), Some(Plan::of([1, 2, 3, 4])));
+        c.insert(7, (9600, 0), 4_000, Plan::of([1, 2, 3, 4]));
+        c.insert(7, (9600, 0), 5_000, Plan::of([1, 2]));
+        assert_eq!(c.lookup(7, (9600, 0), 6_000), Some(Plan::of([1, 2])), "least conservative");
+        assert_eq!(c.lookup(7, (9600, 0), 4_500), Some(Plan::of([1, 2, 3, 4])));
     }
 
     #[test]
     fn shared_capacity_evicts_lru() {
         let mut c = SharedPlanCache::new(2);
-        c.insert(1, 100, 10, Plan::of([1]));
-        c.insert(1, 200, 10, Plan::of([2]));
-        let _ = c.lookup(1, 100, 10); // freshen (1,100,10)
-        c.insert(1, 300, 10, Plan::of([3]));
+        c.insert(1, (100, 0), 10, Plan::of([1]));
+        c.insert(1, (200, 0), 10, Plan::of([2]));
+        let _ = c.lookup(1, (100, 0), 10); // freshen
+        c.insert(1, (300, 0), 10, Plan::of([3]));
         assert_eq!(c.len(), 2);
-        assert!(c.lookup(1, 200, 10).is_none());
-        assert!(c.lookup(1, 100, 10).is_some());
+        assert!(c.lookup(1, (200, 0), 10).is_none());
+        assert!(c.lookup(1, (100, 0), 10).is_some());
         assert_eq!(c.stats().evictions, 1);
     }
 
@@ -567,7 +686,17 @@ mod tests {
     fn shared_handle_is_shareable() {
         let h = shared_plan_cache(4);
         let h2 = h.clone();
-        h.borrow_mut().insert(1, 50, 10, Plan::of([5]));
-        assert_eq!(h2.borrow_mut().lookup(1, 50, 10), Some(Plan::of([5])));
+        h.borrow_mut().insert(1, (50, 0), 10, Plan::of([5]));
+        assert_eq!(h2.borrow_mut().lookup(1, (50, 0), 10), Some(Plan::of([5])));
+    }
+
+    #[test]
+    fn shared_remove_targets_one_entry() {
+        let mut c = SharedPlanCache::new(0);
+        c.insert(1, (100, 50), 10, Plan::of([1]));
+        c.insert(1, (100, 60), 10, Plan::of([2]));
+        c.remove(1, (100, 50), 10);
+        assert!(c.lookup(1, (100, 50), 10).is_none());
+        assert!(c.lookup(1, (100, 60), 10).is_some());
     }
 }

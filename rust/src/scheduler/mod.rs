@@ -1,22 +1,35 @@
 //! The responsive memory scheduler (paper §4.4, Algorithm 1) and its plan
 //! cache (§5).
 //!
-//! Given per-layer estimated activation bytes for the current input, the
-//! scheduler greedily selects layers to checkpoint until the estimated
-//! excess over the budget is covered. Layers with similar size (±10%) form
-//! buckets ordered by forward timestamp — earlier layers are preferred
-//! because restoring an early layer happens late in the backward pass, when
-//! most activations are already freed (Fig 11).
+//! Given per-stage estimated activation bytes for the current input, the
+//! scheduler greedily selects stages to checkpoint until the estimated
+//! excess over the budget is covered. Stages with similar size (±10%) form
+//! buckets ordered by forward timestamp — earlier stages are preferred
+//! because restoring an early stage happens late in the backward pass, when
+//! most activations are already freed (Fig 11). Equal timestamps (parallel
+//! branches) break ties by recompute FLOPs, cheapest first (cost-aware,
+//! Beaumont-style).
+//!
+//! Two entry points share one core implementation:
+//! * [`greedy_schedule`] — the chain reference path over [`StageEst`]s
+//!   (stage refs + estimated bytes; the pre-graph `LayerEst` mirror struct
+//!   is gone — savings come from the single impl on `Stage`);
+//! * [`schedule_graph`] — the graph path: candidates come from a
+//!   [`StageGraph`], with branch liveness folded into savings (a stage
+//!   whose kept input is a branch-point output shared with a live sibling
+//!   branch frees its *full* residual set). On a chain-shaped graph it is
+//!   bit-identical to `greedy_schedule` (pinned by `tests/stage_graph.rs`).
 
 pub mod cache;
 
 pub use cache::{
-    model_signature, shared_plan_cache, PlanCache, SharedCacheHandle, SharedPlanCache,
+    model_signature, shared_plan_cache, PlanCache, SharedCacheHandle, SharedPlanCache, SizeKey,
 };
 
+use crate::model::{Stage, StageGraph, StageKind};
 use std::collections::BTreeSet;
 
-/// A checkpointing plan: which layer ids to drop + recompute.
+/// A checkpointing plan: which stage ids to drop + recompute.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Plan {
     pub checkpointed: BTreeSet<usize>,
@@ -48,39 +61,69 @@ impl Plan {
     }
 }
 
-/// Scheduler input: one checkpointable layer.
+/// Scheduler input: one checkpointable stage (borrowed from the profile's
+/// graph) plus its estimator-predicted bytes-if-kept. Replaces the old
+/// `LayerEst` hand-copied mirror struct — static metadata reads through the
+/// stage ref, and savings delegate to the single `Stage::savings_at` impl.
 #[derive(Clone, Copy, Debug)]
-pub struct LayerEst {
-    pub id: usize,
-    /// Estimated activation bytes if kept.
+pub struct StageEst<'a> {
+    pub stage: &'a Stage,
+    /// Estimated activation bytes if kept (estimator output; the static
+    /// `act_bytes` when planning without an estimator).
     pub est_bytes: u64,
-    /// Bytes that remain even when checkpointed (block input).
-    pub ckpt_bytes: u64,
-    /// Forward timestamp (execution order).
-    pub fwd_order: usize,
 }
 
-impl LayerEst {
+impl<'a> StageEst<'a> {
+    pub fn new(stage: &'a Stage, est_bytes: u64) -> Self {
+        StageEst { stage, est_bytes }
+    }
+
+    pub fn id(&self) -> usize {
+        self.stage.id
+    }
+
+    pub fn fwd_order(&self) -> usize {
+        self.stage.fwd_order
+    }
+
+    /// Bytes freed by checkpointing — the single savings impl on `Stage`.
     pub fn savings(&self) -> u64 {
-        self.est_bytes.saturating_sub(self.ckpt_bytes)
+        self.stage.savings_at(self.est_bytes)
     }
 }
 
-/// Algorithm 1. `excess` is the estimated amount by which total activation
-/// bytes exceed the usable budget. Returns the set of layers to checkpoint.
+/// One scheduling candidate, normalised so the chain and graph paths run
+/// the exact same core.
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    id: usize,
+    est_bytes: u64,
+    savings: u64,
+    fwd_order: usize,
+    fwd_flops: u64,
+}
+
+/// Algorithm 1 over normalised candidates. `excess` is the estimated amount
+/// by which total activation bytes exceed the usable budget.
 ///
 /// Deviations from the listing: we cover `excess` with *savings*
-/// (act - ckpt_input) rather than raw activation size, since checkpointing a
-/// layer still retains its input — the paper's implementation (module-level
+/// (act - kept input) rather than raw activation size, since checkpointing a
+/// stage still retains its input — the paper's implementation (module-level
 /// torch.utils.checkpoint) has the same semantics.
-pub fn greedy_schedule(layers: &[LayerEst], excess: u64, bucket_tol: f64) -> Plan {
+fn greedy_core(candidates: &[Candidate], excess: u64, bucket_tol: f64) -> Plan {
     if excess == 0 {
         return Plan::none();
     }
     // ---- bucketisation (lines 2-14) ----
-    let mut sorted: Vec<&LayerEst> = layers.iter().filter(|l| l.savings() > 0).collect();
-    sorted.sort_by(|a, b| b.est_bytes.cmp(&a.est_bytes).then(a.fwd_order.cmp(&b.fwd_order)));
-    let mut buckets: Vec<Vec<&LayerEst>> = Vec::new();
+    let mut sorted: Vec<&Candidate> = candidates.iter().filter(|c| c.savings > 0).collect();
+    sorted.sort_by(|a, b| {
+        b.est_bytes
+            .cmp(&a.est_bytes)
+            .then(a.fwd_order.cmp(&b.fwd_order))
+            .then(a.fwd_flops.cmp(&b.fwd_flops))
+            .then(a.id.cmp(&b.id))
+    });
+    let mut buckets: Vec<Vec<&Candidate>> = Vec::new();
     let mut i = 0;
     while i < sorted.len() {
         let head = sorted[i].est_bytes as f64;
@@ -90,8 +133,9 @@ pub fn greedy_schedule(layers: &[LayerEst], excess: u64, bucket_tol: f64) -> Pla
             bucket.push(sorted[j]);
             j += 1;
         }
-        // within a bucket: earliest forward timestamp first (line 12)
-        bucket.sort_by_key(|l| l.fwd_order);
+        // within a bucket: earliest forward timestamp first (line 12);
+        // parallel-branch timestamp ties go to the cheapest recompute
+        bucket.sort_by_key(|c| (c.fwd_order, c.fwd_flops, c.id));
         buckets.push(bucket);
         i = j;
     }
@@ -105,42 +149,77 @@ pub fn greedy_schedule(layers: &[LayerEst], excess: u64, bucket_tol: f64) -> Pla
             .iter()
             .enumerate()
             .filter(|(_, b)| !b.is_empty())
-            .filter(|(_, b)| b.iter().map(|l| l.savings()).max().unwrap_or(0) as i64 >= excess)
+            .filter(|(_, b)| b.iter().map(|c| c.savings).max().unwrap_or(0) as i64 >= excess)
             // nearest above the excess = smallest qualifying bucket
-            .min_by_key(|(_, b)| b.iter().map(|l| l.savings()).max().unwrap_or(0));
+            .min_by_key(|(_, b)| b.iter().map(|c| c.savings).max().unwrap_or(0));
         let bucket_idx = match candidate {
             Some((bi, _)) => bi,
             None => {
-                // no single layer covers the excess: take the largest (line 19)
+                // no single stage covers the excess: take the largest (line 19)
                 match buckets.iter().position(|b| !b.is_empty()) {
                     Some(bi) => bi,
                     None => break, // nothing left to checkpoint
                 }
             }
         };
-        let l = buckets[bucket_idx].remove(0); // earliest timestamp in bucket
-        excess -= l.savings() as i64;
-        plan.checkpointed.insert(l.id);
+        let c = buckets[bucket_idx].remove(0); // earliest timestamp in bucket
+        excess -= c.savings as i64;
+        plan.checkpointed.insert(c.id);
     }
     plan
 }
 
-/// Convenience: build `LayerEst`s from estimator output + static metadata.
-pub fn layer_estimates(
-    ids: &[usize],
-    est_bytes: &[f64],
-    ckpt_bytes: &[u64],
-    fwd_order: &[usize],
-) -> Vec<LayerEst> {
-    ids.iter()
-        .enumerate()
-        .map(|(i, &id)| LayerEst {
-            id,
-            est_bytes: est_bytes[i].max(0.0) as u64,
-            ckpt_bytes: ckpt_bytes[i],
-            fwd_order: fwd_order[i],
+/// Algorithm 1 over explicit stage estimates — the chain reference path
+/// (kept both for callers that pre-filter via `planners::checkpointable`
+/// and as the baseline the chain-differential tests pin `schedule_graph`
+/// against).
+pub fn greedy_schedule(stages: &[StageEst], excess: u64, bucket_tol: f64) -> Plan {
+    let candidates: Vec<Candidate> = stages
+        .iter()
+        .map(|s| Candidate {
+            id: s.id(),
+            est_bytes: s.est_bytes,
+            savings: s.savings(),
+            fwd_order: s.fwd_order(),
+            fwd_flops: s.stage.fwd_flops,
         })
-        .collect()
+        .collect();
+    greedy_core(&candidates, excess, bucket_tol)
+}
+
+/// Algorithm 1 generalised to a [`StageGraph`]: the branch-aware,
+/// cost-aware planning path every Coordinator plan goes through.
+///
+/// `est_bytes[id]` is the estimated bytes-if-kept for stage `id`
+/// (`est_bytes.len() == graph.len()`). Differences from the chain path,
+/// both vanishing on chain-shaped graphs:
+///
+/// * **branch liveness** — savings use the graph's *marginal* kept input:
+///   a stage whose inputs are all branch-point outputs (alive anyway for a
+///   sibling branch until the join) frees its full residual set;
+/// * **cost-aware ties** — stages on parallel branches can share a forward
+///   timestamp; the bucket order then prefers the cheaper recompute
+///   (fewer forward FLOPs), Beaumont-style, instead of an arbitrary pick.
+///
+/// Head stages and stages with no static savings are not candidates
+/// (mirroring `planners::checkpointable`).
+pub fn schedule_graph(graph: &StageGraph, est_bytes: &[u64], excess: u64, bucket_tol: f64) -> Plan {
+    assert_eq!(est_bytes.len(), graph.len(), "one estimate per stage");
+    let candidates: Vec<Candidate> = graph
+        .stages()
+        .iter()
+        .filter(|s| {
+            s.kind != StageKind::Head && graph.ckpt_savings(s.id, s.act_bytes) > 0
+        })
+        .map(|s| Candidate {
+            id: s.id,
+            est_bytes: est_bytes[s.id],
+            savings: graph.ckpt_savings(s.id, est_bytes[s.id]),
+            fwd_order: s.fwd_order,
+            fwd_flops: s.fwd_flops,
+        })
+        .collect();
+    greedy_core(&candidates, excess, bucket_tol)
 }
 
 #[cfg(test)]
@@ -149,54 +228,67 @@ mod tests {
     use crate::util::proptest::{ensure, forall};
     use crate::util::rng::Rng;
 
-    fn uniform_layers(n: usize, bytes: u64, ckpt: u64) -> Vec<LayerEst> {
-        (0..n)
-            .map(|i| LayerEst { id: i, est_bytes: bytes, ckpt_bytes: ckpt, fwd_order: i })
+    /// Owned stage storage for scheduler tests (ests borrow from it).
+    fn stages_of(specs: &[(u64, u64, usize)]) -> Vec<Stage> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(act, ckpt, order))| Stage {
+                id: i,
+                name: String::new(),
+                kind: StageKind::Encoder,
+                fwd_order: order,
+                act_bytes: act,
+                ckpt_bytes: ckpt,
+                fwd_flops: 0,
+                transient_bytes: 0,
+            })
             .collect()
+    }
+
+    fn ests(stages: &[Stage]) -> Vec<StageEst<'_>> {
+        stages.iter().map(|s| StageEst::new(s, s.act_bytes)).collect()
+    }
+
+    fn uniform(n: usize, bytes: u64, ckpt: u64) -> Vec<Stage> {
+        stages_of(&(0..n).map(|i| (bytes, ckpt, i)).collect::<Vec<_>>())
     }
 
     #[test]
     fn zero_excess_checkpoints_nothing() {
-        let layers = uniform_layers(12, 100, 10);
-        assert!(greedy_schedule(&layers, 0, 0.1).is_empty());
+        let stages = uniform(12, 100, 10);
+        assert!(greedy_schedule(&ests(&stages), 0, 0.1).is_empty());
     }
 
     #[test]
     fn covers_excess_exactly_with_minimal_layers() {
-        let layers = uniform_layers(12, 100, 0);
+        let stages = uniform(12, 100, 0);
         // excess 250 -> 3 layers of savings 100
-        let plan = greedy_schedule(&layers, 250, 0.1);
+        let plan = greedy_schedule(&ests(&stages), 250, 0.1);
         assert_eq!(plan.len(), 3);
     }
 
     #[test]
     fn prefers_earliest_layers_in_equal_bucket() {
         // Fig 11: with equal sizes, pick the earliest-forwarded encoders.
-        let layers = uniform_layers(12, 100, 0);
-        let plan = greedy_schedule(&layers, 250, 0.1);
+        let stages = uniform(12, 100, 0);
+        let plan = greedy_schedule(&ests(&stages), 250, 0.1);
         assert_eq!(plan.ids(), vec![0, 1, 2]);
     }
 
     #[test]
     fn picks_nearest_layer_when_one_suffices() {
         // excess 90: the 100-byte layer is nearest above; not the 400 one.
-        let layers = vec![
-            LayerEst { id: 0, est_bytes: 400, ckpt_bytes: 0, fwd_order: 0 },
-            LayerEst { id: 1, est_bytes: 100, ckpt_bytes: 0, fwd_order: 1 },
-        ];
-        let plan = greedy_schedule(&layers, 90, 0.1);
+        let stages = stages_of(&[(400, 0, 0), (100, 0, 1)]);
+        let plan = greedy_schedule(&ests(&stages), 90, 0.1);
         assert_eq!(plan.ids(), vec![1]);
     }
 
     #[test]
     fn takes_largest_when_nothing_covers() {
         // excess 500 > any single saving: start with the largest (line 19).
-        let layers = vec![
-            LayerEst { id: 0, est_bytes: 100, ckpt_bytes: 0, fwd_order: 0 },
-            LayerEst { id: 1, est_bytes: 400, ckpt_bytes: 0, fwd_order: 1 },
-            LayerEst { id: 2, est_bytes: 300, ckpt_bytes: 0, fwd_order: 2 },
-        ];
-        let plan = greedy_schedule(&layers, 500, 0.1);
+        let stages = stages_of(&[(100, 0, 0), (400, 0, 1), (300, 0, 2)]);
+        let plan = greedy_schedule(&ests(&stages), 500, 0.1);
         // largest first (400), then the remaining 100 is covered exactly by
         // the nearest-above layer (100) — not the 300 one.
         assert!(plan.is_checkpointed(1));
@@ -207,28 +299,34 @@ mod tests {
     #[test]
     fn savings_semantics_not_raw_bytes() {
         // act 100 but ckpt 90 -> savings 10; excess 50 needs 5 such layers
-        let layers = uniform_layers(12, 100, 90);
-        let plan = greedy_schedule(&layers, 50, 0.1);
+        let stages = uniform(12, 100, 90);
+        let plan = greedy_schedule(&ests(&stages), 50, 0.1);
         assert_eq!(plan.len(), 5);
     }
 
     #[test]
     fn impossible_excess_checkpoints_everything() {
-        let layers = uniform_layers(4, 100, 0);
-        let plan = greedy_schedule(&layers, 10_000, 0.1);
+        let stages = uniform(4, 100, 0);
+        let plan = greedy_schedule(&ests(&stages), 10_000, 0.1);
         assert_eq!(plan.len(), 4);
     }
 
     #[test]
     fn bucketing_groups_within_tolerance() {
         // 100 and 95 bucket together (tol 10%): earliest of the two wins.
-        let layers = vec![
-            LayerEst { id: 0, est_bytes: 95, ckpt_bytes: 0, fwd_order: 5 },
-            LayerEst { id: 1, est_bytes: 100, ckpt_bytes: 0, fwd_order: 9 },
-            LayerEst { id: 2, est_bytes: 50, ckpt_bytes: 0, fwd_order: 1 },
-        ];
-        let plan = greedy_schedule(&layers, 60, 0.1);
+        let stages = stages_of(&[(95, 0, 5), (100, 0, 9), (50, 0, 1)]);
+        let plan = greedy_schedule(&ests(&stages), 60, 0.1);
         assert_eq!(plan.ids(), vec![0]);
+    }
+
+    #[test]
+    fn stage_est_savings_delegate_to_stage() {
+        let stages = stages_of(&[(100, 30, 0)]);
+        let e = StageEst::new(&stages[0], 80);
+        assert_eq!(e.savings(), 50, "est-based savings via Stage::savings_at");
+        assert_eq!(stages[0].savings(), 70, "static savings from the same impl");
+        assert_eq!(e.id(), 0);
+        assert_eq!(e.fwd_order(), 0);
     }
 
     #[test]
@@ -250,37 +348,37 @@ mod tests {
                  excess)
             },
             |(acts, ckpts, excess)| {
-                let layers: Vec<LayerEst> = acts
+                let stages = stages_of(
+                    &acts
+                        .iter()
+                        .zip(ckpts)
+                        .enumerate()
+                        .map(|(i, (&a, &c))| (a, c.min(a), i))
+                        .collect::<Vec<_>>(),
+                );
+                let plan = greedy_schedule(&ests(&stages), *excess, 0.1);
+                let covered: u64 = stages
                     .iter()
-                    .zip(ckpts)
-                    .enumerate()
-                    .map(|(i, (&a, &c))| LayerEst {
-                        id: i,
-                        est_bytes: a,
-                        ckpt_bytes: c.min(a),
-                        fwd_order: i,
-                    })
-                    .collect();
-                let plan = greedy_schedule(&layers, *excess, 0.1);
-                let covered: u64 =
-                    layers.iter().filter(|l| plan.is_checkpointed(l.id)).map(|l| l.savings()).sum();
-                let max_possible: u64 = layers.iter().map(|l| l.savings()).sum();
+                    .filter(|s| plan.is_checkpointed(s.id))
+                    .map(|s| s.savings())
+                    .sum();
+                let max_possible: u64 = stages.iter().map(|s| s.savings()).sum();
                 ensure(
                     covered >= *excess.min(&max_possible),
                     &format!("covered {covered} < excess {excess} (max {max_possible})"),
                 )?;
                 // no over-checkpointing: removing the last-added layer must
                 // leave the excess uncovered (minimality of the greedy tail)
-                ensure(plan.len() <= layers.len(), "plan larger than layer set")
+                ensure(plan.len() <= stages.len(), "plan larger than layer set")
             },
         );
     }
 
     #[test]
     fn deterministic_for_same_input() {
-        let layers = uniform_layers(12, 100, 5);
-        let a = greedy_schedule(&layers, 333, 0.1);
-        let b = greedy_schedule(&layers, 333, 0.1);
+        let stages = uniform(12, 100, 5);
+        let a = greedy_schedule(&ests(&stages), 333, 0.1);
+        let b = greedy_schedule(&ests(&stages), 333, 0.1);
         assert_eq!(a, b);
     }
 
@@ -323,37 +421,130 @@ mod tests {
                 if sizes.iter().any(|&s| s as f64 <= max_b as f64 * 0.9) {
                     return Ok(());
                 }
-                let layers: Vec<LayerEst> = sizes
-                    .iter()
-                    .zip(order)
-                    .enumerate()
-                    .map(|(i, (&b, &o))| LayerEst {
-                        id: i,
-                        est_bytes: b,
-                        ckpt_bytes: 0,
-                        fwd_order: o as usize,
-                    })
-                    .collect();
-                let plan = greedy_schedule(&layers, *excess, 0.10);
+                let stages = stages_of(
+                    &sizes
+                        .iter()
+                        .zip(order)
+                        .map(|(&b, &o)| (b, 0, o as usize))
+                        .collect::<Vec<_>>(),
+                );
+                let plan = greedy_schedule(&ests(&stages), *excess, 0.10);
                 ensure(!plan.is_empty(), "positive excess must checkpoint something")?;
                 // plan == the plan.len() earliest-timestamp layers
-                let mut by_ts: Vec<&LayerEst> = layers.iter().collect();
-                by_ts.sort_by_key(|l| l.fwd_order);
-                for (rank, l) in by_ts.iter().enumerate() {
+                let mut by_ts: Vec<&Stage> = stages.iter().collect();
+                by_ts.sort_by_key(|s| s.fwd_order);
+                for (rank, s) in by_ts.iter().enumerate() {
                     let expect = rank < plan.len();
                     ensure(
-                        plan.is_checkpointed(l.id) == expect,
+                        plan.is_checkpointed(s.id) == expect,
                         &format!(
                             "layer id {} (ts {}) in-plan={} but timestamp rank {} of {}",
-                            l.id,
-                            l.fwd_order,
-                            plan.is_checkpointed(l.id),
+                            s.id,
+                            s.fwd_order,
+                            plan.is_checkpointed(s.id),
                             rank,
                             plan.len()
                         ),
                     )?;
                 }
                 Ok(())
+            },
+        );
+    }
+
+    // ---- schedule_graph ----
+
+    #[test]
+    fn graph_on_chain_equals_greedy_schedule() {
+        let stages = stages_of(&[(400, 40, 0), (390, 10, 1), (100, 0, 2), (60, 60, 3)]);
+        let graph = StageGraph::chain(stages.clone());
+        let est: Vec<u64> = stages.iter().map(|s| s.act_bytes).collect();
+        for excess in [0u64, 90, 250, 500, 100_000] {
+            let a = schedule_graph(&graph, &est, excess, 0.10);
+            let b = greedy_schedule(&ests(&stages), excess, 0.10);
+            assert_eq!(a, b, "excess {excess}");
+        }
+    }
+
+    #[test]
+    fn flops_break_parallel_branch_ties() {
+        // Two stages on parallel branches share fwd_order and size; the
+        // cheaper recompute (fewer forward FLOPs) must be taken first.
+        let mut stages = stages_of(&[(50, 0, 0), (100, 0, 1), (100, 0, 1), (40, 0, 2)]);
+        stages[1].fwd_flops = 900; // expensive branch
+        stages[2].fwd_flops = 100; // cheap branch
+        let graph =
+            StageGraph::new(stages, &[(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap();
+        let est: Vec<u64> = graph.stages().iter().map(|s| s.act_bytes).collect();
+        // one stage suffices: the 100-byte bucket is nearest above excess 80
+        let plan = schedule_graph(&graph, &est, 80, 0.10);
+        assert_eq!(plan.ids(), vec![2], "cheap-recompute branch wins the tie");
+        // needing both still takes the cheap one first, but both land
+        let plan = schedule_graph(&graph, &est, 180, 0.10);
+        assert!(plan.is_checkpointed(1) && plan.is_checkpointed(2));
+    }
+
+    #[test]
+    fn shared_branch_input_counts_full_savings() {
+        // Stages 1 and 2 consume the branch point 0's output: their kept
+        // input is alive for the sibling branch anyway, so each frees its
+        // FULL residual set — high ckpt_bytes must not disqualify them.
+        let stages = stages_of(&[(50, 0, 0), (100, 95, 1), (100, 95, 1), (40, 0, 2)]);
+        let graph =
+            StageGraph::new(stages.clone(), &[(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap();
+        let est: Vec<u64> = stages.iter().map(|s| s.act_bytes).collect();
+        // chain semantics would see savings 5 each and need many stages;
+        // graph semantics see savings 100 — one branch stage covers it
+        let plan = schedule_graph(&graph, &est, 90, 0.10);
+        assert_eq!(plan.len(), 1);
+        let id = plan.ids()[0];
+        assert!(id == 1 || id == 2, "a shared-input branch stage covers the excess");
+    }
+
+    #[test]
+    fn graph_head_stages_never_checkpointed() {
+        let mut stages = stages_of(&[(100, 0, 0), (100, 0, 1)]);
+        stages[1].kind = StageKind::Head;
+        let graph = StageGraph::chain(stages);
+        let est: Vec<u64> = graph.stages().iter().map(|s| s.act_bytes).collect();
+        let plan = schedule_graph(&graph, &est, 10_000, 0.10);
+        assert!(plan.is_checkpointed(0));
+        assert!(!plan.is_checkpointed(1));
+    }
+
+    #[test]
+    fn prop_chain_graph_differential_randomized() {
+        // The refactor's core guarantee at unit scope: on ANY chain-shaped
+        // graph, schedule_graph is bit-identical to the chain reference.
+        forall(
+            59,
+            300,
+            |r: &mut Rng| {
+                let n = r.range_u(1, 16);
+                let specs: Vec<(u64, u64, usize)> = (0..n)
+                    .map(|i| {
+                        let act = r.range_u(1, 2000) as u64;
+                        (act, r.range_u(0, act as usize) as u64, i)
+                    })
+                    .collect();
+                let flops: Vec<u64> = (0..n).map(|_| r.range_u(0, 1 << 20) as u64).collect();
+                let excess = r.range_u(0, 6000) as u64;
+                let tol = [0.0, 0.05, 0.10, 0.25][r.range_u(0, 3)];
+                (specs, flops, excess, tol)
+            },
+            |(specs, flops, excess, tol)| {
+                let mut stages = stages_of(specs);
+                for (s, &f) in stages.iter_mut().zip(flops) {
+                    s.fwd_flops = f;
+                }
+                let graph = StageGraph::chain(stages.clone());
+                let est: Vec<u64> = stages.iter().map(|s| s.act_bytes).collect();
+                let a = schedule_graph(&graph, &est, *excess, *tol);
+                let b = greedy_schedule(&ests(&stages), *excess, *tol);
+                ensure(
+                    a == b,
+                    &format!("chain diff: graph {:?} != reference {:?}", a.ids(), b.ids()),
+                )
             },
         );
     }

@@ -137,7 +137,7 @@ fn prop_coordinator_plans_match_direct_greedy_schedule() {
     // deterministic sheltered warmup over ten spread-out sizes
     for seq in [50, 80, 110, 140, 170, 200, 230, 260, 290, 320] {
         let profile = transformer_profile(&Task::TcBert.model(), 32, seq, 1.0);
-        let input = InputDesc { batch: 32, seqlen: seq };
+        let input = InputDesc::new(32, seq);
         let d = coord.begin_iteration(&input, &profile);
         assert!(matches!(d.mode, IterationMode::Sheltered(_)));
         let obs = observations_from_profile(&profile, &input, |f| f as f64 / 1e9);
@@ -151,7 +151,7 @@ fn prop_coordinator_plans_match_direct_greedy_schedule() {
         |r| r.range_u(40, 330),
         |&seq| {
             let profile = transformer_profile(&Task::TcBert.model(), 32, seq, 1.0);
-            let input = InputDesc { batch: 32, seqlen: seq };
+            let input = InputDesc::new(32, seq);
             let mut c = coord.borrow_mut();
             let d = c.begin_iteration(&input, &profile);
             let plan = match d.mode {
@@ -163,7 +163,7 @@ fn prop_coordinator_plans_match_direct_greedy_schedule() {
             let plan_size = quantize_up(input.size(), mcfg.cache_tolerance);
             let mut layers = checkpointable(&profile);
             for l in &mut layers {
-                l.est_bytes = c.estimator().predict_bytes(l.id, plan_size as f64) as u64;
+                l.est_bytes = c.estimator().predict_bytes(l.id(), plan_size as f64) as u64;
             }
             let est_total: u64 = layers.iter().map(|l| l.est_bytes).sum();
             let usable = usable_activation_budget(budget, &profile, mcfg.reserve_bytes);

@@ -155,19 +155,19 @@ fn purge_on_reshelter_only_evicts_own_contributions() {
     let mut cache = SharedPlanCache::new(0);
     // tenant 1 contributed (sig_a, 9600); tenant 2 contributed (sig_a,
     // 12800) and (sig_b, 9600)
-    cache.insert(sig_a, 9600, 6 * GIB, Plan::of([1, 2]));
-    cache.insert(sig_a, 12_800, 6 * GIB, Plan::of([3]));
-    cache.insert(sig_b, 9600, 6 * GIB, Plan::of([4]));
+    cache.insert(sig_a, (9600, 0), 6 * GIB, Plan::of([1, 2]));
+    cache.insert(sig_a, (12_800, 0), 6 * GIB, Plan::of([3]));
+    cache.insert(sig_b, (9600, 0), 6 * GIB, Plan::of([4]));
     // tenant 1 reshelters: it purges exactly its own contribution list
-    cache.remove(sig_a, 9600, 6 * GIB);
-    assert!(cache.lookup(sig_a, 9600, 6 * GIB).is_none(), "own entry purged");
+    cache.remove(sig_a, (9600, 0), 6 * GIB);
+    assert!(cache.lookup(sig_a, (9600, 0), 6 * GIB).is_none(), "own entry purged");
     assert_eq!(
-        cache.lookup(sig_a, 12_800, 6 * GIB),
+        cache.lookup(sig_a, (12_800, 0), 6 * GIB),
         Some(Plan::of([3])),
         "same-signature neighbour entry survives the purge"
     );
     assert_eq!(
-        cache.lookup(sig_b, 9600, 6 * GIB),
+        cache.lookup(sig_b, (9600, 0), 6 * GIB),
         Some(Plan::of([4])),
         "other-signature entry survives the purge"
     );
