@@ -32,9 +32,29 @@ pub fn rule(title: &str) {
 /// p50_us/p99_us per result; times in microseconds).
 #[allow(dead_code)]
 pub fn write_bench_json(name: &str, results: &[mimose::util::timer::BenchResult]) {
+    write_bench_json_with_metrics(name, results, &[]);
+}
+
+/// [`write_bench_json`] plus scalar quality metrics (e.g. the greedy-vs-
+/// optimal recompute gap) under a `"metrics"` key, so non-latency
+/// trajectories accumulate in the same file.
+#[allow(dead_code)]
+pub fn write_bench_json_with_metrics(
+    name: &str,
+    results: &[mimose::util::timer::BenchResult],
+    metrics: &[(&str, f64)],
+) {
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{name}.json"));
     let mut s = String::from("{\n  \"schema\": 1,\n");
-    s.push_str(&format!("  \"bench\": \"{name}\",\n  \"results\": [\n"));
+    s.push_str(&format!("  \"bench\": \"{name}\",\n"));
+    if !metrics.is_empty() {
+        s.push_str("  \"metrics\": {");
+        for (i, (k, v)) in metrics.iter().enumerate() {
+            s.push_str(&format!("\"{k}\": {v:.6}{}", if i + 1 < metrics.len() { ", " } else { "" }));
+        }
+        s.push_str("},\n");
+    }
+    s.push_str("  \"results\": [\n");
     for (i, r) in results.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"iters\": {}, \"mean_us\": {:.3}, \

@@ -22,6 +22,12 @@ fn budgets(task: Task) -> Vec<f64> {
         Task::QaXlnet => vec![4.2, 4.8, 5.4, 6.0],
         Task::QaBert => vec![3.8, 4.4, 5.0, 5.6],
         Task::TcBert => vec![4.5, 5.2, 6.0, 6.8],
+        // extension workloads — the Fig 13 sweep iterates Task::all() and
+        // never reaches these, but budgets() stays total so ad-hoc sweeps
+        // over Task::extended() keep working
+        Task::Seq2seq => vec![3.6, 4.0, 4.4, 4.8],
+        Task::Swin => vec![2.2, 2.6, 3.0, 3.4],
+        Task::Unet => vec![2.0, 2.4, 2.8, 3.2],
     }
 }
 

@@ -11,13 +11,16 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{rule, write_bench_json, write_tsv};
+use common::{rule, write_bench_json_with_metrics, write_tsv};
 use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
 use mimose::engine::sim::SimEngine;
 use mimose::estimator::{MemoryEstimator, Sample};
 use mimose::memory::CachingAllocator;
 use mimose::model::{seq2seq_profile, transformer_profile, Stage, StageKind};
+use mimose::planners::{greedy_feasible_plan, optimal_chain_plan, optimal_graph_plan};
 use mimose::scheduler::{greedy_schedule, schedule_graph, Plan, PlanCache, StageEst};
+use mimose::util::graphgen::{self, GenConfig};
+use mimose::util::rng::Rng;
 use mimose::util::timer::{bench, black_box};
 use mimose::util::GIB;
 use std::time::Duration;
@@ -78,6 +81,42 @@ fn main() {
         black_box(schedule_graph(black_box(&s2s.graph), black_box(&s2s_est), black_box(s2s_excess), 0.10));
     }));
     assert!(r.mean_s < 1e-3, "branch liveness must not blow the latency budget");
+
+    rule("Perf — optimal oracle (offline quality baseline)");
+    // chain DP on the production 14-stage profile at a tight budget — the
+    // oracle is offline, but planning a BERT-depth chain must stay cheap
+    // enough to sweep per distinct input size in the differential tests
+    let limit = profile.fixed_bytes + profile.total_act_bytes() / 2;
+    let r = record(bench("optimal/chain_dp_14", BUDGET, || {
+        black_box(optimal_chain_plan(black_box(&profile), black_box(limit)));
+    }));
+    assert!(r.mean_s < 10e-3, "chain DP must stay in the low milliseconds");
+    // measured greedy-vs-optimal recompute gap over randomized graphs: the
+    // trajectory number the roadmap tracks (0 = greedy already optimal)
+    let mut rng = Rng::new(1234);
+    let gen_cfg = GenConfig::default();
+    let (mut gap_sum, mut gap_cases) = (0.0f64, 0u32);
+    for _ in 0..80 {
+        let (graph, _) = graphgen::random_graph(&mut rng, &gen_cfg, 12);
+        let fixed = rng.range_u(0, 300) as u64;
+        let p = graphgen::profile_of(graph, fixed);
+        let lim = p.fixed_bytes + rng.range_u(0, p.total_act_bytes().max(1) as usize) as u64;
+        let (Some(g), Some(o)) =
+            (greedy_feasible_plan(&p, lim, 0.10), optimal_graph_plan(&p, lim))
+        else {
+            continue;
+        };
+        let gflops = p.recompute_flops(&g.ids());
+        if gflops > 0 {
+            gap_sum += gflops.saturating_sub(o.recompute_flops) as f64 / gflops as f64;
+        }
+        gap_cases += 1;
+    }
+    let mean_gap = if gap_cases > 0 { gap_sum / gap_cases as f64 } else { 0.0 };
+    println!(
+        "greedy-vs-optimal recompute gap: {:.2}% mean over {gap_cases} feasible cases",
+        mean_gap * 100.0
+    );
 
     rule("Perf — estimator");
     let mut est = MemoryEstimator::new(14);
@@ -155,5 +194,9 @@ fn main() {
     );
 
     write_tsv("perf_hotpaths", "bench\tmean_us\tp50_us\tp99_us", &rows);
-    write_bench_json("hotpaths", &results);
+    write_bench_json_with_metrics(
+        "hotpaths",
+        &results,
+        &[("mean_optimality_gap", mean_gap)],
+    );
 }

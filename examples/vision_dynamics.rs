@@ -25,7 +25,10 @@ fn main() {
     let mut base_ms = 0.0;
     for kind in [PlannerKind::Baseline, PlannerKind::Sublinear, PlannerKind::Mimose] {
         let b = if kind == PlannerKind::Baseline { 64 * GIB } else { budget };
-        let mut e = VisionSimEngine::new(kind, b, batch, 42);
+        let mut e = VisionSimEngine::new(kind, b, batch, 42).unwrap_or_else(|err| {
+            eprintln!("cannot run: {err}");
+            std::process::exit(2);
+        });
         let r = e.run(iters);
         if kind == PlannerKind::Baseline {
             base_ms = r.total_ms();

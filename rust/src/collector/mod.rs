@@ -246,6 +246,61 @@ mod tests {
     }
 
     #[test]
+    fn novelty_boundary_exactly_at_two_percent() {
+        // The ±2% tolerance is inclusive: a query whose per-axis distance
+        // to a collected key is EXACTLY 2% of the query value counts as
+        // seen. Collected (980, 784) vs query (1000, 800): the diffs are
+        // 20 = 1000·0.02 and 16 = 800·0.02, both exactly at the boundary.
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, InputKey::d2(980, 784), &[obs(0, false, false)], 1.0);
+        assert!(c.seen(InputKey::d2(1000, 800)), "exactly-at-2% is seen");
+        // one unit past the boundary on either axis flips it to novel
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, InputKey::d2(979, 784), &[obs(0, false, false)], 1.0);
+        assert!(!c.seen(InputKey::d2(1000, 800)), "21 > 2% of 1000: novel");
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, InputKey::d2(980, 783), &[obs(0, false, false)], 1.0);
+        assert!(!c.seen(InputKey::d2(1000, 800)), "17 > 2% of 800: novel");
+    }
+
+    #[test]
+    fn novelty_boundary_one_axis_novel_is_novel() {
+        // Per-axis semantics: a perfect match on one axis never excuses a
+        // just-outside-tolerance miss on the other.
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, InputKey::d2(1000, 800), &[obs(0, false, false)], 1.0);
+        // primary exact, secondary exactly at 2% (816 - 800 = 16 = 816·0.02
+        // rounds over: 816·0.02 = 16.32 ≥ 16): seen
+        assert!(c.seen(InputKey::d2(1000, 816)));
+        // primary exact, secondary one past its own 2%: novel
+        assert!(!c.seen(InputKey::d2(1000, 817)));
+        // secondary exact, primary one past its own 2%: novel
+        assert!(!c.seen(InputKey::d2(1021, 800)));
+        // both inside: seen
+        assert!(c.seen(InputKey::d2(1020, 816)));
+    }
+
+    #[test]
+    fn novelty_boundary_gates_the_reshelter_decision() {
+        // `seen` is the gate `reshelter_on_novel` consults after warmup: a
+        // 2-D key one unit inside the per-axis tolerance must not trigger a
+        // reshelter, one unit outside must. (A reopened window collects
+        // unconditionally until it refreezes, so the boundary lives in
+        // `seen`, not in `wants_collection`.)
+        let mut c = Collector::new(1);
+        let mut e = MemoryEstimator::new(1);
+        c.ingest(&mut e, InputKey::d2(1000, 800), &[obs(0, false, false)], 1.0);
+        assert!(c.is_frozen());
+        assert!(!c.wants_collection(InputKey::d2(5000, 5000)), "frozen: never shuttles");
+        assert!(c.seen(InputKey::d2(1020, 800)), "inside 2%: no reshelter");
+        assert!(!c.seen(InputKey::d2(1021, 800)), "outside 2%: reshelter");
+    }
+
+    #[test]
     #[should_panic(expected = "collector is frozen")]
     fn ingest_after_freeze_panics() {
         let mut c = Collector::new(1);

@@ -18,6 +18,11 @@ pub enum PlannerKind {
     Dtr,
     /// This paper.
     Mimose,
+    /// Exact minimum-recompute oracle over the stage graph (issue 5):
+    /// chain DP / branch-and-bound search. Offline-only quality baseline —
+    /// exponential worst case, so it is NOT in the paper sweeps; the greedy
+    /// scheduler is measured against it in `tests/optimal_oracle.rs`.
+    Optimal,
 }
 
 impl PlannerKind {
@@ -27,6 +32,7 @@ impl PlannerKind {
             "sublinear" | "static" => Some(PlannerKind::Sublinear),
             "dtr" | "dynamic" => Some(PlannerKind::Dtr),
             "mimose" => Some(PlannerKind::Mimose),
+            "optimal" | "oracle" => Some(PlannerKind::Optimal),
             _ => None,
         }
     }
@@ -37,9 +43,12 @@ impl PlannerKind {
             PlannerKind::Sublinear => "sublinear",
             PlannerKind::Dtr => "dtr",
             PlannerKind::Mimose => "mimose",
+            PlannerKind::Optimal => "optimal",
         }
     }
 
+    /// The paper's §6.1 comparison set (the sweeps iterate this; the
+    /// `Optimal` oracle stays out — it is an offline test baseline).
     pub fn all() -> [PlannerKind; 4] {
         [PlannerKind::Baseline, PlannerKind::Sublinear, PlannerKind::Dtr, PlannerKind::Mimose]
     }
@@ -101,6 +110,14 @@ impl ModelSpec {
                     decoder_layers: 0, heads: 3, ffn: 384, max_seq: 288 }
     }
 
+    /// U-Net stand-in spec: signature-relevant fields only (the real shape
+    /// lives in `model::unet::UnetSpec` — 4 levels, base 32, 21 classes);
+    /// `max_seq` caps the augmentation resolution.
+    pub fn unet_base() -> Self {
+        ModelSpec { name: "unet".into(), vocab: 21, hidden: 32, layers: 4,
+                    decoder_layers: 4, heads: 1, ffn: 64, max_seq: 256 }
+    }
+
     pub fn head_dim(&self) -> usize {
         self.hidden / self.heads
     }
@@ -142,6 +159,10 @@ pub enum Task {
     Seq2seq,
     /// Swin-T classification under random-resize augmentation, batch 32.
     Swin,
+    /// U-Net segmentation under random-resize augmentation, batch 32: the
+    /// multi-branch vision workload (a skip-connection branch/join pair at
+    /// every resolution level — see `model::unet`).
+    Unet,
 }
 
 impl Task {
@@ -152,7 +173,7 @@ impl Task {
     }
 
     /// Every runnable task, extensions included.
-    pub fn extended() -> [Task; 6] {
+    pub fn extended() -> [Task; 7] {
         [
             Task::McRoberta,
             Task::QaXlnet,
@@ -160,6 +181,7 @@ impl Task {
             Task::TcBert,
             Task::Seq2seq,
             Task::Swin,
+            Task::Unet,
         ]
     }
 
@@ -171,6 +193,7 @@ impl Task {
             "tc-bert" | "qqp" | "glue-qqp" => Some(Task::TcBert),
             "seq2seq" | "s2s" | "nmt" => Some(Task::Seq2seq),
             "swin" | "swin-t" | "vision" => Some(Task::Swin),
+            "unet" | "u-net" | "seg" => Some(Task::Unet),
             _ => None,
         }
     }
@@ -183,6 +206,7 @@ impl Task {
             Task::TcBert => "TC-Bert",
             Task::Seq2seq => "Seq2seq",
             Task::Swin => "Swin-T",
+            Task::Unet => "U-Net",
         }
     }
 
@@ -194,6 +218,7 @@ impl Task {
             Task::TcBert => 32,
             Task::Seq2seq => 24,
             Task::Swin => 32,
+            Task::Unet => 32,
         }
     }
 
@@ -204,6 +229,7 @@ impl Task {
             Task::QaBert | Task::TcBert => ModelSpec::bert_base(),
             Task::Seq2seq => ModelSpec::s2s_base(),
             Task::Swin => ModelSpec::swin_tiny(),
+            Task::Unet => ModelSpec::unet_base(),
         }
     }
 
@@ -226,6 +252,8 @@ impl Task {
             Task::TcBert => (30, 332),
             Task::Seq2seq => (120, 400),
             Task::Swin => (192, 288),
+            // resize augmentation on the 32-px grid every level halves evenly
+            Task::Unet => (128, 256),
         }
     }
 
@@ -255,6 +283,7 @@ impl Task {
             Task::TcBert => 11400,
             Task::Seq2seq => 5200,
             Task::Swin => 8000,
+            Task::Unet => 4000,
         }
     }
 }
@@ -677,6 +706,11 @@ mod tests {
             assert_eq!(PlannerKind::parse(k.name()), Some(k));
         }
         assert_eq!(PlannerKind::parse("nope"), None);
+        // the oracle parses but stays OUT of the paper comparison set
+        assert_eq!(PlannerKind::parse("optimal"), Some(PlannerKind::Optimal));
+        assert_eq!(PlannerKind::parse("oracle"), Some(PlannerKind::Optimal));
+        assert_eq!(PlannerKind::Optimal.name(), "optimal");
+        assert!(!PlannerKind::all().contains(&PlannerKind::Optimal));
     }
 
     #[test]
@@ -690,11 +724,18 @@ mod tests {
         assert_eq!(Task::Seq2seq.max_shape(), (400, 400));
         assert_eq!(Task::TcBert.max_shape(), (332, 0));
         assert_eq!(Task::Swin.seq2_range(), None);
+        assert_eq!(Task::parse("unet"), Some(Task::Unet));
+        assert_eq!(Task::parse("u-net"), Some(Task::Unet));
+        assert_eq!(Task::Unet.batch(), 32);
+        assert_eq!(Task::Unet.seq_range(), (128, 256));
+        assert_eq!(Task::Unet.seq2_range(), None);
+        assert_eq!(Task::Unet.max_shape(), (256, 0));
         // Table 1 sweeps stay pinned to the paper's four tasks
         assert_eq!(Task::all().len(), 4);
         assert!(!Task::all().contains(&Task::Seq2seq));
-        assert_eq!(Task::extended().len(), 6);
+        assert_eq!(Task::extended().len(), 7);
         assert!(Task::extended().contains(&Task::Swin));
+        assert!(Task::extended().contains(&Task::Unet));
     }
 
     #[test]

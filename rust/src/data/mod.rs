@@ -62,6 +62,9 @@ impl LengthDist {
             Task::Seq2seq => LengthDist::Normal { mean: 140.0, std: 45.0, lo: 60, hi: 400 },
             // multi-scale resize augmentation: 192..288 px in steps of 16
             Task::Swin => LengthDist::UniformStep { lo: 192, hi: 288, step: 16 },
+            // segmentation resize augmentation: 128..256 px on the 32-px
+            // grid (every U-Net level halves evenly — the smooth curve)
+            Task::Unet => LengthDist::UniformStep { lo: 128, hi: 256, step: 32 },
         }
     }
 
@@ -108,7 +111,7 @@ impl InputStream {
             dist2: LengthDist::secondary_for_task(task),
             batch: task.batch(),
             max_seq: task.model().max_seq,
-            whole_batch: matches!(task, Task::Swin),
+            whole_batch: matches!(task, Task::Swin | Task::Unet),
             rng: Rng::new(seed),
         }
     }
@@ -260,6 +263,20 @@ mod tests {
         }
         // whole-batch draw: the collate max must NOT pin every batch at the
         // top of the range (which per-sample max over batch 32 would do)
+        assert!(distinct.len() >= 4, "saw only {distinct:?}");
+    }
+
+    #[test]
+    fn unet_draws_whole_batch_resolutions_on_the_32px_grid() {
+        let mut s = InputStream::new(Task::Unet, 29);
+        let mut distinct = std::collections::BTreeSet::new();
+        for _ in 0..500 {
+            let (p, sec) = s.next_shape();
+            assert_eq!(sec, 0, "unet is single-axis");
+            assert!(p >= 128 && p <= 256, "resolution {p} out of range");
+            assert_eq!(p % 32, 0, "resolution {p} off the 32-px grid");
+            distinct.insert(p);
+        }
         assert!(distinct.len() >= 4, "saw only {distinct:?}");
     }
 

@@ -10,15 +10,18 @@
 //! engine reuses them unmodified — the InputDesc "seqlen" field carries the
 //! image side.
 
+use crate::bail;
 use crate::config::{MimoseConfig, PlannerKind};
 use crate::coordinator::observations_from_profile;
 use crate::metrics::{IterationMetrics, RunReport};
 use crate::model::vision::SwinSpec;
 use crate::model::ModelProfile;
 use crate::planners::{
-    BaselinePlanner, InputDesc, IterationMode, MimosePlanner, Planner, SublinearPlanner,
+    BaselinePlanner, InputDesc, IterationMode, MimosePlanner, OptimalConfig, OptimalPlanner,
+    Planner, SublinearPlanner,
 };
 use crate::scheduler::Plan;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// Random-resize augmentation: resolutions in [lo, hi], rounded to a
@@ -57,7 +60,11 @@ pub struct VisionSimEngine {
 }
 
 impl VisionSimEngine {
-    pub fn new(kind: PlannerKind, budget: u64, batch: usize, seed: u64) -> Self {
+    /// Errors on planner kinds the vision sim cannot drive: DTR is
+    /// reactive (tensor-granular OOM eviction), and this engine has no
+    /// ledger to react against — use `SimEngine` with `Task::Swin` for
+    /// that. Everything planned (baseline/sublinear/mimose/optimal) works.
+    pub fn new(kind: PlannerKind, budget: u64, batch: usize, seed: u64) -> Result<Self> {
         let spec = SwinSpec::default();
         let planner: Box<dyn Planner> = match kind {
             PlannerKind::Baseline => Box::new(BaselinePlanner),
@@ -79,9 +86,19 @@ impl VisionSimEngine {
                     },
                 ))
             }
-            PlannerKind::Dtr => unimplemented!("vision sim covers planned modes"),
+            PlannerKind::Optimal => Box::new(OptimalPlanner::new(
+                budget,
+                OptimalConfig {
+                    reserve_bytes: crate::util::GIB / 4,
+                    ..Default::default()
+                },
+            )),
+            PlannerKind::Dtr => bail!(
+                "the vision sim covers planned modes only; DTR is reactive — \
+                 run it through `SimEngine` with Task::Swin instead"
+            ),
         };
-        VisionSimEngine {
+        Ok(VisionSimEngine {
             spec,
             batch,
             budget,
@@ -89,7 +106,7 @@ impl VisionSimEngine {
             aug: ResizeAug::default(),
             rng: Rng::new(seed),
             sec_per_flop: 1.0 / 11.0e12,
-        }
+        })
     }
 
     fn apply(&self, profile: &ModelProfile, plan: &Plan) -> IterationMetrics {
@@ -180,10 +197,22 @@ mod tests {
     fn mimose_handles_step_effect_within_tolerance() {
         // §4.3: window padding causes <=~10% estimation error; keying the
         // estimator on padded tokens + the reserve absorbs it — no OOM.
-        let mut e = VisionSimEngine::new(PlannerKind::Mimose, 3 * GIB, 32, 42);
+        let mut e = VisionSimEngine::new(PlannerKind::Mimose, 3 * GIB, 32, 42).unwrap();
         let r = e.run(400);
         assert_eq!(r.oom_failures(), 0, "step effect must not break plans");
         assert!(r.cache_hit_rate() > 0.4);
+    }
+
+    #[test]
+    fn dtr_on_the_vision_sim_errors_instead_of_aborting() {
+        // Regression for the old `unimplemented!` panic: an unsupported
+        // planner kind must surface as a proper error the CLI can print.
+        let err = match VisionSimEngine::new(PlannerKind::Dtr, 3 * GIB, 32, 1) {
+            Err(e) => e,
+            Ok(_) => panic!("DTR has no reactive hook in the vision sim"),
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("DTR") && msg.contains("Task::Swin"), "unhelpful error: {msg}");
     }
 
     #[test]
@@ -196,8 +225,8 @@ mod tests {
         // step-heavy inputs — matching the paper's assessment that vision
         // needs "adaptive algorithms" in the estimator.
         let budget = 3 * GIB;
-        let mut sub = VisionSimEngine::new(PlannerKind::Sublinear, budget, 32, 7);
-        let mut mim = VisionSimEngine::new(PlannerKind::Mimose, budget, 32, 7);
+        let mut sub = VisionSimEngine::new(PlannerKind::Sublinear, budget, 32, 7).unwrap();
+        let mut mim = VisionSimEngine::new(PlannerKind::Mimose, budget, 32, 7).unwrap();
         let rs = sub.run(300);
         let rm = mim.run(300);
         assert_eq!(rm.oom_failures(), 0, "fallback must keep vision safe");
@@ -211,7 +240,7 @@ mod tests {
 
     #[test]
     fn small_resolutions_skip_checkpointing() {
-        let mut e = VisionSimEngine::new(PlannerKind::Mimose, 4 * GIB, 32, 3);
+        let mut e = VisionSimEngine::new(PlannerKind::Mimose, 4 * GIB, 32, 3).unwrap();
         let r = e.run(300);
         let responsive: Vec<_> = r.iters.iter().filter(|m| m.collector_ms == 0.0).collect();
         let small_plans: Vec<usize> = responsive

@@ -138,6 +138,66 @@ mod tests {
     }
 
     #[test]
+    fn biquadratic_truth_is_recovered_to_float_tolerance_everywhere() {
+        // The exactness pin (issue 5 satellite): the basis [1,u,v,u²,v²,uv]
+        // spans exactly the residual-byte surfaces a fixed-batch
+        // encoder/decoder/cross stage produces, so fitting noise-free data
+        // drawn from ANY true biquadratic must recover predictions to float
+        // tolerance — interpolated AND extrapolated, across several
+        // coefficient regimes (byte-scale, tiny, and negative cross terms).
+        let surfaces: [[f64; 6]; 3] = [
+            [3e7, 4.1e3, 2.7e3, 12.5, 3.25, 6.75],   // byte-scale stage curve
+            [5.0, 0.25, 0.125, 1e-3, 5e-4, 2.5e-4],  // tiny magnitudes
+            [1e6, -2e2, 3e2, 0.5, 0.25, -1.5],       // sign-mixed cross term
+        ];
+        for (si, c) in surfaces.iter().enumerate() {
+            let truth =
+                |u: f64, v: f64| c[0] + c[1] * u + c[2] * v + c[3] * u * u + c[4] * v * v + c[5] * u * v;
+            let mut s = SurfaceRegressor::new(2);
+            let (mut us, mut vs, mut ys) = (Vec::new(), Vec::new(), Vec::new());
+            for i in 1..=5 {
+                for j in 1..=4 {
+                    let (u, v) = ((i * 97) as f64, (j * 61 + i * 13) as f64);
+                    us.push(u);
+                    vs.push(v);
+                    ys.push(truth(u, v));
+                }
+            }
+            s.fit(&us, &vs, &ys);
+            assert!(s.is_2d());
+            // interpolation + extrapolation beyond the sampled box
+            for &(u, v) in &[(120.0, 100.0), (333.3, 217.9), (485.0, 244.0), (700.0, 500.0)] {
+                let want = truth(u, v);
+                let rel = (s.predict(u, v) - want).abs() / want.abs().max(1.0);
+                assert!(rel < 1e-6, "surface {si} at ({u},{v}): rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_d_bit_identity_holds_after_refits_and_at_zero() {
+        // Pin the delegation contract hard: every 1-D fit (including a
+        // refit after a 2-D fit switched the regressor) produces
+        // predictions EXACTLY equal to a PolyRegressor fit on the same
+        // data — same struct, same arithmetic, == not tolerance.
+        let xs: Vec<f64> = (1..=12).map(|i| (i * 37) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 7.7e5 + 931.0 * x + 2.25 * x * x).collect();
+        let zeros = vec![0.0; xs.len()];
+        let mut s = SurfaceRegressor::new(2);
+        // detour through a 2-D fit first: the 1-D path must fully reset it
+        let vs: Vec<f64> = xs.iter().map(|&x| x / 2.0 + 3.0).collect();
+        s.fit(&xs, &vs, &ys);
+        assert!(s.is_2d());
+        s.fit(&xs, &zeros, &ys);
+        assert!(!s.is_2d(), "a refit with zero secondaries reverts to 1-D");
+        let mut p = PolyRegressor::new(2);
+        p.fit(&xs, &ys);
+        for &x in &[0.0, 1.0, 37.0, 200.5, 444.0, 1e5] {
+            assert_eq!(s.predict(x, 0.0), p.predict(x), "x={x}");
+        }
+    }
+
+    #[test]
     fn degenerate_two_d_falls_back_to_mean() {
         // One sample cannot pin 6 coefficients; the fit must stay finite.
         let mut s = SurfaceRegressor::new(2);

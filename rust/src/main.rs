@@ -9,7 +9,10 @@
 //!
 //! Tasks: the paper's Table 1 set (mc-roberta, qa-xlnet, qa-bert, tc-bert)
 //! plus the stage-graph extensions: seq2seq (encoder-decoder, independent
-//! src/tgt lengths) and swin (resolution-augmented vision).
+//! src/tgt lengths), swin (resolution-augmented vision), and unet
+//! (multi-branch segmentation — a skip branch/join pair per resolution).
+//! Planners: the §6.1 set (baseline, sublinear, dtr, mimose) plus the
+//! offline `optimal` oracle (exact minimum-recompute plans).
 //!
 //! Examples:
 //!   mimose sim --task tc-bert --planner mimose --budget-gb 6 --iters 1000
@@ -125,8 +128,8 @@ fn cmd_sim(args: &[String]) {
     let cli = parse_or_exit(
         Cli::new("mimose sim", "run one simulated experiment")
             .opt("config", "", "TOML config path (overrides other flags)")
-            .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert | seq2seq | swin")
-            .opt("planner", "mimose", "baseline | sublinear | dtr | mimose")
+            .opt("task", "tc-bert", "mc-roberta | qa-xlnet | qa-bert | tc-bert | seq2seq | swin | unet")
+            .opt("planner", "mimose", "baseline | sublinear | dtr | mimose | optimal (oracle)")
             .opt("budget-gb", "6.0", "memory budget (GiB)")
             .opt("iters", "1000", "iterations (0 = full epoch)")
             .opt("seed", "42", "rng seed")
@@ -248,7 +251,7 @@ fn cmd_sweep(args: &[String]) {
 fn cmd_plan(args: &[String]) {
     let cli = parse_or_exit(
         Cli::new("mimose plan", "inspect the plan for one input shape")
-            .opt("task", "tc-bert", "task name (incl. seq2seq, swin)")
+            .opt("task", "tc-bert", "task name (incl. seq2seq, swin, unet)")
             .opt("budget-gb", "5.0", "memory budget (GiB)")
             .opt("seqlen", "300", "collated seqlen (resolution for swin; src for seq2seq)")
             .opt("tgt-seqlen", "0", "collated target seqlen (seq2seq; 0 = same as --seqlen)")

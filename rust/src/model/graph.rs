@@ -309,6 +309,36 @@ fn held(graph: &StageGraph, id: usize, checkpointed: &[usize]) -> u64 {
     }
 }
 
+/// Peak bytes of a forward+backward walk with *explicit* per-stage held
+/// bytes (`held_bytes[id]`), starting from `fixed_bytes` of always-resident
+/// state. [`graph_peak_bytes`] feeds the plan-aware held values through
+/// this; the optimal planner's bounding walks feed per-stage held *lower
+/// bounds* — valid because the walk is monotone non-decreasing in every
+/// `held_bytes[i]` (each term is a partial sum of held values plus
+/// plan-independent residual/transient bytes).
+pub fn graph_peak_with_held(graph: &StageGraph, fixed_bytes: u64, held_bytes: &[u64]) -> u64 {
+    debug_assert_eq!(held_bytes.len(), graph.len());
+    let mut cur = fixed_bytes;
+    let mut peak = cur;
+    for &i in graph.topo_order() {
+        let s = graph.stage(i);
+        // transient working set (plus full residuals while computing)
+        peak = peak.max(cur + s.act_bytes + s.transient_bytes);
+        cur += held_bytes[i];
+        peak = peak.max(cur);
+    }
+    // backward: everything is held; each stage rematerialises its residual
+    // set, then its held state is freed
+    for &i in graph.topo_order().iter().rev() {
+        let s = graph.stage(i);
+        let h = held_bytes[i];
+        let need = cur - h + s.act_bytes + s.transient_bytes;
+        peak = peak.max(need);
+        cur -= h;
+    }
+    peak
+}
+
 /// Peak bytes of a forward+backward walk of `graph` under a plan, starting
 /// from `fixed_bytes` of always-resident state. Forward accumulates held
 /// state in topological order; backward releases each stage's state *after
@@ -317,25 +347,9 @@ fn held(graph: &StageGraph, id: usize, checkpointed: &[usize]) -> u64 {
 /// consumer (each earlier in reverse topo) has been backwarded. On a chain
 /// this reproduces the pre-graph LIFO arithmetic bit-for-bit.
 pub fn graph_peak_bytes(graph: &StageGraph, fixed_bytes: u64, checkpointed: &[usize]) -> u64 {
-    let mut cur = fixed_bytes;
-    let mut peak = cur;
-    for &i in graph.topo_order() {
-        let s = graph.stage(i);
-        // transient working set (plus full residuals while computing)
-        peak = peak.max(cur + s.act_bytes + s.transient_bytes);
-        cur += held(graph, i, checkpointed);
-        peak = peak.max(cur);
-    }
-    // backward: everything is held; each stage rematerialises its residual
-    // set, then its held state is freed
-    for &i in graph.topo_order().iter().rev() {
-        let s = graph.stage(i);
-        let h = held(graph, i, checkpointed);
-        let need = cur - h + s.act_bytes + s.transient_bytes;
-        peak = peak.max(need);
-        cur -= h;
-    }
-    peak
+    let held_bytes: Vec<u64> =
+        (0..graph.len()).map(|i| held(graph, i, checkpointed)).collect();
+    graph_peak_with_held(graph, fixed_bytes, &held_bytes)
 }
 
 /// Convenience for tests and synthetic graphs.

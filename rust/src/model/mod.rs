@@ -14,9 +14,14 @@
 //! constants checked in both suites).
 
 pub mod graph;
+pub mod unet;
 pub mod vision;
 
-pub use graph::{graph_peak_bytes, InputKey, Layer, LayerKind, Stage, StageGraph, StageKind};
+pub use graph::{
+    graph_peak_bytes, graph_peak_with_held, InputKey, Layer, LayerKind, Stage, StageGraph,
+    StageKind,
+};
+pub use unet::{unet_profile, UnetSpec};
 
 use crate::config::{ModelSpec, Task};
 
@@ -358,6 +363,7 @@ pub fn seq2seq_profile(m: &ModelSpec, batch: usize, src: usize, tgt: usize) -> M
 pub fn task_profile(task: Task, batch: usize, primary: usize, secondary: usize) -> ModelProfile {
     match task {
         Task::Swin => vision::SwinSpec::default().profile(batch, primary),
+        Task::Unet => unet_profile(&unet::UnetSpec::default(), batch, primary),
         Task::Seq2seq => seq2seq_profile(&task.model(), batch, primary, secondary),
         _ => transformer_profile(&task.model(), batch, primary, task.act_factor()),
     }
@@ -535,5 +541,8 @@ mod tests {
         let swin = task_profile(Task::Swin, 4, 224, 0);
         assert!(swin.graph.is_chain());
         assert!(swin.layers().len() > 4);
+        let unet = task_profile(Task::Unet, 4, 128, 0);
+        assert!(!unet.graph.is_chain(), "skip connections branch the graph");
+        assert_eq!(unet.graph.branch_points().len(), unet.graph.join_points().len());
     }
 }

@@ -1,0 +1,303 @@
+//! U-Net multi-branch vision workload (issue 5): an encoder/decoder mirror
+//! whose skip connections put a branch point at *every* resolution level —
+//! the stress test for the StageGraph's branch/join liveness accounting.
+//!
+//! Shape (levels = 4):
+//!
+//! ```text
+//!  stem -> enc.0 -> enc.1 -> enc.2 -> enc.3 -> mid
+//!            |        |        |        |       |
+//!            |        |        |        +-> dec.3
+//!            |        |        +----------> dec.2
+//!            |        +-------------------> dec.1
+//!            +----------------------------> dec.0 -> head
+//! ```
+//!
+//! Every `enc.l` output feeds both the next encoder level and the mirrored
+//! decoder level — `levels` branch points whose outputs stay live until the
+//! matching decoder stage's backward, and `levels` join stages consuming
+//! (previous decoder state, skip). Like the seq2seq cross stages, a decoder
+//! stage declares only its *decoder-side* input as `ckpt_bytes`: the skip it
+//! also reads is accounted once, at the branch point, never per consumer.
+//!
+//! Memory is exactly quadratic in the input resolution (every tensor is
+//! `side_l² x ch_l` with `side_l = img / 2^l`), so under random-resize
+//! augmentation the quadratic estimator is exact — U-Net is the *smooth*
+//! vision workload, unlike Swin whose window padding steps the curve (§4.3).
+
+use super::{ModelProfile, Stage, StageKind};
+
+/// Bytes of one f32 tensor of `elems` elements.
+fn f32_bytes(elems: u64) -> u64 {
+    4 * elems
+}
+
+/// Convolutional U-Net: `levels` resolution halvings, channels doubling per
+/// level, one conv block per encoder/decoder level plus stem, bottleneck,
+/// and a 1x1 segmentation head.
+#[derive(Clone, Debug)]
+pub struct UnetSpec {
+    /// Nominal (maximum-augmentation) input resolution, square.
+    pub img: usize,
+    /// Channels at full resolution; doubles each level down.
+    pub base: usize,
+    /// Resolution levels (encoder depth); `img` must be divisible by
+    /// `2^levels` for the halving chain to stay exact.
+    pub levels: usize,
+    /// Segmentation classes (head output width).
+    pub classes: usize,
+}
+
+impl Default for UnetSpec {
+    fn default() -> Self {
+        // Ronneberger-style shape scaled for the simulated budgets:
+        // 4 levels, base 32, 21 classes (PASCAL VOC).
+        UnetSpec { img: 256, base: 32, levels: 4, classes: 21 }
+    }
+}
+
+impl UnetSpec {
+    /// Channel width at level `l` (level 0 = full resolution).
+    pub fn channels(&self, l: usize) -> u64 {
+        (self.base as u64) << l
+    }
+
+    /// fp32 parameter count: 3x3 conv pairs per block (+norm), the concat
+    /// conv on the decoder side, and the 1x1 head.
+    pub fn param_count(&self) -> u64 {
+        let base = self.base as u64;
+        let mut p = 9 * 3 * base + 2 * base; // stem
+        for l in 0..self.levels {
+            let ch = self.channels(l);
+            let ch_in = if l == 0 { base } else { ch / 2 };
+            p += 9 * ch_in * ch + 9 * ch * ch + 2 * ch;
+        }
+        let chm = self.channels(self.levels);
+        p += 9 * (chm / 2) * chm + 9 * chm * chm + 2 * chm; // bottleneck
+        for l in 0..self.levels {
+            let ch = self.channels(l);
+            p += 9 * 2 * ch * ch + 9 * ch * ch + 2 * ch; // concat conv + conv
+        }
+        p + base * self.classes as u64 + self.classes as u64
+    }
+
+    /// Params + grads + Adam m/v, fp32 (same accounting as `ModelSpec`).
+    pub fn fixed_state_bytes(&self) -> u64 {
+        self.param_count() * 16
+    }
+
+    /// The planner-facing profile at one augmentation resolution.
+    pub fn profile(&self, batch: usize, img: usize) -> ModelProfile {
+        let b = batch as u64;
+        let base = self.base as u64;
+        let img64 = img as u64;
+        let levels = self.levels;
+        let mut stages: Vec<Stage> = Vec::with_capacity(2 * levels + 3);
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+
+        // stem: 3 -> base channels at full resolution (conv out + norm)
+        stages.push(Stage {
+            id: 0,
+            name: "stem".into(),
+            kind: StageKind::Embed,
+            fwd_order: 0,
+            act_bytes: f32_bytes(2 * img64 * img64 * base * b),
+            ckpt_bytes: f32_bytes(img64 * img64 * 3 * b), // the input image
+            fwd_flops: 2 * 9 * img64 * img64 * 3 * base * b,
+            transient_bytes: 0,
+        });
+
+        // encoder: one conv block per level; each level's output feeds BOTH
+        // the next level and the mirrored decoder stage (the skip)
+        let mut enc_ids = Vec::with_capacity(levels);
+        let mut prev = 0usize;
+        for l in 0..levels {
+            let side = (img >> l) as u64;
+            let ch = self.channels(l);
+            let ch_in = if l == 0 { base } else { ch / 2 };
+            let id = stages.len();
+            stages.push(Stage {
+                id,
+                name: format!("enc.{l}"),
+                kind: StageKind::Encoder,
+                fwd_order: id,
+                act_bytes: f32_bytes(3 * side * side * ch * b),
+                ckpt_bytes: f32_bytes(side * side * ch_in * b),
+                fwd_flops: 2 * 9 * side * side * ch_in * ch * b
+                    + 2 * 9 * side * side * ch * ch * b,
+                transient_bytes: 0,
+            });
+            edges.push((prev, id));
+            enc_ids.push(id);
+            prev = id;
+        }
+
+        // bottleneck at the deepest resolution
+        let sm = (img >> levels) as u64;
+        let chm = self.channels(levels);
+        let mid = stages.len();
+        stages.push(Stage {
+            id: mid,
+            name: "mid".into(),
+            kind: StageKind::Encoder,
+            fwd_order: mid,
+            act_bytes: f32_bytes(3 * sm * sm * chm * b),
+            ckpt_bytes: f32_bytes(sm * sm * (chm / 2) * b),
+            fwd_flops: 2 * 9 * sm * sm * (chm / 2) * chm * b + 2 * 9 * sm * sm * chm * chm * b,
+            transient_bytes: 0,
+        });
+        edges.push((prev, mid));
+        prev = mid;
+
+        // decoder: upsample + concat(skip) + conv block, deepest level first.
+        // ckpt_bytes is the decoder-side (upsampled) input only — the skip is
+        // accounted at its branch point, exactly like seq2seq cross stages.
+        for l in (0..levels).rev() {
+            let side = (img >> l) as u64;
+            let ch = self.channels(l);
+            let id = stages.len();
+            stages.push(Stage {
+                id,
+                name: format!("dec.{l}"),
+                kind: StageKind::Decoder,
+                fwd_order: id,
+                act_bytes: f32_bytes(4 * side * side * ch * b),
+                ckpt_bytes: f32_bytes(side * side * ch * b),
+                fwd_flops: 2 * 9 * side * side * 2 * ch * ch * b
+                    + 2 * 9 * side * side * ch * ch * b,
+                transient_bytes: 0,
+            });
+            edges.push((prev, id));
+            edges.push((enc_ids[l], id)); // the skip join
+            prev = id;
+        }
+
+        // 1x1 segmentation head: fused fwd+bwd, transient logits
+        let head = stages.len();
+        stages.push(Stage {
+            id: head,
+            name: "head".into(),
+            kind: StageKind::Head,
+            fwd_order: head,
+            act_bytes: 0,
+            ckpt_bytes: 0,
+            fwd_flops: 2 * img64 * img64 * base * self.classes as u64 * b,
+            transient_bytes: f32_bytes(2 * img64 * img64 * self.classes as u64 * b),
+        });
+        edges.push((prev, head));
+
+        let graph = super::StageGraph::new(stages, &edges).expect("unet builder emits a valid DAG");
+        ModelProfile::from_graph(graph, self.fixed_state_bytes(), batch, img, 0)
+    }
+}
+
+/// Build the U-Net profile for one augmentation resolution (the
+/// `task_profile` entry point for `Task::Unet`).
+pub fn unet_profile(spec: &UnetSpec, batch: usize, img: usize) -> ModelProfile {
+    spec.profile(batch, img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::GIB;
+
+    #[test]
+    fn unet_graph_has_a_branch_point_per_resolution() {
+        let spec = UnetSpec::default();
+        let p = spec.profile(32, 256);
+        let g = &p.graph;
+        assert_eq!(g.len(), 2 * spec.levels + 3);
+        assert!(!g.is_chain(), "skip connections break the chain");
+        // every encoder level is a branch point (next level + skip)
+        let bps = g.branch_points();
+        assert_eq!(bps.len(), spec.levels);
+        for (l, &bp) in bps.iter().enumerate() {
+            assert_eq!(g.stage(bp).name, format!("enc.{l}"));
+        }
+        // every decoder level is a join (previous decoder + skip)
+        let joins = g.join_points();
+        assert_eq!(joins.len(), spec.levels);
+        for &j in &joins {
+            assert_eq!(g.stage(j).kind, StageKind::Decoder);
+            assert_eq!(g.preds(j).len(), 2);
+        }
+        // enc.0's output is live until dec.0's backward (the LAST stage
+        // before the head) — the longest skip in the mirror
+        let dec0 = g
+            .stages()
+            .iter()
+            .find(|s| s.name == "dec.0")
+            .expect("dec.0 present")
+            .id;
+        let pos = g.topo_order().iter().position(|&t| t == dec0).unwrap();
+        assert_eq!(g.last_use(bps[0]), pos);
+    }
+
+    #[test]
+    fn unet_memory_is_exactly_quadratic_in_resolution() {
+        // side_l = img / 2^l is exact on the 32-multiple augmentation grid,
+        // so doubling the resolution exactly quadruples every stage's bytes
+        // (the smooth-curve property Swin's window padding lacks).
+        let spec = UnetSpec::default();
+        let a = spec.profile(8, 128);
+        let b = spec.profile(8, 256);
+        for (sa, sb) in a.layers().iter().zip(b.layers()) {
+            if sa.act_bytes > 0 {
+                assert_eq!(sb.act_bytes, 4 * sa.act_bytes, "{}", sa.name);
+            }
+            assert_eq!(sb.ckpt_bytes, 4 * sa.ckpt_bytes, "{}", sa.name);
+        }
+        assert_eq!(b.total_act_bytes(), 4 * a.total_act_bytes());
+    }
+
+    #[test]
+    fn unet_scale_matches_budget_scenario() {
+        // The acceptance scenario's arithmetic: at batch 32 the no-plan peak
+        // at 224+ px exceeds 3 GiB while the conservative plan stays well
+        // under it at every augmentation resolution.
+        let spec = UnetSpec::default();
+        let p256 = spec.profile(32, 256);
+        assert!(p256.peak_bytes(&[]) > 3 * GIB, "peak {}", p256.peak_bytes(&[]));
+        let p224 = spec.profile(32, 224);
+        assert!(p224.peak_bytes(&[]) > 3 * GIB);
+        let p192 = spec.profile(32, 192);
+        assert!(p192.peak_bytes(&[]) < 3 * GIB, "192 px fits without a plan");
+        for img in [128, 160, 192, 224, 256] {
+            let p = spec.profile(32, img);
+            let all: Vec<usize> = crate::planners::checkpointable(&p)
+                .iter()
+                .map(|c| c.id())
+                .collect();
+            assert!(
+                p.peak_bytes(&all) < 2 * GIB,
+                "conservative peak at {img}: {}",
+                p.peak_bytes(&all)
+            );
+        }
+        // fixed state is small: the workload is activation-dominated
+        assert!(p256.fixed_bytes < GIB / 4);
+    }
+
+    #[test]
+    fn skip_credit_applies_to_stages_fed_by_branch_points_only() {
+        let p = UnetSpec::default().profile(8, 128);
+        let g = &p.graph;
+        // enc.1's sole input is the branch point enc.0: full-savings credit
+        let enc1 = 2;
+        assert_eq!(g.marginal_ckpt_bytes(enc1), 0);
+        // dec.0's inputs are (dec.1, enc.0) — dec.1 is single-consumer, so
+        // the declared decoder-side input is paid
+        let dec0 = g.stages().iter().find(|s| s.name == "dec.0").unwrap().id;
+        assert_eq!(g.marginal_ckpt_bytes(dec0), g.stage(dec0).ckpt_bytes);
+        // checkpointing the branch point revokes its consumers' credit
+        assert_eq!(g.planned_ckpt_bytes(enc1, &[enc1]), 0);
+        assert_eq!(g.planned_ckpt_bytes(enc1, &[1, enc1]), g.stage(enc1).ckpt_bytes);
+    }
+
+    #[test]
+    fn param_count_is_unet_scale() {
+        let m = UnetSpec::default().param_count() as f64 / 1e6;
+        assert!((3.0..40.0).contains(&m), "params {m}M");
+    }
+}

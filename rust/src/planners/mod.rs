@@ -8,15 +8,24 @@
 //!   eviction when OOM fires, h(t) = cost / (mem * staleness).
 //! * `MimosePlanner` — this paper: online collector + quadratic estimator +
 //!   graph-aware Algorithm 1 scheduler + plan cache.
+//! * `OptimalPlanner` — graph-optimal checkpoint oracle (offline-only):
+//!   heterogeneous-chain DP / branch-and-bound search finding the true
+//!   minimum-recompute plan; the quality baseline the greedy scheduler is
+//!   measured against (`tests/optimal_oracle.rs`).
 //!
 //! All planners consume the [`crate::model::StageGraph`]-backed
 //! [`ModelProfile`] — chains and branch/join graphs alike.
 
 pub mod dtr;
 pub mod mimose;
+pub mod optimal;
 
 pub use dtr::DtrPlanner;
 pub use mimose::MimosePlanner;
+pub use optimal::{
+    greedy_feasible_plan, optimal_chain_plan, optimal_graph_plan, optimal_plan, OptimalConfig,
+    OptimalPlan, OptimalPlanner, PlanSource,
+};
 
 use crate::collector::Observation;
 use crate::coordinator::{Coordinator, Phase};

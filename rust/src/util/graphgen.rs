@@ -1,0 +1,305 @@
+//! Randomized [`StageGraph`] generator (issue 5): the fuzz substrate behind
+//! the oracle differentials in `tests/optimal_oracle.rs` and the optimality
+//! gap measurement in `benches/perf_hotpaths.rs`.
+//!
+//! Every generator emits graphs satisfying the builder invariants the rest
+//! of the system relies on: contiguous ids, `fwd_order == id`, edges only
+//! from lower to higher ids (so the topological order is the id order),
+//! `ckpt_bytes <= act_bytes`, and at most one trailing `Head` stage. Shapes:
+//!
+//! * [`chain`] — the classic layer list;
+//! * [`diamond`] — one branch point fanning into parallel single-stage
+//!   branches re-joined by one stage (the minimal branch/join liveness case);
+//! * [`unet`] — encoder/decoder mirror with a skip branch/join pair per
+//!   level (the issue's multi-branch workload, in miniature);
+//! * [`dag`] — random DAG with controlled fan-out: each stage consumes
+//!   1..=`max_fanin` earlier stages, and no stage's fan-out exceeds
+//!   `max_fanout`.
+//!
+//! [`random_graph`] draws a shape uniformly. Sizes stay small by design —
+//! the exact search the graphs feed is exponential in the worst case.
+
+use crate::model::{ModelProfile, Stage, StageGraph, StageKind};
+use crate::util::rng::Rng;
+
+/// Size envelope for generated stages.
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    /// Max activation bytes per stage (min 0; ckpt drawn within act).
+    pub max_act: u64,
+    /// Max forward FLOPs per stage (min 1 — zero-FLOP stages would make
+    /// the oracle's minimum non-unique in uninteresting ways; ties are
+    /// still exercised because draws collide).
+    pub max_flops: u64,
+    /// Probability a stage carries transient working-set bytes.
+    pub transient_p: f64,
+    /// Probability the final stage is a `Head`.
+    pub head_p: f64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { max_act: 1000, max_flops: 1000, transient_p: 0.2, head_p: 0.4 }
+    }
+}
+
+fn gen_stage(rng: &mut Rng, cfg: &GenConfig, id: usize, kind: StageKind) -> Stage {
+    let act = rng.range_u(0, cfg.max_act as usize) as u64;
+    let ckpt = if act == 0 { 0 } else { rng.range_u(0, act as usize) as u64 };
+    let transient = if rng.f64() < cfg.transient_p {
+        rng.range_u(0, (cfg.max_act / 8).max(1) as usize) as u64
+    } else {
+        0
+    };
+    Stage {
+        id,
+        name: format!("g{id}"),
+        kind,
+        fwd_order: id,
+        act_bytes: act,
+        ckpt_bytes: ckpt,
+        fwd_flops: rng.range_u(1, cfg.max_flops as usize) as u64,
+        transient_bytes: transient,
+    }
+}
+
+fn maybe_head(rng: &mut Rng, cfg: &GenConfig, stages: &mut [Stage]) {
+    if rng.f64() < cfg.head_p {
+        if let Some(last) = stages.last_mut() {
+            last.kind = StageKind::Head;
+        }
+    }
+}
+
+/// A random chain of `n >= 1` stages.
+pub fn chain(rng: &mut Rng, cfg: &GenConfig, n: usize) -> StageGraph {
+    let n = n.max(1);
+    let mut stages: Vec<Stage> =
+        (0..n).map(|i| gen_stage(rng, cfg, i, StageKind::Encoder)).collect();
+    maybe_head(rng, cfg, &mut stages);
+    StageGraph::chain(stages)
+}
+
+/// Root -> `width` parallel branches -> join (optionally -> tail).
+pub fn diamond(rng: &mut Rng, cfg: &GenConfig, width: usize) -> StageGraph {
+    let width = width.max(2);
+    let mut stages = vec![gen_stage(rng, cfg, 0, StageKind::Encoder)];
+    let mut edges = Vec::new();
+    for b in 0..width {
+        stages.push(gen_stage(rng, cfg, 1 + b, StageKind::Encoder));
+        edges.push((0, 1 + b));
+    }
+    let join = width + 1;
+    stages.push(gen_stage(rng, cfg, join, StageKind::Encoder));
+    for b in 0..width {
+        edges.push((1 + b, join));
+    }
+    if rng.f64() < 0.5 {
+        stages.push(gen_stage(rng, cfg, join + 1, StageKind::Encoder));
+        edges.push((join, join + 1));
+        maybe_head(rng, cfg, &mut stages);
+    }
+    StageGraph::new(stages, &edges).expect("diamond generator emits a valid DAG")
+}
+
+/// Miniature U-Net mirror: stem -> enc.0..enc.L-1 -> mid -> dec.L-1..dec.0
+/// -> head, with a skip edge `enc.l -> dec.l` at every level (each `enc.l`
+/// is a branch point, each `dec.l` a join).
+pub fn unet(rng: &mut Rng, cfg: &GenConfig, levels: usize) -> StageGraph {
+    let levels = levels.max(1);
+    let mut stages = vec![gen_stage(rng, cfg, 0, StageKind::Encoder)];
+    let mut edges = Vec::new();
+    let mut enc_ids = Vec::with_capacity(levels);
+    let mut prev = 0usize;
+    for _ in 0..levels {
+        let id = stages.len();
+        stages.push(gen_stage(rng, cfg, id, StageKind::Encoder));
+        edges.push((prev, id));
+        enc_ids.push(id);
+        prev = id;
+    }
+    let mid = stages.len();
+    stages.push(gen_stage(rng, cfg, mid, StageKind::Encoder));
+    edges.push((prev, mid));
+    prev = mid;
+    for l in (0..levels).rev() {
+        let id = stages.len();
+        stages.push(gen_stage(rng, cfg, id, StageKind::Decoder));
+        edges.push((prev, id));
+        edges.push((enc_ids[l], id));
+        prev = id;
+    }
+    let head = stages.len();
+    stages.push(gen_stage(rng, cfg, head, StageKind::Head));
+    edges.push((prev, head));
+    StageGraph::new(stages, &edges).expect("unet generator emits a valid DAG")
+}
+
+/// Random DAG: stage `j > 0` consumes 1..=`max_fanin` uniformly-drawn
+/// earlier stages whose fan-out is still below `max_fanout` (falling back
+/// to its predecessor `j-1` if every draw is saturated, which keeps the
+/// graph connected).
+pub fn dag(rng: &mut Rng, cfg: &GenConfig, n: usize, max_fanin: usize, max_fanout: usize) -> StageGraph {
+    let n = n.max(1);
+    let max_fanin = max_fanin.max(1);
+    let max_fanout = max_fanout.max(1);
+    let mut stages: Vec<Stage> =
+        (0..n).map(|i| gen_stage(rng, cfg, i, StageKind::Encoder)).collect();
+    maybe_head(rng, cfg, &mut stages);
+    let mut fanout = vec![0usize; n];
+    let mut edges = Vec::new();
+    for j in 1..n {
+        let want = rng.range_u(1, max_fanin.min(j));
+        let mut picked = Vec::new();
+        for _ in 0..want {
+            let p = rng.range_u(0, j - 1);
+            if fanout[p] < max_fanout && !picked.contains(&p) {
+                picked.push(p);
+            }
+        }
+        if picked.is_empty() {
+            picked.push(j - 1); // connectivity fallback (may exceed fan-out)
+        }
+        for p in picked {
+            fanout[p] += 1;
+            edges.push((p, j));
+        }
+    }
+    StageGraph::new(stages, &edges).expect("dag generator emits a valid DAG")
+}
+
+/// The shapes [`random_graph`] draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphShape {
+    Chain,
+    Diamond,
+    Unet,
+    Dag,
+}
+
+/// Draw a random graph of ≤ `max_stages` stages, uniform over the four
+/// shapes. Returns the shape alongside so tests can partition assertions.
+pub fn random_graph(rng: &mut Rng, cfg: &GenConfig, max_stages: usize) -> (StageGraph, GraphShape) {
+    let max_stages = max_stages.max(6);
+    match rng.range_u(0, 3) {
+        0 => {
+            // size draws are hoisted: a free fn can't take `rng` twice
+            let n = rng.range_u(1, max_stages);
+            (chain(rng, cfg, n), GraphShape::Chain)
+        }
+        1 => {
+            let width = rng.range_u(2, (max_stages.saturating_sub(3)).max(2).min(5));
+            (diamond(rng, cfg, width), GraphShape::Diamond)
+        }
+        2 => {
+            // 2L + 3 stages for L levels
+            let levels = rng.range_u(1, ((max_stages.saturating_sub(3)) / 2).max(1));
+            (unet(rng, cfg, levels), GraphShape::Unet)
+        }
+        _ => {
+            let n = rng.range_u(2, max_stages);
+            (dag(rng, cfg, n, 3, 3), GraphShape::Dag)
+        }
+    }
+}
+
+/// Wrap a generated graph in a planner-facing profile (`fixed_bytes` of
+/// run-constant state; the dynamic-axis fields are irrelevant for oracle
+/// differentials and set to 1).
+pub fn profile_of(graph: StageGraph, fixed_bytes: u64) -> ModelProfile {
+    ModelProfile::from_graph(graph, fixed_bytes, 1, 1, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(7)
+    }
+
+    #[test]
+    fn chains_are_chains() {
+        let mut r = rng();
+        let cfg = GenConfig::default();
+        for _ in 0..50 {
+            let n = r.range_u(1, 12);
+            let g = chain(&mut r, &cfg, n);
+            assert!(g.is_chain());
+            assert!(g.stages().iter().all(|s| s.ckpt_bytes <= s.act_bytes));
+            assert!(g.stages().iter().all(|s| s.fwd_flops >= 1));
+        }
+    }
+
+    #[test]
+    fn diamonds_branch_and_join() {
+        let mut r = rng();
+        let cfg = GenConfig::default();
+        for _ in 0..50 {
+            let width = r.range_u(2, 5);
+            let g = diamond(&mut r, &cfg, width);
+            assert!(!g.is_chain());
+            assert_eq!(g.branch_points(), vec![0]);
+            assert_eq!(g.join_points().len(), 1);
+        }
+    }
+
+    #[test]
+    fn unets_have_a_branch_join_pair_per_level() {
+        let mut r = rng();
+        let cfg = GenConfig::default();
+        for levels in 1..5 {
+            let g = unet(&mut r, &cfg, levels);
+            assert_eq!(g.len(), 2 * levels + 3);
+            assert_eq!(g.branch_points().len(), levels);
+            assert_eq!(g.join_points().len(), levels);
+            assert_eq!(g.stages().last().unwrap().kind, StageKind::Head);
+        }
+    }
+
+    #[test]
+    fn dags_respect_fanout_modulo_connectivity_fallback() {
+        let mut r = rng();
+        let cfg = GenConfig::default();
+        for _ in 0..50 {
+            let n = r.range_u(2, 14);
+            let g = dag(&mut r, &cfg, n, 3, 2);
+            // every non-root stage is reachable (has at least one pred)
+            for i in 1..g.len() {
+                assert!(!g.preds(i).is_empty(), "stage {i} disconnected");
+            }
+            // fan-out ≤ cap + the connectivity fallback allowance
+            for i in 0..g.len() {
+                assert!(g.succs(i).len() <= 2 + 1, "fan-out blew the cap at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_graph_is_deterministic_per_seed() {
+        let cfg = GenConfig::default();
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        for _ in 0..20 {
+            let (ga, sa) = random_graph(&mut a, &cfg, 12);
+            let (gb, sb) = random_graph(&mut b, &cfg, 12);
+            assert_eq!(sa, sb);
+            assert_eq!(ga.len(), gb.len());
+            for (x, y) in ga.stages().iter().zip(gb.stages()) {
+                assert_eq!(x.act_bytes, y.act_bytes);
+                assert_eq!(x.fwd_flops, y.fwd_flops);
+            }
+        }
+    }
+
+    #[test]
+    fn profile_of_wraps_the_graph() {
+        let mut r = rng();
+        let cfg = GenConfig::default();
+        let (g, _) = random_graph(&mut r, &cfg, 10);
+        let n = g.len();
+        let p = profile_of(g, 500);
+        assert_eq!(p.layers().len(), n);
+        assert_eq!(p.fixed_bytes, 500);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod graphgen;
 pub mod json;
 pub mod proptest;
 pub mod rng;
