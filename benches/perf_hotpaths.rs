@@ -7,6 +7,8 @@
 //!   allocator alloc/free pair  ~ sub-µs
 //!   SimEngine full iteration   << simulated iteration time (else the
 //!                              harness, not the model, dominates sweeps)
+//!   event-core step (queue pop + incremental refill + push) near-constant
+//!                              in fleet size (512 vs 64 tenants)
 
 #[path = "common.rs"]
 mod common;
@@ -15,6 +17,7 @@ use common::{rule, write_bench_json_with_metrics, write_tsv};
 use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
 use mimose::engine::sim::SimEngine;
 use mimose::estimator::{MemoryEstimator, Sample};
+use mimose::fleet::{EventKind, EventQueue};
 use mimose::memory::CachingAllocator;
 use mimose::model::{seq2seq_profile, transformer_profile, Stage, StageKind};
 use mimose::planners::{greedy_feasible_plan, optimal_chain_plan, optimal_graph_plan};
@@ -162,6 +165,58 @@ fn main() {
     // and must never rival an iteration's simulated time
     assert!(r.mean_s < 1e-3, "broker decisions must stay sub-millisecond");
 
+    rule("Perf — event core at fleet scale");
+    // the liveness-sync fix (binary search instead of Vec::contains) keeps
+    // a FULL fill near-linear in the tenant count
+    let mk_demand = |i: u64| mimose::fleet::JobDemand {
+        id: i,
+        weight: 1.0 + (i % 4) as f64,
+        floor: GIB / 8,
+        predicted: Some(GIB / 4 + (i % 5) * (GIB / 8)),
+    };
+    let demands512: Vec<mimose::fleet::JobDemand> = (0..512u64).map(mk_demand).collect();
+    let mut broker512 = mimose::fleet::BudgetBroker::new(128 * GIB, 128 << 20, 0.5);
+    let r = record(bench("fleet_broker/allocate_512_jobs", BUDGET, || {
+        black_box(broker512.allocate(black_box(&demands512)).unwrap());
+    }));
+    assert!(r.mean_s < 10e-3, "a full 512-tenant fill must stay in the low milliseconds");
+
+    // one discrete event = queue pop + incremental single-tenant refill +
+    // queue push. The whole point of the event core: this cost must be
+    // (near-)independent of how many tenants the fleet tracks.
+    let mut bench_events = |n: u64, global: u64| {
+        let demands: Vec<mimose::fleet::JobDemand> = (0..n).map(mk_demand).collect();
+        let mut broker = mimose::fleet::BudgetBroker::new(global, 128 << 20, 0.5);
+        broker.allocate(&demands).unwrap();
+        let mut q = EventQueue::new();
+        for i in 0..n {
+            q.push(i as f64, EventKind::IterationComplete { id: i });
+        }
+        let mut t = n as f64;
+        record(bench(&format!("event_core/step_{n}_tenants"), BUDGET, || {
+            let e = q.pop().unwrap();
+            let id = match e.kind {
+                EventKind::IterationComplete { id } => id,
+                _ => unreachable!(),
+            };
+            black_box(broker.update(black_box(&[mk_demand(id)])).unwrap());
+            q.push(t, EventKind::IterationComplete { id });
+            t += 1.0;
+        }))
+    };
+    let r64 = bench_events(64, 16 * GIB);
+    let r512 = bench_events(512, 128 * GIB);
+    // 8x the tenants may cost at most ~log-factor more per event — a linear
+    // per-event scan would show up as ~8x here
+    assert!(
+        r512.mean_s < 4.0 * r64.mean_s,
+        "per-event cost scales with fleet size: {:.3} us at 512 vs {:.3} us at 64",
+        r512.mean_s * 1e6,
+        r64.mean_s * 1e6
+    );
+    let events_per_sec = 1.0 / r512.mean_s.max(1e-12);
+    let events_per_sec_64 = 1.0 / r64.mean_s.max(1e-12);
+
     rule("Perf — caching allocator");
     let mut alloc = CachingAllocator::new(8 * GIB);
     record(bench("allocator/alloc_free_64MB", BUDGET, || {
@@ -197,6 +252,10 @@ fn main() {
     write_bench_json_with_metrics(
         "hotpaths",
         &results,
-        &[("mean_optimality_gap", mean_gap)],
+        &[
+            ("mean_optimality_gap", mean_gap),
+            ("events_per_sec", events_per_sec),
+            ("events_per_sec_64", events_per_sec_64),
+        ],
     );
 }

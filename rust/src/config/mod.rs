@@ -522,6 +522,42 @@ impl FleetEvent {
     }
 }
 
+/// How the fleet advances simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pacing {
+    /// The legacy interleaved round loop: every live job runs exactly one
+    /// iteration per round, O(all jobs) per round. Kept as the differential
+    /// reference for the event core.
+    Rounds,
+    /// Discrete-event core with every iteration lasting one tick — cohorts
+    /// coincide with rounds, so behaviour is identical to `Rounds` while
+    /// exercising the event machinery. The default.
+    Lockstep,
+    /// Discrete-event core with iteration durations taken from each job's
+    /// simulated iteration time: fast tenants genuinely run more
+    /// iterations per unit time than slow ones.
+    Profiled,
+}
+
+impl Pacing {
+    pub fn parse(s: &str) -> Option<Pacing> {
+        match s.to_ascii_lowercase().as_str() {
+            "rounds" => Some(Pacing::Rounds),
+            "lockstep" => Some(Pacing::Lockstep),
+            "profiled" => Some(Pacing::Profiled),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pacing::Rounds => "rounds",
+            Pacing::Lockstep => "lockstep",
+            Pacing::Profiled => "profiled",
+        }
+    }
+}
+
 /// The multi-job fleet: N concurrent training jobs time-sharing ONE device
 /// memory budget through the [`crate::fleet`] broker. `[fleet]` in TOML.
 #[derive(Clone, Debug)]
@@ -557,6 +593,12 @@ pub struct FleetConfig {
     /// Base RNG seed; the job with fleet id `i` streams inputs with seed
     /// `seed + i` (ids are assigned in arrival order, initial jobs first).
     pub seed: u64,
+    /// How simulated time advances (see [`Pacing`]).
+    pub pacing: Pacing,
+    /// Simulated milliseconds per round tick: scripted event rounds map to
+    /// instant `at_round * tick_ms`, and the run horizon is
+    /// `steps * tick_ms`. Only `Profiled` pacing consumes it.
+    pub tick_ms: f64,
     pub mimose: MimoseConfig,
     pub coordinator: CoordinatorConfig,
 }
@@ -575,6 +617,8 @@ impl Default for FleetConfig {
             jobs: JobSpec::from_tasks(&[Task::TcBert, Task::QaBert]),
             events: Vec::new(),
             seed: 42,
+            pacing: Pacing::Lockstep,
+            tick_ms: 200.0,
             mimose: MimoseConfig::default(),
             coordinator: CoordinatorConfig::default(),
         }
@@ -663,6 +707,19 @@ impl FleetConfig {
             jobs,
             events,
             seed: doc.get_usize("fleet.seed", 42) as u64,
+            pacing: {
+                let s = doc.get_str("fleet.pacing", d.pacing.name());
+                Pacing::parse(&s).ok_or_else(|| {
+                    format!("fleet.pacing must be 'rounds', 'lockstep' or 'profiled', got '{s}'")
+                })?
+            },
+            tick_ms: {
+                let t = doc.get_f64("fleet.tick_ms", d.tick_ms);
+                if t <= 0.0 || !t.is_finite() {
+                    return Err(format!("fleet.tick_ms must be a positive duration, got {t}"));
+                }
+                t
+            },
             mimose: MimoseConfig::from_doc(doc),
             coordinator: CoordinatorConfig::from_doc(doc),
         })
@@ -823,7 +880,31 @@ mod tests {
         );
         assert!(c.events.is_empty());
         assert_eq!(c.seed, 9);
+        assert_eq!(c.pacing, Pacing::Lockstep, "event core is the default");
+        assert!((c.tick_ms - 200.0).abs() < 1e-12);
         assert_eq!(c.mimose.collect_iters, 8, "[mimose] section shared with fleet");
+    }
+
+    #[test]
+    fn fleet_pacing_from_toml() {
+        for (name, want) in [
+            ("rounds", Pacing::Rounds),
+            ("lockstep", Pacing::Lockstep),
+            ("profiled", Pacing::Profiled),
+        ] {
+            let doc =
+                Doc::parse(&format!("[fleet]\npacing = \"{name}\"\ntick_ms = 50.0\n")).unwrap();
+            let c = FleetConfig::from_doc(&doc).unwrap();
+            assert_eq!(c.pacing, want);
+            assert!((c.tick_ms - 50.0).abs() < 1e-12);
+            assert_eq!(Pacing::parse(want.name()), Some(want), "name/parse round-trip");
+        }
+        let doc = Doc::parse("[fleet]\npacing = \"warp\"\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err(), "unknown pacing rejected");
+        let doc = Doc::parse("[fleet]\ntick_ms = 0.0\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err(), "non-positive tick rejected");
+        let doc = Doc::parse("[fleet]\ntick_ms = -3.0\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
     }
 
     #[test]

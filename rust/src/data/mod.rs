@@ -12,9 +12,11 @@
 
 pub mod corpus;
 pub mod tokenizer;
+pub mod trace;
 
 pub use corpus::{Corpus, CorpusConfig};
 pub use tokenizer::Tokenizer;
+pub use trace::{Interarrival, JobLength, TraceConfig};
 
 use crate::config::Task;
 use crate::util::rng::Rng;

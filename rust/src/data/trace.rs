@@ -1,0 +1,285 @@
+//! Trace-style fleet workloads: scripted arrival/departure timelines with
+//! production-shaped statistics.
+//!
+//! Cluster traces (Philly, Helios, PAI) agree on two properties the fleet
+//! scheduler must survive: *heavy-tailed job lengths* (most jobs are short,
+//! a few run for days) and *bursty arrivals* (submission spikes, not a
+//! smooth Poisson stream). The generators here turn those shapes into
+//! [`FleetEvent`] timelines — the same scripted format the TOML loader
+//! produces — so the discrete-event core can be driven at hundreds of
+//! tenants without hand-writing event lists.
+//!
+//! Everything is seeded through [`crate::util::rng::Rng`]: the same
+//! [`TraceConfig`] always yields the same timeline.
+
+use crate::config::{FleetEvent, JobSpec, Task};
+use crate::util::rng::Rng;
+
+/// Gap between consecutive job submissions, in fleet rounds.
+#[derive(Clone, Copy, Debug)]
+pub enum Interarrival {
+    /// Poisson process: exponential gaps with the given mean.
+    Exponential { mean_rounds: f64 },
+    /// Heavy-tailed gaps (bounded Pareto): long quiet stretches broken by
+    /// tight clusters — the "diurnal lull" shape.
+    Pareto { alpha: f64, min_rounds: f64, max_rounds: f64 },
+    /// Submission spikes: `size` jobs land at the same round, then an
+    /// exponential gap with the given mean before the next spike.
+    Bursty { size: usize, gap_rounds: f64 },
+}
+
+impl Interarrival {
+    /// Draw one gap (rounds, ≥ 0). For [`Interarrival::Bursty`] this is the
+    /// *between-spike* gap; the in-spike gap is zero and handled by
+    /// [`generate`].
+    pub fn sample_gap(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Interarrival::Exponential { mean_rounds } => {
+                -mean_rounds.max(0.0) * (1.0 - rng.f64()).ln()
+            }
+            Interarrival::Pareto { alpha, min_rounds, max_rounds } => {
+                rng.power_law(min_rounds.max(1e-9), max_rounds.max(min_rounds), alpha)
+            }
+            Interarrival::Bursty { gap_rounds, .. } => {
+                -gap_rounds.max(0.0) * (1.0 - rng.f64()).ln()
+            }
+        }
+    }
+
+    /// Jobs submitted per arrival instant (1 except for bursts).
+    pub fn burst_size(&self) -> usize {
+        match *self {
+            Interarrival::Bursty { size, .. } => size.max(1),
+            _ => 1,
+        }
+    }
+}
+
+/// How many iterations a trace job runs before it completes.
+#[derive(Clone, Copy, Debug)]
+pub enum JobLength {
+    /// Every job runs exactly `steps` iterations.
+    Fixed { steps: usize },
+    /// Uniform over `[lo, hi]`.
+    Uniform { lo: usize, hi: usize },
+    /// Bounded power law over `[lo, hi]` — many short jobs, a fat tail of
+    /// long ones (the trace-observed shape).
+    HeavyTail { alpha: f64, lo: usize, hi: usize },
+}
+
+impl JobLength {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            JobLength::Fixed { steps } => steps.max(1),
+            JobLength::Uniform { lo, hi } => rng.range_u(lo.max(1), hi.max(lo).max(1)),
+            JobLength::HeavyTail { alpha, lo, hi } => {
+                let lo = lo.max(1);
+                rng.power_law(lo as f64, hi.max(lo) as f64, alpha).round().max(1.0) as usize
+            }
+        }
+    }
+}
+
+/// One synthetic trace: arrival process + length distribution + task mix.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Task mix, assigned round-robin so every task sees coverage.
+    pub tasks: Vec<Task>,
+    pub interarrival: Interarrival,
+    pub length: JobLength,
+    /// Arrivals land in rounds `1..max_round` — set this to the fleet's
+    /// `steps` so every event fires inside the run.
+    pub max_round: usize,
+    /// Emit a paired scripted `Depart` event at `arrival + length` when it
+    /// fits inside the timeline (exercising the event core's departure
+    /// path); otherwise the job self-retires via `JobSpec::steps`.
+    pub scripted_departures: bool,
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    pub fn new(tasks: Vec<Task>, max_round: usize, seed: u64) -> Self {
+        TraceConfig {
+            tasks,
+            interarrival: Interarrival::Exponential { mean_rounds: 4.0 },
+            length: JobLength::HeavyTail { alpha: 1.8, lo: 5, hi: 200 },
+            max_round,
+            scripted_departures: false,
+            seed,
+        }
+    }
+}
+
+/// Generate the scripted timeline: `Arrive` events named `trace-<i>` in
+/// nondecreasing round order (plus paired `Depart`s when configured),
+/// sorted by round. Deterministic in `cfg.seed`.
+pub fn generate(cfg: &TraceConfig) -> Vec<FleetEvent> {
+    assert!(!cfg.tasks.is_empty(), "trace needs at least one task");
+    let mut rng = Rng::new(cfg.seed);
+    let burst = cfg.interarrival.burst_size();
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    let mut i = 0usize;
+    loop {
+        t += cfg.interarrival.sample_gap(&mut rng);
+        let round = (t.ceil() as usize).max(1);
+        if round >= cfg.max_round {
+            break;
+        }
+        for _ in 0..burst {
+            let len = cfg.length.sample(&mut rng);
+            let name = format!("trace-{i}");
+            let done = round + len;
+            let mut spec = JobSpec::new(cfg.tasks[i % cfg.tasks.len()]);
+            spec.name = Some(name.clone());
+            if cfg.scripted_departures && done < cfg.max_round {
+                events.push(FleetEvent::Depart { job: name, at_round: done });
+            } else {
+                spec.steps = len;
+            }
+            events.push(FleetEvent::Arrive { spec, at_round: round });
+            i += 1;
+        }
+    }
+    events.sort_by_key(|e| e.at_round());
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrivals(events: &[FleetEvent]) -> Vec<(usize, String, usize)> {
+        events
+            .iter()
+            .filter_map(|e| match e {
+                FleetEvent::Arrive { spec, at_round } => {
+                    Some((*at_round, spec.name.clone().unwrap(), spec.steps))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_in_the_seed() {
+        let cfg = TraceConfig::new(vec![Task::TcBert, Task::McRoberta], 200, 42);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert!(!a.is_empty());
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let c = generate(&TraceConfig { seed: 43, ..cfg });
+        assert_ne!(format!("{a:?}"), format!("{c:?}"), "different seed, different trace");
+    }
+
+    #[test]
+    fn events_fit_the_timeline_and_names_are_unique() {
+        let mut cfg = TraceConfig::new(vec![Task::TcBert], 120, 7);
+        cfg.scripted_departures = true;
+        let events = generate(&cfg);
+        let mut names = std::collections::BTreeSet::new();
+        let mut arrive_round = std::collections::BTreeMap::new();
+        let mut last = 0usize;
+        for e in &events {
+            assert!(e.at_round() >= 1 && e.at_round() < 120, "round {} escapes", e.at_round());
+            assert!(e.at_round() >= last, "events must be sorted by round");
+            last = e.at_round();
+            if let FleetEvent::Arrive { spec, at_round } = e {
+                let name = spec.name.clone().unwrap();
+                assert!(names.insert(name.clone()), "duplicate job name {name}");
+                arrive_round.insert(name, *at_round);
+            }
+        }
+        for e in &events {
+            if let FleetEvent::Depart { job, at_round } = e {
+                let arrived = arrive_round.get(job).unwrap_or_else(|| panic!("{job} never arrived"));
+                assert!(at_round > arrived, "{job} departs before it arrives");
+            }
+        }
+    }
+
+    #[test]
+    fn self_retiring_jobs_carry_their_length_as_steps() {
+        let cfg = TraceConfig {
+            length: JobLength::Uniform { lo: 3, hi: 9 },
+            ..TraceConfig::new(vec![Task::McRoberta], 100, 11)
+        };
+        let events = generate(&cfg);
+        assert!(events.iter().all(|e| matches!(e, FleetEvent::Arrive { .. })));
+        for (_, _, steps) in arrivals(&events) {
+            assert!((3..=9).contains(&steps), "steps {steps} outside the draw range");
+        }
+    }
+
+    #[test]
+    fn heavy_tail_lengths_skew_right() {
+        let cfg = TraceConfig {
+            length: JobLength::HeavyTail { alpha: 1.5, lo: 5, hi: 500 },
+            max_round: 4000,
+            interarrival: Interarrival::Exponential { mean_rounds: 2.0 },
+            ..TraceConfig::new(vec![Task::TcBert], 4000, 3)
+        };
+        let mut lens: Vec<f64> =
+            arrivals(&generate(&cfg)).iter().map(|&(_, _, s)| s as f64).collect();
+        assert!(lens.len() > 300, "need a real sample, got {}", lens.len());
+        lens.sort_by(|a, b| a.total_cmp(b));
+        let median = lens[lens.len() / 2];
+        let mean = lens.iter().sum::<f64>() / lens.len() as f64;
+        assert!(mean > 1.2 * median, "mean {mean} vs median {median}: no right skew");
+        assert!(*lens.last().unwrap() > 10.0 * median, "no fat tail");
+    }
+
+    #[test]
+    fn bursts_land_whole_spikes_at_one_round() {
+        let cfg = TraceConfig {
+            interarrival: Interarrival::Bursty { size: 8, gap_rounds: 25.0 },
+            length: JobLength::Fixed { steps: 10 },
+            ..TraceConfig::new(vec![Task::TcBert], 300, 19)
+        };
+        let arr = arrivals(&generate(&cfg));
+        assert!(arr.len() >= 16, "expected at least two spikes, got {}", arr.len());
+        assert_eq!(arr.len() % 8, 0, "spikes are whole");
+        let mut per_round = std::collections::BTreeMap::new();
+        for (round, _, _) in &arr {
+            *per_round.entry(*round).or_insert(0usize) += 1;
+        }
+        assert!(
+            per_round.values().all(|&c| c % 8 == 0),
+            "each arrival round holds whole spikes: {per_round:?}"
+        );
+        // spikes concentrate (≤ one round per spike, possibly shared) —
+        // far fewer distinct arrival rounds than arrivals
+        assert!(per_round.len() <= arr.len() / 8, "spikes smeared: {per_round:?}");
+        assert!(per_round.len() >= 2, "need at least two distinct spike rounds");
+    }
+
+    #[test]
+    fn pareto_gaps_cluster_and_stretch() {
+        let cfg = TraceConfig {
+            interarrival: Interarrival::Pareto { alpha: 1.2, min_rounds: 1.0, max_rounds: 60.0 },
+            max_round: 3000,
+            ..TraceConfig::new(vec![Task::TcBert], 3000, 23)
+        };
+        let rounds: Vec<usize> = arrivals(&generate(&cfg)).iter().map(|&(r, _, _)| r).collect();
+        assert!(rounds.len() > 100);
+        let gaps: Vec<usize> = rounds.windows(2).map(|w| w[1] - w[0]).collect();
+        let small = gaps.iter().filter(|&&g| g <= 2).count();
+        let large = gaps.iter().filter(|&&g| g >= 20).count();
+        assert!(small > gaps.len() / 3, "most gaps are tight: {small}/{}", gaps.len());
+        assert!(large > 0, "the tail must produce long lulls");
+    }
+
+    #[test]
+    fn task_mix_is_covered_round_robin() {
+        let tasks = vec![Task::TcBert, Task::McRoberta, Task::QaBert];
+        let cfg = TraceConfig::new(tasks.clone(), 400, 31);
+        let events = generate(&cfg);
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &events {
+            if let FleetEvent::Arrive { spec, .. } = e {
+                seen.insert(spec.task.name());
+            }
+        }
+        assert_eq!(seen.len(), tasks.len(), "every task in the mix appears: {seen:?}");
+    }
+}

@@ -84,6 +84,27 @@ pub struct Allocation {
     pub decision_ms: f64,
 }
 
+/// Result of an incremental [`BudgetBroker::update`]: the fill for the due
+/// jobs plus any budgets clawed back from tenants *outside* the due set
+/// (the caller must rebind those — their Coordinators replan).
+#[derive(Clone, Debug)]
+pub struct IncrementalFill {
+    /// Allocation aligned with the due demand vector.
+    pub alloc: Allocation,
+    /// `(id, new_budget)` for non-due tenants tightened to make room.
+    pub rebinds: Vec<(u64, u64)>,
+}
+
+/// Per-tenant record the incremental path arbitrates against while the
+/// tenant is not in the due set: its floor of record, weight, and whether
+/// its estimator had trained as of its last demand.
+#[derive(Clone, Copy, Debug)]
+struct TenantState {
+    weight: f64,
+    floor: u64,
+    trained: bool,
+}
+
 /// Stateful arbiter over one global budget (see module docs).
 pub struct BudgetBroker {
     global: u64,
@@ -94,12 +115,39 @@ pub struct BudgetBroker {
     smoothed: BTreeMap<u64, f64>,
     /// Allocation currently in force per job id (hysteresis baseline).
     current: BTreeMap<u64, u64>,
+    /// Last-seen demand parameters per live tenant — what the incremental
+    /// path holds non-due tenants to (floor of record, weight, trained).
+    states: BTreeMap<u64, TenantState>,
+    /// Σ `current` — maintained so per-event updates never re-sum the fleet.
+    alloc_sum: u64,
+    /// Σ live weights (partial-path weight-proportional split).
+    weight_sum: f64,
+    /// Σ live floors of record (fleet-wide feasibility check).
+    floor_sum_live: u64,
+    /// Live tenants whose estimator has trained.
+    trained_count: usize,
+    /// Multiset of live weights keyed by `f64::to_bits` — O(1) uniformity
+    /// check for the equal-split-until-trained rule.
+    weight_hist: BTreeMap<u64, usize>,
     /// Rounds where demand overshot the device and slack was clawed back.
     pub overshoots: u64,
     /// Total allocate() calls.
     pub decisions: u64,
     /// Decision latency distribution, ms.
     pub decision_ms: Summary,
+}
+
+fn hist_insert(hist: &mut BTreeMap<u64, usize>, w: f64) {
+    *hist.entry(w.to_bits()).or_insert(0) += 1;
+}
+
+fn hist_remove(hist: &mut BTreeMap<u64, usize>, w: f64) {
+    if let Some(c) = hist.get_mut(&w.to_bits()) {
+        *c -= 1;
+        if *c == 0 {
+            hist.remove(&w.to_bits());
+        }
+    }
 }
 
 impl BudgetBroker {
@@ -110,6 +158,12 @@ impl BudgetBroker {
             smoothing: demand_smoothing.clamp(0.0, 0.99),
             smoothed: BTreeMap::new(),
             current: BTreeMap::new(),
+            states: BTreeMap::new(),
+            alloc_sum: 0,
+            weight_sum: 0.0,
+            floor_sum_live: 0,
+            trained_count: 0,
+            weight_hist: BTreeMap::new(),
             overshoots: 0,
             decisions: 0,
             decision_ms: Summary::new(),
@@ -159,8 +213,10 @@ impl BudgetBroker {
             // keying exists to prevent
             return Err("duplicate job ids in demand vector".into());
         }
-        self.smoothed.retain(|id, _| live.contains(id));
-        self.current.retain(|id, _| live.contains(id));
+        // binary search on the sorted id slice: the old `Vec::contains`
+        // made this reclaim O(jobs²) per decision
+        self.smoothed.retain(|id, _| sorted_ids.binary_search(id).is_ok());
+        self.current.retain(|id, _| sorted_ids.binary_search(id).is_ok());
 
         let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
         let floor_sum: u64 = floors.iter().sum();
@@ -250,6 +306,22 @@ impl BudgetBroker {
         debug_assert!(alloc.iter().sum::<u64>() <= self.global);
         debug_assert!(alloc.iter().zip(&floors).all(|(a, f)| a >= f));
         self.current = demands.iter().map(|d| d.id).zip(alloc.iter().copied()).collect();
+        // full fill: resync the incremental-path aggregates wholesale (the
+        // demand vector IS the live set here)
+        self.states = demands
+            .iter()
+            .map(|d| {
+                (d.id, TenantState { weight: d.weight, floor: d.floor, trained: d.predicted.is_some() })
+            })
+            .collect();
+        self.alloc_sum = alloc.iter().sum();
+        self.weight_sum = weight_sum;
+        self.floor_sum_live = floor_sum;
+        self.trained_count = demands.iter().filter(|d| d.predicted.is_some()).count();
+        self.weight_hist.clear();
+        for &w in &weights {
+            hist_insert(&mut self.weight_hist, w);
+        }
         self.decisions += 1;
         let weighted_jain = weighted_jain(&alloc, &floors, &weights);
         let wants_u: Vec<u64> = wants.iter().map(|&w| w as u64).collect();
@@ -263,6 +335,231 @@ impl BudgetBroker {
             overshoot,
             weighted_jain,
             decision_ms,
+        })
+    }
+
+    /// Σ allocations currently in force across all live tenants.
+    pub fn alloc_total(&self) -> u64 {
+        self.alloc_sum
+    }
+
+    /// Remove one tenant and reclaim its budget — O(log n), the event
+    /// core's departure path (the round loop reclaims implicitly by
+    /// omitting the id from the next full demand vector).
+    pub fn depart(&mut self, id: u64) {
+        self.smoothed.remove(&id);
+        if let Some(cur) = self.current.remove(&id) {
+            self.alloc_sum -= cur;
+        }
+        if let Some(s) = self.states.remove(&id) {
+            self.floor_sum_live -= s.floor;
+            self.weight_sum -= s.weight;
+            if s.trained {
+                self.trained_count -= 1;
+            }
+            hist_remove(&mut self.weight_hist, s.weight);
+        }
+    }
+
+    /// Incremental fill: redistribute budget for the `due` jobs ONLY —
+    /// the event core's per-cohort path, O(due · log live) instead of
+    /// O(live). Non-due tenants keep their in-force budgets (they are
+    /// mid-iteration) unless the due floors do not fit in the unheld
+    /// budget, in which case non-due slack-holders are clawed back toward
+    /// their floor of record (largest slack first) and reported as
+    /// `rebinds`. When every tracked tenant is due — a lock-step cohort —
+    /// this delegates to [`Self::allocate`] and is bit-identical to it.
+    pub fn update(&mut self, due: &[JobDemand]) -> Result<IncrementalFill, String> {
+        let n = due.len();
+        if n == 0 {
+            return Err("no jobs".into());
+        }
+        for d in due {
+            if d.weight <= 0.0 || !d.weight.is_finite() {
+                return Err(format!("job {} has non-positive weight {}", d.id, d.weight));
+            }
+        }
+        let mut sorted_due: Vec<u64> = due.iter().map(|d| d.id).collect();
+        sorted_due.sort_unstable();
+        if sorted_due.windows(2).any(|w| w[0] == w[1]) {
+            return Err("duplicate job ids in demand vector".into());
+        }
+        if self.states.keys().all(|id| sorted_due.binary_search(id).is_ok()) {
+            let alloc = self.allocate(due)?;
+            return Ok(IncrementalFill { alloc, rebinds: Vec::new() });
+        }
+        let t = Timer::start();
+
+        // ---- sync per-tenant records for the due ids (arrivals insert
+        //      fresh; repeat appearances refresh floor/weight/trained)
+        for d in due {
+            match self.states.get_mut(&d.id) {
+                Some(s) => {
+                    self.floor_sum_live = self.floor_sum_live - s.floor + d.floor;
+                    if s.weight != d.weight {
+                        self.weight_sum += d.weight - s.weight;
+                        hist_remove(&mut self.weight_hist, s.weight);
+                        hist_insert(&mut self.weight_hist, d.weight);
+                    }
+                    let trained = d.predicted.is_some();
+                    if s.trained != trained {
+                        if trained {
+                            self.trained_count += 1;
+                        } else {
+                            self.trained_count -= 1;
+                        }
+                    }
+                    *s = TenantState { weight: d.weight, floor: d.floor, trained };
+                }
+                None => {
+                    let trained = d.predicted.is_some();
+                    self.states
+                        .insert(d.id, TenantState { weight: d.weight, floor: d.floor, trained });
+                    self.floor_sum_live += d.floor;
+                    self.weight_sum += d.weight;
+                    hist_insert(&mut self.weight_hist, d.weight);
+                    if trained {
+                        self.trained_count += 1;
+                    }
+                }
+            }
+        }
+        if self.floor_sum_live > self.global {
+            return Err(format!(
+                "infeasible: floors {} exceed global budget {}",
+                self.floor_sum_live, self.global
+            ));
+        }
+
+        // ---- budget not held by mid-iteration tenants is up for grabs
+        let held_by_due: u64 =
+            due.iter().map(|d| self.current.get(&d.id).copied().unwrap_or(0)).sum();
+        let mut available = self.global - (self.alloc_sum - held_by_due);
+        let due_floor_sum: u64 = due.iter().map(|d| d.floor).sum();
+
+        // ---- claw back non-due slack when the due floors do not fit;
+        //      fleet-wide floor feasibility guarantees this always frees
+        //      enough (never takes anyone below their floor of record)
+        let mut rebinds: Vec<(u64, u64)> = Vec::new();
+        let mut clawed = false;
+        if due_floor_sum > available {
+            let mut need = due_floor_sum - available;
+            let mut holders: Vec<(u64, u64)> = self
+                .states
+                .iter()
+                .filter(|(id, _)| sorted_due.binary_search(id).is_err())
+                .filter_map(|(&id, s)| {
+                    let cur = self.current.get(&id).copied().unwrap_or(0);
+                    (cur > s.floor).then_some((id, cur - s.floor))
+                })
+                .collect();
+            holders.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            for (id, slack) in holders {
+                if need == 0 {
+                    break;
+                }
+                let take = slack.min(need);
+                let cur = self.current.get_mut(&id).expect("holder has an allocation");
+                *cur -= take;
+                let rebound = *cur;
+                self.alloc_sum -= take;
+                available += take;
+                need -= take;
+                rebinds.push((id, rebound));
+            }
+            clawed = true;
+            debug_assert!(
+                due_floor_sum <= available,
+                "fleet-wide floor feasibility must make the due floors fit"
+            );
+        }
+
+        // ---- demand signals over the due set; training/uniformity are
+        //      fleet-wide so the split rule matches a full fill's regime
+        let any_trained = self.trained_count > 0;
+        let uniform = self.weight_hist.len() == 1;
+        let equal = self.global / self.states.len() as u64;
+        let weights: Vec<f64> = due.iter().map(|d| d.weight).collect();
+        let floors: Vec<u64> = due.iter().map(|d| d.floor).collect();
+        let predicted_total: u64 = due.iter().map(|d| d.predicted.unwrap_or(d.floor)).sum();
+        let mut wants: Vec<f64> = Vec::with_capacity(n);
+        for d in due {
+            let raw = if any_trained {
+                d.predicted.unwrap_or(d.floor) as f64
+            } else if uniform {
+                equal as f64
+            } else {
+                self.global as f64 * d.weight / self.weight_sum
+            };
+            let s = match self.smoothed.get(&d.id) {
+                Some(&prev) => self.smoothing * prev + (1.0 - self.smoothing) * raw,
+                None => raw,
+            };
+            self.smoothed.insert(d.id, s);
+            wants.push(s.max(d.floor as f64));
+        }
+
+        // ---- floors + weighted water-fill over the available budget ----
+        let slack = (available - due_floor_sum) as f64;
+        let extras_want: Vec<f64> =
+            wants.iter().zip(&floors).map(|(w, &f)| (w - f as f64).max(0.0)).collect();
+        let extra_sum: f64 = extras_want.iter().sum();
+        let overshoot = clawed || extra_sum > slack;
+        if overshoot {
+            self.overshoots += 1;
+        }
+        let extras: Vec<f64> = if extra_sum > slack {
+            let level = weighted_water_level(&extras_want, &weights, slack);
+            extras_want.iter().zip(&weights).map(|(&e, &w)| e.min(w * level)).collect()
+        } else {
+            extras_want
+        };
+        let mut alloc: Vec<u64> = floors
+            .iter()
+            .zip(&extras)
+            .map(|(&f, &e)| f + (e as u64 / self.grid) * self.grid)
+            .collect();
+
+        // ---- hysteresis, feasible against the available budget ----
+        let mut kept = alloc.clone();
+        let mut any_kept = false;
+        for (i, d) in due.iter().enumerate() {
+            if let Some(&cur) = self.current.get(&d.id) {
+                if cur >= floors[i] && cur.abs_diff(alloc[i]) <= self.grid {
+                    kept[i] = cur;
+                    any_kept = true;
+                }
+            }
+        }
+        if any_kept && kept.iter().sum::<u64>() <= available {
+            alloc = kept;
+        }
+
+        // ---- commit ----
+        let prev_due_sum: u64 =
+            due.iter().map(|d| self.current.get(&d.id).copied().unwrap_or(0)).sum();
+        for (d, &a) in due.iter().zip(&alloc) {
+            self.current.insert(d.id, a);
+        }
+        self.alloc_sum = self.alloc_sum - prev_due_sum + alloc.iter().sum::<u64>();
+        debug_assert!(self.alloc_sum <= self.global);
+        debug_assert!(alloc.iter().zip(&floors).all(|(a, f)| a >= f));
+        self.decisions += 1;
+        let weighted_jain = weighted_jain(&alloc, &floors, &weights);
+        let wants_u: Vec<u64> = wants.iter().map(|&w| w as u64).collect();
+        let decision_ms = t.elapsed_ms();
+        self.decision_ms.add(decision_ms);
+        Ok(IncrementalFill {
+            alloc: Allocation {
+                budgets: alloc,
+                floors,
+                wants: wants_u,
+                predicted_total,
+                overshoot,
+                weighted_jain,
+                decision_ms,
+            },
+            rebinds,
         })
     }
 }
@@ -627,6 +924,98 @@ mod tests {
                  the classic fill: {a} vs {b} for {asks:?} slack {slack}"
             );
         }
+    }
+
+    #[test]
+    fn update_is_bit_identical_to_allocate_when_all_tracked_are_due() {
+        // a lock-step cohort (every live job due at once) must take the
+        // full path: same budgets, same state, no claw-back rebinds
+        let mut full = BudgetBroker::new(16 * GIB, 256 << 20, 0.5);
+        let mut incr = BudgetBroker::new(16 * GIB, 256 << 20, 0.5);
+        let rounds = [
+            vec![d(0, GIB, None), d(1, GIB, None)],
+            vec![d(0, GIB, Some(3 * GIB)), d(1, GIB, Some(9 * GIB))],
+            vec![d(0, GIB, Some(5 * GIB)), d(1, GIB, Some(7 * GIB)), d(2, 2 * GIB, None)],
+            vec![d(1, GIB, Some(6 * GIB)), d(2, 2 * GIB, Some(4 * GIB))],
+        ];
+        for demands in &rounds {
+            let a = full.allocate(demands).unwrap();
+            // the event core departs explicitly; the round loop implicitly
+            // (by omission from the next full vector) — same reclaim
+            let due: Vec<u64> = demands.iter().map(|d| d.id).collect();
+            for id in incr.tracked_ids() {
+                if !due.contains(&id) {
+                    incr.depart(id);
+                }
+            }
+            let f = incr.update(demands).unwrap();
+            assert!(f.rebinds.is_empty());
+            assert_eq!(a.budgets, f.alloc.budgets);
+            assert_eq!(a.wants, f.alloc.wants);
+            assert_eq!(a.overshoot, f.alloc.overshoot);
+            assert_eq!(full.tracked_ids(), incr.tracked_ids());
+            assert_eq!(incr.alloc_total(), f.alloc.budgets.iter().sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn partial_update_leaves_non_due_tenants_untouched() {
+        let mut b = broker(16 * GIB);
+        let _ = b
+            .allocate(&[
+                d(0, GIB, Some(2 * GIB)),
+                d(1, GIB, Some(3 * GIB)),
+                d(2, GIB, Some(4 * GIB)),
+            ])
+            .unwrap();
+        // only job 0 is due (the others are mid-iteration): its demand grew
+        let f = b.update(&[d(0, GIB, Some(5 * GIB))]).unwrap();
+        assert!(f.rebinds.is_empty(), "room exists, nobody is clawed back");
+        assert_eq!(f.alloc.budgets, vec![5 * GIB]);
+        assert_eq!(b.allocation_of(0), Some(5 * GIB));
+        assert_eq!(b.allocation_of(1), Some(3 * GIB), "mid-iteration budget held");
+        assert_eq!(b.allocation_of(2), Some(4 * GIB), "mid-iteration budget held");
+        assert_eq!(b.alloc_total(), 12 * GIB);
+        assert!(b.alloc_total() <= 16 * GIB);
+    }
+
+    #[test]
+    fn claw_back_frees_due_floors_and_reports_rebinds() {
+        let mut b = broker(8 * GIB);
+        // both tenants over-ask: the device is fully granted (4 GiB each)
+        let _ = b
+            .allocate(&[d(0, GIB, Some(8 * GIB)), d(1, GIB, Some(8 * GIB))])
+            .unwrap();
+        assert_eq!(b.alloc_total(), 8 * GIB);
+        // a new tenant arrives needing a 3 GiB floor: zero budget is free,
+        // so the largest slack-holder (tie -> smaller id) is tightened
+        let f = b.update(&[d(2, 3 * GIB, None)]).unwrap();
+        assert_eq!(f.rebinds, vec![(0, GIB)], "id 0 clawed back to its floor");
+        assert_eq!(b.allocation_of(0), Some(GIB));
+        assert_eq!(b.allocation_of(1), Some(4 * GIB), "second holder untouched");
+        assert_eq!(f.alloc.budgets, vec![3 * GIB], "arrival sits at its floor");
+        assert!(f.alloc.overshoot);
+        assert!(b.overshoots >= 1);
+        assert_eq!(b.alloc_total(), 8 * GIB);
+        // never below the floor of record, ever
+        assert!(b.allocation_of(0).unwrap() >= GIB);
+    }
+
+    #[test]
+    fn depart_reclaims_allocation_and_all_state() {
+        let mut b = broker(16 * GIB);
+        let a = b
+            .allocate(&[d(0, GIB, Some(2 * GIB)), d(1, GIB, Some(12 * GIB))])
+            .unwrap();
+        assert_eq!(b.alloc_total(), a.budgets.iter().sum::<u64>());
+        b.depart(1);
+        assert_eq!(b.allocation_of(1), None);
+        assert_eq!(b.tracked_ids(), vec![0]);
+        assert_eq!(b.alloc_total(), a.budgets[0]);
+        // re-arrival via the incremental path starts from RAW demand — the
+        // departed EWMA stream must be gone
+        let f = b.update(&[d(1, GIB, Some(3 * GIB))]).unwrap();
+        assert_eq!(f.alloc.budgets, vec![3 * GIB], "fresh history after depart");
     }
 
     #[test]

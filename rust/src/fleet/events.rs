@@ -1,0 +1,222 @@
+//! The discrete-event core's time-ordered queue.
+//!
+//! The fleet no longer advances in lock-step rounds: each job runs on its
+//! own clock, and the scheduler processes a min-heap of scheduled events.
+//! Within one instant the queue orders events by *rank* so a cohort (all
+//! events at bitwise-equal time) applies in the round loop's semantics:
+//! departures free their budget first, arrivals join next, iteration
+//! completions mark jobs due, and broker claw-back rebinds land last.
+//! Equal (time, rank) pairs pop FIFO (a monotone sequence number), so the
+//! whole schedule is deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens when an event fires. Ranks (the within-instant order) are
+/// part of the contract: Depart < Arrive < IterationComplete < Rebind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A scripted departure: the named tenant leaves, its budget is
+    /// reclaimed before anything else at this instant runs.
+    Depart { name: String },
+    /// A scripted arrival: the pre-built job with this fleet id joins and
+    /// is due for its first iteration at this instant.
+    Arrive { id: u64 },
+    /// A job finished the iteration it started one duration ago: it is due
+    /// for its next iteration (or retires, if its step limit is reached).
+    IterationComplete { id: u64 },
+    /// A broker claw-back tightened a tenant that was not part of the
+    /// triggering fill: apply the new budget (the Coordinator replans).
+    Rebind { id: u64, budget: u64 },
+}
+
+impl EventKind {
+    /// Within-instant ordering (lower fires first).
+    pub fn rank(&self) -> u8 {
+        match self {
+            EventKind::Depart { .. } => 0,
+            EventKind::Arrive { .. } => 1,
+            EventKind::IterationComplete { .. } => 2,
+            EventKind::Rebind { .. } => 3,
+        }
+    }
+}
+
+/// One scheduled event: a simulated instant (ms) plus its kind.
+#[derive(Clone, Debug)]
+pub struct ScheduledEvent {
+    pub time: f64,
+    pub kind: EventKind,
+}
+
+struct HeapEntry {
+    time: f64,
+    rank: u8,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse so the earliest (time, rank,
+        // seq) pops first. total_cmp keeps the order total (no NaN panics).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.rank.cmp(&self.rank))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of scheduled events ordered by (time, rank, push order).
+pub struct EventQueue {
+    heap: BinaryHeap<HeapEntry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `kind` at simulated instant `time`. Events pushed with an
+    /// equal (time, rank) fire in push order.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "event time must be finite");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(HeapEntry { time, rank: kind.rank(), seq, kind });
+    }
+
+    /// The instant of the next event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn pop(&mut self) -> Option<ScheduledEvent> {
+        self.heap.pop().map(|e| ScheduledEvent { time: e.time, kind: e.kind })
+    }
+
+    /// Pop the whole cohort at the next instant: every event whose time is
+    /// bitwise-equal to the earliest one, in (rank, push order). Events a
+    /// cohort's processing pushes *at the same instant* (broker claw-back
+    /// rebinds) form a follow-up cohort — they are not retroactively merged.
+    pub fn pop_cohort(&mut self) -> Option<Vec<ScheduledEvent>> {
+        let first = self.pop()?;
+        let t = first.time;
+        let mut cohort = vec![first];
+        while let Some(&HeapEntry { time, .. }) = self.heap.peek() {
+            if time.total_cmp(&t) != Ordering::Equal {
+                break;
+            }
+            cohort.push(self.pop().unwrap());
+        }
+        Some(cohort)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ic(id: u64) -> EventKind {
+        EventKind::IterationComplete { id }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, ic(0));
+        q.push(1.0, ic(1));
+        q.push(2.0, ic(2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rank_orders_within_an_instant() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::Rebind { id: 3, budget: 1 });
+        q.push(5.0, ic(2));
+        q.push(5.0, EventKind::Arrive { id: 1 });
+        q.push(5.0, EventKind::Depart { name: "a".into() });
+        let cohort = q.pop_cohort().unwrap();
+        let ranks: Vec<u8> = cohort.iter().map(|e| e.kind.rank()).collect();
+        assert_eq!(ranks, vec![0, 1, 2, 3], "Depart < Arrive < IterationComplete < Rebind");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_time_and_rank_pop_fifo() {
+        let mut q = EventQueue::new();
+        for id in [4u64, 7, 1, 9] {
+            q.push(2.0, ic(id));
+        }
+        let cohort = q.pop_cohort().unwrap();
+        let ids: Vec<u64> = cohort
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::IterationComplete { id } => id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![4, 7, 1, 9], "push order, not id order");
+    }
+
+    #[test]
+    fn cohort_is_bitwise_time_equality() {
+        let mut q = EventQueue::new();
+        q.push(1.0, ic(0));
+        q.push(1.0, ic(1));
+        // nextafter(1.0): a different instant even though it prints as 1
+        q.push(f64::from_bits(1.0f64.to_bits() + 1), ic(2));
+        assert_eq!(q.pop_cohort().unwrap().len(), 2);
+        assert_eq!(q.pop_cohort().unwrap().len(), 1);
+        assert!(q.pop_cohort().is_none());
+    }
+
+    #[test]
+    fn peek_time_tracks_the_head() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(8.0, ic(0));
+        q.push(2.5, ic(1));
+        assert_eq!(q.peek_time(), Some(2.5));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(8.0));
+    }
+
+    #[test]
+    fn events_pushed_during_processing_form_a_follow_up_cohort() {
+        let mut q = EventQueue::new();
+        q.push(4.0, ic(0));
+        let cohort = q.pop_cohort().unwrap();
+        assert_eq!(cohort.len(), 1);
+        // processing the cohort schedules a rebind at the SAME instant
+        q.push(4.0, EventKind::Rebind { id: 0, budget: 9 });
+        let follow_up = q.pop_cohort().unwrap();
+        assert_eq!(follow_up.len(), 1);
+        assert_eq!(follow_up[0].kind, EventKind::Rebind { id: 0, budget: 9 });
+    }
+}

@@ -9,8 +9,12 @@ use crate::util::stats::Summary;
 /// One broker round, as recorded by the [`super::FleetScheduler`].
 #[derive(Clone, Debug)]
 pub struct BrokerDecision {
-    /// 0-based round index.
+    /// 0-based round index. Under event pacing this is the cohort's tick
+    /// index (`time_ms / tick`), so decisions still sort by round.
     pub round: usize,
+    /// Simulated instant the decision fired, ms. The round loop stamps the
+    /// round index (one tick per round); the event core stamps event time.
+    pub time_ms: f64,
     /// Stable ids of the jobs live this round, aligned with `allocations`.
     /// Empty when every tenant had departed (an idle round).
     pub job_ids: Vec<u64>,
@@ -32,6 +36,10 @@ pub struct BrokerDecision {
     /// Σ per-job simulated peak while the round ran (the quantity that must
     /// never exceed the global budget).
     pub aggregate_peak: u64,
+    /// Σ budgets in force across ALL live jobs after this decision — under
+    /// event pacing `allocations` covers only the due cohort, so the ledger
+    /// invariant (≤ global) is checked against this fleet-wide total.
+    pub alloc_total: u64,
 }
 
 /// Per-job rollup over a fleet run — departed and completed jobs included.
@@ -197,6 +205,7 @@ mod tests {
     fn decision(round: usize, peak: u64, ms: f64) -> BrokerDecision {
         BrokerDecision {
             round,
+            time_ms: round as f64,
             job_ids: vec![0, 1],
             allocations: vec![peak],
             floors: vec![0],
@@ -206,6 +215,7 @@ mod tests {
             weighted_jain: 1.0,
             decision_ms: ms,
             aggregate_peak: peak,
+            alloc_total: peak,
         }
     }
 

@@ -31,16 +31,34 @@
 //!   tightening the most-slack-holding jobs so their Coordinators replan —
 //!   never by OOM. All broker state is keyed by stable job id, so the job
 //!   set may change between any two rounds.
-//! * [`scheduler::FleetScheduler`] — steps a *dynamic* job set in
-//!   interleaved rounds: scripted [`crate::config::FleetEvent`] arrivals
-//!   and departures (plus early exit when a job completes its configured
-//!   steps) change the tenancy mid-run; departing budgets are reclaimed
-//!   into the next fill and arrivals start at their conservative floor.
-//!   Budget rebinds flow [`crate::engine::sim::SimEngine::set_budget`]
+//! * [`scheduler::FleetScheduler`] — a *discrete-event* core: a
+//!   time-ordered [`events::EventQueue`] of iteration completions,
+//!   scripted [`crate::config::FleetEvent`] arrivals/departures, and
+//!   broker claw-back rebinds, with every job on its own clock
+//!   ([`crate::config::Pacing::Profiled`] paces each tenant by its own
+//!   profiled iteration time; `Lockstep`, the default, is bit-identical
+//!   to the legacy round loop, which survives as `Pacing::Rounds` for
+//!   the differential). Per-event cost is independent of fleet size: the
+//!   broker refills only the due cohort through an incremental path.
+//!   Departing budgets are reclaimed into the next fill and arrivals
+//!   start at their conservative floor; in non-arbitrated mode every
+//!   job keeps a share frozen at `global / max_concurrent` over the
+//!   whole scripted timeline (a truly static baseline — no silent
+//!   rebinds when the live count changes). Budget rebinds flow
+//!   [`crate::engine::sim::SimEngine::set_budget`]
 //!   → [`crate::coordinator::Coordinator::set_budget`] (plan-cache
 //!   invalidation), and the broker is verified against the per-job memory
 //!   ledgers (Σ per-round peaks ≤ global). The whole event timeline is
 //!   validated for worst-case floor feasibility at construction.
+//! * [`events::EventQueue`] — the min-heap behind the core: events order
+//!   by (time, within-instant rank, push order), where the rank contract
+//!   Depart < Arrive < IterationComplete < Rebind reproduces the round
+//!   loop's apply-events-then-step semantics inside a single instant.
+//! * [`broker::BudgetBroker::update`] — the incremental fill: indexed
+//!   per-tenant state and maintained aggregates let a partial cohort be
+//!   refilled without touching (or paying for) idle tenants; claw-backs
+//!   from non-due slack-holders surface as [`broker::IncrementalFill`]
+//!   rebind events rather than silent mutations.
 //! * [`crate::scheduler::SharedPlanCache`] — cross-job plan reuse scoped by
 //!   model signature; reuse is budget-conservative (only plans generated
 //!   under an equal-or-tighter budget are served). Entries are retained
@@ -58,9 +76,11 @@
 //! (the dynamic-tenancy property harness + static-fleet differential).
 
 pub mod broker;
+pub mod events;
 pub mod metrics;
 pub mod scheduler;
 
-pub use broker::{weighted_jain, Allocation, BudgetBroker, JobDemand};
+pub use broker::{weighted_jain, Allocation, BudgetBroker, IncrementalFill, JobDemand};
+pub use events::{EventKind, EventQueue, ScheduledEvent};
 pub use metrics::{BrokerDecision, FleetReport, JobSummary};
 pub use scheduler::{FleetJob, FleetScheduler};

@@ -1,24 +1,36 @@
 //! The fleet scheduler: a *dynamic* set of tenant training jobs — each its
-//! own [`Coordinator`]-driven [`SimEngine`] — stepped in interleaved rounds
-//! against one broker-shared memory budget.
+//! own [`Coordinator`]-driven [`SimEngine`] — advanced by a discrete-event
+//! core against one broker-shared memory budget.
 //!
-//! Per round:
-//! 1. scripted [`FleetEvent`]s due this round are applied: departing jobs
-//!    are retired (their budget is reclaimed and re-filled next fill) and
-//!    arriving jobs join at their conservative floor — nothing is purged
-//!    from any cache on either side;
-//! 2. every live job draws its pending mini-batch and reports a
+//! Simulated time is a min-heap of events ([`super::events::EventQueue`]):
+//! scripted `Arrive`/`Depart` instants, per-job `IterationComplete`s, and
+//! broker claw-back `Rebind`s. Each job runs on its own clock — an
+//! iteration starts the instant its job becomes *due* (arrival, or the
+//! completion of its previous iteration) and lasts one tick under
+//! [`Pacing::Lockstep`] or its simulated iteration time under
+//! [`Pacing::Profiled`]. Per cohort (all events at one instant):
+//! 1. departures retire first (budget reclaimed via `BudgetBroker::depart`,
+//!    O(log n)), arrivals join, completions mark jobs due or retire them
+//!    at their configured step count;
+//! 2. each due job draws its pending mini-batch and reports a
 //!    [`JobDemand`] (stable id, priority weight, conservative floor,
 //!    estimator-predicted peak if trained);
-//! 3. the [`BudgetBroker`] redistributes the global budget with a
-//!    *weighted* max-min water-fill; an aggregate overshoot is resolved by
-//!    tightening the most-slack-holding jobs, whose Coordinators then
-//!    replan under the smaller budget — never by OOM;
-//! 4. each rebound job gets [`SimEngine::set_budget`]; every live job runs
-//!    one iteration; per-job ledger peaks are summed into the round's
-//!    `aggregate_peak` (the broker-verification number: ≤ global, always).
-//!    A job that has run its configured `steps` completes and departs on
-//!    its own.
+//! 3. the [`BudgetBroker`] refills *incrementally*
+//!    ([`BudgetBroker::update`]): only the due jobs are re-filled, non-due
+//!    tenants keep their in-force budgets unless their slack must be
+//!    clawed back to fit the due floors — those tightenings are applied as
+//!    same-instant `Rebind` events and the tightened Coordinators replan —
+//!    never OOM. When every tracked tenant is due (a lock-step cohort) the
+//!    fill is bit-identical to the full [`BudgetBroker::allocate`];
+//! 4. each rebound due job gets [`SimEngine::set_budget`] and runs its
+//!    iteration; per-job ledger peaks are summed into the cohort's
+//!    `aggregate_peak`, and the fleet-wide `alloc_total` ledger stays
+//!    ≤ the global budget, always.
+//!
+//! [`Pacing::Rounds`] keeps the legacy interleaved round loop
+//! ([`FleetScheduler::run`] dispatches) as the differential reference:
+//! a static, equally-paced fleet through the event core produces the same
+//! per-job allocations and iteration counts as the round loop.
 //!
 //! With `shared_cache` on, identical-architecture tenants exchange plans
 //! through a [`crate::scheduler::SharedPlanCache`] keyed by (model
@@ -35,15 +47,58 @@
 //! `run()` cannot hit an infeasible tenancy mid-flight.
 
 use super::broker::{weighted_jain, BudgetBroker, JobDemand};
+use super::events::{EventKind, EventQueue};
 use super::metrics::{BrokerDecision, FleetReport, JobSummary};
-use crate::config::{ExperimentConfig, FleetConfig, FleetEvent, JobSpec, PlannerKind, Task};
+use crate::config::{
+    ExperimentConfig, FleetConfig, FleetEvent, JobSpec, Pacing, PlannerKind, Task,
+};
 use crate::coordinator::Coordinator;
 use crate::data::InputStream;
 use crate::engine::sim::{input_for, SimEngine};
 use crate::metrics::RunReport;
 use crate::scheduler::{model_signature, shared_plan_cache, SharedCacheHandle};
 use crate::util::timer::Timer;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// Entries the per-job floor memo holds before evicting.
+const FLOOR_MEMO_CAP: usize = 4096;
+
+/// Bounded memo for conservative reservations keyed by input shape.
+///
+/// On overflow it evicts a *fraction* of the entries (every 4th key)
+/// instead of flushing wholesale: a `clear()` stampedes profile rebuilds
+/// for 2-D shape streams that legitimately visit more than the cap's worth
+/// of distinct (src, tgt) shapes.
+struct FloorMemo {
+    map: BTreeMap<(usize, usize), u64>,
+    cap: usize,
+}
+
+impl FloorMemo {
+    fn new(cap: usize) -> Self {
+        FloorMemo { map: BTreeMap::new(), cap: cap.max(4) }
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn get_or_insert_with<F: FnOnce() -> u64>(&mut self, shape: (usize, usize), f: F) -> u64 {
+        if let Some(&v) = self.map.get(&shape) {
+            return v;
+        }
+        if self.map.len() >= self.cap {
+            let victims: Vec<(usize, usize)> = self.map.keys().copied().step_by(4).collect();
+            for k in victims {
+                self.map.remove(&k);
+            }
+        }
+        let v = f();
+        self.map.insert(shape, v);
+        v
+    }
+}
 
 /// One tenant: engine + its own input stream + the budget in force.
 pub struct FleetJob {
@@ -67,8 +122,8 @@ pub struct FleetJob {
     pub report: RunReport,
     /// Conservative reservation memo per input shape — collated shapes
     /// repeat heavily (the plan-cache premise) and the broker consults
-    /// floors every round. Profiles come from the engine's own cache.
-    floor_cache: BTreeMap<(usize, usize), u64>,
+    /// floors every iteration. Profiles come from the engine's own cache.
+    floor_memo: FloorMemo,
 }
 
 impl FleetJob {
@@ -105,7 +160,7 @@ impl FleetJob {
             pending: None,
             budget,
             report: RunReport::new("mimose-fleet", budget),
-            floor_cache: BTreeMap::new(),
+            floor_memo: FloorMemo::new(FLOOR_MEMO_CAP),
         })
     }
 
@@ -132,18 +187,14 @@ impl FleetJob {
     /// Memoised conservative reservation for an input shape (profiles come
     /// from the engine's per-shape cache, so each is built at most once).
     /// Bounded like the engine's shape memos: a 2-D (src, tgt) stream draws
-    /// from a cross product, so the memo flushes past 4096 distinct shapes.
+    /// from a cross product, so past 4096 distinct shapes the memo evicts a
+    /// fraction of its entries (see [`FloorMemo`]).
     fn floor_for(&mut self, shape: (usize, usize), reserve: u64) -> u64 {
-        if let Some(&f) = self.floor_cache.get(&shape) {
-            return f;
-        }
-        if self.floor_cache.len() >= 4096 {
-            self.floor_cache.clear();
-        }
-        let profile = self.engine.profile_for_shape(shape);
-        let f = Coordinator::conservative_reservation(&profile, reserve);
-        self.floor_cache.insert(shape, f);
-        f
+        let engine = &mut self.engine;
+        self.floor_memo.get_or_insert_with(shape, || {
+            let profile = engine.profile_for_shape(shape);
+            Coordinator::conservative_reservation(&profile, reserve)
+        })
     }
 
     /// Draw the next mini-batch and report this round's memory picture.
@@ -214,8 +265,8 @@ struct PendingArrival {
     job: FleetJob,
 }
 
-/// Drives a dynamic job set through interleaved rounds under one shared
-/// budget.
+/// Drives a dynamic job set through discrete-event (or legacy round-loop)
+/// time under one shared budget.
 pub struct FleetScheduler {
     cfg: FleetConfig,
     /// Live jobs in arrival order (initial jobs first, ids ascending).
@@ -228,9 +279,70 @@ pub struct FleetScheduler {
     finished: Vec<JobSummary>,
     broker: BudgetBroker,
     shared: Option<SharedCacheHandle>,
+    /// Static per-job share for the non-arbitrated baseline, frozen at
+    /// construction as `global / max_concurrent` over the whole scripted
+    /// timeline — the live count changing mid-run must NOT silently rebind
+    /// every tenant (each rebind flushes plan caches).
+    frozen_share: u64,
 }
 
 impl FleetScheduler {
+    /// Highest number of concurrently-live tenants over the scripted
+    /// timeline, computed from specs alone (no engines): names are
+    /// derivable (`spec.name` or `<task>#<id>` with ids in arrival order),
+    /// removals are scripted departs plus `steps` completions. The walk is
+    /// deliberately lenient — invalid timelines are rejected by the full
+    /// validation pass that follows.
+    fn max_concurrent(cfg: &FleetConfig) -> usize {
+        let name_of = |spec: &JobSpec, id: usize| {
+            spec.name.clone().unwrap_or_else(|| format!("{}#{id}", spec.task.name()))
+        };
+        let mut live: BTreeSet<String> = BTreeSet::new();
+        let mut removals: Vec<(usize, String)> = Vec::new();
+        let mut arrivals: Vec<(usize, String)> = Vec::new();
+        for (i, spec) in cfg.jobs.iter().enumerate() {
+            let name = name_of(spec, i);
+            if spec.steps > 0 {
+                removals.push((spec.steps, name.clone()));
+            }
+            live.insert(name);
+        }
+        let mut events = cfg.events.clone();
+        events.sort_by_key(|e| (e.at_round(), matches!(e, FleetEvent::Arrive { .. })));
+        let mut next_id = cfg.jobs.len();
+        for ev in &events {
+            match ev {
+                FleetEvent::Depart { job, at_round } => {
+                    removals.push((*at_round, job.clone()));
+                }
+                FleetEvent::Arrive { spec, at_round } => {
+                    let name = name_of(spec, next_id);
+                    next_id += 1;
+                    if spec.steps > 0 {
+                        removals.push((*at_round + spec.steps, name.clone()));
+                    }
+                    arrivals.push((*at_round, name));
+                }
+            }
+        }
+        let mut ops: Vec<(usize, u8, &str)> = removals
+            .iter()
+            .map(|(r, name)| (*r, 0u8, name.as_str()))
+            .chain(arrivals.iter().map(|(r, name)| (*r, 1u8, name.as_str())))
+            .collect();
+        ops.sort_by_key(|&(r, rank, _)| (r, rank));
+        let mut max_live = live.len();
+        for (_, rank, name) in ops {
+            if rank == 0 {
+                live.remove(name);
+            } else {
+                live.insert(name.to_string());
+                max_live = max_live.max(live.len());
+            }
+        }
+        max_live.max(1)
+    }
+
     pub fn new(cfg: FleetConfig) -> Result<Self, String> {
         let n = cfg.jobs.len();
         if n == 0 {
@@ -240,9 +352,14 @@ impl FleetScheduler {
             spec.validate()?;
         }
         let equal = cfg.global_budget_bytes / n as u64;
+        let frozen_share = cfg.global_budget_bytes / Self::max_concurrent(&cfg) as u64;
+        // non-arbitrated tenants bind their frozen share once, at
+        // construction — arbitrated ones start from the initial equal split
+        // and are rebound by the broker's first fill
+        let construction_budget = if cfg.arbitrated { equal } else { frozen_share };
         let mut jobs = Vec::with_capacity(n);
         for (idx, spec) in cfg.jobs.iter().enumerate() {
-            jobs.push(FleetJob::new(spec, idx as u64, 0, &cfg, equal)?);
+            jobs.push(FleetJob::new(spec, idx as u64, 0, &cfg, construction_budget)?);
         }
 
         // ---- phase A: build every arriving engine eagerly and collect the
@@ -280,7 +397,7 @@ impl FleetScheduler {
                             cfg.steps
                         ));
                     }
-                    let mut job = FleetJob::new(spec, next_id, *at_round, &cfg, equal)?;
+                    let mut job = FleetJob::new(spec, next_id, *at_round, &cfg, construction_budget)?;
                     next_id += 1;
                     let w = job.worst_floor(cfg.floor_bytes, cfg.mimose.reserve_bytes);
                     arrivals.push((*at_round, job.name.clone(), w));
@@ -392,6 +509,7 @@ impl FleetScheduler {
             finished: Vec::new(),
             broker,
             shared,
+            frozen_share,
         })
     }
 
@@ -440,26 +558,68 @@ impl FleetScheduler {
         }
     }
 
-    /// Run `cfg.steps` interleaved rounds and report.
+    /// An idle decision: nobody ran at this instant.
+    fn idle_decision(round: usize, time_ms: f64) -> BrokerDecision {
+        BrokerDecision {
+            round,
+            time_ms,
+            job_ids: Vec::new(),
+            allocations: Vec::new(),
+            floors: Vec::new(),
+            wants: Vec::new(),
+            predicted_total: 0,
+            overshoot: false,
+            weighted_jain: 1.0,
+            decision_ms: 0.0,
+            aggregate_peak: 0,
+            alloc_total: 0,
+        }
+    }
+
+    /// Roll the run up into the final report (live jobs are summarised as
+    /// still running).
+    fn finish(&self, rounds: Vec<BrokerDecision>, live: Vec<JobSummary>) -> FleetReport {
+        let mut jobs: Vec<JobSummary> = self.finished.clone();
+        jobs.extend(live);
+        jobs.sort_by_key(|j| j.id);
+        let (shared_hits, shared_entries) = match &self.shared {
+            Some(h) => {
+                let c = h.borrow();
+                (c.stats().hits, c.len())
+            }
+            None => (0, 0),
+        };
+        FleetReport {
+            global_budget: self.cfg.global_budget_bytes,
+            arbitrated: self.cfg.arbitrated,
+            jobs,
+            rounds,
+            shared_cache_hits: shared_hits,
+            shared_cache_entries: shared_entries,
+            overshoots: self.broker.overshoots,
+        }
+    }
+
+    /// Run the fleet to its horizon and report — through the discrete-event
+    /// core by default, or the legacy round loop under [`Pacing::Rounds`].
     pub fn run(&mut self) -> FleetReport {
+        match self.cfg.pacing {
+            Pacing::Rounds => self.run_rounds(),
+            Pacing::Lockstep | Pacing::Profiled => self.run_events(),
+        }
+    }
+
+    /// The legacy interleaved round loop — every live job runs exactly one
+    /// iteration per round. Kept as the event core's differential
+    /// reference.
+    fn run_rounds(&mut self) -> FleetReport {
         let mut rounds: Vec<BrokerDecision> = Vec::with_capacity(self.cfg.steps);
         for round in 0..self.cfg.steps {
             self.apply_events(round);
             let n = self.jobs.len();
             if n == 0 {
                 // every tenant departed or completed: an idle round
-                rounds.push(BrokerDecision {
-                    round,
-                    job_ids: Vec::new(),
-                    allocations: Vec::new(),
-                    floors: Vec::new(),
-                    wants: Vec::new(),
-                    predicted_total: 0,
-                    overshoot: false,
-                    weighted_jain: 1.0,
-                    decision_ms: 0.0,
-                    aggregate_peak: 0,
-                });
+                rounds.push(Self::idle_decision(round, round as f64));
                 continue;
             }
 
@@ -489,16 +649,24 @@ impl FleetScheduler {
                     )
                 } else {
                     let t = Timer::start();
-                    let equal = self.cfg.global_budget_bytes / n as u64;
+                    // the frozen share — NOT global / live-count, which
+                    // would silently rebind (and flush plan caches for)
+                    // every tenant whenever the live count changes
+                    let share = self.frozen_share;
                     let total = demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).sum();
                     let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
                     let wants: Vec<u64> =
                         demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).collect();
-                    let budgets = vec![equal; n];
+                    let budgets = vec![share; n];
                     let weights: Vec<f64> = demands.iter().map(|d| d.weight).collect();
                     let jain = weighted_jain(&budgets, &floors, &weights);
                     (budgets, floors, wants, total, false, jain, t.elapsed_ms())
                 };
+            let alloc_total = if self.cfg.arbitrated {
+                self.broker.alloc_total()
+            } else {
+                self.frozen_share * n as u64
+            };
             for (job, &b) in self.jobs.iter_mut().zip(&allocations) {
                 job.rebind(b);
             }
@@ -512,6 +680,7 @@ impl FleetScheduler {
             }
             rounds.push(BrokerDecision {
                 round,
+                time_ms: round as f64,
                 job_ids,
                 allocations,
                 floors,
@@ -521,6 +690,7 @@ impl FleetScheduler {
                 weighted_jain: jain,
                 decision_ms,
                 aggregate_peak,
+                alloc_total,
             });
 
             // 4) early exit on completion: the job's budget is reclaimed
@@ -528,25 +698,208 @@ impl FleetScheduler {
             self.retire_completed(round);
         }
 
-        let mut jobs: Vec<JobSummary> = self.finished.clone();
-        jobs.extend(self.jobs.iter().map(|j| j.summary(None)));
-        jobs.sort_by_key(|j| j.id);
-        let (shared_hits, shared_entries) = match &self.shared {
-            Some(h) => {
-                let c = h.borrow();
-                (c.stats().hits, c.len())
-            }
-            None => (0, 0),
-        };
-        FleetReport {
-            global_budget: self.cfg.global_budget_bytes,
-            arbitrated: self.cfg.arbitrated,
-            jobs,
-            rounds,
-            shared_cache_hits: shared_hits,
-            shared_cache_entries: shared_entries,
-            overshoots: self.broker.overshoots,
+        let live: Vec<JobSummary> = self.jobs.iter().map(|j| j.summary(None)).collect();
+        self.finish(rounds, live)
+    }
+
+    /// The discrete-event core: jobs advance on their own clocks; per-event
+    /// cost is independent of fleet size (indexed live/name maps, the
+    /// broker's incremental fill).
+    fn run_events(&mut self) -> FleetReport {
+        let lockstep = self.cfg.pacing == Pacing::Lockstep;
+        // one lockstep tick = one round, so cohorts coincide with the round
+        // loop's rounds; profiled ticks are wall-clock-scaled
+        let tick = if lockstep { 1.0 } else { self.cfg.tick_ms };
+        let horizon = self.cfg.steps as f64 * tick;
+
+        let mut queue = EventQueue::new();
+        // live tenants keyed by id — BTreeMap iteration is id order, which
+        // IS arrival order (the round loop's vec order)
+        let mut live: BTreeMap<u64, FleetJob> = BTreeMap::new();
+        let mut names: HashMap<String, u64> = HashMap::new();
+        // initial tenants are live from t = 0 directly (NOT via Arrive
+        // events: a scripted depart at round 0 ranks before arrivals and
+        // must be able to find them); their first iteration is due at 0
+        for job in std::mem::take(&mut self.jobs) {
+            names.insert(job.name.clone(), job.id);
+            queue.push(0.0, EventKind::IterationComplete { id: job.id });
+            live.insert(job.id, job);
         }
+        let mut waiting: BTreeMap<u64, FleetJob> = BTreeMap::new();
+        for p in std::mem::take(&mut self.pending) {
+            queue.push(p.at_round as f64 * tick, EventKind::Arrive { id: p.job.id });
+            waiting.insert(p.job.id, p.job);
+        }
+        for (round, name) in std::mem::take(&mut self.departures) {
+            queue.push(round as f64 * tick, EventKind::Depart { name });
+        }
+
+        let mut rounds: Vec<BrokerDecision> = Vec::new();
+        while let Some(cohort) = queue.pop_cohort() {
+            let t = cohort[0].time;
+            if t > horizon {
+                break;
+            }
+            let round = (t / tick) as usize;
+            let mut due: Vec<u64> = Vec::new();
+            for ev in cohort {
+                match ev.kind {
+                    EventKind::Depart { name } => {
+                        // unknown or already-gone: a redundant depart, the
+                        // earlier departure (or completion) won — tolerated
+                        let id = names.get(&name).copied();
+                        if let Some(id) = id {
+                            let job = live.remove(&id).expect("names tracks live jobs");
+                            names.remove(&name);
+                            self.broker.depart(id);
+                            self.finished.push(job.summary(Some(round)));
+                        }
+                    }
+                    EventKind::Arrive { id } => {
+                        if let Some(job) = waiting.remove(&id) {
+                            names.insert(job.name.clone(), id);
+                            live.insert(id, job);
+                            due.push(id);
+                        }
+                    }
+                    EventKind::IterationComplete { id } => {
+                        // a departed job's stale completion finds nothing
+                        match live.get(&id).map(|j| j.completed()) {
+                            Some(true) => {
+                                // configured step count reached: retire now
+                                let job = live.remove(&id).expect("checked live");
+                                names.remove(&job.name);
+                                self.broker.depart(id);
+                                self.finished.push(job.summary(Some(round)));
+                            }
+                            Some(false) => due.push(id),
+                            None => {}
+                        }
+                    }
+                    EventKind::Rebind { id, budget } => {
+                        // broker claw-back from a previous cohort at this
+                        // instant: the tightened Coordinator replans
+                        if let Some(job) = live.get_mut(&id) {
+                            job.rebind(budget);
+                        }
+                    }
+                }
+            }
+            if t >= horizon {
+                continue; // the horizon instant processes retirements only
+            }
+            due.sort_unstable();
+            due.dedup();
+            if due.is_empty() {
+                continue; // departure/rebind-only instant
+            }
+
+            // 1) demands for the due jobs' pending inputs, in id order —
+            //    the round loop's vec order
+            let demands: Vec<JobDemand> = due
+                .iter()
+                .map(|id| {
+                    live.get_mut(id)
+                        .expect("due jobs are live")
+                        .draw_demand(self.cfg.floor_bytes, self.cfg.mimose.reserve_bytes)
+                })
+                .collect();
+
+            // 2) incremental broker fill (or the frozen equal split)
+            let (allocations, floors, wants, predicted_total, overshoot, jain, decision_ms) =
+                if self.cfg.arbitrated {
+                    let fill = self
+                        .broker
+                        .update(&demands)
+                        .expect("worst-case floors validated at construction");
+                    // claw-backs land as same-instant rebind events (the
+                    // follow-up cohort), after this cohort's iterations
+                    for &(id, budget) in &fill.rebinds {
+                        queue.push(t, EventKind::Rebind { id, budget });
+                    }
+                    let a = fill.alloc;
+                    (
+                        a.budgets,
+                        a.floors,
+                        a.wants,
+                        a.predicted_total,
+                        a.overshoot,
+                        a.weighted_jain,
+                        a.decision_ms,
+                    )
+                } else {
+                    let timer = Timer::start();
+                    let share = self.frozen_share;
+                    let total = demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).sum();
+                    let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
+                    let wants: Vec<u64> =
+                        demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).collect();
+                    let budgets = vec![share; demands.len()];
+                    let weights: Vec<f64> = demands.iter().map(|d| d.weight).collect();
+                    let jain = weighted_jain(&budgets, &floors, &weights);
+                    (budgets, floors, wants, total, false, jain, timer.elapsed_ms())
+                };
+            let alloc_total = if self.cfg.arbitrated {
+                self.broker.alloc_total()
+            } else {
+                self.frozen_share * live.len() as u64
+            };
+
+            // 3) rebind and run the due iterations; each schedules its own
+            //    completion one duration ahead
+            for (id, &b) in due.iter().zip(&allocations) {
+                live.get_mut(id).expect("due jobs are live").rebind(b);
+            }
+            let mut aggregate_peak = 0u64;
+            for &id in &due {
+                let job = live.get_mut(&id).expect("due jobs are live");
+                let m = job.step();
+                aggregate_peak += m.peak_bytes;
+                let duration = if lockstep {
+                    tick
+                } else {
+                    // a zero-cost iteration must still advance time, or the
+                    // queue would loop at one instant forever
+                    m.total_ms().max(1e-3 * tick)
+                };
+                queue.push(t + duration, EventKind::IterationComplete { id });
+                job.report.push(m);
+            }
+            rounds.push(BrokerDecision {
+                round,
+                time_ms: t,
+                job_ids: due,
+                allocations,
+                floors,
+                wants,
+                predicted_total,
+                overshoot,
+                weighted_jain: jain,
+                decision_ms,
+                aggregate_peak,
+                alloc_total,
+            });
+        }
+
+        if lockstep {
+            // the round loop records every round, active or idle; pad the
+            // instants no cohort covered so differentials line up 1:1
+            let mut have = vec![false; self.cfg.steps];
+            for d in &rounds {
+                have[d.round] = true;
+            }
+            for (round, seen) in have.into_iter().enumerate() {
+                if !seen {
+                    rounds.push(Self::idle_decision(round, round as f64));
+                }
+            }
+            rounds.sort_by_key(|d| d.round);
+        }
+
+        let live_summaries: Vec<JobSummary> = live.values().map(|j| j.summary(None)).collect();
+        // restore the live set so `jobs()` still reflects it post-run
+        self.jobs = live.into_values().collect();
+        self.finish(rounds, live_summaries)
     }
 }
 
@@ -734,6 +1087,68 @@ mod tests {
             assert_eq!(j.final_budget, 6 * GIB);
         }
         assert_eq!(r.overshoots, 0);
+    }
+
+    #[test]
+    fn equal_split_stays_frozen_through_dynamic_timeline() {
+        // the "static" baseline was silently rebinding (and flushing plan
+        // caches) whenever the live count changed: the split is now frozen
+        // at global / max-concurrent over the whole scripted timeline
+        let mut cfg = FleetConfig {
+            arbitrated: false,
+            ..fleet_cfg(vec![Task::TcBert, Task::McRoberta], 18, 40)
+        };
+        cfg.events = vec![
+            FleetEvent::Arrive { spec: JobSpec::new(Task::TcBert), at_round: 10 },
+            FleetEvent::Depart { job: "MC-Roberta#1".into(), at_round: 25 },
+        ];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.jobs.len(), 3);
+        for j in &r.jobs {
+            assert_eq!(j.budget_changes, 0, "{} rebound under a frozen split", j.name);
+            assert_eq!(j.final_budget, 6 * GIB, "18 GiB / 3 max-concurrent tenants");
+            assert_eq!(j.oom_failures, 0);
+        }
+        for d in &r.rounds {
+            assert!(d.allocations.iter().sum::<u64>() <= 18 * GIB);
+            assert!(d.alloc_total <= 18 * GIB, "round {}: ledger blown", d.round);
+        }
+        assert_eq!(r.overshoots, 0);
+    }
+
+    #[test]
+    fn floor_memo_evicts_a_fraction_not_everything() {
+        let mut memo = FloorMemo::new(8);
+        let mut builds = 0usize;
+        for i in 0..8 {
+            memo.get_or_insert_with((i, 0), || {
+                builds += 1;
+                i as u64
+            });
+        }
+        assert_eq!((builds, memo.len()), (8, 8));
+        // the 9th distinct shape overflows: only every 4th key is evicted
+        let v = memo.get_or_insert_with((8, 0), || {
+            builds += 1;
+            99
+        });
+        assert_eq!((v, builds), (99, 9));
+        assert!(memo.len() <= 8, "the bound holds after overflow");
+        assert!(memo.len() >= 6, "a fraction was evicted, not a wholesale flush");
+        // the memo stays mostly warm when the shapes repeat — the old
+        // clear() forced a rebuild of everything
+        let before = builds;
+        for i in 0..9 {
+            memo.get_or_insert_with((i, 0), || {
+                builds += 1;
+                i as u64
+            });
+        }
+        assert!(builds - before <= 4, "only evicted keys rebuild: {}", builds - before);
+        assert!(memo.len() <= 8);
+        // a hit returns the memoised value without invoking the builder
+        assert_eq!(memo.get_or_insert_with((8, 0), || unreachable!("hit")), 99);
     }
 
     #[test]

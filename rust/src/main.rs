@@ -25,7 +25,7 @@
 //!   mimose fleet --tasks tc-bert,qa-bert --weights 3.0,1.0 --events events.toml
 
 use mimose::config::{
-    toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, JobSpec, MimoseConfig,
+    toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, JobSpec, MimoseConfig, Pacing,
     PlannerKind, Task,
 };
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
@@ -400,6 +400,8 @@ fn cmd_fleet(args: &[String]) {
             .opt("seed", "42", "base rng seed (the job with id i uses seed+i)")
             .opt("grid-mb", "128", "broker allocation granularity (MiB)")
             .opt("cache-capacity", "512", "shared plan-cache capacity (0 = unbounded)")
+            .opt("pacing", "", "event pacing: rounds | lockstep | profiled (default: config)")
+            .opt("tick-ms", "", "scripted-round tick length in ms (profiled pacing only)")
             .flag("no-shared-cache", "disable cross-job plan reuse")
             .flag("equal-split", "static equal split instead of broker arbitration")
             .flag("compare", "also run the other mode and print the speedup"),
@@ -480,6 +482,22 @@ fn cmd_fleet(args: &[String]) {
             }
         }
     }
+    let pacing_arg = cli.get("pacing");
+    if !pacing_arg.is_empty() {
+        cfg.pacing = Pacing::parse(&pacing_arg).unwrap_or_else(|| {
+            eprintln!("unknown pacing '{pacing_arg}' (rounds | lockstep | profiled)");
+            std::process::exit(2);
+        });
+    }
+    let tick_arg = cli.get("tick-ms");
+    if !tick_arg.is_empty() {
+        let tick = tick_arg.parse::<f64>().unwrap_or(f64::NAN);
+        if !tick.is_finite() || tick <= 0.0 {
+            eprintln!("--tick-ms must be a positive number, got '{tick_arg}'");
+            std::process::exit(2);
+        }
+        cfg.tick_ms = tick;
+    }
     let run_mode = |arbitrated: bool| -> FleetReport {
         let mut c = cfg.clone();
         c.arbitrated = arbitrated;
@@ -492,10 +510,11 @@ fn cmd_fleet(args: &[String]) {
         }
     };
     println!(
-        "fleet: {} initial jobs, {} scripted events, sharing {:.1} GB (seed {})",
+        "fleet: {} initial jobs, {} scripted events, sharing {:.1} GB ({} pacing, seed {})",
         cfg.jobs.len(),
         cfg.events.len(),
         cfg.global_budget_gb(),
+        cfg.pacing.name(),
         cfg.seed
     );
     let r = run_mode(cfg.arbitrated);

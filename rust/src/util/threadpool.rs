@@ -2,7 +2,7 @@
 //! unavailable offline; the training loop is synchronous anyway, but benches
 //! and the data pipeline fan out with this).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
@@ -41,6 +41,12 @@ impl ThreadPool {
     }
 
     /// Parallel map preserving input order.
+    ///
+    /// Worker panics are caught and re-raised on the calling thread (the
+    /// whole map aborts with the first panic received). The caller blocks
+    /// on a channel — no busy-wait — and the pool itself survives: the
+    /// panicking closure unwinds inside `catch_unwind`, so its worker
+    /// thread keeps serving later jobs.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -49,30 +55,27 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let results: Arc<Mutex<Vec<Option<R>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        let done = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
-            let results = Arc::clone(&results);
-            let done = Arc::clone(&done);
+            let tx = tx.clone();
             self.execute(move || {
-                let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
-                done.fetch_add(1, Ordering::SeqCst);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                // the receiver is gone once the caller re-raised an earlier
+                // panic — nothing to report to in that case
+                let _ = tx.send((i, r));
             });
         }
-        while done.load(Ordering::SeqCst) < n {
-            thread::yield_now();
+        drop(tx);
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("a worker vanished without reporting");
+            match r {
+                Ok(v) => results[i] = Some(v),
+                Err(panic) => resume_unwind(panic),
+            }
         }
-        Arc::try_unwrap(results)
-            .ok()
-            .expect("all workers done")
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.unwrap())
-            .collect()
+        results.into_iter().map(|r| r.unwrap()).collect()
     }
 }
 
@@ -92,6 +95,7 @@ pub fn available_parallelism() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn map_preserves_order() {
@@ -112,5 +116,24 @@ mod tests {
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn map_propagates_worker_panics_instead_of_hanging() {
+        // regression: the old spin-wait counted completions with an atomic
+        // a panicking closure never incremented, so the caller spun forever
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![1usize, 2, 3, 4], |x| {
+                if x == 3 {
+                    panic!("worker closure panicked");
+                }
+                x * 10
+            })
+        }));
+        assert!(caught.is_err(), "the worker panic must reach the caller");
+        // the pool survives the panic: a later map still completes in order
+        let ok = pool.map(vec![5usize, 6, 7], |x| x + 1);
+        assert_eq!(ok, vec![6, 7, 8]);
     }
 }

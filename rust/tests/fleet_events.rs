@@ -1,0 +1,334 @@
+//! Discrete-event fleet core pins (ISSUE 6): the round loop survives as
+//! `Pacing::Rounds` and the event core must be indistinguishable from it
+//! under `Pacing::Lockstep` — a full randomized differential over scripted
+//! timelines — while `Pacing::Profiled` (each job on its own clock) keeps
+//! every safety invariant: the budget ledger, floors, zero OOM, and
+//! time-ordered decisions. Edge timelines (same-tick depart+arrive, an
+//! arrival burst landing in one tick, an idle fleet repopulating) pin the
+//! within-instant event ordering contract.
+
+use mimose::config::{FleetConfig, FleetEvent, JobSpec, Pacing, Task};
+use mimose::data::trace::{self, Interarrival, JobLength, TraceConfig};
+use mimose::fleet::{FleetReport, FleetScheduler};
+use mimose::util::proptest::{ensure, forall};
+use mimose::util::rng::Rng;
+use mimose::util::GIB;
+
+/// Canonical text form of everything the differential compares: every
+/// broker decision (minus wall time) and every job rollup. Floats are
+/// formatted with `{:?}` (shortest round-trip), so equal fingerprints mean
+/// bit-equal numbers.
+fn fingerprint(r: &FleetReport) -> String {
+    let mut s = String::new();
+    for d in &r.rounds {
+        s += &format!(
+            "r{} ids{:?} alloc{:?} floors{:?} wants{:?} pred{} over{} jain{:?} peak{} total{}\n",
+            d.round,
+            d.job_ids,
+            d.allocations,
+            d.floors,
+            d.wants,
+            d.predicted_total,
+            d.overshoot,
+            d.weighted_jain,
+            d.aggregate_peak,
+            d.alloc_total,
+        );
+    }
+    for j in &r.jobs {
+        s += &format!(
+            "{}#{} w{:?} {}..{:?} steps{} ms{:?} peak{} oom{} rebinds{} final{}\n",
+            j.name,
+            j.id,
+            j.weight,
+            j.arrived_round,
+            j.departed_round,
+            j.steps,
+            j.total_ms,
+            j.peak_bytes,
+            j.oom_failures,
+            j.budget_changes,
+            j.final_budget,
+        );
+    }
+    s += &format!("overshoots {}", r.overshoots);
+    s
+}
+
+fn run_with(mut cfg: FleetConfig, pacing: Pacing) -> Result<FleetReport, String> {
+    cfg.pacing = pacing;
+    Ok(FleetScheduler::new(cfg)?.run())
+}
+
+// ---------------------------------------------------------------------------
+// Differential: Lockstep event core == the legacy round loop
+// ---------------------------------------------------------------------------
+
+/// The compatibility contract: a statically-paced fleet pushed through the
+/// event queue must reproduce the round loop bit for bit — same per-job
+/// allocations, same overshoot rounds, same summaries — across randomized
+/// weights, early completions, arrivals, and departures.
+#[test]
+fn lockstep_is_bit_identical_to_the_round_loop() {
+    forall(
+        29,
+        6,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let steps = rng.range_u(10, 14);
+            let mut jobs = JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]);
+            jobs[0].weight = rng.range_u(1, 40) as f64 / 10.0;
+            jobs[1].weight = rng.range_u(1, 40) as f64 / 10.0;
+            if rng.f64() < 0.5 {
+                jobs[1].steps = rng.range_u(3, steps);
+            }
+            let mut events = Vec::new();
+            if rng.f64() < 0.8 {
+                events.push(FleetEvent::Arrive {
+                    spec: JobSpec::weighted(Task::McRoberta, rng.range_u(1, 40) as f64 / 10.0),
+                    at_round: rng.range_u(0, steps - 1),
+                });
+            }
+            if rng.f64() < 0.5 {
+                events.push(FleetEvent::Depart {
+                    job: "TC-Bert#0".into(),
+                    at_round: rng.range_u(1, steps - 1),
+                });
+            }
+            let cfg = FleetConfig {
+                global_budget_bytes: 20 * GIB,
+                steps,
+                jobs,
+                events,
+                seed: seed ^ 0xd1ff,
+                ..Default::default()
+            };
+            // construction is pacing-independent: both modes accept or
+            // reject the same timelines
+            let rounds = match run_with(cfg.clone(), Pacing::Rounds) {
+                Ok(r) => r,
+                Err(_) => {
+                    ensure(
+                        run_with(cfg, Pacing::Lockstep).is_err(),
+                        "round loop rejected a timeline the event core accepts",
+                    )?;
+                    return Ok(());
+                }
+            };
+            let lockstep = run_with(cfg, Pacing::Lockstep)
+                .map_err(|e| format!("event core rejected a feasible timeline: {e}"))?;
+            ensure(rounds.rounds.len() == steps, "round loop must emit one decision per round")?;
+            ensure(
+                fingerprint(&rounds) == fingerprint(&lockstep),
+                &format!(
+                    "event core diverged from the round loop:\n--- rounds ---\n{}\n--- lockstep ---\n{}",
+                    fingerprint(&rounds),
+                    fingerprint(&lockstep)
+                ),
+            )
+        },
+    );
+}
+
+/// The same contract on the contended showcase workload, in both
+/// arbitration modes — a deterministic anchor next to the property above.
+#[test]
+fn lockstep_matches_rounds_on_a_contended_fleet() {
+    for arbitrated in [true, false] {
+        let cfg = FleetConfig {
+            global_budget_bytes: 16 * GIB,
+            steps: 40,
+            arbitrated,
+            jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta, Task::TcBert]),
+            events: vec![
+                FleetEvent::Arrive { spec: JobSpec::new(Task::McRoberta), at_round: 8 },
+                FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 25 },
+            ],
+            seed: 77,
+            ..Default::default()
+        };
+        let rounds = run_with(cfg.clone(), Pacing::Rounds).expect("feasible");
+        let lockstep = run_with(cfg, Pacing::Lockstep).expect("feasible");
+        assert_eq!(
+            fingerprint(&rounds),
+            fingerprint(&lockstep),
+            "arbitrated={arbitrated}: event core diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Edge timelines: within-instant ordering
+// ---------------------------------------------------------------------------
+
+/// Depart and Arrive scripted at the SAME round: the departure frees its
+/// budget first (rank 0), the arrival joins second (rank 1), and the new
+/// tenant is funded from the departed budget within that very tick.
+#[test]
+fn same_tick_depart_and_arrive_swap_within_one_round() {
+    let cfg = FleetConfig {
+        global_budget_bytes: 12 * GIB,
+        steps: 20,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        events: vec![
+            FleetEvent::Depart { job: "MC-Roberta#1".into(), at_round: 10 },
+            FleetEvent::Arrive { spec: JobSpec::new(Task::McRoberta), at_round: 10 },
+        ],
+        seed: 5,
+        ..Default::default()
+    };
+    let r = run_with(cfg.clone(), Pacing::Lockstep).expect("feasible");
+    let departed = r.jobs.iter().find(|j| j.id == 1).unwrap();
+    let arrived = r.jobs.iter().find(|j| j.id == 2).unwrap();
+    assert_eq!(departed.departed_round, Some(10));
+    assert_eq!((arrived.arrived_round, arrived.name.as_str()), (10, "MC-Roberta#2"));
+    let d10 = r.rounds.iter().find(|d| d.round == 10).unwrap();
+    assert!(
+        d10.job_ids.contains(&2) && !d10.job_ids.contains(&1),
+        "round 10 must already run the swapped-in tenant: {:?}",
+        d10.job_ids
+    );
+    for d in &r.rounds {
+        assert!(d.alloc_total <= 12 * GIB, "round {}: ledger blown", d.round);
+    }
+    // and the round loop agrees on the whole story
+    let rounds = run_with(cfg, Pacing::Rounds).expect("feasible");
+    assert_eq!(fingerprint(&rounds), fingerprint(&r));
+}
+
+/// A whole submission spike lands in one tick and every tenant is funded
+/// at or above its floor with the ledger intact.
+#[test]
+fn arrival_burst_joins_in_one_tick() {
+    let burst: Vec<FleetEvent> = (0..24)
+        .map(|i| FleetEvent::Arrive {
+            spec: JobSpec { name: Some(format!("burst-{i}")), ..JobSpec::new(Task::McRoberta) },
+            at_round: 3,
+        })
+        .collect();
+    let cfg = FleetConfig {
+        global_budget_bytes: 192 * GIB,
+        steps: 8,
+        jobs: JobSpec::from_tasks(&[Task::McRoberta]),
+        events: burst,
+        seed: 9,
+        ..Default::default()
+    };
+    let r = run_with(cfg, Pacing::Lockstep).expect("a 25-tenant burst must be feasible");
+    assert_eq!(r.jobs.len(), 25);
+    assert_eq!(r.jobs.iter().filter(|j| j.arrived_round == 3).count(), 24);
+    assert_eq!(r.rounds.len(), 8);
+    let d3 = r.rounds.iter().find(|d| d.round == 3).unwrap();
+    assert_eq!(d3.job_ids.len(), 25, "the whole spike runs from its arrival tick");
+    for d in &r.rounds {
+        assert!(d.allocations.iter().sum::<u64>() <= 192 * GIB);
+        assert!(d.alloc_total <= 192 * GIB);
+        for (a, f) in d.allocations.iter().zip(&d.floors) {
+            assert!(a >= f, "round {}: allocation below floor", d.round);
+        }
+    }
+    assert_eq!(r.oom_failures(), 0);
+}
+
+/// Every tenant retires, the fleet idles (empty decisions, zero ledger),
+/// then a scripted arrival repopulates it.
+#[test]
+fn idle_fleet_repopulates_on_arrival() {
+    let mut initial = JobSpec::new(Task::TcBert);
+    initial.steps = 4;
+    let mut late = JobSpec::new(Task::McRoberta);
+    late.steps = 4;
+    let cfg = FleetConfig {
+        global_budget_bytes: 10 * GIB,
+        steps: 16,
+        jobs: vec![initial],
+        events: vec![FleetEvent::Arrive { spec: late, at_round: 10 }],
+        seed: 13,
+        ..Default::default()
+    };
+    let r = run_with(cfg, Pacing::Lockstep).expect("feasible");
+    assert_eq!(r.rounds.len(), 16, "idle ticks are padded so the timeline stays dense");
+    for d in &r.rounds {
+        let idle = (4..10).contains(&d.round) || d.round >= 14;
+        assert_eq!(d.job_ids.is_empty(), idle, "round {}: wrong tenancy", d.round);
+        if idle {
+            assert_eq!(d.alloc_total, 0, "round {}: idle fleet holds budget", d.round);
+        }
+    }
+    let late = r.jobs.iter().find(|j| j.id == 1).unwrap();
+    assert_eq!((late.arrived_round, late.departed_round, late.steps), (10, Some(14), 4));
+}
+
+// ---------------------------------------------------------------------------
+// Profiled pacing: each job on its own clock
+// ---------------------------------------------------------------------------
+
+/// Trace-generated timeline under Profiled pacing: iteration completions
+/// interleave at real (simulated) times, so cohorts are partial — the
+/// incremental broker path — and every safety invariant must still hold.
+#[test]
+fn profiled_pacing_respects_budgets_on_a_trace() {
+    let events = trace::generate(&TraceConfig {
+        interarrival: Interarrival::Exponential { mean_rounds: 6.0 },
+        length: JobLength::Uniform { lo: 3, hi: 8 },
+        ..TraceConfig::new(vec![Task::TcBert, Task::McRoberta], 30, 21)
+    });
+    assert!(!events.is_empty(), "the trace must script at least one arrival");
+    let cfg = FleetConfig {
+        global_budget_bytes: 64 * GIB,
+        steps: 30,
+        pacing: Pacing::Profiled,
+        tick_ms: 200.0,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        events,
+        seed: 33,
+        ..Default::default()
+    };
+    let r = FleetScheduler::new(cfg).expect("trace must be feasible").run();
+    assert!(r.rounds.len() >= 2, "profiled run produced almost no decisions");
+    let mut last_t = f64::NEG_INFINITY;
+    for d in &r.rounds {
+        assert!(d.time_ms >= last_t, "decisions must be time-ordered");
+        last_t = d.time_ms;
+        assert!(d.allocations.iter().sum::<u64>() <= 64 * GIB);
+        assert!(d.alloc_total <= 64 * GIB, "t={}: fleet-wide ledger blown", d.time_ms);
+        assert!(d.aggregate_peak <= 64 * GIB);
+        for (a, f) in d.allocations.iter().zip(&d.floors) {
+            assert!(a >= f, "t={}: allocation below floor", d.time_ms);
+        }
+    }
+    assert_eq!(r.oom_failures(), 0);
+    for j in &r.jobs {
+        assert!(j.steps >= 1, "{} never ran", j.name);
+    }
+}
+
+/// The point of Profiled pacing: a job with cheap iterations completes
+/// more of them inside the same horizon than a job with expensive ones —
+/// the round loop's one-step-per-round lockstep is gone.
+#[test]
+fn profiled_jobs_advance_on_their_own_clocks() {
+    let cfg = FleetConfig {
+        global_budget_bytes: 20 * GIB,
+        steps: 12,
+        pacing: Pacing::Profiled,
+        tick_ms: 200.0,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::QaBert]),
+        seed: 41,
+        ..Default::default()
+    };
+    let r = FleetScheduler::new(cfg).expect("feasible").run();
+    let fast = r.jobs.iter().find(|j| j.id == 0).unwrap(); // TC-Bert: short seqs
+    let slow = r.jobs.iter().find(|j| j.id == 1).unwrap(); // QA-Bert: long seqs
+    assert!(fast.steps >= 1 && slow.steps >= 1);
+    assert!(
+        fast.steps > slow.steps,
+        "own-clock pacing must let the cheap job pull ahead: {} ({}) vs {} ({})",
+        fast.name,
+        fast.steps,
+        slow.name,
+        slow.steps
+    );
+    assert_eq!(r.oom_failures(), 0);
+}
