@@ -67,7 +67,12 @@ pub fn write_bench_json_with_metrics(
             if i + 1 < results.len() { "," } else { "" },
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    // the obs registry snapshot (counters/gauges/histograms recorded while
+    // metrics were enabled; an empty shell otherwise) — reads are ungated
+    s.push_str(&format!("  \"obs\": {}\n", mimose::obs::metrics_json()));
+    s.push('}');
+    s.push('\n');
     fs::write(&path, s).expect("write bench json");
     println!("[wrote {}]", path.display());
 }

@@ -184,7 +184,7 @@ fn main() {
     // one discrete event = queue pop + incremental single-tenant refill +
     // queue push. The whole point of the event core: this cost must be
     // (near-)independent of how many tenants the fleet tracks.
-    let mut bench_events = |n: u64, global: u64| {
+    let mut bench_events = |n: u64, global: u64, label: &str| {
         let demands: Vec<mimose::fleet::JobDemand> = (0..n).map(mk_demand).collect();
         let mut broker = mimose::fleet::BudgetBroker::new(global, 128 << 20, 0.5);
         broker.allocate(&demands).unwrap();
@@ -193,7 +193,7 @@ fn main() {
             q.push(i as f64, EventKind::IterationComplete { id: i });
         }
         let mut t = n as f64;
-        record(bench(&format!("event_core/step_{n}_tenants"), BUDGET, || {
+        record(bench(&format!("event_core/step_{n}_tenants{label}"), BUDGET, || {
             let e = q.pop().unwrap();
             let id = match e.kind {
                 EventKind::IterationComplete { id } => id,
@@ -204,8 +204,8 @@ fn main() {
             t += 1.0;
         }))
     };
-    let r64 = bench_events(64, 16 * GIB);
-    let r512 = bench_events(512, 128 * GIB);
+    let r64 = bench_events(64, 16 * GIB, "");
+    let r512 = bench_events(512, 128 * GIB, "");
     // 8x the tenants may cost at most ~log-factor more per event — a linear
     // per-event scan would show up as ~8x here
     assert!(
@@ -216,6 +216,41 @@ fn main() {
     );
     let events_per_sec = 1.0 / r512.mean_s.max(1e-12);
     let events_per_sec_64 = 1.0 / r64.mean_s.max(1e-12);
+
+    rule("Perf — obs overhead guardrail");
+    // the same 512-tenant event step with the metrics registry enabled:
+    // the broker records its path counters + decision histogram through
+    // cached atomic handles, so the enabled-mode tax must stay under 10%.
+    // A few plan-cache lookups run first so the exported obs section
+    // carries a real hit rate alongside the broker path ratio.
+    mimose::obs::set_metrics_enabled(true);
+    for i in 0..64 {
+        black_box(cache.lookup_exact((1000 + (i % 64) * 97, 0)));
+    }
+    black_box(cache.lookup_exact((7, 0))); // one guaranteed miss
+    let r512_obs = bench_events(512, 128 * GIB, "_obs");
+    mimose::obs::set_metrics_enabled(false);
+    let obs_overhead_ratio = r512_obs.mean_s / r512.mean_s.max(1e-12) - 1.0;
+    println!(
+        "obs-enabled overhead at 512 tenants: {:.2}% ({:.3} vs {:.3} us/event)",
+        obs_overhead_ratio * 100.0,
+        r512_obs.mean_s * 1e6,
+        r512.mean_s * 1e6
+    );
+    assert!(
+        r512_obs.mean_s < 1.10 * r512.mean_s,
+        "obs-enabled event step exceeded the 10% overhead budget: {:.3} vs {:.3} us",
+        r512_obs.mean_s * 1e6,
+        r512.mean_s * 1e6
+    );
+    let events_per_sec_obs = 1.0 / r512_obs.mean_s.max(1e-12);
+    let cv = mimose::obs::counter_value;
+    let (pf, pi) = (cv("broker.path_full"), cv("broker.path_incremental"));
+    let broker_incremental_ratio =
+        if pf + pi > 0 { pi as f64 / (pf + pi) as f64 } else { 0.0 };
+    let (ch, cm) = (cv("plan_cache.hits"), cv("plan_cache.misses"));
+    let plan_cache_hit_rate =
+        if ch + cm > 0 { ch as f64 / (ch + cm) as f64 } else { 0.0 };
 
     rule("Perf — caching allocator");
     let mut alloc = CachingAllocator::new(8 * GIB);
@@ -256,6 +291,10 @@ fn main() {
             ("mean_optimality_gap", mean_gap),
             ("events_per_sec", events_per_sec),
             ("events_per_sec_64", events_per_sec_64),
+            ("events_per_sec_obs", events_per_sec_obs),
+            ("obs_overhead_ratio", obs_overhead_ratio),
+            ("broker_incremental_ratio", broker_incremental_ratio),
+            ("plan_cache_hit_rate", plan_cache_hit_rate),
         ],
     );
 }

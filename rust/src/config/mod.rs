@@ -368,6 +368,41 @@ impl CoordinatorConfig {
     }
 }
 
+/// Observability knobs (`[obs]` in TOML): the [`crate::obs`] metrics
+/// registry and Chrome-trace tracer are global and off by default; this
+/// section (or the `--obs`/`--trace-out` CLI flags) turns them on per run.
+#[derive(Clone, Debug, Default)]
+pub struct ObsConfig {
+    /// Enable the metrics counters/gauges/histograms (and the `obs`
+    /// section of reports).
+    pub enabled: bool,
+    /// Write a Chrome trace-event JSON file here after the run (empty =
+    /// no trace). A non-empty path implies span/event recording.
+    pub trace_out: String,
+}
+
+impl ObsConfig {
+    /// Read the `[obs]` keys of a parsed TOML doc.
+    pub fn from_doc(doc: &Doc) -> Self {
+        ObsConfig {
+            enabled: doc.get_bool("obs.enabled", false),
+            trace_out: doc.get_str("obs.trace_out", ""),
+        }
+    }
+
+    /// Whether span/event tracing should record: explicitly enabled, or
+    /// implied by a trace output path.
+    pub fn trace_on(&self) -> bool {
+        self.enabled || !self.trace_out.is_empty()
+    }
+
+    /// Flip the global [`crate::obs`] gates to match this config.
+    pub fn apply(&self) {
+        crate::obs::set_metrics_enabled(self.enabled);
+        crate::obs::set_trace_enabled(self.trace_on());
+    }
+}
+
 /// Full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -378,6 +413,7 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub mimose: MimoseConfig,
     pub coordinator: CoordinatorConfig,
+    pub obs: ObsConfig,
     /// Cap iterations per epoch (0 = full epoch) — for fast benches.
     pub max_iters: usize,
 }
@@ -392,6 +428,7 @@ impl ExperimentConfig {
             seed: 42,
             mimose: MimoseConfig::default(),
             coordinator: CoordinatorConfig::default(),
+            obs: ObsConfig::default(),
             max_iters: 0,
         }
     }
@@ -412,6 +449,7 @@ impl ExperimentConfig {
         cfg.max_iters = doc.get_usize("max_iters", 0);
         cfg.mimose = MimoseConfig::from_doc(doc);
         cfg.coordinator = CoordinatorConfig::from_doc(doc);
+        cfg.obs = ObsConfig::from_doc(doc);
         Ok(cfg)
     }
 
@@ -601,6 +639,7 @@ pub struct FleetConfig {
     pub tick_ms: f64,
     pub mimose: MimoseConfig,
     pub coordinator: CoordinatorConfig,
+    pub obs: ObsConfig,
 }
 
 impl Default for FleetConfig {
@@ -621,6 +660,7 @@ impl Default for FleetConfig {
             tick_ms: 200.0,
             mimose: MimoseConfig::default(),
             coordinator: CoordinatorConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -722,6 +762,7 @@ impl FleetConfig {
             },
             mimose: MimoseConfig::from_doc(doc),
             coordinator: CoordinatorConfig::from_doc(doc),
+            obs: ObsConfig::from_doc(doc),
         })
     }
 
@@ -833,6 +874,25 @@ mod tests {
         assert_eq!(c.coordinator.max_transitions, 8);
         let d = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
         assert!(!d.coordinator.reshelter_on_novel, "default off");
+    }
+
+    #[test]
+    fn obs_config_from_toml() {
+        let doc = Doc::parse(
+            "task = \"tc-bert\"\n[obs]\nenabled = true\ntrace_out = \"trace.json\"\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.trace_out, "trace.json");
+        assert!(c.obs.trace_on());
+        // default: everything off
+        let d = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
+        assert!(!d.obs.enabled && d.obs.trace_out.is_empty() && !d.obs.trace_on());
+        // a trace path alone implies tracing without metrics
+        let doc = Doc::parse("[fleet]\nsteps = 3\n[obs]\ntrace_out = \"t.json\"\n").unwrap();
+        let f = FleetConfig::from_doc(&doc).unwrap();
+        assert!(!f.obs.enabled && f.obs.trace_on());
     }
 
     #[test]

@@ -39,6 +39,7 @@
 use crate::collector::{Collector, Observation};
 use crate::config::{CoordinatorConfig, MimoseConfig};
 use crate::estimator::MemoryEstimator;
+use crate::obs;
 use crate::model::{InputKey, ModelProfile};
 use crate::planners::{
     checkpointable, usable_activation_budget, InputDesc, IterationMode, PlanDecision,
@@ -302,6 +303,14 @@ impl Coordinator {
             if self.ccfg.track_transitions && self.transitions.len() < self.ccfg.max_transitions {
                 self.transitions.push(Transition { iter: self.iter, from: self.phase, to, input_size });
             }
+            obs::inc("coordinator.transitions");
+            obs::with_tracer(|tr| {
+                tr.instant(
+                    &format!("phase:{}", to.name()),
+                    "coordinator",
+                    &[("iter", self.iter as f64), ("input_size", input_size as f64)],
+                );
+            });
             self.phase = to;
         }
     }
@@ -397,6 +406,10 @@ impl Coordinator {
             }
             self.shared_inserted.clear();
             self.reshelters += 1;
+            obs::inc("coordinator.reshelters");
+            obs::with_tracer(|tr| {
+                tr.instant("reshelter", "coordinator", &[("input_size", size as f64)]);
+            });
             shelter = true;
         }
         if shelter {
@@ -412,8 +425,11 @@ impl Coordinator {
         // ---- responsive execution (§4.3-§4.4, §5) ----
         let t = Timer::start();
         if !self.estimator_ready {
-            self.train_ms += self.estimator.train();
+            let train_ms = self.estimator.train();
+            self.train_ms += train_ms;
             self.estimator_ready = true;
+            obs::inc("estimator.refits");
+            obs::observe_ms("estimator.refit_ms", train_ms);
         }
         if let Some(plan) = self.cache.lookup_exact(plan_key) {
             let planning_ms = t.elapsed_ms();
@@ -455,6 +471,7 @@ impl Coordinator {
         let planning_ms = t.elapsed_ms();
         self.plan_ms_total += planning_ms;
         self.replan_ms.add(planning_ms);
+        obs::observe_ms("coordinator.replan_ms", planning_ms);
         self.set_phase(Phase::Frozen, size);
         PlanDecision {
             mode: IterationMode::Planned(plan),

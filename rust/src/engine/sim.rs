@@ -19,6 +19,7 @@ use crate::metrics::{IterationMetrics, RunReport};
 use crate::model::{
     encoder_residual_components, task_profile, vision::SwinSpec, ModelProfile, StageKind,
 };
+use crate::obs;
 use crate::planners::{
     BaselinePlanner, DtrPlanner, InputDesc, IterationMode, MimosePlanner, OomResponse,
     OptimalConfig, OptimalPlanner, Planner, SublinearPlanner,
@@ -441,6 +442,8 @@ impl SimEngine {
             let l = profile.layers()[li].clone();
             let cost_ms = self.cost.layer_ms(l.fwd_flops);
             m.compute_ms += cost_ms;
+            obs::inc("engine.fwd_stages");
+            obs::with_tracer(|tr| tr.push_span(&l.name, "fwd", cost_ms, &[]));
 
             // transient working set (e.g. head logits): alloc then free
             if l.transient_bytes > 0 {
@@ -482,10 +485,14 @@ impl SimEngine {
                 let fwd_ms = self.cost.layer_ms(l.fwd_flops);
                 // backward compute ~ 2x forward
                 m.compute_ms += 2.0 * fwd_ms;
+                obs::inc("engine.bwd_stages");
+                obs::with_tracer(|tr| tr.push_span(&l.name, "bwd", 2.0 * fwd_ms, &[]));
 
                 if states[li].checkpointed {
                     // rematerialise the residual set, then free it + input
                     m.recompute_ms += fwd_ms;
+                    obs::inc("engine.recompute_stages");
+                    obs::with_tracer(|tr| tr.push_span(&l.name, "recompute", fwd_ms, &[]));
                     let sizes = components[li].clone();
                     let mut temp = Vec::new();
                     for bytes in sizes {
@@ -510,6 +517,10 @@ impl SimEngine {
                     let res_total: u64 = components[li].iter().sum::<u64>().max(1);
                     let frac = (states[li].evicted_bytes as f64 / res_total as f64).min(1.5);
                     m.recompute_ms += 2.0 * fwd_ms * frac;
+                    obs::inc("engine.recompute_stages");
+                    obs::with_tracer(|tr| {
+                        tr.push_span(&l.name, "recompute", 2.0 * fwd_ms * frac, &[])
+                    });
                     let ids = states[li].tensors.clone();
                     'restore: for id in ids {
                         while self.ledger.get(id).map(|t| t.evicted).unwrap_or(false) {

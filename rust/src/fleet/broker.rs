@@ -40,6 +40,7 @@
 //!
 //! The invariant the fleet tests pin: Σ allocations ≤ global, always.
 
+use crate::obs;
 use crate::util::stats::Summary;
 use crate::util::timer::Timer;
 use std::collections::BTreeMap;
@@ -135,6 +136,31 @@ pub struct BudgetBroker {
     pub decisions: u64,
     /// Decision latency distribution, ms.
     pub decision_ms: Summary,
+    /// Cached obs instrument handles: recording on the per-event hot path
+    /// must be a lone atomic RMW, not a registry-lock-and-lookup per call
+    /// (the perf_hotpaths guardrail pins obs-enabled overhead < 10%).
+    obs: BrokerObs,
+}
+
+/// `'static` handles into the [`crate::obs`] registry, resolved once at
+/// broker construction.
+#[derive(Clone, Copy)]
+struct BrokerObs {
+    path_full: &'static obs::Counter,
+    path_incremental: &'static obs::Counter,
+    clawbacks: &'static obs::Counter,
+    decision_ms: &'static obs::Histogram,
+}
+
+impl BrokerObs {
+    fn new() -> Self {
+        BrokerObs {
+            path_full: obs::counter("broker.path_full"),
+            path_incremental: obs::counter("broker.path_incremental"),
+            clawbacks: obs::counter("broker.clawbacks"),
+            decision_ms: obs::latency_histogram("broker.decision_ms"),
+        }
+    }
 }
 
 fn hist_insert(hist: &mut BTreeMap<u64, usize>, w: f64) {
@@ -167,6 +193,7 @@ impl BudgetBroker {
             overshoots: 0,
             decisions: 0,
             decision_ms: Summary::new(),
+            obs: BrokerObs::new(),
         }
     }
 
@@ -327,6 +354,10 @@ impl BudgetBroker {
         let wants_u: Vec<u64> = wants.iter().map(|&w| w as u64).collect();
         let decision_ms = t.elapsed_ms();
         self.decision_ms.add(decision_ms);
+        if obs::metrics_enabled() {
+            self.obs.path_full.inc();
+            self.obs.decision_ms.observe_ms(decision_ms);
+        }
         Ok(Allocation {
             budgets: alloc,
             floors,
@@ -549,6 +580,13 @@ impl BudgetBroker {
         let wants_u: Vec<u64> = wants.iter().map(|&w| w as u64).collect();
         let decision_ms = t.elapsed_ms();
         self.decision_ms.add(decision_ms);
+        if obs::metrics_enabled() {
+            self.obs.path_incremental.inc();
+            if !rebinds.is_empty() {
+                self.obs.clawbacks.add(rebinds.len() as u64);
+            }
+            self.obs.decision_ms.observe_ms(decision_ms);
+        }
         Ok(IncrementalFill {
             alloc: Allocation {
                 budgets: alloc,

@@ -56,6 +56,7 @@ use crate::coordinator::Coordinator;
 use crate::data::InputStream;
 use crate::engine::sim::{input_for, SimEngine};
 use crate::metrics::RunReport;
+use crate::obs;
 use crate::scheduler::{model_signature, shared_plan_cache, SharedCacheHandle};
 use crate::util::timer::Timer;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
@@ -725,6 +726,21 @@ impl FleetScheduler {
             queue.push(0.0, EventKind::IterationComplete { id: job.id });
             live.insert(job.id, job);
         }
+        // observability: one Perfetto track per job plus a broker track for
+        // fills, claw-backs, and arrive/depart instants. Strictly
+        // observational — the event dynamics (and the Rounds/Lockstep
+        // bit-identity differential) are untouched whether tracing is on.
+        let tracing = obs::trace_enabled();
+        let mut broker_tid = 0usize;
+        let mut track_of: BTreeMap<u64, usize> = BTreeMap::new();
+        if tracing {
+            obs::with_tracer(|tr| {
+                broker_tid = tr.track("broker");
+                for job in live.values() {
+                    track_of.insert(job.id, tr.track(&format!("job:{}", job.name)));
+                }
+            });
+        }
         let mut waiting: BTreeMap<u64, FleetJob> = BTreeMap::new();
         for p in std::mem::take(&mut self.pending) {
             queue.push(p.at_round as f64 * tick, EventKind::Arrive { id: p.job.id });
@@ -741,6 +757,7 @@ impl FleetScheduler {
                 break;
             }
             let round = (t / tick) as usize;
+            obs::gauge_set("fleet.queue_depth", queue.len() as u64);
             let mut due: Vec<u64> = Vec::new();
             for ev in cohort {
                 match ev.kind {
@@ -753,13 +770,27 @@ impl FleetScheduler {
                             names.remove(&name);
                             self.broker.depart(id);
                             self.finished.push(job.summary(Some(round)));
+                            if tracing {
+                                obs::with_tracer(|tr| {
+                                    let label = format!("depart:{name}");
+                                    tr.instant_at(broker_tid, &label, "broker", t, &[]);
+                                });
+                            }
                         }
                     }
                     EventKind::Arrive { id } => {
                         if let Some(job) = waiting.remove(&id) {
+                            let jname = job.name.clone();
                             names.insert(job.name.clone(), id);
                             live.insert(id, job);
                             due.push(id);
+                            if tracing {
+                                obs::with_tracer(|tr| {
+                                    track_of.insert(id, tr.track(&format!("job:{jname}")));
+                                    let label = format!("arrive:{jname}");
+                                    tr.instant_at(broker_tid, &label, "broker", t, &[]);
+                                });
+                            }
                         }
                     }
                     EventKind::IterationComplete { id } => {
@@ -781,6 +812,17 @@ impl FleetScheduler {
                         // instant: the tightened Coordinator replans
                         if let Some(job) = live.get_mut(&id) {
                             job.rebind(budget);
+                            if tracing {
+                                obs::with_tracer(|tr| {
+                                    tr.instant_at(
+                                        broker_tid,
+                                        "rebind",
+                                        "broker",
+                                        t,
+                                        &[("id", id as f64), ("budget", budget as f64)],
+                                    );
+                                });
+                            }
                         }
                     }
                 }
@@ -844,6 +886,18 @@ impl FleetScheduler {
             } else {
                 self.frozen_share * live.len() as u64
             };
+            if tracing {
+                let n_due = due.len() as f64;
+                obs::with_tracer(|tr| {
+                    tr.instant_at(
+                        broker_tid,
+                        "fill",
+                        "broker",
+                        t,
+                        &[("n_due", n_due), ("decision_ms", decision_ms)],
+                    );
+                });
+            }
 
             // 3) rebind and run the due iterations; each schedules its own
             //    completion one duration ahead
@@ -851,10 +905,22 @@ impl FleetScheduler {
                 live.get_mut(id).expect("due jobs are live").rebind(b);
             }
             let mut aggregate_peak = 0u64;
-            for &id in &due {
+            for (&id, &budget) in due.iter().zip(&allocations) {
                 let job = live.get_mut(&id).expect("due jobs are live");
+                if tracing {
+                    // stage spans emitted inside the engine land on this
+                    // job's track, clocked to the event core's `t`
+                    let tid = track_of.get(&id).copied();
+                    obs::with_tracer(|tr| {
+                        let tid =
+                            tid.unwrap_or_else(|| tr.track(&format!("job:{}", job.name)));
+                        tr.set_current(tid);
+                        tr.set_clock_ms(tid, t);
+                    });
+                }
                 let m = job.step();
                 aggregate_peak += m.peak_bytes;
+                let peak = m.peak_bytes as f64;
                 let duration = if lockstep {
                     tick
                 } else {
@@ -862,6 +928,21 @@ impl FleetScheduler {
                     // queue would loop at one instant forever
                     m.total_ms().max(1e-3 * tick)
                 };
+                if tracing {
+                    let tid = track_of.get(&id).copied();
+                    obs::with_tracer(|tr| {
+                        let tid =
+                            tid.unwrap_or_else(|| tr.track(&format!("job:{}", job.name)));
+                        tr.span_at(
+                            tid,
+                            "iter",
+                            "job",
+                            t,
+                            duration,
+                            &[("budget", budget as f64), ("peak_bytes", peak)],
+                        );
+                    });
+                }
                 queue.push(t + duration, EventKind::IterationComplete { id });
                 job.report.push(m);
             }

@@ -66,4 +66,5 @@ pub mod scheduler;
 pub mod memory;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod util;

@@ -25,8 +25,8 @@
 //!   mimose fleet --tasks tc-bert,qa-bert --weights 3.0,1.0 --events events.toml
 
 use mimose::config::{
-    toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, JobSpec, MimoseConfig, Pacing,
-    PlannerKind, Task,
+    toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, JobSpec, MimoseConfig,
+    ObsConfig, Pacing, PlannerKind, Task,
 };
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
 use mimose::engine::sim::{input_for, max_task_profile, SimEngine};
@@ -124,6 +124,46 @@ fn report_transitions(c: &Coordinator, max: usize) {
     );
 }
 
+/// Print the obs counter summary and write the Chrome trace, if either
+/// facility was enabled for this run.
+fn report_obs(obs: &ObsConfig) {
+    if obs.enabled {
+        let nonzero: Vec<(String, u64)> =
+            mimose::obs::counters().into_iter().filter(|(_, v)| *v > 0).collect();
+        if !nonzero.is_empty() {
+            println!("  obs counters      :");
+            for (name, v) in &nonzero {
+                println!("    {name:<28} {v}");
+            }
+        }
+        let v = mimose::obs::counter_value;
+        let (hits, misses) = (v("plan_cache.hits"), v("plan_cache.misses"));
+        if hits + misses > 0 {
+            println!(
+                "    plan-cache hit rate          {:.1}%",
+                100.0 * hits as f64 / (hits + misses) as f64
+            );
+        }
+        let (full, incr) = (v("broker.path_full"), v("broker.path_incremental"));
+        if full + incr > 0 {
+            println!(
+                "    broker incremental ratio     {:.1}%",
+                100.0 * incr as f64 / (full + incr) as f64
+            );
+        }
+    }
+    if !obs.trace_out.is_empty() {
+        match mimose::obs::write_trace(&obs.trace_out) {
+            Ok(()) => println!(
+                "  trace             : {} events -> {}",
+                mimose::obs::trace_len(),
+                obs.trace_out
+            ),
+            Err(e) => eprintln!("cannot write trace '{}': {e}", obs.trace_out),
+        }
+    }
+}
+
 fn cmd_sim(args: &[String]) {
     let cli = parse_or_exit(
         Cli::new("mimose sim", "run one simulated experiment")
@@ -136,10 +176,12 @@ fn cmd_sim(args: &[String]) {
             .opt("collect-iters", "10", "Mimose sheltered iterations")
             .opt("reserve-gb", "1.0", "Mimose fragmentation reserve (GiB)")
             .flag("reshelter", "re-collect novel input sizes after warmup (§4.2)")
+            .flag("obs", "enable the metrics registry (report + TSV obs columns)")
+            .opt("trace-out", "", "write a Chrome trace-event JSON file (implies tracing)")
             .opt("tsv", "", "append a TSV row to this file"),
         args,
     );
-    let cfg = if !cli.get("config").is_empty() {
+    let mut cfg = if !cli.get("config").is_empty() {
         ExperimentConfig::from_file(&cli.get("config")).unwrap_or_else(|e| {
             eprintln!("config error: {e}");
             std::process::exit(2);
@@ -167,6 +209,13 @@ fn cmd_sim(args: &[String]) {
         };
         c
     };
+    if cli.get_flag("obs") {
+        cfg.obs.enabled = true;
+    }
+    if !cli.get("trace-out").is_empty() {
+        cfg.obs.trace_out = cli.get("trace-out");
+    }
+    cfg.obs.apply();
     println!(
         "sim: {} / {} @ {:.1} GB (seed {})",
         cfg.task.name(),
@@ -174,6 +223,7 @@ fn cmd_sim(args: &[String]) {
         cfg.budget_gb(),
         cfg.seed
     );
+    let obs_cfg = cfg.obs.clone();
     match SimEngine::new(cfg) {
         Ok(mut e) => {
             let r = e.run_epoch();
@@ -181,15 +231,35 @@ fn cmd_sim(args: &[String]) {
             if let Some(c) = e.coordinator() {
                 report_transitions(c, 8);
             }
+            report_obs(&obs_cfg);
             let tsv = cli.get("tsv");
             if !tsv.is_empty() {
                 let new = !std::path::Path::new(&tsv).exists();
+                let mut header = RunReport::tsv_header().to_string();
+                let mut row = r.tsv_row();
+                if obs_cfg.enabled {
+                    // obs columns ride along the report row (the pinned
+                    // RunReport TSV schema itself is untouched)
+                    header.push_str(
+                        "\tobs_plan_cache_hits\tobs_plan_cache_misses\
+                         \tobs_estimator_refits\tobs_fwd_stages\tobs_recompute_stages",
+                    );
+                    let v = mimose::obs::counter_value;
+                    row.push_str(&format!(
+                        "\t{}\t{}\t{}\t{}\t{}",
+                        v("plan_cache.hits"),
+                        v("plan_cache.misses"),
+                        v("estimator.refits"),
+                        v("engine.fwd_stages"),
+                        v("engine.recompute_stages")
+                    ));
+                }
                 let mut out = String::new();
                 if new {
-                    out.push_str(RunReport::tsv_header());
+                    out.push_str(&header);
                     out.push('\n');
                 }
-                out.push_str(&r.tsv_row());
+                out.push_str(&row);
                 out.push('\n');
                 use std::io::Write;
                 let mut f = std::fs::OpenOptions::new()
@@ -404,7 +474,13 @@ fn cmd_fleet(args: &[String]) {
             .opt("tick-ms", "", "scripted-round tick length in ms (profiled pacing only)")
             .flag("no-shared-cache", "disable cross-job plan reuse")
             .flag("equal-split", "static equal split instead of broker arbitration")
-            .flag("compare", "also run the other mode and print the speedup"),
+            .flag("compare", "also run the other mode and print the speedup")
+            .flag("obs", "enable the metrics registry (broker/cache/engine counters)")
+            .opt(
+                "trace-out",
+                "",
+                "write a Chrome trace-event JSON (one track per job + broker track)",
+            ),
         args,
     );
     let mut cfg = if !cli.get("config").is_empty() {
@@ -498,6 +574,13 @@ fn cmd_fleet(args: &[String]) {
         }
         cfg.tick_ms = tick;
     }
+    if cli.get_flag("obs") {
+        cfg.obs.enabled = true;
+    }
+    if !cli.get("trace-out").is_empty() {
+        cfg.obs.trace_out = cli.get("trace-out");
+    }
+    cfg.obs.apply();
     let run_mode = |arbitrated: bool| -> FleetReport {
         let mut c = cfg.clone();
         c.arbitrated = arbitrated;
@@ -519,6 +602,7 @@ fn cmd_fleet(args: &[String]) {
     );
     let r = run_mode(cfg.arbitrated);
     report_fleet(&r);
+    report_obs(&cfg.obs);
     if cli.get_flag("compare") {
         let other = run_mode(!cfg.arbitrated);
         println!("\n--- comparison mode ---");

@@ -2,7 +2,13 @@
 //! iterations: each layer forward/backward/recompute becomes a duration
 //! event, planner decisions become instant events. Load the JSON in
 //! Perfetto to see exactly where a plan spends its time.
+//!
+//! Single-clock, single-track (`tid:0`). The multi-track tracer in
+//! [`crate::obs::trace`] supersedes this for fleet timelines (one track
+//! per job plus a broker track); this builder remains for per-run layer
+//! timelines keyed by iteration.
 
+use crate::util::json::escape_str;
 use std::fmt::Write as _;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,7 +86,7 @@ impl TraceBuilder {
             let _ = write!(
                 s,
                 "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.1},\"dur\":{:.1},\"pid\":0,\"tid\":{},\"args\":{{\"iter\":{}}}}}",
-                e.name.replace('"', "'"),
+                escape_str(&e.name),
                 e.phase.category(),
                 e.start_us,
                 e.dur_us,
@@ -123,11 +129,16 @@ mod tests {
         let mut t = TraceBuilder::new();
         t.push(0, "embed", Phase::Forward, 1.5);
         t.push(1, "plan \"x\"", Phase::Planning, 0.1);
+        t.push(2, "back\\slash\nnewline", Phase::Recompute, 0.2);
         let v = Json::parse(&t.to_json()).expect("valid json");
         let arr = v.as_arr().unwrap();
-        assert_eq!(arr.len(), 2);
+        assert_eq!(arr.len(), 3);
         assert_eq!(arr[0].req("cat").as_str(), Some("fwd"));
         assert_eq!(arr[1].req("args").req("iter").as_usize(), Some(1));
+        // names round-trip verbatim through the shared escaper (the old
+        // quote-to-apostrophe rewrite mangled them and missed backslashes)
+        assert_eq!(arr[1].req("name").as_str(), Some("plan \"x\""));
+        assert_eq!(arr[2].req("name").as_str(), Some("back\\slash\nnewline"));
     }
 
     #[test]

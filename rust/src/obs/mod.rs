@@ -1,0 +1,301 @@
+//! Crate-wide observability: a metrics registry + structured tracing.
+//!
+//! Mimose's claim is that online planning overhead stays negligible while
+//! plans adapt to input dynamics (§4, Table 2) — this module is how the
+//! repro *shows* it. Two global, independently-gated facilities:
+//!
+//! * **Metrics** ([`registry`]): named counters, gauges, and fixed-bucket
+//!   histograms behind relaxed atomics. The hot subsystems increment them
+//!   in place — plan caches (`plan_cache.hits/misses/evictions/purges`,
+//!   `shared_cache.*`), the coordinator state machine
+//!   (`coordinator.transitions/reshelters`, `estimator.refits`), the
+//!   budget broker (`broker.path_full/path_incremental/clawbacks`), the
+//!   engines (`engine.fwd_stages/bwd_stages/recompute_stages`), and the
+//!   event core (`fleet.queue_depth` gauge).
+//! * **Tracing** ([`trace`]): multi-track spans/instants with per-track
+//!   logical clocks, exported as a Chrome-trace file via `--trace-out`
+//!   (one Perfetto track per fleet job plus a broker track).
+//!
+//! Both are **disabled by default and zero-cost when off**: every helper
+//! checks one relaxed [`AtomicBool`] and returns before touching any lock
+//! or map. Enable via `[obs]` TOML config, the `--obs`/`--trace-out` CLI
+//! flags, or [`set_enabled`] in code. Recording through a registered
+//! handle is a lone atomic RMW, so `util::threadpool` workers can hammer
+//! the same counter without losing updates.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use trace::Tracer;
+
+use crate::util::json::escape_str;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+static METRICS_ON: AtomicBool = AtomicBool::new(false);
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+
+/// Default latency histogram edges (ms) for [`observe_ms`].
+pub const LATENCY_BOUNDS_MS: &[f64] = &[0.001, 0.01, 0.1, 1.0, 10.0, 100.0];
+
+fn global_registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry::new()))
+}
+
+fn global_tracer() -> &'static Mutex<Tracer> {
+    static TR: OnceLock<Mutex<Tracer>> = OnceLock::new();
+    TR.get_or_init(|| Mutex::new(Tracer::default()))
+}
+
+/// Poison-tolerant lock: a panicking test thread must not wedge every
+/// other observer of the global instruments.
+fn lock<T>(m: &'static Mutex<T>) -> MutexGuard<'static, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// enable gates
+// ---------------------------------------------------------------------------
+
+pub fn set_metrics_enabled(on: bool) {
+    METRICS_ON.store(on, Ordering::Relaxed);
+}
+
+pub fn set_trace_enabled(on: bool) {
+    TRACE_ON.store(on, Ordering::Relaxed);
+}
+
+/// Flip metrics and tracing together.
+pub fn set_enabled(on: bool) {
+    set_metrics_enabled(on);
+    set_trace_enabled(on);
+}
+
+pub fn metrics_enabled() -> bool {
+    METRICS_ON.load(Ordering::Relaxed)
+}
+
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// metrics helpers (no-ops while metrics are disabled)
+// ---------------------------------------------------------------------------
+
+/// Register (or find) a counter regardless of the enable gate — for call
+/// sites that cache the `'static` handle and guard recording themselves.
+pub fn counter(name: &str) -> &'static Counter {
+    lock(global_registry()).counter(name)
+}
+
+/// Register (or find) a latency histogram ([`LATENCY_BOUNDS_MS`] buckets)
+/// regardless of the enable gate — the handle-caching analogue of
+/// [`counter`] for hot paths that record with [`Histogram::observe_ms`].
+pub fn latency_histogram(name: &str) -> &'static Histogram {
+    lock(global_registry()).histogram(name, LATENCY_BOUNDS_MS)
+}
+
+pub fn inc(name: &str) {
+    if metrics_enabled() {
+        lock(global_registry()).counter(name).inc();
+    }
+}
+
+pub fn add(name: &str, n: u64) {
+    if metrics_enabled() {
+        lock(global_registry()).counter(name).add(n);
+    }
+}
+
+pub fn gauge_set(name: &str, v: u64) {
+    if metrics_enabled() {
+        lock(global_registry()).gauge(name).set(v);
+    }
+}
+
+/// Record a latency sample into a fixed-bucket histogram (registered on
+/// first use with [`LATENCY_BOUNDS_MS`]).
+pub fn observe_ms(name: &str, ms: f64) {
+    if metrics_enabled() {
+        lock(global_registry()).histogram(name, LATENCY_BOUNDS_MS).observe_ms(ms);
+    }
+}
+
+/// Current value of a counter (0 if never registered). Reads are not
+/// gated: a disabled registry still reports whatever was recorded.
+pub fn counter_value(name: &str) -> u64 {
+    lock(global_registry()).counter_value(name)
+}
+
+pub fn gauge_value(name: &str) -> u64 {
+    lock(global_registry()).gauge_value(name)
+}
+
+/// Snapshot of every counter, name-sorted.
+pub fn counters() -> Vec<(String, u64)> {
+    lock(global_registry()).counters()
+}
+
+/// Zero all metrics and drop all trace events (instrument registrations
+/// and track-naming survive only as fresh state).
+pub fn reset() {
+    lock(global_registry()).reset();
+    lock(global_tracer()).clear();
+}
+
+// ---------------------------------------------------------------------------
+// tracing helpers (no-ops while tracing is disabled)
+// ---------------------------------------------------------------------------
+
+/// Run `f` against the global tracer iff tracing is enabled.
+pub fn with_tracer<F: FnOnce(&mut Tracer)>(f: F) {
+    if trace_enabled() {
+        f(&mut lock(global_tracer()));
+    }
+}
+
+/// Serialise the global trace to Chrome trace-event JSON.
+pub fn trace_json() -> String {
+    lock(global_tracer()).to_json()
+}
+
+/// Number of buffered trace events.
+pub fn trace_len() -> usize {
+    lock(global_tracer()).len()
+}
+
+/// Write the global trace to `path` (Chrome trace-event JSON; open in
+/// Perfetto or `chrome://tracing`).
+pub fn write_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, trace_json())
+}
+
+// ---------------------------------------------------------------------------
+// export
+// ---------------------------------------------------------------------------
+
+/// The `obs` section: every counter, gauge, and histogram as one JSON
+/// object (parseable by `util::json`; merged into `BENCH_*.json`).
+pub fn metrics_json() -> String {
+    let reg = lock(global_registry());
+    let mut out = String::from("{\"counters\":{");
+    for (i, (name, v)) in reg.counters().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{}", escape_str(name), v));
+    }
+    out.push_str("},\"gauges\":{");
+    for (i, (name, v, high)) in reg.gauges().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\"{}\":{{\"value\":{},\"high_water\":{}}}",
+            escape_str(name),
+            v,
+            high
+        ));
+    }
+    out.push_str("},\"histograms\":{");
+    for (i, (name, h)) in reg.histograms().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let bounds: Vec<String> = h.bounds.iter().map(|b| format!("{b}")).collect();
+        let buckets: Vec<String> = h.buckets.iter().map(|c| c.to_string()).collect();
+        out.push_str(&format!(
+            "\"{}\":{{\"count\":{},\"sum_ms\":{:.6},\"bounds\":[{}],\"buckets\":[{}]}}",
+            escape_str(name),
+            h.count,
+            h.sum_ms,
+            bounds.join(","),
+            buckets.join(",")
+        ));
+    }
+    out.push_str("}}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// The enable flags and instruments are process-global; tests that
+    /// toggle or read them must not interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn serial() -> MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_helpers_are_noops() {
+        let _g = serial();
+        set_enabled(false);
+        reset();
+        inc("obs.test.disabled");
+        add("obs.test.disabled", 10);
+        gauge_set("obs.test.disabled_gauge", 5);
+        observe_ms("obs.test.disabled_hist", 1.0);
+        with_tracer(|tr| tr.push_span("never", "test", 1.0, &[]));
+        assert_eq!(counter_value("obs.test.disabled"), 0);
+        assert_eq!(gauge_value("obs.test.disabled_gauge"), 0);
+        assert_eq!(trace_len(), 0);
+    }
+
+    #[test]
+    fn enabled_helpers_record_and_reset_clears() {
+        let _g = serial();
+        set_enabled(true);
+        reset();
+        inc("obs.test.basic");
+        add("obs.test.basic", 2);
+        gauge_set("obs.test.depth", 7);
+        gauge_set("obs.test.depth", 3);
+        observe_ms("obs.test.lat", 0.5);
+        with_tracer(|tr| tr.push_span("iter", "test", 1.0, &[("x", 1.0)]));
+        assert_eq!(counter_value("obs.test.basic"), 3);
+        assert_eq!(gauge_value("obs.test.depth"), 3);
+        assert!(trace_len() >= 1);
+        let v = Json::parse(&metrics_json()).expect("obs section must parse");
+        assert_eq!(
+            v.req("counters").req("obs.test.basic").as_f64(),
+            Some(3.0)
+        );
+        assert_eq!(
+            v.req("gauges").req("obs.test.depth").req("high_water").as_f64(),
+            Some(7.0)
+        );
+        let h = v.req("histograms").req("obs.test.lat");
+        assert_eq!(h.req("count").as_f64(), Some(1.0));
+        set_enabled(false);
+        reset();
+        assert_eq!(counter_value("obs.test.basic"), 0);
+        assert_eq!(trace_len(), 0);
+    }
+
+    #[test]
+    fn metrics_and_trace_gates_are_independent() {
+        let _g = serial();
+        set_metrics_enabled(true);
+        set_trace_enabled(false);
+        reset();
+        inc("obs.test.gates");
+        with_tracer(|tr| tr.instant("no", "test", &[]));
+        assert_eq!(counter_value("obs.test.gates"), 1);
+        assert_eq!(trace_len(), 0, "trace gate off: nothing buffered");
+        set_metrics_enabled(false);
+        set_trace_enabled(true);
+        inc("obs.test.gates");
+        with_tracer(|tr| tr.instant("yes", "test", &[]));
+        assert_eq!(counter_value("obs.test.gates"), 1, "metrics gate off");
+        assert_eq!(trace_len(), 1);
+        set_enabled(false);
+        reset();
+    }
+}

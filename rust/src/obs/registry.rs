@@ -1,0 +1,306 @@
+//! The metrics registry: named counters, gauges, and fixed-bucket
+//! histograms behind relaxed atomics.
+//!
+//! Instrument handles are `&'static` references into a leak-allocated
+//! registry, so recording is a single `fetch_add` with no lock held —
+//! safe to hammer from `util::threadpool` workers without losing updates.
+//! Registration (name -> handle) goes through one mutex; hot paths either
+//! cache the handle or pay one uncontended lock per record via the
+//! `obs::inc`/`obs::add` convenience helpers, both of which are no-ops
+//! while metrics are disabled (see the module docs in [`crate::obs`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone event counter.
+#[derive(Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins level (queue depths, live-tenant counts). Also tracks
+/// the high-water mark since the last reset.
+#[derive(Debug)]
+pub struct Gauge {
+    value: AtomicU64,
+    high: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge { value: AtomicU64::new(0), high: AtomicU64::new(0) }
+    }
+
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.high.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn high_water(&self) -> u64 {
+        self.high.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+        self.high.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Fixed-bucket latency histogram (milliseconds). Bucket `i` counts
+/// observations `<= bounds[i]`; one implicit overflow bucket catches the
+/// rest. The running sum is kept as integer nanoseconds so concurrent
+/// observers never lose fractional updates to a read-modify-write race.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    /// `bounds` are ascending upper edges in ms; an overflow bucket is
+    /// appended implicitly.
+    pub fn new(bounds: &[f64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe_ms(&self, ms: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| ms <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let ns = if ms.is_finite() && ms > 0.0 { (ms * 1e6) as u64 } else { 0 };
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum_ms() / n as f64 }
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Read-only histogram snapshot for export.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ms: f64,
+}
+
+/// Name -> instrument maps. Instruments are leaked on first registration
+/// so handles are `'static` and recording never touches the registry lock.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, &'static Counter>,
+    gauges: BTreeMap<String, &'static Gauge>,
+    histograms: BTreeMap<String, &'static Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&mut self, name: &str) -> &'static Counter {
+        if let Some(c) = self.counters.get(name) {
+            return c;
+        }
+        let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+        self.counters.insert(name.to_string(), c);
+        c
+    }
+
+    pub fn gauge(&mut self, name: &str) -> &'static Gauge {
+        if let Some(g) = self.gauges.get(name) {
+            return g;
+        }
+        let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+        self.gauges.insert(name.to_string(), g);
+        g
+    }
+
+    pub fn histogram(&mut self, name: &str, bounds: &[f64]) -> &'static Histogram {
+        if let Some(h) = self.histograms.get(name) {
+            return h;
+        }
+        let h: &'static Histogram = Box::leak(Box::new(Histogram::new(bounds)));
+        self.histograms.insert(name.to_string(), h);
+        h
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.get(name).map(|c| c.get()).unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> u64 {
+        self.gauges.get(name).map(|g| g.get()).unwrap_or(0)
+    }
+
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect()
+    }
+
+    /// (name, current, high-water) triples.
+    pub fn gauges(&self) -> Vec<(String, u64, u64)> {
+        self.gauges
+            .iter()
+            .map(|(k, g)| (k.clone(), g.get(), g.high_water()))
+            .collect()
+    }
+
+    pub fn histograms(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.histograms
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    HistogramSnapshot {
+                        bounds: h.bounds().to_vec(),
+                        buckets: h.bucket_counts(),
+                        count: h.count(),
+                        sum_ms: h.sum_ms(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Zero every instrument; registered names survive (their handles are
+    /// `'static` and may be cached by instrumentation sites).
+    pub fn reset(&self) {
+        for c in self.counters.values() {
+            c.reset();
+        }
+        for g in self.gauges.values() {
+            g.reset();
+        }
+        for h in self.histograms.values() {
+            h.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = Gauge::new();
+        g.set(9);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(g.high_water(), 9, "high-water survives a lower set");
+        g.reset();
+        assert_eq!((g.get(), g.high_water()), (0, 0));
+    }
+
+    #[test]
+    fn histogram_buckets_count_and_sum() {
+        let h = Histogram::new(&[1.0, 10.0]);
+        h.observe_ms(0.5); // bucket 0
+        h.observe_ms(1.0); // bucket 0 (inclusive upper edge)
+        h.observe_ms(5.0); // bucket 1
+        h.observe_ms(50.0); // overflow
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum_ms() - 56.5).abs() < 1e-6);
+        assert!((h.mean_ms() - 56.5 / 4.0).abs() < 1e-6);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.bucket_counts(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn histogram_ignores_non_finite_sums() {
+        let h = Histogram::new(&[1.0]);
+        h.observe_ms(f64::INFINITY);
+        assert_eq!(h.count(), 1, "observation still counted");
+        assert_eq!(h.sum_ms(), 0.0, "non-finite value adds nothing to the sum");
+    }
+
+    #[test]
+    fn registry_interns_one_instrument_per_name() {
+        let mut r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        assert!(std::ptr::eq(a, b), "same name must return the same instrument");
+        a.inc();
+        assert_eq!(r.counter_value("x"), 1);
+        assert_eq!(r.counter_value("unregistered"), 0);
+        r.reset();
+        assert_eq!(r.counter_value("x"), 0);
+        assert!(std::ptr::eq(r.counter("x"), a), "reset keeps registrations");
+    }
+}

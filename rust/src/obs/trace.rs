@@ -1,0 +1,336 @@
+//! Structured span/event tracing with per-track logical clocks.
+//!
+//! Supersedes `metrics::trace::TraceBuilder`'s single-clock/`tid:0`
+//! design: a [`Tracer`] owns any number of named *tracks* (Chrome-trace
+//! threads), each with its own logical clock, so the fleet renders as a
+//! multi-track Perfetto timeline — one track per tenant job plus a broker
+//! track carrying fills, claw-backs, and rebind instants — while engine
+//! stage spans nest under whichever track the scheduler points at.
+//!
+//! Export is Chrome trace-event JSON (the array form): `ph:"M"`
+//! `thread_name` metadata rows name the tracks, `ph:"X"` complete events
+//! carry spans (`ts`/`dur` in µs), and `ph:"i"` thread-scoped instants
+//! mark phase changes, cache events, and broker actions. Load the file at
+//! `ui.perfetto.dev` or `chrome://tracing`.
+
+use crate::util::json::escape_str;
+
+/// One named timeline (a Chrome-trace "thread") with a logical clock.
+#[derive(Clone, Debug)]
+struct Track {
+    name: String,
+    clock_us: u64,
+}
+
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    tid: usize,
+    ts_us: u64,
+    /// `Some` renders a `ph:"X"` complete span; `None` a `ph:"i"` instant.
+    dur_us: Option<u64>,
+    args: Vec<(&'static str, f64)>,
+}
+
+/// Event sink with per-track logical clocks (µs). Not thread-safe by
+/// itself — the global instance lives behind a mutex in [`crate::obs`].
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    tracks: Vec<Track>,
+    current: usize,
+    events: Vec<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(1_000_000)
+    }
+}
+
+impl Tracer {
+    /// `cap` bounds the event buffer; events beyond it are counted in
+    /// [`Tracer::dropped`] instead of stored (a runaway trace must not
+    /// take the process down with it).
+    pub fn new(cap: usize) -> Self {
+        Tracer {
+            tracks: vec![Track { name: "main".to_string(), clock_us: 0 }],
+            current: 0,
+            events: Vec::new(),
+            cap: cap.max(1),
+            dropped: 0,
+        }
+    }
+
+    /// Register (or find) a named track; returns its tid.
+    pub fn track(&mut self, name: &str) -> usize {
+        if let Some(i) = self.tracks.iter().position(|t| t.name == name) {
+            return i;
+        }
+        self.tracks.push(Track { name: name.to_string(), clock_us: 0 });
+        self.tracks.len() - 1
+    }
+
+    /// Point subsequent [`Tracer::push_span`]/[`Tracer::instant`] calls at
+    /// `tid` (engine spans land on whichever track the caller selected).
+    pub fn set_current(&mut self, tid: usize) {
+        if tid < self.tracks.len() {
+            self.current = tid;
+        }
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    /// Rebase a track's logical clock to an absolute simulated time.
+    pub fn set_clock_ms(&mut self, tid: usize, ms: f64) {
+        if let Some(t) = self.tracks.get_mut(tid) {
+            t.clock_us = ms_to_us(ms);
+        }
+    }
+
+    pub fn clock_us(&self, tid: usize) -> u64 {
+        self.tracks.get(tid).map(|t| t.clock_us).unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn record(&mut self, e: TraceEvent) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+        } else {
+            self.events.push(e);
+        }
+    }
+
+    /// Span on the current track starting at its clock; the clock advances
+    /// by the span's duration so sequential pushes lay out end-to-end.
+    pub fn push_span(&mut self, name: &str, cat: &'static str, dur_ms: f64, args: &[(&'static str, f64)]) {
+        let tid = self.current;
+        let ts = self.tracks[tid].clock_us;
+        let dur = ms_to_us(dur_ms);
+        self.tracks[tid].clock_us = ts + dur;
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat,
+            tid,
+            ts_us: ts,
+            dur_us: Some(dur),
+            args: args.to_vec(),
+        });
+    }
+
+    /// Span at an absolute instant on an explicit track (the fleet's
+    /// per-job iteration spans, placed at simulated event time).
+    pub fn span_at(
+        &mut self,
+        tid: usize,
+        name: &str,
+        cat: &'static str,
+        ts_ms: f64,
+        dur_ms: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat,
+            tid,
+            ts_us: ms_to_us(ts_ms),
+            dur_us: Some(ms_to_us(dur_ms)),
+            args: args.to_vec(),
+        });
+    }
+
+    /// Instant on the current track at its clock (no advance).
+    pub fn instant(&mut self, name: &str, cat: &'static str, args: &[(&'static str, f64)]) {
+        let tid = self.current;
+        let ts = self.tracks[tid].clock_us;
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat,
+            tid,
+            ts_us: ts,
+            dur_us: None,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Instant at an absolute time on an explicit track (broker events).
+    pub fn instant_at(
+        &mut self,
+        tid: usize,
+        name: &str,
+        cat: &'static str,
+        ts_ms: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat,
+            tid,
+            ts_us: ms_to_us(ts_ms),
+            dur_us: None,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Drop all events and tracks (back to a fresh single "main" track).
+    pub fn clear(&mut self) {
+        self.tracks.truncate(1);
+        self.tracks[0].clock_us = 0;
+        self.current = 0;
+        self.events.clear();
+        self.dropped = 0;
+    }
+
+    /// Chrome trace-event array: `thread_name` metadata per track, then
+    /// every recorded event. Parseable by `util::json` and loadable in
+    /// Perfetto / `chrome://tracing`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        let mut first = true;
+        for (tid, t) in self.tracks.iter().enumerate() {
+            push_row(
+                &mut out,
+                &mut first,
+                &format!(
+                    "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\"args\":{{\"name\":\"{}\"}}}}",
+                    tid,
+                    escape_str(&t.name)
+                ),
+            );
+        }
+        for e in &self.events {
+            let mut row = format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"pid\":1,\"tid\":{},\"ts\":{}",
+                escape_str(&e.name),
+                escape_str(e.cat),
+                e.tid,
+                e.ts_us
+            );
+            match e.dur_us {
+                Some(d) => row.push_str(&format!(",\"ph\":\"X\",\"dur\":{d}")),
+                None => row.push_str(",\"ph\":\"i\",\"s\":\"t\""),
+            }
+            if !e.args.is_empty() {
+                row.push_str(",\"args\":{");
+                for (i, (k, v)) in e.args.iter().enumerate() {
+                    if i > 0 {
+                        row.push(',');
+                    }
+                    let v = if v.is_finite() { *v } else { 0.0 };
+                    row.push_str(&format!("\"{}\":{}", escape_str(k), fmt_num(v)));
+                }
+                row.push('}');
+            }
+            row.push('}');
+            push_row(&mut out, &mut first, &row);
+        }
+        out.push_str("\n]");
+        out
+    }
+}
+
+fn push_row(out: &mut String, first: &mut bool, row: &str) {
+    if !*first {
+        out.push_str(",\n");
+    }
+    *first = false;
+    out.push_str(row);
+}
+
+fn ms_to_us(ms: f64) -> u64 {
+    if ms.is_finite() && ms > 0.0 { (ms * 1e3).round() as u64 } else { 0 }
+}
+
+fn fmt_num(v: f64) -> String {
+    // integral values print without a fraction; everything else keeps
+    // enough digits for the viewer while staying valid JSON
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn tracks_have_independent_clocks() {
+        let mut tr = Tracer::new(100);
+        let a = tr.track("job-a");
+        let b = tr.track("job-b");
+        assert_ne!(a, b);
+        assert_eq!(tr.track("job-a"), a, "same name, same track");
+        tr.set_current(a);
+        tr.push_span("iter", "job", 2.0, &[]);
+        tr.set_current(b);
+        tr.push_span("iter", "job", 5.0, &[]);
+        assert_eq!(tr.clock_us(a), 2000);
+        assert_eq!(tr.clock_us(b), 5000, "track b's clock is untouched by a");
+        tr.set_clock_ms(a, 10.0);
+        assert_eq!(tr.clock_us(a), 10_000);
+    }
+
+    #[test]
+    fn json_is_parsable_and_carries_metadata_rows() {
+        let mut tr = Tracer::new(100);
+        let broker = tr.track("broker");
+        tr.instant_at(broker, "fill", "broker", 3.0, &[("n_due", 2.0)]);
+        tr.set_current(tr.track("job\\0 \"x\""));
+        tr.push_span("fwd: layer\n0", "fwd", 0.5, &[("bytes", 1.5)]);
+        let v = Json::parse(&tr.to_json()).expect("trace must be valid JSON");
+        let rows = v.as_arr().unwrap();
+        // 3 tracks (main + broker + job) of metadata, then 2 events
+        assert_eq!(rows.len(), 5);
+        let meta: Vec<&str> = rows
+            .iter()
+            .filter(|r| r.req("ph").as_str() == Some("M"))
+            .map(|r| r.req("args").req("name").as_str().unwrap())
+            .collect();
+        assert_eq!(meta, vec!["main", "broker", "job\\0 \"x\""]);
+        let span = rows.iter().find(|r| r.req("ph").as_str() == Some("X")).unwrap();
+        assert_eq!(span.req("name").as_str(), Some("fwd: layer\n0"));
+        assert_eq!(span.req("dur").as_f64(), Some(500.0));
+        let inst = rows.iter().find(|r| r.req("ph").as_str() == Some("i")).unwrap();
+        assert_eq!(inst.req("args").req("n_due").as_f64(), Some(2.0));
+        assert_eq!(inst.req("ts").as_f64(), Some(3000.0));
+    }
+
+    #[test]
+    fn cap_drops_instead_of_growing() {
+        let mut tr = Tracer::new(2);
+        for _ in 0..5 {
+            tr.push_span("s", "c", 1.0, &[]);
+        }
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr.dropped(), 3);
+        tr.clear();
+        assert!(tr.is_empty());
+        assert_eq!(tr.dropped(), 0);
+        assert_eq!(tr.clock_us(0), 0, "clear rewinds the main clock");
+    }
+
+    #[test]
+    fn empty_tracer_serialises_to_metadata_only() {
+        let tr = Tracer::new(4);
+        let v = Json::parse(&tr.to_json()).unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 1, "just the main thread_name row");
+    }
+}

@@ -20,6 +20,7 @@
 
 use super::Plan;
 use crate::config::ModelSpec;
+use crate::obs;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -165,11 +166,13 @@ impl PlanCache {
         match best {
             Some((k, plan)) => {
                 self.stats.hits += 1;
+                obs::inc("plan_cache.hits");
                 self.lru.touch(k);
                 Some(plan)
             }
             None => {
                 self.stats.misses += 1;
+                obs::inc("plan_cache.misses");
                 None
             }
         }
@@ -185,11 +188,13 @@ impl PlanCache {
         match self.plans.get(&key).cloned() {
             Some(p) => {
                 self.stats.hits += 1;
+                obs::inc("plan_cache.hits");
                 self.lru.touch(key);
                 Some(p)
             }
             None => {
                 self.stats.misses += 1;
+                obs::inc("plan_cache.misses");
                 None
             }
         }
@@ -201,6 +206,7 @@ impl PlanCache {
             if let Some(victim) = self.lru.pop_lru() {
                 self.plans.remove(&victim);
                 self.stats.evictions += 1;
+                obs::inc("plan_cache.evictions");
             }
         }
         self.plans.insert(key, plan);
@@ -209,6 +215,9 @@ impl PlanCache {
 
     /// Invalidate everything (e.g. budget changed). Stats survive.
     pub fn clear(&mut self) {
+        if !self.plans.is_empty() {
+            obs::inc("plan_cache.purges");
+        }
         self.plans.clear();
         self.lru.clear();
     }
@@ -301,11 +310,13 @@ impl SharedPlanCache {
         match found {
             Some((k, p)) => {
                 self.stats.hits += 1;
+                obs::inc("shared_cache.hits");
                 self.lru.touch(k);
                 Some(p)
             }
             None => {
                 self.stats.misses += 1;
+                obs::inc("shared_cache.misses");
                 None
             }
         }
@@ -318,6 +329,7 @@ impl SharedPlanCache {
             if let Some(victim) = self.lru.pop_lru() {
                 self.entries.remove(&victim);
                 self.stats.evictions += 1;
+                obs::inc("shared_cache.evictions");
             }
         }
         self.entries.insert(key, plan);
@@ -330,6 +342,7 @@ impl SharedPlanCache {
         let key = (signature, size.0, size.1, budget);
         if self.entries.remove(&key).is_some() {
             self.lru.remove(&key);
+            obs::inc("shared_cache.purges");
         }
     }
 

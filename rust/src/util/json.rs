@@ -90,6 +90,29 @@ impl Json {
     }
 }
 
+/// Escape `s` for embedding inside a JSON string literal (without the
+/// surrounding quotes): `"` and `\` are backslash-escaped, the common
+/// control characters get their short forms, and every other control
+/// character becomes a `\u00XX` escape. The output always round-trips
+/// through [`Json::parse`].
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -293,6 +316,30 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn escape_str_roundtrips_through_parser() {
+        let cases = [
+            "plain",
+            "with \"quotes\"",
+            "back\\slash",
+            "tab\tnewline\ncarriage\r",
+            "bell\u{7}form\u{c}feed\u{8}",
+            "unicode: µs → 1e-6 s",
+            "\u{1}\u{1f}",
+        ];
+        for raw in cases {
+            let doc = format!("\"{}\"", escape_str(raw));
+            let parsed = Json::parse(&doc).unwrap_or_else(|e| panic!("{raw:?}: {e}"));
+            assert_eq!(parsed, Json::Str(raw.to_string()), "round-trip of {raw:?}");
+        }
+    }
+
+    #[test]
+    fn escape_str_leaves_plain_text_alone() {
+        assert_eq!(escape_str("event_core/step_512"), "event_core/step_512");
+        assert_eq!(escape_str(""), "");
     }
 
     #[test]

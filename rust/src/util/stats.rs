@@ -2,6 +2,11 @@
 //! Used by metrics reporting and the bench harness (criterion stand-in).
 
 /// Online mean/variance (Welford) plus min/max.
+///
+/// Every accessor is **total**: on an empty summary `mean`/`min`/`max`/
+/// `variance`/`std` all return 0.0 (never NaN or ±infinity), and a
+/// single-element summary reports that element as mean/min/max with zero
+/// variance.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     n: u64,
@@ -26,10 +31,21 @@ impl Summary {
     }
 
     pub fn count(&self) -> u64 { self.n }
-    pub fn mean(&self) -> f64 { self.mean }
-    pub fn min(&self) -> f64 { self.min }
-    pub fn max(&self) -> f64 { self.max }
 
+    /// Mean of the samples; 0.0 when empty.
+    pub fn mean(&self) -> f64 { self.mean }
+
+    /// Smallest sample; 0.0 when empty (never +infinity).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    /// Largest sample; 0.0 when empty (never -infinity).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    /// Sample variance (n-1 denominator); 0.0 for fewer than two samples.
     pub fn variance(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
@@ -38,6 +54,9 @@ impl Summary {
 }
 
 /// Exact percentile over a stored sample set (fine at bench scale).
+///
+/// Total on degenerate inputs: every quantile of an empty set is 0.0 (no
+/// panic), and every quantile of a single-element set is that element.
 #[derive(Clone, Debug, Default)]
 pub struct Percentiles {
     xs: Vec<f64>,
@@ -55,9 +74,12 @@ impl Percentiles {
     pub fn len(&self) -> usize { self.xs.len() }
     pub fn is_empty(&self) -> bool { self.xs.is_empty() }
 
-    /// q in [0,1]; linear interpolation between order statistics.
+    /// q in [0,1] (clamped); linear interpolation between order
+    /// statistics. 0.0 on an empty sample set.
     pub fn quantile(&mut self, q: f64) -> f64 {
-        assert!(!self.xs.is_empty());
+        if self.xs.is_empty() {
+            return 0.0;
+        }
         if !self.sorted {
             self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
             self.sorted = true;
@@ -144,6 +166,51 @@ mod tests {
         assert!((p.median() - 25.0).abs() < 1e-12);
         assert_eq!(p.quantile(0.0), 10.0);
         assert_eq!(p.quantile(1.0), 40.0);
+    }
+
+    #[test]
+    fn empty_summary_is_total() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0, "no +inf leak from the identity element");
+        assert_eq!(s.max(), 0.0, "no -inf leak from the identity element");
+        assert_eq!(s.variance(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert!(!s.std().is_nan());
+    }
+
+    #[test]
+    fn single_element_summary() {
+        let mut s = Summary::new();
+        s.add(7.5);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.mean(), 7.5);
+        assert_eq!(s.min(), 7.5);
+        assert_eq!(s.max(), 7.5);
+        assert_eq!(s.variance(), 0.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn empty_percentiles_are_total() {
+        let mut p = Percentiles::new();
+        assert!(p.is_empty());
+        assert_eq!(p.quantile(0.5), 0.0, "empty quantile must not panic");
+        assert_eq!(p.median(), 0.0);
+        assert_eq!(p.p99(), 0.0);
+    }
+
+    #[test]
+    fn single_element_percentiles() {
+        let mut p = Percentiles::new();
+        p.add(42.0);
+        assert_eq!(p.quantile(0.0), 42.0);
+        assert_eq!(p.median(), 42.0);
+        assert_eq!(p.quantile(1.0), 42.0);
+        // out-of-range q clamps rather than indexing out of bounds
+        assert_eq!(p.quantile(-1.0), 42.0);
+        assert_eq!(p.quantile(2.0), 42.0);
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! Observability integration pins:
+//!
+//!   1. counters/histograms hammered from `ThreadPool::map` workers count
+//!      EXACTLY — relaxed-atomic recording loses no updates, whether it
+//!      goes through the by-name helpers or a cached `'static` handle;
+//!   2. disabled mode records nothing, even under the same load;
+//!   3. a multi-job fleet on a scripted `[[fleet.events]]` timeline with
+//!      tracing on produces a Chrome trace that parses with `util::json`
+//!      and carries one Perfetto track per job plus a broker track with
+//!      fill / arrive / depart instants.
+
+use mimose::config::{FleetConfig, FleetEvent, JobSpec, Pacing, Task};
+use mimose::fleet::FleetScheduler;
+use mimose::obs;
+use mimose::util::json::Json;
+use mimose::util::threadpool::ThreadPool;
+use mimose::util::GIB;
+use std::sync::{Mutex, MutexGuard};
+
+/// The obs gates and instruments are process-global; tests in this binary
+/// toggle them and must not interleave.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn threadpool_hammer_counts_exactly() {
+    let _g = serial();
+    obs::set_metrics_enabled(true);
+    obs::reset();
+
+    let workers = 8usize;
+    let per_item = 500u64;
+    let items: Vec<usize> = (0..64).collect();
+    let n_items = items.len() as u64;
+    // a cached handle records lock-free; the by-name helpers pay one
+    // uncontended registry lock per call — both must count exactly
+    let handle = obs::counter("obs.itest.handle");
+    let pool = ThreadPool::new(workers);
+    let done = pool.map(items, move |_i| {
+        for _ in 0..per_item {
+            obs::inc("obs.itest.hammer");
+            obs::observe_ms("obs.itest.hammer_ms", 0.05);
+            handle.inc();
+        }
+        1u64
+    });
+    assert_eq!(done.iter().sum::<u64>(), n_items);
+
+    let expect = n_items * per_item;
+    assert_eq!(obs::counter_value("obs.itest.hammer"), expect);
+    assert_eq!(handle.get(), expect);
+    let v = Json::parse(&obs::metrics_json()).expect("obs section parses");
+    let h = v.req("histograms").req("obs.itest.hammer_ms");
+    assert_eq!(h.req("count").as_f64(), Some(expect as f64));
+
+    obs::set_metrics_enabled(false);
+    obs::reset();
+}
+
+#[test]
+fn disabled_mode_records_nothing_under_load() {
+    let _g = serial();
+    obs::set_enabled(false);
+    obs::reset();
+
+    let pool = ThreadPool::new(4);
+    pool.map((0..16usize).collect(), |_i| {
+        for _ in 0..200 {
+            obs::inc("obs.itest.noop");
+            obs::observe_ms("obs.itest.noop_ms", 1.0);
+            obs::gauge_set("obs.itest.noop_gauge", 9);
+            obs::with_tracer(|tr| tr.push_span("never", "test", 1.0, &[]));
+        }
+    });
+    assert_eq!(obs::counter_value("obs.itest.noop"), 0);
+    assert_eq!(obs::gauge_value("obs.itest.noop_gauge"), 0);
+    assert_eq!(obs::trace_len(), 0);
+}
+
+#[test]
+fn fleet_event_timeline_produces_multitrack_trace() {
+    let _g = serial();
+    obs::set_enabled(true);
+    obs::reset();
+
+    let cfg = FleetConfig {
+        global_budget_bytes: 24 * GIB,
+        steps: 30,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::QaBert]),
+        events: vec![
+            FleetEvent::Arrive { spec: JobSpec::new(Task::McRoberta), at_round: 5 },
+            FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 12 },
+        ],
+        seed: 7,
+        pacing: Pacing::Lockstep,
+        ..Default::default()
+    };
+    let r = FleetScheduler::new(cfg).expect("feasible timeline").run();
+    assert_eq!(r.oom_failures(), 0);
+
+    let v = Json::parse(&obs::trace_json()).expect("trace parses with util::json");
+    let rows = v.as_arr().expect("chrome trace array form");
+
+    // one thread_name metadata row per track: every job + the broker
+    let tracks: Vec<&str> = rows
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+        .map(|e| e.req("args").req("name").as_str().unwrap())
+        .collect();
+    assert!(tracks.contains(&"broker"), "broker track missing: {tracks:?}");
+    for name in ["job:TC-Bert#0", "job:QA-Bert#1", "job:MC-Roberta#2"] {
+        assert!(tracks.contains(&name), "track '{name}' missing: {tracks:?}");
+    }
+
+    // per-job iteration + engine stage spans land as ph:"X" on job tracks
+    let iter_spans = rows
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("X")
+                && e.get("cat").and_then(Json::as_str) == Some("job")
+        })
+        .count();
+    assert!(iter_spans >= 30, "expected >= 30 iteration spans, got {iter_spans}");
+
+    // the broker track carries fill instants and the scripted dynamics
+    let named = |want: &str| {
+        rows.iter().any(|e| e.get("name").and_then(Json::as_str) == Some(want))
+    };
+    assert!(named("fill"), "broker fill instants missing");
+    assert!(named("arrive:MC-Roberta#2"), "scripted arrival instant missing");
+    assert!(named("depart:TC-Bert#0"), "scripted departure instant missing");
+
+    // the metrics side of the same run: engine stages, coordinator phase
+    // transitions, and broker decisions all counted
+    assert!(obs::counter_value("engine.fwd_stages") > 0);
+    assert!(obs::counter_value("engine.bwd_stages") > 0);
+    assert!(obs::counter_value("coordinator.transitions") > 0);
+    assert!(
+        obs::counter_value("broker.path_full") + obs::counter_value("broker.path_incremental")
+            > 0
+    );
+
+    obs::set_enabled(false);
+    obs::reset();
+}
