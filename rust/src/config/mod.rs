@@ -531,31 +531,79 @@ pub enum FleetEvent {
     /// re-filled next round. Matches `JobSpec::name` or the default
     /// `<task>#<id>` name.
     Depart { job: String, at_round: usize },
+    /// A spot-style preemption notice for the tenant named `job`: it stops
+    /// planning new iterations and must park (finishing or sheltering its
+    /// in-flight iteration) within `drain_rounds` ticks, or be
+    /// force-stopped. A parked job keeps its estimator and shared-cache
+    /// entries and can be re-admitted warm via `Resume`. Event pacing only.
+    Preempt { job: String, at_round: usize, drain_rounds: usize },
+    /// Re-admit a preempted (parked) tenant. A resume naming a job that was
+    /// never preempted — or that already departed for good — is a no-op.
+    Resume { job: String, at_round: usize },
+    /// The device-wide budget becomes `global_budget_bytes` from this round
+    /// on (fragmentation, co-located processes, spot reclamation). Requires
+    /// broker arbitration; tenants are tightened largest-slack-first and
+    /// never OOM. Event pacing only.
+    Shock { at_round: usize, global_budget_bytes: u64 },
 }
 
 impl FleetEvent {
     pub fn at_round(&self) -> usize {
         match self {
-            FleetEvent::Arrive { at_round, .. } | FleetEvent::Depart { at_round, .. } => *at_round,
+            FleetEvent::Arrive { at_round, .. }
+            | FleetEvent::Depart { at_round, .. }
+            | FleetEvent::Preempt { at_round, .. }
+            | FleetEvent::Resume { at_round, .. }
+            | FleetEvent::Shock { at_round, .. } => *at_round,
         }
     }
 
-    /// Read one `[[fleet.events]]` element (`kind = "arrive" | "depart"`).
+    /// True for the chaos kinds (preempt/resume/shock) the legacy round
+    /// loop does not model — the scheduler rejects them under
+    /// `Pacing::Rounds`.
+    pub fn is_chaos(&self) -> bool {
+        matches!(
+            self,
+            FleetEvent::Preempt { .. } | FleetEvent::Resume { .. } | FleetEvent::Shock { .. }
+        )
+    }
+
+    /// Read one `[[fleet.events]]` element
+    /// (`kind = "arrive" | "depart" | "preempt" | "resume" | "shock"`).
     pub fn from_doc(doc: &Doc) -> Result<Self, String> {
         let round = doc
             .get("round")
             .and_then(|v| v.as_usize())
             .ok_or("event needs 'round = <n>'")?;
+        let named_job = |kind: &str| -> Result<String, String> {
+            let job = doc.get_str("job", "");
+            if job.is_empty() {
+                return Err(format!("{kind} event needs 'job = \"<name>\"'"));
+            }
+            Ok(job)
+        };
         match doc.get_str("kind", "").as_str() {
             "arrive" => Ok(FleetEvent::Arrive { spec: JobSpec::from_doc(doc)?, at_round: round }),
-            "depart" => {
-                let job = doc.get_str("job", "");
-                if job.is_empty() {
-                    return Err("depart event needs 'job = \"<name>\"'".into());
+            "depart" => Ok(FleetEvent::Depart { job: named_job("depart")?, at_round: round }),
+            "preempt" => Ok(FleetEvent::Preempt {
+                job: named_job("preempt")?,
+                at_round: round,
+                drain_rounds: doc.get_usize("drain_rounds", 1),
+            }),
+            "resume" => Ok(FleetEvent::Resume { job: named_job("resume")?, at_round: round }),
+            "shock" => {
+                let gb = doc.get_f64("global_gb", 0.0);
+                if gb <= 0.0 || !gb.is_finite() {
+                    return Err("shock event needs 'global_gb = <positive GiB>'".into());
                 }
-                Ok(FleetEvent::Depart { job, at_round: round })
+                Ok(FleetEvent::Shock {
+                    at_round: round,
+                    global_budget_bytes: (gb * GIB as f64) as u64,
+                })
             }
-            other => Err(format!("event kind must be 'arrive' or 'depart', got '{other}'")),
+            other => Err(format!(
+                "event kind must be 'arrive', 'depart', 'preempt', 'resume' or 'shock', got '{other}'"
+            )),
         }
     }
 }
@@ -626,7 +674,9 @@ pub struct FleetConfig {
     /// (identical-architecture tenants then share plans through the fleet
     /// cache). Arrivals mid-run come from `events`.
     pub jobs: Vec<JobSpec>,
-    /// Scripted arrivals/departures, applied at the start of their round.
+    /// Scripted arrivals/departures plus the chaos kinds (preemption
+    /// notices, resumes, budget shocks), applied at the start of their
+    /// round.
     pub events: Vec<FleetEvent>,
     /// Base RNG seed; the job with fleet id `i` streams inputs with seed
     /// `seed + i` (ids are assigned in arrival order, initial jobs first).
@@ -1029,6 +1079,48 @@ mod tests {
         );
         assert_eq!(c.events[0].at_round(), 25);
         assert_eq!(c.events[1].at_round(), 50);
+    }
+
+    #[test]
+    fn fleet_chaos_events_from_toml() {
+        let doc = Doc::parse(
+            "[[fleet.events]]\nkind = \"preempt\"\nround = 10\njob = \"TC-Bert#0\"\ndrain_rounds = 3\n\
+             [[fleet.events]]\nkind = \"shock\"\nround = 20\nglobal_gb = 9.5\n\
+             [[fleet.events]]\nkind = \"resume\"\nround = 30\njob = \"TC-Bert#0\"\n\
+             [[fleet.events]]\nkind = \"preempt\"\nround = 40\njob = \"TC-Bert#0\"\n",
+        )
+        .unwrap();
+        let c = FleetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.events.len(), 4);
+        assert_eq!(
+            c.events[0],
+            FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 10, drain_rounds: 3 }
+        );
+        assert_eq!(
+            c.events[1],
+            FleetEvent::Shock { at_round: 20, global_budget_bytes: 9 * GIB + GIB / 2 }
+        );
+        assert_eq!(c.events[2], FleetEvent::Resume { job: "TC-Bert#0".into(), at_round: 30 });
+        assert_eq!(
+            c.events[3],
+            FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 40, drain_rounds: 1 },
+            "drain_rounds defaults to one tick"
+        );
+        assert!(c.events.iter().all(|e| e.is_chaos()));
+        assert!(!FleetEvent::Depart { job: "x".into(), at_round: 0 }.is_chaos());
+        assert_eq!(c.events[1].at_round(), 20);
+        // a preempt without a job, and a shock without a budget, are typos —
+        // not silently-defaulted events
+        let doc = Doc::parse("[[fleet.events]]\nkind = \"preempt\"\nround = 5\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[[fleet.events]]\nkind = \"resume\"\nround = 5\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[[fleet.events]]\nkind = \"shock\"\nround = 5\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
+        let doc =
+            Doc::parse("[[fleet.events]]\nkind = \"shock\"\nround = 5\nglobal_gb = -2.0\n")
+                .unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err());
     }
 
     #[test]

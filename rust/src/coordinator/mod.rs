@@ -99,6 +99,9 @@ pub struct CoordinatorStats {
     pub iterations: u64,
     pub plans_generated: u64,
     pub reshelters: u64,
+    /// Estimator `train()` runs: 1 for the initial freeze, +1 per
+    /// reshelter-triggered refit. A warm-resumed job must NOT add to this.
+    pub refits: u64,
     pub cache_entries: usize,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -187,6 +190,8 @@ pub struct Coordinator {
     pub plans_generated: u64,
     /// Times a novel input key re-opened sheltered collection (§4.2).
     pub reshelters: u64,
+    /// Estimator `train()` runs (initial fit + post-reshelter refits).
+    pub refits: u64,
     estimator_ready: bool,
     /// Fleet wiring: cross-job plan cache + this job's model signature.
     shared: Option<(SharedCacheHandle, u64)>,
@@ -218,6 +223,7 @@ impl Coordinator {
             plan_ms_total: 0.0,
             plans_generated: 0,
             reshelters: 0,
+            refits: 0,
             estimator_ready: false,
             shared: None,
             shared_inserted: Vec::new(),
@@ -283,6 +289,7 @@ impl Coordinator {
             iterations: self.iter,
             plans_generated: self.plans_generated,
             reshelters: self.reshelters,
+            refits: self.refits,
             cache_entries: self.cache.len(),
             cache_hits: cs.hits,
             cache_misses: cs.misses,
@@ -428,6 +435,7 @@ impl Coordinator {
             let train_ms = self.estimator.train();
             self.train_ms += train_ms;
             self.estimator_ready = true;
+            self.refits += 1;
             obs::inc("estimator.refits");
             obs::observe_ms("estimator.refit_ms", train_ms);
         }

@@ -145,6 +145,106 @@ pub fn generate(cfg: &TraceConfig) -> Vec<FleetEvent> {
     events
 }
 
+/// Chaos layered over a base trace: spot-style preemption notices (with
+/// optional warm resumes) against a subset of the trace jobs, plus global
+/// budget shocks. The output drives the event core's notice→drain→
+/// force-stop machine and [`crate::fleet::BudgetBroker::shock`] path at
+/// trace scale.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// The base arrival/length trace the chaos is layered over.
+    pub trace: TraceConfig,
+    /// Probability a trace job receives one preemption notice inside its
+    /// scripted lifetime.
+    pub preempt_prob: f64,
+    /// Probability a preempted job is later resumed (warm re-admission).
+    pub resume_prob: f64,
+    /// Drain window per notice, drawn uniformly from `[lo, hi]` rounds
+    /// (0 = force-stop any in-flight iteration immediately).
+    pub drain_rounds: (usize, usize),
+    /// Budget shocks scattered over the timeline.
+    pub shock_count: usize,
+    /// Each shock sets the global budget to `configured × fraction`, the
+    /// fraction drawn uniformly from this range (tighten below 1.0,
+    /// restore at 1.0).
+    pub shock_fraction: (f64, f64),
+    /// The configured (pre-shock) global budget the fractions scale.
+    pub global_budget_bytes: u64,
+}
+
+impl ChaosConfig {
+    pub fn new(trace: TraceConfig, global_budget_bytes: u64) -> Self {
+        ChaosConfig {
+            trace,
+            preempt_prob: 0.3,
+            resume_prob: 0.7,
+            drain_rounds: (0, 3),
+            shock_count: 2,
+            shock_fraction: (0.6, 1.0),
+            global_budget_bytes,
+        }
+    }
+}
+
+/// Layer preempt/resume/shock events over [`generate`]'s timeline, sorted
+/// by round. Deterministic in the trace seed: the same [`ChaosConfig`]
+/// always yields the same timeline, and the base trace is bit-identical
+/// to calling [`generate`] on `cfg.trace` alone (chaos draws come from a
+/// derived stream).
+pub fn generate_chaos(cfg: &ChaosConfig) -> Vec<FleetEvent> {
+    let mut events = generate(&cfg.trace);
+    let mut rng = Rng::new(cfg.trace.seed ^ 0xc4a0_5eed);
+    let max = cfg.trace.max_round;
+    // per-name last round the job is certainly live (scripted depart, its
+    // own `steps` completion, or the horizon)
+    let mut end_of: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    for e in &events {
+        match e {
+            FleetEvent::Arrive { spec, at_round } => {
+                let name = spec.name.clone().expect("trace jobs are named");
+                let end = if spec.steps > 0 { (at_round + spec.steps).min(max) } else { max };
+                end_of.entry(name).or_insert(end);
+            }
+            FleetEvent::Depart { job, at_round } => {
+                end_of.insert(job.clone(), *at_round);
+            }
+            _ => {}
+        }
+    }
+    let mut chaos: Vec<FleetEvent> = Vec::new();
+    for e in &events {
+        let FleetEvent::Arrive { spec, at_round } = e else { continue };
+        let name = spec.name.clone().expect("trace jobs are named");
+        let end = *end_of.get(&name).unwrap_or(&max);
+        // the notice must land while the job is live and before the horizon
+        if end <= at_round + 1 || rng.f64() >= cfg.preempt_prob {
+            continue;
+        }
+        let preempt_at = rng.range_u(at_round + 1, end - 1);
+        let (lo, hi) = cfg.drain_rounds;
+        let drain = rng.range_u(lo, hi.max(lo));
+        chaos.push(FleetEvent::Preempt {
+            job: name.clone(),
+            at_round: preempt_at,
+            drain_rounds: drain,
+        });
+        if preempt_at + 1 <= max - 1 && rng.f64() < cfg.resume_prob {
+            let resume_at = rng.range_u(preempt_at + 1, max - 1);
+            chaos.push(FleetEvent::Resume { job: name, at_round: resume_at });
+        }
+    }
+    for _ in 0..if max >= 2 { cfg.shock_count } else { 0 } {
+        let at_round = rng.range_u(1, max - 1);
+        let (lo, hi) = cfg.shock_fraction;
+        let frac = rng.range_f(lo.min(hi), hi.max(lo));
+        let new_global = (cfg.global_budget_bytes as f64 * frac).max(1.0) as u64;
+        chaos.push(FleetEvent::Shock { at_round, global_budget_bytes: new_global });
+    }
+    events.extend(chaos);
+    events.sort_by_key(|e| e.at_round());
+    events
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +367,68 @@ mod tests {
         let large = gaps.iter().filter(|&&g| g >= 20).count();
         assert!(small > gaps.len() / 3, "most gaps are tight: {small}/{}", gaps.len());
         assert!(large > 0, "the tail must produce long lulls");
+    }
+
+    #[test]
+    fn chaos_is_deterministic_and_keeps_the_base_trace_intact() {
+        let mut trace = TraceConfig::new(vec![Task::TcBert, Task::McRoberta], 150, 42);
+        trace.scripted_departures = true;
+        let cfg = ChaosConfig::new(trace.clone(), 20 << 30);
+        let a = generate_chaos(&cfg);
+        let b = generate_chaos(&cfg);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "chaos must be seed-deterministic");
+        assert!(a.iter().any(|e| e.is_chaos()), "default probabilities should fire");
+        // stripping the chaos events leaves exactly the base trace
+        let base: Vec<_> = a.iter().filter(|e| !e.is_chaos()).collect();
+        let plain = generate(&trace);
+        assert_eq!(format!("{base:?}"), format!("{:?}", plain.iter().collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn chaos_events_target_live_jobs_inside_the_timeline() {
+        let trace = TraceConfig::new(vec![Task::TcBert], 200, 9);
+        let mut cfg = ChaosConfig::new(trace, 16 << 30);
+        cfg.preempt_prob = 0.8;
+        cfg.shock_count = 4;
+        let events = generate_chaos(&cfg);
+        let mut arrive = std::collections::BTreeMap::new();
+        let mut end = std::collections::BTreeMap::new();
+        for e in &events {
+            if let FleetEvent::Arrive { spec, at_round } = e {
+                let name = spec.name.clone().unwrap();
+                end.insert(name.clone(), (at_round + spec.steps).min(200));
+                arrive.insert(name, *at_round);
+            }
+        }
+        let mut last = 0usize;
+        let mut preempt_at = std::collections::BTreeMap::new();
+        let mut shocks = 0usize;
+        for e in &events {
+            assert!(e.at_round() >= last, "timeline must stay sorted");
+            last = e.at_round();
+            match e {
+                FleetEvent::Preempt { job, at_round, .. } => {
+                    let a = arrive.get(job).unwrap_or_else(|| panic!("{job} never arrives"));
+                    assert!(at_round > a, "notice before {job} arrived");
+                    assert!(at_round < end.get(job).unwrap(), "notice after {job} retired");
+                    assert!(preempt_at.insert(job.clone(), *at_round).is_none());
+                }
+                FleetEvent::Resume { job, at_round } => {
+                    let p = preempt_at.get(job).unwrap_or_else(|| panic!("{job} not preempted"));
+                    assert!(at_round > p, "resume must follow the notice");
+                    assert!(*at_round < 200, "resume escapes the timeline");
+                }
+                FleetEvent::Shock { at_round, global_budget_bytes } => {
+                    shocks += 1;
+                    assert!(*at_round >= 1 && *at_round < 200);
+                    assert!(*global_budget_bytes >= 1);
+                    assert!(*global_budget_bytes <= 16 << 30, "fraction range tops out at 1.0");
+                }
+                _ => {}
+            }
+        }
+        assert!(!preempt_at.is_empty(), "preempt_prob 0.8 should fire");
+        assert_eq!(shocks, 4);
     }
 
     #[test]

@@ -392,6 +392,69 @@ impl BudgetBroker {
         }
     }
 
+    /// Σ floors of record across all live tenants — what a budget shock
+    /// must still be able to cover (the scheduler drains victims first
+    /// when it cannot).
+    pub fn floor_sum_live(&self) -> u64 {
+        self.floor_sum_live
+    }
+
+    /// Mid-run budget shock: the device-wide budget becomes `new_global`
+    /// (fragmentation, a co-located process, spot reclamation). Tenants
+    /// are tightened to fit *immediately* — largest slack first, ties to
+    /// the smaller id, never below a floor of record — so Σ allocations
+    /// never exceeds the new global even mid-transition. Every tightened
+    /// tenant is returned as a `(id, new_budget)` rebind (its Coordinator
+    /// replans and flushes its plan cache). Errors without touching any
+    /// state if the live floors alone do not fit: the caller must drain
+    /// or force-stop tenants until they do, *then* shock.
+    pub fn shock(&mut self, new_global: u64) -> Result<Vec<(u64, u64)>, String> {
+        if self.floor_sum_live > new_global {
+            return Err(format!(
+                "infeasible shock: live floors {} exceed new global budget {}",
+                self.floor_sum_live, new_global
+            ));
+        }
+        self.global = new_global;
+        let mut rebinds: Vec<(u64, u64)> = Vec::new();
+        if self.alloc_sum <= new_global {
+            return Ok(rebinds);
+        }
+        // same claw-back order as the incremental fill: largest slack
+        // above the floor of record first, ties broken toward smaller ids
+        let mut need = self.alloc_sum - new_global;
+        let mut holders: Vec<(u64, u64)> = self
+            .states
+            .iter()
+            .filter_map(|(&id, s)| {
+                let cur = self.current.get(&id).copied().unwrap_or(0);
+                (cur > s.floor).then_some((id, cur - s.floor))
+            })
+            .collect();
+        holders.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (id, slack) in holders {
+            if need == 0 {
+                break;
+            }
+            let take = slack.min(need);
+            let cur = self.current.get_mut(&id).expect("holder has an allocation");
+            *cur -= take;
+            let rebound = *cur;
+            self.alloc_sum -= take;
+            need -= take;
+            rebinds.push((id, rebound));
+        }
+        debug_assert!(
+            self.alloc_sum <= new_global,
+            "floor feasibility must let the claw-back fit the new global"
+        );
+        self.overshoots += 1;
+        if obs::metrics_enabled() && !rebinds.is_empty() {
+            self.obs.clawbacks.add(rebinds.len() as u64);
+        }
+        Ok(rebinds)
+    }
+
     /// Incremental fill: redistribute budget for the `due` jobs ONLY —
     /// the event core's per-cohort path, O(due · log live) instead of
     /// O(live). Non-due tenants keep their in-force budgets (they are
@@ -1054,6 +1117,80 @@ mod tests {
         // departed EWMA stream must be gone
         let f = b.update(&[d(1, GIB, Some(3 * GIB))]).unwrap();
         assert_eq!(f.alloc.budgets, vec![3 * GIB], "fresh history after depart");
+    }
+
+    #[test]
+    fn shock_tightens_largest_slack_first_never_below_floors() {
+        let mut b = broker(12 * GIB);
+        let _ = b
+            .allocate(&[
+                d(0, GIB, Some(6 * GIB)),
+                d(1, GIB, Some(4 * GIB)),
+                d(2, GIB, Some(2 * GIB)),
+            ])
+            .unwrap();
+        assert_eq!(b.alloc_total(), 12 * GIB);
+        // the device shrinks by 5 GiB: id 0 (5 GiB slack) is tightened
+        // first, then id 1 — id 2's small slack is never touched
+        let rebinds = b.shock(7 * GIB).unwrap();
+        assert_eq!(b.global(), 7 * GIB);
+        assert_eq!(b.alloc_total(), 7 * GIB, "Σ alloc tightened to the new global");
+        assert_eq!(rebinds, vec![(0, GIB)], "largest slack-holder clawed to its floor");
+        assert_eq!(b.allocation_of(0), Some(GIB));
+        assert_eq!(b.allocation_of(1), Some(4 * GIB));
+        assert_eq!(b.allocation_of(2), Some(2 * GIB));
+        // a second, deeper shock spreads across the remaining holders
+        let rebinds = b.shock(4 * GIB).unwrap();
+        assert_eq!(b.alloc_total(), 4 * GIB);
+        assert!(rebinds.iter().all(|&(id, bud)| bud >= GIB && id != 0));
+        // floors of record can never be shocked away
+        assert!(b.shock(2 * GIB).is_err(), "3 GiB of floors cannot fit in 2 GiB");
+        assert_eq!(b.global(), 4 * GIB, "a rejected shock leaves the broker untouched");
+        assert_eq!(b.alloc_total(), 4 * GIB);
+    }
+
+    #[test]
+    fn loosening_shock_is_a_no_op_on_allocations() {
+        let mut b = broker(8 * GIB);
+        let _ = b
+            .allocate(&[d(0, GIB, Some(3 * GIB)), d(1, GIB, Some(2 * GIB))])
+            .unwrap();
+        let before = b.alloc_total();
+        let rebinds = b.shock(16 * GIB).unwrap();
+        assert!(rebinds.is_empty(), "a loosening shock claws nothing back");
+        assert_eq!(b.alloc_total(), before);
+        assert_eq!(b.global(), 16 * GIB, "the next fill sees the roomier device");
+    }
+
+    #[test]
+    fn depart_after_shock_releases_exactly_once() {
+        // the Depart-during-drain race: a job already tightened by a shock
+        // (and possibly mid-drain) departs — its floor and allocation must
+        // come out of the ledger exactly once, and a redundant second
+        // depart must be a no-op rather than an underflow
+        let mut b = broker(10 * GIB);
+        let _ = b
+            .allocate(&[d(0, 2 * GIB, Some(6 * GIB)), d(1, GIB, Some(4 * GIB))])
+            .unwrap();
+        assert_eq!(b.alloc_total(), 10 * GIB);
+        assert_eq!(b.floor_sum_live(), 3 * GIB);
+        let _ = b.shock(6 * GIB).unwrap();
+        assert_eq!(b.alloc_total(), 6 * GIB);
+        let held_by_1 = b.allocation_of(1).unwrap();
+        b.depart(0);
+        assert_eq!(b.alloc_total(), held_by_1, "id 0 released exactly its holding");
+        assert_eq!(b.floor_sum_live(), GIB, "id 0's floor released exactly once");
+        assert_eq!(b.allocation_of(0), None);
+        // the race: a scripted Depart fires after the drain machinery
+        // already released the job — state must be unchanged, no underflow
+        b.depart(0);
+        assert_eq!(b.alloc_total(), held_by_1, "double depart must not double-release");
+        assert_eq!(b.floor_sum_live(), GIB);
+        assert_eq!(b.tracked_ids(), vec![1]);
+        // the survivor still fills sanely under the shocked global
+        let f = b.update(&[d(1, GIB, Some(8 * GIB))]).unwrap();
+        assert!(f.alloc.budgets[0] <= 6 * GIB);
+        assert!(b.alloc_total() <= 6 * GIB);
     }
 
     #[test]

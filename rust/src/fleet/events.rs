@@ -13,7 +13,11 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// What happens when an event fires. Ranks (the within-instant order) are
-/// part of the contract: Depart < Arrive < IterationComplete < Rebind.
+/// part of the contract: Depart < Arrive < IterationComplete < Rebind <
+/// Preempt < Resume < BudgetShock < DrainExpire. The chaos kinds rank
+/// after the original four so shock-free timelines keep the exact
+/// within-instant order the round loop pinned; they still land before the
+/// instant's fill because the scheduler drains the whole cohort first.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EventKind {
     /// A scripted departure: the named tenant leaves, its budget is
@@ -28,6 +32,20 @@ pub enum EventKind {
     /// A broker claw-back tightened a tenant that was not part of the
     /// triggering fill: apply the new budget (the Coordinator replans).
     Rebind { id: u64, budget: u64 },
+    /// A spot-style preemption notice for the named tenant: it stops
+    /// planning new iterations and must park (gracefully, after its
+    /// in-flight iteration) within `drain_ms`, or be force-stopped.
+    Preempt { name: String, drain_ms: f64 },
+    /// A parked (preempted) tenant is re-admitted: it rejoins warm, from
+    /// its retained estimator and shared plan-cache entries.
+    Resume { name: String },
+    /// The device-wide budget changed mid-run (fragmentation, co-located
+    /// processes, spot reclamation): the broker tightens every tenant to
+    /// the new global without ever exceeding it mid-transition.
+    BudgetShock { new_global: u64 },
+    /// A drain window expired: if the tenant is still live it is
+    /// force-stopped (its in-flight iteration did not finish in time).
+    DrainExpire { id: u64 },
 }
 
 impl EventKind {
@@ -38,6 +56,10 @@ impl EventKind {
             EventKind::Arrive { .. } => 1,
             EventKind::IterationComplete { .. } => 2,
             EventKind::Rebind { .. } => 3,
+            EventKind::Preempt { .. } => 4,
+            EventKind::Resume { .. } => 5,
+            EventKind::BudgetShock { .. } => 6,
+            EventKind::DrainExpire { .. } => 7,
         }
     }
 }
@@ -164,6 +186,27 @@ mod tests {
         let cohort = q.pop_cohort().unwrap();
         let ranks: Vec<u8> = cohort.iter().map(|e| e.kind.rank()).collect();
         assert_eq!(ranks, vec![0, 1, 2, 3], "Depart < Arrive < IterationComplete < Rebind");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn chaos_kinds_rank_after_the_original_four() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::DrainExpire { id: 9 });
+        q.push(5.0, EventKind::BudgetShock { new_global: 7 });
+        q.push(5.0, EventKind::Resume { name: "b".into() });
+        q.push(5.0, EventKind::Preempt { name: "a".into(), drain_ms: 2.0 });
+        q.push(5.0, EventKind::Rebind { id: 3, budget: 1 });
+        q.push(5.0, ic(2));
+        q.push(5.0, EventKind::Arrive { id: 1 });
+        q.push(5.0, EventKind::Depart { name: "a".into() });
+        let cohort = q.pop_cohort().unwrap();
+        let ranks: Vec<u8> = cohort.iter().map(|e| e.kind.rank()).collect();
+        assert_eq!(
+            ranks,
+            vec![0, 1, 2, 3, 4, 5, 6, 7],
+            "chaos kinds fire after departures/arrivals/completions/rebinds"
+        );
         assert!(q.is_empty());
     }
 

@@ -40,6 +40,11 @@ pub struct BrokerDecision {
     /// event pacing `allocations` covers only the due cohort, so the ledger
     /// invariant (≤ global) is checked against this fleet-wide total.
     pub alloc_total: u64,
+    /// Global device budget in force when the decision fired. Static over a
+    /// run unless a `BudgetShock` event shrank (or restored) it mid-run —
+    /// the ledger invariant is always against THIS, not the configured
+    /// starting budget.
+    pub global: u64,
 }
 
 /// Per-job rollup over a fleet run — departed and completed jobs included.
@@ -71,6 +76,13 @@ pub struct JobSummary {
     pub final_budget: u64,
     /// Iterations per simulated second.
     pub throughput_iters_per_s: f64,
+    /// Iterations spent in sheltered (collection) mode. A warm-resumed job
+    /// replans previously seen shapes from its retained estimator and the
+    /// shared cache, so resumption adds ZERO to this.
+    pub sheltered_iters: usize,
+    /// Estimator fits: 1 after the initial freeze, +1 per reshelter refit.
+    /// Warm re-admission must not refit, so resumption adds zero here too.
+    pub refits: u64,
 }
 
 impl JobSummary {
@@ -106,6 +118,13 @@ pub struct FleetReport {
     pub shared_cache_entries: usize,
     /// Rounds where aggregate demand overshot the device.
     pub overshoots: u64,
+    /// Preemption notices delivered (jobs that entered a drain window).
+    pub preemptions: u64,
+    /// Budget-shock events applied mid-run.
+    pub shocks: u64,
+    /// Drains that expired (or shock victims evicted) before the job could
+    /// park gracefully — the job was stopped mid-iteration.
+    pub forced_stops: u64,
 }
 
 impl FleetReport {
@@ -199,6 +218,8 @@ mod tests {
             budget_changes: 0,
             final_budget: peak,
             throughput_iters_per_s: steps as f64 * 1e3 / total_ms,
+            sheltered_iters: 0,
+            refits: 1,
         }
     }
 
@@ -216,6 +237,7 @@ mod tests {
             decision_ms: ms,
             aggregate_peak: peak,
             alloc_total: peak,
+            global: 100,
         }
     }
 
@@ -229,6 +251,9 @@ mod tests {
             shared_cache_hits: 2,
             shared_cache_entries: 5,
             overshoots: 1,
+            preemptions: 0,
+            shocks: 0,
+            forced_stops: 0,
         };
         assert_eq!(r.total_steps(), 40);
         assert!((r.total_ms() - 2000.0).abs() < 1e-9);
@@ -271,6 +296,9 @@ mod tests {
             shared_cache_hits: 0,
             shared_cache_entries: 0,
             overshoots: 0,
+            preemptions: 0,
+            shocks: 0,
+            forced_stops: 0,
         };
         assert!((r.weighted_jain_mean() - 0.75).abs() < 1e-12);
         assert_eq!(r.departed_jobs(), 1);
@@ -287,6 +315,9 @@ mod tests {
             shared_cache_hits: 0,
             shared_cache_entries: 0,
             overshoots: 0,
+            preemptions: 0,
+            shocks: 0,
+            forced_stops: 0,
         };
         assert_eq!(r.throughput_iters_per_s(), 0.0);
         assert_eq!(r.max_aggregate_peak(), 0);

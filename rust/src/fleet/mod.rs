@@ -52,8 +52,24 @@
 //!   validated for worst-case floor feasibility at construction.
 //! * [`events::EventQueue`] — the min-heap behind the core: events order
 //!   by (time, within-instant rank, push order), where the rank contract
-//!   Depart < Arrive < IterationComplete < Rebind reproduces the round
-//!   loop's apply-events-then-step semantics inside a single instant.
+//!   Depart < Arrive < IterationComplete < Rebind < Preempt < Resume <
+//!   BudgetShock < DrainExpire reproduces the round loop's
+//!   apply-events-then-step semantics inside a single instant and applies
+//!   chaos only after the instant's normal work has settled.
+//! * **Preemption & drain** — a `Preempt` event is a *notice*: the job
+//!   stops planning new iterations, finishes (or shelters) the in-flight
+//!   one inside its drain window, releases its floor, and parks. A
+//!   `DrainExpire` past the window force-stops it mid-iteration. Parked
+//!   jobs keep their frozen estimator and the shared plan cache keeps
+//!   their plans, so a later `Resume` re-admits them *warm*: zero
+//!   sheltered re-collection, zero refits for already-seen shapes.
+//! * **Budget shocks** — a `BudgetShock` event rebinds the global budget
+//!   mid-run. [`broker::BudgetBroker::shock`] claws back largest-slack
+//!   first without ever exceeding the new global mid-transition; when even
+//!   the guaranteed floors no longer fit, the scheduler force-stops the
+//!   lowest-weight tenants until they do. Chaos volume is visible as
+//!   `fleet.preemptions` / `fleet.shocks` / `fleet.forced_stops` counters
+//!   and a `fleet.drain_ms` histogram in [`crate::obs`].
 //! * [`broker::BudgetBroker::update`] — the incremental fill: indexed
 //!   per-tenant state and maintained aggregates let a partial cohort be
 //!   refilled without touching (or paying for) idle tenants; claw-backs
@@ -72,8 +88,10 @@
 //! timeline), `examples/fleet.rs` (`--events` demo), the `[fleet]` TOML
 //! section with `[[fleet.jobs]]` / `[[fleet.events]]`
 //! ([`crate::config::FleetConfig`]), `tests/fleet_arbiter.rs` (the
-//! budget-safety + beats-equal-split pin) and `tests/fleet_dynamic.rs`
-//! (the dynamic-tenancy property harness + static-fleet differential).
+//! budget-safety + beats-equal-split pin), `tests/fleet_dynamic.rs`
+//! (the dynamic-tenancy property harness + static-fleet differential)
+//! and `tests/fleet_chaos.rs` (randomized preempt/resume/shock timelines
+//! checked for ledger safety at every decision).
 
 pub mod broker;
 pub mod events;

@@ -41,10 +41,26 @@
 //! reshelter invalidates the estimator they were built from — and only its
 //! own, never another tenant's.
 //!
+//! The event core also models *chaos*: spot-style preemption notices
+//! (`Preempt` starts a notice→drain→force-stop state machine — the job
+//! stops planning new iterations, parks gracefully when its in-flight
+//! iteration completes within the drain window, or is force-stopped by
+//! `DrainExpire`), warm re-admission (`Resume` rejoins a parked job with
+//! its estimator and shared-cache entries intact, so previously seen
+//! shapes replan without re-collection), and device-wide `BudgetShock`s
+//! (the broker tightens every tenant to the new global via
+//! [`BudgetBroker::shock`], force-stopping lowest-weight victims first
+//! when even the live floors no longer fit). These kinds require the
+//! event core — [`Pacing::Rounds`] rejects them at construction.
+//!
 //! Arriving jobs (and the whole event timeline) are validated at
 //! construction: every engine is built eagerly, and the worst-case floor
 //! sum over each interval of the timeline must fit the global budget, so
-//! `run()` cannot hit an infeasible tenancy mid-flight.
+//! `run()` cannot hit an infeasible tenancy mid-flight. Preempted names
+//! are conservatively treated as live to the horizon (a resume can push
+//! their completion past `arrived + steps`), so the floor walk stays a
+//! sound over-approximation; budget shocks instead re-validate at
+//! runtime, force-stopping victims when a post-shock fill cannot fit.
 
 use super::broker::{weighted_jain, BudgetBroker, JobDemand};
 use super::events::{EventKind, EventQueue};
@@ -52,7 +68,7 @@ use super::metrics::{BrokerDecision, FleetReport, JobSummary};
 use crate::config::{
     ExperimentConfig, FleetConfig, FleetEvent, JobSpec, Pacing, PlannerKind, Task,
 };
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, Phase};
 use crate::data::InputStream;
 use crate::engine::sim::{input_for, SimEngine};
 use crate::metrics::RunReport;
@@ -255,6 +271,8 @@ impl FleetJob {
             budget_changes: stats.as_ref().map(|s| s.budget_changes).unwrap_or(0),
             final_budget: self.budget,
             throughput_iters_per_s: self.report.throughput_iters_per_s(),
+            sheltered_iters: self.report.phase_count(Phase::Sheltered),
+            refits: stats.as_ref().map(|s| s.refits).unwrap_or(0),
         }
     }
 }
@@ -285,6 +303,18 @@ pub struct FleetScheduler {
     /// timeline — the live count changing mid-run must NOT silently rebind
     /// every tenant (each rebind flushes plan caches).
     frozen_share: u64,
+    /// Scripted preemption notices: (round, job name, drain rounds).
+    preempts: Vec<(usize, String, usize)>,
+    /// Scripted warm re-admissions of parked jobs: (round, job name).
+    resumes: Vec<(usize, String)>,
+    /// Scripted global-budget shocks: (round, new global bytes).
+    shocks: Vec<(usize, u64)>,
+    /// Preemption notices delivered (drain windows opened).
+    preemptions: u64,
+    /// Budget shocks applied.
+    shocks_fired: u64,
+    /// Jobs stopped mid-iteration: expired drains plus shock/fill victims.
+    forced_stops: u64,
 }
 
 impl FleetScheduler {
@@ -298,12 +328,24 @@ impl FleetScheduler {
         let name_of = |spec: &JobSpec, id: usize| {
             spec.name.clone().unwrap_or_else(|| format!("{}#{id}", spec.task.name()))
         };
+        // a preempted name may be resumed, pushing its completion past
+        // `arrived + steps`: treat it as live to the horizon (a sound
+        // over-approximation — parked jobs hold no budget, so the true
+        // concurrency is never higher than this walk's)
+        let preempted: BTreeSet<&str> = cfg
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FleetEvent::Preempt { job, .. } => Some(job.as_str()),
+                _ => None,
+            })
+            .collect();
         let mut live: BTreeSet<String> = BTreeSet::new();
         let mut removals: Vec<(usize, String)> = Vec::new();
         let mut arrivals: Vec<(usize, String)> = Vec::new();
         for (i, spec) in cfg.jobs.iter().enumerate() {
             let name = name_of(spec, i);
-            if spec.steps > 0 {
+            if spec.steps > 0 && !preempted.contains(name.as_str()) {
                 removals.push((spec.steps, name.clone()));
             }
             live.insert(name);
@@ -319,11 +361,17 @@ impl FleetScheduler {
                 FleetEvent::Arrive { spec, at_round } => {
                     let name = name_of(spec, next_id);
                     next_id += 1;
-                    if spec.steps > 0 {
+                    if spec.steps > 0 && !preempted.contains(name.as_str()) {
                         removals.push((*at_round + spec.steps, name.clone()));
                     }
                     arrivals.push((*at_round, name));
                 }
+                // chaos kinds never RAISE concurrency: a preempt parks (live
+                // count can only drop until the resume), and a shock only
+                // moves budgets
+                FleetEvent::Preempt { .. }
+                | FleetEvent::Resume { .. }
+                | FleetEvent::Shock { .. } => {}
             }
         }
         let mut ops: Vec<(usize, u8, &str)> = removals
@@ -370,8 +418,29 @@ impl FleetScheduler {
         // within a round departures apply before arrivals, so a same-round
         // swap frees its floor room first
         events.sort_by_key(|e| (e.at_round(), matches!(e, FleetEvent::Arrive { .. })));
+        // names under a preemption notice anywhere in the timeline: their
+        // `steps` completion round is no longer deterministic (a resume
+        // shifts it later), so the floor walk keeps them live to the
+        // horizon — see the module docs
+        let preempted: BTreeSet<String> = events
+            .iter()
+            .filter_map(|e| match e {
+                FleetEvent::Preempt { job, .. } => Some(job.clone()),
+                _ => None,
+            })
+            .collect();
+        if events.iter().any(|e| e.is_chaos()) && cfg.pacing == Pacing::Rounds {
+            return Err(
+                "preempt/resume/shock events need the event core: set pacing to \
+                 'lockstep' or 'profiled', not 'rounds'"
+                    .into(),
+            );
+        }
         let mut pending: Vec<PendingArrival> = Vec::new();
         let mut departures: Vec<(usize, String)> = Vec::new();
+        let mut preempts: Vec<(usize, String, usize)> = Vec::new();
+        let mut resumes: Vec<(usize, String)> = Vec::new();
+        let mut shocks: Vec<(usize, u64)> = Vec::new();
         // validation timeline: rounds at which a name stops/starts holding
         // worst-case floor room (removals = scripted departs + `steps`
         // completions; arrivals carry their worst-case floor)
@@ -402,11 +471,64 @@ impl FleetScheduler {
                     next_id += 1;
                     let w = job.worst_floor(cfg.floor_bytes, cfg.mimose.reserve_bytes);
                     arrivals.push((*at_round, job.name.clone(), w));
-                    if spec.steps > 0 {
+                    if spec.steps > 0 && !preempted.contains(job.name.as_str()) {
                         removals.push((*at_round + spec.steps, job.name.clone()));
                     }
                     pending.push(PendingArrival { at_round: *at_round, job });
                 }
+                FleetEvent::Preempt { job, at_round, drain_rounds } => {
+                    if *at_round >= cfg.steps {
+                        return Err(format!(
+                            "preempt event at round {at_round} can never fire: the fleet runs {} rounds",
+                            cfg.steps
+                        ));
+                    }
+                    preempts.push((*at_round, job.clone(), *drain_rounds));
+                }
+                FleetEvent::Resume { job, at_round } => {
+                    if *at_round >= cfg.steps {
+                        return Err(format!(
+                            "resume event at round {at_round} can never fire: the fleet runs {} rounds",
+                            cfg.steps
+                        ));
+                    }
+                    resumes.push((*at_round, job.clone()));
+                }
+                FleetEvent::Shock { at_round, global_budget_bytes } => {
+                    if *at_round >= cfg.steps {
+                        return Err(format!(
+                            "shock event at round {at_round} can never fire: the fleet runs {} rounds",
+                            cfg.steps
+                        ));
+                    }
+                    if !cfg.arbitrated {
+                        return Err(
+                            "budget shocks need broker arbitration: the frozen equal \
+                             split cannot be renegotiated mid-run"
+                                .into(),
+                        );
+                    }
+                    shocks.push((*at_round, *global_budget_bytes));
+                }
+            }
+        }
+        // preempt/resume notices must target a name the timeline can ever
+        // produce — a typo'd name would otherwise be a silent no-op forever
+        let known: BTreeSet<&str> = jobs
+            .iter()
+            .map(|j| j.name.as_str())
+            .chain(pending.iter().map(|p| p.job.name.as_str()))
+            .collect();
+        for (round, name) in preempts
+            .iter()
+            .map(|(r, n, _)| (*r, n.as_str()))
+            .chain(resumes.iter().map(|(r, n)| (*r, n.as_str())))
+        {
+            if !known.contains(name) {
+                return Err(format!(
+                    "preempt/resume event at round {round} names '{name}', which no \
+                     initial job or scripted arrival ever uses"
+                ));
             }
         }
 
@@ -421,7 +543,7 @@ impl FleetScheduler {
                 return Err(format!("duplicate job name '{}'", job.name));
             }
             worst_sum += w;
-            if job.steps_limit > 0 {
+            if job.steps_limit > 0 && !preempted.contains(job.name.as_str()) {
                 removals.push((job.steps_limit, job.name.clone()));
             }
         }
@@ -511,6 +633,12 @@ impl FleetScheduler {
             broker,
             shared,
             frozen_share,
+            preempts,
+            resumes,
+            shocks,
+            preemptions: 0,
+            shocks_fired: 0,
+            forced_stops: 0,
         })
     }
 
@@ -559,8 +687,9 @@ impl FleetScheduler {
         }
     }
 
-    /// An idle decision: nobody ran at this instant.
-    fn idle_decision(round: usize, time_ms: f64) -> BrokerDecision {
+    /// An idle decision: nobody ran at this instant. `global` is the
+    /// device budget in force (post-shock runs carry the shocked value).
+    fn idle_decision(round: usize, time_ms: f64, global: u64) -> BrokerDecision {
         BrokerDecision {
             round,
             time_ms,
@@ -574,6 +703,7 @@ impl FleetScheduler {
             decision_ms: 0.0,
             aggregate_peak: 0,
             alloc_total: 0,
+            global,
         }
     }
 
@@ -598,6 +728,9 @@ impl FleetScheduler {
             shared_cache_hits: shared_hits,
             shared_cache_entries: shared_entries,
             overshoots: self.broker.overshoots,
+            preemptions: self.preemptions,
+            shocks: self.shocks_fired,
+            forced_stops: self.forced_stops,
         }
     }
 
@@ -620,7 +753,7 @@ impl FleetScheduler {
             let n = self.jobs.len();
             if n == 0 {
                 // every tenant departed or completed: an idle round
-                rounds.push(Self::idle_decision(round, round as f64));
+                rounds.push(Self::idle_decision(round, round as f64, self.cfg.global_budget_bytes));
                 continue;
             }
 
@@ -692,6 +825,7 @@ impl FleetScheduler {
                 decision_ms,
                 aggregate_peak,
                 alloc_total,
+                global: self.cfg.global_budget_bytes,
             });
 
             // 4) early exit on completion: the job's budget is reclaimed
@@ -749,9 +883,54 @@ impl FleetScheduler {
         for (round, name) in std::mem::take(&mut self.departures) {
             queue.push(round as f64 * tick, EventKind::Depart { name });
         }
+        // shock rounds kept for the idle-round padding below: a padded
+        // round reports the global that was in force AT that round
+        let shock_timeline: Vec<(usize, u64)> = self.shocks.clone();
+        for (round, name, drain_rounds) in std::mem::take(&mut self.preempts) {
+            queue.push(
+                round as f64 * tick,
+                EventKind::Preempt { name, drain_ms: drain_rounds as f64 * tick },
+            );
+        }
+        for (round, name) in std::mem::take(&mut self.resumes) {
+            queue.push(round as f64 * tick, EventKind::Resume { name });
+        }
+        for (round, new_global) in std::mem::take(&mut self.shocks) {
+            queue.push(round as f64 * tick, EventKind::BudgetShock { new_global });
+        }
+        // drain/park state: the notice instant per draining id, and parked
+        // (preempted) jobs with the round they parked at. A parked job
+        // holds no budget (`BudgetBroker::depart` ran at park time) but
+        // keeps its engine, trained estimator, and shared-cache attachment
+        // for a warm resume.
+        let mut draining: BTreeMap<u64, f64> = BTreeMap::new();
+        let mut parked: BTreeMap<u64, (FleetJob, usize)> = BTreeMap::new();
+        // the device budget in force — budget shocks move it mid-run
+        let mut global_now = self.cfg.global_budget_bytes;
+
+        // remove a live job, reclaim its budget, and park it for a possible
+        // warm resume; false if the id was not live
+        fn park_job(
+            broker: &mut BudgetBroker,
+            live: &mut BTreeMap<u64, FleetJob>,
+            names: &mut HashMap<String, u64>,
+            parked: &mut BTreeMap<u64, (FleetJob, usize)>,
+            id: u64,
+            round: usize,
+        ) -> bool {
+            match live.remove(&id) {
+                Some(job) => {
+                    names.remove(&job.name);
+                    broker.depart(id);
+                    parked.insert(id, (job, round));
+                    true
+                }
+                None => false,
+            }
+        }
 
         let mut rounds: Vec<BrokerDecision> = Vec::new();
-        while let Some(cohort) = queue.pop_cohort() {
+        'cohorts: while let Some(cohort) = queue.pop_cohort() {
             let t = cohort[0].time;
             if t > horizon {
                 break;
@@ -768,6 +947,10 @@ impl FleetScheduler {
                         if let Some(id) = id {
                             let job = live.remove(&id).expect("names tracks live jobs");
                             names.remove(&name);
+                            // a depart mid-drain releases the floor exactly
+                            // once: `depart` here, and the dropped notice
+                            // makes the pending DrainExpire a no-op
+                            draining.remove(&id);
                             self.broker.depart(id);
                             self.finished.push(job.summary(Some(round)));
                             if tracing {
@@ -776,6 +959,15 @@ impl FleetScheduler {
                                     tr.instant_at(broker_tid, &label, "broker", t, &[]);
                                 });
                             }
+                        } else if let Some(id) = parked
+                            .iter()
+                            .find(|(_, (j, _))| j.name == name)
+                            .map(|(&id, _)| id)
+                        {
+                            // departing while parked: the budget was already
+                            // reclaimed at park time — just retire the job
+                            let (job, _) = parked.remove(&id).expect("just found");
+                            self.finished.push(job.summary(Some(round)));
                         }
                     }
                     EventKind::Arrive { id } => {
@@ -800,10 +992,35 @@ impl FleetScheduler {
                                 // configured step count reached: retire now
                                 let job = live.remove(&id).expect("checked live");
                                 names.remove(&job.name);
+                                draining.remove(&id);
                                 self.broker.depart(id);
                                 self.finished.push(job.summary(Some(round)));
                             }
-                            Some(false) => due.push(id),
+                            Some(false) => {
+                                if let Some(notice) = draining.remove(&id) {
+                                    // the in-flight iteration finished
+                                    // inside the drain window: park
+                                    // gracefully, release the floor
+                                    park_job(
+                                        &mut self.broker,
+                                        &mut live,
+                                        &mut names,
+                                        &mut parked,
+                                        id,
+                                        round,
+                                    );
+                                    obs::observe_ms("fleet.drain_ms", t - notice);
+                                    if tracing {
+                                        let tid = track_of.get(&id).copied();
+                                        obs::with_tracer(|tr| {
+                                            let tid = tid.unwrap_or(broker_tid);
+                                            tr.span_at(tid, "drain", "job", notice, t - notice, &[]);
+                                        });
+                                    }
+                                } else {
+                                    due.push(id);
+                                }
+                            }
                             None => {}
                         }
                     }
@@ -825,6 +1042,142 @@ impl FleetScheduler {
                             }
                         }
                     }
+                    EventKind::Preempt { name, drain_ms } => {
+                        // a notice for a parked or departed name is stale;
+                        // a second notice mid-drain does not reset the clock
+                        if let Some(&id) = names.get(&name) {
+                            if !draining.contains_key(&id) {
+                                draining.insert(id, t);
+                                self.preemptions += 1;
+                                obs::inc("fleet.preemptions");
+                                queue.push(t + drain_ms, EventKind::DrainExpire { id });
+                                if tracing {
+                                    obs::with_tracer(|tr| {
+                                        let label = format!("preempt:{name}");
+                                        tr.instant_at(
+                                            broker_tid,
+                                            &label,
+                                            "broker",
+                                            t,
+                                            &[("drain_ms", drain_ms)],
+                                        );
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    EventKind::Resume { name } => {
+                        // warm re-admission: the parked engine rejoins with
+                        // its estimator and shared-cache attachment intact,
+                        // so previously seen shapes replan with zero new
+                        // sheltered iterations and no refit. The broker
+                        // re-registers it at the next fill, like a fresh
+                        // arrival. A name that is not parked is stale.
+                        let pid = parked
+                            .iter()
+                            .find(|(_, (j, _))| j.name == name)
+                            .map(|(&id, _)| id);
+                        if let Some(id) = pid {
+                            let (job, _) = parked.remove(&id).expect("just found");
+                            names.insert(job.name.clone(), id);
+                            live.insert(id, job);
+                            due.push(id);
+                            if tracing {
+                                obs::with_tracer(|tr| {
+                                    let label = format!("resume:{name}");
+                                    tr.instant_at(broker_tid, &label, "broker", t, &[]);
+                                });
+                            }
+                        }
+                    }
+                    EventKind::BudgetShock { new_global } => {
+                        self.shocks_fired += 1;
+                        obs::inc("fleet.shocks");
+                        // the new global must cover the live floors before
+                        // the broker can transition: force-stop the lowest-
+                        // weight victims (ties to the larger id — the later
+                        // arrival) until they fit
+                        while self.broker.floor_sum_live() > new_global {
+                            let victim = live
+                                .values()
+                                .filter(|j| self.broker.allocation_of(j.id).is_some())
+                                .min_by(|a, b| {
+                                    a.weight.total_cmp(&b.weight).then(b.id.cmp(&a.id))
+                                })
+                                .map(|j| j.id);
+                            match victim {
+                                Some(id) => {
+                                    draining.remove(&id);
+                                    park_job(
+                                        &mut self.broker,
+                                        &mut live,
+                                        &mut names,
+                                        &mut parked,
+                                        id,
+                                        round,
+                                    );
+                                    self.forced_stops += 1;
+                                    obs::inc("fleet.forced_stops");
+                                }
+                                None => break,
+                            }
+                        }
+                        let rebinds = self
+                            .broker
+                            .shock(new_global)
+                            .expect("victims force-stopped until the floors fit");
+                        // tightenings land as same-instant rebind events
+                        // (the follow-up cohort), like claw-backs from fills
+                        for (id, budget) in rebinds {
+                            queue.push(t, EventKind::Rebind { id, budget });
+                        }
+                        global_now = new_global;
+                        obs::gauge_set("fleet.global_budget", new_global);
+                        if tracing {
+                            obs::with_tracer(|tr| {
+                                tr.instant_at(
+                                    broker_tid,
+                                    "shock",
+                                    "broker",
+                                    t,
+                                    &[("new_global", new_global as f64)],
+                                );
+                            });
+                        }
+                    }
+                    EventKind::DrainExpire { id } => {
+                        // the drain window closed with the iteration still
+                        // in flight: force-stop. Parked, departed, and
+                        // completed ids already dropped their notice.
+                        if let Some(notice) = draining.remove(&id) {
+                            if park_job(
+                                &mut self.broker,
+                                &mut live,
+                                &mut names,
+                                &mut parked,
+                                id,
+                                round,
+                            ) {
+                                self.forced_stops += 1;
+                                obs::inc("fleet.forced_stops");
+                                obs::observe_ms("fleet.drain_ms", t - notice);
+                                if tracing {
+                                    let tid = track_of.get(&id).copied();
+                                    obs::with_tracer(|tr| {
+                                        let tid = tid.unwrap_or(broker_tid);
+                                        tr.span_at(
+                                            tid,
+                                            "drain:forced",
+                                            "job",
+                                            notice,
+                                            t - notice,
+                                            &[],
+                                        );
+                                    });
+                                }
+                            }
+                        }
+                    }
                 }
             }
             if t >= horizon {
@@ -832,13 +1185,30 @@ impl FleetScheduler {
             }
             due.sort_unstable();
             due.dedup();
+            // a shock (or a zero-notice drain expiry) later in the cohort
+            // may have force-stopped a job after its completion marked it
+            // due; and a preempt after a same-instant completion puts a due
+            // job under notice — its iteration finished at this very
+            // instant, so it parks gracefully instead of starting a new
+            // one. Draining jobs never receive new slack.
+            due.retain(|&id| {
+                if !live.contains_key(&id) {
+                    return false;
+                }
+                if let Some(notice) = draining.remove(&id) {
+                    park_job(&mut self.broker, &mut live, &mut names, &mut parked, id, round);
+                    obs::observe_ms("fleet.drain_ms", t - notice);
+                    return false;
+                }
+                true
+            });
             if due.is_empty() {
                 continue; // departure/rebind-only instant
             }
 
             // 1) demands for the due jobs' pending inputs, in id order —
             //    the round loop's vec order
-            let demands: Vec<JobDemand> = due
+            let mut demands: Vec<JobDemand> = due
                 .iter()
                 .map(|id| {
                     live.get_mut(id)
@@ -850,10 +1220,49 @@ impl FleetScheduler {
             // 2) incremental broker fill (or the frozen equal split)
             let (allocations, floors, wants, predicted_total, overshoot, jain, decision_ms) =
                 if self.cfg.arbitrated {
-                    let fill = self
-                        .broker
-                        .update(&demands)
-                        .expect("worst-case floors validated at construction");
+                    // a shock can invalidate the construction-time floor
+                    // walk for later arrivals and resumes: when the fill
+                    // cannot cover the due floors, force-stop the lowest-
+                    // weight victims until it can. Shock-free timelines
+                    // take the Ok path on the first try — bit-identical to
+                    // the pre-chaos behavior.
+                    let fill = loop {
+                        match self.broker.update(&demands) {
+                            Ok(f) => break f,
+                            Err(_) => {
+                                let victim = live
+                                    .values()
+                                    .filter(|j| {
+                                        self.broker.allocation_of(j.id).is_some()
+                                            || demands.iter().any(|d| d.id == j.id)
+                                    })
+                                    .min_by(|a, b| {
+                                        a.weight.total_cmp(&b.weight).then(b.id.cmp(&a.id))
+                                    })
+                                    .map(|j| j.id);
+                                let vid = match victim {
+                                    Some(vid) => vid,
+                                    None => continue 'cohorts,
+                                };
+                                draining.remove(&vid);
+                                park_job(
+                                    &mut self.broker,
+                                    &mut live,
+                                    &mut names,
+                                    &mut parked,
+                                    vid,
+                                    round,
+                                );
+                                self.forced_stops += 1;
+                                obs::inc("fleet.forced_stops");
+                                due.retain(|&d| d != vid);
+                                demands.retain(|d| d.id != vid);
+                                if demands.is_empty() {
+                                    continue 'cohorts;
+                                }
+                            }
+                        }
+                    };
                     // claw-backs land as same-instant rebind events (the
                     // follow-up cohort), after this cohort's iterations
                     for &(id, budget) in &fill.rebinds {
@@ -959,6 +1368,7 @@ impl FleetScheduler {
                 decision_ms,
                 aggregate_peak,
                 alloc_total,
+                global: global_now,
             });
         }
 
@@ -971,12 +1381,24 @@ impl FleetScheduler {
             }
             for (round, seen) in have.into_iter().enumerate() {
                 if !seen {
-                    rounds.push(Self::idle_decision(round, round as f64));
+                    // the global that was in force AT the padded round
+                    let global = shock_timeline
+                        .iter()
+                        .filter(|(r, _)| *r <= round)
+                        .last()
+                        .map(|(_, g)| *g)
+                        .unwrap_or(self.cfg.global_budget_bytes);
+                    rounds.push(Self::idle_decision(round, round as f64, global));
                 }
             }
             rounds.sort_by_key(|d| d.round);
         }
 
+        // jobs still parked at the horizon never resumed: they retire with
+        // the round they parked at
+        for (job, park_round) in parked.into_values() {
+            self.finished.push(job.summary(Some(park_round)));
+        }
         let live_summaries: Vec<JobSummary> = live.values().map(|j| j.summary(None)).collect();
         // restore the live set so `jobs()` still reflects it post-run
         self.jobs = live.into_values().collect();
@@ -1339,5 +1761,207 @@ mod tests {
         cfg.jobs[0].name = Some("same".into());
         cfg.jobs[1].name = Some("same".into());
         assert!(FleetScheduler::new(cfg).is_err());
+    }
+
+    #[test]
+    fn preempted_job_parks_and_resumes_warm() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40);
+        cfg.events = vec![
+            FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 20, drain_rounds: 2 },
+            FleetEvent::Resume { job: "TC-Bert#0".into(), at_round: 30 },
+        ];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(
+            r.forced_stops, 0,
+            "lockstep iterations end on tick boundaries: the park is graceful"
+        );
+        let j = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        // parked over rounds 20..30: 20 iterations before, 10 after
+        assert_eq!(j.steps, 30);
+        assert_eq!(j.departed_round, None, "resumed and live at the fleet's end");
+        // the warm-resume pin: the retained estimator means no refit and no
+        // new sheltered (collection) iterations versus an unpreempted run
+        let mut base =
+            FleetScheduler::new(fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40)).unwrap();
+        let rb = base.run();
+        let jb = rb.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        assert_eq!(j.refits, jb.refits, "warm resume must not refit the estimator");
+        assert_eq!(
+            j.sheltered_iters, jb.sheltered_iters,
+            "warm resume must add zero sheltered iterations"
+        );
+        // the parked interval shows in the decisions: id 0 absent 20..30
+        for d in &r.rounds {
+            let has = d.job_ids.contains(&0);
+            assert_eq!(has, !(20..30).contains(&d.round), "round {}", d.round);
+        }
+        assert_eq!(r.oom_failures(), 0);
+        assert!(r.budget_respected());
+    }
+
+    #[test]
+    fn drain_expiry_force_stops_mid_iteration() {
+        // profiled pacing: iterations end on simulated durations, so a
+        // zero-notice preempt lands mid-iteration and the drain expires
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40);
+        cfg.pacing = Pacing::Profiled;
+        cfg.events = vec![FleetEvent::Preempt {
+            job: "TC-Bert#0".into(),
+            at_round: 20,
+            drain_rounds: 0,
+        }];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.forced_stops, 1, "no drain window: the job stops mid-iteration");
+        let j = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        assert!(j.departed_round.is_some(), "never resumed: retired at its park round");
+    }
+
+    #[test]
+    fn shock_tightens_mid_run_and_decisions_carry_the_new_global() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40);
+        cfg.events = vec![FleetEvent::Shock { at_round: 20, global_budget_bytes: 8 * GIB }];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.shocks, 1);
+        assert_eq!(r.forced_stops, 0, "8 GiB still covers both floors");
+        assert_eq!(r.oom_failures(), 0, "the shock resolves by replanning, not OOM");
+        for d in &r.rounds {
+            let expect = if d.round < 20 { 12 * GIB } else { 8 * GIB };
+            assert_eq!(d.global, expect, "round {}", d.round);
+            assert!(d.alloc_total <= d.global, "round {}: ledger blown", d.round);
+        }
+        // both jobs survive to the horizon under the tightened budget
+        for j in &r.jobs {
+            assert_eq!(j.steps, 40, "{} incomplete", j.name);
+        }
+    }
+
+    #[test]
+    fn shock_below_the_floors_evicts_the_lowest_weight_victim() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40);
+        cfg.jobs[0].weight = 4.0;
+        cfg.jobs[1].weight = 1.0;
+        cfg.events = vec![FleetEvent::Shock { at_round: 20, global_budget_bytes: 3 * GIB }];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.shocks, 1);
+        assert!(r.forced_stops >= 1, "3 GiB cannot cover both floors");
+        let victim = r.jobs.iter().find(|j| j.name == "MC-Roberta#1").unwrap();
+        assert_eq!(
+            victim.departed_round,
+            Some(20),
+            "the lowest-weight tenant is force-stopped at the shock"
+        );
+        assert_eq!(victim.steps, 20);
+        for d in &r.rounds {
+            assert!(d.alloc_total <= d.global, "round {}: ledger blown", d.round);
+            assert!(!d.job_ids.contains(&1) || d.round < 20, "round {}", d.round);
+        }
+    }
+
+    #[test]
+    fn depart_while_parked_retires_the_job_once() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40);
+        cfg.events = vec![
+            FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 10, drain_rounds: 2 },
+            FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 15 },
+            FleetEvent::Resume { job: "TC-Bert#0".into(), at_round: 25 },
+        ];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.jobs.len(), 2, "exactly one summary per job");
+        let j = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        assert_eq!(j.departed_round, Some(15), "the depart retires the parked job");
+        assert_eq!(j.steps, 10);
+        // the stale resume at 25 must NOT revive the departed job
+        for d in &r.rounds {
+            assert!(!d.job_ids.contains(&0) || d.round < 10, "round {}", d.round);
+        }
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    fn preempt_and_resume_work_under_the_frozen_equal_split() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 40);
+        cfg.arbitrated = false;
+        cfg.events = vec![
+            FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 10, drain_rounds: 1 },
+            FleetEvent::Resume { job: "TC-Bert#0".into(), at_round: 20 },
+        ];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.preemptions, 1);
+        let j = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        assert_eq!(j.steps, 30, "parked rounds 10..20");
+        assert_eq!(j.final_budget, 6 * GIB, "the frozen share survives park/resume");
+    }
+
+    #[test]
+    fn resume_of_a_live_job_is_a_stale_no_op() {
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 30);
+        cfg.events = vec![FleetEvent::Resume { job: "TC-Bert#0".into(), at_round: 10 }];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!((r.preemptions, r.shocks, r.forced_stops), (0, 0, 0));
+        for j in &r.jobs {
+            assert_eq!(j.steps, 30, "{} must be unaffected", j.name);
+        }
+        assert_eq!(r.oom_failures(), 0);
+    }
+
+    #[test]
+    fn chaos_events_need_the_event_core_and_known_names() {
+        // the legacy round loop cannot host preempt/resume/shock
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.pacing = Pacing::Rounds;
+        cfg.events =
+            vec![FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 5, drain_rounds: 1 }];
+        assert!(FleetScheduler::new(cfg).is_err());
+        // a typo'd preempt target would be a silent no-op forever
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.events =
+            vec![FleetEvent::Preempt { job: "nope".into(), at_round: 5, drain_rounds: 1 }];
+        assert!(FleetScheduler::new(cfg).is_err());
+        // shocks need the broker: a frozen split cannot renegotiate
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.arbitrated = false;
+        cfg.events = vec![FleetEvent::Shock { at_round: 5, global_budget_bytes: 4 * GIB }];
+        assert!(FleetScheduler::new(cfg).is_err());
+        // chaos events at or past the horizon can never fire
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 8, 20);
+        cfg.events = vec![FleetEvent::Resume { job: "TC-Bert#0".into(), at_round: 20 }];
+        assert!(FleetScheduler::new(cfg).is_err());
+    }
+
+    #[test]
+    fn preempted_name_stays_live_in_the_timeline_walk() {
+        // a steps-limited job under a preempt notice may be resumed past
+        // `arrived + steps`, so the concurrency/floor walks must NOT free
+        // its room at the nominal completion round. Pinned through the
+        // frozen equal split: with job 0's completion at round 5 counted,
+        // the round-10 arrival would never overlap it (max-concurrent 1,
+        // share 12 GiB); with job 0 preempted it is held live to the
+        // horizon (max-concurrent 2, share 6 GiB).
+        let mut cfg = fleet_cfg(vec![Task::TcBert], 12, 30);
+        cfg.arbitrated = false;
+        cfg.jobs[0].steps = 5;
+        cfg.events = vec![
+            FleetEvent::Arrive { spec: JobSpec::new(Task::TcBert), at_round: 10 },
+            FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 2, drain_rounds: 1 },
+        ];
+        let r = FleetScheduler::new(cfg).unwrap().run();
+        let arrival = r.jobs.iter().find(|j| j.name == "TC-Bert#1").unwrap();
+        assert_eq!(
+            arrival.final_budget,
+            6 * GIB,
+            "the preempted name holds its slot to the horizon"
+        );
+        // the never-resumed job retires at its park round with 2 steps
+        let parked = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+        assert_eq!((parked.steps, parked.departed_round), (2, Some(2)));
     }
 }

@@ -25,8 +25,8 @@
 //!   mimose fleet --tasks tc-bert,qa-bert --weights 3.0,1.0 --events events.toml
 
 use mimose::config::{
-    toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, JobSpec, MimoseConfig,
-    ObsConfig, Pacing, PlannerKind, Task,
+    toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, FleetEvent, JobSpec,
+    MimoseConfig, ObsConfig, Pacing, PlannerKind, Task,
 };
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
 use mimose::engine::sim::{input_for, max_task_profile, SimEngine};
@@ -424,6 +424,12 @@ fn report_fleet(r: &FleetReport) {
             r.departed_jobs()
         );
     }
+    if r.preemptions + r.shocks + r.forced_stops > 0 {
+        println!(
+            "  chaos             : {} preemption notices, {} budget shocks, {} forced stops",
+            r.preemptions, r.shocks, r.forced_stops
+        );
+    }
     println!("  weighted fairness : {:.3} mean Jain over multi-tenant rounds", r.weighted_jain_mean());
     println!(
         "  aggregate peak    : {} of {} global ({})",
@@ -463,6 +469,16 @@ fn cmd_fleet(args: &[String]) {
                 "events",
                 "",
                 "TOML path whose [[fleet.events]] script mid-run arrivals/departures",
+            )
+            .opt(
+                "shock-at",
+                "",
+                "budget shocks 'round:gb[,round:gb...]' rebinding the global mid-run",
+            )
+            .opt(
+                "preempt",
+                "",
+                "preemption notices 'job:round[:drain][,...]' (drain rounds default 1)",
             )
             .opt("budget-gb", "16.0", "GLOBAL memory budget shared by all jobs (GiB)")
             .opt("floor-gb", "2.0", "configured per-job guaranteed floor (GiB)")
@@ -556,6 +572,46 @@ fn cmd_fleet(args: &[String]) {
                 eprintln!("events file error: {e}");
                 std::process::exit(2);
             }
+        }
+    }
+    let shock_arg = cli.get("shock-at");
+    if !shock_arg.is_empty() {
+        for part in shock_arg.split(',') {
+            let bad = || -> ! {
+                eprintln!("--shock-at wants 'round:gb[,round:gb...]', got '{part}'");
+                std::process::exit(2);
+            };
+            let (round, gb) = part.trim().split_once(':').unwrap_or_else(|| bad());
+            let at_round = round.trim().parse::<usize>().unwrap_or_else(|_| bad());
+            let gb = gb.trim().parse::<f64>().unwrap_or(f64::NAN);
+            if !gb.is_finite() || gb <= 0.0 {
+                bad();
+            }
+            cfg.events.push(FleetEvent::Shock {
+                at_round,
+                global_budget_bytes: (gb * GIB as f64) as u64,
+            });
+        }
+    }
+    let preempt_arg = cli.get("preempt");
+    if !preempt_arg.is_empty() {
+        for part in preempt_arg.split(',') {
+            let bad = || -> ! {
+                eprintln!("--preempt wants 'job:round[:drain][,...]', got '{part}'");
+                std::process::exit(2);
+            };
+            let mut fields = part.trim().split(':');
+            let job = fields.next().unwrap_or_default().trim().to_string();
+            let round = fields.next().unwrap_or_else(|| bad());
+            let at_round = round.trim().parse::<usize>().unwrap_or_else(|_| bad());
+            let drain_rounds = match fields.next() {
+                Some(d) => d.trim().parse::<usize>().unwrap_or_else(|_| bad()),
+                None => 1,
+            };
+            if job.is_empty() || fields.next().is_some() {
+                bad();
+            }
+            cfg.events.push(FleetEvent::Preempt { job, at_round, drain_rounds });
         }
     }
     let pacing_arg = cli.get("pacing");

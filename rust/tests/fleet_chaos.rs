@@ -1,0 +1,245 @@
+//! Chaos-timeline pins (ISSUE 8): preemption notices, graceful drain,
+//! warm resumes, and global budget shocks layered over trace-generated
+//! arrival/departure timelines. The safety contract must hold at every
+//! decision instant no matter how the chaos interleaves:
+//!
+//!   1. Σ allocations (and the fleet-wide ledger total) never exceed the
+//!      global budget IN FORCE at that instant — shocks rebind it mid-run,
+//!   2. every funded job holds at least its guaranteed floor; draining
+//!      jobs leave the fill entirely (notices never grant new slack),
+//!   3. departed, parked, and force-stopped ids are fully reclaimed —
+//!      they never reappear in a later decision,
+//!   4. a resumed job is re-admitted WARM: zero sheltered re-collection
+//!      and zero estimator refits beyond its chaos-free baseline.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mimose::config::{FleetConfig, FleetEvent, JobSpec, Pacing, Task};
+use mimose::data::trace::{generate_chaos, ChaosConfig, Interarrival, JobLength, TraceConfig};
+use mimose::fleet::{FleetReport, FleetScheduler};
+use mimose::util::proptest::{ensure, forall};
+use mimose::util::rng::Rng;
+use mimose::util::GIB;
+
+// ---------------------------------------------------------------------------
+// Shared invariant checker
+// ---------------------------------------------------------------------------
+
+/// The ledger contract under chaos, checked at every recorded decision.
+/// Unlike the chaos-free harness this cannot assert positive membership
+/// (a draining job legitimately vanishes mid-lifetime) — it asserts the
+/// safety direction: nothing over budget, nothing below floor, nothing
+/// funded after its final departure.
+fn check_chaos_invariants(r: &FleetReport) -> Result<(), String> {
+    for d in &r.rounds {
+        ensure(
+            d.allocations.iter().sum::<u64>() <= d.global,
+            &format!("round {}: cohort allocations over the in-force global", d.round),
+        )?;
+        ensure(
+            d.alloc_total <= d.global,
+            &format!(
+                "round {}: fleet ledger {} over the in-force global {}",
+                d.round, d.alloc_total, d.global
+            ),
+        )?;
+        ensure(
+            d.aggregate_peak <= d.global,
+            &format!("round {}: simulated peak over the in-force global", d.round),
+        )?;
+        for ((a, f), id) in d.allocations.iter().zip(&d.floors).zip(&d.job_ids) {
+            ensure(
+                a >= f,
+                &format!("round {}: job {id} funded {a} below floor {f}", d.round),
+            )?;
+        }
+        for j in &r.jobs {
+            if let Some(dep) = j.departed_round {
+                ensure(
+                    !(d.round > dep && d.job_ids.contains(&j.id)),
+                    &format!(
+                        "round {}: {} still funded after departing at {dep}",
+                        d.round, j.name
+                    ),
+                )?;
+            }
+        }
+    }
+    for j in &r.jobs {
+        ensure(j.oom_failures == 0, &format!("{} OOMed under chaos", j.name))?;
+        // a job collects at most one sheltered window in its whole life —
+        // warm re-admission must never re-enter collection
+        ensure(
+            j.sheltered_iters <= 10,
+            &format!("{} re-collected: {} sheltered iters", j.name, j.sheltered_iters),
+        )?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Property: randomized chaos timelines from the trace generator
+// ---------------------------------------------------------------------------
+
+/// ≥ 300 randomized timelines (release builds; a smoke-sized slice under
+/// debug) mixing arrivals, departures, preemption notices with random
+/// drain windows, warm resumes, and budget shocks, under both pacing
+/// modes. Every feasible timeline must run to completion holding the full
+/// invariant set; infeasible worst-case floors are rejected up front —
+/// that is the contract, not a counterexample.
+#[test]
+fn prop_chaos_timelines_hold_the_ledger() {
+    let cases = if cfg!(debug_assertions) { 24 } else { 300 };
+    let ran = AtomicUsize::new(0);
+    forall(
+        17,
+        cases,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let max_round = rng.range_u(10, 16);
+            let trace = TraceConfig {
+                interarrival: Interarrival::Exponential {
+                    mean_rounds: rng.range_f(3.0, 6.0),
+                },
+                length: JobLength::Uniform { lo: 3, hi: 8 },
+                scripted_departures: rng.f64() < 0.5,
+                ..TraceConfig::new(
+                    vec![Task::TcBert, Task::McRoberta],
+                    max_round,
+                    seed ^ 0xabba,
+                )
+            };
+            let global = 48 * GIB;
+            let mut chaos = ChaosConfig::new(trace, global);
+            chaos.preempt_prob = rng.range_f(0.2, 0.9);
+            chaos.resume_prob = rng.range_f(0.3, 1.0);
+            chaos.drain_rounds = (0, rng.range_u(0, 3));
+            chaos.shock_count = rng.range_u(0, 3);
+            chaos.shock_fraction = (0.5, 1.0);
+            let events = generate_chaos(&chaos);
+            let scripted_shocks = events
+                .iter()
+                .filter(|e| matches!(e, FleetEvent::Shock { .. }))
+                .count() as u64;
+            let scripted_preempts = events
+                .iter()
+                .filter(|e| matches!(e, FleetEvent::Preempt { .. }))
+                .count() as u64;
+            let cfg = FleetConfig {
+                global_budget_bytes: global,
+                steps: max_round,
+                pacing: if rng.f64() < 0.3 { Pacing::Profiled } else { Pacing::Lockstep },
+                jobs: JobSpec::from_tasks(&[Task::TcBert]),
+                events,
+                seed: seed ^ 0x50da,
+                ..Default::default()
+            };
+            let mut fleet = match FleetScheduler::new(cfg) {
+                Ok(f) => f,
+                Err(_) => return Ok(()),
+            };
+            let r = fleet.run();
+            ran.fetch_add(1, Ordering::Relaxed);
+            ensure(
+                r.shocks == scripted_shocks,
+                &format!("{} shocks fired, {scripted_shocks} scripted", r.shocks),
+            )?;
+            // a notice can miss a job that already retired or was evicted
+            // by a same-run shock, but never exceed what was scripted
+            ensure(
+                r.preemptions <= scripted_preempts,
+                &format!("{} notices for {scripted_preempts} scripted", r.preemptions),
+            )?;
+            check_chaos_invariants(&r)
+        },
+    );
+    let ran = ran.load(Ordering::Relaxed);
+    assert!(
+        ran * 10 >= cases * 7,
+        "only {ran}/{cases} chaos timelines were feasible — the generator drifted"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic pins: warm resume and the shock window
+// ---------------------------------------------------------------------------
+
+/// Notice at 15 with a 2-round drain, resume at 25: the job parks
+/// gracefully (no forced stop in lockstep), is funded by ZERO decisions
+/// inside the gap, and comes back warm — identical refit and sheltered
+/// counts to a chaos-free baseline of the same fleet.
+#[test]
+fn preempted_job_resumes_warm_with_a_frozen_estimator() {
+    let base = FleetConfig {
+        global_budget_bytes: 16 * GIB,
+        steps: 40,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        seed: 7,
+        ..Default::default()
+    };
+    let mut chaos = base.clone();
+    chaos.events = vec![
+        FleetEvent::Preempt { job: "TC-Bert#0".into(), at_round: 15, drain_rounds: 2 },
+        FleetEvent::Resume { job: "TC-Bert#0".into(), at_round: 25 },
+    ];
+    let baseline = FleetScheduler::new(base).expect("feasible").run();
+    let r = FleetScheduler::new(chaos).expect("feasible").run();
+    assert_eq!((r.preemptions, r.shocks), (1, 0));
+    assert_eq!(r.forced_stops, 0, "a 2-round drain must park gracefully in lockstep");
+
+    let j = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+    let jb = baseline.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
+    assert_eq!(j.refits, jb.refits, "warm re-admission must not refit the estimator");
+    assert_eq!(
+        j.sheltered_iters, jb.sheltered_iters,
+        "warm re-admission must not re-enter sheltered collection"
+    );
+    assert_eq!(j.oom_failures, 0);
+    assert_eq!(j.steps, 30, "the 10-round parked gap costs exactly 10 iterations");
+    assert_eq!(j.departed_round, None, "resumed and live at the fleet's end");
+
+    // lockstep iterations end on tick boundaries, so the park is immediate:
+    // the job is out of every fill from the notice until its resume — a
+    // draining job never receives new slack
+    for d in &r.rounds {
+        assert_eq!(
+            d.job_ids.contains(&j.id),
+            !(15..25).contains(&d.round),
+            "round {}: wrong funding for the preempted job",
+            d.round
+        );
+    }
+    check_chaos_invariants(&r).unwrap();
+}
+
+/// A shock to 12 GiB at round 10 and a restore at 20: every decision
+/// carries the global in force when it fired (the shock ranks before the
+/// instant's fill, so the shock round already sees the new budget), the
+/// ledger obeys the shrunken budget throughout the window, and a roomy
+/// shock needs no forced stops.
+#[test]
+fn budget_shock_rebinds_the_global_and_restores() {
+    let cfg = FleetConfig {
+        global_budget_bytes: 16 * GIB,
+        steps: 30,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        events: vec![
+            FleetEvent::Shock { at_round: 10, global_budget_bytes: 12 * GIB },
+            FleetEvent::Shock { at_round: 20, global_budget_bytes: 16 * GIB },
+        ],
+        seed: 19,
+        ..Default::default()
+    };
+    let r = FleetScheduler::new(cfg).expect("feasible").run();
+    assert_eq!(r.shocks, 2);
+    assert_eq!(r.forced_stops, 0, "12 GiB holds both tenants' floors");
+    for d in &r.rounds {
+        let expect = if (10..20).contains(&d.round) { 12 * GIB } else { 16 * GIB };
+        assert_eq!(d.global, expect, "round {}: wrong in-force global", d.round);
+    }
+    for j in &r.jobs {
+        assert_eq!(j.steps, 30, "{} lost iterations to a roomy shock", j.name);
+    }
+    check_chaos_invariants(&r).unwrap();
+}

@@ -131,6 +131,61 @@ fn lockstep_is_bit_identical_to_the_round_loop() {
     );
 }
 
+/// The chaos machinery (drain state, shock recovery, due partitioning)
+/// must be invisible when no chaos is scripted: trace-generated
+/// arrival/departure timelines still run bit-identical between the legacy
+/// round loop and the lockstep event core, and every chaos counter stays
+/// at zero.
+#[test]
+fn chaos_free_traces_stay_bit_identical_with_zero_chaos_counters() {
+    forall(
+        43,
+        6,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let max_round = rng.range_u(10, 16);
+            let trace = TraceConfig {
+                interarrival: Interarrival::Exponential { mean_rounds: rng.range_f(3.0, 7.0) },
+                length: JobLength::Uniform { lo: 3, hi: 8 },
+                scripted_departures: rng.f64() < 0.5,
+                ..TraceConfig::new(vec![Task::TcBert, Task::McRoberta], max_round, seed ^ 0x7ace)
+            };
+            let cfg = FleetConfig {
+                global_budget_bytes: 48 * GIB,
+                steps: max_round,
+                jobs: JobSpec::from_tasks(&[Task::TcBert]),
+                events: trace::generate(&trace),
+                seed: seed ^ 0xcafe,
+                ..Default::default()
+            };
+            let rounds = match run_with(cfg.clone(), Pacing::Rounds) {
+                Ok(r) => r,
+                Err(_) => {
+                    ensure(
+                        run_with(cfg, Pacing::Lockstep).is_err(),
+                        "round loop rejected a trace the event core accepts",
+                    )?;
+                    return Ok(());
+                }
+            };
+            let lockstep = run_with(cfg, Pacing::Lockstep)
+                .map_err(|e| format!("event core rejected a feasible trace: {e}"))?;
+            ensure(
+                fingerprint(&rounds) == fingerprint(&lockstep),
+                "the chaos refactor leaked into a chaos-free trace",
+            )?;
+            for r in [&rounds, &lockstep] {
+                ensure(
+                    r.preemptions == 0 && r.shocks == 0 && r.forced_stops == 0,
+                    "chaos counters moved without chaos events",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The same contract on the contended showcase workload, in both
 /// arbitration modes — a deterministic anchor next to the property above.
 #[test]
