@@ -14,19 +14,21 @@
 mod common;
 
 use common::{rule, write_bench_json_with_metrics, write_tsv};
-use mimose::config::{ExperimentConfig, MimoseConfig, PlannerKind, Task};
+use mimose::config::{ExperimentConfig, FleetConfig, JobSpec, MimoseConfig, PlannerKind, Task};
 use mimose::engine::sim::SimEngine;
 use mimose::estimator::{MemoryEstimator, Sample};
-use mimose::fleet::{EventKind, EventQueue};
+use mimose::fleet::{EventKind, EventQueue, FleetScheduler};
 use mimose::memory::CachingAllocator;
-use mimose::model::{seq2seq_profile, transformer_profile, Stage, StageKind};
-use mimose::planners::{greedy_feasible_plan, optimal_chain_plan, optimal_graph_plan};
+use mimose::model::{seq2seq_profile, transformer_profile, Stage, StageGraph, StageKind};
+use mimose::planners::{greedy_feasible_plan, optimal_chain_plan, optimal_graph_plan, ChainFrontier};
 use mimose::scheduler::{greedy_schedule, schedule_graph, Plan, PlanCache, StageEst};
 use mimose::util::graphgen::{self, GenConfig};
 use mimose::util::rng::Rng;
+use mimose::util::threadpool::{available_parallelism, ThreadPool};
 use mimose::util::timer::{bench, black_box};
 use mimose::util::GIB;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 const BUDGET: Duration = Duration::from_millis(400);
 
@@ -312,6 +314,187 @@ fn main() {
         200.0
     );
 
+    rule("Perf — cohort-parallel planning (same-instant fleet burst)");
+    // 64 novel-shape tenants arriving in one event cohort, each needing a
+    // 200-stage graph schedule. The fleet solves these on the shared pool;
+    // the bench pins both the speedup and the bit-identity of the merge.
+    let mk_chain = |salt: u64| -> (Arc<StageGraph>, Arc<Vec<u64>>, u64) {
+        let stages: Vec<Stage> = (0..200)
+            .map(|i| Stage {
+                id: i,
+                name: String::new(),
+                kind: StageKind::Encoder,
+                fwd_order: i,
+                act_bytes: 100_000_000 + ((i as u64 + salt) % 11) * 1_000_000,
+                ckpt_bytes: 8_000_000,
+                fwd_flops: 1_000_000 + ((i as u64 + salt) % 5) * 100_000,
+                transient_bytes: 0,
+            })
+            .collect();
+        let est: Vec<u64> = stages.iter().map(|s| s.act_bytes).collect();
+        (Arc::new(StageGraph::chain(stages)), Arc::new(est), 5_000_000_000 + salt * 17_000_000)
+    };
+    let cohort: Vec<(Arc<StageGraph>, Arc<Vec<u64>>, u64)> = (0..64u64).map(mk_chain).collect();
+    let pool = ThreadPool::new(8);
+    let (mut serial_s, mut parallel_s) = (f64::INFINITY, f64::INFINITY);
+    let (mut serial_out, mut parallel_out) = (Vec::new(), Vec::new());
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        serial_out = cohort.iter().map(|(g, e, x)| schedule_graph(g, e, *x, 0.10)).collect();
+        serial_s = serial_s.min(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        parallel_out = pool.map(cohort.clone(), |(g, e, x)| schedule_graph(&g, &e, x, 0.10));
+        parallel_s = parallel_s.min(t0.elapsed().as_secs_f64());
+    }
+    assert_eq!(serial_out, parallel_out, "parallel cohort must be bit-identical to serial");
+    let cohort_plan_speedup = serial_s / parallel_s.max(1e-12);
+    let cores = available_parallelism();
+    println!(
+        "cohort of 64 on 8 threads ({cores} cores): {:.2}x ({:.1} ms serial vs {:.1} ms parallel)",
+        cohort_plan_speedup,
+        serial_s * 1e3,
+        parallel_s * 1e3
+    );
+    if cores >= 4 {
+        assert!(
+            cohort_plan_speedup >= 1.5,
+            "cohort planning speedup regressed below 1.5x on a {cores}-core host: {cohort_plan_speedup:.2}x"
+        );
+    } else if cores >= 2 {
+        assert!(
+            cohort_plan_speedup >= 1.05,
+            "cohort planning gained nothing from {cores} cores: {cohort_plan_speedup:.2}x"
+        );
+    } else {
+        println!("single-core host: recording cohort_plan_speedup without a floor");
+    }
+
+    rule("Perf — budget-incremental chain DP");
+    // the broker rebinds budgets far more often than inputs change shape:
+    // one frontier sweep answers every budget in the shock sequence, and
+    // must agree with the from-scratch DP bit for bit (also pinned in
+    // tests/plan_fastpath.rs over randomized sweeps)
+    let n_limits = 64u64;
+    let total_act = profile.total_act_bytes();
+    let limits: Vec<u64> = (0..n_limits)
+        .map(|i| profile.fixed_bytes + total_act * (i + 1) / (n_limits + 1))
+        .collect();
+    let frontier = ChainFrontier::build(&profile);
+    for &lim in &limits {
+        match (optimal_chain_plan(&profile, lim), frontier.answer(&profile, lim)) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.plan, b.plan, "frontier diverged at limit {lim}");
+                assert_eq!(a.recompute_flops, b.recompute_flops);
+                assert_eq!(a.peak_bytes, b.peak_bytes);
+            }
+            _ => panic!("feasibility disagreement at limit {lim}"),
+        }
+    }
+    let (mut scratch_s, mut incr_s) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for &lim in &limits {
+            black_box(optimal_chain_plan(black_box(&profile), lim));
+        }
+        scratch_s = scratch_s.min(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        let f = ChainFrontier::build(black_box(&profile));
+        for &lim in &limits {
+            black_box(f.answer(&profile, lim));
+        }
+        incr_s = incr_s.min(t0.elapsed().as_secs_f64());
+    }
+    let incremental_dp_speedup = scratch_s / incr_s.max(1e-12);
+    println!(
+        "64-budget sweep: {:.1}x (from-scratch {:.2} ms vs frontier {:.2} ms)",
+        incremental_dp_speedup,
+        scratch_s * 1e3,
+        incr_s * 1e3
+    );
+    assert!(
+        incremental_dp_speedup >= 2.0,
+        "incremental DP speedup regressed below 2x: {incremental_dp_speedup:.2}x"
+    );
+
+    rule("Perf — fleet arrival burst (engine memo pooling)");
+    // a departing tenant donates its per-shape memos; an arrival of the
+    // same task must see cache hits, not fresh profile construction
+    let mk_engine = || {
+        let mut c = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
+        c.mimose = MimoseConfig { collect_iters: 1, ..Default::default() };
+        SimEngine::new(c).unwrap()
+    };
+    let burst: Vec<(usize, usize)> = (0..64).map(|i| (32, 80 + i * 4)).collect();
+    let mut donor = mk_engine();
+    for &s in &burst {
+        black_box(donor.profile_for_shape(s));
+    }
+    let mut cold_arrival = mk_engine();
+    let t0 = Instant::now();
+    for &s in &burst {
+        black_box(cold_arrival.profile_for_shape(s));
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+    let mut warm_arrival = mk_engine();
+    warm_arrival.adopt_shape_memos(donor.take_shape_memos());
+    let t0 = Instant::now();
+    for &s in &burst {
+        black_box(warm_arrival.profile_for_shape(s));
+    }
+    let warm_s = t0.elapsed().as_secs_f64();
+    let arrival_adopt_speedup = cold_s / warm_s.max(1e-12);
+    println!(
+        "64-shape arrival burst: {:.0}x (cold {:.1} us vs adopted {:.1} us)",
+        arrival_adopt_speedup,
+        cold_s * 1e6,
+        warm_s * 1e6
+    );
+    assert!(
+        arrival_adopt_speedup >= 2.0,
+        "adopted memos no faster than cold profile builds: {arrival_adopt_speedup:.2}x"
+    );
+
+    rule("Perf — fleet warm start (persisted plan cache)");
+    // run -> save -> restart: the frozen equal split keeps budgets constant
+    // across runs, so the reloaded cache must cover every iteration of the
+    // restarted fleet — zero sheltered collection, by construction
+    let tmp = std::env::temp_dir()
+        .join(format!("mimose-bench-warm-{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let warm_fleet_cfg = || FleetConfig {
+        global_budget_bytes: 12 * GIB,
+        steps: 40,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        seed: 11,
+        arbitrated: false,
+        ..Default::default()
+    };
+    let mut cold_fleet = FleetScheduler::new(warm_fleet_cfg()).unwrap();
+    let t0 = Instant::now();
+    let r1 = cold_fleet.run();
+    let cold_run_s = t0.elapsed().as_secs_f64();
+    cold_fleet.save_cache(&tmp).unwrap();
+    let cold_sheltered: usize = r1.jobs.iter().map(|j| j.sheltered_iters).sum();
+    assert!(cold_sheltered > 0, "the cold fleet must shelter while collecting");
+    let mut warm_cfg = warm_fleet_cfg();
+    warm_cfg.mimose.cache_path = tmp.clone();
+    let mut warm_fleet = FleetScheduler::new(warm_cfg).unwrap();
+    assert!(warm_fleet.warm_loaded(), "the persisted cache must load warm");
+    let t0 = Instant::now();
+    let r2 = warm_fleet.run();
+    let warm_run_s = t0.elapsed().as_secs_f64();
+    let _ = std::fs::remove_file(&tmp);
+    let warm_start_sheltered_iters: usize = r2.jobs.iter().map(|j| j.sheltered_iters).sum();
+    println!(
+        "warm restart: {warm_start_sheltered_iters} sheltered iters (cold run: {cold_sheltered}); \
+         run {:.1} ms cold vs {:.1} ms warm",
+        cold_run_s * 1e3,
+        warm_run_s * 1e3
+    );
+    assert_eq!(warm_start_sheltered_iters, 0, "a warm-started fleet must never shelter");
+
     write_tsv("perf_hotpaths", "bench\tmean_us\tp50_us\tp99_us", &rows);
     write_bench_json_with_metrics(
         "hotpaths",
@@ -325,6 +508,10 @@ fn main() {
             ("obs_overhead_ratio", obs_overhead_ratio),
             ("broker_incremental_ratio", broker_incremental_ratio),
             ("plan_cache_hit_rate", plan_cache_hit_rate),
+            ("cohort_plan_speedup", cohort_plan_speedup),
+            ("incremental_dp_speedup", incremental_dp_speedup),
+            ("arrival_adopt_speedup", arrival_adopt_speedup),
+            ("warm_start_sheltered_iters", warm_start_sheltered_iters as f64),
         ],
     );
 }

@@ -303,6 +303,12 @@ pub struct MimoseConfig {
     pub cache_capacity: usize,
     /// Memory reserved against fragmentation (paper §6.4: 0.5–1 GB).
     pub reserve_bytes: u64,
+    /// Plan-cache persistence path (empty = memory-only). When set, the
+    /// fleet loads the shared plan cache from this file at startup (warm
+    /// start: re-admitted tenants skip sheltered collection) and writes it
+    /// back at the end of the run. The `--cache-in`/`--cache-out` CLI flags
+    /// override the two directions independently.
+    pub cache_path: String,
 }
 
 impl Default for MimoseConfig {
@@ -313,6 +319,7 @@ impl Default for MimoseConfig {
             cache_tolerance: 0.05,
             cache_capacity: 0,
             reserve_bytes: GIB,
+            cache_path: String::new(),
         }
     }
 }
@@ -326,6 +333,7 @@ impl MimoseConfig {
             cache_tolerance: doc.get_f64("mimose.cache_tolerance", 0.05),
             cache_capacity: doc.get_usize("mimose.cache_capacity", 0),
             reserve_bytes: (doc.get_f64("mimose.reserve_gb", 1.0) * GIB as f64) as u64,
+            cache_path: doc.get_str("mimose.cache_path", ""),
         }
     }
 }
@@ -687,6 +695,9 @@ pub struct FleetConfig {
     /// instant `at_round * tick_ms`, and the run horizon is
     /// `steps * tick_ms`. Only `Profiled` pacing consumes it.
     pub tick_ms: f64,
+    /// Worker threads for cohort-parallel planning (0 = auto: the host's
+    /// `available_parallelism`). 1 disables off-thread planning entirely.
+    pub plan_threads: usize,
     pub mimose: MimoseConfig,
     pub coordinator: CoordinatorConfig,
     pub obs: ObsConfig,
@@ -708,6 +719,7 @@ impl Default for FleetConfig {
             seed: 42,
             pacing: Pacing::Lockstep,
             tick_ms: 200.0,
+            plan_threads: 0,
             mimose: MimoseConfig::default(),
             coordinator: CoordinatorConfig::default(),
             obs: ObsConfig::default(),
@@ -810,6 +822,7 @@ impl FleetConfig {
                 }
                 t
             },
+            plan_threads: doc.get_usize("fleet.plan_threads", d.plan_threads),
             mimose: MimoseConfig::from_doc(doc),
             coordinator: CoordinatorConfig::from_doc(doc),
             obs: ObsConfig::from_doc(doc),
@@ -956,6 +969,19 @@ mod tests {
         let doc = Doc::parse("[mimose]\ncache_capacity = 64\n").unwrap();
         assert_eq!(MimoseConfig::from_doc(&doc).cache_capacity, 64);
         assert_eq!(MimoseConfig::default().cache_capacity, 0, "default unbounded");
+    }
+
+    #[test]
+    fn cache_path_and_plan_threads_from_toml() {
+        let doc = Doc::parse(
+            "[fleet]\nplan_threads = 4\n[mimose]\ncache_path = \"plans.json\"\n",
+        )
+        .unwrap();
+        let c = FleetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.plan_threads, 4);
+        assert_eq!(c.mimose.cache_path, "plans.json");
+        assert_eq!(FleetConfig::default().plan_threads, 0, "default auto");
+        assert!(MimoseConfig::default().cache_path.is_empty(), "default memory-only");
     }
 
     #[test]

@@ -40,7 +40,7 @@ use crate::collector::{Collector, Observation};
 use crate::config::{CoordinatorConfig, MimoseConfig};
 use crate::estimator::MemoryEstimator;
 use crate::obs;
-use crate::model::{InputKey, ModelProfile};
+use crate::model::{InputKey, ModelProfile, StageGraph};
 use crate::planners::{
     checkpointable, usable_activation_budget, InputDesc, IterationMode, PlanDecision,
 };
@@ -167,6 +167,27 @@ pub fn observations_from_profile<F: Fn(u64) -> f64>(
         .collect()
 }
 
+/// A self-contained planning problem extracted from a Coordinator so it can
+/// be solved off-thread. Everything Algorithm 1 needs is copied in — the
+/// per-stage byte estimates are already evaluated, the graph is cloned plain
+/// data — so `solve()` is a pure function, `Send`, and bit-identical to the
+/// serial `generate_plan` path for the same key.
+pub struct PlanRequest {
+    /// Quantised cache key the solved plan must be stashed under.
+    pub plan_key: SizeKey,
+    est: Vec<u64>,
+    excess: u64,
+    bucket_tolerance: f64,
+    graph: StageGraph,
+}
+
+impl PlanRequest {
+    /// Run Algorithm 1 (`schedule_graph`) on the extracted problem.
+    pub fn solve(&self) -> Plan {
+        schedule_graph(&self.graph, &self.est, self.excess, self.bucket_tolerance)
+    }
+}
+
 /// The online-training orchestrator: collector -> estimator -> scheduler ->
 /// cache, behind one `begin_iteration` / `end_iteration` seam.
 pub struct Coordinator {
@@ -203,6 +224,17 @@ pub struct Coordinator {
     pub shared_hits: u64,
     /// Mid-run budget rebinds that invalidated the plan cache.
     pub budget_changes: u64,
+    /// A plan solved off-thread by the cohort-parallel planner, waiting for
+    /// the iteration it was solved for. Taken (and possibly dropped) at the
+    /// top of every `begin_iteration` so a reshelter, retrain, or key change
+    /// between stash and use can never serve a stale plan.
+    pending_plan: Option<(SizeKey, Plan)>,
+    /// Warm-start mode: a disk-loaded shared cache may hold plans for keys
+    /// this job has never sheltered — serve them instead of re-sheltering.
+    warm_start: bool,
+    /// Plans served from the shared cache in warm-start mode without any
+    /// sheltered collection (restart-with-cache hits).
+    pub warm_hits: u64,
 }
 
 impl Coordinator {
@@ -229,6 +261,9 @@ impl Coordinator {
             shared_inserted: Vec::new(),
             shared_hits: 0,
             budget_changes: 0,
+            pending_plan: None,
+            warm_start: false,
+            warm_hits: 0,
         }
     }
 
@@ -252,7 +287,18 @@ impl Coordinator {
         }
         self.budget = new_budget;
         self.cache.clear();
+        // any off-thread plan in flight was solved against the old budget
+        self.pending_plan = None;
         self.budget_changes += 1;
+    }
+
+    /// Enable warm-start mode: the shared cache was loaded from disk and may
+    /// hold plans for keys this job has never sheltered. When a quantised
+    /// key (or a dominating larger-input, tighter-budget entry) is present,
+    /// the plan is served directly and sheltered collection is skipped — a
+    /// restarted fleet re-admits tenants with zero sheltered iterations.
+    pub fn set_warm_start(&mut self, on: bool) {
+        self.warm_start = on;
     }
 
     /// Wire this Coordinator into a fleet's cross-job plan cache.
@@ -376,9 +422,94 @@ impl Coordinator {
         schedule_graph(&profile.graph, &est, excess, self.cfg.bucket_tolerance)
     }
 
+    /// Would the next `begin_iteration(input, profile)` run Algorithm 1?
+    /// If so, extract the planning problem so it can be solved off-thread
+    /// (cohort-parallel fleet planning). Returns `None` whenever the
+    /// iteration would shelter, reshelter, train the estimator first, or be
+    /// served from a cache — exactly the cases where solving ahead would
+    /// either waste work or produce a plan the serial path would not.
+    /// Read-only: no stats, no LRU touches, no phase changes.
+    pub fn peek_plan_request(&self, input: &InputDesc, profile: &ModelProfile) -> Option<PlanRequest> {
+        let key = input.key();
+        if self.collector.wants_collection(key) {
+            return None; // sheltered collection runs the conservative plan
+        }
+        if self.ccfg.reshelter_on_novel && self.collector.is_frozen() && !self.collector.seen(key) {
+            return None; // this iteration reshelters instead of planning
+        }
+        if !self.estimator_ready {
+            return None; // the serial path trains first; predicting now would differ
+        }
+        let plan_key = quantize_key(key, self.cfg.cache_tolerance);
+        if self.cache.contains(plan_key) {
+            return None; // local cache hit: nothing to solve
+        }
+        if let Some((shared, sig)) = &self.shared {
+            if shared.borrow().peek(*sig, plan_key, self.budget) {
+                return None; // shared-cache reuse: the iteration will not replan
+            }
+        }
+        // mirror generate_plan's arithmetic exactly — the solved plan must be
+        // bit-identical to what the serial miss path would produce
+        let feat = (plan_key.0 as f64, plan_key.1 as f64);
+        let est: Vec<u64> = profile
+            .layers()
+            .iter()
+            .map(|s| self.estimator.predict_bytes_key(s.id, feat) as u64)
+            .collect();
+        let est_total: u64 = checkpointable(profile).iter().map(|c| est[c.id()]).sum();
+        let usable = usable_activation_budget(self.budget, profile, self.cfg.reserve_bytes);
+        let excess = est_total.saturating_sub(usable);
+        Some(PlanRequest {
+            plan_key,
+            est,
+            excess,
+            bucket_tolerance: self.cfg.bucket_tolerance,
+            graph: profile.graph.clone(),
+        })
+    }
+
+    /// Hand a plan solved off-thread back to this Coordinator. The next
+    /// `begin_iteration` consumes it instead of re-running Algorithm 1 —
+    /// but only if its quantised key still matches and nothing (reshelter,
+    /// retrain, budget rebind) invalidated it in between; otherwise the
+    /// stash is silently dropped and the serial path runs as usual.
+    pub fn stash_plan(&mut self, key: SizeKey, plan: Plan) {
+        self.pending_plan = Some((key, plan));
+    }
+
+    /// Backfill the shared cache with a plan for `input` before persisting
+    /// it ([`crate::scheduler::SharedPlanCache::save_to_path`]): keys first
+    /// seen during sheltered collection never got an organic insert, so
+    /// without this a restarted fleet would re-shelter exactly those keys.
+    /// Runs *after* the fleet's horizon — it never changes live dynamics.
+    /// No-op (false) until the estimator is trained, without a shared cache,
+    /// or when the cache already holds the (key, budget) cell.
+    pub fn export_plan(&mut self, input: &InputDesc, profile: &ModelProfile) -> bool {
+        if !self.estimator_ready {
+            return false;
+        }
+        let (shared, sig) = match &self.shared {
+            Some((h, s)) => (h.clone(), *s),
+            None => return false,
+        };
+        let plan_key = quantize_key(input.key(), self.cfg.cache_tolerance);
+        if shared.borrow().peek(sig, plan_key, self.budget) {
+            return false;
+        }
+        let plan = self.generate_plan(plan_key, profile);
+        shared.borrow_mut().insert(sig, plan_key, self.budget, plan);
+        self.shared_inserted.push((plan_key, self.budget));
+        true
+    }
+
     /// Decide how to run one iteration — the state-machine step.
     pub fn begin_iteration(&mut self, input: &InputDesc, profile: &ModelProfile) -> PlanDecision {
         self.iter += 1;
+        // take the off-thread stash unconditionally: every early return below
+        // (shelter, reshelter, warm hit) must drop it, never save it for a
+        // later iteration it was not solved for
+        let stash = self.pending_plan.take();
         let key = input.key();
         let size = key.primary;
         // Quantise the planning key UP (per axis) to the cache grid so that
@@ -386,6 +517,49 @@ impl Coordinator {
         // (a plan generated for a slightly smaller input could
         // under-checkpoint).
         let plan_key = quantize_key(key, self.cfg.cache_tolerance);
+
+        // ---- warm start (restart with a persisted plan cache) ----
+        // A disk-loaded cache may cover keys this job never sheltered; in
+        // warm-start mode serve those plans up front so the restarted job
+        // skips sheltered collection (and estimator training) entirely.
+        if self.warm_start {
+            if self.cache.contains(plan_key) {
+                let t = Timer::start();
+                let plan = self.cache.lookup_exact(plan_key).expect("contains implies lookup");
+                let planning_ms = t.elapsed_ms();
+                self.plan_ms_total += planning_ms;
+                self.set_phase(Phase::Executing, size);
+                return PlanDecision {
+                    mode: IterationMode::Planned(plan),
+                    planning_ms,
+                    cache_hit: true,
+                    phase: Phase::Executing,
+                };
+            }
+            if let Some((shared, sig)) = &self.shared {
+                let t = Timer::start();
+                // dominating lookup: a plan for an equal-or-larger input at an
+                // equal-or-tighter budget checkpoints at least as much as this
+                // key needs (same monotonicity as quantize-UP), so the exact
+                // cell missing does not force a cold reshelter.
+                let reused = shared.borrow_mut().lookup_dominating(*sig, plan_key, self.budget);
+                if let Some(plan) = reused {
+                    self.cache.insert(plan_key, plan.clone());
+                    self.shared_hits += 1;
+                    self.warm_hits += 1;
+                    obs::inc("coordinator.warm_hits");
+                    let planning_ms = t.elapsed_ms();
+                    self.plan_ms_total += planning_ms;
+                    self.set_phase(Phase::Executing, size);
+                    return PlanDecision {
+                        mode: IterationMode::Planned(plan),
+                        planning_ms,
+                        cache_hit: true,
+                        phase: Phase::Executing,
+                    };
+                }
+            }
+        }
 
         // ---- sheltered execution (§4.2) ----
         let mut shelter = self.collector.wants_collection(key);
@@ -431,6 +605,9 @@ impl Coordinator {
 
         // ---- responsive execution (§4.3-§4.4, §5) ----
         let t = Timer::start();
+        // a stash solved before a retrain used stale estimator fits — only
+        // honour it when the estimator was already trained when it was solved
+        let was_ready = self.estimator_ready;
         if !self.estimator_ready {
             let train_ms = self.estimator.train();
             self.train_ms += train_ms;
@@ -469,7 +646,13 @@ impl Coordinator {
                 };
             }
         }
-        let plan = self.generate_plan(plan_key, profile);
+        let plan = match stash {
+            // `peek_plan_request` mirrored generate_plan exactly, so an
+            // off-thread solve for this key under the still-current estimator
+            // is bit-identical to re-running Algorithm 1 here.
+            Some((k, p)) if k == plan_key && was_ready => p,
+            _ => self.generate_plan(plan_key, profile),
+        };
         self.cache.insert(plan_key, plan.clone());
         if let Some((shared, sig)) = &self.shared {
             shared.borrow_mut().insert(*sig, plan_key, self.budget, plan.clone());
@@ -797,6 +980,121 @@ mod tests {
         assert_eq!(c.transitions().len(), 1, "log must respect the cap");
         assert_eq!(c.stats().transitions, 2, "total still counts dropped entries");
         assert_eq!(c.phase(), Phase::Executing, "phase still advances");
+    }
+
+    #[test]
+    fn warm_start_serves_loaded_plans_without_sheltering() {
+        use crate::scheduler::{model_signature, shared_plan_cache};
+        let shared = shared_plan_cache(0);
+        let sig = model_signature(&spec(), 32, 1.0);
+        let profile = transformer_profile(&spec(), 32, 300, 1.0);
+        let input = InputDesc::new(32, 300);
+        let mut c = coord(false);
+        c.set_shared_cache(shared.clone(), sig);
+        c.set_warm_start(true);
+        // seed the shared cache the way a prior run's --cache-out would have
+        let plan_key = quantize_key(input.key(), c.cfg.cache_tolerance);
+        let seeded = Coordinator::conservative_plan(&profile);
+        shared.borrow_mut().insert(sig, plan_key, c.budget(), seeded.clone());
+
+        // exact-cell warm hit: no shelter, no estimator training
+        let d = c.begin_iteration(&input, &profile);
+        assert_eq!(d.phase, Phase::Executing);
+        assert!(d.cache_hit);
+        assert_eq!(c.warm_hits, 1);
+        assert_eq!(c.refits, 0, "warm resume must not retrain");
+        match d.mode {
+            IterationMode::Planned(p) => assert_eq!(p, seeded),
+            _ => panic!("expected planned mode"),
+        }
+
+        // dominating warm hit: a smaller novel input is covered by the
+        // larger-input, equal-budget entry even though its exact cell is cold
+        let p2 = transformer_profile(&spec(), 32, 200, 1.0);
+        let i2 = InputDesc::new(32, 200);
+        let k2 = quantize_key(i2.key(), c.cfg.cache_tolerance);
+        assert!(!shared.borrow().peek(sig, k2, c.budget()), "exact cell must be cold");
+        let d = c.begin_iteration(&i2, &p2);
+        assert_eq!(d.phase, Phase::Executing);
+        assert_eq!(c.warm_hits, 2);
+        assert_eq!(c.reshelters, 0);
+
+        // without warm start the identical state shelters instead
+        let mut cold = coord(false);
+        cold.set_shared_cache(shared.clone(), sig);
+        let d = cold.begin_iteration(&input, &profile);
+        assert!(matches!(d.mode, IterationMode::Sheltered(_)));
+    }
+
+    #[test]
+    fn peek_and_stash_match_the_serial_path() {
+        let mut serial = coord(false);
+        let mut par = coord(false);
+        warmup(&mut serial);
+        warmup(&mut par);
+        // first iteration trains the estimator, so its peek must decline;
+        // repeats must decline on the cache; novel sizes must solve ahead
+        for seq in [200, 250, 200, 330, 410, 250] {
+            let profile = transformer_profile(&spec(), 32, seq, 1.0);
+            let input = InputDesc::new(32, seq);
+            if let Some(req) = par.peek_plan_request(&input, &profile) {
+                let plan = req.solve(); // the "off-thread" solve
+                par.stash_plan(req.plan_key, plan);
+            }
+            let ds = serial.begin_iteration(&input, &profile);
+            let dp = par.begin_iteration(&input, &profile);
+            assert_eq!(ds.phase, dp.phase, "phase diverged at seq {seq}");
+            assert_eq!(ds.cache_hit, dp.cache_hit, "hit diverged at seq {seq}");
+            match (ds.mode, dp.mode) {
+                (IterationMode::Planned(a), IterationMode::Planned(b)) => assert_eq!(a, b),
+                (IterationMode::Sheltered(a), IterationMode::Sheltered(b)) => assert_eq!(a, b),
+                _ => panic!("modes diverged at seq {seq}"),
+            }
+        }
+        assert_eq!(serial.plans_generated, par.plans_generated);
+        assert_eq!(serial.cache().stats().hits, par.cache().stats().hits);
+        assert_eq!(serial.cache().stats().misses, par.cache().stats().misses);
+        assert_eq!(serial.refits, par.refits);
+    }
+
+    #[test]
+    fn stale_stash_is_dropped_not_served() {
+        let mut c = coord(false);
+        warmup(&mut c);
+        let p300 = transformer_profile(&spec(), 32, 300, 1.0);
+        let i300 = InputDesc::new(32, 300);
+        let _ = c.begin_iteration(&i300, &p300); // trains the estimator
+        assert!(
+            c.peek_plan_request(&i300, &p300).is_none(),
+            "cached key must not request a solve"
+        );
+
+        // a stash under the wrong key is dropped, not served
+        c.stash_plan((1, 1), Plan::of([0usize]));
+        let p250 = transformer_profile(&spec(), 32, 250, 1.0);
+        let i250 = InputDesc::new(32, 250);
+        match c.begin_iteration(&i250, &p250).mode {
+            IterationMode::Planned(p) => assert_ne!(p, Plan::of([0usize])),
+            _ => panic!("expected planned"),
+        }
+
+        // a budget rebind between stash and use invalidates the stash even
+        // when the key matches: the served plan must be the tight-budget one
+        let p512 = transformer_profile(&spec(), 32, 512, 1.0);
+        let i512 = InputDesc::new(32, 512);
+        let req = c.peek_plan_request(&i512, &p512).expect("novel key requests a solve");
+        let loose = req.solve();
+        c.stash_plan(req.plan_key, loose.clone());
+        c.set_budget(4 * GIB);
+        match c.begin_iteration(&i512, &p512).mode {
+            IterationMode::Planned(p) => assert!(
+                p.len() > loose.len(),
+                "4 GiB must checkpoint more than the stashed 6 GiB plan ({} vs {})",
+                p.len(),
+                loose.len()
+            ),
+            _ => panic!("expected planned"),
+        }
     }
 
     // ---- two-axis (seq2seq) coordination ----

@@ -11,4 +11,4 @@ pub mod sim;
 pub mod vision;
 
 pub use optimizer::{Adam, AdamConfig};
-pub use sim::{CostModel, SimEngine, SimError};
+pub use sim::{CostModel, ShapeMemos, SimEngine, SimError};

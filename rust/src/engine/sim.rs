@@ -131,6 +131,32 @@ pub struct SimEngine {
     component_cache: std::collections::BTreeMap<(usize, usize), std::rc::Rc<Vec<Vec<u64>>>>,
 }
 
+/// The recyclable part of a retired [`SimEngine`]: its per-shape profile
+/// and component memo caches. Shapes repeat across tenants of the same
+/// task, so handing these to a new arrival skips the profile-construction
+/// cost of its first sight of every shape the donor already saw.
+pub struct ShapeMemos {
+    task: Task,
+    profiles: std::collections::BTreeMap<(usize, usize), std::rc::Rc<ModelProfile>>,
+    components: std::collections::BTreeMap<(usize, usize), std::rc::Rc<Vec<Vec<u64>>>>,
+}
+
+impl ShapeMemos {
+    /// The task the donor engine ran — memos only apply to the same task.
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    /// Number of memoised shapes (profile entries).
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+}
+
 #[derive(Debug)]
 pub enum SimError {
     FixedStateOom(OomError),
@@ -210,6 +236,58 @@ impl SimEngine {
         self.ledger.set_budget(budget);
         self.planner.set_budget(budget);
         self.cfg.budget_bytes = budget;
+    }
+
+    /// Detach this engine's per-shape memo caches so a departing tenant's
+    /// work can seed a later same-task arrival (fleet engine pooling).
+    /// Profiles and component sets are pure functions of (task, shape) —
+    /// planner, estimator, ledger and input-stream state never ride along,
+    /// so a recycled engine is behaviourally identical to a cold one.
+    pub fn take_shape_memos(&mut self) -> ShapeMemos {
+        ShapeMemos {
+            task: self.cfg.task,
+            profiles: std::mem::take(&mut self.profile_cache),
+            components: std::mem::take(&mut self.component_cache),
+        }
+    }
+
+    /// Seed the per-shape memo caches from a retired donor. No-op when the
+    /// donor ran a different task (its shapes describe another
+    /// architecture). Shapes this engine already memoised itself keep their
+    /// own entries — profiles are pure functions of (task, shape), so either
+    /// copy is identical; keeping ours avoids touching live `Rc` handles.
+    pub fn adopt_shape_memos(&mut self, memos: ShapeMemos) {
+        if memos.task != self.cfg.task {
+            return;
+        }
+        for (shape, p) in memos.profiles {
+            self.profile_cache.entry(shape).or_insert(p);
+        }
+        for (shape, c) in memos.components {
+            self.component_cache.entry(shape).or_insert(c);
+        }
+    }
+
+    /// Backfill the Coordinator's shared plan cache with a plan for every
+    /// shape this engine has seen (its per-shape profile memo is the record
+    /// of them) — the pre-persist step of fleet warm start, so a restarted
+    /// fleet warm-hits even the keys this run only saw while sheltered.
+    /// Returns the number of plans inserted; 0 for non-Mimose planners, an
+    /// untrained estimator, or no shared cache.
+    pub fn export_plans(&mut self) -> usize {
+        let task = self.cfg.task;
+        let shapes: Vec<(usize, usize)> = self.profile_cache.keys().copied().collect();
+        let mut inserted = 0;
+        for shape in shapes {
+            let profile = self.profile_for_shape(shape);
+            let input = input_for(task, shape);
+            if let Some(c) = self.planner.coordinator_mut() {
+                if c.export_plan(&input, &profile) {
+                    inserted += 1;
+                }
+            }
+        }
+        inserted
     }
 
     /// Memo-cache bound: 1-D tasks see a few hundred distinct collated
@@ -802,6 +880,29 @@ mod tests {
         let large: Vec<usize> =
             responsive.iter().filter(|m| m.seqlen >= 224).map(|m| m.n_checkpointed).collect();
         assert!(avg(&small) < avg(&large), "plans must scale with resolution");
+    }
+
+    #[test]
+    fn shape_memos_recycle_across_same_task_engines_only() {
+        let mut donor = SimEngine::new(cfg(Task::TcBert, PlannerKind::Mimose, 6.0, 0)).unwrap();
+        let p_donor = donor.profile_for_shape((300, 0));
+        let memos = donor.take_shape_memos();
+        assert_eq!(memos.task(), Task::TcBert);
+        assert_eq!(memos.len(), 1);
+        assert!(!memos.is_empty());
+        assert!(donor.profile_cache.is_empty(), "take detaches the memos");
+
+        // same-task arrival adopts the donor's memos: the Rc is shared
+        let mut fresh = SimEngine::new(cfg(Task::TcBert, PlannerKind::Mimose, 4.0, 0)).unwrap();
+        fresh.adopt_shape_memos(memos);
+        let p_fresh = fresh.profile_for_shape((300, 0));
+        assert!(std::rc::Rc::ptr_eq(&p_donor, &p_fresh), "adopted memo must be reused");
+
+        // different-task arrival must refuse them (shapes describe another
+        // architecture)
+        let mut qa = SimEngine::new(cfg(Task::QaBert, PlannerKind::Mimose, 6.0, 0)).unwrap();
+        qa.adopt_shape_memos(fresh.take_shape_memos());
+        assert!(qa.profile_cache.is_empty(), "cross-task memos rejected");
     }
 
     #[test]

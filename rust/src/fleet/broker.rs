@@ -106,6 +106,65 @@ struct TenantState {
     trained: bool,
 }
 
+/// Slack-ordered claw-back index: which tenants hold budget above their
+/// floor of record, ordered the way the claw-back takes it — **largest
+/// slack first, ties toward the smaller id**. The old implementation
+/// rebuilt this order with an O(live) scan + sort inside every `update`
+/// claw-back and every `shock`; the index keeps it maintained at the
+/// mutation points instead, so a claw-back touching k holders costs
+/// O(k log live) regardless of fleet size.
+///
+/// Keys are `(slack, u64::MAX - id)` so that reverse iteration yields
+/// slack descending with ties in ascending id — bit-identical to the
+/// `sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)))` it replaces.
+/// Only tenants with slack > 0 are present.
+#[derive(Default)]
+struct SlackIndex {
+    by_slack: std::collections::BTreeSet<(u64, u64)>,
+    /// id -> currently indexed slack, for exact-key removal.
+    slack_of: BTreeMap<u64, u64>,
+}
+
+impl SlackIndex {
+    /// Record `id`'s slack (allocation minus floor of record); zero slack
+    /// removes the entry.
+    fn set(&mut self, id: u64, slack: u64) {
+        if let Some(old) = self.slack_of.remove(&id) {
+            self.by_slack.remove(&(old, u64::MAX - id));
+        }
+        if slack > 0 {
+            self.slack_of.insert(id, slack);
+            self.by_slack.insert((slack, u64::MAX - id));
+        }
+    }
+
+    fn remove(&mut self, id: u64) {
+        if let Some(old) = self.slack_of.remove(&id) {
+            self.by_slack.remove(&(old, u64::MAX - id));
+        }
+    }
+
+    /// Drop every id not present in `sorted_ids` (ascending) — the full
+    /// fill's wholesale-reclaim companion.
+    fn retain_live(&mut self, sorted_ids: &[u64]) {
+        let dead: Vec<u64> = self
+            .slack_of
+            .keys()
+            .filter(|id| sorted_ids.binary_search(id).is_err())
+            .copied()
+            .collect();
+        for id in dead {
+            self.remove(id);
+        }
+    }
+
+    /// `(id, slack)` in claw-back order: largest slack first, ties toward
+    /// the smaller id.
+    fn claw_order(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.by_slack.iter().rev().map(|&(slack, rid)| (u64::MAX - rid, slack))
+    }
+}
+
 /// Stateful arbiter over one global budget (see module docs).
 pub struct BudgetBroker {
     global: u64,
@@ -130,6 +189,9 @@ pub struct BudgetBroker {
     /// Multiset of live weights keyed by `f64::to_bits` — O(1) uniformity
     /// check for the equal-split-until-trained rule.
     weight_hist: BTreeMap<u64, usize>,
+    /// Tenants holding budget above their floor of record, in claw-back
+    /// order — replaces the O(live) holder scan in `update`/`shock`.
+    slack_index: SlackIndex,
     /// Rounds where demand overshot the device and slack was clawed back.
     pub overshoots: u64,
     /// Total allocate() calls.
@@ -190,6 +252,7 @@ impl BudgetBroker {
             floor_sum_live: 0,
             trained_count: 0,
             weight_hist: BTreeMap::new(),
+            slack_index: SlackIndex::default(),
             overshoots: 0,
             decisions: 0,
             decision_ms: Summary::new(),
@@ -244,6 +307,7 @@ impl BudgetBroker {
         // made this reclaim O(jobs²) per decision
         self.smoothed.retain(|id, _| sorted_ids.binary_search(id).is_ok());
         self.current.retain(|id, _| sorted_ids.binary_search(id).is_ok());
+        self.slack_index.retain_live(&sorted_ids);
 
         let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
         let floor_sum: u64 = floors.iter().sum();
@@ -341,6 +405,9 @@ impl BudgetBroker {
                 (d.id, TenantState { weight: d.weight, floor: d.floor, trained: d.predicted.is_some() })
             })
             .collect();
+        for (d, &a) in demands.iter().zip(&alloc) {
+            self.slack_index.set(d.id, a.saturating_sub(d.floor));
+        }
         self.alloc_sum = alloc.iter().sum();
         self.weight_sum = weight_sum;
         self.floor_sum_live = floor_sum;
@@ -379,6 +446,7 @@ impl BudgetBroker {
     /// omitting the id from the next full demand vector).
     pub fn depart(&mut self, id: u64) {
         self.smoothed.remove(&id);
+        self.slack_index.remove(id);
         if let Some(cur) = self.current.remove(&id) {
             self.alloc_sum -= cur;
         }
@@ -421,17 +489,10 @@ impl BudgetBroker {
             return Ok(rebinds);
         }
         // same claw-back order as the incremental fill: largest slack
-        // above the floor of record first, ties broken toward smaller ids
+        // above the floor of record first, ties broken toward smaller ids —
+        // served by the maintained index instead of a full holder scan
         let mut need = self.alloc_sum - new_global;
-        let mut holders: Vec<(u64, u64)> = self
-            .states
-            .iter()
-            .filter_map(|(&id, s)| {
-                let cur = self.current.get(&id).copied().unwrap_or(0);
-                (cur > s.floor).then_some((id, cur - s.floor))
-            })
-            .collect();
-        holders.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let holders: Vec<(u64, u64)> = self.slack_index.claw_order().collect();
         for (id, slack) in holders {
             if need == 0 {
                 break;
@@ -442,6 +503,7 @@ impl BudgetBroker {
             let rebound = *cur;
             self.alloc_sum -= take;
             need -= take;
+            self.slack_index.set(id, slack - take);
             rebinds.push((id, rebound));
         }
         debug_assert!(
@@ -517,6 +579,10 @@ impl BudgetBroker {
                     }
                 }
             }
+            // a refreshed floor of record moves the tenant's indexed slack
+            // (arrivals have no allocation yet: slack 0, no entry)
+            let cur = self.current.get(&d.id).copied().unwrap_or(0);
+            self.slack_index.set(d.id, cur.saturating_sub(d.floor));
         }
         if self.floor_sum_live > self.global {
             return Err(format!(
@@ -538,16 +604,13 @@ impl BudgetBroker {
         let mut clawed = false;
         if due_floor_sum > available {
             let mut need = due_floor_sum - available;
-            let mut holders: Vec<(u64, u64)> = self
-                .states
-                .iter()
+            // the index serves the order directly; due ids are skipped (they
+            // are being refilled here, not clawed back)
+            let holders: Vec<(u64, u64)> = self
+                .slack_index
+                .claw_order()
                 .filter(|(id, _)| sorted_due.binary_search(id).is_err())
-                .filter_map(|(&id, s)| {
-                    let cur = self.current.get(&id).copied().unwrap_or(0);
-                    (cur > s.floor).then_some((id, cur - s.floor))
-                })
                 .collect();
-            holders.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
             for (id, slack) in holders {
                 if need == 0 {
                     break;
@@ -559,6 +622,7 @@ impl BudgetBroker {
                 self.alloc_sum -= take;
                 available += take;
                 need -= take;
+                self.slack_index.set(id, slack - take);
                 rebinds.push((id, rebound));
             }
             clawed = true;
@@ -634,6 +698,7 @@ impl BudgetBroker {
             due.iter().map(|d| self.current.get(&d.id).copied().unwrap_or(0)).sum();
         for (d, &a) in due.iter().zip(&alloc) {
             self.current.insert(d.id, a);
+            self.slack_index.set(d.id, a.saturating_sub(d.floor));
         }
         self.alloc_sum = self.alloc_sum - prev_due_sum + alloc.iter().sum::<u64>();
         debug_assert!(self.alloc_sum <= self.global);
@@ -1191,6 +1256,81 @@ mod tests {
         let f = b.update(&[d(1, GIB, Some(8 * GIB))]).unwrap();
         assert!(f.alloc.budgets[0] <= 6 * GIB);
         assert!(b.alloc_total() <= 6 * GIB);
+    }
+
+    /// The order the pre-index code produced: scan states ∩ current for
+    /// holders above their floor of record, largest slack first, ties to
+    /// the smaller id. Kept as the differential oracle for [`SlackIndex`].
+    fn scan_claw_order(b: &BudgetBroker) -> Vec<(u64, u64)> {
+        let mut holders: Vec<(u64, u64)> = b
+            .states
+            .iter()
+            .filter_map(|(&id, s)| {
+                let cur = b.current.get(&id).copied().unwrap_or(0);
+                (cur > s.floor).then_some((id, cur - s.floor))
+            })
+            .collect();
+        holders.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        holders
+    }
+
+    #[test]
+    fn prop_slack_index_matches_the_holder_scan() {
+        // randomized allocate/update/shock/depart sequences: after every
+        // operation the maintained index must reproduce the scan order
+        // bit-identically (same ids, same slacks, same sequence)
+        forall(
+            83,
+            200,
+            |r| {
+                let ops: Vec<(u8, u64, u64, u64)> = (0..r.range_u(3, 12))
+                    .map(|_| {
+                        (
+                            r.range_u(0, 4) as u8,
+                            r.range_u(0, 5) as u64,
+                            r.range_u(1, 64) as u64 * (1 << 24),
+                            r.range_u(0, 512) as u64 * (1 << 24),
+                        )
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                let global = 16 * GIB;
+                let mut b = BudgetBroker::new(global, 64 << 20, 0.3);
+                let _ = b.allocate(&[
+                    d(0, GIB, Some(6 * GIB)),
+                    d(1, GIB, Some(5 * GIB)),
+                    d(2, GIB, Some(4 * GIB)),
+                ]);
+                for &(op, id, floor, pred) in ops {
+                    let dem = JobDemand {
+                        id,
+                        weight: 1.0,
+                        floor,
+                        predicted: (pred > 0).then_some(pred),
+                    };
+                    match op {
+                        0 => {
+                            let _ = b.update(&[dem]);
+                        }
+                        1 => {
+                            let _ = b.allocate(&[dem, d(99, GIB, Some(2 * GIB))]);
+                        }
+                        2 => {
+                            let _ = b.shock(global - (id + 1) * GIB);
+                        }
+                        _ => b.depart(id),
+                    }
+                    let indexed: Vec<(u64, u64)> = b.slack_index.claw_order().collect();
+                    ensure(
+                        indexed == scan_claw_order(&b),
+                        &format!("index diverged from scan after op {op}: {indexed:?}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -68,12 +68,15 @@ use super::metrics::{BrokerDecision, FleetReport, JobSummary};
 use crate::config::{
     ExperimentConfig, FleetConfig, FleetEvent, JobSpec, Pacing, PlannerKind, Task,
 };
-use crate::coordinator::{Coordinator, Phase};
+use crate::coordinator::{Coordinator, Phase, PlanRequest};
 use crate::data::InputStream;
-use crate::engine::sim::{input_for, SimEngine};
+use crate::engine::sim::{input_for, ShapeMemos, SimEngine};
 use crate::metrics::RunReport;
 use crate::obs;
-use crate::scheduler::{model_signature, shared_plan_cache, SharedCacheHandle};
+use crate::scheduler::{
+    model_signature, shared_plan_cache, SharedCacheHandle, SharedPlanCache,
+};
+use crate::util::threadpool::{available_parallelism, ThreadPool};
 use crate::util::timer::Timer;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
@@ -315,6 +318,14 @@ pub struct FleetScheduler {
     shocks_fired: u64,
     /// Jobs stopped mid-iteration: expired drains plus shock/fill victims.
     forced_stops: u64,
+    /// Shape memos recycled from retired engines, one donor set per task —
+    /// a later same-task arrival adopts them and skips rebuilding profiles
+    /// for every shape the donor already saw (engine pooling).
+    memo_pool: HashMap<Task, ShapeMemos>,
+    /// True when the shared cache was warm-loaded from `mimose.cache_path`:
+    /// every Coordinator runs in warm-start mode and re-admitted tenants
+    /// replan from the persisted plans with zero sheltered iterations.
+    warm_loaded: bool,
 }
 
 impl FleetScheduler {
@@ -603,8 +614,21 @@ impl FleetScheduler {
         // see Coordinator::begin_iteration). Arrivals attach at build time:
         // entries contributed before a signature's departure are retained
         // for its re-arrival.
+        let mut warm_loaded = false;
         let shared = if cfg.shared_cache {
             let handle = shared_plan_cache(cfg.cache_capacity);
+            // persistent warm start: a prior run's plans, scoped by model
+            // signature in every entry, so a restarted fleet re-admits its
+            // tenants without re-sheltering. A missing, corrupt, or
+            // stale-format file degrades to a cold cache, never an error.
+            if !cfg.mimose.cache_path.is_empty() {
+                let (loaded, cold_reason) =
+                    SharedPlanCache::load_from_path(&cfg.mimose.cache_path, cfg.cache_capacity);
+                if cold_reason.is_none() && !loaded.is_empty() {
+                    warm_loaded = true;
+                    *handle.borrow_mut() = loaded;
+                }
+            }
             for job in jobs.iter_mut().chain(pending.iter_mut().map(|p| &mut p.job)) {
                 let sig = model_signature(
                     &job.task.model(),
@@ -613,6 +637,9 @@ impl FleetScheduler {
                 );
                 if let Some(c) = job.engine.coordinator_mut() {
                     c.set_shared_cache(handle.clone(), sig);
+                    if warm_loaded {
+                        c.set_warm_start(true);
+                    }
                 }
             }
             Some(handle)
@@ -639,7 +666,49 @@ impl FleetScheduler {
             preemptions: 0,
             shocks_fired: 0,
             forced_stops: 0,
+            memo_pool: HashMap::new(),
+            warm_loaded,
         })
+    }
+
+    /// True when the shared cache was warm-loaded from `mimose.cache_path`
+    /// at construction (every Coordinator runs in warm-start mode).
+    pub fn warm_loaded(&self) -> bool {
+        self.warm_loaded
+    }
+
+    /// Persist the shared plan cache for a later fleet's warm start
+    /// ([`SharedPlanCache::save_to_path`]). Before serialising, every live
+    /// tenant backfills a plan for each shape it saw
+    /// ([`SimEngine::export_plans`]) — keys first seen while sheltered never
+    /// got an organic insert, and a restarted fleet would re-shelter exactly
+    /// those without the backfill. Ok-no-op when the fleet runs without a
+    /// shared cache.
+    pub fn save_cache(&mut self, path: &str) -> std::io::Result<()> {
+        match &self.shared {
+            Some(h) => {
+                for job in &mut self.jobs {
+                    job.engine.export_plans();
+                }
+                h.borrow().save_to_path(path)
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Bank a retiring job's shape memos for a later same-task arrival.
+    /// Keeping the larger donor set maximises what the next arrival skips.
+    fn pool_engine(memo_pool: &mut HashMap<Task, ShapeMemos>, job: &mut FleetJob) {
+        let memos = job.engine.take_shape_memos();
+        if memos.is_empty() {
+            return;
+        }
+        match memo_pool.get(&memos.task()) {
+            Some(held) if held.len() >= memos.len() => {}
+            _ => {
+                memo_pool.insert(memos.task(), memos);
+            }
+        }
     }
 
     /// Jobs currently live, in arrival order.
@@ -907,6 +976,19 @@ impl FleetScheduler {
         let mut parked: BTreeMap<u64, (FleetJob, usize)> = BTreeMap::new();
         // the device budget in force — budget shocks move it mid-run
         let mut global_now = self.cfg.global_budget_bytes;
+        // cohort-parallel planning: plans are pure functions of
+        // (profile, estimator, budget), so novel shapes across *independent*
+        // tenants solve concurrently. 0 = one worker per available core;
+        // 1 disables the pool (bit-identical serial planning either way —
+        // the parallel path only precomputes what the serial path would).
+        let plan_threads = if self.cfg.plan_threads == 0 {
+            available_parallelism()
+        } else {
+            self.cfg.plan_threads
+        };
+        // spawned lazily: fleets that never see a multi-tenant cohort of
+        // novel shapes pay nothing
+        let mut plan_pool: Option<ThreadPool> = None;
 
         // remove a live job, reclaim its budget, and park it for a possible
         // warm resume; false if the id was not live
@@ -945,13 +1027,14 @@ impl FleetScheduler {
                         // earlier departure (or completion) won — tolerated
                         let id = names.get(&name).copied();
                         if let Some(id) = id {
-                            let job = live.remove(&id).expect("names tracks live jobs");
+                            let mut job = live.remove(&id).expect("names tracks live jobs");
                             names.remove(&name);
                             // a depart mid-drain releases the floor exactly
                             // once: `depart` here, and the dropped notice
                             // makes the pending DrainExpire a no-op
                             draining.remove(&id);
                             self.broker.depart(id);
+                            Self::pool_engine(&mut self.memo_pool, &mut job);
                             self.finished.push(job.summary(Some(round)));
                             if tracing {
                                 obs::with_tracer(|tr| {
@@ -966,12 +1049,19 @@ impl FleetScheduler {
                         {
                             // departing while parked: the budget was already
                             // reclaimed at park time — just retire the job
-                            let (job, _) = parked.remove(&id).expect("just found");
+                            let (mut job, _) = parked.remove(&id).expect("just found");
+                            Self::pool_engine(&mut self.memo_pool, &mut job);
                             self.finished.push(job.summary(Some(round)));
                         }
                     }
                     EventKind::Arrive { id } => {
-                        if let Some(job) = waiting.remove(&id) {
+                        if let Some(mut job) = waiting.remove(&id) {
+                            // engine pooling: adopt a retired same-task
+                            // donor's shape memos so first sight of each
+                            // shape the donor saw skips profile construction
+                            if let Some(memos) = self.memo_pool.remove(&job.task) {
+                                job.engine.adopt_shape_memos(memos);
+                            }
                             let jname = job.name.clone();
                             names.insert(job.name.clone(), id);
                             live.insert(id, job);
@@ -990,10 +1080,11 @@ impl FleetScheduler {
                         match live.get(&id).map(|j| j.completed()) {
                             Some(true) => {
                                 // configured step count reached: retire now
-                                let job = live.remove(&id).expect("checked live");
+                                let mut job = live.remove(&id).expect("checked live");
                                 names.remove(&job.name);
                                 draining.remove(&id);
                                 self.broker.depart(id);
+                                Self::pool_engine(&mut self.memo_pool, &mut job);
                                 self.finished.push(job.summary(Some(round)));
                             }
                             Some(false) => {
@@ -1313,6 +1404,54 @@ impl FleetScheduler {
             for (id, &b) in due.iter().zip(&allocations) {
                 live.get_mut(id).expect("due jobs are live").rebind(b);
             }
+
+            // 3a) cohort-parallel planning: after the rebinds (budgets are
+            //     final for this instant), extract the planning problem of
+            //     every due tenant whose iteration would run Algorithm 1
+            //     (novel quantised key, estimator trained, no cache hit —
+            //     see Coordinator::peek_plan_request), solve them
+            //     concurrently, and stash the results back in job-id order.
+            //     Each stashed plan is bit-identical to what the serial miss
+            //     path would compute, and a stash invalidated between here
+            //     and the step (shared-cache race, reshelter) is silently
+            //     dropped — so Rounds/Lockstep differentials and the chaos
+            //     ledger invariants are untouched.
+            if plan_threads > 1 && due.len() > 1 {
+                let mut requests: Vec<(u64, PlanRequest)> = Vec::new();
+                for &id in &due {
+                    let job = live.get_mut(&id).expect("due jobs are live");
+                    let shape = job.pending.expect("draw_demand precedes planning");
+                    let profile = job.engine.profile_for_shape(shape);
+                    let input = input_for(job.task, shape);
+                    if let Some(req) = job
+                        .engine
+                        .coordinator()
+                        .and_then(|c| c.peek_plan_request(&input, &profile))
+                    {
+                        requests.push((id, req));
+                    }
+                }
+                if requests.len() > 1 {
+                    let timer = Timer::start();
+                    let pool =
+                        plan_pool.get_or_insert_with(|| ThreadPool::new(plan_threads));
+                    let solved =
+                        pool.map(requests, |(id, req)| (id, req.plan_key, req.solve()));
+                    // merge deterministically: `due` is sorted, `map`
+                    // preserves order, so stashes land in job-id order
+                    for (id, key, plan) in solved {
+                        if let Some(c) = live
+                            .get_mut(&id)
+                            .and_then(|j| j.engine.coordinator_mut())
+                        {
+                            c.stash_plan(key, plan);
+                        }
+                    }
+                    obs::inc("planner.parallel_cohort");
+                    obs::observe_ms("planner.plan_ms", timer.elapsed_ms());
+                }
+            }
+
             let mut aggregate_peak = 0u64;
             for (&id, &budget) in due.iter().zip(&allocations) {
                 let job = live.get_mut(&id).expect("due jobs are live");
@@ -1963,5 +2102,128 @@ mod tests {
         // the never-resumed job retires at its park round with 2 steps
         let parked = r.jobs.iter().find(|j| j.name == "TC-Bert#0").unwrap();
         assert_eq!((parked.steps, parked.departed_round), (2, Some(2)));
+    }
+
+    /// Everything deterministic a fleet run produces, for differential pins.
+    fn fingerprint(r: &FleetReport) -> Vec<String> {
+        let mut fp = Vec::new();
+        for j in &r.jobs {
+            fp.push(format!(
+                "job {} steps={} peak={} oom={} sheltered={} shared={} hit={:.6} budget={}",
+                j.name,
+                j.steps,
+                j.peak_bytes,
+                j.oom_failures,
+                j.sheltered_iters,
+                j.shared_hits,
+                j.cache_hit_rate,
+                j.final_budget
+            ));
+        }
+        for d in &r.rounds {
+            fp.push(format!(
+                "round {} ids={:?} alloc={:?} floors={:?} peak={} total={} global={}",
+                d.round, d.job_ids, d.allocations, d.floors, d.aggregate_peak,
+                d.alloc_total, d.global
+            ));
+        }
+        fp
+    }
+
+    #[test]
+    fn cohort_parallel_planning_is_bit_identical_to_serial() {
+        // four tenants, all due every lockstep tick: the parallel planner
+        // precomputes the novel-shape cohort on a pool, the serial run plans
+        // inline — every allocation, peak, and cache statistic must agree,
+        // including under shared-cache cross-tenant reuse (a wasted parallel
+        // solve for a key another tenant inserts first is dropped, not used)
+        let tasks = vec![Task::TcBert, Task::McRoberta, Task::TcBert, Task::McRoberta];
+        let mut serial_cfg = fleet_cfg(tasks.clone(), 24, 50);
+        serial_cfg.plan_threads = 1;
+        let serial = FleetScheduler::new(serial_cfg).unwrap().run();
+        let mut par_cfg = fleet_cfg(tasks, 24, 50);
+        par_cfg.plan_threads = 8;
+        let parallel = FleetScheduler::new(par_cfg).unwrap().run();
+        assert_eq!(fingerprint(&serial), fingerprint(&parallel));
+        assert_eq!(serial.oom_failures(), 0);
+        assert!(serial.jobs.iter().any(|j| j.steps == 50));
+    }
+
+    #[test]
+    fn departed_engines_donate_their_shape_memos() {
+        // a retiring tenant banks its per-shape memos; a later same-task
+        // arrival adopts them (and the run is identical either way — the
+        // memos are pure functions of (task, shape))
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 30);
+        cfg.events = vec![FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 10 }];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.oom_failures(), 0);
+        let banked = f.memo_pool.get(&Task::TcBert).expect("departed engine banks its memos");
+        assert!(!banked.is_empty());
+        assert!(f.memo_pool.get(&Task::McRoberta).is_none(), "live engines keep theirs");
+
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 30);
+        cfg.events = vec![
+            FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 10 },
+            FleetEvent::Arrive { spec: JobSpec::new(Task::TcBert), at_round: 12 },
+        ];
+        let mut f2 = FleetScheduler::new(cfg).unwrap();
+        let r2 = f2.run();
+        assert_eq!(r2.oom_failures(), 0);
+        assert!(
+            f2.memo_pool.get(&Task::TcBert).is_none(),
+            "the same-task arrival drains the pool"
+        );
+        let arrival = r2.jobs.iter().find(|j| j.name == "TC-Bert#2").unwrap();
+        assert_eq!(arrival.steps, 30 - 12);
+    }
+
+    #[test]
+    fn warm_start_restarts_with_zero_sheltered_iterations() {
+        // run -> save -> restart with the persisted cache: the frozen equal
+        // split keeps every budget constant across both runs and the
+        // save-time backfill covers every shape run 1 ever saw, so run 2
+        // (same seeds, same stream) warm-hits every iteration — zero
+        // sheltered, zero refits
+        let path = std::env::temp_dir()
+            .join(format!("mimose-warm-test-{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let cold_cfg = || {
+            let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 60);
+            cfg.arbitrated = false;
+            cfg
+        };
+        let mut f1 = FleetScheduler::new(cold_cfg()).unwrap();
+        assert!(!f1.warm_loaded(), "no cache file yet: cold start");
+        let r1 = f1.run();
+        assert!(
+            r1.jobs.iter().all(|j| j.sheltered_iters > 0),
+            "the cold fleet must shelter before it can plan"
+        );
+        f1.save_cache(&path).unwrap();
+
+        let mut warm_cfg = cold_cfg();
+        warm_cfg.mimose.cache_path = path.clone();
+        let mut f2 = FleetScheduler::new(warm_cfg).unwrap();
+        assert!(f2.warm_loaded(), "the persisted cache must load warm");
+        let r2 = f2.run();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(r2.oom_failures(), 0);
+        assert!(r2.budget_respected());
+        for j in &r2.jobs {
+            assert_eq!(j.sheltered_iters, 0, "{} re-sheltered on warm start", j.name);
+            assert_eq!(j.refits, 0, "{} retrained on warm start", j.name);
+            assert_eq!(j.steps, 60);
+        }
+
+        // corrupt cache file: degrade to a cold start, never an error
+        std::fs::write(&path, "{ not json").unwrap();
+        let mut bad_cfg = cold_cfg();
+        bad_cfg.mimose.cache_path = path.clone();
+        let f3 = FleetScheduler::new(bad_cfg).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(!f3.warm_loaded(), "corrupt cache must degrade to cold");
     }
 }

@@ -451,6 +451,10 @@ fn report_fleet(r: &FleetReport) {
         "  shared cache      : {} cross-job hits, {} entries",
         r.shared_cache_hits, r.shared_cache_entries
     );
+    // the warm-start pin: a fleet restarted from a persisted plan cache
+    // reports 0 here (the CI smoke greps this line)
+    let sheltered: usize = r.jobs.iter().map(|j| j.sheltered_iters).sum();
+    println!("  sheltered iters   : {sheltered}");
     println!("  OOM failures      : {}", r.oom_failures());
     println!("  fleet throughput  : {:.2} iters/s (simulated)", r.throughput_iters_per_s());
 }
@@ -488,6 +492,21 @@ fn cmd_fleet(args: &[String]) {
             .opt("cache-capacity", "512", "shared plan-cache capacity (0 = unbounded)")
             .opt("pacing", "", "event pacing: rounds | lockstep | profiled (default: config)")
             .opt("tick-ms", "", "scripted-round tick length in ms (profiled pacing only)")
+            .opt(
+                "plan-threads",
+                "",
+                "cohort-parallel planning workers (0 = one per core, 1 = serial)",
+            )
+            .opt(
+                "cache-in",
+                "",
+                "warm-start: load the shared plan cache from this file (missing/stale = cold)",
+            )
+            .opt(
+                "cache-out",
+                "",
+                "persist the shared plan cache to this file after the run",
+            )
             .flag("no-shared-cache", "disable cross-job plan reuse")
             .flag("equal-split", "static equal split instead of broker arbitration")
             .flag("compare", "also run the other mode and print the speedup")
@@ -636,12 +655,40 @@ fn cmd_fleet(args: &[String]) {
     if !cli.get("trace-out").is_empty() {
         cfg.obs.trace_out = cli.get("trace-out");
     }
+    if !cli.get("plan-threads").is_empty() {
+        cfg.plan_threads = cli.get_usize("plan-threads");
+    }
+    // --cache-in overrides the TOML's [mimose] cache_path for loading;
+    // --cache-out overrides it for saving (the TOML path serves both roles)
+    if !cli.get("cache-in").is_empty() {
+        cfg.mimose.cache_path = cli.get("cache-in");
+    }
+    let cache_out = if !cli.get("cache-out").is_empty() {
+        cli.get("cache-out")
+    } else {
+        cfg.mimose.cache_path.clone()
+    };
     cfg.obs.apply();
-    let run_mode = |arbitrated: bool| -> FleetReport {
+    let run_mode = |arbitrated: bool, cache_out: &str| -> FleetReport {
         let mut c = cfg.clone();
         c.arbitrated = arbitrated;
         match FleetScheduler::new(c) {
-            Ok(mut f) => f.run(),
+            Ok(mut f) => {
+                if f.warm_loaded() {
+                    println!("  plan cache        : warm start from {}", cfg.mimose.cache_path);
+                }
+                let r = f.run();
+                if !cache_out.is_empty() {
+                    match f.save_cache(cache_out) {
+                        Ok(()) => println!("  plan cache        : saved to {cache_out}"),
+                        Err(e) => {
+                            eprintln!("cannot save plan cache to {cache_out}: {e}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
+                r
+            }
             Err(e) => {
                 eprintln!("cannot run fleet: {e}");
                 std::process::exit(1);
@@ -656,11 +703,12 @@ fn cmd_fleet(args: &[String]) {
         cfg.pacing.name(),
         cfg.seed
     );
-    let r = run_mode(cfg.arbitrated);
+    let r = run_mode(cfg.arbitrated, &cache_out);
     report_fleet(&r);
     report_obs(&cfg.obs);
     if cli.get_flag("compare") {
-        let other = run_mode(!cfg.arbitrated);
+        // the comparison run never saves: the primary mode's cache wins
+        let other = run_mode(!cfg.arbitrated, "");
         println!("\n--- comparison mode ---");
         report_fleet(&other);
         let (fleet_r, equal_r) =

@@ -23,8 +23,8 @@ pub mod optimal;
 pub use dtr::DtrPlanner;
 pub use mimose::MimosePlanner;
 pub use optimal::{
-    greedy_feasible_plan, optimal_chain_plan, optimal_graph_plan, optimal_plan, OptimalConfig,
-    OptimalPlan, OptimalPlanner, PlanSource,
+    greedy_feasible_plan, optimal_chain_plan, optimal_graph_plan, optimal_graph_plan_threaded,
+    optimal_plan, ChainFrontier, OptimalConfig, OptimalPlan, OptimalPlanner, PlanSource,
 };
 
 use crate::collector::Observation;

@@ -39,9 +39,11 @@
 use super::{InputDesc, IterationMode, PlanDecision, Planner};
 use crate::coordinator::Phase;
 use crate::model::{graph_peak_with_held, ModelProfile, StageGraph, StageKind};
+use crate::obs;
 use crate::scheduler::{schedule_graph, Plan};
 use crate::util::timer::Timer;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Oracle tuning knobs.
 #[derive(Clone, Debug)]
@@ -240,6 +242,153 @@ pub fn optimal_chain_plan(profile: &ModelProfile, limit: u64) -> Option<OptimalP
 }
 
 // ---------------------------------------------------------------------------
+// Budget-incremental chain DP (the limit-free master frontier)
+// ---------------------------------------------------------------------------
+
+/// One state of the limit-free master frontier ([`ChainFrontier`]).
+#[derive(Clone, Debug)]
+struct FrontierState {
+    /// `fixed + Σ held` over the whole chain under this plan.
+    held: u64,
+    flops: u64,
+    /// Max constraint term along the path — the smallest limit this plan
+    /// still fits. From-scratch at limit L keeps exactly the paths with
+    /// `peak_need <= L`, so one filter replays any budget.
+    peak_need: u64,
+    plan: Vec<usize>,
+}
+
+/// The chain DP's Pareto frontier computed once WITHOUT a byte limit, so a
+/// single sweep answers every budget: [`optimal_chain_plan`] at limit `L`
+/// prunes a path exactly when some per-stage constraint term exceeds `L`,
+/// and each state here carries the max of those terms (`peak_need`).
+/// [`ChainFrontier::answer`] then re-filters dominance — keep the states
+/// with `peak_need <= L`, take the (flops, mask) minimum — instead of
+/// rebuilding the sweep after a fleet `Rebind`/`BudgetShock`.
+///
+/// Bit-identity with from-scratch (pinned in `tests/plan_fastpath.rs`):
+/// the 4-axis dominance prune (held, flops, peak_need, mask — all `<=`)
+/// only drops a state whose dominator completes every suffix with a
+/// no-worse key at every limit the victim fits, and the canonical mask
+/// order makes the surviving (flops, mask) minimum unique, so plan, flops,
+/// and peak all coincide with [`optimal_chain_plan`] for every limit.
+#[derive(Clone, Debug)]
+pub struct ChainFrontier {
+    /// Full-chain frontier states; `answer` filters these per limit.
+    finals: Vec<FrontierState>,
+}
+
+impl ChainFrontier {
+    /// Sweep the chain once, keeping every non-dominated (held, flops,
+    /// peak_need, mask) state. Panics on non-chain graphs, like the
+    /// from-scratch DP.
+    pub fn build(profile: &ModelProfile) -> ChainFrontier {
+        assert!(profile.graph.is_chain(), "chain DP needs a chain-shaped graph");
+        let mut states = vec![FrontierState {
+            held: profile.fixed_bytes,
+            flops: 0,
+            peak_need: 0,
+            plan: Vec::new(),
+        }];
+        for s in profile.layers() {
+            let is_candidate = s.kind != StageKind::Head;
+            let mut next: Vec<FrontierState> = Vec::with_capacity(2 * states.len());
+            for st in &states {
+                // the shared forward-spike / backward-need term gates BOTH
+                // branches in the limited sweep — it raises peak_need here
+                let spike = st.held + s.act_bytes + s.transient_bytes;
+                next.push(FrontierState {
+                    held: st.held + s.act_bytes,
+                    flops: st.flops,
+                    peak_need: st.peak_need.max(spike),
+                    plan: st.plan.clone(),
+                });
+                if is_candidate {
+                    let mut plan = st.plan.clone();
+                    plan.push(s.id);
+                    next.push(FrontierState {
+                        held: st.held + s.ckpt_bytes,
+                        flops: st.flops + s.fwd_flops,
+                        peak_need: st.peak_need.max(spike).max(st.held + s.ckpt_bytes),
+                        plan,
+                    });
+                }
+            }
+            // 4-axis dominance: the triple prune of the limited sweep plus
+            // peak_need, so a state surviving at SOME limit is never dropped
+            // in favour of one that only fits looser budgets.
+            next.sort_by(|a, b| {
+                a.held
+                    .cmp(&b.held)
+                    .then(a.flops.cmp(&b.flops))
+                    .then(a.peak_need.cmp(&b.peak_need))
+                    .then_with(|| {
+                        if a.plan == b.plan {
+                            std::cmp::Ordering::Equal
+                        } else if mask_less(&a.plan, &b.plan) {
+                            std::cmp::Ordering::Less
+                        } else {
+                            std::cmp::Ordering::Greater
+                        }
+                    })
+            });
+            let mut kept: Vec<FrontierState> = Vec::with_capacity(next.len());
+            for cand in next {
+                let dominated = kept.iter().any(|a| {
+                    a.held <= cand.held
+                        && a.flops <= cand.flops
+                        && a.peak_need <= cand.peak_need
+                        && (a.plan == cand.plan || mask_less(&a.plan, &cand.plan))
+                });
+                if !dominated {
+                    kept.push(cand);
+                }
+            }
+            states = kept;
+        }
+        ChainFrontier { finals: states }
+    }
+
+    /// Number of retained full-chain states (diagnostics / bench sizing).
+    pub fn len(&self) -> usize {
+        self.finals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.finals.is_empty()
+    }
+
+    /// Replay the frontier at a byte limit: filter by `peak_need`, take the
+    /// canonical (flops, mask) minimum. Bit-identical to
+    /// [`optimal_chain_plan`]`(profile, limit)` — including `None` when no
+    /// checkpoint set fits.
+    pub fn answer(&self, profile: &ModelProfile, limit: u64) -> Option<OptimalPlan> {
+        obs::inc("planner.dp_incremental");
+        let best = self
+            .finals
+            .iter()
+            .filter(|st| st.peak_need <= limit)
+            .min_by(|a, b| {
+                a.flops.cmp(&b.flops).then_with(|| {
+                    if a.plan == b.plan {
+                        std::cmp::Ordering::Equal
+                    } else if mask_less(&a.plan, &b.plan) {
+                        std::cmp::Ordering::Less
+                    } else {
+                        std::cmp::Ordering::Greater
+                    }
+                })
+            })?;
+        Some(OptimalPlan {
+            peak_bytes: profile.peak_bytes(&best.plan),
+            recompute_flops: best.flops,
+            plan: Plan::of(best.plan.iter().copied()),
+            source: PlanSource::Exact,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Branch-and-bound graph search
 // ---------------------------------------------------------------------------
 
@@ -269,6 +418,11 @@ struct SearchCtx<'a> {
     best: Option<(u64, Vec<usize>)>,
     /// Scratch held-bytes vector reused across bound walks.
     held: Vec<u64>,
+    /// Cross-subtree incumbent FLOPs bound shared by the parallel search
+    /// (`None` on the serial path). Only an achieved-plan FLOPs value is
+    /// ever published, and the prune stays strictly-greater, so no optimal
+    /// or mask-tied plan is ever cut — results are race-free deterministic.
+    shared_bound: Option<&'a AtomicU64>,
 }
 
 impl SearchCtx<'_> {
@@ -283,10 +437,12 @@ impl SearchCtx<'_> {
     }
 
     fn dfs(&mut self, k: usize, decided: &mut [Option<bool>], flops: u64, plan: &mut Vec<usize>) {
-        if let Some((bf, _)) = &self.best {
-            if flops > *bf {
-                return; // incumbent bound (equal FLOPs continue: mask ties)
-            }
+        let mut bound = self.best.as_ref().map(|(bf, _)| *bf).unwrap_or(u64::MAX);
+        if let Some(shared) = self.shared_bound {
+            bound = bound.min(shared.load(Ordering::Relaxed));
+        }
+        if flops > bound {
+            return; // incumbent bound (equal FLOPs continue: mask ties)
         }
         if !self.bound_feasible(decided) {
             return; // no completion fits — the liveness prune
@@ -302,6 +458,11 @@ impl SearchCtx<'_> {
                 };
                 if better {
                     self.best = Some((flops, plan.clone()));
+                    if let Some(shared) = self.shared_bound {
+                        // publish the achieved FLOPs so sibling subtrees
+                        // tighten their strictly-greater prune
+                        shared.fetch_min(flops, Ordering::Relaxed);
+                    }
                 }
             }
             return;
@@ -331,11 +492,89 @@ pub fn optimal_graph_plan(profile: &ModelProfile, limit: u64) -> Option<OptimalP
         limit,
         best: None,
         held: vec![0; n],
+        shared_bound: None,
     };
     let mut decided: Vec<Option<bool>> = vec![None; n];
     let mut plan = Vec::new();
     ctx.dfs(0, &mut decided, 0, &mut plan);
     let (flops, ids) = ctx.best?;
+    Some(OptimalPlan {
+        peak_bytes: profile.peak_bytes(&ids),
+        recompute_flops: flops,
+        plan: Plan::of(ids),
+        source: PlanSource::Exact,
+    })
+}
+
+/// Parallel [`optimal_graph_plan`]: the top `log2`-ish slice of candidate
+/// decisions is expanded into independent subtrees searched on scoped
+/// threads, all pruning against one shared atomic incumbent FLOPs bound.
+/// The merge takes the canonical (flops, mask) minimum over subtree bests
+/// in fixed subtree order, so the result is bit-identical to the serial
+/// search regardless of thread interleaving (pinned in
+/// `tests/plan_fastpath.rs`). `threads <= 1` falls through to serial.
+pub fn optimal_graph_plan_threaded(
+    profile: &ModelProfile,
+    limit: u64,
+    threads: usize,
+) -> Option<OptimalPlan> {
+    let candidates = oracle_candidates(&profile.graph);
+    if threads <= 1 || candidates.len() < 3 {
+        return optimal_graph_plan(profile, limit);
+    }
+    // expand enough prefix decisions that every worker has subtrees to
+    // steal, capped so the split itself stays trivial
+    let mut split = 1usize;
+    while (1usize << split) < 2 * threads && split < candidates.len() - 1 && split < 6 {
+        split += 1;
+    }
+    let n = profile.graph.len();
+    let shared = AtomicU64::new(u64::MAX);
+    let subtree_bests: Vec<Option<(u64, Vec<usize>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..(1u32 << split))
+            .map(|assign| {
+                let candidates = candidates.clone();
+                let shared = &shared;
+                scope.spawn(move || {
+                    let mut decided: Vec<Option<bool>> = vec![None; n];
+                    let mut plan = Vec::new();
+                    let mut flops = 0u64;
+                    // low bit = first candidate, set = checkpointed; pushing
+                    // in candidate order keeps `plan` ascending by id
+                    for (k, &id) in candidates.iter().take(split).enumerate() {
+                        let ckpt = assign >> k & 1 == 1;
+                        decided[id] = Some(ckpt);
+                        if ckpt {
+                            plan.push(id);
+                            flops += profile.graph.stage(id).fwd_flops;
+                        }
+                    }
+                    let mut ctx = SearchCtx {
+                        profile,
+                        candidates,
+                        limit,
+                        best: None,
+                        held: vec![0; n],
+                        shared_bound: Some(shared),
+                    };
+                    ctx.dfs(split, &mut decided, flops, &mut plan);
+                    ctx.best
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("search subtree panicked")).collect()
+    });
+    let mut best: Option<(u64, Vec<usize>)> = None;
+    for sub in subtree_bests.into_iter().flatten() {
+        let better = match &best {
+            None => true,
+            Some((bf, bp)) => key_less(sub.0, &sub.1, *bf, bp),
+        };
+        if better {
+            best = Some(sub);
+        }
+    }
+    let (flops, ids) = best?;
     Some(OptimalPlan {
         peak_bytes: profile.peak_bytes(&ids),
         recompute_flops: flops,
@@ -423,13 +662,40 @@ pub struct OptimalPlanner {
     budget: u64,
     cfg: OptimalConfig,
     cache: BTreeMap<(usize, usize), Plan>,
+    /// Per-shape limit-free chain frontiers. Unlike `cache`, these are NOT
+    /// budget-scoped — a frontier proven once replays any later `set_budget`
+    /// limit with one dominance re-filter ([`ChainFrontier::answer`]), which
+    /// is what makes fleet rebinds incremental instead of from-scratch.
+    frontiers: BTreeMap<(usize, usize), ChainFrontier>,
     /// Plans that fell back to greedy (cap exceeded) over the run.
     pub fallbacks: u64,
 }
 
 impl OptimalPlanner {
     pub fn new(budget: u64, cfg: OptimalConfig) -> Self {
-        OptimalPlanner { budget, cfg, cache: BTreeMap::new(), fallbacks: 0 }
+        OptimalPlanner {
+            budget,
+            cfg,
+            cache: BTreeMap::new(),
+            frontiers: BTreeMap::new(),
+            fallbacks: 0,
+        }
+    }
+
+    /// Oracle dispatch with frontier reuse: chain shapes within the node
+    /// cap build (or replay) the per-shape [`ChainFrontier`]; everything
+    /// else takes the [`optimal_plan`] path unchanged.
+    fn plan_for(&mut self, key: (usize, usize), profile: &ModelProfile) -> Option<OptimalPlan> {
+        let n_candidates = oracle_candidates(&profile.graph).len();
+        if profile.graph.is_chain() && n_candidates <= self.cfg.max_nodes {
+            let limit = self.budget.saturating_sub(self.cfg.reserve_bytes);
+            let frontier = self
+                .frontiers
+                .entry(key)
+                .or_insert_with(|| ChainFrontier::build(profile));
+            return frontier.answer(profile, limit);
+        }
+        optimal_plan(profile, self.budget, &self.cfg)
     }
 }
 
@@ -444,7 +710,7 @@ impl Planner for OptimalPlanner {
         let (plan, cache_hit) = match self.cache.get(&key) {
             Some(p) => (p.clone(), true),
             None => {
-                let plan = match optimal_plan(profile, self.budget, &self.cfg) {
+                let plan = match self.plan_for(key, profile) {
                     Some(op) => {
                         if op.source == PlanSource::GreedyFallback {
                             self.fallbacks += 1;
@@ -469,7 +735,9 @@ impl Planner for OptimalPlanner {
     fn set_budget(&mut self, budget: u64) {
         if budget != self.budget {
             self.budget = budget;
-            self.cache.clear(); // every cached plan was proven for the old limit
+            // every cached plan was proven for the old limit; the frontiers
+            // are limit-free and survive to answer the new one
+            self.cache.clear();
         }
     }
 }
@@ -626,6 +894,104 @@ mod tests {
         match d3.mode {
             IterationMode::Planned(pl) => assert!(pl.is_empty(), "loose limit needs no plan"),
             _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn frontier_answers_match_from_scratch_across_a_budget_sweep() {
+        // one frontier build must replay every limit the from-scratch DP
+        // would prove, bit-identically (plan, flops, peak, None-ness)
+        let fixtures = [
+            chain_profile(&[(100, 10, 5), (100, 10, 5)], 50),
+            chain_profile(&[(100, 0, 900), (100, 0, 100), (10, 0, 5)], 0),
+            chain_profile(&[(100, 0, 7), (100, 0, 7), (10, 0, 1)], 0),
+            chain_profile(&[(100, 90, 5), (100, 90, 5)], 50),
+            chain_profile(&[(100, 0, 1), (100, 0, 1), (100, 0, 1)], 0),
+        ];
+        for p in &fixtures {
+            let frontier = ChainFrontier::build(p);
+            for limit in (0..=400).step_by(10) {
+                let fresh = optimal_chain_plan(p, limit);
+                let replay = frontier.answer(p, limit);
+                match (fresh, replay) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.plan, b.plan, "limit {limit}");
+                        assert_eq!(a.recompute_flops, b.recompute_flops, "limit {limit}");
+                        assert_eq!(a.peak_bytes, b.peak_bytes, "limit {limit}");
+                        assert_eq!(a.source, b.source);
+                    }
+                    (a, b) => panic!("feasibility mismatch at limit {limit}: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_handles_the_empty_chain() {
+        let p = chain_profile(&[], 40);
+        let frontier = ChainFrontier::build(&p);
+        assert_eq!(frontier.len(), 1);
+        // from-scratch returns the empty plan at any limit; so must the replay
+        for limit in [0, 40, 1_000] {
+            let fresh = optimal_chain_plan(&p, limit).unwrap();
+            let replay = frontier.answer(&p, limit).unwrap();
+            assert!(replay.plan.is_empty());
+            assert_eq!(fresh.plan, replay.plan);
+            assert_eq!(fresh.recompute_flops, replay.recompute_flops);
+        }
+    }
+
+    #[test]
+    fn threaded_graph_search_matches_serial() {
+        let chain = chain_profile(&[(100, 0, 900), (100, 0, 100), (10, 0, 5), (50, 5, 7)], 0);
+        let stages = vec![
+            stage(0, "root", StageKind::Encoder, 0, 50, 5, 10),
+            stage(1, "left", StageKind::Encoder, 1, 100, 95, 3),
+            stage(2, "right", StageKind::Encoder, 1, 100, 95, 4),
+            stage(3, "join", StageKind::Encoder, 2, 20, 2, 1),
+        ];
+        let g = StageGraph::new(stages, &[(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap();
+        let diamond = ModelProfile::from_graph(g, 0, 1, 1, 0);
+        for p in [&chain, &diamond] {
+            for limit in (0..=300).step_by(25) {
+                let serial = optimal_graph_plan(p, limit);
+                for threads in [1, 2, 4, 8] {
+                    let par = optimal_graph_plan_threaded(p, limit, threads);
+                    match (&serial, &par) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            assert_eq!(a.plan, b.plan, "limit {limit} threads {threads}");
+                            assert_eq!(a.recompute_flops, b.recompute_flops);
+                            assert_eq!(a.peak_bytes, b.peak_bytes);
+                        }
+                        (a, b) => panic!("limit {limit} threads {threads}: {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planner_rebind_replays_the_frontier_not_a_rebuild() {
+        // after set_budget the planner must produce exactly what a cold
+        // planner at the new budget would — via the retained frontier
+        let p = chain_profile(&[(100, 0, 900), (100, 0, 100), (10, 0, 5)], 0);
+        let input = InputDesc::new(1, 1);
+        let cfg = OptimalConfig { reserve_bytes: 0, ..Default::default() };
+        let mut warm = OptimalPlanner::new(400, cfg.clone());
+        warm.begin_iteration(&input, &p);
+        for budget in [200, 150, 250, 400] {
+            warm.set_budget(budget);
+            let replay = warm.begin_iteration(&input, &p);
+            let mut cold = OptimalPlanner::new(budget, cfg.clone());
+            let fresh = cold.begin_iteration(&input, &p);
+            match (replay.mode, fresh.mode) {
+                (IterationMode::Planned(a), IterationMode::Planned(b)) => {
+                    assert_eq!(a, b, "budget {budget}")
+                }
+                _ => panic!("oracle plans are always Planned"),
+            }
         }
     }
 

@@ -21,6 +21,7 @@
 use super::Plan;
 use crate::config::ModelSpec;
 use crate::obs;
+use crate::util::json::Json;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -183,6 +184,13 @@ impl PlanCache {
         self.lookup((input_size, 0))
     }
 
+    /// Non-mutating exact-key probe: no stats, no LRU touch. The
+    /// cohort-parallel planner peeks with this; the serial `lookup_exact`
+    /// still runs (and still counts its miss) when the iteration begins.
+    pub fn contains(&self, key: SizeKey) -> bool {
+        self.plans.contains_key(&key)
+    }
+
     /// Exact-key lookup (used with pre-quantised plan sizes).
     pub fn lookup_exact(&mut self, key: SizeKey) -> Option<Plan> {
         match self.plans.get(&key).cloned() {
@@ -322,6 +330,61 @@ impl SharedPlanCache {
         }
     }
 
+    /// Non-mutating probe: would [`Self::lookup`] hit? No stats, no LRU
+    /// touch — the cohort-parallel planner uses this to decide which
+    /// tenants need a fresh plan WITHOUT perturbing cache state (the
+    /// real lookup still runs, and still misses, on the serial path).
+    pub fn peek(&self, signature: u64, size: SizeKey, budget: u64) -> bool {
+        let lo = (signature, size.0, size.1, 0u64);
+        let hi = (signature, size.0, size.1, budget);
+        self.entries.range(lo..=hi).next_back().is_some()
+    }
+
+    /// Warm-start lookup: the exact cell first; otherwise the smallest
+    /// entry that *dominates* the probe on both size axes (primary ≥,
+    /// secondary ≥) under a qualifying budget. A plan generated for a
+    /// larger input at an equal-or-tighter budget checkpoints at least as
+    /// much as this input needs, so it is safe (merely conservative) —
+    /// the same monotonicity the coordinator's quantise-UP rule rests on.
+    /// This is what lets a restarted fleet serve its very first draws from
+    /// a disk-loaded cache even when early keys only recurred in larger
+    /// quantisation cells.
+    pub fn lookup_dominating(&mut self, signature: u64, size: SizeKey, budget: u64) -> Option<Plan> {
+        if self.peek(signature, size, budget) {
+            return self.lookup(signature, size, budget); // counts the hit
+        }
+        // ascending scan from the probe: the first (primary, secondary)
+        // group dominating the probe with any qualifying budget wins; within
+        // the group the largest budget ≤ ours is the least conservative
+        let lo = (signature, size.0, size.1, 0u64);
+        let hi = (signature, u64::MAX, u64::MAX, u64::MAX);
+        let mut best: Option<SharedKey> = None;
+        for (&k, _) in self.entries.range(lo..=hi) {
+            let (_, p, s, b) = k;
+            if let Some((_, bp, bs, _)) = best {
+                if (p, s) != (bp, bs) {
+                    break; // past the winning group
+                }
+            }
+            if s >= size.1 && b <= budget {
+                best = Some(k); // later same-group entries have larger budgets
+            }
+        }
+        match best.and_then(|k| self.entries.get(&k).cloned().map(|p| (k, p))) {
+            Some((key, plan)) => {
+                self.stats.hits += 1;
+                obs::inc("shared_cache.hits");
+                self.lru.touch(key);
+                Some(plan)
+            }
+            None => {
+                self.stats.misses += 1;
+                obs::inc("shared_cache.misses");
+                None
+            }
+        }
+    }
+
     pub fn insert(&mut self, signature: u64, size: SizeKey, budget: u64, plan: Plan) {
         let key = (signature, size.0, size.1, budget);
         let novel = !self.entries.contains_key(&key);
@@ -349,6 +412,174 @@ impl SharedPlanCache {
     pub fn clear(&mut self) {
         self.entries.clear();
         self.lru.clear();
+    }
+
+    /// Serialize every entry to the versioned on-disk format (see module
+    /// persistence docs). Model signatures are encoded as decimal STRINGS:
+    /// they are full 64-bit FNV hashes, and [`Json::Num`] is an f64 that
+    /// silently corrupts integers above 2^53.
+    pub fn save_string(&self) -> String {
+        let mut out = String::with_capacity(64 + 64 * self.entries.len());
+        out.push_str("{\"format\":\"");
+        out.push_str(CACHE_FORMAT);
+        out.push_str("\",\"version\":");
+        out.push_str(&CACHE_VERSION.to_string());
+        out.push_str(",\"kind\":\"shared\",\"entries\":[");
+        for (i, ((sig, p, s, budget), plan)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"sig\":\"{sig}\",\"primary\":{p},\"secondary\":{s},\"budget\":{budget},\"plan\":{}}}",
+                ids_json(plan)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse a cache saved by [`Self::save_string`] into a fresh cache with
+    /// the given capacity bound. Errors (the caller's cue to fall back to a
+    /// cold cache) on malformed JSON, an unknown format marker, or a
+    /// version other than [`CACHE_VERSION`] — a stale layout never
+    /// half-loads. Signature scoping needs no filtering here: every lookup
+    /// key embeds the probing tenant's signature, so entries from models
+    /// not in the new fleet are simply never hit.
+    pub fn load_string(s: &str, capacity: usize) -> Result<SharedPlanCache, String> {
+        let doc = Json::parse(s).map_err(|e| e.to_string())?;
+        check_header(&doc, "shared")?;
+        let mut cache = SharedPlanCache::new(capacity);
+        for e in doc.get("entries").and_then(Json::as_arr).ok_or("missing entries array")? {
+            let sig = parse_u64_str(e, "sig")?;
+            let p = parse_u64_num(e, "primary")?;
+            let sec = parse_u64_num(e, "secondary")?;
+            let budget = parse_u64_num(e, "budget")?;
+            cache.insert(sig, (p, sec), budget, parse_plan(e)?);
+        }
+        cache.stats = CacheStats::default(); // loads are not hits
+        Ok(cache)
+    }
+
+    /// Write the cache to `path` ([`Self::save_string`] format).
+    pub fn save_to_path(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.save_string())
+    }
+
+    /// Load a cache from `path`, or a cold one (plus the reason) when the
+    /// file is missing, corrupt, or a stale version — a warm start must
+    /// never be able to fail a run.
+    pub fn load_from_path(path: &str, capacity: usize) -> (SharedPlanCache, Option<String>) {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return (SharedPlanCache::new(capacity), Some(format!("read {path}: {e}"))),
+        };
+        match SharedPlanCache::load_string(&text, capacity) {
+            Ok(c) => (c, None),
+            Err(e) => (SharedPlanCache::new(capacity), Some(format!("load {path}: {e}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistence (versioned JSON via util/json — no external serializer)
+// ---------------------------------------------------------------------------
+//
+// Layout (one object, entries sorted by key — BTreeMap order — so saves are
+// deterministic and diffable):
+//
+//   {"format":"mimose-plan-cache","version":1,"kind":"shared",
+//    "entries":[{"sig":"<u64 as decimal string>","primary":N,"secondary":N,
+//                "budget":N,"plan":[ids...]}, ...]}
+//
+// `kind` is "shared" or "local"; local entries carry no sig/budget. A
+// reader rejects (→ cold start) any format/version/kind mismatch outright
+// rather than guessing at field semantics that may have changed.
+
+/// Format marker in the persistence header.
+pub const CACHE_FORMAT: &str = "mimose-plan-cache";
+/// Bump on any layout change; old files then fall back to cold.
+pub const CACHE_VERSION: u64 = 1;
+
+fn ids_json(plan: &Plan) -> String {
+    let ids: Vec<String> = plan.ids().iter().map(|i| i.to_string()).collect();
+    format!("[{}]", ids.join(","))
+}
+
+fn check_header(doc: &Json, kind: &str) -> Result<(), String> {
+    match doc.get("format").and_then(Json::as_str) {
+        Some(f) if f == CACHE_FORMAT => {}
+        other => return Err(format!("not a plan-cache file (format {other:?})")),
+    }
+    match doc.get("version").and_then(Json::as_f64) {
+        Some(v) if v == CACHE_VERSION as f64 => {}
+        other => return Err(format!("stale cache version {other:?}, want {CACHE_VERSION}")),
+    }
+    match doc.get("kind").and_then(Json::as_str) {
+        Some(k) if k == kind => Ok(()),
+        other => Err(format!("cache kind {other:?}, want {kind:?}")),
+    }
+}
+
+fn parse_u64_str(e: &Json, key: &str) -> Result<u64, String> {
+    e.get(key)
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<u64>().ok())
+        .ok_or_else(|| format!("bad {key}"))
+}
+
+fn parse_u64_num(e: &Json, key: &str) -> Result<u64, String> {
+    let n = e.get(key).and_then(Json::as_f64).ok_or_else(|| format!("bad {key}"))?;
+    if n < 0.0 || n.fract() != 0.0 || n > (1u64 << 53) as f64 {
+        return Err(format!("bad {key}: {n}"));
+    }
+    Ok(n as u64)
+}
+
+fn parse_plan(e: &Json) -> Result<Plan, String> {
+    let arr = e.get("plan").and_then(Json::as_arr).ok_or("bad plan")?;
+    let mut ids = Vec::with_capacity(arr.len());
+    for v in arr {
+        ids.push(v.as_usize().ok_or("bad plan id")?);
+    }
+    Ok(Plan::of(ids))
+}
+
+impl PlanCache {
+    /// Serialize the per-job cache ([`SharedPlanCache::save_string`]'s
+    /// format with `kind` "local" and `(primary, secondary)` keys).
+    pub fn save_string(&self) -> String {
+        let mut out = String::with_capacity(64 + 48 * self.plans.len());
+        out.push_str("{\"format\":\"");
+        out.push_str(CACHE_FORMAT);
+        out.push_str("\",\"version\":");
+        out.push_str(&CACHE_VERSION.to_string());
+        out.push_str(",\"kind\":\"local\",\"entries\":[");
+        for (i, ((p, s), plan)) in self.plans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"primary\":{p},\"secondary\":{s},\"plan\":{}}}",
+                ids_json(plan)
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse a [`Self::save_string`] dump into a fresh cache with the given
+    /// tolerance/capacity; errors on corrupt or version-mismatched input.
+    pub fn load_string(s: &str, tolerance: f64, capacity: usize) -> Result<PlanCache, String> {
+        let doc = Json::parse(s).map_err(|e| e.to_string())?;
+        check_header(&doc, "local")?;
+        let mut cache = PlanCache::with_capacity(tolerance, capacity);
+        for e in doc.get("entries").and_then(Json::as_arr).ok_or("missing entries array")? {
+            let p = parse_u64_num(e, "primary")?;
+            let sec = parse_u64_num(e, "secondary")?;
+            cache.insert((p, sec), parse_plan(e)?);
+        }
+        cache.stats = CacheStats::default();
+        Ok(cache)
     }
 }
 
@@ -711,5 +942,60 @@ mod tests {
         c.remove(1, (100, 50), 10);
         assert!(c.lookup(1, (100, 50), 10).is_none());
         assert!(c.lookup(1, (100, 60), 10).is_some());
+    }
+
+    // ---- persistence ----
+
+    #[test]
+    fn shared_round_trip_preserves_every_lookup() {
+        let mut c = SharedPlanCache::new(0);
+        // a signature above 2^53 — the exact value f64 JSON numbers mangle
+        let big_sig = 0xdead_beef_cafe_f00du64;
+        c.insert(big_sig, (9600, 0), 5_000, Plan::of([1, 2, 3]));
+        c.insert(big_sig, (9600, 128), 5_000, Plan::of([2]));
+        c.insert(7, (480, 0), 2_000, Plan::none());
+        let text = c.save_string();
+        let mut back = SharedPlanCache::load_string(&text, 0).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.lookup(big_sig, (9600, 0), 6_000), Some(Plan::of([1, 2, 3])));
+        assert_eq!(back.lookup(big_sig, (9600, 128), 5_000), Some(Plan::of([2])));
+        assert_eq!(back.lookup(7, (480, 0), 2_000), Some(Plan::none()));
+        assert!(back.lookup(big_sig, (9600, 0), 4_999).is_none(), "budget scoping survives");
+        assert!(back.lookup(8, (480, 0), 2_000).is_none(), "wrong signature never hits");
+        // and a second generation is byte-identical (deterministic saves)
+        let mut c2 = SharedPlanCache::load_string(&text, 0).unwrap();
+        assert_eq!(c2.save_string(), text);
+        assert!(c2.lookup(7, (480, 0), 2_000).is_some());
+    }
+
+    #[test]
+    fn corrupt_and_stale_files_are_rejected_not_half_loaded() {
+        assert!(SharedPlanCache::load_string("{not json", 0).is_err());
+        assert!(SharedPlanCache::load_string("{\"format\":\"other\"}", 0).is_err());
+        let stale = "{\"format\":\"mimose-plan-cache\",\"version\":999,\
+                     \"kind\":\"shared\",\"entries\":[]}";
+        assert!(SharedPlanCache::load_string(stale, 0).is_err(), "future version is stale");
+        let wrong_kind = SharedPlanCache::new(0).save_string().replace("shared", "local");
+        assert!(SharedPlanCache::load_string(&wrong_kind, 0).is_err());
+        // a local dump is not a shared dump
+        let local = PlanCache::new(0.05).save_string();
+        assert!(SharedPlanCache::load_string(&local, 0).is_err());
+        // path helper: missing file falls back cold with a reason
+        let (cold, why) = SharedPlanCache::load_from_path("/nonexistent/cache.json", 4);
+        assert!(cold.is_empty());
+        assert!(why.is_some());
+    }
+
+    #[test]
+    fn local_round_trip_preserves_tolerant_lookup() {
+        let mut c = PlanCache::new(0.05);
+        c.insert((1000, 800), Plan::of([7]));
+        c.insert((500, 0), Plan::of([1, 4]));
+        let text = c.save_string();
+        let mut back = PlanCache::load_string(&text, 0.05, 0).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.lookup((1010, 790)), Some(Plan::of([7])), "tolerance works post-load");
+        assert_eq!(back.lookup_exact((500, 0)), Some(Plan::of([1, 4])));
+        assert_eq!(back.stats().hits, 2);
     }
 }

@@ -42,11 +42,22 @@ impl ThreadPool {
 
     /// Parallel map preserving input order.
     ///
+    /// **Ordering guarantee**: `map(items, f)[i] == f(items[i])` for every
+    /// `i`, regardless of worker count (including more workers than items),
+    /// scheduling interleavings, or which worker picks up which job —
+    /// results are slotted by the index they were submitted with, and the
+    /// caller collects exactly `items.len()` reports before returning. The
+    /// fleet's cohort-parallel planner depends on this to merge plans back
+    /// deterministically in job-id order.
+    ///
     /// Worker panics are caught and re-raised on the calling thread (the
     /// whole map aborts with the first panic received). The caller blocks
     /// on a channel — no busy-wait — and the pool itself survives: the
     /// panicking closure unwinds inside `catch_unwind`, so its worker
-    /// thread keeps serving later jobs.
+    /// thread keeps serving later jobs. A retry of the same `map` after a
+    /// caught panic sees the same ordering guarantee — leftover reports
+    /// from the aborted call went to its (dropped) channel, never to the
+    /// retry's.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -116,6 +127,67 @@ mod tests {
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn prop_map_order_holds_under_panic_retry_and_any_worker_count() {
+        // the documented guarantee: map(items)[i] == f(items[i]) for every
+        // worker count (including workers > items), and a retry after a
+        // caught panic still maps in order — no stale report from the
+        // aborted call can leak into the retry's results
+        use crate::util::proptest::forall;
+        forall(
+            0xD00D_F00D,
+            30,
+            |rng| {
+                vec![
+                    rng.range_u(1, 9) as u64,  // workers
+                    rng.range_u(0, 6) as u64,  // items (often < workers)
+                    rng.next_u64() % 8,        // panicking item (may be >= items)
+                ]
+            },
+            |case: &Vec<u64>| {
+                if case.len() < 3 {
+                    return Ok(()); // shrinker dropped fields: not a real case
+                }
+                let (workers, n, panic_at) = (case[0] as usize, case[1] as usize, case[2]);
+                let workers = workers.max(1);
+                let pool = ThreadPool::new(workers);
+                let items: Vec<u64> = (0..n as u64).collect();
+                let first = catch_unwind(AssertUnwindSafe(|| {
+                    pool.map(items.clone(), move |x| {
+                        if x == panic_at {
+                            panic!("injected");
+                        }
+                        x * 3 + 1
+                    })
+                }));
+                if panic_at < n as u64 {
+                    if first.is_ok() {
+                        return Err(format!("panic at {panic_at} of {n} items not raised"));
+                    }
+                } else {
+                    let got = first.map_err(|_| "spurious panic".to_string())?;
+                    let want: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+                    if got != want {
+                        return Err(format!("out of order: {got:?} != {want:?}"));
+                    }
+                }
+                // retry on the SAME pool with a panic-free closure: ordering
+                // must hold and nothing from the aborted call may leak in
+                let got = pool.map(items.clone(), |x| x * 3 + 1);
+                let want: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+                if got != want {
+                    return Err(format!("retry out of order: {got:?} != {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn available_parallelism_reports_at_least_one_core() {
+        assert!(available_parallelism() >= 1);
     }
 
     #[test]

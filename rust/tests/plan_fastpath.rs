@@ -1,0 +1,249 @@
+//! Planning hot-path differentials (issue 9 acceptance):
+//!
+//! * budget-incremental chain DP — `ChainFrontier` answers every budget in
+//!   randomized sweeps and shock-like walks bit-identically to the
+//!   from-scratch `optimal_chain_plan`;
+//! * threaded branch-and-bound — `optimal_graph_plan_threaded` returns the
+//!   canonical plan of the serial search at every thread count;
+//! * plan-cache persistence — `SharedPlanCache` round-trips through disk,
+//!   and corrupt/stale files degrade to a cold cache, never an error;
+//! * fleet end-to-end — cohort-parallel planning leaves the fleet
+//!   fingerprint bit-identical to serial, and a save/restart cycle
+//!   re-admits every tenant with zero sheltered iterations.
+
+use mimose::config::{FleetConfig, FleetEvent, JobSpec, Task};
+use mimose::fleet::{FleetReport, FleetScheduler};
+use mimose::planners::{
+    optimal_chain_plan, optimal_graph_plan, optimal_graph_plan_threaded, ChainFrontier,
+};
+use mimose::scheduler::{Plan, SharedPlanCache};
+use mimose::util::graphgen::{self, GenConfig};
+use mimose::util::rng::Rng;
+use mimose::util::GIB;
+
+/// Comparable projection of an oracle answer (OptimalPlan carries no Eq).
+fn key(p: &Option<mimose::planners::OptimalPlan>) -> Option<(Vec<usize>, u64, u64)> {
+    p.as_ref().map(|o| (o.plan.ids(), o.recompute_flops, o.peak_bytes))
+}
+
+#[test]
+fn frontier_matches_from_scratch_dp_on_random_budget_sweeps() {
+    let mut rng = Rng::new(0xFA57_0001);
+    let cfg = GenConfig::default();
+    for case in 0..25usize {
+        let n = 3 + (case % 10);
+        let graph = graphgen::chain(&mut rng, &cfg, n);
+        let p = graphgen::profile_of(graph, rng.range_u(0, 500) as u64);
+        let frontier = ChainFrontier::build(&p);
+        assert!(!frontier.is_empty());
+        let total = p.total_act_bytes().max(1);
+        // an ascending sweep plus random probes, including the extremes
+        let mut limits: Vec<u64> = (0..16)
+            .map(|i| p.fixed_bytes + total * i / 15)
+            .collect();
+        for _ in 0..16 {
+            limits.push(p.fixed_bytes.saturating_sub(1) + rng.range_u(0, 2 * total as usize) as u64);
+        }
+        for lim in limits {
+            assert_eq!(
+                key(&optimal_chain_plan(&p, lim)),
+                key(&frontier.answer(&p, lim)),
+                "frontier diverged from from-scratch DP at limit {lim} (case {case})"
+            );
+        }
+    }
+}
+
+#[test]
+fn frontier_matches_from_scratch_dp_on_shock_like_budget_walks() {
+    // the fleet's actual access pattern: a budget that jumps down (shock)
+    // and recovers (claw-back release), re-answered from one frontier
+    let mut rng = Rng::new(0xFA57_0002);
+    let cfg = GenConfig::default();
+    for _ in 0..10 {
+        let graph = graphgen::chain(&mut rng, &cfg, 8);
+        let p = graphgen::profile_of(graph, 100);
+        let frontier = ChainFrontier::build(&p);
+        let total = p.total_act_bytes().max(1);
+        let mut lim = p.fixed_bytes + total / 2;
+        for step in 0..40 {
+            // alternate tightening shocks with loosening recoveries
+            let delta = rng.range_u(0, (total / 4).max(1) as usize) as u64;
+            lim = if step % 2 == 0 { lim.saturating_sub(delta) } else { lim + delta };
+            assert_eq!(
+                key(&optimal_chain_plan(&p, lim)),
+                key(&frontier.answer(&p, lim)),
+                "walk step {step} diverged at limit {lim}"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_graph_search_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xFA57_0003);
+    let cfg = GenConfig::default();
+    for case in 0..15 {
+        let (graph, _) = graphgen::random_graph(&mut rng, &cfg, 10);
+        let p = graphgen::profile_of(graph, rng.range_u(0, 300) as u64);
+        let lim = p.fixed_bytes + rng.range_u(0, p.total_act_bytes().max(1) as usize) as u64;
+        let serial = key(&optimal_graph_plan(&p, lim));
+        for threads in [1, 2, 4, 8] {
+            assert_eq!(
+                serial,
+                key(&optimal_graph_plan_threaded(&p, lim, threads)),
+                "threads={threads} diverged from serial (case {case}, limit {lim})"
+            );
+        }
+    }
+}
+
+#[test]
+fn shared_cache_round_trips_through_disk() {
+    let path = std::env::temp_dir()
+        .join(format!("mimose-fastpath-cache-{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let mut cache = SharedPlanCache::new(64);
+    let cells: Vec<(u64, (u64, u64), u64)> = vec![
+        (11, (1000, 0), 4 * GIB),
+        (11, (1000, 0), 6 * GIB),
+        (11, (2000, 128), 4 * GIB),
+        (77, (1000, 0), 4 * GIB),
+    ];
+    for (i, &(sig, size, budget)) in cells.iter().enumerate() {
+        cache.insert(sig, size, budget, Plan::of([i, i + 1]));
+    }
+    cache.save_to_path(&path).unwrap();
+
+    let (loaded, cold_reason) = SharedPlanCache::load_from_path(&path, 64);
+    assert_eq!(cold_reason, None, "a freshly saved cache must load warm");
+    assert_eq!(loaded.len(), cells.len());
+    let mut loaded = loaded;
+    for (i, &(sig, size, budget)) in cells.iter().enumerate() {
+        assert!(loaded.peek(sig, size, budget), "cell {i} lost in the round trip");
+        assert_eq!(loaded.lookup(sig, size, budget), Some(Plan::of([i, i + 1])));
+    }
+    // scoping survives: a signature never inserted stays invisible
+    assert!(!loaded.peek(99, (1000, 0), 4 * GIB));
+
+    // corrupt file -> cold cache plus a reason, never a panic or an error
+    std::fs::write(&path, "{ not json").unwrap();
+    let (cold, reason) = SharedPlanCache::load_from_path(&path, 64);
+    assert!(cold.is_empty());
+    assert!(reason.is_some());
+
+    // stale version -> cold: a layout bump must never half-load
+    use mimose::scheduler::cache::CACHE_VERSION;
+    let stale = cache.save_string().replace(
+        &format!("\"version\":{CACHE_VERSION}"),
+        &format!("\"version\":{}", CACHE_VERSION + 1),
+    );
+    assert_ne!(stale, cache.save_string(), "the version marker must be present to bump");
+    std::fs::write(&path, stale).unwrap();
+    let (cold, reason) = SharedPlanCache::load_from_path(&path, 64);
+    assert!(cold.is_empty(), "a stale version must not load");
+    assert!(reason.is_some());
+
+    // missing file -> cold plus a reason
+    let _ = std::fs::remove_file(&path);
+    let (cold, reason) = SharedPlanCache::load_from_path(&path, 64);
+    assert!(cold.is_empty());
+    assert!(reason.is_some());
+}
+
+fn fleet_cfg(tasks: Vec<Task>, global_gb: u64, steps: usize) -> FleetConfig {
+    FleetConfig {
+        global_budget_bytes: global_gb * GIB,
+        steps,
+        jobs: JobSpec::from_tasks(&tasks),
+        seed: 23,
+        ..Default::default()
+    }
+}
+
+/// Everything observable about a run that planning could perturb.
+fn fingerprint(r: &FleetReport) -> Vec<String> {
+    let mut out = Vec::new();
+    for j in &r.jobs {
+        out.push(format!(
+            "{}|steps={}|peak={}|ms={:.6}|shel={}|refits={}|shared={}|rebinds={}|hit={:.6}",
+            j.name,
+            j.steps,
+            j.peak_bytes,
+            j.total_ms,
+            j.sheltered_iters,
+            j.refits,
+            j.shared_hits,
+            j.budget_changes,
+            j.cache_hit_rate
+        ));
+    }
+    for d in &r.rounds {
+        out.push(format!("round{}|{:?}|{:?}", d.round, d.job_ids, d.allocations));
+    }
+    out
+}
+
+#[test]
+fn cohort_parallel_fleet_is_bit_identical_to_serial() {
+    // six tenants (novel shapes every round) plus a mid-run arrival burst:
+    // the same-instant cohorts this feeds the planner are exactly what the
+    // thread pool fans out, and the merged fingerprint may not move a bit
+    let mk = |threads: usize| {
+        let mut cfg = fleet_cfg(
+            vec![Task::TcBert, Task::McRoberta, Task::TcBert, Task::Seq2seq],
+            24,
+            50,
+        );
+        cfg.plan_threads = threads;
+        cfg.events = vec![
+            FleetEvent::Arrive { spec: JobSpec::new(Task::TcBert), at_round: 15 },
+            FleetEvent::Arrive { spec: JobSpec::new(Task::McRoberta), at_round: 15 },
+        ];
+        cfg
+    };
+    let serial = FleetScheduler::new(mk(1)).unwrap().run();
+    let parallel = FleetScheduler::new(mk(8)).unwrap().run();
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&parallel),
+        "cohort-parallel planning perturbed the fleet"
+    );
+    assert_eq!(serial.jobs.len(), 6);
+    assert!(serial.budget_respected());
+}
+
+#[test]
+fn fleet_save_restart_readmits_with_zero_sheltered_iterations() {
+    let path = std::env::temp_dir()
+        .join(format!("mimose-fastpath-warm-{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let mk = || {
+        // frozen equal split: budgets are constant across both runs, so the
+        // persisted cache provably covers run 2's every (shape, budget)
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta, Task::TcBert], 18, 50);
+        cfg.arbitrated = false;
+        cfg
+    };
+    let mut f1 = FleetScheduler::new(mk()).unwrap();
+    assert!(!f1.warm_loaded());
+    let r1 = f1.run();
+    assert!(r1.jobs.iter().all(|j| j.sheltered_iters > 0), "cold run must collect");
+    f1.save_cache(&path).unwrap();
+
+    let mut cfg2 = mk();
+    cfg2.mimose.cache_path = path.clone();
+    let mut f2 = FleetScheduler::new(cfg2).unwrap();
+    assert!(f2.warm_loaded());
+    let r2 = f2.run();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(r2.oom_failures(), 0);
+    assert!(r2.budget_respected());
+    for j in &r2.jobs {
+        assert_eq!(j.sheltered_iters, 0, "{} re-sheltered after the restart", j.name);
+        assert_eq!(j.refits, 0, "{} refit its estimator after the restart", j.name);
+        assert_eq!(j.steps, 50, "{} lost steps to warm start", j.name);
+    }
+}
