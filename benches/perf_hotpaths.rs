@@ -14,7 +14,9 @@
 mod common;
 
 use common::{rule, write_bench_json_with_metrics, write_tsv};
-use mimose::config::{ExperimentConfig, FleetConfig, JobSpec, MimoseConfig, PlannerKind, Task};
+use mimose::config::{
+    ExperimentConfig, FleetConfig, FleetEvent, JobSpec, MimoseConfig, Placement, PlannerKind, Task,
+};
 use mimose::engine::sim::SimEngine;
 use mimose::estimator::{MemoryEstimator, Sample};
 use mimose::fleet::{EventKind, EventQueue, FleetScheduler};
@@ -495,6 +497,62 @@ fn main() {
     );
     assert_eq!(warm_start_sheltered_iters, 0, "a warm-started fleet must never shelter");
 
+    rule("Perf — multi-device fleet (warm placement + pressure migration)");
+    // warm placement: cold-cache tenants spread one per device; the
+    // scripted same-architecture arrival must land beside its signature
+    let warm_place = FleetScheduler::new(FleetConfig {
+        global_budget_bytes: 20 * GIB,
+        devices: 2,
+        placement: Placement::PlanCacheWarm,
+        migrate_after: 0,
+        steps: 40,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        events: vec![FleetEvent::Arrive { spec: JobSpec::new(Task::TcBert), at_round: 20 }],
+        seed: 7,
+        ..Default::default()
+    })
+    .unwrap()
+    .run();
+    let placement_warm_hit_rate = warm_place.placement_warm_hit_rate();
+    println!(
+        "warm placement: {}/{} placements hit a warm cache ({:.0}%)",
+        warm_place.placement_warm_hits,
+        warm_place.placements,
+        placement_warm_hit_rate * 100.0
+    );
+    assert!(placement_warm_hit_rate > 0.0, "the TC-Bert arrival must warm-hit");
+    // pressure migration: first-fit packs the contended four-task anchor
+    // onto device 0's 16 GiB slice; sustained overshoot must shed a tenant
+    // onto the empty device, charging migration_cost_iters per move
+    let t0 = Instant::now();
+    let migr = FleetScheduler::new(FleetConfig {
+        global_budget_bytes: 32 * GIB,
+        devices: 2,
+        placement: Placement::FirstFit,
+        migrate_after: 1,
+        steps: 150,
+        jobs: JobSpec::from_tasks(&[
+            Task::McRoberta,
+            Task::QaXlnet,
+            Task::QaBert,
+            Task::TcBert,
+        ]),
+        seed: 7,
+        ..Default::default()
+    })
+    .unwrap()
+    .run();
+    let migration_run_s = t0.elapsed().as_secs_f64();
+    let migration_cost_iters = migr.migration_lost_iters as f64;
+    println!(
+        "pressure migration: {} moves, {} iterations lost in transit, 0 OOMs ({:.1} ms run)",
+        migr.migrations,
+        migr.migration_lost_iters,
+        migration_run_s * 1e3
+    );
+    assert!(migr.migrations >= 1, "the contended device must shed a tenant");
+    assert_eq!(migr.oom_failures(), 0, "migration must resolve pressure without OOM");
+
     write_tsv("perf_hotpaths", "bench\tmean_us\tp50_us\tp99_us", &rows);
     write_bench_json_with_metrics(
         "hotpaths",
@@ -512,6 +570,8 @@ fn main() {
             ("incremental_dp_speedup", incremental_dp_speedup),
             ("arrival_adopt_speedup", arrival_adopt_speedup),
             ("warm_start_sheltered_iters", warm_start_sheltered_iters as f64),
+            ("placement_warm_hit_rate", placement_warm_hit_rate),
+            ("migration_cost_iters", migration_cost_iters),
         ],
     );
 }

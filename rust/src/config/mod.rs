@@ -424,6 +424,9 @@ pub struct ExperimentConfig {
     pub obs: ObsConfig,
     /// Cap iterations per epoch (0 = full epoch) — for fast benches.
     pub max_iters: usize,
+    /// Batch-size override (`None` = the task's Table 1 batch). Fleet
+    /// tenants with a [`JobSpec::batch`] override train through this.
+    pub batch: Option<usize>,
 }
 
 impl ExperimentConfig {
@@ -438,11 +441,18 @@ impl ExperimentConfig {
             coordinator: CoordinatorConfig::default(),
             obs: ObsConfig::default(),
             max_iters: 0,
+            batch: None,
         }
     }
 
     pub fn budget_gb(&self) -> f64 {
         self.budget_bytes as f64 / GIB as f64
+    }
+
+    /// The collated batch size this experiment trains with: the override,
+    /// or the task's default.
+    pub fn batch(&self) -> usize {
+        self.batch.unwrap_or_else(|| self.task.batch())
     }
 
     /// Load from a TOML-subset file; missing keys fall back to defaults.
@@ -455,6 +465,13 @@ impl ExperimentConfig {
         cfg.epochs = doc.get_usize("epochs", 1);
         cfg.seed = doc.get_usize("seed", 42) as u64;
         cfg.max_iters = doc.get_usize("max_iters", 0);
+        if doc.get("batch").is_some() {
+            let b = doc.get_usize("batch", 0);
+            if b == 0 {
+                return Err("batch must be > 0".into());
+            }
+            cfg.batch = Some(b);
+        }
         cfg.mimose = MimoseConfig::from_doc(doc);
         cfg.coordinator = CoordinatorConfig::from_doc(doc);
         cfg.obs = ObsConfig::from_doc(doc);
@@ -485,11 +502,22 @@ pub struct JobSpec {
     /// Iterations this job needs before it completes and departs on its
     /// own, releasing its budget (0 = run until the fleet ends).
     pub steps: usize,
+    /// Per-tenant batch-size override (`None` = the task's Table 1 batch).
+    /// Two same-task tenants with different batches are different models to
+    /// the planner: their signatures, shape memos, and shared-cache entries
+    /// must not mix.
+    pub batch: Option<usize>,
 }
 
 impl JobSpec {
     pub fn new(task: Task) -> Self {
-        JobSpec { task, weight: 1.0, name: None, steps: 0 }
+        JobSpec { task, weight: 1.0, name: None, steps: 0, batch: None }
+    }
+
+    /// The collated batch size this tenant trains with: the override, or
+    /// the task's default.
+    pub fn batch(&self) -> usize {
+        self.batch.unwrap_or_else(|| self.task.batch())
     }
 
     pub fn weighted(task: Task, weight: f64) -> Self {
@@ -508,6 +536,9 @@ impl JobSpec {
         if self.weight <= 0.0 || !self.weight.is_finite() {
             return Err(format!("job weight must be finite and > 0, got {}", self.weight));
         }
+        if self.batch == Some(0) {
+            return Err("job batch override must be > 0".into());
+        }
         Ok(())
     }
 
@@ -517,11 +548,13 @@ impl JobSpec {
             .ok_or_else(|| format!("job entry needs a valid task (got '{}')", doc.get_str("task", "")))?;
         let raw_name = doc.get_str("name", "");
         let name = if raw_name.is_empty() { None } else { Some(raw_name) };
+        let batch = doc.get_usize("batch", 0);
         let spec = JobSpec {
             task,
             weight: doc.get_f64("weight", 1.0),
             name,
             steps: doc.get_usize("steps", 0),
+            batch: if doc.get("batch").is_some() { Some(batch) } else { None },
         };
         spec.validate()?;
         Ok(spec)
@@ -652,6 +685,44 @@ impl Pacing {
     }
 }
 
+/// Where a joining tenant lands in a multi-device fleet (`fleet.devices >
+/// 1`): the `--placement` strategy. Mirrors the EarliestNode / LeastLoaded /
+/// WarmLeastLoaded shapes from cluster schedulers; all three consider only
+/// devices whose remaining capacity fits the job's worst-case floor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Lowest-index device with room (the EarliestNode analogue): packs
+    /// early devices tight, maximising warm plan reuse on device 0.
+    FirstFit,
+    /// Device with the smallest committed-floor fraction of its budget
+    /// (ties to the lower index): spreads pressure evenly.
+    LeastLoaded,
+    /// Among devices whose shared plan cache already holds this tenant's
+    /// model signature, the least loaded; falls back to `LeastLoaded` when
+    /// no cache is warm for it. Trades a little balance for zero-replan
+    /// admission.
+    PlanCacheWarm,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Option<Placement> {
+        match s.to_ascii_lowercase().as_str() {
+            "first-fit" | "firstfit" | "first" => Some(Placement::FirstFit),
+            "least-loaded" | "leastloaded" | "spread" => Some(Placement::LeastLoaded),
+            "warm" | "plan-cache-warm" | "cache-warm" => Some(Placement::PlanCacheWarm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::FirstFit => "first-fit",
+            Placement::LeastLoaded => "least-loaded",
+            Placement::PlanCacheWarm => "warm",
+        }
+    }
+}
+
 /// The multi-job fleet: N concurrent training jobs time-sharing ONE device
 /// memory budget through the [`crate::fleet`] broker. `[fleet]` in TOML.
 #[derive(Clone, Debug)]
@@ -698,6 +769,21 @@ pub struct FleetConfig {
     /// Worker threads for cohort-parallel planning (0 = auto: the host's
     /// `available_parallelism`). 1 disables off-thread planning entirely.
     pub plan_threads: usize,
+    /// Number of devices. 1 (the default) is the classic single-GPU fleet —
+    /// bit-identical to every pre-device run. With N > 1 the global budget
+    /// splits evenly into N per-device budgets (remainder to device 0), each
+    /// arbitrated by its own broker under the [`crate::fleet::DeviceBudget`]
+    /// ledger; requires `arbitrated` and event pacing.
+    pub devices: usize,
+    /// Where arriving tenants land when `devices > 1` (see [`Placement`]).
+    pub placement: Placement,
+    /// Consecutive overshooting fills on one device before the fleet
+    /// migrates that device's largest-slack tenant elsewhere (0 disables
+    /// migration). Only meaningful with `devices > 1`.
+    pub migrate_after: usize,
+    /// Iterations a migrated tenant loses in transit (checkpoint, transfer,
+    /// restore) before it resumes — warm — on the target device.
+    pub migration_cost_iters: usize,
     pub mimose: MimoseConfig,
     pub coordinator: CoordinatorConfig,
     pub obs: ObsConfig,
@@ -720,6 +806,10 @@ impl Default for FleetConfig {
             pacing: Pacing::Lockstep,
             tick_ms: 200.0,
             plan_threads: 0,
+            devices: 1,
+            placement: Placement::FirstFit,
+            migrate_after: 3,
+            migration_cost_iters: 2,
             mimose: MimoseConfig::default(),
             coordinator: CoordinatorConfig::default(),
             obs: ObsConfig::default(),
@@ -823,6 +913,35 @@ impl FleetConfig {
                 t
             },
             plan_threads: doc.get_usize("fleet.plan_threads", d.plan_threads),
+            devices: {
+                let n = doc.get_usize("fleet.devices", d.devices);
+                if n == 0 {
+                    return Err("fleet.devices must be at least 1".into());
+                }
+                if n > 1 {
+                    if !doc.get_bool("fleet.arbitrated", d.arbitrated) {
+                        return Err("fleet.devices > 1 requires arbitrated brokers".into());
+                    }
+                    let pacing = doc.get_str("fleet.pacing", d.pacing.name());
+                    if Pacing::parse(&pacing) == Some(Pacing::Rounds) {
+                        return Err(
+                            "fleet.devices > 1 requires event pacing (lockstep/profiled)".into()
+                        );
+                    }
+                }
+                n
+            },
+            placement: {
+                let s = doc.get_str("fleet.placement", d.placement.name());
+                Placement::parse(&s).ok_or_else(|| {
+                    format!(
+                        "fleet.placement must be 'first-fit', 'least-loaded' or 'warm', got '{s}'"
+                    )
+                })?
+            },
+            migrate_after: doc.get_usize("fleet.migrate_after", d.migrate_after),
+            migration_cost_iters: doc
+                .get_usize("fleet.migration_cost_iters", d.migration_cost_iters),
             mimose: MimoseConfig::from_doc(doc),
             coordinator: CoordinatorConfig::from_doc(doc),
             obs: ObsConfig::from_doc(doc),
@@ -1147,6 +1266,71 @@ mod tests {
             Doc::parse("[[fleet.events]]\nkind = \"shock\"\nround = 5\nglobal_gb = -2.0\n")
                 .unwrap();
         assert!(FleetConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn placement_parse_roundtrip() {
+        for p in [Placement::FirstFit, Placement::LeastLoaded, Placement::PlanCacheWarm] {
+            assert_eq!(Placement::parse(p.name()), Some(p));
+        }
+        assert_eq!(Placement::parse("warm"), Some(Placement::PlanCacheWarm));
+        assert_eq!(Placement::parse("spread"), Some(Placement::LeastLoaded));
+        assert_eq!(Placement::parse("nope"), None);
+    }
+
+    #[test]
+    fn multi_device_fleet_from_toml() {
+        let doc = Doc::parse(
+            "[fleet]\ndevices = 3\nplacement = \"warm\"\nmigrate_after = 5\n\
+             migration_cost_iters = 4\n",
+        )
+        .unwrap();
+        let c = FleetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.devices, 3);
+        assert_eq!(c.placement, Placement::PlanCacheWarm);
+        assert_eq!(c.migrate_after, 5);
+        assert_eq!(c.migration_cost_iters, 4);
+        // defaults: one device, first-fit, migration armed but inert
+        let d = FleetConfig::default();
+        assert_eq!(d.devices, 1);
+        assert_eq!(d.placement, Placement::FirstFit);
+        assert_eq!(d.migrate_after, 3);
+        assert_eq!(d.migration_cost_iters, 2);
+        // invalid device counts and combinations are rejected
+        let doc = Doc::parse("[fleet]\ndevices = 0\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err(), "zero devices rejected");
+        let doc = Doc::parse("[fleet]\ndevices = 2\narbitrated = false\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err(), "equal-split multi-device rejected");
+        let doc = Doc::parse("[fleet]\ndevices = 2\npacing = \"rounds\"\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err(), "round-loop multi-device rejected");
+        let doc = Doc::parse("[fleet]\nplacement = \"everywhere\"\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err(), "unknown placement rejected");
+    }
+
+    #[test]
+    fn job_batch_override_from_toml() {
+        let doc = Doc::parse(
+            "[[fleet.jobs]]\ntask = \"tc-bert\"\nbatch = 8\n\
+             [[fleet.jobs]]\ntask = \"tc-bert\"\n",
+        )
+        .unwrap();
+        let c = FleetConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.jobs[0].batch, Some(8));
+        assert_eq!(c.jobs[0].batch(), 8);
+        assert_eq!(c.jobs[1].batch, None);
+        assert_eq!(c.jobs[1].batch(), Task::TcBert.batch(), "default is the Table 1 batch");
+        let doc = Doc::parse("[[fleet.jobs]]\ntask = \"tc-bert\"\nbatch = 0\n").unwrap();
+        assert!(FleetConfig::from_doc(&doc).is_err(), "zero batch rejected");
+        // the single-experiment override feeds through ExperimentConfig
+        let doc = Doc::parse("task = \"tc-bert\"\nbatch = 8\n").unwrap();
+        let e = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(e.batch(), 8);
+        let mut e = ExperimentConfig::new(Task::TcBert, PlannerKind::Mimose, 6.0);
+        assert_eq!(e.batch(), 32);
+        e.batch = Some(16);
+        assert_eq!(e.batch(), 16);
+        let doc = Doc::parse("task = \"tc-bert\"\nbatch = 0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]

@@ -175,6 +175,11 @@ pub fn observations_from_profile<F: Fn(u64) -> f64>(
 pub struct PlanRequest {
     /// Quantised cache key the solved plan must be stashed under.
     pub plan_key: SizeKey,
+    /// The estimator generation this problem was extracted from. Passed back
+    /// through `stash_plan` so a reshelter+refit between peek and stash
+    /// (which retrains the fits the `est` vector was predicted with) can
+    /// never have its stale solution consumed.
+    pub epoch: u64,
     est: Vec<u64>,
     excess: u64,
     bucket_tolerance: f64,
@@ -225,10 +230,15 @@ pub struct Coordinator {
     /// Mid-run budget rebinds that invalidated the plan cache.
     pub budget_changes: u64,
     /// A plan solved off-thread by the cohort-parallel planner, waiting for
-    /// the iteration it was solved for. Taken (and possibly dropped) at the
-    /// top of every `begin_iteration` so a reshelter, retrain, or key change
+    /// the iteration it was solved for: (quantised key, plan, estimator
+    /// epoch it was solved under). Taken (and possibly dropped) at the top
+    /// of every `begin_iteration` so a reshelter, retrain, or key change
     /// between stash and use can never serve a stale plan.
-    pending_plan: Option<(SizeKey, Plan)>,
+    pending_plan: Option<(SizeKey, Plan, u64)>,
+    /// Bumped on every reshelter: a stash solved against the pre-reshelter
+    /// estimator carries the old epoch and is refused even if the refit has
+    /// already completed by the time it is consumed.
+    estimator_epoch: u64,
     /// Warm-start mode: a disk-loaded shared cache may hold plans for keys
     /// this job has never sheltered — serve them instead of re-sheltering.
     warm_start: bool,
@@ -262,6 +272,7 @@ impl Coordinator {
             shared_hits: 0,
             budget_changes: 0,
             pending_plan: None,
+            estimator_epoch: 0,
             warm_start: false,
             warm_hits: 0,
         }
@@ -462,6 +473,7 @@ impl Coordinator {
         let excess = est_total.saturating_sub(usable);
         Some(PlanRequest {
             plan_key,
+            epoch: self.estimator_epoch,
             est,
             excess,
             bucket_tolerance: self.cfg.bucket_tolerance,
@@ -469,13 +481,15 @@ impl Coordinator {
         })
     }
 
-    /// Hand a plan solved off-thread back to this Coordinator. The next
+    /// Hand a plan solved off-thread back to this Coordinator. `epoch` is
+    /// the value from the `PlanRequest` the plan was solved for. The next
     /// `begin_iteration` consumes it instead of re-running Algorithm 1 —
-    /// but only if its quantised key still matches and nothing (reshelter,
-    /// retrain, budget rebind) invalidated it in between; otherwise the
-    /// stash is silently dropped and the serial path runs as usual.
-    pub fn stash_plan(&mut self, key: SizeKey, plan: Plan) {
-        self.pending_plan = Some((key, plan));
+    /// but only if its quantised key still matches, the estimator epoch is
+    /// still current, and nothing (reshelter, retrain, budget rebind)
+    /// invalidated it in between; otherwise the stash is silently dropped
+    /// and the serial path runs as usual.
+    pub fn stash_plan(&mut self, key: SizeKey, plan: Plan, epoch: u64) {
+        self.pending_plan = Some((key, plan, epoch));
     }
 
     /// Backfill the shared cache with a plan for `input` before persisting
@@ -576,6 +590,13 @@ impl Coordinator {
             self.collector.reopen(1);
             self.estimator_ready = false;
             self.cache.clear();
+            // a cohort-planned stash in flight (peeked this instant, stashed
+            // after this reshelter) was solved with the estimator this
+            // reshelter just invalidated — clear it and bump the epoch so a
+            // late `stash_plan` carrying the old epoch is refused too, even
+            // once the refit makes `estimator_ready` true again
+            self.pending_plan = None;
+            self.estimator_epoch += 1;
             // the entries this job pushed to the fleet's shared cache came
             // from the same stale estimator — purge them so no tenant
             // (including this one, post-refreeze) resurrects them
@@ -649,8 +670,9 @@ impl Coordinator {
         let plan = match stash {
             // `peek_plan_request` mirrored generate_plan exactly, so an
             // off-thread solve for this key under the still-current estimator
-            // is bit-identical to re-running Algorithm 1 here.
-            Some((k, p)) if k == plan_key && was_ready => p,
+            // (same epoch, already trained) is bit-identical to re-running
+            // Algorithm 1 here.
+            Some((k, p, e)) if k == plan_key && was_ready && e == self.estimator_epoch => p,
             _ => self.generate_plan(plan_key, profile),
         };
         self.cache.insert(plan_key, plan.clone());
@@ -1039,7 +1061,7 @@ mod tests {
             let input = InputDesc::new(32, seq);
             if let Some(req) = par.peek_plan_request(&input, &profile) {
                 let plan = req.solve(); // the "off-thread" solve
-                par.stash_plan(req.plan_key, plan);
+                par.stash_plan(req.plan_key, plan, req.epoch);
             }
             let ds = serial.begin_iteration(&input, &profile);
             let dp = par.begin_iteration(&input, &profile);
@@ -1070,7 +1092,7 @@ mod tests {
         );
 
         // a stash under the wrong key is dropped, not served
-        c.stash_plan((1, 1), Plan::of([0usize]));
+        c.stash_plan((1, 1), Plan::of([0usize]), 0);
         let p250 = transformer_profile(&spec(), 32, 250, 1.0);
         let i250 = InputDesc::new(32, 250);
         match c.begin_iteration(&i250, &p250).mode {
@@ -1084,7 +1106,7 @@ mod tests {
         let i512 = InputDesc::new(32, 512);
         let req = c.peek_plan_request(&i512, &p512).expect("novel key requests a solve");
         let loose = req.solve();
-        c.stash_plan(req.plan_key, loose.clone());
+        c.stash_plan(req.plan_key, loose.clone(), req.epoch);
         c.set_budget(4 * GIB);
         match c.begin_iteration(&i512, &p512).mode {
             IterationMode::Planned(p) => assert!(
@@ -1095,6 +1117,44 @@ mod tests {
             ),
             _ => panic!("expected planned"),
         }
+    }
+
+    #[test]
+    fn stash_solved_before_a_reshelter_is_refused_after_the_refit() {
+        // The latent bug: a cohort-planned request is peeked, then a novel
+        // input reshelters (reopen + refit), then the solved plan is stashed
+        // and consumed. The key still matches and the estimator is trained
+        // again ("was_ready"), so without the epoch tag the pre-reshelter
+        // solution — built from the invalidated fits — would be served.
+        let mut c = coord(true);
+        warmup(&mut c);
+        let p300 = transformer_profile(&spec(), 32, 300, 1.0);
+        let i300 = InputDesc::new(32, 300);
+        let _ = c.begin_iteration(&i300, &p300); // trains the estimator
+        let p240 = transformer_profile(&spec(), 32, 240, 1.0);
+        let i240 = InputDesc::new(32, 240);
+        let req = c.peek_plan_request(&i240, &p240).expect("seen-but-unplanned key solves ahead");
+
+        // a novel size reshelters (epoch bump), refreezes, and refits
+        let p512 = transformer_profile(&spec(), 32, 512, 1.0);
+        let i512 = InputDesc::new(32, 512);
+        assert!(matches!(c.begin_iteration(&i512, &p512).mode, IterationMode::Sheltered(_)));
+        let obs = observations_from_profile(&p512, &i512, |f| f as f64 / 1e9);
+        c.end_iteration(&i512, &obs, 1.0);
+        assert_eq!(c.reshelters, 1);
+        assert!(matches!(c.begin_iteration(&i512, &p512).mode, IterationMode::Planned(_)));
+
+        // the stale solve lands late, with a poison plan that would be
+        // detectable if consumed — key matches, estimator trained, but the
+        // epoch is one behind
+        c.stash_plan(req.plan_key, Plan::of([0usize]), req.epoch);
+        match c.begin_iteration(&i240, &p240).mode {
+            IterationMode::Planned(p) => {
+                assert_ne!(p, Plan::of([0usize]), "pre-reshelter stash must not be served");
+            }
+            _ => panic!("expected planned"),
+        }
+        assert_eq!(c.reshelters, 1, "refusing the stash must not re-shelter");
     }
 
     // ---- two-axis (seq2seq) coordination ----

@@ -108,10 +108,17 @@ pub struct InputStream {
 
 impl InputStream {
     pub fn new(task: Task, seed: u64) -> Self {
+        Self::with_batch(task, task.batch(), seed)
+    }
+
+    /// [`InputStream::new`] with an explicit collated batch size — fleet
+    /// tenants may override the task's Table 1 batch per job, which changes
+    /// the collate max (larger batches skew long).
+    pub fn with_batch(task: Task, batch: usize, seed: u64) -> Self {
         InputStream {
             dist: LengthDist::for_task(task),
             dist2: LengthDist::secondary_for_task(task),
-            batch: task.batch(),
+            batch,
             max_seq: task.model().max_seq,
             whole_batch: matches!(task, Task::Swin | Task::Unet),
             rng: Rng::new(seed),

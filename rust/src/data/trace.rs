@@ -170,6 +170,15 @@ pub struct ChaosConfig {
     pub shock_fraction: (f64, f64),
     /// The configured (pre-shock) global budget the fractions scale.
     pub global_budget_bytes: u64,
+    /// Pressure bursts: each injects `pressure_burst_size` simultaneous
+    /// self-retiring arrivals (`hot-<burst>-<j>`) at one random round — a
+    /// submission spike that concentrates demand on whichever device
+    /// absorbs it, driving the sustained overshoot that trips the
+    /// multi-device migration trigger. 0 (the default) disables the knob
+    /// and leaves the timeline bit-identical to the pre-knob generator.
+    pub pressure_bursts: usize,
+    /// Arrivals per pressure burst.
+    pub pressure_burst_size: usize,
 }
 
 impl ChaosConfig {
@@ -182,15 +191,17 @@ impl ChaosConfig {
             shock_count: 2,
             shock_fraction: (0.6, 1.0),
             global_budget_bytes,
+            pressure_bursts: 0,
+            pressure_burst_size: 4,
         }
     }
 }
 
-/// Layer preempt/resume/shock events over [`generate`]'s timeline, sorted
-/// by round. Deterministic in the trace seed: the same [`ChaosConfig`]
-/// always yields the same timeline, and the base trace is bit-identical
-/// to calling [`generate`] on `cfg.trace` alone (chaos draws come from a
-/// derived stream).
+/// Layer preempt/resume/shock events (and optional pressure-burst
+/// arrivals) over [`generate`]'s timeline, sorted by round. Deterministic
+/// in the trace seed: the same [`ChaosConfig`] always yields the same
+/// timeline, and the base trace is bit-identical to calling [`generate`]
+/// on `cfg.trace` alone (chaos draws come from a derived stream).
 pub fn generate_chaos(cfg: &ChaosConfig) -> Vec<FleetEvent> {
     let mut events = generate(&cfg.trace);
     let mut rng = Rng::new(cfg.trace.seed ^ 0xc4a0_5eed);
@@ -239,6 +250,20 @@ pub fn generate_chaos(cfg: &ChaosConfig) -> Vec<FleetEvent> {
         let frac = rng.range_f(lo.min(hi), hi.max(lo));
         let new_global = (cfg.global_budget_bytes as f64 * frac).max(1.0) as u64;
         chaos.push(FleetEvent::Shock { at_round, global_budget_bytes: new_global });
+    }
+    // pressure bursts draw from the same derived stream AFTER every other
+    // chaos draw, so turning the knob on never perturbs the notices and
+    // shocks generated above
+    for k in 0..if max >= 3 { cfg.pressure_bursts } else { 0 } {
+        let at_round = rng.range_u(1, max - 2);
+        for j in 0..cfg.pressure_burst_size.max(1) {
+            let task = cfg.trace.tasks[(k + j) % cfg.trace.tasks.len()];
+            let len = cfg.trace.length.sample(&mut rng);
+            let mut spec = JobSpec::new(task);
+            spec.name = Some(format!("hot-{k}-{j}"));
+            spec.steps = len.min(max - at_round).max(1);
+            chaos.push(FleetEvent::Arrive { spec, at_round });
+        }
     }
     events.extend(chaos);
     events.sort_by_key(|e| e.at_round());
@@ -429,6 +454,51 @@ mod tests {
         }
         assert!(!preempt_at.is_empty(), "preempt_prob 0.8 should fire");
         assert_eq!(shocks, 4);
+    }
+
+    #[test]
+    fn pressure_bursts_land_whole_and_leave_the_rest_of_the_chaos_alone() {
+        let trace = TraceConfig::new(vec![Task::TcBert, Task::McRoberta], 100, 5);
+        let mut cfg = ChaosConfig::new(trace.clone(), 16 << 30);
+        cfg.pressure_bursts = 2;
+        cfg.pressure_burst_size = 3;
+        let events = generate_chaos(&cfg);
+        let again = generate_chaos(&cfg);
+        assert_eq!(format!("{events:?}"), format!("{again:?}"), "bursts are seed-deterministic");
+        let hot: Vec<(usize, String)> = events
+            .iter()
+            .filter_map(|e| match e {
+                FleetEvent::Arrive { spec, at_round }
+                    if spec.name.as_deref().unwrap_or("").starts_with("hot-") =>
+                {
+                    Some((*at_round, spec.name.clone().unwrap()))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(hot.len(), 6, "2 bursts x 3 arrivals");
+        for k in 0..2 {
+            let rounds: std::collections::BTreeSet<usize> = hot
+                .iter()
+                .filter(|(_, n)| n.starts_with(&format!("hot-{k}-")))
+                .map(|&(r, _)| r)
+                .collect();
+            assert_eq!(rounds.len(), 1, "burst {k} must land whole at one round");
+            let r = *rounds.iter().next().unwrap();
+            assert!(r >= 1 && r < 100, "burst round {r} escapes the timeline");
+        }
+        // the knob draws after every other chaos draw: the notice/shock
+        // stream is bitwise the no-knob one
+        let plain = generate_chaos(&ChaosConfig::new(trace, 16 << 30));
+        let strip = |evs: &[FleetEvent]| -> String {
+            let kept: Vec<&FleetEvent> = evs
+                .iter()
+                .filter(|e| !matches!(e, FleetEvent::Arrive { spec, .. }
+                    if spec.name.as_deref().unwrap_or("").starts_with("hot-")))
+                .collect();
+            format!("{kept:?}")
+        };
+        assert_eq!(strip(&events), strip(&plain));
     }
 
     #[test]

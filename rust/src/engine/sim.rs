@@ -61,7 +61,13 @@ pub fn max_task_profile(task: Task) -> ModelProfile {
 /// memory is exactly quadratic in it (no window padding), so the default
 /// single-axis key already linearises perfectly.
 pub fn input_for(task: Task, shape: (usize, usize)) -> InputDesc {
-    let batch = task.batch();
+    input_for_batch(task, task.batch(), shape)
+}
+
+/// [`input_for`] with an explicit batch size — fleet tenants may override
+/// the task's Table 1 batch per job, and the estimator key must reflect the
+/// batch actually collated.
+pub fn input_for_batch(task: Task, batch: usize, shape: (usize, usize)) -> InputDesc {
     match task {
         Task::Swin => InputDesc::new(batch, SwinSpec::default().padded_tokens(shape.0)),
         Task::Seq2seq => {
@@ -137,6 +143,10 @@ pub struct SimEngine {
 /// cost of its first sight of every shape the donor already saw.
 pub struct ShapeMemos {
     task: Task,
+    /// The batch the donor collated with: profiles are functions of
+    /// (task, batch, shape), so a batch-overridden tenant's memos must not
+    /// seed a default-batch twin.
+    batch: usize,
     profiles: std::collections::BTreeMap<(usize, usize), std::rc::Rc<ModelProfile>>,
     components: std::collections::BTreeMap<(usize, usize), std::rc::Rc<Vec<Vec<u64>>>>,
 }
@@ -145,6 +155,11 @@ impl ShapeMemos {
     /// The task the donor engine ran — memos only apply to the same task.
     pub fn task(&self) -> Task {
         self.task
+    }
+
+    /// The collated batch size the donor ran with.
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     /// Number of memoised shapes (profile entries).
@@ -189,7 +204,7 @@ impl SimEngine {
             .create(fixed_bytes, TensorClass::Fixed, usize::MAX, 0.0)
             .map_err(SimError::FixedStateOom)?;
         let planner = make_planner(&cfg);
-        let stream = InputStream::new(cfg.task, cfg.seed);
+        let stream = InputStream::with_batch(cfg.task, cfg.batch(), cfg.seed);
         Ok(SimEngine {
             cfg,
             cost,
@@ -246,18 +261,20 @@ impl SimEngine {
     pub fn take_shape_memos(&mut self) -> ShapeMemos {
         ShapeMemos {
             task: self.cfg.task,
+            batch: self.cfg.batch(),
             profiles: std::mem::take(&mut self.profile_cache),
             components: std::mem::take(&mut self.component_cache),
         }
     }
 
     /// Seed the per-shape memo caches from a retired donor. No-op when the
-    /// donor ran a different task (its shapes describe another
-    /// architecture). Shapes this engine already memoised itself keep their
-    /// own entries — profiles are pure functions of (task, shape), so either
-    /// copy is identical; keeping ours avoids touching live `Rc` handles.
+    /// donor ran a different task or a different collated batch (its shapes
+    /// describe another architecture / another memory curve). Shapes this
+    /// engine already memoised itself keep their own entries — profiles are
+    /// pure functions of (task, batch, shape), so either copy is identical;
+    /// keeping ours avoids touching live `Rc` handles.
     pub fn adopt_shape_memos(&mut self, memos: ShapeMemos) {
-        if memos.task != self.cfg.task {
+        if memos.task != self.cfg.task || memos.batch != self.cfg.batch() {
             return;
         }
         for (shape, p) in memos.profiles {
@@ -276,11 +293,12 @@ impl SimEngine {
     /// untrained estimator, or no shared cache.
     pub fn export_plans(&mut self) -> usize {
         let task = self.cfg.task;
+        let batch = self.cfg.batch();
         let shapes: Vec<(usize, usize)> = self.profile_cache.keys().copied().collect();
         let mut inserted = 0;
         for shape in shapes {
             let profile = self.profile_for_shape(shape);
-            let input = input_for(task, shape);
+            let input = input_for_batch(task, batch, shape);
             if let Some(c) = self.planner.coordinator_mut() {
                 if c.export_plan(&input, &profile) {
                     inserted += 1;
@@ -301,7 +319,7 @@ impl SimEngine {
     /// demand math, so profiles are built once per distinct collated shape).
     pub fn profile_for_shape(&mut self, shape: (usize, usize)) -> std::rc::Rc<ModelProfile> {
         let task = self.cfg.task;
-        let batch = task.batch();
+        let batch = self.cfg.batch();
         if self.profile_cache.len() >= Self::SHAPE_MEMO_CAP
             && !self.profile_cache.contains_key(&shape)
         {
@@ -341,7 +359,7 @@ impl SimEngine {
     /// Simulate one training iteration at the given collated input shape.
     pub fn run_iteration_shape(&mut self, shape: (usize, usize)) -> IterationMetrics {
         let profile = self.profile_for_shape(shape);
-        let input = input_for(self.cfg.task, shape);
+        let input = input_for_batch(self.cfg.task, self.cfg.batch(), shape);
         let decision = self.planner.begin_iteration(&input, &profile);
 
         self.ledger.reset_peak();
@@ -903,6 +921,29 @@ mod tests {
         let mut qa = SimEngine::new(cfg(Task::QaBert, PlannerKind::Mimose, 6.0, 0)).unwrap();
         qa.adopt_shape_memos(fresh.take_shape_memos());
         assert!(qa.profile_cache.is_empty(), "cross-task memos rejected");
+    }
+
+    #[test]
+    fn batch_override_changes_the_profile_and_fences_the_memos() {
+        // a batch-overridden tenant sizes its activations for ITS batch…
+        let mut big = SimEngine::new(cfg(Task::TcBert, PlannerKind::Mimose, 16.0, 0)).unwrap();
+        let mut small_cfg = cfg(Task::TcBert, PlannerKind::Mimose, 16.0, 0);
+        small_cfg.batch = Some(8);
+        let mut small = SimEngine::new(small_cfg).unwrap();
+        let p_big = big.profile_for_shape((300, 0));
+        let p_small = small.profile_for_shape((300, 0));
+        let act = |p: &ModelProfile| p.layers().iter().map(|l| l.act_bytes).sum::<u64>();
+        assert!(
+            act(&p_big) > act(&p_small),
+            "batch 32 must hold more activation bytes than batch 8 at the same seqlen"
+        );
+        // …keys the estimator on it…
+        assert_eq!(input_for_batch(Task::TcBert, 8, (300, 0)).batch, 8);
+        // …and refuses a same-task donor with a different collated batch
+        let memos = big.take_shape_memos();
+        assert_eq!(memos.batch(), 32);
+        small.adopt_shape_memos(memos);
+        assert!(small.profile_cache.is_empty(), "cross-batch memos rejected");
     }
 
     #[test]

@@ -467,6 +467,16 @@ impl BudgetBroker {
         self.floor_sum_live
     }
 
+    /// `(id, slack)` of every tenant holding budget above its floor of
+    /// record, in claw-back order: **largest slack first, equal-slack ties
+    /// in ascending id**. The tie order is part of the contract — shock
+    /// claw-back and the fleet's migration victim selection both walk this
+    /// list, so it must be deterministic across platforms and identical to
+    /// the holder scan it replaced.
+    pub fn claw_candidates(&self) -> Vec<(u64, u64)> {
+        self.slack_index.claw_order().collect()
+    }
+
     /// Mid-run budget shock: the device-wide budget becomes `new_global`
     /// (fragmentation, a co-located process, spot reclamation). Tenants
     /// are tightened to fit *immediately* — largest slack first, ties to
@@ -773,6 +783,97 @@ pub fn weighted_jain(budgets: &[u64], floors: &[u64], weights: &[f64]) -> f64 {
     }
     let sq: f64 = ys.iter().map(|y| y * y).sum();
     (sum * sum) / (ys.len() as f64 * sq)
+}
+
+/// N per-device budgets under one global ledger: a [`BudgetBroker`] per
+/// device, each arbitrating its own slice of the fleet-wide budget. The
+/// global splits evenly across devices (integer division, remainder to
+/// device 0), so `devices = 1` passes the global through exactly and every
+/// single-device invariant — floors held, Σ alloc ≤ device budget, the
+/// claw-back order — applies per device unchanged. Placement (which device
+/// a tenant fills on) is the scheduler's decision; the ledger only
+/// guarantees that no device ever over-commits its slice.
+pub struct DeviceBudget {
+    brokers: Vec<BudgetBroker>,
+    device_globals: Vec<u64>,
+}
+
+/// Even split with the remainder on device 0 — deterministic, and exact
+/// pass-through for one device. The scheduler uses this to pre-compute the
+/// per-device targets of a fleet-wide shock before asking the arbiter.
+pub(crate) fn split_global(global: u64, devices: usize) -> Vec<u64> {
+    let n = devices as u64;
+    let base = global / n;
+    let mut slices = vec![base; devices];
+    slices[0] += global - base * n;
+    slices
+}
+
+impl DeviceBudget {
+    /// One broker per device over an even split of `global`. `devices`
+    /// must be ≥ 1 (the config layer rejects 0).
+    pub fn new(global: u64, devices: usize, grid_bytes: u64, demand_smoothing: f64) -> Self {
+        assert!(devices >= 1, "a fleet needs at least one device");
+        let device_globals = split_global(global, devices);
+        let brokers = device_globals
+            .iter()
+            .map(|&g| BudgetBroker::new(g, grid_bytes, demand_smoothing))
+            .collect();
+        DeviceBudget { brokers, device_globals }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.brokers.len()
+    }
+
+    /// The slice of the global budget device `d` arbitrates.
+    pub fn device_global(&self, d: usize) -> u64 {
+        self.device_globals[d]
+    }
+
+    /// Σ per-device slices — the fleet-wide budget of record.
+    pub fn global(&self) -> u64 {
+        self.device_globals.iter().sum()
+    }
+
+    /// Σ in-force allocations across every device.
+    pub fn alloc_total(&self) -> u64 {
+        self.brokers.iter().map(|b| b.alloc_total()).sum()
+    }
+
+    pub fn broker(&self, d: usize) -> &BudgetBroker {
+        &self.brokers[d]
+    }
+
+    pub fn broker_mut(&mut self, d: usize) -> &mut BudgetBroker {
+        &mut self.brokers[d]
+    }
+
+    /// Fleet-wide budget shock: re-split `new_global` evenly and shock each
+    /// device to its new slice. Errors **without touching any state** if any
+    /// device's live floors exceed its new slice — the caller force-stops or
+    /// drains victims on the offending devices first, then retries. Returns
+    /// every tightened tenant as `(device, id, new_budget)`, in device order
+    /// then claw order (deterministic).
+    pub fn shock(&mut self, new_global: u64) -> Result<Vec<(usize, u64, u64)>, String> {
+        let slices = split_global(new_global, self.brokers.len());
+        for (d, (b, &slice)) in self.brokers.iter().zip(&slices).enumerate() {
+            if b.floor_sum_live() > slice {
+                return Err(format!(
+                    "infeasible shock: device {d} live floors {} exceed its new slice {slice}",
+                    b.floor_sum_live()
+                ));
+            }
+        }
+        let mut rebinds = Vec::new();
+        for (d, (b, &slice)) in self.brokers.iter_mut().zip(&slices).enumerate() {
+            for (id, budget) in b.shock(slice)? {
+                rebinds.push((d, id, budget));
+            }
+        }
+        self.device_globals = slices;
+        Ok(rebinds)
+    }
 }
 
 #[cfg(test)]
@@ -1278,19 +1379,28 @@ mod tests {
     fn prop_slack_index_matches_the_holder_scan() {
         // randomized allocate/update/shock/depart sequences: after every
         // operation the maintained index must reproduce the scan order
-        // bit-identically (same ids, same slacks, same sequence)
+        // bit-identically (same ids, same slacks, same sequence). Half the
+        // floor/prediction draws come from a coarse grid so equal-slack
+        // (duplicate) holders are common — the ascending-id tie order is
+        // part of the contract, not an accident of distinct slacks.
         forall(
             83,
             200,
             |r| {
                 let ops: Vec<(u8, u64, u64, u64)> = (0..r.range_u(3, 12))
                     .map(|_| {
-                        (
-                            r.range_u(0, 4) as u8,
-                            r.range_u(0, 5) as u64,
-                            r.range_u(1, 64) as u64 * (1 << 24),
-                            r.range_u(0, 512) as u64 * (1 << 24),
-                        )
+                        let op = r.range_u(0, 4) as u8;
+                        let id = r.range_u(0, 5) as u64;
+                        let coarse = r.range_u(0, 2) == 0;
+                        let (floor, pred) = if coarse {
+                            (GIB, r.range_u(0, 3) as u64 * 2 * GIB)
+                        } else {
+                            (
+                                r.range_u(1, 64) as u64 * (1 << 24),
+                                r.range_u(0, 512) as u64 * (1 << 24),
+                            )
+                        };
+                        (op, id, floor, pred)
                     })
                     .collect();
                 ops
@@ -1298,9 +1408,10 @@ mod tests {
             |ops| {
                 let global = 16 * GIB;
                 let mut b = BudgetBroker::new(global, 64 << 20, 0.3);
+                // two identical tenants seed a duplicate-slack pair up front
                 let _ = b.allocate(&[
                     d(0, GIB, Some(6 * GIB)),
-                    d(1, GIB, Some(5 * GIB)),
+                    d(1, GIB, Some(4 * GIB)),
                     d(2, GIB, Some(4 * GIB)),
                 ]);
                 for &(op, id, floor, pred) in ops {
@@ -1322,15 +1433,95 @@ mod tests {
                         }
                         _ => b.depart(id),
                     }
-                    let indexed: Vec<(u64, u64)> = b.slack_index.claw_order().collect();
+                    let indexed = b.claw_candidates();
                     ensure(
                         indexed == scan_claw_order(&b),
                         &format!("index diverged from scan after op {op}: {indexed:?}"),
+                    )?;
+                    ensure(
+                        indexed.windows(2).all(|w| {
+                            w[0].1 > w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0)
+                        }),
+                        &format!("claw order not (slack desc, id asc): {indexed:?}"),
                     )?;
                 }
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn equal_slack_claw_order_is_id_ordered() {
+        let mut b = broker(12 * GIB);
+        // identical tenants (same floor, prediction, weight) hold identical
+        // slack; the claw order must still be deterministic: ascending id
+        b.allocate(&[
+            d(2, GIB, Some(3 * GIB)),
+            d(0, GIB, Some(3 * GIB)),
+            d(1, GIB, Some(3 * GIB)),
+        ])
+        .unwrap();
+        let cands = b.claw_candidates();
+        assert_eq!(cands.len(), 3);
+        assert!(
+            cands.iter().all(|&(_, s)| s == cands[0].1),
+            "identical tenants must hold identical slack: {cands:?}"
+        );
+        assert_eq!(cands.iter().map(|&(id, _)| id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(cands, scan_claw_order(&b), "index matches the oracle on ties");
+        // a shock needing less than one tenant's slack claws id 0 alone
+        let target = b.alloc_total() - GIB;
+        let rebinds = b.shock(target).unwrap();
+        assert_eq!(rebinds.len(), 1);
+        assert_eq!(rebinds[0].0, 0, "equal-slack tie resolves to the smallest id");
+    }
+
+    // ---- multi-device ledger ----
+
+    #[test]
+    fn device_budget_splits_evenly_with_remainder_to_device_zero() {
+        let total = 10 * GIB + 5;
+        let db = DeviceBudget::new(total, 3, 1, 0.0);
+        assert_eq!(db.device_count(), 3);
+        let per = total / 3;
+        assert_eq!(db.device_global(1), per);
+        assert_eq!(db.device_global(2), per);
+        assert_eq!(db.device_global(0), total - 2 * per);
+        assert_eq!(db.global(), total);
+        // one device passes the global through exactly (the devices = 1
+        // bit-identity hinges on this)
+        let solo = DeviceBudget::new(16 * GIB, 1, 1, 0.0);
+        assert_eq!(solo.device_count(), 1);
+        assert_eq!(solo.device_global(0), 16 * GIB);
+        assert_eq!(solo.broker(0).global(), 16 * GIB);
+    }
+
+    #[test]
+    fn device_budget_brokers_are_independent_ledgers() {
+        let mut db = DeviceBudget::new(16 * GIB, 2, 1, 0.0);
+        db.broker_mut(0)
+            .allocate(&[d(0, GIB, Some(2 * GIB)), d(1, GIB, Some(2 * GIB))])
+            .unwrap();
+        db.broker_mut(1).allocate(&[d(2, GIB, Some(7 * GIB))]).unwrap();
+        assert!(db.broker(0).alloc_total() <= db.device_global(0));
+        assert!(db.broker(1).alloc_total() <= db.device_global(1));
+        assert_eq!(db.alloc_total(), db.broker(0).alloc_total() + db.broker(1).alloc_total());
+        // a fleet-wide shock re-splits and tightens each device to its slice
+        let rebinds = db.shock(8 * GIB).unwrap();
+        assert_eq!(db.device_global(0), 4 * GIB);
+        assert_eq!(db.device_global(1), 4 * GIB);
+        assert!(db.broker(0).alloc_total() <= 4 * GIB);
+        assert!(db.broker(1).alloc_total() <= 4 * GIB);
+        assert!(
+            rebinds.iter().all(|&(dev, _, _)| dev < 2)
+                && rebinds.windows(2).all(|w| w[0].0 <= w[1].0),
+            "rebinds carry their device, in device order: {rebinds:?}"
+        );
+        // an infeasible shock errors without touching any device's state
+        let before = (db.device_global(0), db.broker(1).alloc_total());
+        assert!(db.shock(GIB).is_err(), "device-0 floors no longer fit a 512 MiB slice");
+        assert_eq!(db.device_global(0), before.0, "failed shock must not re-split");
+        assert_eq!(db.broker(1).alloc_total(), before.1);
     }
 
     #[test]

@@ -14,10 +14,13 @@ use std::collections::BinaryHeap;
 
 /// What happens when an event fires. Ranks (the within-instant order) are
 /// part of the contract: Depart < Arrive < IterationComplete < Rebind <
-/// Preempt < Resume < BudgetShock < DrainExpire. The chaos kinds rank
-/// after the original four so shock-free timelines keep the exact
+/// Preempt < Resume < BudgetShock < DrainExpire < Migrate. The chaos kinds
+/// rank after the original four so shock-free timelines keep the exact
 /// within-instant order the round loop pinned; they still land before the
 /// instant's fill because the scheduler drains the whole cohort first.
+/// Migrate ranks last: the pressure that triggers it is observed by the
+/// instant's fill, so the move lands in a follow-up cohort after every
+/// scripted event at that instant has applied.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EventKind {
     /// A scripted departure: the named tenant leaves, its budget is
@@ -46,6 +49,11 @@ pub enum EventKind {
     /// A drain window expired: if the tenant is still live it is
     /// force-stopped (its in-flight iteration did not finish in time).
     DrainExpire { id: u64 },
+    /// Sustained pressure on a device: move the tenant to device `to`
+    /// (depart its current device, warm-arrive on the target after the
+    /// configured lost-iteration cost). Stale if the tenant already
+    /// departed, parked, or was force-stopped by the time it fires.
+    Migrate { id: u64, to: usize },
 }
 
 impl EventKind {
@@ -60,6 +68,7 @@ impl EventKind {
             EventKind::Resume { .. } => 5,
             EventKind::BudgetShock { .. } => 6,
             EventKind::DrainExpire { .. } => 7,
+            EventKind::Migrate { .. } => 8,
         }
     }
 }
@@ -192,6 +201,7 @@ mod tests {
     #[test]
     fn chaos_kinds_rank_after_the_original_four() {
         let mut q = EventQueue::new();
+        q.push(5.0, EventKind::Migrate { id: 9, to: 1 });
         q.push(5.0, EventKind::DrainExpire { id: 9 });
         q.push(5.0, EventKind::BudgetShock { new_global: 7 });
         q.push(5.0, EventKind::Resume { name: "b".into() });
@@ -204,7 +214,7 @@ mod tests {
         let ranks: Vec<u8> = cohort.iter().map(|e| e.kind.rank()).collect();
         assert_eq!(
             ranks,
-            vec![0, 1, 2, 3, 4, 5, 6, 7],
+            vec![0, 1, 2, 3, 4, 5, 6, 7, 8],
             "chaos kinds fire after departures/arrivals/completions/rebinds"
         );
         assert!(q.is_empty());

@@ -45,6 +45,11 @@ pub struct BrokerDecision {
     /// the ledger invariant is always against THIS, not the configured
     /// starting budget.
     pub global: u64,
+    /// Device the decision ran on. Single-device fleets stamp 0 everywhere;
+    /// multi-device fleets fill each device's due cohort separately, so the
+    /// ledger invariants (Σ allocations ≤ global, alloc_total ≤ global) are
+    /// per-device and must be grouped by THIS before checking.
+    pub device: usize,
 }
 
 /// Per-job rollup over a fleet run — departed and completed jobs included.
@@ -56,6 +61,9 @@ pub struct JobSummary {
     pub name: String,
     /// Priority/SLA weight the broker filled slack with.
     pub weight: f64,
+    /// Device the job ended on. Placement assigns it at arrival; a
+    /// migration rewrites it, so this is the FINAL home, not the first.
+    pub device: usize,
     /// Round the job joined (0 for initial tenants).
     pub arrived_round: usize,
     /// First round the job no longer ran — a scripted departure or its own
@@ -125,6 +133,20 @@ pub struct FleetReport {
     /// Drains that expired (or shock victims evicted) before the job could
     /// park gracefully — the job was stopped mid-iteration.
     pub forced_stops: u64,
+    /// Device count the fleet ran with (1 = the classic single-device run).
+    pub devices: usize,
+    /// Per-device budget slices in force at the END of the run (shocks
+    /// re-split; Σ = the fleet-wide global then in force).
+    pub device_globals: Vec<u64>,
+    /// Jobs moved off a pressured device onto a cooler one.
+    pub migrations: u64,
+    /// Σ iterations charged as migration cost (lost while state moved).
+    pub migration_lost_iters: u64,
+    /// Placement decisions taken (initial tenants + scripted arrivals).
+    pub placements: u64,
+    /// Placements where the chosen device's shared cache already held the
+    /// job's model signature (only `PlanCacheWarm` can score these).
+    pub placement_warm_hits: u64,
 }
 
 impl FleetReport {
@@ -196,6 +218,23 @@ impl FleetReport {
         }
         s
     }
+
+    /// Fraction of placement decisions that landed on a device whose shared
+    /// cache already held the job's model signature; 0.0 when nothing was
+    /// placed (or the strategy never probes the caches).
+    pub fn placement_warm_hit_rate(&self) -> f64 {
+        if self.placements == 0 {
+            0.0
+        } else {
+            self.placement_warm_hits as f64 / self.placements as f64
+        }
+    }
+
+    /// Decisions stamped for one device — the unit the per-device ledger
+    /// invariants are checked over.
+    pub fn device_rounds(&self, device: usize) -> impl Iterator<Item = &BrokerDecision> {
+        self.rounds.iter().filter(move |d| d.device == device)
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +246,7 @@ mod tests {
             id: 0,
             name: "t#0".into(),
             weight: 1.0,
+            device: 0,
             arrived_round: 0,
             departed_round: None,
             steps,
@@ -238,6 +278,7 @@ mod tests {
             aggregate_peak: peak,
             alloc_total: peak,
             global: 100,
+            device: 0,
         }
     }
 
@@ -254,6 +295,12 @@ mod tests {
             preemptions: 0,
             shocks: 0,
             forced_stops: 0,
+            devices: 1,
+            device_globals: vec![100],
+            migrations: 0,
+            migration_lost_iters: 0,
+            placements: 2,
+            placement_warm_hits: 1,
         };
         assert_eq!(r.total_steps(), 40);
         assert!((r.total_ms() - 2000.0).abs() < 1e-9);
@@ -267,6 +314,9 @@ mod tests {
         assert_eq!(s.count(), 2);
         assert!((s.mean() - 0.2).abs() < 1e-12);
         assert!((s.max() - 0.3).abs() < 1e-12);
+        assert!((r.placement_warm_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(r.device_rounds(0).count(), 2);
+        assert_eq!(r.device_rounds(1).count(), 0);
     }
 
     #[test]
@@ -299,6 +349,12 @@ mod tests {
             preemptions: 0,
             shocks: 0,
             forced_stops: 0,
+            devices: 2,
+            device_globals: vec![50, 50],
+            migrations: 1,
+            migration_lost_iters: 2,
+            placements: 0,
+            placement_warm_hits: 0,
         };
         assert!((r.weighted_jain_mean() - 0.75).abs() < 1e-12);
         assert_eq!(r.departed_jobs(), 1);
@@ -318,10 +374,17 @@ mod tests {
             preemptions: 0,
             shocks: 0,
             forced_stops: 0,
+            devices: 1,
+            device_globals: vec![0],
+            migrations: 0,
+            migration_lost_iters: 0,
+            placements: 0,
+            placement_warm_hits: 0,
         };
         assert_eq!(r.throughput_iters_per_s(), 0.0);
         assert_eq!(r.max_aggregate_peak(), 0);
         assert!(r.budget_respected());
         assert_eq!(r.weighted_jain_mean(), 1.0);
+        assert_eq!(r.placement_warm_hit_rate(), 0.0, "0 placements: no NaN");
     }
 }

@@ -1,5 +1,7 @@
-//! Fleet: a multi-job budget arbiter that time-shares ONE GPU memory budget
-//! across concurrent input-dynamic training jobs.
+//! Fleet: a multi-job budget arbiter that time-shares GPU memory budgets
+//! across concurrent input-dynamic training jobs — one broker per device
+//! under a global ledger, with placement and pressure-driven migration
+//! when the fleet spans more than one device.
 //!
 //! Mimose plans checkpointing for one job under one fixed budget; its core
 //! insight — per-mini-batch memory demand is input-dependent and predictable
@@ -53,7 +55,7 @@
 //! * [`events::EventQueue`] — the min-heap behind the core: events order
 //!   by (time, within-instant rank, push order), where the rank contract
 //!   Depart < Arrive < IterationComplete < Rebind < Preempt < Resume <
-//!   BudgetShock < DrainExpire reproduces the round loop's
+//!   BudgetShock < DrainExpire < Migrate reproduces the round loop's
 //!   apply-events-then-step semantics inside a single instant and applies
 //!   chaos only after the instant's normal work has settled.
 //! * **Preemption & drain** — a `Preempt` event is a *notice*: the job
@@ -80,9 +82,27 @@
 //!   under an equal-or-tighter budget are served). Entries are retained
 //!   across departures, so a re-arriving signature hits plans contributed
 //!   before it left.
+//! * [`broker::DeviceBudget`] — the multi-device arbiter: the fleet global
+//!   splits into per-device slices, each backing an independent
+//!   `BudgetBroker`; a fleet-wide shock re-splits and pre-validates every
+//!   slice before touching any state. `--devices N` turns it on;
+//!   `--placement` picks where arrivals land (`first-fit`, `least-loaded`,
+//!   or `warm`, which prefers the device whose [`crate::scheduler::SharedPlanCache`]
+//!   already holds the arrival's model signature). Sustained overshoot
+//!   pressure on a device (`migrate_after` consecutive overshoot fills)
+//!   migrates its biggest slack holder to the least-loaded device with
+//!   headroom: a `Migrate` event departs it from the source broker,
+//!   re-attaches it to the target's shared cache (so already-contributed
+//!   plans warm-hit), and charges `migration_cost_iters` lost iterations at
+//!   the next iteration boundary — never tearing one. With `devices = 1`
+//!   every one of these paths degenerates and the event core is
+//!   bit-identical to the single-device scheduler (pinned by a randomized
+//!   differential in `tests/fleet_devices.rs`).
 //! * [`metrics::FleetReport`] — aggregate peak vs. global budget, per-job
 //!   lifetimes and throughput, weighted Jain fairness, broker decision
-//!   latency, cross-job cache hit rate.
+//!   latency, cross-job cache hit rate; per-device decision streams
+//!   (`device_rounds`), migration counts/cost, and the warm-placement hit
+//!   rate.
 //!
 //! Entry points: `mimose fleet` (CLI; `--events` loads a scripted
 //! timeline), `examples/fleet.rs` (`--events` demo), the `[fleet]` TOML
@@ -98,7 +118,7 @@ pub mod events;
 pub mod metrics;
 pub mod scheduler;
 
-pub use broker::{weighted_jain, Allocation, BudgetBroker, IncrementalFill, JobDemand};
+pub use broker::{weighted_jain, Allocation, BudgetBroker, DeviceBudget, IncrementalFill, JobDemand};
 pub use events::{EventKind, EventQueue, ScheduledEvent};
 pub use metrics::{BrokerDecision, FleetReport, JobSummary};
 pub use scheduler::{FleetJob, FleetScheduler};

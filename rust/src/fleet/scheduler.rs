@@ -62,15 +62,15 @@
 //! sound over-approximation; budget shocks instead re-validate at
 //! runtime, force-stopping victims when a post-shock fill cannot fit.
 
-use super::broker::{weighted_jain, BudgetBroker, JobDemand};
+use super::broker::{split_global, weighted_jain, BudgetBroker, DeviceBudget, JobDemand};
 use super::events::{EventKind, EventQueue};
 use super::metrics::{BrokerDecision, FleetReport, JobSummary};
 use crate::config::{
-    ExperimentConfig, FleetConfig, FleetEvent, JobSpec, Pacing, PlannerKind, Task,
+    ExperimentConfig, FleetConfig, FleetEvent, JobSpec, Pacing, Placement, PlannerKind, Task,
 };
 use crate::coordinator::{Coordinator, Phase, PlanRequest};
 use crate::data::InputStream;
-use crate::engine::sim::{input_for, ShapeMemos, SimEngine};
+use crate::engine::sim::{input_for_batch, ShapeMemos, SimEngine};
 use crate::metrics::RunReport;
 use crate::obs;
 use crate::scheduler::{
@@ -133,6 +133,20 @@ pub struct FleetJob {
     arrived_round: usize,
     /// Iterations after which the job completes and departs (0 = never).
     steps_limit: usize,
+    /// Device the job runs on — placement sets it (initial tenants at
+    /// construction, scripted arrivals at their Arrive instant) and a
+    /// migration rewrites it. Always 0 on a single-device fleet.
+    device: usize,
+    /// Budget-independent model signature: (architecture, effective batch,
+    /// activation factor). Scopes the shared plan cache AND the retired-
+    /// engine memo pool — two same-task tenants with different batch
+    /// overrides are different models and must never exchange either.
+    signature: u64,
+    /// Effective mini-batch (the spec's override, or the task default).
+    batch: usize,
+    /// Worst-case conservative floor, frozen by the construction-time
+    /// validation walk; placement and the per-device load ledger use it.
+    worst: u64,
     engine: SimEngine,
     stream: InputStream,
     /// Input shape drawn for the upcoming round (demand and step must
@@ -155,7 +169,9 @@ impl FleetJob {
         budget: u64,
     ) -> Result<Self, String> {
         let task = spec.task;
+        let batch = spec.batch();
         let mut cfg = ExperimentConfig::new(task, PlannerKind::Mimose, 1.0);
+        cfg.batch = spec.batch;
         cfg.budget_bytes = budget;
         cfg.seed = fleet.seed + id;
         cfg.max_iters = fleet.steps;
@@ -168,6 +184,7 @@ impl FleetJob {
             .name
             .clone()
             .unwrap_or_else(|| format!("{}#{id}", task.name()));
+        let signature = model_signature(&task.model(), batch, task.act_factor());
         Ok(FleetJob {
             id,
             name,
@@ -175,8 +192,12 @@ impl FleetJob {
             weight: spec.weight,
             arrived_round,
             steps_limit: spec.steps,
+            device: 0,
+            signature,
+            batch,
+            worst: 0,
             engine,
-            stream: InputStream::new(task, seed),
+            stream: InputStream::with_batch(task, batch, seed),
             pending: None,
             budget,
             report: RunReport::new("mimose-fleet", budget),
@@ -198,6 +219,17 @@ impl FleetJob {
 
     pub fn budget(&self) -> u64 {
         self.budget
+    }
+
+    /// Device the job currently runs on (0 on a single-device fleet).
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// Budget-independent model signature (task architecture, effective
+    /// batch, activation factor).
+    pub fn signature(&self) -> u64 {
+        self.signature
     }
 
     pub fn coordinator(&self) -> Option<&Coordinator> {
@@ -223,7 +255,7 @@ impl FleetJob {
         self.pending = Some(shape);
         let floor = self.floor_for(shape, reserve).max(configured_floor);
         let profile = self.engine.profile_for_shape(shape);
-        let input = input_for(self.task, shape);
+        let input = input_for_batch(self.task, self.batch, shape);
         let predicted = self
             .engine
             .coordinator()
@@ -232,9 +264,12 @@ impl FleetJob {
     }
 
     /// Worst-case floor (max collated input on both axes): the tenancy
-    /// must fit these.
+    /// must fit these. Caches the result on the job — placement and the
+    /// per-device load ledger read it without recomputing.
     fn worst_floor(&mut self, configured_floor: u64, reserve: u64) -> u64 {
-        self.floor_for(self.task.max_shape(), reserve).max(configured_floor)
+        let w = self.floor_for(self.task.max_shape(), reserve).max(configured_floor);
+        self.worst = w;
+        w
     }
 
     fn rebind(&mut self, budget: u64) {
@@ -263,6 +298,7 @@ impl FleetJob {
             id: self.id,
             name: self.name.clone(),
             weight: self.weight,
+            device: self.device,
             arrived_round: self.arrived_round,
             departed_round,
             steps: self.report.iters.len(),
@@ -299,8 +335,24 @@ pub struct FleetScheduler {
     departures: Vec<(usize, String)>,
     /// Summaries of jobs that departed or completed, in departure order.
     finished: Vec<JobSummary>,
-    broker: BudgetBroker,
-    shared: Option<SharedCacheHandle>,
+    /// One [`BudgetBroker`] per device under the global ledger; a
+    /// single-device fleet passes the global through exactly.
+    arbiter: DeviceBudget,
+    /// Per-device shared plan caches (all `Some` or all `None`): plans move
+    /// between devices only through migration adoption and the save-time
+    /// merge, so one device's reshelter purges never touch another's cache.
+    shared: Vec<Option<SharedCacheHandle>>,
+    /// Σ worst-case floors of the jobs assigned per device — the placement
+    /// load ledger (updated at place, retire, park, and migrate).
+    loads: Vec<u64>,
+    /// Placement decisions taken (initial tenants + scripted arrivals).
+    placements: u64,
+    /// Placements that landed on a device whose cache held the signature.
+    placement_warm_hits: u64,
+    /// Jobs migrated off a pressured device.
+    migrations: u64,
+    /// Σ iterations charged as migration cost.
+    migration_lost_iters: u64,
     /// Static per-job share for the non-arbitrated baseline, frozen at
     /// construction as `global / max_concurrent` over the whole scripted
     /// timeline — the live count changing mid-run must NOT silently rebind
@@ -318,10 +370,14 @@ pub struct FleetScheduler {
     shocks_fired: u64,
     /// Jobs stopped mid-iteration: expired drains plus shock/fill victims.
     forced_stops: u64,
-    /// Shape memos recycled from retired engines, one donor set per task —
-    /// a later same-task arrival adopts them and skips rebuilding profiles
-    /// for every shape the donor already saw (engine pooling).
-    memo_pool: HashMap<Task, ShapeMemos>,
+    /// Shape memos recycled from retired engines, one donor set per model
+    /// signature (task, effective batch, activation factor — the same
+    /// scoping as the shared plan cache) — a later same-signature arrival
+    /// adopts them and skips rebuilding profiles for every shape the donor
+    /// already saw (engine pooling). Keyed by signature, NOT task: two
+    /// same-task tenants with different batch overrides have different
+    /// profiles and must never exchange memos.
+    memo_pool: HashMap<u64, ShapeMemos>,
     /// True when the shared cache was warm-loaded from `mimose.cache_path`:
     /// every Coordinator runs in warm-start mode and re-admitted tenants
     /// replan from the persisted plans with zero sheltered iterations.
@@ -407,6 +463,21 @@ impl FleetScheduler {
         let n = cfg.jobs.len();
         if n == 0 {
             return Err("fleet needs at least one job at round 0".into());
+        }
+        // the TOML loader enforces these too; programmatic and CLI
+        // construction must not slip past them
+        if cfg.devices == 0 {
+            return Err("fleet.devices must be at least 1".into());
+        }
+        if cfg.devices > 1 {
+            if !cfg.arbitrated {
+                return Err("fleet.devices > 1 requires arbitrated brokers".into());
+            }
+            if cfg.pacing == Pacing::Rounds {
+                return Err(
+                    "fleet.devices > 1 requires event pacing (lockstep/profiled)".into()
+                );
+            }
         }
         for spec in &cfg.jobs {
             spec.validate()?;
@@ -611,54 +682,90 @@ impl FleetScheduler {
         }
 
         // cross-job plan reuse (reshelters purge their own stale entries —
-        // see Coordinator::begin_iteration). Arrivals attach at build time:
-        // entries contributed before a signature's departure are retained
-        // for its re-arrival.
+        // see Coordinator::begin_iteration). One cache PER DEVICE: plans
+        // cross devices only through migration adoption and the save-time
+        // merge. Entries contributed before a signature's departure are
+        // retained for its re-arrival.
         let mut warm_loaded = false;
-        let shared = if cfg.shared_cache {
-            let handle = shared_plan_cache(cfg.cache_capacity);
-            // persistent warm start: a prior run's plans, scoped by model
-            // signature in every entry, so a restarted fleet re-admits its
-            // tenants without re-sheltering. A missing, corrupt, or
-            // stale-format file degrades to a cold cache, never an error.
-            if !cfg.mimose.cache_path.is_empty() {
-                let (loaded, cold_reason) =
-                    SharedPlanCache::load_from_path(&cfg.mimose.cache_path, cfg.cache_capacity);
-                if cold_reason.is_none() && !loaded.is_empty() {
-                    warm_loaded = true;
-                    *handle.borrow_mut() = loaded;
-                }
-            }
-            for job in jobs.iter_mut().chain(pending.iter_mut().map(|p| &mut p.job)) {
-                let sig = model_signature(
-                    &job.task.model(),
-                    job.task.batch(),
-                    job.task.act_factor(),
-                );
+        let shared: Vec<Option<SharedCacheHandle>> = if cfg.shared_cache {
+            (0..cfg.devices)
+                .map(|_| {
+                    let handle = shared_plan_cache(cfg.cache_capacity);
+                    // persistent warm start: a prior run's plans, scoped by
+                    // model signature in every entry, so a restarted fleet
+                    // re-admits its tenants without re-sheltering. A
+                    // missing, corrupt, or stale-format file degrades to a
+                    // cold cache, never an error.
+                    if !cfg.mimose.cache_path.is_empty() {
+                        let (loaded, cold_reason) = SharedPlanCache::load_from_path(
+                            &cfg.mimose.cache_path,
+                            cfg.cache_capacity,
+                        );
+                        if cold_reason.is_none() && !loaded.is_empty() {
+                            warm_loaded = true;
+                            *handle.borrow_mut() = loaded;
+                        }
+                    }
+                    Some(handle)
+                })
+                .collect()
+        } else {
+            vec![None; cfg.devices]
+        };
+        let arbiter = DeviceBudget::new(
+            cfg.global_budget_bytes,
+            cfg.devices,
+            cfg.grid_bytes,
+            cfg.demand_smoothing,
+        );
+        // place the initial tenants (scripted arrivals place at their
+        // Arrive instant, against the loads in force then); warm placement
+        // probes the per-device caches, which a cache_path warm start may
+        // already have populated
+        let device_globals: Vec<u64> =
+            (0..cfg.devices).map(|d| arbiter.device_global(d)).collect();
+        let mut loads = vec![0u64; cfg.devices];
+        let mut placements = 0u64;
+        let mut placement_warm_hits = 0u64;
+        for job in jobs.iter_mut() {
+            let (d, warm) = Self::place_device(
+                cfg.placement,
+                &loads,
+                &device_globals,
+                &shared,
+                job.signature,
+                job.worst,
+            );
+            job.device = d;
+            loads[d] += job.worst;
+            placements += 1;
+            placement_warm_hits += warm as u64;
+        }
+        // attach every tenant to its device's cache; pending arrivals
+        // attach provisionally to device 0 and re-attach at their Arrive
+        for job in jobs.iter_mut().chain(pending.iter_mut().map(|p| &mut p.job)) {
+            if let Some(handle) = shared[job.device].as_ref() {
                 if let Some(c) = job.engine.coordinator_mut() {
-                    c.set_shared_cache(handle.clone(), sig);
+                    c.set_shared_cache(handle.clone(), job.signature);
                     if warm_loaded {
                         c.set_warm_start(true);
                     }
                 }
             }
-            Some(handle)
-        } else {
-            None
-        };
-        let broker = BudgetBroker::new(
-            cfg.global_budget_bytes,
-            cfg.grid_bytes,
-            cfg.demand_smoothing,
-        );
+        }
         Ok(FleetScheduler {
             cfg,
             jobs,
             pending,
             departures,
             finished: Vec::new(),
-            broker,
+            arbiter,
             shared,
+            loads,
+            placements,
+            placement_warm_hits,
+            migrations: 0,
+            migration_lost_iters: 0,
             frozen_share,
             preempts,
             resumes,
@@ -685,28 +792,100 @@ impl FleetScheduler {
     /// those without the backfill. Ok-no-op when the fleet runs without a
     /// shared cache.
     pub fn save_cache(&mut self, path: &str) -> std::io::Result<()> {
-        match &self.shared {
-            Some(h) => {
-                for job in &mut self.jobs {
-                    job.engine.export_plans();
-                }
-                h.borrow().save_to_path(path)
-            }
-            None => Ok(()),
+        let Some(h0) = self.shared.first().and_then(|h| h.clone()) else {
+            return Ok(());
+        };
+        for job in &mut self.jobs {
+            job.engine.export_plans();
         }
+        // merge the secondary devices' caches into device 0's before
+        // persisting: a warm restart splits the merged file back out to
+        // every device, so no device's contributions are lost
+        for h in self.shared.iter().skip(1).flatten() {
+            let donor = h.borrow();
+            h0.borrow_mut().absorb(&donor);
+        }
+        h0.borrow().save_to_path(path)
     }
 
-    /// Bank a retiring job's shape memos for a later same-task arrival.
+    /// Bank a retiring job's shape memos for a later arrival of the SAME
+    /// model signature (task, effective batch, activation factor — the
+    /// scoping the shared plan cache uses; profiles are functions of batch,
+    /// so two same-task tenants with different overrides must never cross).
     /// Keeping the larger donor set maximises what the next arrival skips.
-    fn pool_engine(memo_pool: &mut HashMap<Task, ShapeMemos>, job: &mut FleetJob) {
+    fn pool_engine(memo_pool: &mut HashMap<u64, ShapeMemos>, job: &mut FleetJob) {
         let memos = job.engine.take_shape_memos();
         if memos.is_empty() {
             return;
         }
-        match memo_pool.get(&memos.task()) {
+        match memo_pool.get(&job.signature) {
             Some(held) if held.len() >= memos.len() => {}
             _ => {
-                memo_pool.insert(memos.task(), memos);
+                memo_pool.insert(job.signature, memos);
+            }
+        }
+    }
+
+    /// Pick a device for a job. `FirstFit` takes the first device with
+    /// worst-case floor room; `LeastLoaded` the fitting device with the
+    /// smallest committed-floor fraction (ties to the lower index);
+    /// `PlanCacheWarm` the least-loaded fitting device whose shared cache
+    /// already holds the job's model signature, falling back to
+    /// least-loaded when none does — the warm probe never strands a job.
+    /// When NO device fits, the least-loaded (or, for first-fit, the first)
+    /// device takes the job anyway and the runtime fill's force-stop
+    /// machinery resolves the overcommit. Returns the device and whether
+    /// the choice was a warm cache hit. A single-device fleet short-
+    /// circuits to device 0 so every strategy is the identity there.
+    fn place_device(
+        placement: Placement,
+        loads: &[u64],
+        globals: &[u64],
+        shared: &[Option<SharedCacheHandle>],
+        signature: u64,
+        worst: u64,
+    ) -> (usize, bool) {
+        let devices = loads.len();
+        if devices == 1 {
+            return (0, false);
+        }
+        // committed-floor fraction without floats:
+        // load_a/glob_a < load_b/glob_b  <=>  load_a*glob_b < load_b*glob_a
+        let less_loaded = |a: usize, b: usize| {
+            (loads[a] as u128) * (globals[b] as u128)
+                < (loads[b] as u128) * (globals[a] as u128)
+        };
+        let least_loaded = |cands: &[usize]| {
+            let mut best = cands[0];
+            for &d in &cands[1..] {
+                if less_loaded(d, best) {
+                    best = d;
+                }
+            }
+            best
+        };
+        let fits: Vec<usize> =
+            (0..devices).filter(|&d| loads[d] + worst <= globals[d]).collect();
+        let all: Vec<usize> = (0..devices).collect();
+        let cands: &[usize] = if fits.is_empty() { &all } else { &fits };
+        match placement {
+            Placement::FirstFit => (cands[0], false),
+            Placement::LeastLoaded => (least_loaded(cands), false),
+            Placement::PlanCacheWarm => {
+                let warm: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&d| {
+                        shared[d]
+                            .as_ref()
+                            .map_or(false, |h| h.borrow().holds_signature(signature))
+                    })
+                    .collect();
+                if warm.is_empty() {
+                    (least_loaded(cands), false)
+                } else {
+                    (least_loaded(&warm), true)
+                }
             }
         }
     }
@@ -758,6 +937,8 @@ impl FleetScheduler {
 
     /// An idle decision: nobody ran at this instant. `global` is the
     /// device budget in force (post-shock runs carry the shocked value).
+    /// Idle instants are recorded against device 0 — no device ran, and
+    /// single-device differentials pin the round count, not the device.
     fn idle_decision(round: usize, time_ms: f64, global: u64) -> BrokerDecision {
         BrokerDecision {
             round,
@@ -773,6 +954,7 @@ impl FleetScheduler {
             aggregate_peak: 0,
             alloc_total: 0,
             global,
+            device: 0,
         }
     }
 
@@ -782,13 +964,12 @@ impl FleetScheduler {
         let mut jobs: Vec<JobSummary> = self.finished.clone();
         jobs.extend(live);
         jobs.sort_by_key(|j| j.id);
-        let (shared_hits, shared_entries) = match &self.shared {
-            Some(h) => {
+        let (shared_hits, shared_entries) =
+            self.shared.iter().flatten().fold((0u64, 0usize), |(hits, entries), h| {
                 let c = h.borrow();
-                (c.stats().hits, c.len())
-            }
-            None => (0, 0),
-        };
+                (hits + c.stats().hits, entries + c.len())
+            });
+        let devices = self.cfg.devices;
         FleetReport {
             global_budget: self.cfg.global_budget_bytes,
             arbitrated: self.cfg.arbitrated,
@@ -796,10 +977,16 @@ impl FleetScheduler {
             rounds,
             shared_cache_hits: shared_hits,
             shared_cache_entries: shared_entries,
-            overshoots: self.broker.overshoots,
+            overshoots: (0..devices).map(|d| self.arbiter.broker(d).overshoots).sum(),
             preemptions: self.preemptions,
             shocks: self.shocks_fired,
             forced_stops: self.forced_stops,
+            devices,
+            device_globals: (0..devices).map(|d| self.arbiter.device_global(d)).collect(),
+            migrations: self.migrations,
+            migration_lost_iters: self.migration_lost_iters,
+            placements: self.placements,
+            placement_warm_hits: self.placement_warm_hits,
         }
     }
 
@@ -837,8 +1024,10 @@ impl FleetScheduler {
             // 2) broker (or the static equal split it has to beat)
             let (allocations, floors, wants, predicted_total, overshoot, jain, decision_ms) =
                 if self.cfg.arbitrated {
-                    let a = self
-                        .broker
+                    // the round loop is single-device (config validation
+                    // pins devices = 1 to event pacing otherwise)
+                    let broker: &mut BudgetBroker = self.arbiter.broker_mut(0);
+                    let a = broker
                         .allocate(&demands)
                         .expect("worst-case floors validated at construction");
                     (
@@ -866,7 +1055,7 @@ impl FleetScheduler {
                     (budgets, floors, wants, total, false, jain, t.elapsed_ms())
                 };
             let alloc_total = if self.cfg.arbitrated {
-                self.broker.alloc_total()
+                self.arbiter.broker(0).alloc_total()
             } else {
                 self.frozen_share * n as u64
             };
@@ -895,6 +1084,7 @@ impl FleetScheduler {
                 aggregate_peak,
                 alloc_total,
                 global: self.cfg.global_budget_bytes,
+                device: 0,
             });
 
             // 4) early exit on completion: the job's budget is reclaimed
@@ -934,11 +1124,25 @@ impl FleetScheduler {
         // observational — the event dynamics (and the Rounds/Lockstep
         // bit-identity differential) are untouched whether tracing is on.
         let tracing = obs::trace_enabled();
+        let devices = self.cfg.devices;
         let mut broker_tid = 0usize;
+        let mut dev_tids: Vec<usize> = vec![0; devices];
         let mut track_of: BTreeMap<u64, usize> = BTreeMap::new();
         if tracing {
             obs::with_tracer(|tr| {
                 broker_tid = tr.track("broker");
+                // multi-device fleets get one broker track per device so
+                // fills and migrations group visually; a single device
+                // keeps everything on the classic broker track
+                dev_tids = (0..devices)
+                    .map(|d| {
+                        if devices == 1 {
+                            broker_tid
+                        } else {
+                            tr.track(&format!("device{d}.broker"))
+                        }
+                    })
+                    .collect();
                 for job in live.values() {
                     track_of.insert(job.id, tr.track(&format!("job:{}", job.name)));
                 }
@@ -974,8 +1178,18 @@ impl FleetScheduler {
         // for a warm resume.
         let mut draining: BTreeMap<u64, f64> = BTreeMap::new();
         let mut parked: BTreeMap<u64, (FleetJob, usize)> = BTreeMap::new();
-        // the device budget in force — budget shocks move it mid-run
-        let mut global_now = self.cfg.global_budget_bytes;
+        // the per-device budgets in force — a fleet-wide shock re-splits
+        // them (one value, the global itself, on a single device)
+        let mut global_now: Vec<u64> =
+            (0..devices).map(|d| self.arbiter.device_global(d)).collect();
+        // sustained-pressure counter per device: +1 on an overshoot fill,
+        // reset on a clean one; crossing `migrate_after` migrates the
+        // biggest slack holder off the device
+        let mut pressure: Vec<usize> = vec![0; devices];
+        // mid-move tenants: id -> iterations still to charge. The cost
+        // lands at the job's next iteration boundary (see
+        // IterationComplete) so a migration never tears an iteration.
+        let mut migrating: BTreeMap<u64, usize> = BTreeMap::new();
         // cohort-parallel planning: plans are pure functions of
         // (profile, estimator, budget), so novel shapes across *independent*
         // tenants solve concurrently. 0 = one worker per available core;
@@ -990,10 +1204,28 @@ impl FleetScheduler {
         // novel shapes pay nothing
         let mut plan_pool: Option<ThreadPool> = None;
 
-        // remove a live job, reclaim its budget, and park it for a possible
-        // warm resume; false if the id was not live
+        // one device's fill for the current instant, held until the step
+        // loop has accrued its aggregate peak, then flushed as a
+        // `BrokerDecision`
+        struct PendingDecision {
+            device: usize,
+            job_ids: Vec<u64>,
+            allocations: Vec<u64>,
+            floors: Vec<u64>,
+            wants: Vec<u64>,
+            predicted_total: u64,
+            overshoot: bool,
+            weighted_jain: f64,
+            decision_ms: f64,
+            alloc_total: u64,
+            aggregate_peak: u64,
+        }
+
+        // remove a live job, reclaim its device budget and load-ledger
+        // room, and park it for a possible warm resume; false if not live
         fn park_job(
-            broker: &mut BudgetBroker,
+            arbiter: &mut DeviceBudget,
+            loads: &mut [u64],
             live: &mut BTreeMap<u64, FleetJob>,
             names: &mut HashMap<String, u64>,
             parked: &mut BTreeMap<u64, (FleetJob, usize)>,
@@ -1003,7 +1235,8 @@ impl FleetScheduler {
             match live.remove(&id) {
                 Some(job) => {
                     names.remove(&job.name);
-                    broker.depart(id);
+                    arbiter.broker_mut(job.device).depart(id);
+                    loads[job.device] = loads[job.device].saturating_sub(job.worst);
                     parked.insert(id, (job, round));
                     true
                 }
@@ -1012,7 +1245,7 @@ impl FleetScheduler {
         }
 
         let mut rounds: Vec<BrokerDecision> = Vec::new();
-        'cohorts: while let Some(cohort) = queue.pop_cohort() {
+        while let Some(cohort) = queue.pop_cohort() {
             let t = cohort[0].time;
             if t > horizon {
                 break;
@@ -1033,7 +1266,10 @@ impl FleetScheduler {
                             // once: `depart` here, and the dropped notice
                             // makes the pending DrainExpire a no-op
                             draining.remove(&id);
-                            self.broker.depart(id);
+                            migrating.remove(&id);
+                            self.arbiter.broker_mut(job.device).depart(id);
+                            self.loads[job.device] =
+                                self.loads[job.device].saturating_sub(job.worst);
                             Self::pool_engine(&mut self.memo_pool, &mut job);
                             self.finished.push(job.summary(Some(round)));
                             if tracing {
@@ -1056,11 +1292,35 @@ impl FleetScheduler {
                     }
                     EventKind::Arrive { id } => {
                         if let Some(mut job) = waiting.remove(&id) {
-                            // engine pooling: adopt a retired same-task
+                            // engine pooling: adopt a retired same-SIGNATURE
                             // donor's shape memos so first sight of each
                             // shape the donor saw skips profile construction
-                            if let Some(memos) = self.memo_pool.remove(&job.task) {
+                            // (signature, not task: a batch-overridden
+                            // tenant must never inherit another batch's
+                            // profiles)
+                            if let Some(memos) = self.memo_pool.remove(&job.signature) {
                                 job.engine.adopt_shape_memos(memos);
+                            }
+                            // placement: pick the device against the loads
+                            // in force NOW, and re-attach the tenant to its
+                            // device's shared cache (construction attached
+                            // it provisionally to device 0)
+                            let (d, warm) = Self::place_device(
+                                self.cfg.placement,
+                                &self.loads,
+                                &global_now,
+                                &self.shared,
+                                job.signature,
+                                job.worst,
+                            );
+                            job.device = d;
+                            self.loads[d] += job.worst;
+                            self.placements += 1;
+                            self.placement_warm_hits += warm as u64;
+                            if let Some(handle) = self.shared[d].as_ref() {
+                                if let Some(c) = job.engine.coordinator_mut() {
+                                    c.set_shared_cache(handle.clone(), job.signature);
+                                }
                             }
                             let jname = job.name.clone();
                             names.insert(job.name.clone(), id);
@@ -1083,17 +1343,31 @@ impl FleetScheduler {
                                 let mut job = live.remove(&id).expect("checked live");
                                 names.remove(&job.name);
                                 draining.remove(&id);
-                                self.broker.depart(id);
+                                migrating.remove(&id);
+                                self.arbiter.broker_mut(job.device).depart(id);
+                                self.loads[job.device] =
+                                    self.loads[job.device].saturating_sub(job.worst);
                                 Self::pool_engine(&mut self.memo_pool, &mut job);
                                 self.finished.push(job.summary(Some(round)));
                             }
                             Some(false) => {
-                                if let Some(notice) = draining.remove(&id) {
+                                if let Some(cost) = migrating.remove(&id) {
+                                    // the migration charges its cost here,
+                                    // at the iteration boundary: the job
+                                    // sits out exactly `cost` iterations'
+                                    // worth of ticks before becoming due
+                                    // again on its new device
+                                    queue.push(
+                                        t + cost as f64 * tick,
+                                        EventKind::IterationComplete { id },
+                                    );
+                                } else if let Some(notice) = draining.remove(&id) {
                                     // the in-flight iteration finished
                                     // inside the drain window: park
                                     // gracefully, release the floor
                                     park_job(
-                                        &mut self.broker,
+                                        &mut self.arbiter,
+                                        &mut self.loads,
                                         &mut live,
                                         &mut names,
                                         &mut parked,
@@ -1170,6 +1444,12 @@ impl FleetScheduler {
                             .map(|(&id, _)| id);
                         if let Some(id) = pid {
                             let (job, _) = parked.remove(&id).expect("just found");
+                            // a resume rejoins the device it parked on —
+                            // its estimator and cache attachment are that
+                            // device's; reclaim its load-ledger room and
+                            // drop any move that was interrupted by the park
+                            migrating.remove(&id);
+                            self.loads[job.device] += job.worst;
                             names.insert(job.name.clone(), id);
                             live.insert(id, job);
                             due.push(id);
@@ -1184,45 +1464,59 @@ impl FleetScheduler {
                     EventKind::BudgetShock { new_global } => {
                         self.shocks_fired += 1;
                         obs::inc("fleet.shocks");
-                        // the new global must cover the live floors before
-                        // the broker can transition: force-stop the lowest-
-                        // weight victims (ties to the larger id — the later
-                        // arrival) until they fit
-                        while self.broker.floor_sum_live() > new_global {
-                            let victim = live
-                                .values()
-                                .filter(|j| self.broker.allocation_of(j.id).is_some())
-                                .min_by(|a, b| {
-                                    a.weight.total_cmp(&b.weight).then(b.id.cmp(&a.id))
-                                })
-                                .map(|j| j.id);
-                            match victim {
-                                Some(id) => {
-                                    draining.remove(&id);
-                                    park_job(
-                                        &mut self.broker,
-                                        &mut live,
-                                        &mut names,
-                                        &mut parked,
-                                        id,
-                                        round,
-                                    );
-                                    self.forced_stops += 1;
-                                    obs::inc("fleet.forced_stops");
+                        // every device's new slice must cover its live
+                        // floors before the arbiter can transition:
+                        // force-stop the lowest-weight victims ON THE
+                        // OFFENDING DEVICE (ties to the larger id — the
+                        // later arrival) until they fit
+                        let slices = split_global(new_global, devices);
+                        for d in 0..devices {
+                            while self.arbiter.broker(d).floor_sum_live() > slices[d] {
+                                let victim = live
+                                    .values()
+                                    .filter(|j| {
+                                        j.device == d
+                                            && self
+                                                .arbiter
+                                                .broker(d)
+                                                .allocation_of(j.id)
+                                                .is_some()
+                                    })
+                                    .min_by(|a, b| {
+                                        a.weight.total_cmp(&b.weight).then(b.id.cmp(&a.id))
+                                    })
+                                    .map(|j| j.id);
+                                match victim {
+                                    Some(id) => {
+                                        draining.remove(&id);
+                                        migrating.remove(&id);
+                                        park_job(
+                                            &mut self.arbiter,
+                                            &mut self.loads,
+                                            &mut live,
+                                            &mut names,
+                                            &mut parked,
+                                            id,
+                                            round,
+                                        );
+                                        self.forced_stops += 1;
+                                        obs::inc("fleet.forced_stops");
+                                    }
+                                    None => break,
                                 }
-                                None => break,
                             }
                         }
                         let rebinds = self
-                            .broker
+                            .arbiter
                             .shock(new_global)
                             .expect("victims force-stopped until the floors fit");
                         // tightenings land as same-instant rebind events
                         // (the follow-up cohort), like claw-backs from fills
-                        for (id, budget) in rebinds {
+                        for (_, id, budget) in rebinds {
                             queue.push(t, EventKind::Rebind { id, budget });
                         }
-                        global_now = new_global;
+                        global_now =
+                            (0..devices).map(|d| self.arbiter.device_global(d)).collect();
                         obs::gauge_set("fleet.global_budget", new_global);
                         if tracing {
                             obs::with_tracer(|tr| {
@@ -1242,7 +1536,8 @@ impl FleetScheduler {
                         // completed ids already dropped their notice.
                         if let Some(notice) = draining.remove(&id) {
                             if park_job(
-                                &mut self.broker,
+                                &mut self.arbiter,
+                                &mut self.loads,
                                 &mut live,
                                 &mut names,
                                 &mut parked,
@@ -1269,6 +1564,54 @@ impl FleetScheduler {
                             }
                         }
                     }
+                    EventKind::Migrate { id, to } => {
+                        // depart the pressured device and warm-arrive on the
+                        // target: the engine, estimator, and memos move with
+                        // the job (no refit, no re-sheltering) and the job
+                        // adopts the target's shared cache. A stale notice
+                        // (departed/parked/draining id, or a shock that beat
+                        // it to this instant) is a no-op.
+                        if let Some(job) = live.get_mut(&id) {
+                            if job.device != to && !draining.contains_key(&id) {
+                                let from = job.device;
+                                self.arbiter.broker_mut(from).depart(id);
+                                self.loads[from] =
+                                    self.loads[from].saturating_sub(job.worst);
+                                self.loads[to] += job.worst;
+                                job.device = to;
+                                if let Some(handle) = self.shared[to].as_ref() {
+                                    if let Some(c) = job.engine.coordinator_mut() {
+                                        c.set_shared_cache(handle.clone(), job.signature);
+                                    }
+                                }
+                                // the cost (lost iterations) is charged at
+                                // the job's next iteration boundary — see
+                                // IterationComplete
+                                let cost = self.cfg.migration_cost_iters;
+                                migrating.insert(id, cost);
+                                self.migrations += 1;
+                                self.migration_lost_iters += cost as u64;
+                                obs::inc("fleet.migrations");
+                                if tracing {
+                                    let jname = job.name.clone();
+                                    obs::with_tracer(|tr| {
+                                        let label = format!("migrate:{jname}");
+                                        tr.instant_at(
+                                            dev_tids[to],
+                                            &label,
+                                            "broker",
+                                            t,
+                                            &[
+                                                ("from", from as f64),
+                                                ("to", to as f64),
+                                                ("cost_iters", cost as f64),
+                                            ],
+                                        );
+                                    });
+                                }
+                            }
+                        }
+                    }
                 }
             }
             if t >= horizon {
@@ -1287,7 +1630,15 @@ impl FleetScheduler {
                     return false;
                 }
                 if let Some(notice) = draining.remove(&id) {
-                    park_job(&mut self.broker, &mut live, &mut names, &mut parked, id, round);
+                    park_job(
+                        &mut self.arbiter,
+                        &mut self.loads,
+                        &mut live,
+                        &mut names,
+                        &mut parked,
+                        id,
+                        round,
+                    );
                     obs::observe_ms("fleet.drain_ms", t - notice);
                     return false;
                 }
@@ -1297,35 +1648,53 @@ impl FleetScheduler {
                 continue; // departure/rebind-only instant
             }
 
-            // 1) demands for the due jobs' pending inputs, in id order —
-            //    the round loop's vec order
-            let mut demands: Vec<JobDemand> = due
-                .iter()
-                .map(|id| {
-                    live.get_mut(id)
-                        .expect("due jobs are live")
-                        .draw_demand(self.cfg.floor_bytes, self.cfg.mimose.reserve_bytes)
-                })
-                .collect();
-
-            // 2) incremental broker fill (or the frozen equal split)
-            let (allocations, floors, wants, predicted_total, overshoot, jain, decision_ms) =
-                if self.cfg.arbitrated {
+            // 1) demands and fills, device by device. Each device's broker
+            //    sees only its own tenants; `due` is sorted, so every
+            //    per-device group keeps ascending id order, and on a single
+            //    device the one group IS the old cohort — bit-identical.
+            let mut due_by_dev: Vec<Vec<u64>> = vec![Vec::new(); devices];
+            for &id in &due {
+                let d = live.get(&id).expect("due jobs are live").device;
+                due_by_dev[d].push(id);
+            }
+            let mut fills: Vec<PendingDecision> = Vec::new();
+            // ids that survived their device's fill, with their budgets;
+            // drained back into one ascending-id cohort below
+            let mut rebound: Vec<(u64, u64)> = Vec::new();
+            for (d, dev_due) in due_by_dev.iter_mut().enumerate() {
+                let mut dev_due = std::mem::take(dev_due);
+                if dev_due.is_empty() {
+                    continue;
+                }
+                let mut demands: Vec<JobDemand> = dev_due
+                    .iter()
+                    .map(|id| {
+                        live.get_mut(id)
+                            .expect("due jobs are live")
+                            .draw_demand(self.cfg.floor_bytes, self.cfg.mimose.reserve_bytes)
+                    })
+                    .collect();
+                let decision = if self.cfg.arbitrated {
                     // a shock can invalidate the construction-time floor
                     // walk for later arrivals and resumes: when the fill
                     // cannot cover the due floors, force-stop the lowest-
-                    // weight victims until it can. Shock-free timelines
-                    // take the Ok path on the first try — bit-identical to
-                    // the pre-chaos behavior.
+                    // weight victims on this device until it can. Shock-
+                    // free timelines take the Ok path on the first try —
+                    // bit-identical to the pre-chaos behavior.
                     let fill = loop {
-                        match self.broker.update(&demands) {
-                            Ok(f) => break f,
+                        match self.arbiter.broker_mut(d).update(&demands) {
+                            Ok(f) => break Some(f),
                             Err(_) => {
                                 let victim = live
                                     .values()
                                     .filter(|j| {
-                                        self.broker.allocation_of(j.id).is_some()
-                                            || demands.iter().any(|d| d.id == j.id)
+                                        j.device == d
+                                            && (self
+                                                .arbiter
+                                                .broker(d)
+                                                .allocation_of(j.id)
+                                                .is_some()
+                                                || demands.iter().any(|dm| dm.id == j.id))
                                     })
                                     .min_by(|a, b| {
                                         a.weight.total_cmp(&b.weight).then(b.id.cmp(&a.id))
@@ -1333,11 +1702,12 @@ impl FleetScheduler {
                                     .map(|j| j.id);
                                 let vid = match victim {
                                     Some(vid) => vid,
-                                    None => continue 'cohorts,
+                                    None => break None,
                                 };
                                 draining.remove(&vid);
                                 park_job(
-                                    &mut self.broker,
+                                    &mut self.arbiter,
+                                    &mut self.loads,
                                     &mut live,
                                     &mut names,
                                     &mut parked,
@@ -1346,63 +1716,152 @@ impl FleetScheduler {
                                 );
                                 self.forced_stops += 1;
                                 obs::inc("fleet.forced_stops");
-                                due.retain(|&d| d != vid);
-                                demands.retain(|d| d.id != vid);
+                                dev_due.retain(|&x| x != vid);
+                                demands.retain(|dm| dm.id != vid);
                                 if demands.is_empty() {
-                                    continue 'cohorts;
+                                    break None;
                                 }
                             }
                         }
                     };
+                    // an un-fillable device skips its fill this instant;
+                    // the other devices still run theirs
+                    let Some(fill) = fill else { continue };
                     // claw-backs land as same-instant rebind events (the
                     // follow-up cohort), after this cohort's iterations
                     for &(id, budget) in &fill.rebinds {
                         queue.push(t, EventKind::Rebind { id, budget });
                     }
                     let a = fill.alloc;
-                    (
-                        a.budgets,
-                        a.floors,
-                        a.wants,
-                        a.predicted_total,
-                        a.overshoot,
-                        a.weighted_jain,
-                        a.decision_ms,
-                    )
+                    // sustained-pressure bookkeeping: an overshoot fill
+                    // bumps the device's counter, a clean one resets it
+                    if a.overshoot {
+                        pressure[d] += 1;
+                    } else {
+                        pressure[d] = 0;
+                    }
+                    PendingDecision {
+                        device: d,
+                        job_ids: dev_due,
+                        allocations: a.budgets,
+                        floors: a.floors,
+                        wants: a.wants,
+                        predicted_total: a.predicted_total,
+                        overshoot: a.overshoot,
+                        weighted_jain: a.weighted_jain,
+                        decision_ms: a.decision_ms,
+                        alloc_total: self.arbiter.broker(d).alloc_total(),
+                        aggregate_peak: 0,
+                    }
                 } else {
+                    // the frozen equal split never arbitrates, and config
+                    // validation pins non-arbitrated fleets to one device
                     let timer = Timer::start();
                     let share = self.frozen_share;
-                    let total = demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).sum();
-                    let floors: Vec<u64> = demands.iter().map(|d| d.floor).collect();
+                    let total =
+                        demands.iter().map(|dm| dm.predicted.unwrap_or(dm.floor)).sum();
+                    let floors: Vec<u64> = demands.iter().map(|dm| dm.floor).collect();
                     let wants: Vec<u64> =
-                        demands.iter().map(|d| d.predicted.unwrap_or(d.floor)).collect();
+                        demands.iter().map(|dm| dm.predicted.unwrap_or(dm.floor)).collect();
                     let budgets = vec![share; demands.len()];
-                    let weights: Vec<f64> = demands.iter().map(|d| d.weight).collect();
+                    let weights: Vec<f64> = demands.iter().map(|dm| dm.weight).collect();
                     let jain = weighted_jain(&budgets, &floors, &weights);
-                    (budgets, floors, wants, total, false, jain, timer.elapsed_ms())
+                    PendingDecision {
+                        device: d,
+                        job_ids: dev_due,
+                        allocations: budgets,
+                        floors,
+                        wants,
+                        predicted_total: total,
+                        overshoot: false,
+                        weighted_jain: jain,
+                        decision_ms: timer.elapsed_ms(),
+                        alloc_total: self.frozen_share * live.len() as u64,
+                        aggregate_peak: 0,
+                    }
                 };
-            let alloc_total = if self.cfg.arbitrated {
-                self.broker.alloc_total()
-            } else {
-                self.frozen_share * live.len() as u64
-            };
-            if tracing {
-                let n_due = due.len() as f64;
-                obs::with_tracer(|tr| {
-                    tr.instant_at(
-                        broker_tid,
-                        "fill",
-                        "broker",
-                        t,
-                        &[("n_due", n_due), ("decision_ms", decision_ms)],
-                    );
-                });
+                if tracing {
+                    let n_due = decision.job_ids.len() as f64;
+                    let decision_ms = decision.decision_ms;
+                    obs::with_tracer(|tr| {
+                        tr.instant_at(
+                            dev_tids[d],
+                            "fill",
+                            "broker",
+                            t,
+                            &[("n_due", n_due), ("decision_ms", decision_ms)],
+                        );
+                    });
+                }
+                rebound.extend(
+                    decision.job_ids.iter().copied().zip(decision.allocations.iter().copied()),
+                );
+                fills.push(decision);
+            }
+            if fills.is_empty() {
+                continue; // every device's fill came up empty
             }
 
-            // 3) rebind and run the due iterations; each schedules its own
-            //    completion one duration ahead
-            for (id, &b) in due.iter().zip(&allocations) {
-                live.get_mut(id).expect("due jobs are live").rebind(b);
+            // 2) sustained pressure migrates the biggest slack holder off
+            //    the device: queued as a same-instant Migrate event (ranked
+            //    after everything else in the follow-up cohort), so this
+            //    cohort's iterations still run where they were filled.
+            if devices > 1 && self.cfg.migrate_after > 0 {
+                for d in 0..devices {
+                    if pressure[d] < self.cfg.migrate_after {
+                        continue;
+                    }
+                    let victim = self
+                        .arbiter
+                        .broker(d)
+                        .claw_candidates()
+                        .into_iter()
+                        .map(|(id, _slack)| id)
+                        .find(|id| {
+                            live.get(id).map_or(false, |j| j.device == d)
+                                && !draining.contains_key(id)
+                                && !migrating.contains_key(id)
+                        });
+                    if let Some(vid) = victim {
+                        let worst = live.get(&vid).expect("victim is live").worst;
+                        // least-loaded other device with headroom for the
+                        // victim's worst-case floor; ties to the lower index
+                        let mut target: Option<usize> = None;
+                        for e in (0..devices).filter(|&e| e != d) {
+                            if self.loads[e] + worst > self.arbiter.device_global(e) {
+                                continue;
+                            }
+                            let better = match target {
+                                None => true,
+                                Some(best) => {
+                                    (self.loads[e] as u128)
+                                        * (self.arbiter.device_global(best) as u128)
+                                        < (self.loads[best] as u128)
+                                            * (self.arbiter.device_global(e) as u128)
+                                }
+                            };
+                            if better {
+                                target = Some(e);
+                            }
+                        }
+                        if let Some(to) = target {
+                            queue.push(t, EventKind::Migrate { id: vid, to });
+                        }
+                    }
+                    // one migration attempt per pressure episode, even when
+                    // no candidate or target exists — avoids re-firing
+                    // every instant while the device stays hot
+                    pressure[d] = 0;
+                }
+            }
+
+            // 3) rebind and run the surviving iterations as one cohort, in
+            //    ascending id order across devices — with one device this
+            //    is exactly the old due order; each iteration schedules its
+            //    own completion one duration ahead
+            rebound.sort_unstable_by_key(|&(id, _)| id);
+            for &(id, b) in &rebound {
+                live.get_mut(&id).expect("due jobs are live").rebind(b);
             }
 
             // 3a) cohort-parallel planning: after the rebinds (budgets are
@@ -1416,13 +1875,13 @@ impl FleetScheduler {
             //     and the step (shared-cache race, reshelter) is silently
             //     dropped — so Rounds/Lockstep differentials and the chaos
             //     ledger invariants are untouched.
-            if plan_threads > 1 && due.len() > 1 {
+            if plan_threads > 1 && rebound.len() > 1 {
                 let mut requests: Vec<(u64, PlanRequest)> = Vec::new();
-                for &id in &due {
+                for &(id, _) in &rebound {
                     let job = live.get_mut(&id).expect("due jobs are live");
                     let shape = job.pending.expect("draw_demand precedes planning");
                     let profile = job.engine.profile_for_shape(shape);
-                    let input = input_for(job.task, shape);
+                    let input = input_for_batch(job.task, job.batch, shape);
                     if let Some(req) = job
                         .engine
                         .coordinator()
@@ -1435,16 +1894,16 @@ impl FleetScheduler {
                     let timer = Timer::start();
                     let pool =
                         plan_pool.get_or_insert_with(|| ThreadPool::new(plan_threads));
-                    let solved =
-                        pool.map(requests, |(id, req)| (id, req.plan_key, req.solve()));
-                    // merge deterministically: `due` is sorted, `map`
+                    let solved = pool
+                        .map(requests, |(id, req)| (id, req.plan_key, req.epoch, req.solve()));
+                    // merge deterministically: `rebound` is sorted, `map`
                     // preserves order, so stashes land in job-id order
-                    for (id, key, plan) in solved {
+                    for (id, key, epoch, plan) in solved {
                         if let Some(c) = live
                             .get_mut(&id)
                             .and_then(|j| j.engine.coordinator_mut())
                         {
-                            c.stash_plan(key, plan);
+                            c.stash_plan(key, plan, epoch);
                         }
                     }
                     obs::inc("planner.parallel_cohort");
@@ -1452,8 +1911,12 @@ impl FleetScheduler {
                 }
             }
 
-            let mut aggregate_peak = 0u64;
-            for (&id, &budget) in due.iter().zip(&allocations) {
+            // each step's peak accrues to its device's pending decision
+            let mut fill_idx: Vec<Option<usize>> = vec![None; devices];
+            for (i, f) in fills.iter().enumerate() {
+                fill_idx[f.device] = Some(i);
+            }
+            for &(id, budget) in &rebound {
                 let job = live.get_mut(&id).expect("due jobs are live");
                 if tracing {
                     // stage spans emitted inside the engine land on this
@@ -1467,7 +1930,9 @@ impl FleetScheduler {
                     });
                 }
                 let m = job.step();
-                aggregate_peak += m.peak_bytes;
+                if let Some(i) = fill_idx[job.device] {
+                    fills[i].aggregate_peak += m.peak_bytes;
+                }
                 let peak = m.peak_bytes as f64;
                 let duration = if lockstep {
                     tick
@@ -1494,21 +1959,26 @@ impl FleetScheduler {
                 queue.push(t + duration, EventKind::IterationComplete { id });
                 job.report.push(m);
             }
-            rounds.push(BrokerDecision {
-                round,
-                time_ms: t,
-                job_ids: due,
-                allocations,
-                floors,
-                wants,
-                predicted_total,
-                overshoot,
-                weighted_jain: jain,
-                decision_ms,
-                aggregate_peak,
-                alloc_total,
-                global: global_now,
-            });
+            // one decision per device that filled this instant — a single
+            // device emits exactly the one decision the old core did
+            for f in fills {
+                rounds.push(BrokerDecision {
+                    round,
+                    time_ms: t,
+                    job_ids: f.job_ids,
+                    allocations: f.allocations,
+                    floors: f.floors,
+                    wants: f.wants,
+                    predicted_total: f.predicted_total,
+                    overshoot: f.overshoot,
+                    weighted_jain: f.weighted_jain,
+                    decision_ms: f.decision_ms,
+                    aggregate_peak: f.aggregate_peak,
+                    alloc_total: f.alloc_total,
+                    global: global_now[f.device],
+                    device: f.device,
+                });
+            }
         }
 
         if lockstep {
@@ -1520,13 +1990,16 @@ impl FleetScheduler {
             }
             for (round, seen) in have.into_iter().enumerate() {
                 if !seen {
-                    // the global that was in force AT the padded round
-                    let global = shock_timeline
+                    // the fleet global that was in force AT the padded
+                    // round; idle decisions report device 0's slice of it
+                    // (the whole global on a single device)
+                    let fleet_global = shock_timeline
                         .iter()
                         .filter(|(r, _)| *r <= round)
                         .last()
                         .map(|(_, g)| *g)
                         .unwrap_or(self.cfg.global_budget_bytes);
+                    let global = split_global(fleet_global, devices)[0];
                     rounds.push(Self::idle_decision(round, round as f64, global));
                 }
             }
@@ -2151,17 +2624,28 @@ mod tests {
 
     #[test]
     fn departed_engines_donate_their_shape_memos() {
-        // a retiring tenant banks its per-shape memos; a later same-task
-        // arrival adopts them (and the run is identical either way — the
-        // memos are pure functions of (task, shape))
+        // a retiring tenant banks its per-shape memos under its model
+        // SIGNATURE; a later same-signature arrival adopts them (and the
+        // run is identical either way — the memos are pure functions of
+        // (model, batch, shape))
+        let tc_sig = model_signature(
+            &Task::TcBert.model(),
+            Task::TcBert.batch(),
+            Task::TcBert.act_factor(),
+        );
+        let mc_sig = model_signature(
+            &Task::McRoberta.model(),
+            Task::McRoberta.batch(),
+            Task::McRoberta.act_factor(),
+        );
         let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 30);
         cfg.events = vec![FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 10 }];
         let mut f = FleetScheduler::new(cfg).unwrap();
         let r = f.run();
         assert_eq!(r.oom_failures(), 0);
-        let banked = f.memo_pool.get(&Task::TcBert).expect("departed engine banks its memos");
+        let banked = f.memo_pool.get(&tc_sig).expect("departed engine banks its memos");
         assert!(!banked.is_empty());
-        assert!(f.memo_pool.get(&Task::McRoberta).is_none(), "live engines keep theirs");
+        assert!(f.memo_pool.get(&mc_sig).is_none(), "live engines keep theirs");
 
         let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 30);
         cfg.events = vec![
@@ -2172,11 +2656,72 @@ mod tests {
         let r2 = f2.run();
         assert_eq!(r2.oom_failures(), 0);
         assert!(
-            f2.memo_pool.get(&Task::TcBert).is_none(),
-            "the same-task arrival drains the pool"
+            f2.memo_pool.get(&tc_sig).is_none(),
+            "the same-signature arrival drains the pool"
         );
         let arrival = r2.jobs.iter().find(|j| j.name == "TC-Bert#2").unwrap();
         assert_eq!(arrival.steps, 30 - 12);
+    }
+
+    #[test]
+    fn batch_overridden_tenants_do_not_cross_adopt_memos() {
+        // regression: the pool was once keyed by Task alone, so a batch-8
+        // TC-Bert arrival could adopt a departed batch-32 tenant's shape
+        // memos — activation profiles sized for the wrong batch. Signature
+        // keys (model, batch, act-factor) fence them apart.
+        let donor_sig = model_signature(
+            &Task::TcBert.model(),
+            Task::TcBert.batch(),
+            Task::TcBert.act_factor(),
+        );
+        let small_sig = model_signature(&Task::TcBert.model(), 8, Task::TcBert.act_factor());
+        assert_ne!(donor_sig, small_sig, "batch must scope the signature");
+
+        let mut cfg = fleet_cfg(vec![Task::TcBert, Task::McRoberta], 12, 30);
+        cfg.events = vec![
+            FleetEvent::Depart { job: "TC-Bert#0".into(), at_round: 10 },
+            FleetEvent::Arrive {
+                spec: JobSpec { batch: Some(8), ..JobSpec::new(Task::TcBert) },
+                at_round: 12,
+            },
+        ];
+        let mut f = FleetScheduler::new(cfg).unwrap();
+        let r = f.run();
+        assert_eq!(r.oom_failures(), 0);
+        assert!(
+            f.memo_pool.get(&donor_sig).is_some(),
+            "the batch-32 donor's memos stay banked — the batch-8 arrival must not drain them"
+        );
+        assert!(f.memo_pool.get(&small_sig).is_none());
+        let arrival = r.jobs.iter().find(|j| j.name == "TC-Bert#2").unwrap();
+        assert_eq!(arrival.steps, 30 - 12, "the fenced arrival still runs to the horizon");
+    }
+
+    #[test]
+    fn placement_strategies_pick_the_expected_device() {
+        use crate::scheduler::Plan;
+        let loads = [6 * GIB, 2 * GIB, 3 * GIB];
+        let globals = [8 * GIB, 8 * GIB, 8 * GIB];
+        let sig = 7u64;
+        let warm = shared_plan_cache(16);
+        warm.borrow_mut().insert(sig, (128, 0), GIB, Plan::of([0usize]));
+        let shared: Vec<Option<SharedCacheHandle>> = vec![None, None, Some(warm)];
+        let place = |p: Placement, sig: u64, worst: u64| {
+            FleetScheduler::place_device(p, &loads, &globals, &shared, sig, worst)
+        };
+        // first-fit: the lowest-index device with headroom for the worst
+        // floor — device 0 fits 6 + 1 <= 8
+        assert_eq!(place(Placement::FirstFit, sig, GIB), (0, false));
+        // least-loaded by committed-floor fraction: device 1 at 2/8
+        assert_eq!(place(Placement::LeastLoaded, sig, GIB), (1, false));
+        // warm: device 2 holds the signature, so it wins despite its load
+        assert_eq!(place(Placement::PlanCacheWarm, sig, GIB), (2, true));
+        // a signature nobody holds falls back to least-loaded, cold
+        assert_eq!(place(Placement::PlanCacheWarm, 99, GIB), (1, false));
+        // nothing fits a 7 GiB worst floor: every strategy degrades to its
+        // rule over ALL devices rather than parking the tenant
+        assert_eq!(place(Placement::FirstFit, sig, 7 * GIB), (0, false));
+        assert_eq!(place(Placement::LeastLoaded, sig, 7 * GIB), (1, false));
     }
 
     #[test]

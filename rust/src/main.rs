@@ -26,7 +26,7 @@
 
 use mimose::config::{
     toml::Doc, CoordinatorConfig, ExperimentConfig, FleetConfig, FleetEvent, JobSpec,
-    MimoseConfig, ObsConfig, Pacing, PlannerKind, Task,
+    MimoseConfig, ObsConfig, Pacing, Placement, PlannerKind, Task,
 };
 use mimose::coordinator::{observations_from_profile, Coordinator, Phase};
 use mimose::engine::sim::{input_for, max_task_profile, SimEngine};
@@ -451,6 +451,28 @@ fn report_fleet(r: &FleetReport) {
         "  shared cache      : {} cross-job hits, {} entries",
         r.shared_cache_hits, r.shared_cache_entries
     );
+    if r.devices > 1 {
+        println!(
+            "  placement         : {} arrivals placed, {:.1}% onto a warm plan cache",
+            r.placements,
+            r.placement_warm_hit_rate() * 100.0
+        );
+        for d in 0..r.devices {
+            let peak = r.device_rounds(d).map(|dec| dec.aggregate_peak).max().unwrap_or(0);
+            let decisions = r.device_rounds(d).count();
+            println!(
+                "  {:<18}: {} budget, peak {}, {} broker decisions",
+                format!("device {d}"),
+                fmt_bytes(r.device_globals[d]),
+                fmt_bytes(peak),
+                decisions
+            );
+        }
+        println!(
+            "  migrations        : {} ({} iterations lost in transit)",
+            r.migrations, r.migration_lost_iters
+        );
+    }
     // the warm-start pin: a fleet restarted from a persisted plan cache
     // reports 0 here (the CI smoke greps this line)
     let sheltered: usize = r.jobs.iter().map(|j| j.sheltered_iters).sum();
@@ -492,6 +514,18 @@ fn cmd_fleet(args: &[String]) {
             .opt("cache-capacity", "512", "shared plan-cache capacity (0 = unbounded)")
             .opt("pacing", "", "event pacing: rounds | lockstep | profiled (default: config)")
             .opt("tick-ms", "", "scripted-round tick length in ms (profiled pacing only)")
+            .opt("devices", "", "devices the global budget splits across (default 1)")
+            .opt(
+                "placement",
+                "",
+                "arrival placement for multi-device fleets: first-fit | least-loaded | warm",
+            )
+            .opt(
+                "migrate-after",
+                "",
+                "consecutive overshoot fills before a device migrates a tenant (0 = never)",
+            )
+            .opt("migration-cost", "", "iterations a migrated tenant loses in transit")
             .opt(
                 "plan-threads",
                 "",
@@ -649,6 +683,22 @@ fn cmd_fleet(args: &[String]) {
         }
         cfg.tick_ms = tick;
     }
+    if !cli.get("devices").is_empty() {
+        cfg.devices = cli.get_usize("devices");
+    }
+    let placement_arg = cli.get("placement");
+    if !placement_arg.is_empty() {
+        cfg.placement = Placement::parse(&placement_arg).unwrap_or_else(|| {
+            eprintln!("unknown placement '{placement_arg}' (first-fit | least-loaded | warm)");
+            std::process::exit(2);
+        });
+    }
+    if !cli.get("migrate-after").is_empty() {
+        cfg.migrate_after = cli.get_usize("migrate-after");
+    }
+    if !cli.get("migration-cost").is_empty() {
+        cfg.migration_cost_iters = cli.get_usize("migration-cost");
+    }
     if cli.get_flag("obs") {
         cfg.obs.enabled = true;
     }
@@ -695,14 +745,28 @@ fn cmd_fleet(args: &[String]) {
             }
         }
     };
-    println!(
-        "fleet: {} initial jobs, {} scripted events, sharing {:.1} GB ({} pacing, seed {})",
-        cfg.jobs.len(),
-        cfg.events.len(),
-        cfg.global_budget_gb(),
-        cfg.pacing.name(),
-        cfg.seed
-    );
+    if cfg.devices > 1 {
+        println!(
+            "fleet: {} initial jobs, {} scripted events, sharing {:.1} GB across {} devices \
+             ({} placement, {} pacing, seed {})",
+            cfg.jobs.len(),
+            cfg.events.len(),
+            cfg.global_budget_gb(),
+            cfg.devices,
+            cfg.placement.name(),
+            cfg.pacing.name(),
+            cfg.seed
+        );
+    } else {
+        println!(
+            "fleet: {} initial jobs, {} scripted events, sharing {:.1} GB ({} pacing, seed {})",
+            cfg.jobs.len(),
+            cfg.events.len(),
+            cfg.global_budget_gb(),
+            cfg.pacing.name(),
+            cfg.seed
+        );
+    }
     let r = run_mode(cfg.arbitrated, &cache_out);
     report_fleet(&r);
     report_obs(&cfg.obs);

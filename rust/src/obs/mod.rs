@@ -11,10 +11,14 @@
 //!   (`coordinator.transitions/reshelters`, `estimator.refits`), the
 //!   budget broker (`broker.path_full/path_incremental/clawbacks`), the
 //!   engines (`engine.fwd_stages/bwd_stages/recompute_stages`), and the
-//!   event core (`fleet.queue_depth` gauge).
+//!   event core (`fleet.queue_depth` gauge, plus the chaos and
+//!   multi-device counters `fleet.preemptions` / `fleet.forced_stops` /
+//!   `fleet.migrations`).
 //! * **Tracing** ([`trace`]): multi-track spans/instants with per-track
 //!   logical clocks, exported as a Chrome-trace file via `--trace-out`
-//!   (one Perfetto track per fleet job plus a broker track).
+//!   (one Perfetto track per fleet job plus a broker track; multi-device
+//!   fleets split the broker track into one `device<d>.broker` track per
+//!   device so each device's fills and migration landings group visually).
 //!
 //! Both are **disabled by default and zero-cost when off**: every helper
 //! checks one relaxed [`AtomicBool`] and returns before touching any lock

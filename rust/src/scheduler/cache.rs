@@ -31,7 +31,7 @@ use std::rc::Rc;
 /// special case of the two-axis one.
 pub type SizeKey = (u64, u64);
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
@@ -338,6 +338,26 @@ impl SharedPlanCache {
         let lo = (signature, size.0, size.1, 0u64);
         let hi = (signature, size.0, size.1, budget);
         self.entries.range(lo..=hi).next_back().is_some()
+    }
+
+    /// Does the cache hold ANY entry for this model signature, at any input
+    /// size or budget? Non-mutating (no stats, no LRU touch) — the fleet's
+    /// plan-cache-warm placement uses this to prefer the device whose cache
+    /// a new tenant's architecture has already seeded.
+    pub fn holds_signature(&self, signature: u64) -> bool {
+        let lo = (signature, 0u64, 0u64, 0u64);
+        let hi = (signature, u64::MAX, u64::MAX, u64::MAX);
+        self.entries.range(lo..=hi).next().is_some()
+    }
+
+    /// Copy every entry of `other` into this cache (capacity and LRU rules
+    /// apply per insert; existing cells are overwritten). The multi-device
+    /// fleet merges its per-device caches through this before persisting
+    /// one on-disk artifact.
+    pub fn absorb(&mut self, other: &SharedPlanCache) {
+        for (&(sig, p, s, budget), plan) in &other.entries {
+            self.insert(sig, (p, s), budget, plan.clone());
+        }
     }
 
     /// Warm-start lookup: the exact cell first; otherwise the smallest
@@ -942,6 +962,50 @@ mod tests {
         c.remove(1, (100, 50), 10);
         assert!(c.lookup(1, (100, 50), 10).is_none());
         assert!(c.lookup(1, (100, 60), 10).is_some());
+    }
+
+    #[test]
+    fn holds_signature_is_a_pure_probe() {
+        let mut c = SharedPlanCache::new(0);
+        assert!(!c.holds_signature(7));
+        c.insert(7, (9600, 0), 5_000, Plan::of([1, 2]));
+        c.insert(u64::MAX, (100, 0), 10, Plan::of([3]));
+        assert!(c.holds_signature(7), "any entry at the signature counts");
+        assert!(c.holds_signature(u64::MAX), "boundary signature probes cleanly");
+        assert!(!c.holds_signature(8), "adjacent signature stays cold");
+        let before = c.stats().clone();
+        let _ = c.holds_signature(7);
+        assert_eq!(*c.stats(), before, "probe moves no stats");
+        // and it does not freshen LRU order: insert two at capacity 2, probe
+        // the older one, then overflow — the probed (but untouched) entry
+        // must still be the eviction victim
+        let mut small = SharedPlanCache::new(2);
+        small.insert(1, (100, 0), 10, Plan::of([1]));
+        small.insert(2, (200, 0), 10, Plan::of([2]));
+        assert!(small.holds_signature(1));
+        small.insert(3, (300, 0), 10, Plan::of([3]));
+        assert!(!small.holds_signature(1), "probe did not freshen LRU");
+        assert!(small.holds_signature(2) && small.holds_signature(3));
+    }
+
+    #[test]
+    fn absorb_merges_per_device_caches() {
+        let mut a = SharedPlanCache::new(0);
+        a.insert(1, (100, 0), 10, Plan::of([1]));
+        a.insert(2, (200, 0), 20, Plan::of([2]));
+        let mut b = SharedPlanCache::new(0);
+        b.insert(2, (200, 0), 20, Plan::of([9])); // same cell, newer plan
+        b.insert(3, (300, 0), 30, Plan::of([3]));
+        a.absorb(&b);
+        assert_eq!(a.len(), 3, "union of cells");
+        assert_eq!(a.lookup(1, (100, 0), 10), Some(Plan::of([1])), "own entry kept");
+        assert_eq!(a.lookup(2, (200, 0), 20), Some(Plan::of([9])), "absorbed overwrites");
+        assert_eq!(a.lookup(3, (300, 0), 30), Some(Plan::of([3])), "new cell adopted");
+        assert_eq!(b.len(), 2, "donor untouched");
+        // capacity rules still apply on the receiving side
+        let mut tight = SharedPlanCache::new(2);
+        tight.absorb(&a);
+        assert_eq!(tight.len(), 2, "absorb respects the receiver's capacity");
     }
 
     // ---- persistence ----

@@ -1,0 +1,511 @@
+//! Multi-device fleet pins (ISSUE 10): placement, migration, and the
+//! devices=1 compatibility contract.
+//!
+//!   1. `devices = 1` is the classic scheduler, bit for bit: every
+//!      placement strategy and every migration knob must be inert there —
+//!      a randomized differential against the legacy round loop.
+//!   2. Placement does what its name says on a 2-device fleet: first-fit
+//!      packs, least-loaded spreads, and the warm strategy lands an
+//!      arrival on the device whose shared plan cache already holds its
+//!      model signature.
+//!   3. Sustained overshoot pressure migrates a tenant off the hot device
+//!      and charges exactly `migration_cost_iters` lost iterations per
+//!      move — never an OOM, never a torn iteration, and the moved tenant
+//!      arrives WARM (no re-sheltering, no estimator refit) because its
+//!      engine and estimator travel with it.
+//!   4. Chaos timelines (preempts, shocks, pressure-burst arrivals) on
+//!      2–4 devices hold the per-device ledger at every decision.
+//!
+//! The contended calibration anchor: `tests/fleet_arbiter.rs` pins that
+//! [McRoberta, QaXlnet, QaBert, TcBert] at seed 7 overshoot a 16 GiB
+//! device (floors still fit). A 32 GiB fleet over 2 devices gives device 0
+//! exactly that 16 GiB slice, and first-fit packs all four tenants onto
+//! it — so the migration trigger provably fires while device 1 sits empty
+//! with guaranteed headroom.
+
+use mimose::config::{FleetConfig, FleetEvent, JobSpec, Pacing, Placement, Task};
+use mimose::data::trace::{generate_chaos, ChaosConfig, Interarrival, JobLength, TraceConfig};
+use mimose::fleet::{FleetReport, FleetScheduler};
+use mimose::util::proptest::{ensure, forall};
+use mimose::util::rng::Rng;
+use mimose::util::GIB;
+
+/// Canonical text form of everything the devices=1 differential compares —
+/// the same fields `tests/fleet_events.rs` fingerprints, and deliberately
+/// NOT the multi-device report fields (devices, migrations, placements):
+/// those are new accounting, and the contract is that the *behaviour*
+/// (allocations, overshoots, per-job rollups) is unchanged.
+fn fingerprint(r: &FleetReport) -> String {
+    let mut s = String::new();
+    for d in &r.rounds {
+        s += &format!(
+            "r{} ids{:?} alloc{:?} floors{:?} wants{:?} pred{} over{} jain{:?} peak{} total{}\n",
+            d.round,
+            d.job_ids,
+            d.allocations,
+            d.floors,
+            d.wants,
+            d.predicted_total,
+            d.overshoot,
+            d.weighted_jain,
+            d.aggregate_peak,
+            d.alloc_total,
+        );
+    }
+    for j in &r.jobs {
+        s += &format!(
+            "{}#{} w{:?} {}..{:?} steps{} ms{:?} peak{} oom{} rebinds{} final{}\n",
+            j.name,
+            j.id,
+            j.weight,
+            j.arrived_round,
+            j.departed_round,
+            j.steps,
+            j.total_ms,
+            j.peak_bytes,
+            j.oom_failures,
+            j.budget_changes,
+            j.final_budget,
+        );
+    }
+    s += &format!("overshoots {}", r.overshoots);
+    s
+}
+
+fn run_with(mut cfg: FleetConfig, pacing: Pacing) -> Result<FleetReport, String> {
+    cfg.pacing = pacing;
+    Ok(FleetScheduler::new(cfg)?.run())
+}
+
+/// The multi-device ledger contract, checked at every recorded decision:
+/// each decision is stamped with its device, and Σ cohort allocations, the
+/// device-wide allocation total, and the simulated aggregate peak must all
+/// stay within the device budget IN FORCE at that instant (`d.global` —
+/// shocks re-split the slices mid-run). Every funded job holds its floor.
+fn check_device_ledger(r: &FleetReport) -> Result<(), String> {
+    ensure(
+        r.device_globals.len() == r.devices,
+        "one budget slice per device in the report",
+    )?;
+    let mut last_t = f64::NEG_INFINITY;
+    for d in &r.rounds {
+        ensure(d.time_ms >= last_t, "decisions must be time-ordered")?;
+        last_t = d.time_ms;
+        ensure(
+            d.device < r.devices,
+            &format!("round {}: decision on unknown device {}", d.round, d.device),
+        )?;
+        ensure(
+            d.allocations.iter().sum::<u64>() <= d.global,
+            &format!(
+                "round {} dev {}: cohort allocations over the device budget",
+                d.round, d.device
+            ),
+        )?;
+        ensure(
+            d.alloc_total <= d.global,
+            &format!(
+                "round {} dev {}: ledger {} over the in-force budget {}",
+                d.round, d.device, d.alloc_total, d.global
+            ),
+        )?;
+        ensure(
+            d.aggregate_peak <= d.global,
+            &format!(
+                "round {} dev {}: simulated peak over the device budget",
+                d.round, d.device
+            ),
+        )?;
+        for ((a, f), id) in d.allocations.iter().zip(&d.floors).zip(&d.job_ids) {
+            ensure(
+                a >= f,
+                &format!("round {} dev {}: job {id} funded {a} below floor {f}", d.round, d.device),
+            )?;
+        }
+    }
+    for j in &r.jobs {
+        ensure(
+            j.device < r.devices,
+            &format!("{} ended on unknown device {}", j.name, j.device),
+        )?;
+        ensure(j.oom_failures == 0, &format!("{} OOMed", j.name))?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// 1. devices = 1 is the classic scheduler, whatever the knobs say
+// ---------------------------------------------------------------------------
+
+/// The compatibility contract of the whole multi-device layer: with one
+/// device, every placement strategy and every migration knob setting must
+/// reproduce the legacy round loop bit for bit, under both pacing modes —
+/// across randomized weights, early completions, arrivals, and departures.
+#[test]
+fn single_device_is_bit_identical_under_every_placement() {
+    forall(
+        31,
+        6,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let steps = rng.range_u(10, 14);
+            let mut jobs = JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]);
+            jobs[0].weight = rng.range_u(1, 40) as f64 / 10.0;
+            jobs[1].weight = rng.range_u(1, 40) as f64 / 10.0;
+            if rng.f64() < 0.5 {
+                jobs[1].steps = rng.range_u(3, steps);
+            }
+            let mut events = Vec::new();
+            if rng.f64() < 0.8 {
+                events.push(FleetEvent::Arrive {
+                    spec: JobSpec::weighted(Task::McRoberta, rng.range_u(1, 40) as f64 / 10.0),
+                    at_round: rng.range_u(0, steps - 1),
+                });
+            }
+            if rng.f64() < 0.5 {
+                events.push(FleetEvent::Depart {
+                    job: "TC-Bert#0".into(),
+                    at_round: rng.range_u(1, steps - 1),
+                });
+            }
+            let base = FleetConfig {
+                global_budget_bytes: 20 * GIB,
+                steps,
+                jobs,
+                events,
+                seed: seed ^ 0x0dec,
+                devices: 1,
+                migrate_after: rng.range_u(0, 4),
+                migration_cost_iters: rng.range_u(1, 5),
+                ..Default::default()
+            };
+            let legacy = match run_with(base.clone(), Pacing::Rounds) {
+                Ok(r) => r,
+                Err(_) => {
+                    // construction is placement-independent: every variant
+                    // must reject the same infeasible timelines
+                    for placement in
+                        [Placement::FirstFit, Placement::LeastLoaded, Placement::PlanCacheWarm]
+                    {
+                        let mut cfg = base.clone();
+                        cfg.placement = placement;
+                        ensure(
+                            run_with(cfg, Pacing::Lockstep).is_err(),
+                            "a placement strategy accepted a rejected timeline",
+                        )?;
+                    }
+                    return Ok(());
+                }
+            };
+            let want = fingerprint(&legacy);
+            for placement in
+                [Placement::FirstFit, Placement::LeastLoaded, Placement::PlanCacheWarm]
+            {
+                for pacing in [Pacing::Rounds, Pacing::Lockstep] {
+                    let mut cfg = base.clone();
+                    cfg.placement = placement;
+                    let r = run_with(cfg, pacing).map_err(|e| {
+                        format!("{placement:?}/{pacing:?} rejected a feasible timeline: {e}")
+                    })?;
+                    ensure(
+                        fingerprint(&r) == want,
+                        &format!(
+                            "{placement:?}/{pacing:?} diverged from the legacy loop on one \
+                             device:\n--- legacy ---\n{}\n--- variant ---\n{}",
+                            want,
+                            fingerprint(&r)
+                        ),
+                    )?;
+                    ensure(
+                        r.devices == 1 && r.migrations == 0 && r.migration_lost_iters == 0,
+                        "one device must never migrate",
+                    )?;
+                    ensure(
+                        r.device_globals == vec![20 * GIB],
+                        "one device owns the whole global budget",
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. Placement strategies on a real 2-device fleet
+// ---------------------------------------------------------------------------
+
+/// First-fit packs every tenant onto device 0 while its slice has
+/// worst-case floor room (the anchor pins that all four floors fit
+/// 16 GiB); least-loaded spreads the same tenants across both devices.
+/// Migration is disabled so the assertions see pure placement.
+#[test]
+fn first_fit_packs_and_least_loaded_spreads() {
+    let base = FleetConfig {
+        global_budget_bytes: 32 * GIB,
+        devices: 2,
+        migrate_after: 0,
+        steps: 30,
+        jobs: JobSpec::from_tasks(&[
+            Task::McRoberta,
+            Task::QaXlnet,
+            Task::QaBert,
+            Task::TcBert,
+        ]),
+        seed: 7,
+        ..Default::default()
+    };
+
+    let mut packed = base.clone();
+    packed.placement = Placement::FirstFit;
+    let r = FleetScheduler::new(packed).expect("feasible").run();
+    assert_eq!((r.devices, r.placements, r.placement_warm_hits), (2, 4, 0));
+    assert_eq!(r.device_globals, vec![16 * GIB, 16 * GIB], "even split");
+    assert!(
+        r.jobs.iter().all(|j| j.device == 0),
+        "first-fit must pack while the floors fit device 0: {:?}",
+        r.jobs.iter().map(|j| (j.name.clone(), j.device)).collect::<Vec<_>>()
+    );
+    assert_eq!(r.device_rounds(1).count(), 0, "an empty device never fills");
+    check_device_ledger(&r).unwrap();
+
+    let mut spread = base.clone();
+    spread.placement = Placement::LeastLoaded;
+    let r = FleetScheduler::new(spread).expect("feasible").run();
+    assert_eq!(r.placements, 4);
+    for d in 0..2 {
+        assert!(
+            r.jobs.iter().any(|j| j.device == d),
+            "least-loaded must populate device {d}"
+        );
+        assert!(r.device_rounds(d).count() > 0, "device {d} must fill");
+    }
+    check_device_ledger(&r).unwrap();
+    assert_eq!(r.oom_failures(), 0);
+}
+
+/// The warm strategy: an arriving tenant lands on the device whose shared
+/// plan cache already holds its model signature. The initial (cold-cache)
+/// tenants fall back to least-loaded — one per device — and by the time
+/// the scripted TC-Bert arrives, the incumbent TC-Bert's device cache
+/// holds its signature, so the arrival joins it there as a warm hit.
+#[test]
+fn warm_placement_lands_arrivals_beside_their_signature() {
+    let cfg = FleetConfig {
+        global_budget_bytes: 20 * GIB,
+        devices: 2,
+        placement: Placement::PlanCacheWarm,
+        migrate_after: 0,
+        steps: 40,
+        jobs: JobSpec::from_tasks(&[Task::TcBert, Task::McRoberta]),
+        events: vec![FleetEvent::Arrive { spec: JobSpec::new(Task::TcBert), at_round: 20 }],
+        seed: 7,
+        ..Default::default()
+    };
+    let r = FleetScheduler::new(cfg).expect("feasible").run();
+    assert_eq!(r.placements, 3, "two initial tenants + one arrival");
+    assert!(
+        r.placement_warm_hits >= 1,
+        "the TC-Bert arrival must score a warm cache hit"
+    );
+    assert!(r.placement_warm_hit_rate() > 0.0);
+    let incumbent = r.jobs.iter().find(|j| j.id == 0).expect("TC-Bert#0");
+    let arrival = r.jobs.iter().find(|j| j.id == 2).expect("TC-Bert#2");
+    assert_eq!(
+        arrival.device, incumbent.device,
+        "warm placement must co-locate the arrival with its signature"
+    );
+    check_device_ledger(&r).unwrap();
+    assert_eq!(r.oom_failures(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Pressure migration: differential against the single-device anchor
+// ---------------------------------------------------------------------------
+
+const MIGRATION_TASKS: [Task; 4] =
+    [Task::McRoberta, Task::QaXlnet, Task::QaBert, Task::TcBert];
+const MIGRATION_STEPS: usize = 150;
+
+/// First-fit packs the four contended-anchor tenants onto device 0's
+/// 16 GiB slice — exactly the workload `tests/fleet_arbiter.rs` pins as
+/// overshooting — so with `migrate_after = 1` the first overshoot fill
+/// must migrate the biggest slack holder onto the empty device 1.
+/// Iteration accounting is exact: migrations are the ONLY iteration
+/// losses in this timeline (no shocks, preempts, or early completions),
+/// each charged `migration_cost_iters` at an iteration boundary.
+#[test]
+fn sustained_pressure_migrates_onto_the_cool_device() {
+    let cfg = FleetConfig {
+        global_budget_bytes: 32 * GIB,
+        devices: 2,
+        placement: Placement::FirstFit,
+        migrate_after: 1,
+        migration_cost_iters: 2,
+        steps: MIGRATION_STEPS,
+        jobs: JobSpec::from_tasks(&MIGRATION_TASKS),
+        seed: 7,
+        ..Default::default()
+    };
+    let r = FleetScheduler::new(cfg).expect("floors fit the 16 GiB slice").run();
+    assert!(
+        r.migrations >= 1,
+        "the contended device must shed a tenant under sustained pressure"
+    );
+    assert_eq!(
+        r.migration_lost_iters,
+        2 * r.migrations,
+        "every migration charges exactly migration_cost_iters"
+    );
+    assert!(
+        r.jobs.iter().any(|j| j.device == 1),
+        "a migrated tenant must end on the cool device: {:?}",
+        r.jobs.iter().map(|j| (j.name.clone(), j.device)).collect::<Vec<_>>()
+    );
+    // exact iteration accounting: each charged iteration is a completion
+    // the fleet did NOT make (a move in the final ticks can truncate its
+    // charge at the horizon, hence >= on the lower bound), and at least
+    // the first — early — migration genuinely pays, so the fleet finishes
+    // strictly short of the no-migration total
+    let full = MIGRATION_TASKS.len() * MIGRATION_STEPS;
+    assert!(
+        r.total_steps() >= full - r.migration_lost_iters as usize,
+        "fleet lost more iterations ({}) than migrations charged ({})",
+        full - r.total_steps(),
+        r.migration_lost_iters
+    );
+    assert!(
+        r.total_steps() < full,
+        "migration cost must be visible as lost iterations"
+    );
+    assert_eq!(r.oom_failures(), 0, "pressure resolves by moving, never by OOM");
+    assert_eq!(r.forced_stops, 0, "no tenant is force-stopped in this timeline");
+    check_device_ledger(&r).unwrap();
+}
+
+/// Migration is WARM: the engine, frozen estimator, and shape memos move
+/// with the tenant, so against the single-device control (the anchor's
+/// own 16 GiB workload) no job re-enters sheltered collection and no job
+/// refits its estimator. Sheltering and refit counts are input-driven —
+/// the two runs stream identical inputs — so they must match exactly.
+#[test]
+fn migrated_tenants_arrive_warm_with_no_resheltering() {
+    let migrated = FleetScheduler::new(FleetConfig {
+        global_budget_bytes: 32 * GIB,
+        devices: 2,
+        placement: Placement::FirstFit,
+        migrate_after: 1,
+        steps: MIGRATION_STEPS,
+        jobs: JobSpec::from_tasks(&MIGRATION_TASKS),
+        seed: 7,
+        ..Default::default()
+    })
+    .expect("feasible")
+    .run();
+    assert!(migrated.migrations >= 1, "the differential needs a migration");
+    let control = FleetScheduler::new(FleetConfig {
+        global_budget_bytes: 16 * GIB,
+        steps: MIGRATION_STEPS,
+        jobs: JobSpec::from_tasks(&MIGRATION_TASKS),
+        seed: 7,
+        ..Default::default()
+    })
+    .expect("the anchor workload")
+    .run();
+    for (m, c) in migrated.jobs.iter().zip(&control.jobs) {
+        assert_eq!(m.id, c.id);
+        assert_eq!(
+            m.sheltered_iters, c.sheltered_iters,
+            "{}: migration must add zero sheltered iterations",
+            m.name
+        );
+        assert_eq!(
+            m.refits, c.refits,
+            "{}: migration must never refit the estimator",
+            m.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Chaos on 2–4 devices
+// ---------------------------------------------------------------------------
+
+/// Randomized chaos timelines — trace arrivals/departures, preemption
+/// notices, budget shocks, and pressure-burst submission spikes — on
+/// fleets of 2 to 4 devices, under every placement strategy. Feasible
+/// timelines must run to completion holding the per-device ledger at
+/// every decision, with zero OOMs and consistent migration accounting;
+/// infeasible worst-case floors are rejected up front — that is the
+/// contract, not a counterexample.
+#[test]
+fn prop_multi_device_chaos_holds_the_per_device_ledger() {
+    let cases = if cfg!(debug_assertions) { 8 } else { 60 };
+    forall(
+        53,
+        cases,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let devices = rng.range_u(2, 4);
+            let max_round = rng.range_u(10, 16);
+            let trace = TraceConfig {
+                interarrival: Interarrival::Exponential {
+                    mean_rounds: rng.range_f(3.0, 6.0),
+                },
+                length: JobLength::Uniform { lo: 3, hi: 8 },
+                scripted_departures: rng.f64() < 0.5,
+                ..TraceConfig::new(
+                    vec![Task::TcBert, Task::McRoberta],
+                    max_round,
+                    seed ^ 0xde75,
+                )
+            };
+            let global = 48 * GIB;
+            let mut chaos = ChaosConfig::new(trace, global);
+            chaos.preempt_prob = rng.range_f(0.1, 0.5);
+            chaos.resume_prob = rng.range_f(0.3, 1.0);
+            chaos.drain_rounds = (0, rng.range_u(0, 2));
+            chaos.shock_count = rng.range_u(0, 2);
+            chaos.shock_fraction = (0.7, 1.0);
+            chaos.pressure_bursts = rng.range_u(1, 2);
+            chaos.pressure_burst_size = rng.range_u(2, 4);
+            let placement = match rng.range_u(0, 2) {
+                0 => Placement::FirstFit,
+                1 => Placement::LeastLoaded,
+                _ => Placement::PlanCacheWarm,
+            };
+            let cfg = FleetConfig {
+                global_budget_bytes: global,
+                steps: max_round,
+                devices,
+                placement,
+                migrate_after: rng.range_u(1, 3),
+                jobs: JobSpec::from_tasks(&[Task::TcBert]),
+                events: generate_chaos(&chaos),
+                seed: seed ^ 0xfee7,
+                ..Default::default()
+            };
+            let r = match run_with(cfg, Pacing::Lockstep) {
+                Ok(r) => r,
+                Err(_) => return Ok(()), // infeasible floors rejected up front
+            };
+            ensure(r.devices == devices, "report must echo the device count")?;
+            check_device_ledger(&r)?;
+            ensure(
+                r.migration_lost_iters == 2 * r.migrations,
+                "migration accounting drifted from the configured cost",
+            )?;
+            for j in &r.jobs {
+                // one sheltered window per lifetime, chaos or not — a
+                // migrated or resumed tenant never re-enters collection
+                ensure(
+                    j.sheltered_iters <= 10,
+                    &format!("{} re-collected: {} sheltered iters", j.name, j.sheltered_iters),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
